@@ -1,0 +1,65 @@
+//! Shared plumbing for the experiment benches (`cargo bench`): preset
+//! resolution with env overrides, output directory handling, and the
+//! standard header each harness prints.
+//!
+//! Environment knobs (all optional):
+//!   SKM_SCALE  — multiply the preset's corpus size (default 1.0)
+//!   SKM_SEED   — clustering seed (default 42)
+//!   SKM_OUT    — output dir (default target/experiments)
+
+use skm::coordinator::{preset, Preset};
+use skm::sparse::Dataset;
+use skm::util::io::Table;
+use std::path::PathBuf;
+
+#[allow(dead_code)]
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[allow(dead_code)]
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[allow(dead_code)]
+pub fn out_dir() -> PathBuf {
+    std::env::var("SKM_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/experiments"))
+}
+
+/// Resolve a preset with the SKM_SCALE override applied.
+pub fn bench_preset(name: &str) -> (Preset, Dataset, u64) {
+    let scale = env_f64("SKM_SCALE", 1.0);
+    let seed = env_u64("SKM_SEED", 42);
+    let p = preset(name, 7, Some(scale)).unwrap_or_else(|| panic!("preset {name}"));
+    let ds = p.dataset();
+    (p, ds, seed)
+}
+
+pub fn header(exp: &str, what: &str, ds: &Dataset, k: usize) {
+    println!("==================================================================");
+    println!("{exp}: {what}");
+    println!(
+        "workload {}: N={} D={} avg-terms={:.1} K={k}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        ds.avg_terms()
+    );
+    println!("==================================================================");
+}
+
+#[allow(dead_code)]
+pub fn save(exp: &str, name: &str, t: &Table) {
+    let path = out_dir().join(exp).join(format!("{name}.csv"));
+    t.write_csv(&path).expect("write csv");
+    println!("[saved {path:?}]");
+}

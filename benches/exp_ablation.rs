@@ -1,0 +1,107 @@
+//! Experiment Appendix D — Figs. 15–16 and Tables VIII–XII: ablation of
+//! the ES filter's two structural parameters.
+//!
+//! Variants: ES (both parameters), ThV (v_th only, t_th = 0), ThT
+//! (t_th only, v_th = 1), vs MIVI and the full ES-ICP.
+//!
+//! Expected shape (paper): ES ≈ ThV in Mult/CPR/time (v_th does the
+//! pruning); ThV needs ~6× the memory (its partial index spans all of
+//! D); ThT prunes barely at all (≈ MIVI) but keeps memory low —
+//! i.e. v_th buys pruning, t_th buys memory.
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::AlgoKind;
+use skm::coordinator::compare::absolute_table;
+use skm::coordinator::{comparison_rate_table, run_and_summarize};
+use skm::util::io::Table;
+
+fn main() {
+    for preset_name in ["pubmed-like", "nyt-like"] {
+        run_one(preset_name);
+    }
+}
+
+fn run_one(preset_name: &str) {
+    let (p, ds, seed) = bench_preset(preset_name);
+    let cfg = p.config(seed);
+    header("exp_ablation", "ES ablation (Figs 15-16, Tables VIII-XII)", &ds, cfg.k);
+
+    let suite = [
+        AlgoKind::Mivi,
+        AlgoKind::Es,
+        AlgoKind::ThV,
+        AlgoKind::ThT,
+        AlgoKind::EsIcp,
+    ];
+    let mut outs = Vec::new();
+    let mut summaries = Vec::new();
+    for kind in suite {
+        eprintln!("running {} ...", kind.name());
+        let (out, s) = run_and_summarize(kind, &ds, &cfg);
+        outs.push(out);
+        summaries.push(s);
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.assign, outs[0].assign, "{:?} diverged from MIVI", o.algo);
+    }
+
+    // Figs 15(a,b) & 16: per-iteration Mult / CPR / time.
+    let mut fig = Table::new(vec![
+        "iter", "mult_MIVI", "mult_ES", "mult_ThV", "mult_ThT", "cpr_ES", "cpr_ThV", "cpr_ThT",
+        "t_MIVI", "t_ES", "t_ThV", "t_ThT",
+    ]);
+    let iters = outs.iter().map(|o| o.logs.len()).min().unwrap();
+    for i in 0..iters {
+        fig.row(vec![
+            (i + 1).to_string(),
+            outs[0].logs[i].counters.mult.to_string(),
+            outs[1].logs[i].counters.mult.to_string(),
+            outs[2].logs[i].counters.mult.to_string(),
+            outs[3].logs[i].counters.mult.to_string(),
+            format!("{:.6}", outs[1].logs[i].cpr),
+            format!("{:.6}", outs[2].logs[i].cpr),
+            format!("{:.6}", outs[3].logs[i].cpr),
+            format!("{:.4}", outs[0].logs[i].assign_secs),
+            format!("{:.4}", outs[1].logs[i].assign_secs),
+            format!("{:.4}", outs[2].logs[i].assign_secs),
+            format!("{:.4}", outs[3].logs[i].assign_secs),
+        ]);
+    }
+    save("exp_ablation", &format!("{preset_name}_figs15_16"), &fig);
+
+    println!("\n[Tables IX/XI analog] absolute values:");
+    println!("{}", absolute_table(&summaries).render());
+    println!("[Table VIII analog] rates relative to ES-ICP:");
+    let rates = comparison_rate_table(&summaries, "ES-ICP");
+    println!("{}", rates.render());
+    save("exp_ablation", &format!("{preset_name}_table8_rates"), &rates);
+
+    let (mivi, es, thv, tht) = (&summaries[0], &summaries[1], &summaries[2], &summaries[3]);
+    let ok = |b: bool| if b { "OK" } else { "MISMATCH" };
+    println!("shape checks (Appendix D):");
+    println!(
+        "  v_th does the pruning — ES and ThV both ≪ MIVI mult: {} (ES {:.3}, ThV {:.3} of MIVI)",
+        ok(es.avg_mult < 0.5 * mivi.avg_mult && thv.avg_mult < 0.5 * mivi.avg_mult),
+        es.avg_mult / mivi.avg_mult,
+        thv.avg_mult / mivi.avg_mult
+    );
+    println!(
+        "  ThT prunes far less than the v_th variants: {} (ThT {:.3} of MIVI vs ES {:.3}; paper 0.85 vs 0.027)",
+        ok(tht.avg_mult > 2.0 * es.avg_mult),
+        tht.avg_mult / mivi.avg_mult,
+        es.avg_mult / mivi.avg_mult
+    );
+    println!(
+        "  t_th buys memory — ThV ≫ ES memory: {} (ThV {:.2}x ES; paper ~5.8x)",
+        ok(thv.max_mem_gb > 1.5 * es.max_mem_gb),
+        thv.max_mem_gb / es.max_mem_gb
+    );
+    println!(
+        "  ThT memory lowest of the ES family: {} ({:.2}x ES)",
+        ok(tht.max_mem_gb < es.max_mem_gb),
+        tht.max_mem_gb / es.max_mem_gb
+    );
+    println!();
+}

@@ -1,0 +1,108 @@
+//! Experiment Appendix C — Figs. 13 and 14: validation of the EstParams
+//! estimator.
+//!
+//! * Fig 13: the *approximate* multiplication count J(t_h, v_h) along
+//!   the v_h candidates (with the per-v_h optimal t_h) vs the *actual*
+//!   multiplication count of the resulting filter — the two series
+//!   should agree and share their minimum.
+//! * Fig 14: actual multiplications along v_th for several *fixed* t_th
+//!   values — the Fig-13 approximate curve should be their lower
+//!   envelope.
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::estparams::{actual_mult_count, estimate, EstConfig};
+use skm::index::{update_means, ObjInvIndex};
+use skm::util::io::Table;
+
+fn main() {
+    let (p, ds, seed) = bench_preset("pubmed-like");
+    let cfg = p.config(seed);
+    header("exp_estparams", "EstParams validation (Figs 13-14)", &ds, cfg.k);
+
+    // Second-iteration state, as in the paper's Appendix-C experiment.
+    let warm = ClusterConfig {
+        max_iters: 2,
+        ..cfg.clone()
+    };
+    let out = run_clustering(AlgoKind::Mivi, &ds, &warm);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+
+    let s_min = (ds.d() as f64 * cfg.s_min_frac) as usize;
+    let xp = ObjInvIndex::build(&ds.x, s_min);
+    let est = estimate(
+        &ds,
+        &upd.means,
+        &upd.rho,
+        &xp,
+        &EstConfig {
+            s_min,
+            n_candidates: 25,
+            fixed_t: None,
+            fixed_v: None,
+            max_sample_objects: 10_000,
+        },
+    );
+    println!(
+        "estimated: t_th={} ({:.3}D), v_th={:.4}",
+        est.t_th,
+        est.t_th as f64 / ds.d() as f64,
+        est.v_th
+    );
+
+    // ---- Fig 13: approximate vs actual along v_h ----------------------
+    let mut t13 = Table::new(vec!["v_h", "t_h", "approx_J(M)", "actual_Mult(M)"]);
+    let mut approx_min = (f64::INFINITY, 0.0);
+    let mut actual_min = (u64::MAX, 0.0);
+    for pnt in &est.curve {
+        let actual = actual_mult_count(&ds, &upd.means, &upd.rho, pnt.t_th, pnt.v_th);
+        if pnt.j_value < approx_min.0 {
+            approx_min = (pnt.j_value, pnt.v_th);
+        }
+        if actual < actual_min.0 {
+            actual_min = (actual, pnt.v_th);
+        }
+        t13.row(vec![
+            format!("{:.4}", pnt.v_th),
+            pnt.t_th.to_string(),
+            format!("{:.3}", pnt.j_value / 1e6),
+            format!("{:.3}", actual as f64 / 1e6),
+        ]);
+    }
+    println!("[Fig 13] approximate vs actual multiplications:\n{}", t13.render());
+    save("exp_estparams", "fig13_approx_vs_actual", &t13);
+    println!(
+        "minima: approx at v_h={:.4}, actual at v_h={:.4} ({})",
+        approx_min.1,
+        actual_min.1,
+        if (approx_min.1 - actual_min.1).abs() <= est.v_th * 0.5 {
+            "OK — minima agree (paper: both at 0.038)"
+        } else {
+            "MISMATCH"
+        }
+    );
+
+    // ---- Fig 14: actual Mult for fixed t_th values --------------------
+    let d = ds.d();
+    let fixed_ts: Vec<usize> = [0.86, 0.88, 0.90, 0.92, 0.94]
+        .iter()
+        .map(|f| (d as f64 * f) as usize)
+        .collect();
+    let vs: Vec<f64> = est.curve.iter().map(|p| p.v_th).collect();
+    let mut t14 = Table::new(vec!["v_th", "t0.86D", "t0.88D", "t0.90D", "t0.92D", "t0.94D", "envelope"]);
+    for (i, &v) in vs.iter().enumerate() {
+        let mut row = vec![format!("{v:.4}")];
+        let mut lowest = u64::MAX;
+        for &t in &fixed_ts {
+            let a = actual_mult_count(&ds, &upd.means, &upd.rho, t, v);
+            lowest = lowest.min(a);
+            row.push(format!("{:.3}", a as f64 / 1e6));
+        }
+        row.push(format!("{:.3}", est.curve[i].j_value / 1e6));
+        t14.row(row);
+    }
+    println!("[Fig 14] actual Mult at fixed t_th (M) vs the approximate envelope:\n{}", t14.render());
+    save("exp_estparams", "fig14_fixed_tth", &t14);
+}

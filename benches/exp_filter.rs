@@ -1,0 +1,164 @@
+//! Experiment §VII-B — Figs. 9, 10 (PubMed-like) and 11(b), 12
+//! (NYT-like): how the ES filter exploits the feature-value
+//! concentration phenomenon.
+//!
+//! * Fig 9/11(b): P(q-th largest value in a mean-inverted array ≤ v) for
+//!   orders 1, 2, 3, 10, 100 — very few entries are large.
+//! * Fig 10/12: multiplications (a) spent *before* filtering (building
+//!   exact Region-1/2 partial sims) and (b) for centroids *passing* the
+//!   filter, as v_th sweeps, with t_th = 0 to isolate the value
+//!   threshold (the paper's setting for this figure). The estimated
+//!   v_th (dashed line in the paper) should sit where both curves are
+//!   low.
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::{run_clustering, AlgoKind};
+use skm::index::{update_means, EsIndex};
+use skm::ucs;
+use skm::util::io::Table;
+
+fn main() {
+    for preset_name in ["pubmed-like", "nyt-like"] {
+        run_one(preset_name);
+    }
+}
+
+fn run_one(preset_name: &str) {
+    let (p, ds, seed) = bench_preset(preset_name);
+    let cfg = p.config(seed);
+    header("exp_filter", "ES filter analysis (Figs 9-12)", &ds, cfg.k);
+
+    // Cluster, then analyze the converged mean set (as the paper does).
+    eprintln!("clustering with ES-ICP ...");
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+    let t_th_est = out.t_th.unwrap();
+    let v_th_est = out.v_th.unwrap();
+    println!("estimated parameters: t_th={t_th_est} v_th={v_th_est:.4}");
+
+    // ---- Fig 9 / 11(b): order-value CDFs over s >= t_th --------------
+    let orders = [1usize, 2, 3, 10, 100];
+    let cdfs = ucs::order_value_cdf(&upd.means, t_th_est, &orders);
+    let mut t9 = Table::new(vec!["order", "n_arrays", "p10", "median", "p90", "max"]);
+    for (q, samples) in &cdfs {
+        if samples.is_empty() {
+            t9.row(vec![q.to_string(), "0".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let pick = |f: f64| samples[((samples.len() - 1) as f64 * f) as usize];
+        t9.row(vec![
+            q.to_string(),
+            samples.len().to_string(),
+            format!("{:.4}", pick(0.1)),
+            format!("{:.4}", pick(0.5)),
+            format!("{:.4}", pick(0.9)),
+            format!("{:.4}", samples[samples.len() - 1]),
+        ]);
+    }
+    println!("[Fig 9/11b] per-order value distribution in sorted arrays:\n{}", t9.render());
+    save("exp_filter", &format!("{preset_name}_fig9_orders"), &t9);
+    let (maxlen, avglen) = ucs::array_length_stats(&upd.means, t_th_est);
+    println!("array lengths (s >= t_th): max={maxlen} avg={avglen:.1}");
+
+    // ---- Fig 10 / 12: Mult before/after filtering vs v_th -------------
+    // t_th = 0 isolates the value threshold, as in the paper.
+    let mut t10 = Table::new(vec!["v_th", "mult_before(M)", "mult_passing(M)"]);
+    let sweep: Vec<f64> = (1..=14).map(|i| v_th_est * i as f64 / 6.0).collect();
+    for &v in &sweep {
+        let (before, passing) = filter_cost_split(&ds, &upd, v);
+        t10.row(vec![
+            format!("{v:.4}"),
+            format!("{:.3}", before as f64 / 1e6),
+            format!("{:.3}", passing as f64 / 1e6),
+        ]);
+    }
+    println!(
+        "[Fig 10/12] Mult before filter / for passing centroids along v_th (estimated v_th={v_th_est:.4}):\n{}",
+        t10.render()
+    );
+    save("exp_filter", &format!("{preset_name}_fig10_sweep"), &t10);
+
+    // The estimator's choice should be near the joint minimum.
+    let (b_est, p_est) = filter_cost_split(&ds, &upd, v_th_est);
+    let total_est = b_est + p_est;
+    let best_total = sweep
+        .iter()
+        .map(|&v| {
+            let (b, p) = filter_cost_split(&ds, &upd, v);
+            b + p
+        })
+        .min()
+        .unwrap();
+    // NOTE the sweep isolates v_th with t_th = 0 (the paper's Fig-10
+    // setting, chosen "to be independent from our t_th"), while the
+    // estimator optimized v_th jointly WITH t_th — so compare shapes, and
+    // check the estimate against the joint-cost sweep at its own t_th.
+    let (b2, p2) = {
+        let mut best = u64::MAX;
+        for &v in &sweep {
+            let b = skm::estparams::actual_mult_count(&ds, &upd.means, &upd.rho, out.t_th.unwrap(), v);
+            best = best.min(b);
+        }
+        let est_cost =
+            skm::estparams::actual_mult_count(&ds, &upd.means, &upd.rho, out.t_th.unwrap(), v_th_est);
+        (est_cost, best)
+    };
+    println!(
+        "Fig-10 sweep (t_th=0): estimated v_th costs {:.3}M vs sweep minimum {:.3}M (informational)",
+        total_est as f64 / 1e6,
+        best_total as f64 / 1e6
+    );
+    println!(
+        "at the estimator's own t_th: estimated v_th {:.3}M vs v-sweep minimum {:.3}M ({})",
+        b2 as f64 / 1e6,
+        p2 as f64 / 1e6,
+        if b2 <= p2 + p2 / 2 {
+            "OK — near the optimum"
+        } else {
+            "MISMATCH"
+        }
+    );
+    println!();
+}
+
+/// Multiplications (before-filter exact part, passing-centroid
+/// verification part) for one assignment pass with t_th = 0 and the
+/// given v_th — the two panels of Fig. 10.
+fn filter_cost_split(
+    ds: &skm::sparse::Dataset,
+    upd: &skm::index::UpdateOutput,
+    v_th: f64,
+) -> (u64, u64) {
+    let k = upd.means.k();
+    let idx = EsIndex::build(&upd.means, 0, v_th);
+    let mut rho = vec![0.0f64; k];
+    let (mut before, mut passing) = (0u64, 0u64);
+    for i in 0..ds.n() {
+        let (ts, vs) = ds.x.row(i);
+        let mut y_base = 0.0;
+        for &u in vs {
+            y_base += u * v_th;
+        }
+        // Folded accumulator: rho[j] is the upper bound after gathering.
+        rho.iter_mut().for_each(|r| *r = y_base);
+        for (&t, &u) in ts.iter().zip(vs) {
+            let (ids, vals) = idx.r2.postings(t as usize);
+            before += ids.len() as u64;
+            let us = u * v_th;
+            for (&c, &v) in ids.iter().zip(vals) {
+                rho[c as usize] += us * v;
+            }
+        }
+        let rho_max = upd.rho[i];
+        let mut z = 0u64;
+        for &r in rho.iter() {
+            if r > rho_max {
+                z += 1;
+            }
+        }
+        passing += z * ts.len() as u64;
+    }
+    (before, passing)
+}

@@ -1,0 +1,129 @@
+//! Experiment §VI-D — Figs. 7(a,b), 8 and Tables IV, XV, XVI: the main
+//! comparison (MIVI, ICP, TA-ICP, CS-ICP, ES-ICP) on the PubMed-like
+//! workload.
+//!
+//! Expected shape (paper): ES-ICP fastest through *all* iterations
+//! (>15× MIVI, ≥3.5× the others); CS-ICP lowest Mult but slower than
+//! ICP; TA-ICP worst branch behavior; ES-ICP/CS-ICP/TA-ICP ≈2× MIVI's
+//! memory (the partial mean-inverted indexes).
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::AlgoKind;
+use skm::coordinator::compare::absolute_table;
+use skm::coordinator::{comparison_rate_table, run_and_summarize};
+use skm::util::io::Table;
+
+fn main() {
+    let (p, ds, seed) = bench_preset("pubmed-like");
+    let cfg = p.config(seed);
+    header(
+        "exp_main_pubmed",
+        "main comparison (Figs 7-8, Tables IV, XV, XVI)",
+        &ds,
+        cfg.k,
+    );
+
+    let suite = [
+        AlgoKind::Mivi,
+        AlgoKind::Icp,
+        AlgoKind::CsIcp,
+        AlgoKind::TaIcp,
+        AlgoKind::EsIcp,
+    ];
+    let mut outs = Vec::new();
+    let mut summaries = Vec::new();
+    for kind in suite {
+        eprintln!("running {} ...", kind.name());
+        let (out, s) = run_and_summarize(kind, &ds, &cfg);
+        outs.push(out);
+        summaries.push(s);
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.assign, outs[0].assign, "{:?} diverged from MIVI", o.algo);
+    }
+
+    // Figs 7(a) Mult, 7(b) CPR, 8 elapsed time — per-iteration series.
+    let mut t = Table::new(vec![
+        "iter", "mult_MIVI", "mult_ICP", "mult_CS", "mult_TA", "mult_ES", "cpr_ICP", "cpr_CS",
+        "cpr_TA", "cpr_ES", "t_MIVI", "t_ICP", "t_CS", "t_TA", "t_ES",
+    ]);
+    let iters = outs.iter().map(|o| o.logs.len()).min().unwrap();
+    for i in 0..iters {
+        t.row(vec![
+            (i + 1).to_string(),
+            outs[0].logs[i].counters.mult.to_string(),
+            outs[1].logs[i].counters.mult.to_string(),
+            outs[2].logs[i].counters.mult.to_string(),
+            outs[3].logs[i].counters.mult.to_string(),
+            outs[4].logs[i].counters.mult.to_string(),
+            format!("{:.6}", outs[1].logs[i].cpr),
+            format!("{:.6}", outs[2].logs[i].cpr),
+            format!("{:.6}", outs[3].logs[i].cpr),
+            format!("{:.6}", outs[4].logs[i].cpr),
+            format!("{:.4}", outs[0].logs[i].assign_secs),
+            format!("{:.4}", outs[1].logs[i].assign_secs),
+            format!("{:.4}", outs[2].logs[i].assign_secs),
+            format!("{:.4}", outs[3].logs[i].assign_secs),
+            format!("{:.4}", outs[4].logs[i].assign_secs),
+        ]);
+    }
+    save("exp_main_pubmed", "figs7_8_per_iteration", &t);
+
+    println!("\n[Table XV analog] absolute values:");
+    println!("{}", absolute_table(&summaries).render());
+    println!("[Table IV analog] rates relative to ES-ICP:");
+    let rates = comparison_rate_table(&summaries, "ES-ICP");
+    println!("{}", rates.render());
+    save("exp_main_pubmed", "table4_rates", &rates);
+
+    // Shape assertions.
+    let (mivi, icp, cs, ta, es) = (
+        &summaries[0],
+        &summaries[1],
+        &summaries[2],
+        &summaries[3],
+        &summaries[4],
+    );
+    let ok = |b: bool| if b { "OK" } else { "MISMATCH" };
+    println!("shape checks (paper Table IV):");
+    let best_other = mivi.avg_secs.min(icp.avg_secs).min(cs.avg_secs).min(ta.avg_secs);
+    println!(
+        "  ES-ICP fastest overall (within 15% at laptop scale; margins grow with K — EXPERIMENTS.md n.3): {} (MIVI {:.1}x, ICP {:.1}x, CS {:.1}x, TA {:.1}x)",
+        ok(es.avg_secs < best_other * 1.15),
+        mivi.avg_secs / es.avg_secs,
+        icp.avg_secs / es.avg_secs,
+        cs.avg_secs / es.avg_secs,
+        ta.avg_secs / es.avg_secs
+    );
+    println!(
+        "  ES-ICP fastest on the assignment step: {} (MIVI {:.1}x; paper >15x)",
+        ok(es.avg_assign_secs
+            < mivi
+                .avg_assign_secs
+                .min(icp.avg_assign_secs)
+                .min(cs.avg_assign_secs)
+                .min(ta.avg_assign_secs)),
+        mivi.avg_assign_secs / es.avg_assign_secs
+    );
+    println!(
+        "  CS-ICP lowest-or-tied Mult: {} (CS {:.3}x of ES, {:.3}x of ICP)",
+        ok(cs.avg_mult < es.avg_mult * 1.1 && cs.avg_mult < icp.avg_mult),
+        cs.avg_mult / es.avg_mult,
+        cs.avg_mult / icp.avg_mult
+    );
+    println!(
+        "  TA-ICP worst branch proxy: {}",
+        ok(ta.sw_irregular_branches > es.sw_irregular_branches.max(icp.sw_irregular_branches))
+    );
+    println!(
+        "  partial indexes cost memory (ES/CS/TA > MIVI): {} ({:.2}x)",
+        ok(es.max_mem_gb > mivi.max_mem_gb),
+        es.max_mem_gb / mivi.max_mem_gb
+    );
+    println!(
+        "  final CPR: ICP {:.3}  CS {:.4}  TA {:.4}  ES {:.4} (MIVI = 1)",
+        icp.final_cpr, cs.final_cpr, ta.final_cpr, es.final_cpr
+    );
+}

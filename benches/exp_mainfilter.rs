@@ -1,0 +1,82 @@
+//! Experiment Appendix G — Tables XIX–XXII: main filters *without* the
+//! auxiliary ICP filter (ES-MIVI ≡ ES, TA-MIVI, CS-MIVI vs MIVI), on
+//! both corpora.
+//!
+//! Expected shape (paper): no algorithm improves by dropping ICP;
+//! ES-MIVI is the best of the filter-only variants regardless of
+//! data set; CS-MIVI/TA-MIVI remain slower than MIVI-with-ICP-style
+//! algorithms despite fewer multiplications.
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::AlgoKind;
+use skm::coordinator::compare::absolute_table;
+use skm::coordinator::{comparison_rate_table, run_and_summarize};
+
+fn main() {
+    for preset_name in ["pubmed-like", "nyt-like"] {
+        run_one(preset_name);
+    }
+}
+
+fn run_one(preset_name: &str) {
+    let (p, ds, seed) = bench_preset(preset_name);
+    let cfg = p.config(seed);
+    header(
+        "exp_mainfilter",
+        "main filters without ICP (Tables XIX-XXII)",
+        &ds,
+        cfg.k,
+    );
+
+    let suite = [
+        AlgoKind::Mivi,
+        AlgoKind::Es,     // ES-MIVI
+        AlgoKind::CsMivi,
+        AlgoKind::TaMivi,
+        // with-ICP counterparts for the "no variant improves without
+        // ICP" comparison:
+        AlgoKind::EsIcp,
+        AlgoKind::CsIcp,
+        AlgoKind::TaIcp,
+    ];
+    let mut outs = Vec::new();
+    let mut summaries = Vec::new();
+    for kind in suite {
+        eprintln!("running {} ...", kind.name());
+        let (out, s) = run_and_summarize(kind, &ds, &cfg);
+        outs.push(out);
+        summaries.push(s);
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.assign, outs[0].assign, "{:?} diverged from MIVI", o.algo);
+    }
+
+    println!("\n[Tables XIX/XXI analog] absolute values:");
+    println!("{}", absolute_table(&summaries).render());
+    println!("[Table XX/XXII analog] rates relative to MIVI:");
+    let rates = comparison_rate_table(&summaries, "MIVI");
+    println!("{}", rates.render());
+    save("exp_mainfilter", &format!("{preset_name}_rates"), &rates);
+
+    let by = |n: &str| summaries.iter().find(|s| s.name == n).unwrap();
+    let ok = |b: bool| if b { "OK" } else { "MISMATCH" };
+    let (es, cs, ta) = (by("ES"), by("CS-MIVI"), by("TA-MIVI"));
+    let (esicp, csicp, taicp) = (by("ES-ICP"), by("CS-ICP"), by("TA-ICP"));
+    println!("shape checks (Appendix G):");
+    println!(
+        "  ES-MIVI best-or-tied filter-only variant: {} (ES {:.3}s, CS {:.3}s, TA {:.3}s per iter)",
+        ok(es.avg_secs < cs.avg_secs && es.avg_secs < ta.avg_secs * 1.15),
+        es.avg_secs,
+        cs.avg_secs,
+        ta.avg_secs
+    );
+    println!(
+        "  adding ICP never hurts: ES {} CS {} TA {}",
+        ok(esicp.avg_secs <= es.avg_secs * 1.1),
+        ok(csicp.avg_secs <= cs.avg_secs * 1.1),
+        ok(taicp.avg_secs <= ta.avg_secs * 1.1)
+    );
+    println!();
+}

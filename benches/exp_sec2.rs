@@ -1,0 +1,104 @@
+//! Experiment §II — Fig. 1, Table II (and Appendix E Tables XIII–XIV):
+//! MIVI vs DIVI vs Ding+ on the PubMed-like workload.
+//!
+//! Expected shape (paper, 8.2M PubMed, K=80 000):
+//!   * MIVI and DIVI: identical multiplication counts;
+//!     DIVI ~10× slower in elapsed time.
+//!   * Ding+: ~4× fewer multiplications than MIVI, yet ~3× slower,
+//!     with orders-of-magnitude more branch misses / LLC misses.
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::AlgoKind;
+use skm::coordinator::compare::absolute_table;
+use skm::coordinator::{comparison_rate_table, run_and_summarize};
+use skm::util::io::{fmt_sig, Table};
+
+fn main() {
+    let (p, ds, seed) = bench_preset("pubmed-like");
+    let cfg = p.config(seed);
+    header("exp_sec2", "MIVI vs DIVI vs Ding+ (Fig 1, Tab II, XIII-XIV)", &ds, cfg.k);
+
+    let mut outs = Vec::new();
+    let mut summaries = Vec::new();
+    for kind in [AlgoKind::Mivi, AlgoKind::Divi, AlgoKind::Ding] {
+        eprintln!("running {} ...", kind.name());
+        let (out, s) = run_and_summarize(kind, &ds, &cfg);
+        outs.push(out);
+        summaries.push(s);
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.assign, outs[0].assign, "{:?} diverged", o.algo);
+    }
+
+    // Fig 1: per-iteration Mult and elapsed time.
+    let mut fig1 = Table::new(vec!["iter", "mult_MIVI", "mult_DIVI", "mult_Ding", "t_MIVI", "t_DIVI", "t_Ding"]);
+    let iters = outs.iter().map(|o| o.logs.len()).min().unwrap();
+    for i in 0..iters {
+        fig1.row(vec![
+            (i + 1).to_string(),
+            outs[0].logs[i].counters.mult.to_string(),
+            outs[1].logs[i].counters.mult.to_string(),
+            outs[2].logs[i].counters.mult.to_string(),
+            format!("{:.4}", outs[0].logs[i].assign_secs),
+            format!("{:.4}", outs[1].logs[i].assign_secs),
+            format!("{:.4}", outs[2].logs[i].assign_secs),
+        ]);
+    }
+    save("exp_sec2", "fig1_per_iteration", &fig1);
+
+    // Table XIII: absolute values.
+    println!("\n[Table XIII analog] absolute values:");
+    println!("{}", absolute_table(&summaries).render());
+
+    // Table II: rates relative to MIVI.
+    println!("[Table II analog] rates relative to MIVI:");
+    let rates = comparison_rate_table(&summaries, "MIVI");
+    println!("{}", rates.render());
+    save("exp_sec2", "table2_rates", &rates);
+
+    // Shape assertions (the paper's qualitative claims).
+    let (mivi, divi, ding) = (&summaries[0], &summaries[1], &summaries[2]);
+    println!("shape checks:");
+    let mult_eq = (mivi.avg_mult - divi.avg_mult).abs() / mivi.avg_mult < 1e-9;
+    println!("  MIVI == DIVI multiplications: {}", ok(mult_eq));
+    println!(
+        "  DIVI slower than MIVI: {} ({:.1}x; paper ~10x)",
+        ok(divi.avg_secs > mivi.avg_secs),
+        divi.avg_secs / mivi.avg_secs
+    );
+    println!(
+        "  Ding+ fewer mult than MIVI: {} ({} vs {})",
+        ok(ding.avg_mult < mivi.avg_mult),
+        fmt_sig(ding.avg_mult),
+        fmt_sig(mivi.avg_mult)
+    );
+    // The paper's 2.9x slowdown is a cache-capacity effect (90 GB dense
+    // mean set at K=80 000); at laptop scale the dense set fits the LLC,
+    // so we check the quantity that explodes at paper scale instead.
+    println!(
+        "  Ding+ wall-clock vs MIVI: {:.2}x here (paper ~2.9x; cache-capacity effect, see EXPERIMENTS.md n.1)",
+        ding.avg_secs / mivi.avg_secs
+    );
+    println!(
+        "  Ding+ dominant cold-touch (LLCM) proxy: {} ({} vs MIVI {})",
+        ok(ding.sw_cold_touches > 10 * mivi.sw_cold_touches.max(1)),
+        ding.sw_cold_touches,
+        mivi.sw_cold_touches
+    );
+    println!(
+        "  Ding+ worst irregular-branch proxy: {} ({} vs MIVI {})",
+        ok(ding.sw_irregular_branches > mivi.sw_irregular_branches),
+        ding.sw_irregular_branches,
+        mivi.sw_irregular_branches
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

@@ -1,0 +1,121 @@
+//! Experiment §III / Appendix I — Figs. 2(a,b), 3(a,b), 4(a,b), 11(a),
+//! 21, 22: the universal characteristics of both corpora and their
+//! clustering results.
+//!
+//! Expected shape: power-law df/tf rank-frequency; mf bounded by K but
+//! otherwise Zipf-like; positive df–mf correlation; multiplication
+//! volume concentrated in high-df term ids; strongly concave CPS curve
+//! (paper: CPS(0.1) = 0.92 on PubMed, 0.90 on NYT).
+
+mod common;
+
+use common::{bench_preset, header, save};
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::index::update_means;
+use skm::ucs;
+use skm::util::io::Table;
+
+fn main() {
+    for preset_name in ["pubmed-like", "nyt-like"] {
+        run_one(preset_name);
+    }
+}
+
+fn run_one(preset_name: &str) {
+    let (p, ds, seed) = bench_preset(preset_name);
+    let cfg = p.config(seed);
+    header("exp_ucs", "universal characteristics (Figs 2-4, 21-22)", &ds, cfg.k);
+
+    // Fig 2(a): Zipf on tf / df.
+    let tf = ds.x.column_sum();
+    let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
+    let rf_tf = ucs::rank_frequency(&tf);
+    let rf_df = ucs::rank_frequency(&df);
+    let (a_tf, r2_tf) = ucs::zipf_exponent(&rf_tf, 100);
+    let (a_df, r2_df) = ucs::zipf_exponent(&rf_df, 100);
+    println!("[Fig 2a] tf: alpha={a_tf:.3} r2={r2_tf:.3}   df: alpha={a_df:.3} r2={r2_df:.3}");
+    let mut t2a = Table::new(vec!["rank", "tf", "df"]);
+    for i in (0..rf_df.len().min(rf_tf.len())).step_by((rf_df.len() / 400).max(1)) {
+        t2a.row(vec![
+            format!("{}", rf_df[i].0),
+            format!("{}", rf_tf[i].1),
+            format!("{}", rf_df[i].1),
+        ]);
+    }
+    save("exp_ucs", &format!("{preset_name}_fig2a"), &t2a);
+
+    // Fig 2(b): bounded Zipf on mf at 4 K values.
+    let mut t2b = Table::new(vec!["K", "alpha_mf", "max_mf"]);
+    for kdiv in [8usize, 4, 2, 1] {
+        let k = (cfg.k / kdiv).max(2);
+        let c = ClusterConfig {
+            k,
+            max_iters: 6,
+            ..cfg.clone()
+        };
+        let o = run_clustering(AlgoKind::EsIcp, &ds, &c);
+        let m = update_means(&ds, &o.assign, k, None, None).means;
+        let mf: Vec<f64> = m.m.column_df().iter().map(|&x| x as f64).collect();
+        let rf = ucs::rank_frequency(&mf);
+        let (a, _) = ucs::zipf_exponent(&rf, 60);
+        assert!(rf[0].1 <= k as f64, "mf exceeded K");
+        t2b.row(vec![k.to_string(), format!("{a:.3}"), format!("{}", rf[0].1)]);
+    }
+    println!("[Fig 2b] bounded Zipf on mf:\n{}", t2b.render());
+    save("exp_ucs", &format!("{preset_name}_fig2b"), &t2b);
+
+    // Full clustering for the remaining panels.
+    eprintln!("clustering with ES-ICP for the mean-set panels ...");
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+
+    // Fig 3(a): df–mf trend.
+    let prof = ucs::df_mf_profile(&ds, &upd.means);
+    let mut t3a = Table::new(vec!["df", "avg_mf"]);
+    for (df, mf) in prof.iter().step_by((prof.len() / 300).max(1)) {
+        t3a.row(vec![format!("{df}"), format!("{mf:.3}")]);
+    }
+    save("exp_ucs", &format!("{preset_name}_fig3a"), &t3a);
+
+    // Fig 3(b): multiplication volume concentration.
+    let (total, top_frac) = ucs::mult_volume(&ds, &upd.means);
+    println!(
+        "[Fig 3b] Σ df·mf = {:.3e}; share in the top-10% term ids = {:.1}% (uneven by design)",
+        total,
+        top_frac * 100.0
+    );
+    assert!(top_frac > 0.3, "no high-df concentration");
+
+    // Fig 4(a)/11(a): feature-value skew.
+    let skew = ucs::value_skew(&upd.means, 400);
+    let mut t4a = Table::new(vec!["rank_over_K", "value"]);
+    for (r, v) in &skew {
+        t4a.row(vec![format!("{r:.4}"), format!("{v:.5}")]);
+    }
+    save("exp_ucs", &format!("{preset_name}_fig4a"), &t4a);
+    println!(
+        "[Fig 4a] {} mean components above 1/sqrt(2) across K={} centroids",
+        ucs::concentration_count(&upd.means),
+        cfg.k
+    );
+
+    // Fig 4(b)/21/22: CPS with STD.
+    let curve = ucs::cps_curve(&ds, &upd.means, &out.assign, 100);
+    let mut t4b = Table::new(vec!["NR", "CPS_mean", "CPS_std"]);
+    for i in 0..curve.nr.len() {
+        t4b.row(vec![
+            format!("{:.2}", curve.nr[i]),
+            format!("{:.5}", curve.mean[i]),
+            format!("{:.5}", curve.std[i]),
+        ]);
+    }
+    save("exp_ucs", &format!("{preset_name}_fig4b_cps"), &t4b);
+    println!(
+        "[Fig 4b/21/22] CPS(0.1)={:.3} CPS(0.2)={:.3} CPS(0.5)={:.3}  (paper: 0.92/0.90 at 0.1)",
+        curve.value_at(0.1),
+        curve.value_at(0.2),
+        curve.value_at(0.5)
+    );
+    assert!(curve.value_at(0.5) > 0.7, "CPS not Pareto-like");
+    println!();
+}

@@ -1,0 +1,139 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation (not a paper
+//! experiment). Times the building blocks of the assignment step in
+//! isolation so optimization work can attribute gains:
+//!
+//!   * plain TAAT accumulation over the mean-inverted index (MIVI core)
+//!   * ES gathering (Region 1+2, two-block arrays) + filter + verify
+//!   * mean-set construction (update step)
+//!   * EsIndex / InvIndex build
+//!   * EstParams sweep
+
+mod common;
+
+use common::{bench_preset, header};
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::estparams::{estimate, EstConfig};
+use skm::index::{update_means, EsIndex, InvIndex, ObjInvIndex};
+use skm::util::timer::bench;
+
+fn main() {
+    let (p, ds, seed) = bench_preset("pubmed-like");
+    let cfg = p.config(seed);
+    header("hot_path", "assignment-step microbenchmarks (§Perf)", &ds, cfg.k);
+    let k = cfg.k;
+
+    // Converged state for realistic index shapes.
+    let warm = ClusterConfig {
+        max_iters: 4,
+        ..cfg.clone()
+    };
+    let out = run_clustering(AlgoKind::Mivi, &ds, &warm);
+    let upd = update_means(&ds, &out.assign, k, None, None);
+
+    // --- index builds ---------------------------------------------------
+    let s = bench(1, 10, 2.0, || {
+        let idx = InvIndex::build(&upd.means, ds.d());
+        std::hint::black_box(idx.nnz());
+    });
+    println!("{}", s.summary("InvIndex::build (full)"));
+
+    let t_th = ds.d() * 8 / 10;
+    let s = bench(1, 10, 2.0, || {
+        let idx = EsIndex::build(&upd.means, t_th, 0.02);
+        std::hint::black_box(idx.mem_bytes());
+    });
+    println!("{}", s.summary("EsIndex::build (t_th=0.8D)"));
+
+    // --- update step ------------------------------------------------------
+    let changed = vec![true; k];
+    let s = bench(1, 10, 3.0, || {
+        let u = update_means(&ds, &out.assign, k, Some(&upd.means), Some(&changed));
+        std::hint::black_box(u.objective);
+    });
+    println!("{}", s.summary("update_means (all clusters moving)"));
+    let unchanged = vec![false; k];
+    let s = bench(1, 10, 3.0, || {
+        let u = update_means(&ds, &out.assign, k, Some(&upd.means), Some(&unchanged));
+        std::hint::black_box(u.objective);
+    });
+    println!("{}", s.summary("update_means (all clusters invariant)"));
+
+    // --- TAAT accumulation core (MIVI inner loops) -----------------------
+    let idx = InvIndex::build(&upd.means, ds.d());
+    let mut rho = vec![0.0f64; k];
+    let s = bench(1, 5, 3.0, || {
+        let mut acc = 0.0f64;
+        for i in 0..ds.n().min(2000) {
+            let (ts, vs) = ds.x.row(i);
+            rho.iter_mut().for_each(|r| *r = 0.0);
+            for (&t, &u) in ts.iter().zip(vs) {
+                let (ids, vals) = idx.postings(t as usize);
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += u * v;
+                }
+            }
+            acc += rho[0];
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", s.summary("TAAT accumulate (2000 objects)"));
+
+    // --- ES gathering + verification -------------------------------------
+    let es_idx = EsIndex::build(&upd.means, t_th, 0.02);
+    let s = bench(1, 5, 3.0, || {
+        let mut acc = 0usize;
+        for i in 0..ds.n().min(2000) {
+            let (ts, vs) = ds.x.row(i);
+            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let mut y_base = 0.0;
+            for &u in &vs[p0..] {
+                y_base += u * 0.02;
+            }
+            // Folded accumulator: rho[j] is the upper bound directly.
+            rho.iter_mut().for_each(|r| *r = y_base);
+            for (&t, &u) in ts[..p0].iter().zip(&vs[..p0]) {
+                let (ids, vals) = es_idx.r1.postings(t as usize);
+                let us = u * 0.02;
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += us * v;
+                }
+            }
+            for (&t, &u) in ts[p0..].iter().zip(&vs[p0..]) {
+                let (ids, vals) = es_idx.r2.postings(t as usize);
+                let us = u * 0.02;
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += us * v;
+                }
+            }
+            let rho_max = upd.rho[i];
+            let mut z = 0usize;
+            for &r in rho.iter() {
+                if r > rho_max {
+                    z += 1;
+                }
+            }
+            acc += z;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", s.summary("ES gather+filter (2000 objects)"));
+
+    // --- EstParams --------------------------------------------------------
+    let s_min = ds.d() * 8 / 10;
+    let xp = ObjInvIndex::build(&ds.x, s_min);
+    let s = bench(0, 3, 10.0, || {
+        let est = estimate(
+            &ds,
+            &upd.means,
+            &upd.rho,
+            &xp,
+            &EstConfig {
+                s_min,
+                n_candidates: 21,
+                ..Default::default()
+            },
+        );
+        std::hint::black_box(est.t_th);
+    });
+    println!("{}", s.summary("EstParams (21 candidates)"));
+}

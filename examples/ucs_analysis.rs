@@ -1,0 +1,126 @@
+//! Universal-characteristics analysis (Section III) on both synthetic
+//! corpora — the data behind Figs. 2, 3, 4, 9, 11, 21, 22 — with CSV
+//! output under `target/experiments/ucs/` for plotting.
+//!
+//! Run: `cargo run --release --example ucs_analysis [-- --preset pubmed-like]`
+
+use skm::algo::{run_clustering, AlgoKind};
+use skm::coordinator::preset;
+use skm::index::update_means;
+use skm::ucs;
+use skm::util::cli::Args;
+use skm::util::io::{fmt_sig, Table};
+
+fn main() {
+    let args = Args::parse();
+    let names: Vec<&str> = match args.get("preset") {
+        Some(p) => vec![p],
+        None => vec!["pubmed-like", "nyt-like"],
+    };
+    for name in names {
+        analyze(name, args.get("scale").map(|s| s.parse().expect("--scale")));
+    }
+}
+
+fn analyze(name: &str, scale: Option<f64>) {
+    let p = preset(name, 7, scale).unwrap();
+    let ds = p.dataset();
+    let cfg = p.config(42);
+    println!("\n==== {} (N={} D={} K={}) ====", name, ds.n(), ds.d(), cfg.k);
+
+    // Fig 2(a): Zipf on tf and df.
+    let tf = ds.x.column_sum();
+    let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
+    let rf_tf = ucs::rank_frequency(&tf);
+    let rf_df = ucs::rank_frequency(&df);
+    let (a_tf, r_tf) = ucs::zipf_exponent(&rf_tf, 100);
+    let (a_df, r_df) = ucs::zipf_exponent(&rf_df, 100);
+    println!("[Fig 2a] Zipf: tf alpha={a_tf:.3} (r2={r_tf:.2}), df alpha={a_df:.3} (r2={r_df:.2})");
+    write_series(name, "fig2a_df_rank_freq", &rf_df);
+
+    // Cluster to get a mean set.
+    eprintln!("clustering with ES-ICP ...");
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+
+    // Fig 2(b): bounded Zipf on mf for several K values.
+    let mut t = Table::new(vec!["K", "alpha_mf", "max_mf", "bounded_by_K"]);
+    for kf in [cfg.k / 8, cfg.k / 4, cfg.k / 2, cfg.k] {
+        let kf = kf.max(2);
+        let c2 = skm::algo::ClusterConfig {
+            k: kf,
+            max_iters: 6,
+            ..cfg.clone()
+        };
+        let o2 = run_clustering(AlgoKind::EsIcp, &ds, &c2);
+        let m2 = update_means(&ds, &o2.assign, kf, None, None);
+        let mf: Vec<f64> = m2.means.m.column_df().iter().map(|&x| x as f64).collect();
+        let rf = ucs::rank_frequency(&mf);
+        let (a, _) = ucs::zipf_exponent(&rf, 60);
+        t.row(vec![
+            kf.to_string(),
+            format!("{a:.3}"),
+            format!("{}", rf[0].1),
+            (rf[0].1 <= kf as f64).to_string(),
+        ]);
+    }
+    println!("[Fig 2b] bounded Zipf on mean frequency:\n{}", t.render());
+
+    // Fig 3: df–mf correlation + multiplication volume.
+    let prof = ucs::df_mf_profile(&ds, &upd.means);
+    write_series(name, "fig3a_df_mf", &prof);
+    let (total, topfrac) = ucs::mult_volume(&ds, &upd.means);
+    println!(
+        "[Fig 3] df–mf profile written; MIVI mult volume = {} with {:.1}% in the top-10% term ids",
+        fmt_sig(total),
+        topfrac * 100.0
+    );
+
+    // Fig 4(a)/11(a): feature-value skew.
+    let skew = ucs::value_skew(&upd.means, 500);
+    write_series(name, "fig4a_value_skew", &skew);
+    println!(
+        "[Fig 4a] feature-value skew written; {} components > 1/sqrt(2) across K={} centroids",
+        ucs::concentration_count(&upd.means),
+        cfg.k
+    );
+
+    // Fig 9/11(b): order-value CDFs.
+    let t_th = out.t_th.unwrap_or(ds.d() * 9 / 10);
+    let cdfs = ucs::order_value_cdf(&upd.means, t_th, &[1, 2, 3, 10, 100]);
+    for (q, samples) in &cdfs {
+        if samples.is_empty() {
+            continue;
+        }
+        let med = samples[samples.len() / 2];
+        println!(
+            "[Fig 9] order {:>3}: {} arrays, median value {:.4}",
+            q,
+            samples.len(),
+            med
+        );
+    }
+    let (maxlen, avglen) = ucs::array_length_stats(&upd.means, t_th);
+    println!("[Fig 9] array lengths in s >= t_th: max={maxlen} avg={avglen:.1}");
+
+    // Fig 4(b)/21/22: CPS curve.
+    let curve = ucs::cps_curve(&ds, &upd.means, &out.assign, 100);
+    let series: Vec<(f64, f64)> = curve.nr.iter().cloned().zip(curve.mean.iter().cloned()).collect();
+    write_series(name, "fig4b_cps", &series);
+    println!(
+        "[Fig 4b] CPS(0.1)={:.3}  CPS(0.2)={:.3}  CPS(0.5)={:.3}   (paper PubMed: CPS(0.1)=0.92)",
+        curve.value_at(0.1),
+        curve.value_at(0.2),
+        curve.value_at(0.5)
+    );
+}
+
+fn write_series(preset: &str, fname: &str, series: &[(f64, f64)]) {
+    let mut t = Table::new(vec!["x", "y"]);
+    for &(x, y) in series {
+        t.row(vec![format!("{x}"), format!("{y}")]);
+    }
+    let path = format!("target/experiments/ucs/{preset}_{fname}.csv");
+    t.write_csv(&path).expect("write csv");
+    eprintln!("  wrote {path}");
+}

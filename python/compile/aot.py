@@ -1,0 +1,67 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the Rust
+runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the Rust side unwraps one tuple (see rust/src/runtime/).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Block shapes compiled into the artifacts. Must match the constants in
+# rust/src/runtime/mod.rs (BLOCK_B, BLOCK_K, BLOCK_D).
+BLOCK_B = 64
+BLOCK_K = 32
+BLOCK_D = 256
+
+
+def to_hlo_text(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    x_spec = jax.ShapeDtypeStruct((BLOCK_B, BLOCK_D), jnp.float32)
+    m_spec = jax.ShapeDtypeStruct((BLOCK_K, BLOCK_D), jnp.float32)
+
+    artifacts = {
+        "assign_block": (model.assign_block, (x_spec, m_spec)),
+        "kmeans_step": (model.kmeans_step, (x_spec, m_spec)),
+    }
+    meta = {"block_b": BLOCK_B, "block_k": BLOCK_K, "block_d": BLOCK_D, "files": {}}
+    for name, (fn, specs) in artifacts.items():
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["files"][name] = {"path": path, "chars": len(text)}
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

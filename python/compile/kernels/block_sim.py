@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: tiled dense block cosine-similarity matrix.
+
+The compute hot-spot of the dense cross-check path is ``S = X @ M^T`` for
+a block of (already unit-norm) object rows against the mean rows. The
+kernel expresses the HBM->VMEM schedule with BlockSpecs: the grid walks
+(B/tb, K/tk) output tiles; each program instance loads one (tb, D) object
+tile and one (tk, D) mean tile into VMEM and contracts them on the MXU
+(``dot_general`` with the D axis contracted, f32 accumulation).
+
+TPU sizing rationale (DESIGN.md §Hardware-Adaptation): with the default
+tiles (64, 32) x D=256 the VMEM working set is
+  tb*D + tk*D + tb*tk floats = (64 + 32)*256 + 64*32 ≈ 0.11 MB « 16 MB,
+leaving room to scale D or double-buffer; tile edges are multiples of the
+8x128 vector-register lanes when tb, tk >= 8 and D is a multiple of 128.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact executes anywhere (correctness is validated against the
+pure-jnp oracle in ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(x_ref, m_ref, o_ref):
+    """One (tb, tk) output tile: contract the shared D axis on the MXU."""
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...],
+        m_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "tk"))
+def block_sim(x, m, *, tb=None, tk=None):
+    """Similarity matrix ``S[b, k] = <x_b, m_k>`` via the Pallas kernel.
+
+    Args:
+      x: (B, D) f32 object block.
+      m: (K, D) f32 mean block.
+      tb, tk: tile sizes (default: whole B / whole K when they are small,
+        else 64/32). Must divide B and K.
+
+    Returns:
+      (B, K) f32 similarity matrix.
+    """
+    b, d = x.shape
+    k, d2 = m.shape
+    assert d == d2, f"D mismatch: {d} vs {d2}"
+    tb = tb or min(b, 64)
+    tk = tk or min(k, 32)
+    assert b % tb == 0, f"tile tb={tb} must divide B={b}"
+    assert k % tk == 0, f"tile tk={tk} must divide K={k}"
+
+    grid = (b // tb, k // tk)
+    return pl.pallas_call(
+        _sim_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tk), lambda i, j: (i, j)),
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(x, m)

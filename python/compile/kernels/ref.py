@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernel and the dense model step.
+
+These are the correctness references: ``pytest python/tests`` asserts the
+Pallas kernel (interpret mode) and the lowered model agree with these to
+float tolerance. No Pallas, no tiling — just the textbook math.
+"""
+
+import jax.numpy as jnp
+
+
+def block_sim_ref(x, m):
+    """S[b, k] = <x_b, m_k> — plain matmul reference."""
+    return (x @ m.T).astype(jnp.float32)
+
+
+def _one_hot(idx, k):
+    return (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+
+
+def assign_ref(x, m):
+    """Spherical assignment: argmax similarity (ties -> lowest id)."""
+    sims = block_sim_ref(x, m)
+    best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=1)
+    return best, best_sim
+
+
+def kmeans_step_ref(x, m):
+    """One dense spherical k-means step.
+
+    Returns (assignments, new unit-norm means, objective). Empty clusters
+    keep their previous mean (matching the Rust update step's policy).
+    """
+    best, best_sim = assign_ref(x, m)
+    k = m.shape[0]
+    onehot = _one_hot(best, k)
+    sums = onehot.T @ x  # (K, D)
+    counts = onehot.sum(axis=0)  # (K,)
+    norms = jnp.linalg.norm(sums, axis=1, keepdims=True)
+    safe = jnp.where(norms > 0.0, norms, 1.0)
+    fresh = sums / safe
+    keep_old = (counts == 0.0) | (norms[:, 0] == 0.0)
+    new_m = jnp.where(keep_old[:, None], m, fresh)
+    objective = jnp.sum(best_sim)
+    return best, new_m.astype(jnp.float32), objective.astype(jnp.float32)

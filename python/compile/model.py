@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the dense-block spherical k-means step.
+
+This is the dense cross-check oracle the Rust coordinator executes
+through PJRT (DESIGN.md §2): the similarity hot-spot goes through the
+Layer-1 Pallas kernel (``kernels.block_sim``), the surrounding argmax /
+one-hot update / renormalization is plain jnp so XLA fuses it into a
+single executable. ``aot.py`` lowers both entry points at fixed block
+shapes to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.block_sim import block_sim
+
+
+def assign_block(x, m):
+    """Dense spherical assignment of a block.
+
+    Args:
+      x: (B, D) f32 unit-norm object rows.
+      m: (K, D) f32 unit-norm mean rows.
+
+    Returns:
+      tuple of ((B,) int32 argmax ids, (B,) f32 best similarities).
+    """
+    sims = block_sim(x, m)  # Layer-1 Pallas kernel
+    best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=1)
+    return best, best_sim
+
+
+def kmeans_step(x, m):
+    """One full dense spherical k-means step (assign + update).
+
+    Empty clusters keep their previous mean, matching the Rust update
+    step, so iterating this function from the same seeds reproduces the
+    sparse engine's trajectory on dense data.
+
+    Returns:
+      tuple of ((B,) int32 assignments, (K, D) f32 new unit-norm means,
+      () f32 objective = sum of best similarities).
+    """
+    sims = block_sim(x, m)  # Layer-1 Pallas kernel
+    best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=1)
+    k = m.shape[0]
+    onehot = (best[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    sums = onehot.T @ x
+    counts = onehot.sum(axis=0)
+    norms = jnp.linalg.norm(sums, axis=1, keepdims=True)
+    safe = jnp.where(norms > 0.0, norms, 1.0)
+    fresh = sums / safe
+    keep_old = (counts == 0.0) | (norms[:, 0] == 0.0)
+    new_m = jnp.where(keep_old[:, None], m, fresh).astype(jnp.float32)
+    objective = jnp.sum(best_sim).astype(jnp.float32)
+    return best, new_m, objective
+
+
+assign_block_jit = jax.jit(assign_block)
+kmeans_step_jit = jax.jit(kmeans_step)

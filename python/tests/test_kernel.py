@@ -1,0 +1,124 @@
+"""Layer-1 correctness: the Pallas block-similarity kernel vs the
+pure-jnp oracle, swept over shapes and value ranges with hypothesis.
+
+This is the CORE kernel correctness signal: the same code path is what
+the AOT artifacts embed, so agreement here + the Rust runtime test
+closes the three-layer loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.block_sim import block_sim
+from compile.kernels.ref import assign_ref, block_sim_ref, kmeans_step_ref
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+def _unit_rows(shape, seed):
+    x = np.abs(np.random.default_rng(seed).normal(size=shape)) + 1e-3
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+class TestBlockSimBasic:
+    def test_identity_match(self):
+        # object r equals mean r: similarity matrix is identity-like.
+        m = _unit_rows((8, 32), 0)
+        s = block_sim(m, m)
+        np.testing.assert_allclose(np.diag(np.asarray(s)), 1.0, atol=1e-6)
+
+    def test_matches_ref_default_tiles(self):
+        x = _rand((64, 256), 1)
+        m = _rand((32, 256), 2)
+        got = block_sim(x, m)
+        want = block_sim_ref(x, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("tb,tk", [(8, 8), (16, 32), (64, 32), (32, 16)])
+    def test_tile_shapes_agree(self, tb, tk):
+        x = _rand((64, 128), 3)
+        m = _rand((32, 128), 4)
+        got = block_sim(x, m, tb=tb, tk=tk)
+        want = block_sim_ref(x, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_indivisible_tile_rejected(self):
+        x = _rand((10, 16), 5)
+        m = _rand((4, 16), 6)
+        with pytest.raises(AssertionError):
+            block_sim(x, m, tb=3, tk=2)
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((8, 16), jnp.float32)
+        m = jnp.zeros((4, 16), jnp.float32)
+        s = block_sim(x, m)
+        assert np.all(np.asarray(s) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bt=st.sampled_from([1, 2, 4]),
+    kt=st.sampled_from([1, 2, 3]),
+    d=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_kernel_matches_ref_hypothesis(bt, kt, d, seed, scale):
+    """Property: kernel == oracle across shapes, seeds and value scales."""
+    tb, tk = 8, 8
+    x = _rand((bt * tb, d), seed, scale)
+    m = _rand((kt * tk, d), seed + 1, scale)
+    got = block_sim(x, m, tb=tb, tk=tk)
+    want = block_sim_ref(x, m)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4 * scale * scale * d
+    )
+
+
+class TestRefOracles:
+    """The oracles themselves must satisfy the spherical-k-means
+    invariants (they are the ground truth for two layers)."""
+
+    def test_assign_picks_true_argmax(self):
+        x = _unit_rows((16, 32), 7)
+        m = _unit_rows((5, 32), 8)
+        best, best_sim = assign_ref(x, m)
+        sims = np.asarray(x) @ np.asarray(m).T
+        np.testing.assert_array_equal(np.asarray(best), sims.argmax(axis=1))
+        np.testing.assert_allclose(np.asarray(best_sim), sims.max(axis=1), rtol=1e-6)
+
+    def test_kmeans_step_means_unit_norm(self):
+        x = _unit_rows((32, 16), 9)
+        m = _unit_rows((4, 16), 10)
+        _, new_m, _ = kmeans_step_ref(x, m)
+        norms = np.linalg.norm(np.asarray(new_m), axis=1)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-6)
+
+    def test_kmeans_step_objective_monotone(self):
+        x = _unit_rows((64, 16), 11)
+        m = _unit_rows((6, 16), 12)
+        objs = []
+        for _ in range(8):
+            _, m, obj = kmeans_step_ref(x, m)
+            objs.append(float(obj))
+        assert all(b >= a - 1e-4 for a, b in zip(objs, objs[1:])), objs
+
+    def test_empty_cluster_keeps_mean(self):
+        # All objects identical -> only one cluster wins; others keep
+        # their previous means.
+        x = jnp.tile(_unit_rows((1, 8), 13), (10, 1))
+        m = _unit_rows((3, 8), 14)
+        best, new_m, _ = kmeans_step_ref(x, m)
+        winner = int(np.asarray(best)[0])
+        for j in range(3):
+            if j != winner:
+                np.testing.assert_allclose(
+                    np.asarray(new_m)[j], np.asarray(m)[j], atol=1e-7
+                )

@@ -1,0 +1,94 @@
+"""Layer-2 correctness: the dense model (which routes its hot-spot
+through the Pallas kernel) vs the pure-jnp oracle, plus AOT lowering
+round-trip checks on the HLO text itself."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels.ref import assign_ref, kmeans_step_ref
+
+
+def _unit_rows(shape, seed):
+    x = np.abs(np.random.default_rng(seed).normal(size=shape)) + 1e-3
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+class TestAssignBlock:
+    def test_matches_oracle(self):
+        x = _unit_rows((aot.BLOCK_B, aot.BLOCK_D), 0)
+        m = _unit_rows((aot.BLOCK_K, aot.BLOCK_D), 1)
+        best, best_sim = model.assign_block_jit(x, m)
+        rbest, rsim = assign_ref(x, m)
+        np.testing.assert_array_equal(np.asarray(best), np.asarray(rbest))
+        np.testing.assert_allclose(np.asarray(best_sim), np.asarray(rsim), rtol=1e-5)
+        assert best.dtype == jnp.int32
+
+    def test_self_assignment(self):
+        m = _unit_rows((aot.BLOCK_K, aot.BLOCK_D), 2)
+        x = jnp.tile(m, (aot.BLOCK_B // aot.BLOCK_K, 1))
+        best, best_sim = model.assign_block_jit(x, m)
+        want = np.tile(np.arange(aot.BLOCK_K), aot.BLOCK_B // aot.BLOCK_K)
+        np.testing.assert_array_equal(np.asarray(best), want)
+        np.testing.assert_allclose(np.asarray(best_sim), 1.0, atol=1e-5)
+
+
+class TestKmeansStep:
+    def test_matches_oracle(self):
+        x = _unit_rows((aot.BLOCK_B, aot.BLOCK_D), 3)
+        m = _unit_rows((aot.BLOCK_K, aot.BLOCK_D), 4)
+        best, new_m, obj = model.kmeans_step_jit(x, m)
+        rbest, rm, robj = kmeans_step_ref(x, m)
+        np.testing.assert_array_equal(np.asarray(best), np.asarray(rbest))
+        np.testing.assert_allclose(np.asarray(new_m), np.asarray(rm), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(obj), float(robj), rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_objective_nondecreasing_property(self, seed):
+        x = _unit_rows((aot.BLOCK_B, aot.BLOCK_D), seed)
+        m = _unit_rows((aot.BLOCK_K, aot.BLOCK_D), seed ^ 0xFFFF)
+        prev = -np.inf
+        for _ in range(5):
+            _, m, obj = model.kmeans_step_jit(x, m)
+            assert float(obj) >= prev - 1e-3
+            prev = float(obj)
+
+
+class TestAotLowering:
+    def test_hlo_text_nonempty_and_tupled(self):
+        x_spec = jax.ShapeDtypeStruct((aot.BLOCK_B, aot.BLOCK_D), jnp.float32)
+        m_spec = jax.ShapeDtypeStruct((aot.BLOCK_K, aot.BLOCK_D), jnp.float32)
+        text = aot.to_hlo_text(model.assign_block, x_spec, m_spec)
+        assert "HloModule" in text
+        # return_tuple=True → root is a tuple of the two outputs.
+        assert "ROOT" in text and "tuple(" in text.replace(") ", "(")
+        # fixed shapes baked in
+        assert f"f32[{aot.BLOCK_B},{aot.BLOCK_D}]" in text
+
+    def test_kmeans_step_lowering_has_three_outputs(self):
+        x_spec = jax.ShapeDtypeStruct((aot.BLOCK_B, aot.BLOCK_D), jnp.float32)
+        m_spec = jax.ShapeDtypeStruct((aot.BLOCK_K, aot.BLOCK_D), jnp.float32)
+        text = aot.to_hlo_text(model.kmeans_step, x_spec, m_spec)
+        assert "HloModule" in text
+        assert f"f32[{aot.BLOCK_K},{aot.BLOCK_D}]" in text
+
+    def test_block_constants_match_rust(self):
+        """Guard: the Rust runtime hard-codes the same block shapes."""
+        import pathlib
+        import re
+
+        src = pathlib.Path(__file__).resolve().parents[2] / "rust/src/runtime/mod.rs"
+        text = src.read_text()
+        for name, value in [
+            ("BLOCK_B", aot.BLOCK_B),
+            ("BLOCK_K", aot.BLOCK_K),
+            ("BLOCK_D", aot.BLOCK_D),
+        ]:
+            m = re.search(rf"pub const {name}: usize = (\d+);", text)
+            assert m, f"{name} not found in rust runtime"
+            assert int(m.group(1)) == value, f"{name} mismatch rust={m.group(1)} py={value}"

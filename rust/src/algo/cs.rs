@@ -1,0 +1,223 @@
+//! CS-ICP / CS-MIVI — the Cauchy–Schwarz comparator (Appendix F-B,
+//! Algorithms 10–11), as in Bottesch+ / Knittel+.
+//!
+//! The upper bound on the `s ≥ t_th` part of the similarity is
+//! `‖x^p‖₂ · ‖μ^p_(j;i)‖₂` where both norms are restricted to the
+//! *object's* inherent dimensions (Eqs. 19–21). The object norm is
+//! precomputed; the mean norm is accumulated on the fly from a partial
+//! squared-mean-inverted index — a second K-length accumulator array
+//! whose traffic is the cache-miss source the paper measures — and needs
+//! one square root per scanned centroid.
+
+use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::index::CsIndex;
+use crate::metrics::counters::OpCounters;
+use crate::sparse::Dataset;
+
+pub struct CsAssigner {
+    use_icp: bool,
+    t_th: usize,
+    idx: Option<CsIndex>,
+    /// ‖x_i^p‖₂ over terms ≥ t_th (Eq. 20), precomputed per object when
+    /// the preset t_th activates.
+    xp_norm: Vec<f64>,
+    rho: Vec<f64>,
+    /// On-the-fly squared mean norms in the object subspace (Eq. 21).
+    normsq: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl CsAssigner {
+    pub fn new(ds: &Dataset, use_icp: bool) -> Self {
+        Self {
+            use_icp,
+            t_th: ds.d(),
+            idx: None,
+            xp_norm: vec![0.0; ds.n()],
+            rho: Vec::new(),
+            normsq: Vec::new(),
+            z: Vec::new(),
+        }
+    }
+
+    fn compute_xp_norms(&mut self, ds: &Dataset) {
+        for i in 0..ds.n() {
+            let (ts, vs) = ds.x.row(i);
+            let p0 = ts.partition_point(|&t| (t as usize) < self.t_th);
+            self.xp_norm[i] = vs[p0..].iter().map(|v| v * v).sum::<f64>().sqrt();
+        }
+    }
+}
+
+impl Assigner for CsAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        if st.iter >= 2 {
+            let new_t = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
+            if new_t != self.t_th {
+                self.t_th = new_t;
+                self.compute_xp_norms(ds);
+            }
+        }
+        self.idx = Some(CsIndex::build(&st.means, self.t_th));
+        self.rho.resize(st.k, 0.0);
+        self.normsq.resize(st.k, 0.0);
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let idx = self.idx.as_ref().expect("rebuild not called");
+        let k = st.k;
+        let n = ds.n();
+        let t_th = self.t_th;
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+
+        for i in 0..n {
+            let (ts, us) = ds.x.row(i);
+            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+
+            let rho = &mut self.rho;
+            let normsq = &mut self.normsq;
+            rho.iter_mut().for_each(|r| *r = 0.0);
+            normsq.iter_mut().for_each(|v| *v = 0.0);
+            self.z.clear();
+            let rho_max0 = st.rho[i];
+            let mut mult = 0u64;
+
+            let icp_active = self.use_icp && st.xstate[i];
+
+            // Region 1 exact (Algorithm 11 lines 2–4).
+            for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
+                let (ids, vals) = if icp_active {
+                    idx.r1.postings_moving(t as usize)
+                } else {
+                    idx.r1.postings(t as usize)
+                };
+                mult += ids.len() as u64;
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += u * v;
+                }
+            }
+            // Squared mean norms in the object subspace (lines 5–7):
+            // additions of pre-squared values, but through a *second*
+            // K-length accumulator (the LLCM source).
+            for &t in &ts[p0..] {
+                let (ids, sq) = if icp_active {
+                    idx.r2_sq.postings_moving(t as usize)
+                } else {
+                    idx.r2_sq.postings(t as usize)
+                };
+                counters.cold_touches += ids.len() as u64;
+                for (&c, &vsq) in ids.iter().zip(sq) {
+                    normsq[c as usize] += vsq;
+                }
+            }
+            // UBP filter (lines 8–12): ρ_j + ‖x^p‖·√(‖μ^p_j‖²) — one
+            // multiplication and one square root per scanned centroid.
+            let xp = self.xp_norm[i];
+            if icp_active {
+                for &j in &idx.moving_ids {
+                    let j = j as usize;
+                    mult += 1;
+                    counters.sqrts += 1;
+                    if rho[j] + xp * normsq[j].sqrt() > rho_max0 {
+                        self.z.push(j as u32);
+                    }
+                }
+            } else {
+                for j in 0..k {
+                    mult += 1;
+                    counters.sqrts += 1;
+                    if rho[j] + xp * normsq[j].sqrt() > rho_max0 {
+                        self.z.push(j as u32);
+                    }
+                }
+            }
+
+            // Verification: exact `s ≥ t_th` contribution via the full
+            // partial index (same structure as Algorithm 4's phase).
+            let nth = (ts.len() - p0) as u64;
+            mult += self.z.len() as u64 * nth;
+            counters.cold_touches += self.z.len() as u64 * nth;
+            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                let row = idx.partial.row(t as usize);
+                for &j in &self.z {
+                    rho[j as usize] += u * row[j as usize];
+                }
+            }
+
+            let mut amax = st.assign[i];
+            let mut rmax = rho_max0;
+            for &j in &self.z {
+                if rho[j as usize] > rmax {
+                    rmax = rho[j as usize];
+                    amax = j;
+                }
+            }
+
+            counters.mult += mult;
+            counters.candidates += self.z.len() as u64;
+            counters.exact_sims += self.z.len() as u64;
+            if amax != st.assign[i] {
+                st.assign[i] = amax;
+                changes += 1;
+            }
+        }
+        (counters, changes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
+            + self.xp_norm.len() * 8
+            + (self.rho.len() + self.normsq.len()) * 8
+    }
+
+    fn params(&self) -> (Option<usize>, Option<f64>) {
+        (Some(self.t_th), None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn cs_matches_mivi() {
+        let c = generate(&CorpusSpec {
+            n_docs: 600,
+            ..tiny(88)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 15,
+            seed: 11,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        for kind in [AlgoKind::CsIcp, AlgoKind::CsMivi] {
+            let out = run_clustering(kind, &ds, &cfg);
+            assert_eq!(out.assign, base.assign, "{} diverged", kind.name());
+            assert_eq!(out.iterations(), base.iterations());
+        }
+    }
+
+    #[test]
+    fn cs_has_low_mult_but_pays_sqrts() {
+        let c = generate(&CorpusSpec {
+            n_docs: 800,
+            ..tiny(89)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 16,
+            seed: 12,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let cs = run_clustering(AlgoKind::CsIcp, &ds, &cfg);
+        assert!(cs.total_mult() < base.total_mult());
+        let sq: u64 = cs.logs.iter().map(|l| l.counters.sqrts).sum();
+        assert!(sq > 0);
+    }
+}

@@ -1,0 +1,383 @@
+//! ES-ICP — the paper's proposed algorithm (Section IV, Algorithms 2–6)
+//! — plus its ablations ES (no ICP), ThV (value threshold only) and ThT
+//! (term threshold only) from Appendix D.
+//!
+//! Assignment of one object (Algorithm 4):
+//!
+//! 1. **Gathering** (`G_1` for ICP-eligible objects, else `G_0`,
+//!    Algorithm 5): accumulate exact partial similarities over Region 1
+//!    (`s < t_th`) and Region 2 (`s ≥ t_th`, `v ≥ v_th`), decrementing
+//!    the remaining L1 mass `y_(i,j)`; then the ES filter keeps centroid
+//!    `j` iff `ρ_j + y_(i,j) > ρ_max` — thanks to the Appendix-A scaling
+//!    (object values × v_th, mean values ÷ v_th) the Region-3 upper
+//!    bound is that pure *addition*.
+//! 2. **Verification**: for survivors only, add the exact Region-3
+//!    partial similarity through the full-expression partial index `M^p`
+//!    and take the argmax.
+//!
+//! The structural parameters are estimated by `estparams` at the first
+//! and second update steps (Algorithm 6 lines 17–19).
+
+use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::estparams::{estimate, EstConfig};
+use crate::index::{EsIndex, ObjInvIndex};
+use crate::metrics::counters::OpCounters;
+use crate::sparse::{CsrMatrix, Dataset};
+
+/// Which variant of the ES family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EsMode {
+    /// Both structural parameters estimated; `icp` toggles the auxiliary
+    /// filter (ES-ICP vs ES / ES-MIVI).
+    Full { icp: bool },
+    /// ThV (Appendix D): `t_th` pinned to 0, only `v_th` estimated.
+    ValueOnly,
+    /// ThT (Appendix D): `v_th` pinned to 1.0, only `t_th` estimated.
+    TermOnly,
+}
+
+pub struct EsAssigner {
+    mode: EsMode,
+    /// Current structural parameters. Before the first estimation this
+    /// is `(D, 1.0)`: everything is Region 1 and the gathering phase
+    /// degenerates to a full MIVI pass (so iteration 1 is exact without
+    /// special-casing).
+    t_th: usize,
+    v_th: f64,
+    idx: Option<EsIndex>,
+    /// Object matrix with values scaled by `v_th` (Appendix A). Rebuilt
+    /// only when `v_th` changes (estimations happen twice).
+    xs: CsrMatrix,
+    xs_scale: f64,
+    /// Partial object inverted index for EstParams (built lazily).
+    xp: Option<ObjInvIndex>,
+    estimations_done: usize,
+    // Scratch (per-object accumulators, length K).
+    rho: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl EsAssigner {
+    pub fn new(ds: &Dataset, mode: EsMode) -> Self {
+        Self {
+            mode,
+            t_th: ds.d(),
+            v_th: 1.0,
+            idx: None,
+            xs: ds.x.clone(),
+            xs_scale: 1.0,
+            xp: None,
+            estimations_done: 0,
+            rho: Vec::new(),
+            z: Vec::new(),
+        }
+    }
+
+    fn use_icp(&self) -> bool {
+        matches!(self.mode, EsMode::Full { icp: true })
+    }
+
+    fn est_config(&self, ds: &Dataset, cfg: &ClusterConfig) -> EstConfig {
+        let d = ds.d();
+        let s_min = ((d as f64 * cfg.s_min_frac) as usize).min(d.saturating_sub(1));
+        match self.mode {
+            EsMode::Full { .. } => EstConfig {
+                s_min,
+                n_candidates: cfg.n_vth_candidates,
+                fixed_t: None,
+                fixed_v: None,
+                max_sample_objects: 4_000,
+            },
+            EsMode::ValueOnly => EstConfig {
+                s_min: 0,
+                n_candidates: cfg.n_vth_candidates,
+                fixed_t: Some(0),
+                fixed_v: None,
+                max_sample_objects: 4_000,
+            },
+            EsMode::TermOnly => EstConfig {
+                s_min,
+                n_candidates: 1,
+                fixed_t: None,
+                fixed_v: Some(1.0),
+                max_sample_objects: 4_000,
+            },
+        }
+    }
+
+    fn rescale_objects(&mut self, ds: &Dataset) {
+        if (self.v_th - self.xs_scale).abs() < f64::EPSILON * self.v_th.abs() {
+            return;
+        }
+        self.xs = ds.x.clone();
+        if self.v_th != 1.0 {
+            for i in 0..self.xs.n_rows() {
+                let (_, vs) = self.xs.row_mut(i);
+                for v in vs {
+                    *v *= self.v_th;
+                }
+            }
+        }
+        self.xs_scale = self.v_th;
+    }
+}
+
+impl Assigner for EsAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        // EstParams at the first and second update steps (st.iter is the
+        // iteration of the NEXT assignment, so 2 and 3).
+        // The probability model behind EstParams assumes K > e (Eq. 28
+        // divides the tail mass 1/K; ln(K/e) must be positive). For very
+        // small K the filter cannot pay off anyway — keep the degenerate
+        // (D, 1.0) parameters, i.e. exact MIVI behavior.
+        if st.k >= 4 && (st.iter == 2 || st.iter == 3) && self.estimations_done < 2 {
+            let mut ec = self.est_config(ds, cfg);
+            if self.estimations_done == 0 {
+                // The first estimation exists only to cheapen iteration
+                // 2 (Appendix A): a coarse grid over a small object
+                // sample is enough. The second estimation (authoritative,
+                // used for the rest of the run) gets the full budget.
+                ec.n_candidates = (ec.n_candidates / 3).max(5);
+                ec.max_sample_objects = ec.max_sample_objects.min(1_500);
+            }
+            if self.xp.as_ref().map(|x| x.s_lo > ec.s_min.min(ec.fixed_t.unwrap_or(usize::MAX)))
+                .unwrap_or(true)
+            {
+                let lo = ec.fixed_t.map(|t| t.min(ec.s_min)).unwrap_or(ec.s_min);
+                self.xp = Some(ObjInvIndex::build(&ds.x, lo));
+            }
+            let est = estimate(ds, &st.means, &st.rho, self.xp.as_ref().unwrap(), &ec);
+            self.t_th = est.t_th;
+            self.v_th = est.v_th;
+            self.estimations_done += 1;
+            self.rescale_objects(ds);
+            if self.estimations_done == 2 {
+                // X^p is only needed by EstParams; release it for the
+                // long steady-state phase (its transient footprint is
+                // merged into the estimation cost, like the paper's
+                // elapsed-time accounting in footnote 7).
+                self.xp = None;
+            }
+        }
+        self.idx = Some(EsIndex::build(&st.means, self.t_th, self.v_th));
+        self.rho.resize(st.k, 0.0);
+    }
+
+    fn assign(&mut self, _ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let idx = self.idx.as_ref().expect("rebuild not called");
+        let k = st.k;
+        let n = self.xs.n_rows();
+        let t_th = self.t_th;
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+        let use_icp = self.use_icp();
+
+        for i in 0..n {
+            let (ts, us) = self.xs.row(i);
+            // Split the object's terms at t_th (terms are ascending).
+            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let mut y_base = 0.0;
+            for &u in &us[p0..] {
+                y_base += u;
+            }
+
+            // Folded accumulator (see EsIndex docs): start at the full
+            // Region-3 upper-bound mass; Region-2 entries store v−1 so
+            // one multiply-add accumulates and retires simultaneously.
+            // After the gathering phase, rho[j] IS the upper bound.
+            let rho = &mut self.rho;
+            rho.iter_mut().for_each(|r| *r = y_base);
+            self.z.clear();
+            let rho_max0 = st.rho[i];
+            let mut mult = 0u64;
+
+            let icp_active = use_icp && st.xstate[i];
+            if icp_active {
+                // G_1: moving blocks only (Algorithm 5).
+                for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
+                    let (ids, vals) = idx.r1.postings_moving(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                    let (ids, vals) = idx.r2.postings_moving(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                // ES filter over moving centroids: a bare comparison.
+                for &j in &idx.moving_ids {
+                    if rho[j as usize] > rho_max0 {
+                        self.z.push(j);
+                    }
+                }
+            } else {
+                // G_0: full arrays.
+                for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
+                    let (ids, vals) = idx.r1.postings(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                    let (ids, vals) = idx.r2.postings(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                for (j, &r) in rho.iter().enumerate() {
+                    if r > rho_max0 {
+                        self.z.push(j as u32);
+                    }
+                }
+            }
+
+            // Verification phase: retire the survivors' remaining bound
+            // mass through the deficit index — rho lands exactly on the
+            // similarity (Algorithm 4 l.12–13, folded).
+            let nth = (ts.len() - p0) as u64;
+            mult += self.z.len() as u64 * nth;
+            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                let row = idx.partial.row(t as usize);
+                for &j in &self.z {
+                    rho[j as usize] -= u * row[j as usize];
+                }
+            }
+
+            let mut amax = st.assign[i];
+            let mut rmax = rho_max0;
+            for &j in &self.z {
+                if rho[j as usize] > rmax {
+                    rmax = rho[j as usize];
+                    amax = j;
+                }
+            }
+
+            counters.mult += mult;
+            counters.candidates += self.z.len() as u64;
+            counters.exact_sims += self.z.len() as u64;
+            if amax != st.assign[i] {
+                st.assign[i] = amax;
+                changes += 1;
+            }
+        }
+        (counters, changes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        // The scaled object copy substitutes for the input matrix (the
+        // paper scales in place, Algorithm 4 lines 1-2), and X^p lives
+        // only through the two estimations, so neither is counted here —
+        // this matches the paper's Max MEM accounting where the partial
+        // mean-inverted index is the differentiating term (§VI-D).
+        let idx = self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0);
+        idx + self.rho.len() * 8
+    }
+
+    fn params(&self) -> (Option<usize>, Option<f64>) {
+        (Some(self.t_th), Some(self.v_th))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::sparse::build_dataset;
+
+    fn dataset(seed: u64) -> crate::sparse::Dataset {
+        let c = generate(&CorpusSpec {
+            n_docs: 600,
+            ..tiny(seed)
+        });
+        build_dataset("t", c.n_terms, &c.docs)
+    }
+
+    /// The central exactness property: every ES-family variant follows
+    /// MIVI's trajectory (same assignments, same iteration count).
+    #[test]
+    fn es_family_matches_mivi() {
+        let ds = dataset(41);
+        let cfg = ClusterConfig {
+            k: 15,
+            seed: 2,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        for kind in [AlgoKind::EsIcp, AlgoKind::Es, AlgoKind::ThV, AlgoKind::ThT] {
+            let out = run_clustering(kind, &ds, &cfg);
+            assert_eq!(
+                out.assign,
+                base.assign,
+                "{} diverged from MIVI",
+                kind.name()
+            );
+            assert_eq!(out.iterations(), base.iterations(), "{}", kind.name());
+            assert!(
+                (out.objective - base.objective).abs() < 1e-6,
+                "{} objective {} vs {}",
+                kind.name(),
+                out.objective,
+                base.objective
+            );
+        }
+    }
+
+    #[test]
+    fn es_icp_prunes() {
+        let ds = dataset(43);
+        let cfg = ClusterConfig {
+            k: 15,
+            seed: 7,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let es = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        assert!(
+            es.total_mult() < base.total_mult(),
+            "ES-ICP did not reduce multiplications: {} vs {}",
+            es.total_mult(),
+            base.total_mult()
+        );
+        // After the parameters kick in (iteration ≥ 2) the CPR must drop
+        // below 1; MIVI's is identically 1.
+        let late_cpr = es.logs[es.logs.len() / 2].cpr;
+        assert!(late_cpr < 1.0, "CPR never dropped: {late_cpr}");
+        // Structural parameters were estimated.
+        assert!(es.t_th.unwrap() <= ds.d());
+        assert!(es.v_th.unwrap() > 0.0 && es.v_th.unwrap() < 1.0);
+    }
+
+    #[test]
+    fn tht_uses_pinned_v() {
+        let ds = dataset(44);
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::ThT, &ds, &cfg);
+        assert_eq!(out.v_th, Some(1.0));
+    }
+
+    #[test]
+    fn thv_uses_pinned_t() {
+        let ds = dataset(45);
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::ThV, &ds, &cfg);
+        assert_eq!(out.t_th, Some(0));
+        // ThV's partial index spans all of D: its memory must exceed
+        // ES-ICP's (the Appendix-D Max MEM observation).
+        let es = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        assert!(out.max_mem_bytes > es.max_mem_bytes);
+    }
+}

@@ -1,0 +1,215 @@
+//! MIVI — the mean-inverted-index baseline (Algorithm 1) — and ICP, its
+//! extension with the invariant-centroid pruning filter (Section IV-B
+//! auxiliary filter used standalone, as in the paper's §VI-C "ICP").
+//!
+//! MIVI: term-at-a-time accumulation of all K similarities through the
+//! mean-inverted index, then a full argmax. No pruning: CPR = 1.
+//!
+//! ICP: identical, except that for objects satisfying Eq. (5) the
+//! accumulation runs only over the *moving block* of each postings array
+//! and the argmax only over moving centroids — invariant centroids
+//! provably cannot win (their similarity is unchanged, and it already
+//! lost at the previous assignment).
+
+use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::index::InvIndex;
+use crate::metrics::counters::OpCounters;
+use crate::sparse::Dataset;
+
+pub struct MiviAssigner {
+    use_icp: bool,
+    idx: Option<InvIndex>,
+    /// Similarity accumulator ρ (length K).
+    rho: Vec<f64>,
+}
+
+impl MiviAssigner {
+    pub fn new(_ds: &Dataset, use_icp: bool) -> Self {
+        Self {
+            use_icp,
+            idx: None,
+            rho: Vec::new(),
+        }
+    }
+}
+
+impl Assigner for MiviAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, _cfg: &ClusterConfig) {
+        self.idx = Some(InvIndex::build(&st.means, ds.d()));
+        self.rho.resize(st.k, 0.0);
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let idx = self.idx.as_ref().expect("rebuild not called");
+        let k = st.k;
+        let n = ds.n();
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+        let rho = &mut self.rho;
+
+        for i in 0..n {
+            let (ts, vs) = ds.x.row(i);
+            let icp_active = self.use_icp && st.xstate[i];
+
+            rho.iter_mut().for_each(|r| *r = 0.0);
+            let mut mult = 0u64;
+
+            if icp_active {
+                // Moving blocks only.
+                for (&t, &u) in ts.iter().zip(vs) {
+                    let (ids, vals) = idx.postings_moving(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                let mut amax = st.assign[i];
+                let mut rmax = st.rho[i];
+                for &j in &idx.moving_ids {
+                    if rho[j as usize] > rmax {
+                        rmax = rho[j as usize];
+                        amax = j;
+                    }
+                }
+                counters.mult += mult;
+                counters.candidates += idx.moving_ids.len() as u64;
+                counters.exact_sims += idx.moving_ids.len() as u64;
+                if amax != st.assign[i] {
+                    st.assign[i] = amax;
+                    changes += 1;
+                }
+            } else {
+                // Full MIVI pass (Algorithm 1).
+                for (&t, &u) in ts.iter().zip(vs) {
+                    let (ids, vals) = idx.postings(t as usize);
+                    mult += ids.len() as u64;
+                    for (&c, &v) in ids.iter().zip(vals) {
+                        rho[c as usize] += u * v;
+                    }
+                }
+                let mut amax = st.assign[i];
+                let mut rmax = st.rho[i];
+                for (j, &r) in rho.iter().enumerate() {
+                    if r > rmax {
+                        rmax = r;
+                        amax = j as u32;
+                    }
+                }
+                counters.mult += mult;
+                counters.candidates += k as u64;
+                counters.exact_sims += k as u64;
+                if amax != st.assign[i] {
+                    st.assign[i] = amax;
+                    changes += 1;
+                }
+            }
+        }
+        (counters, changes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0) + self.rho.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+
+    fn toy() -> Dataset {
+        let c = generate(&tiny(21));
+        build_dataset("t", c.n_terms, &c.docs)
+    }
+
+    /// Brute-force reference assignment: exact argmax with the same
+    /// tie-break (keep current unless strictly better, lowest id first).
+    pub(crate) fn brute_force_step(
+        ds: &Dataset,
+        means: &crate::index::MeanSet,
+        assign: &[u32],
+        rho_prev: &[f64],
+    ) -> Vec<u32> {
+        let k = means.k();
+        (0..ds.n())
+            .map(|i| {
+                let mut amax = assign[i];
+                let mut rmax = rho_prev[i];
+                for j in 0..k {
+                    let dense = means.m.row_dense(j);
+                    let s = ds.x.row_dot_dense(i, &dense);
+                    if s > rmax {
+                        rmax = s;
+                        amax = j as u32;
+                    }
+                }
+                amax
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mivi_single_step_matches_brute_force() {
+        let ds = toy();
+        let k = 8;
+        let means = crate::algo::seed_means(&ds, k, 5);
+        let mut st = IterState {
+            k,
+            assign: vec![0; ds.n()],
+            rho: vec![-1.0; ds.n()],
+            xstate: vec![false; ds.n()],
+            means,
+            iter: 1,
+        };
+        let cfg = ClusterConfig::default();
+        let mut a = MiviAssigner::new(&ds, false);
+        a.rebuild(&ds, &st, &cfg);
+        let expect = brute_force_step(&ds, &st.means, &st.assign, &st.rho);
+        let (c, _) = a.assign(&ds, &mut st);
+        assert_eq!(st.assign, expect);
+        assert!(c.mult > 0);
+        assert_eq!(c.cpr(ds.n(), k), 1.0); // MIVI never prunes
+    }
+
+    #[test]
+    fn mivi_converges_and_objective_monotone() {
+        let ds = toy();
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        assert!(out.converged, "did not converge");
+        // Lloyd objective (sum of similarities) is non-decreasing.
+        let objs: Vec<f64> = out.logs.iter().map(|l| l.objective).collect();
+        for w in objs.windows(2) {
+            assert!(
+                w[1] >= w[0] - 1e-9,
+                "objective decreased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        // changes hit 0 at the end
+        assert_eq!(out.logs.last().unwrap().changes, 0);
+    }
+
+    #[test]
+    fn icp_matches_mivi_assignments() {
+        let ds = toy();
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let b = run_clustering(AlgoKind::Icp, &ds, &cfg);
+        assert_eq!(a.assign, b.assign, "ICP diverged from MIVI");
+        assert_eq!(a.iterations(), b.iterations());
+        // ICP must not do more multiplications than MIVI.
+        assert!(b.total_mult() <= a.total_mult());
+    }
+}

@@ -1,0 +1,414 @@
+//! The clustering algorithms: the proposed **ES-ICP** and every
+//! comparator the paper evaluates (Sections II, VI; Appendices D–G).
+//!
+//! All algorithms are *accelerations* in the paper's sense: started from
+//! the same seeding they compute the same Lloyd fixed-point trajectory as
+//! the baseline MIVI (up to floating-point tie-breaks; see
+//! `coordinator::audit`). They differ only in the data structures and
+//! pruning filters used at the assignment step.
+//!
+//! | kind        | main filter | aux filter | index |
+//! |-------------|-------------|------------|-------|
+//! | `Mivi`      | –           | –          | plain mean-inverted |
+//! | `Divi`      | –           | –          | object-inverted (strawman, §II) |
+//! | `Ding`      | group drift bounds | –   | dense means (Yinyang-for-cosine analog, §II) |
+//! | `Icp`       | –           | ICP        | two-block mean-inverted |
+//! | `EsIcp`     | ES          | ICP        | three-region structured |
+//! | `Es`        | ES          | –          | three-region structured |
+//! | `ThV`       | ES (t_th=0) | –          | value-threshold only (App. D) |
+//! | `ThT`       | ES (v_th=1) | –          | term-threshold only (App. D) |
+//! | `TaIcp`     | TA          | ICP        | sorted postings (App. F) |
+//! | `TaMivi`    | TA          | –          | sorted postings |
+//! | `CsIcp`     | CS          | ICP        | squared postings (App. F) |
+//! | `CsMivi`    | CS          | –          | squared postings |
+
+pub mod cs;
+pub mod ding;
+pub mod divi;
+pub mod esicp;
+pub mod mivi;
+pub mod ta;
+
+use crate::index::{membership_changes, update_means_with_rho, MeanSet};
+use crate::metrics::counters::OpCounters;
+use crate::sparse::{CsrMatrix, Dataset};
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    Mivi,
+    Divi,
+    Ding,
+    Icp,
+    EsIcp,
+    Es,
+    ThV,
+    ThT,
+    TaIcp,
+    TaMivi,
+    CsIcp,
+    CsMivi,
+}
+
+impl AlgoKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoKind::Mivi => "MIVI",
+            AlgoKind::Divi => "DIVI",
+            AlgoKind::Ding => "Ding+",
+            AlgoKind::Icp => "ICP",
+            AlgoKind::EsIcp => "ES-ICP",
+            AlgoKind::Es => "ES",
+            AlgoKind::ThV => "ThV",
+            AlgoKind::ThT => "ThT",
+            AlgoKind::TaIcp => "TA-ICP",
+            AlgoKind::TaMivi => "TA-MIVI",
+            AlgoKind::CsIcp => "CS-ICP",
+            AlgoKind::CsMivi => "CS-MIVI",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "mivi" => AlgoKind::Mivi,
+            "divi" => AlgoKind::Divi,
+            "ding" | "ding+" => AlgoKind::Ding,
+            "icp" => AlgoKind::Icp,
+            "es-icp" | "esicp" => AlgoKind::EsIcp,
+            "es" | "es-mivi" => AlgoKind::Es,
+            "thv" => AlgoKind::ThV,
+            "tht" => AlgoKind::ThT,
+            "ta-icp" | "taicp" => AlgoKind::TaIcp,
+            "ta-mivi" | "tamivi" => AlgoKind::TaMivi,
+            "cs-icp" | "csicp" => AlgoKind::CsIcp,
+            "cs-mivi" | "csmivi" => AlgoKind::CsMivi,
+            _ => return None,
+        })
+    }
+
+    /// All kinds, in the paper's presentation order.
+    pub fn all() -> &'static [AlgoKind] {
+        &[
+            AlgoKind::Mivi,
+            AlgoKind::Divi,
+            AlgoKind::Ding,
+            AlgoKind::Icp,
+            AlgoKind::EsIcp,
+            AlgoKind::Es,
+            AlgoKind::ThV,
+            AlgoKind::ThT,
+            AlgoKind::TaIcp,
+            AlgoKind::TaMivi,
+            AlgoKind::CsIcp,
+            AlgoKind::CsMivi,
+        ]
+    }
+}
+
+/// Run configuration shared by all algorithms.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of clusters K.
+    pub k: usize,
+    /// Seeding RNG seed; identical seeds give identical initial states
+    /// across algorithms (the exactness audits rely on this).
+    pub seed: u64,
+    /// Iteration cap (the paper's runs converge in 64–81 iterations).
+    pub max_iters: usize,
+    /// Preset `t_th` as a fraction of D for TA-ICP / CS-ICP
+    /// (paper §VI-C: 0.9·D).
+    pub t_th_frac: f64,
+    /// EstParams: minimum `s'` candidate as a fraction of D
+    /// (paper App. C used s_min ≈ 0.865·D).
+    pub s_min_frac: f64,
+    /// EstParams: number of `v_th` candidates.
+    pub n_vth_candidates: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            k: 16,
+            seed: 42,
+            max_iters: 200,
+            t_th_frac: 0.9,
+            s_min_frac: 0.8,
+            n_vth_candidates: 25,
+        }
+    }
+}
+
+/// Mutable state shared between the driver and an assigner.
+pub struct IterState {
+    pub k: usize,
+    /// Current assignment a(i).
+    pub assign: Vec<u32>,
+    /// ρ_{a(i)}^{[r-1]}: similarity of each object to its centroid as of
+    /// the previous update step (-1.0 before the first assignment).
+    pub rho: Vec<f64>,
+    /// ICP eligibility (Eq. 5): similarity did not decrease and the
+    /// assignment did not change at the previous step.
+    pub xstate: Vec<bool>,
+    /// Current mean set M^{[r-1]} (with moved flags).
+    pub means: MeanSet,
+    /// 1-based iteration of the *next* assignment step.
+    pub iter: usize,
+}
+
+/// Per-iteration record (feeds Figs. 1, 7, 8, 15, 16 and all tables).
+#[derive(Debug, Clone)]
+pub struct IterLog {
+    pub iter: usize,
+    pub counters: OpCounters,
+    pub assign_secs: f64,
+    /// Update-step time (mean construction + index rebuild + EstParams,
+    /// merged as in the paper's footnote 7).
+    pub update_secs: f64,
+    pub changes: usize,
+    pub cpr: f64,
+    pub mem_bytes: usize,
+    pub n_moving: usize,
+    pub objective: f64,
+}
+
+/// Result of a complete clustering run.
+pub struct ClusterOutput {
+    pub algo: AlgoKind,
+    pub assign: Vec<u32>,
+    pub objective: f64,
+    pub logs: Vec<IterLog>,
+    pub converged: bool,
+    /// Maximum resident structure size over the run (paper's Max MEM).
+    pub max_mem_bytes: usize,
+    /// Final structural parameters, if the algorithm uses them.
+    pub t_th: Option<usize>,
+    pub v_th: Option<f64>,
+}
+
+impl ClusterOutput {
+    pub fn iterations(&self) -> usize {
+        self.logs.len()
+    }
+
+    pub fn total_mult(&self) -> u64 {
+        self.logs.iter().map(|l| l.counters.mult).sum()
+    }
+
+    pub fn avg_mult(&self) -> f64 {
+        self.total_mult() as f64 / self.logs.len().max(1) as f64
+    }
+
+    pub fn total_assign_secs(&self) -> f64 {
+        self.logs.iter().map(|l| l.assign_secs).sum()
+    }
+
+    pub fn total_update_secs(&self) -> f64 {
+        self.logs.iter().map(|l| l.update_secs).sum()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_assign_secs() + self.total_update_secs()
+    }
+
+    pub fn avg_iter_secs(&self) -> f64 {
+        self.total_secs() / self.logs.len().max(1) as f64
+    }
+}
+
+/// The assignment-step strategy implemented by each algorithm.
+pub trait Assigner {
+    /// Rebuild per-iteration structures after an update step (or from the
+    /// seed means before iteration 1). `st.iter` is the iteration whose
+    /// assignment comes next.
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig);
+
+    /// Run one assignment step: update `st.assign` in place, return the
+    /// cost counters and the number of changed assignments.
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize);
+
+    /// Bytes held by the algorithm-specific structures right now.
+    fn mem_bytes(&self) -> usize;
+
+    /// Current structural parameters, if applicable.
+    fn params(&self) -> (Option<usize>, Option<f64>) {
+        (None, None)
+    }
+}
+
+/// Construct the assigner for an algorithm kind.
+pub fn make_assigner(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> Box<dyn Assigner> {
+    match kind {
+        AlgoKind::Mivi => Box::new(mivi::MiviAssigner::new(ds, /*icp=*/ false)),
+        AlgoKind::Icp => Box::new(mivi::MiviAssigner::new(ds, /*icp=*/ true)),
+        AlgoKind::Divi => Box::new(divi::DiviAssigner::new(ds)),
+        AlgoKind::Ding => Box::new(ding::DingAssigner::new(ds, cfg)),
+        AlgoKind::EsIcp => Box::new(esicp::EsAssigner::new(ds, esicp::EsMode::Full { icp: true })),
+        AlgoKind::Es => Box::new(esicp::EsAssigner::new(ds, esicp::EsMode::Full { icp: false })),
+        AlgoKind::ThV => Box::new(esicp::EsAssigner::new(ds, esicp::EsMode::ValueOnly)),
+        AlgoKind::ThT => Box::new(esicp::EsAssigner::new(ds, esicp::EsMode::TermOnly)),
+        AlgoKind::TaIcp => Box::new(ta::TaAssigner::new(ds, true)),
+        AlgoKind::TaMivi => Box::new(ta::TaAssigner::new(ds, false)),
+        AlgoKind::CsIcp => Box::new(cs::CsAssigner::new(ds, true)),
+        AlgoKind::CsMivi => Box::new(cs::CsAssigner::new(ds, false)),
+    }
+}
+
+/// Deterministic seeding: K distinct objects as initial means (the
+/// paper's random initial-state selection; Appendix H shows seeding does
+/// not matter at large K, which `benches/exp_seeding` reproduces).
+pub fn seed_means(ds: &Dataset, k: usize, seed: u64) -> MeanSet {
+    assert!(k >= 1 && k <= ds.n(), "K={k} out of range (N={})", ds.n());
+    let mut rng = Pcg32::new(seed ^ 0x5eed_5eed);
+    let picks = rng.sample_distinct(ds.n(), k);
+    let rows: Vec<Vec<(u32, f64)>> = picks
+        .iter()
+        .map(|&i| {
+            let (ts, vs) = ds.x.row(i);
+            ts.iter().cloned().zip(vs.iter().cloned()).collect()
+        })
+        .collect();
+    MeanSet {
+        m: CsrMatrix::from_rows(ds.d(), &rows),
+        moved: vec![true; k],
+        sizes: vec![0; k],
+    }
+}
+
+/// Run a complete clustering with the given algorithm. See module docs.
+pub fn run_clustering(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> ClusterOutput {
+    let n = ds.n();
+    let mut st = IterState {
+        k: cfg.k,
+        assign: vec![0; n],
+        rho: vec![-1.0; n],
+        xstate: vec![false; n],
+        means: seed_means(ds, cfg.k, cfg.seed),
+        iter: 1,
+    };
+    let mut assigner = make_assigner(kind, ds, cfg);
+
+    let mut logs: Vec<IterLog> = Vec::new();
+    let mut max_mem = 0usize;
+    let mut objective = f64::NAN;
+    let mut converged = false;
+
+    // Initial structures from the seed means.
+    let mut upd_sw = Stopwatch::new();
+    upd_sw.start();
+    assigner.rebuild(ds, &st, cfg);
+    upd_sw.stop();
+    let mut carry_update_secs = upd_sw.secs();
+
+    for r in 1..=cfg.max_iters {
+        st.iter = r;
+        let prev_assign = st.assign.clone();
+
+        let mut asg_sw = Stopwatch::new();
+        asg_sw.start();
+        let (counters, changes) = assigner.assign(ds, &mut st);
+        asg_sw.stop();
+
+        let mem = assigner.mem_bytes();
+        max_mem = max_mem.max(mem);
+
+        if changes == 0 && r > 1 {
+            // Fixed point: the update step would reproduce the same
+            // means. Log the final (pure-assignment) iteration.
+            logs.push(IterLog {
+                iter: r,
+                counters,
+                assign_secs: asg_sw.secs(),
+                update_secs: carry_update_secs,
+                changes,
+                cpr: counters.cpr(n, cfg.k),
+                mem_bytes: mem,
+                n_moving: st.means.n_moving(),
+                objective,
+            });
+            converged = true;
+            break;
+        }
+
+        // Update step (+ index rebuild + EstParams where applicable).
+        let changed = membership_changes(&prev_assign, &st.assign, cfg.k);
+        let mut sw = Stopwatch::new();
+        sw.start();
+        let upd = update_means_with_rho(
+            ds,
+            &st.assign,
+            cfg.k,
+            Some(&st.means),
+            Some(&changed),
+            Some(&st.rho),
+        );
+        // ICP eligibility for the next assignment (Eq. 5): similarity
+        // non-decreasing w.r.t. the *same* centroid.
+        for i in 0..n {
+            st.xstate[i] = prev_assign[i] == st.assign[i] && upd.rho[i] >= st.rho[i];
+        }
+        objective = upd.objective;
+        st.means = upd.means;
+        st.rho = upd.rho;
+        st.iter = r + 1;
+        assigner.rebuild(ds, &st, cfg);
+        sw.stop();
+
+        logs.push(IterLog {
+            iter: r,
+            counters,
+            assign_secs: asg_sw.secs(),
+            update_secs: carry_update_secs + sw.secs(),
+            changes,
+            cpr: counters.cpr(n, cfg.k),
+            mem_bytes: assigner.mem_bytes(),
+            n_moving: st.means.n_moving(),
+            objective,
+        });
+        carry_update_secs = 0.0;
+        max_mem = max_mem.max(assigner.mem_bytes());
+    }
+
+    let (t_th, v_th) = assigner.params();
+    ClusterOutput {
+        algo: kind,
+        assign: st.assign,
+        objective,
+        logs,
+        converged,
+        max_mem_bytes: max_mem,
+        t_th,
+        v_th,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn seeding_is_deterministic_and_distinct() {
+        let c = generate(&tiny(3));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let a = seed_means(&ds, 10, 7);
+        let b = seed_means(&ds, 10, 7);
+        assert_eq!(a.m, b.m);
+        let c2 = seed_means(&ds, 10, 8);
+        assert_ne!(a.m, c2.m);
+        assert_eq!(a.k(), 10);
+        for j in 0..10 {
+            assert!((a.m.row_norm(j) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn algo_kind_parse_roundtrip() {
+        for &k in AlgoKind::all() {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k), "{:?}", k);
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+}

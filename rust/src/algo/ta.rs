@@ -1,0 +1,240 @@
+//! TA-ICP / TA-MIVI — the threshold-algorithm comparator (Appendix F-A,
+//! Algorithms 8–9), inspired by Fagin+ and Li+'s cosine-threshold
+//! algorithm.
+//!
+//! Unlike ES, the value threshold is *individual per object*:
+//! `v_ta = ρ_max / ‖x‖₁` (Eq. 16). The `s ≥ t_th` postings are sorted in
+//! descending feature value, and the gathering phase walks each list from
+//! the top until the value drops below `v_ta` — an irregular,
+//! data-dependent break that the paper blames for TA-ICP's branch
+//! mispredictions; the verification phase must re-check every value
+//! against `v_ta` to skip the already-consumed prefix (more irregular
+//! branches). Both effects are counted in `OpCounters` and visible to
+//! the hardware PMU counters.
+
+use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::index::TaIndex;
+use crate::metrics::counters::OpCounters;
+use crate::sparse::Dataset;
+
+pub struct TaAssigner {
+    use_icp: bool,
+    /// Preset `t_th` (paper §VI-C: 0.9·D); `D` before iteration 2 so the
+    /// first pass degenerates to plain MIVI.
+    t_th: usize,
+    idx: Option<TaIndex>,
+    /// ‖x_i‖₁ per object (Eq. 16 denominator), precomputed once.
+    l1: Vec<f64>,
+    rho: Vec<f64>,
+    y: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl TaAssigner {
+    pub fn new(ds: &Dataset, use_icp: bool) -> Self {
+        let l1 = (0..ds.n()).map(|i| ds.x.row_l1(i)).collect();
+        Self {
+            use_icp,
+            t_th: ds.d(),
+            idx: None,
+            l1,
+            rho: Vec::new(),
+            y: Vec::new(),
+            z: Vec::new(),
+        }
+    }
+}
+
+impl Assigner for TaAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        // Switch to the preset t_th once a real threshold ρ_max exists
+        // (after the first update step).
+        if st.iter >= 2 {
+            self.t_th = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
+        }
+        self.idx = Some(TaIndex::build(&st.means, self.t_th));
+        self.rho.resize(st.k, 0.0);
+        self.y.resize(st.k, 0.0);
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let idx = self.idx.as_ref().expect("rebuild not called");
+        let k = st.k;
+        let n = ds.n();
+        let t_th = self.t_th;
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+
+        for i in 0..n {
+            let (ts, us) = ds.x.row(i);
+            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let mut y_base = 0.0;
+            for &u in &us[p0..] {
+                y_base += u;
+            }
+
+            let rho = &mut self.rho;
+            let y = &mut self.y;
+            rho.iter_mut().for_each(|r| *r = 0.0);
+            y.iter_mut().for_each(|v| *v = y_base);
+            self.z.clear();
+            let rho_max0 = st.rho[i];
+            // Individual threshold (Eq. 16). ρ_max < 0 only before the
+            // first update; v_ta ≤ 0 then disables the region-2 break.
+            let v_ta = rho_max0 / self.l1[i].max(f64::MIN_POSITIVE);
+            let mut mult = 0u64;
+
+            let icp_active = self.use_icp && st.xstate[i];
+
+            // Region 1 exact partial similarities.
+            for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
+                let (ids, vals) = if icp_active {
+                    idx.r1.postings_moving(t as usize)
+                } else {
+                    idx.r1.postings(t as usize)
+                };
+                mult += ids.len() as u64;
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += u * v;
+                }
+            }
+            // Region 2: walk the sorted list until v < v_ta (the TA
+            // stopping rule — one irregular branch per visited entry).
+            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                let (ids, vals) = if icp_active {
+                    idx.r2_moving.postings(t as usize)
+                } else {
+                    idx.r2_all.postings(t as usize)
+                };
+                for (&c, &v) in ids.iter().zip(vals) {
+                    counters.irregular_branches += 1;
+                    if v < v_ta {
+                        break;
+                    }
+                    mult += 1;
+                    rho[c as usize] += u * v;
+                    y[c as usize] -= u;
+                }
+            }
+            // UBP filter (Algorithm 9 lines 9–12): skip ρ_j = 0, then
+            // ρ_j + v_ta · y_(i,j)  >  ρ_max keeps j. One multiplication
+            // per unpruned-by-zero candidate (no scaling possible with an
+            // individual threshold — paper footnote 8).
+            if icp_active {
+                for &j in &idx.moving_ids {
+                    let j = j as usize;
+                    counters.irregular_branches += 1;
+                    if rho[j] == 0.0 {
+                        continue;
+                    }
+                    mult += 1;
+                    if rho[j] + v_ta * y[j] > rho_max0 {
+                        self.z.push(j as u32);
+                    }
+                }
+            } else {
+                for j in 0..k {
+                    counters.irregular_branches += 1;
+                    if rho[j] == 0.0 {
+                        continue;
+                    }
+                    mult += 1;
+                    if rho[j] + v_ta * y[j] > rho_max0 {
+                        self.z.push(j as u32);
+                    }
+                }
+            }
+
+            // Verification: add the not-yet-consumed region-2/3 values
+            // (those `< v_ta`), skipping consumed ones with the
+            // conditional the paper calls out (Algorithm 8 lines 12–15).
+            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                let row = idx.partial.row(t as usize);
+                for &j in &self.z {
+                    let w = row[j as usize];
+                    counters.irregular_branches += 1;
+                    counters.cold_touches += 1;
+                    if w < v_ta {
+                        mult += 1;
+                        rho[j as usize] += u * w;
+                    }
+                }
+            }
+
+            let mut amax = st.assign[i];
+            let mut rmax = rho_max0;
+            for &j in &self.z {
+                if rho[j as usize] > rmax {
+                    rmax = rho[j as usize];
+                    amax = j;
+                }
+            }
+
+            counters.mult += mult;
+            counters.candidates += self.z.len() as u64;
+            counters.exact_sims += self.z.len() as u64;
+            if amax != st.assign[i] {
+                st.assign[i] = amax;
+                changes += 1;
+            }
+        }
+        (counters, changes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
+            + self.l1.len() * 8
+            + (self.rho.len() + self.y.len()) * 8
+    }
+
+    fn params(&self) -> (Option<usize>, Option<f64>) {
+        (Some(self.t_th), None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn ta_matches_mivi() {
+        let c = generate(&CorpusSpec {
+            n_docs: 600,
+            ..tiny(77)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 15,
+            seed: 6,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        for kind in [AlgoKind::TaIcp, AlgoKind::TaMivi] {
+            let out = run_clustering(kind, &ds, &cfg);
+            assert_eq!(out.assign, base.assign, "{} diverged", kind.name());
+            assert_eq!(out.iterations(), base.iterations());
+        }
+    }
+
+    #[test]
+    fn ta_reduces_mult_but_pays_in_branches() {
+        let c = generate(&CorpusSpec {
+            n_docs: 800,
+            ..tiny(78)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 16,
+            seed: 9,
+            ..Default::default()
+        };
+        let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let ta = run_clustering(AlgoKind::TaIcp, &ds, &cfg);
+        assert!(ta.total_mult() < base.total_mult());
+        let tb: u64 = ta.logs.iter().map(|l| l.counters.irregular_branches).sum();
+        let bb: u64 = base.logs.iter().map(|l| l.counters.irregular_branches).sum();
+        assert!(tb > bb, "TA should show the irregular-branch penalty");
+    }
+}

@@ -1,0 +1,115 @@
+//! Exactness audit (DESIGN.md §6): every algorithm is an *acceleration*
+//! — from identical seeding it must reproduce MIVI's trajectory. The
+//! audit runs a candidate algorithm and MIVI with the same configuration
+//! and compares final assignments; any disagreement must be a
+//! floating-point tie (the two chosen centroids have similarities equal
+//! within tolerance), which we verify by recomputing exact similarities
+//! against the *candidate's* final mean set.
+
+use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+use crate::index::update_means;
+use crate::sparse::Dataset;
+
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub algo: &'static str,
+    pub n: usize,
+    /// Objects assigned identically to MIVI.
+    pub exact_matches: usize,
+    /// Objects assigned differently but provably tied (|Δsim| ≤ tol).
+    pub tie_matches: usize,
+    /// Genuine divergences (audit failure if > 0).
+    pub divergences: usize,
+    pub mivi_iterations: usize,
+    pub algo_iterations: usize,
+    pub objective_gap: f64,
+}
+
+impl AuditReport {
+    pub fn passed(&self) -> bool {
+        self.divergences == 0
+    }
+}
+
+/// Audit `kind` against MIVI on the given dataset/config.
+pub fn audit_equivalence(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    tol: f64,
+) -> AuditReport {
+    let base = run_clustering(AlgoKind::Mivi, ds, cfg);
+    let cand = run_clustering(kind, ds, cfg);
+
+    let mut exact = 0usize;
+    let mut ties = 0usize;
+    let mut div = 0usize;
+
+    // Recompute exact similarities against the candidate's converged
+    // means for any disagreeing object.
+    let upd = update_means(ds, &cand.assign, cfg.k, None, None);
+    for i in 0..ds.n() {
+        if base.assign[i] == cand.assign[i] {
+            exact += 1;
+            continue;
+        }
+        let sim_to = |j: u32| {
+            let dense = upd.means.m.row_dense(j as usize);
+            ds.x.row_dot_dense(i, &dense)
+        };
+        let a = sim_to(base.assign[i]);
+        let b = sim_to(cand.assign[i]);
+        if (a - b).abs() <= tol {
+            ties += 1;
+        } else {
+            div += 1;
+        }
+    }
+
+    AuditReport {
+        algo: kind.name(),
+        n: ds.n(),
+        exact_matches: exact,
+        tie_matches: ties,
+        divergences: div,
+        mivi_iterations: base.iterations(),
+        algo_iterations: cand.iterations(),
+        objective_gap: (base.objective - cand.objective).abs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn audit_all_algorithms_on_tiny() {
+        let c = generate(&CorpusSpec {
+            n_docs: 500,
+            ..tiny(202)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 30,
+            ..Default::default()
+        };
+        for &kind in AlgoKind::all() {
+            if kind == AlgoKind::Mivi {
+                continue;
+            }
+            let rep = audit_equivalence(kind, &ds, &cfg, 1e-9);
+            assert!(
+                rep.passed(),
+                "{}: {} divergences (exact {}, ties {})",
+                rep.algo,
+                rep.divergences,
+                rep.exact_matches,
+                rep.tie_matches
+            );
+            assert!(rep.objective_gap < 1e-6, "{}", rep.algo);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Multi-algorithm comparison harness — the machinery behind Tables II,
+//! IV, VI, VIII and the Appendix-E/F/G tables: run each algorithm on the
+//! same dataset/seed, collect Mult / elapsed-time / memory plus hardware
+//! PMU readings (or their software proxies), and print the paper-style
+//! rate tables (rates relative to a reference algorithm).
+
+use crate::algo::{run_clustering, AlgoKind, ClusterConfig, ClusterOutput};
+use crate::metrics::perf::{PerfGroup, PerfReading};
+use crate::sparse::Dataset;
+use crate::util::io::{fmt_sig, Table};
+
+/// Everything the paper's tables report about one algorithm run.
+#[derive(Debug, Clone)]
+pub struct AlgoRunSummary {
+    pub name: &'static str,
+    pub iterations: usize,
+    pub converged: bool,
+    pub objective: f64,
+    /// Average multiplications per iteration.
+    pub avg_mult: f64,
+    /// Average elapsed seconds per iteration (assignment + update).
+    pub avg_secs: f64,
+    pub avg_assign_secs: f64,
+    pub avg_update_secs: f64,
+    pub max_mem_gb: f64,
+    /// Hardware counters over the whole run, if the PMU is accessible.
+    pub perf: Option<PerfReading>,
+    /// Software proxies (always available).
+    pub sw_irregular_branches: u64,
+    pub sw_cold_touches: u64,
+    pub sw_sqrts: u64,
+    pub final_cpr: f64,
+}
+
+/// Run one algorithm and summarize it, measuring hardware counters
+/// around the whole clustering when the PMU is available.
+pub fn run_and_summarize(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+) -> (ClusterOutput, AlgoRunSummary) {
+    let group = PerfGroup::try_new();
+    if let Some(g) = &group {
+        g.start();
+    }
+    let out = run_clustering(kind, ds, cfg);
+    let perf = group.map(|g| g.stop());
+
+    let iters = out.iterations().max(1) as f64;
+    let summary = AlgoRunSummary {
+        name: kind.name(),
+        iterations: out.iterations(),
+        converged: out.converged,
+        objective: out.objective,
+        avg_mult: out.avg_mult(),
+        avg_secs: out.total_secs() / iters,
+        avg_assign_secs: out.total_assign_secs() / iters,
+        avg_update_secs: out.total_update_secs() / iters,
+        max_mem_gb: out.max_mem_bytes as f64 / 1e9,
+        perf,
+        sw_irregular_branches: out.logs.iter().map(|l| l.counters.irregular_branches).sum(),
+        sw_cold_touches: out.logs.iter().map(|l| l.counters.cold_touches).sum(),
+        sw_sqrts: out.logs.iter().map(|l| l.counters.sqrts).sum(),
+        final_cpr: out.logs.last().map(|l| l.cpr).unwrap_or(1.0),
+    };
+    (out, summary)
+}
+
+/// Build the paper-style rate table (e.g. Table IV): every column is the
+/// ratio of an algorithm's value to the reference algorithm's value.
+/// When the PMU was available, Inst/BM/LLCM come from hardware counters;
+/// otherwise from the software proxies (suffixed `~`).
+pub fn comparison_rate_table(summaries: &[AlgoRunSummary], reference: &str) -> Table {
+    let rf = summaries
+        .iter()
+        .find(|s| s.name == reference)
+        .unwrap_or_else(|| panic!("reference algorithm {reference} not in summaries"));
+    let hw = summaries.iter().all(|s| s.perf.is_some());
+
+    let mut t = Table::new(vec![
+        "Algo", "AvgMult", "AvgTime", "Inst", "BM", "LLCM", "MaxMEM",
+    ]);
+    let rate = |x: f64, r: f64| {
+        if r > 0.0 {
+            fmt_sig(x / r)
+        } else if x == 0.0 {
+            "1.0 (0/0)".to_string()
+        } else {
+            // Reference count is zero (e.g. MIVI has no irregular
+            // branches under the software model): show the absolute
+            // count instead of a meaningless ratio.
+            format!("{} (abs)", fmt_sig(x))
+        }
+    };
+    for s in summaries {
+        let (inst, bm, llcm) = if hw {
+            let p = s.perf.as_ref().unwrap();
+            let q = rf.perf.as_ref().unwrap();
+            (
+                rate(p.instructions as f64, q.instructions as f64),
+                rate(p.branch_misses as f64, q.branch_misses as f64),
+                rate(p.llc_load_misses as f64, q.llc_load_misses as f64),
+            )
+        } else {
+            // Software proxies: Mult ≈ instructions driver; irregular
+            // branches ≈ BM; cold touches ≈ LLCM.
+            (
+                rate(s.avg_mult, rf.avg_mult),
+                rate(
+                    s.sw_irregular_branches as f64,
+                    rf.sw_irregular_branches.max(1) as f64,
+                ),
+                rate(s.sw_cold_touches as f64, rf.sw_cold_touches.max(1) as f64),
+            )
+        };
+        t.row(vec![
+            s.name.to_string(),
+            rate(s.avg_mult, rf.avg_mult),
+            rate(s.avg_secs, rf.avg_secs),
+            inst,
+            bm,
+            llcm,
+            rate(s.max_mem_gb, rf.max_mem_gb),
+        ]);
+    }
+    t
+}
+
+/// Absolute-values table (the Appendix-E/F/G style): avg mult, avg time
+/// with assignment/update split, max memory.
+pub fn absolute_table(summaries: &[AlgoRunSummary]) -> Table {
+    let mut t = Table::new(vec![
+        "Algo",
+        "Iters",
+        "AvgMult/iter",
+        "AvgTime/iter(s)",
+        "[assign, update]",
+        "MaxMEM(GB)",
+        "Objective",
+    ]);
+    for s in summaries {
+        t.row(vec![
+            s.name.to_string(),
+            s.iterations.to_string(),
+            fmt_sig(s.avg_mult),
+            fmt_sig(s.avg_secs),
+            format!(
+                "[{}, {}]",
+                fmt_sig(s.avg_assign_secs),
+                fmt_sig(s.avg_update_secs)
+            ),
+            fmt_sig(s.max_mem_gb),
+            fmt_sig(s.objective),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn summarize_and_tables() {
+        let c = generate(&tiny(123));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 8,
+            seed: 17,
+            ..Default::default()
+        };
+        let (_, a) = run_and_summarize(AlgoKind::Mivi, &ds, &cfg);
+        let (_, b) = run_and_summarize(AlgoKind::EsIcp, &ds, &cfg);
+        assert_eq!(a.iterations, b.iterations);
+        let t = comparison_rate_table(&[a.clone(), b.clone()], "ES-ICP");
+        let text = t.render();
+        assert!(text.contains("MIVI") && text.contains("ES-ICP"));
+        // Reference row rates are 1 by construction.
+        let es_row = &t.rows[1];
+        assert_eq!(es_row[1], "1.0000");
+        let abs = absolute_table(&[a, b]);
+        assert_eq!(abs.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in summaries")]
+    fn missing_reference_panics() {
+        comparison_rate_table(&[], "ES-ICP");
+    }
+}

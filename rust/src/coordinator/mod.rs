@@ -1,0 +1,11 @@
+//! Experiment coordination: workload presets, the multi-algorithm
+//! comparison harness behind every table/figure bench, and the
+//! exactness audit (DESIGN.md §6).
+
+pub mod audit;
+pub mod compare;
+pub mod presets;
+
+pub use audit::{audit_equivalence, AuditReport};
+pub use compare::{comparison_rate_table, run_and_summarize, AlgoRunSummary};
+pub use presets::{preset, Preset};

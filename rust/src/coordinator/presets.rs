@@ -1,0 +1,125 @@
+//! Workload presets: named, scaled stand-ins for the paper's two
+//! evaluation settings (8.2M PubMed at K = 80 000; 1.29M NYT at
+//! K = 10 000). The `scale` knob shrinks N (and, via Heaps' law, D)
+//! while keeping K ≈ N/100 (PubMed) and N/128 (NYT) as in the paper, so
+//! the algorithmic regime — huge K, mean vectors ~30× denser than
+//! objects — is preserved.
+
+use crate::algo::ClusterConfig;
+use crate::corpus::{self, CorpusSpec};
+use crate::sparse::{build_dataset, Dataset};
+
+/// A named experimental workload.
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: String,
+    pub spec: CorpusSpec,
+    pub k: usize,
+}
+
+impl Preset {
+    /// Materialize the dataset (generate corpus + tf-idf features).
+    pub fn dataset(&self) -> Dataset {
+        let corpus = corpus::generate(&self.spec);
+        build_dataset(&self.spec.name, corpus.n_terms, &corpus.docs)
+    }
+
+    /// Default cluster configuration for this workload.
+    pub fn config(&self, seed: u64) -> ClusterConfig {
+        ClusterConfig {
+            k: self.k,
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// Resolve a preset by name:
+///
+/// * `pubmed-like` — default bench scale (N ≈ 25 000, K = N/100)
+/// * `pubmed-like-large` — N ≈ 80 000
+/// * `nyt-like` — N ≈ 10 000 with long documents (K = N/128)
+/// * `nyt-like-large` — N ≈ 40 000
+/// * `tiny` — unit-test scale
+///
+/// `scale_override` multiplies the preset's document count.
+pub fn preset(name: &str, seed: u64, scale_override: Option<f64>) -> Option<Preset> {
+    let s = |base: f64| scale_override.map(|o| base * o).unwrap_or(base);
+    match name {
+        "pubmed-like" => {
+            let spec = corpus::pubmed_like(s(3.0e-3), seed); // ~24.6k docs
+            let k = (spec.n_docs / 100).max(2);
+            Some(Preset {
+                name: name.into(),
+                spec,
+                k,
+            })
+        }
+        "pubmed-like-large" => {
+            let spec = corpus::pubmed_like(s(1.0e-2), seed); // ~82k docs
+            let k = (spec.n_docs / 100).max(2);
+            Some(Preset {
+                name: name.into(),
+                spec,
+                k,
+            })
+        }
+        "nyt-like" => {
+            let spec = corpus::nyt_like(s(8.0e-3), seed); // ~10.3k docs
+            let k = (spec.n_docs / 128).max(2);
+            Some(Preset {
+                name: name.into(),
+                spec,
+                k,
+            })
+        }
+        "nyt-like-large" => {
+            let spec = corpus::nyt_like(s(3.0e-2), seed); // ~38.6k docs
+            let k = (spec.n_docs / 128).max(2);
+            Some(Preset {
+                name: name.into(),
+                spec,
+                k,
+            })
+        }
+        "tiny" => {
+            let spec = corpus::tiny(seed);
+            Some(Preset {
+                name: name.into(),
+                spec,
+                k: 12,
+            })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["pubmed-like", "pubmed-like-large", "nyt-like", "nyt-like-large", "tiny"] {
+            let p = preset(name, 1, None).unwrap();
+            assert!(p.k >= 2, "{name}");
+            assert!(p.spec.n_docs >= 100, "{name}");
+        }
+        assert!(preset("nope", 1, None).is_none());
+    }
+
+    #[test]
+    fn scale_override_shrinks() {
+        let a = preset("pubmed-like", 1, None).unwrap();
+        let b = preset("pubmed-like", 1, Some(0.1)).unwrap();
+        assert!(b.spec.n_docs < a.spec.n_docs);
+    }
+
+    #[test]
+    fn tiny_preset_materializes() {
+        let p = preset("tiny", 7, None).unwrap();
+        let ds = p.dataset();
+        assert_eq!(ds.n(), p.spec.n_docs);
+        assert!(ds.sparsity_indicator() < 0.2);
+    }
+}

@@ -1,0 +1,115 @@
+//! Loader for the UCI "bag of words" format used by the paper's PubMed
+//! data set (docword.* files), so the real corpora drop in when available.
+//!
+//! Format:
+//! ```text
+//! N        <- number of documents
+//! D        <- vocabulary size
+//! NNZ      <- number of (doc, term, count) triples
+//! docID termID count
+//! ...
+//! ```
+//! IDs in the file are 1-based; we convert to 0-based.
+
+use crate::corpus::synth::BowCorpus;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+
+/// Parse a UCI bag-of-words stream. `max_docs` optionally truncates the
+/// corpus (useful for scaled-down runs of the real data).
+pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> Result<BowCorpus> {
+    let mut lines = std::io::BufReader::new(reader).lines();
+    let mut header = |what: &str| -> Result<usize> {
+        let line = lines
+            .next()
+            .with_context(|| format!("missing {what} header"))??;
+        line.trim()
+            .parse::<usize>()
+            .with_context(|| format!("bad {what} header: {line:?}"))
+    };
+    let n = header("N")?;
+    let d = header("D")?;
+    let nnz = header("NNZ")?;
+    let keep = max_docs.unwrap_or(n).min(n);
+
+    let mut docs: Vec<Vec<(u32, u32)>> = vec![Vec::new(); keep];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (a, b, c) = (
+            it.next().context("triple: doc")?,
+            it.next().context("triple: term")?,
+            it.next().context("triple: count")?,
+        );
+        let doc: usize = a.parse().context("doc id")?;
+        let term: usize = b.parse().context("term id")?;
+        let count: u32 = c.parse().context("count")?;
+        if doc == 0 || doc > n || term == 0 || term > d {
+            bail!("triple out of range: {t:?} (N={n}, D={d})");
+        }
+        seen += 1;
+        if doc <= keep {
+            docs[doc - 1].push((term as u32 - 1, count));
+        }
+    }
+    if max_docs.is_none() && seen != nnz {
+        bail!("NNZ header says {nnz}, file has {seen} triples");
+    }
+    for doc in &mut docs {
+        doc.sort_unstable_by_key(|&(t, _)| t);
+    }
+    Ok(BowCorpus {
+        n_terms: d,
+        docs,
+        labels: vec![0; keep],
+        name: "uci-bow".into(),
+    })
+}
+
+/// Read from a file path (plain text; the UCI archives are gzipped — gunzip
+/// first, we have no flate2 on the runtime path by policy).
+pub fn read_uci_bow_file(path: &str, max_docs: Option<usize>) -> Result<BowCorpus> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    read_uci_bow(f, max_docs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "3\n5\n6\n1 1 2\n1 3 1\n2 2 4\n2 5 1\n3 1 1\n3 4 2\n";
+
+    #[test]
+    fn parses_sample() {
+        let c = read_uci_bow(SAMPLE.as_bytes(), None).unwrap();
+        assert_eq!(c.n_docs(), 3);
+        assert_eq!(c.n_terms, 5);
+        assert_eq!(c.docs[0], vec![(0, 2), (2, 1)]);
+        assert_eq!(c.docs[1], vec![(1, 4), (4, 1)]);
+        assert_eq!(c.docs[2], vec![(0, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn truncates_with_max_docs() {
+        let c = read_uci_bow(SAMPLE.as_bytes(), Some(2)).unwrap();
+        assert_eq!(c.n_docs(), 2);
+        assert_eq!(c.docs[1], vec![(1, 4), (4, 1)]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let bad = "1\n2\n1\n1 3 1\n";
+        assert!(read_uci_bow(bad.as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_nnz_mismatch() {
+        let bad = "1\n2\n5\n1 1 1\n";
+        assert!(read_uci_bow(bad.as_bytes(), None).is_err());
+    }
+}

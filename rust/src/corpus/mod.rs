@@ -1,0 +1,9 @@
+//! Corpus acquisition: synthetic Zipf-topic generation (the DESIGN.md §3
+//! substitution for PubMed/NYT) and the UCI bag-of-words loader for the
+//! real data sets when present.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::{read_uci_bow, read_uci_bow_file};
+pub use synth::{generate, nyt_like, pubmed_like, tiny, BowCorpus, CorpusSpec};

@@ -1,0 +1,283 @@
+//! Synthetic sparse document corpora with the paper's universal
+//! characteristics (UCs).
+//!
+//! The paper evaluates on PubMed (8.2M docs) and NYT (1.29M docs), which
+//! are not available here; per DESIGN.md §3 we substitute a generative
+//! Zipf-topic corpus that reproduces the four UCs the algorithm exploits
+//! (Section III):
+//!
+//! 1. **Zipf's law** on tf and df — tokens are drawn from a
+//!    Zipf–Mandelbrot background distribution.
+//! 2. **Bounded Zipf's law** on mean frequency — follows from (1) plus
+//!    clustering, verified empirically by `ucs::` and the tests below.
+//! 3. **Feature-value concentration** — each topic has a few *anchor*
+//!    terms with a strongly skewed weight profile; cluster means inherit
+//!    one or a few dominant tf-idf features.
+//! 4. **Pareto-like CPS** — follows from (3); checked in `ucs::cps`.
+//!
+//! Documents are generated from a hard topic mixture: a document picks one
+//! topic, then each token is an anchor of that topic with probability
+//! `anchor_prob`, otherwise a background Zipf draw. Ground-truth topics are
+//! kept (useful for sanity checks; never used by the algorithms).
+
+use crate::util::rng::{Categorical, Pcg32, ZipfSampler};
+
+/// Parameters of the generative corpus model.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub name: String,
+    /// Number of documents (paper: N).
+    pub n_docs: usize,
+    /// Vocabulary size (paper: D; terms that end up unused are dropped
+    /// later by `build_dataset`).
+    pub n_terms: usize,
+    /// Number of latent topics (ground truth granularity).
+    pub n_topics: usize,
+    /// Mean of the per-document *token* count (before dedup); the
+    /// resulting distinct-term average `D̂` is somewhat smaller.
+    pub mean_doc_len: f64,
+    /// Log-normal sigma for document length.
+    pub doc_len_sigma: f64,
+    /// Zipf exponent for the background term distribution.
+    pub zipf_alpha: f64,
+    /// Zipf–Mandelbrot rank shift (flattens the head, cf. Fig 2(a)).
+    pub zipf_shift: f64,
+    /// Probability that a token comes from the topic's anchor set.
+    pub anchor_prob: f64,
+    /// Anchors per topic.
+    pub anchors_per_topic: usize,
+    /// Skew of anchor weights inside a topic: weight(rank a) ∝ a^-skew.
+    /// Large skew → one dominant anchor → strong feature-value
+    /// concentration.
+    pub anchor_skew: f64,
+    pub seed: u64,
+}
+
+/// A generated bag-of-words corpus.
+#[derive(Debug, Clone)]
+pub struct BowCorpus {
+    pub n_terms: usize,
+    /// Per-document `(term id, count)` lists.
+    pub docs: Vec<Vec<(u32, u32)>>,
+    /// Ground-truth topic of each document (diagnostics only).
+    pub labels: Vec<u32>,
+    pub name: String,
+}
+
+impl BowCorpus {
+    pub fn n_docs(&self) -> usize {
+        self.docs.len()
+    }
+}
+
+/// PubMed-like preset (Section VI-A: N = 8.2e6, D = 141k, D̂ ≈ 59,
+/// K ≈ N/100), scaled by `scale` ∈ (0, 1]. `scale = 1.0` would be the
+/// paper size; experiments use laptop scales like 3e-3 (N ≈ 25k).
+pub fn pubmed_like(scale: f64, seed: u64) -> CorpusSpec {
+    let n_docs = ((8_200_000.0 * scale) as usize).max(200);
+    // Vocabulary grows sublinearly with corpus size (Heaps' law, exponent
+    // ~0.55 for PubMed-like text).
+    let n_terms = ((141_043.0 * scale.powf(0.55)) as usize).max(800);
+    CorpusSpec {
+        name: format!("pubmed-like-{:.0e}", scale),
+        n_docs,
+        n_terms,
+        n_topics: (n_docs / 100).max(8),
+        mean_doc_len: 90.0, // distinct ≈ 59 after dedup of Zipf draws
+        doc_len_sigma: 0.45,
+        zipf_alpha: 1.05,
+        zipf_shift: 2.7,
+        anchor_prob: 0.32,
+        anchors_per_topic: 12,
+        anchor_skew: 1.6,
+        seed,
+    }
+}
+
+/// NYT-like preset (Section VI-A: N = 1.29e6, D = 495k, D̂ ≈ 226,
+/// K ≈ N/128).
+pub fn nyt_like(scale: f64, seed: u64) -> CorpusSpec {
+    let n_docs = ((1_285_944.0 * scale) as usize).max(200);
+    let n_terms = ((495_126.0 * scale.powf(0.55)) as usize).max(1_500);
+    CorpusSpec {
+        name: format!("nyt-like-{:.0e}", scale),
+        n_docs,
+        n_terms,
+        n_topics: (n_docs / 128).max(8),
+        mean_doc_len: 380.0, // distinct ≈ 226
+        doc_len_sigma: 0.5,
+        zipf_alpha: 1.1,
+        zipf_shift: 3.5,
+        anchor_prob: 0.28,
+        anchors_per_topic: 16,
+        anchor_skew: 1.45,
+        seed,
+    }
+}
+
+/// Tiny preset for unit tests.
+pub fn tiny(seed: u64) -> CorpusSpec {
+    CorpusSpec {
+        name: "tiny".into(),
+        n_docs: 400,
+        n_terms: 600,
+        n_topics: 12,
+        mean_doc_len: 30.0,
+        doc_len_sigma: 0.4,
+        zipf_alpha: 1.0,
+        zipf_shift: 2.0,
+        anchor_prob: 0.35,
+        anchors_per_topic: 6,
+        anchor_skew: 1.6,
+        seed,
+    }
+}
+
+/// Generate a corpus from a spec. Deterministic given `spec.seed`.
+pub fn generate(spec: &CorpusSpec) -> BowCorpus {
+    let mut rng = Pcg32::new(spec.seed);
+    let background = ZipfSampler::with_shift(spec.n_terms, spec.zipf_alpha, spec.zipf_shift);
+
+    // Anchor terms are drawn from the mid-frequency band: ranks in
+    // [n/50, n/2). Head terms are stop-word-like (shared across topics);
+    // deep-tail terms would make topics trivially separable and would not
+    // produce the high-df/high-mf Region-2 structure of Fig. 3(a).
+    let lo = (spec.n_terms / 50).max(1);
+    let hi = (spec.n_terms / 2).max(lo + spec.anchors_per_topic);
+    let band = hi - lo;
+
+    let anchor_weights: Vec<f64> = (1..=spec.anchors_per_topic)
+        .map(|a| (a as f64).powf(-spec.anchor_skew))
+        .collect();
+    let anchor_cat = Categorical::new(&anchor_weights);
+
+    // Each topic's anchors: distinct ranks within the band. Topics may
+    // share anchors (realistic: clusters sharing vocabulary).
+    let topics: Vec<Vec<u32>> = (0..spec.n_topics)
+        .map(|_| {
+            rng.sample_distinct(band, spec.anchors_per_topic)
+                .into_iter()
+                .map(|r| (lo + r) as u32)
+                .collect()
+        })
+        .collect();
+
+    // Documents.
+    let mut docs = Vec::with_capacity(spec.n_docs);
+    let mut labels = Vec::with_capacity(spec.n_docs);
+    let mut counts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let log_mean = spec.mean_doc_len.ln() - 0.5 * spec.doc_len_sigma * spec.doc_len_sigma;
+    for _ in 0..spec.n_docs {
+        let z = rng.gen_range(spec.n_topics as u32) as usize;
+        labels.push(z as u32);
+        let len = (log_mean + spec.doc_len_sigma * rng.next_gaussian()).exp();
+        let len = (len.round() as usize).clamp(4, spec.n_terms);
+        counts.clear();
+        for _ in 0..len {
+            let term = if rng.next_f64() < spec.anchor_prob {
+                topics[z][anchor_cat.sample(&mut rng)]
+            } else {
+                // ZipfSampler returns 1-based rank; rank r → term id r-1
+                // so low term ids are the *most* frequent in the original
+                // labeling (build_dataset relabels by df anyway).
+                (background.sample(&mut rng) - 1) as u32
+            };
+            *counts.entry(term).or_insert(0) += 1;
+        }
+        let mut doc: Vec<(u32, u32)> = counts.iter().map(|(&t, &c)| (t, c)).collect();
+        doc.sort_unstable_by_key(|&(t, _)| t);
+        docs.push(doc);
+    }
+
+    BowCorpus {
+        n_terms: spec.n_terms,
+        docs,
+        labels,
+        name: spec.name.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::build_dataset;
+    use crate::util::stats::power_law_fit;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = tiny(7);
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.docs, b.docs);
+        let spec2 = tiny(8);
+        let c = generate(&spec2);
+        assert_ne!(a.docs, c.docs);
+    }
+
+    #[test]
+    fn doc_shape_sane() {
+        let c = generate(&tiny(1));
+        assert_eq!(c.n_docs(), 400);
+        for doc in &c.docs {
+            assert!(!doc.is_empty());
+            assert!(doc.windows(2).all(|w| w[0].0 < w[1].0));
+            assert!(doc.iter().all(|&(t, cnt)| (t as usize) < c.n_terms && cnt > 0));
+        }
+    }
+
+    #[test]
+    fn df_follows_power_law() {
+        // Zipf UC (paper Fig. 2a): rank-frequency of df is a power law
+        // over the head/mid ranks.
+        let spec = CorpusSpec {
+            n_docs: 3000,
+            ..tiny(3)
+        };
+        let c = generate(&spec);
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let mut df: Vec<f64> = ds.df.iter().map(|&d| d as f64).collect();
+        df.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        let top = 60.min(df.len());
+        let ranks: Vec<f64> = (1..=top).map(|r| r as f64).collect();
+        let (slope, _, r2) = power_law_fit(&ranks, &df[..top]);
+        assert!(slope < -0.4, "slope={slope} not a decaying power law");
+        assert!(r2 > 0.8, "r2={r2}");
+    }
+
+    #[test]
+    fn avg_terms_in_expected_range() {
+        let spec = pubmed_like(3e-4, 5); // ~2460 docs
+        let c = generate(&spec);
+        let ds = build_dataset("p", c.n_terms, &c.docs);
+        let avg = ds.avg_terms();
+        // target D̂ ≈ 59; generous band since dedup depends on vocab size
+        assert!((30.0..110.0).contains(&avg), "avg distinct terms = {avg}");
+        assert!(ds.sparsity_indicator() < 0.05);
+    }
+
+    #[test]
+    fn topics_have_signal() {
+        // Two docs of the same topic should on average be more similar
+        // than docs of different topics (clusterability sanity check).
+        let c = generate(&tiny(11));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let mut same = (0.0, 0);
+        let mut diff = (0.0, 0);
+        for i in 0..120 {
+            for j in (i + 1)..120 {
+                let s = ds.x.row_dot(i, j);
+                if c.labels[i] == c.labels[j] {
+                    same = (same.0 + s, same.1 + 1);
+                } else {
+                    diff = (diff.0 + s, diff.1 + 1);
+                }
+            }
+        }
+        let same_avg = same.0 / same.1.max(1) as f64;
+        let diff_avg = diff.0 / diff.1.max(1) as f64;
+        assert!(
+            same_avg > diff_avg * 1.5,
+            "same={same_avg} diff={diff_avg}: no topic signal"
+        );
+    }
+}

@@ -1,0 +1,605 @@
+//! EstParams — estimation of the structural parameters `(t_th, v_th)`
+//! (Section V, Appendices B–C, Algorithm 7).
+//!
+//! The estimator minimizes the *approximate number of multiplications*
+//!
+//! ```text
+//! J(s', v_h) = φ1(s')            exact mults in Region 1
+//!            + φ2(s', v_h)       exact mults in Region 2
+//!            + φ̃3(s', v_h)       expected verification mults in Region 3
+//! ```
+//!
+//! with (Eqs. 8, 9, 13):
+//!
+//! ```text
+//! φ1(s')      = Σ_{s < s'}  df_s · mf_s
+//! φ2(s', v_h) = Σ_{s ≥ s'}  df_s · mfH_(s, v_h)
+//! φ̃3(s', v_h) = Σ_i ntH_(i,s') · (K/e)^{Δρ̄(i; s', h) / (ρ_a(i) − ρ̄_i)}
+//! ```
+//!
+//! where `Δρ̄ = ρ̄^[ub] − ρ̄` is the mean upper-bound slack
+//!
+//! ```text
+//! Δρ̄(i; s', h) = Σ_{p: t_(i,p) ≥ s'} u_(i,p) · Δv̄_h(t_(i,p))
+//! Δv̄_h(s)     = (1/K)·[ Σ_{q: v < v_h} (v_h − v_c(s,q)) + (K − mf_s)·v_h ]
+//! ```
+//!
+//! We sweep `s'` from D−1 down to `s_min` using the partial object
+//! inverted index `X^p` exactly as Algorithm 7: only objects containing
+//! term `s'` update their state, and a running total of `φ̃3` is
+//! maintained incrementally. `(K/e)^x` is evaluated with
+//! `util::stats::fast_exp` (the probability model is itself approximate;
+//! see its docs).
+
+use crate::index::{MeanSet, ObjInvIndex};
+use crate::sparse::Dataset;
+use crate::util::stats::fast_exp;
+
+/// Configuration of one estimation call.
+#[derive(Debug, Clone)]
+pub struct EstConfig {
+    /// Smallest `s'` candidate (Algorithm 7's `s_min`).
+    pub s_min: usize,
+    /// Number of `v_th` candidates (ignored when `fixed_v` is set).
+    pub n_candidates: usize,
+    /// Pin `t_th` (ThV ablation: `Some(0)`).
+    pub fixed_t: Option<usize>,
+    /// Pin `v_th` (ThT ablation: `Some(1.0)`).
+    pub fixed_v: Option<f64>,
+    /// Cap on the number of objects used for the φ̃3 expectation
+    /// (Eq. 13 is a sum of i.i.d.-ish per-object terms, so a strided
+    /// subsample scaled by the stride is an unbiased estimate; the
+    /// paper parallelizes over 50 threads instead — DESIGN.md §3).
+    /// `0` disables subsampling.
+    pub max_sample_objects: usize,
+}
+
+impl Default for EstConfig {
+    fn default() -> Self {
+        Self {
+            s_min: 0,
+            n_candidates: 25,
+            fixed_t: None,
+            fixed_v: None,
+            max_sample_objects: 10_000,
+        }
+    }
+}
+
+/// One evaluated candidate: the best `t_th` for a given `v_h` and the
+/// objective there (the per-`v_h` minimum of Algorithm 7 line 16 — the
+/// series plotted in Fig. 13).
+#[derive(Debug, Clone, Copy)]
+pub struct CandidatePoint {
+    pub v_th: f64,
+    pub t_th: usize,
+    pub j_value: f64,
+}
+
+/// Estimation result.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub t_th: usize,
+    pub v_th: f64,
+    pub j_value: f64,
+    /// Per-candidate curve (for Fig. 13 / `benches/exp_estparams`).
+    pub curve: Vec<CandidatePoint>,
+}
+
+/// Per-term value statistics over `s ∈ [s_lo, D)`: sorted values plus
+/// prefix sums, so `mfH`, `cntLow`, and `sumLow` for any `v_h` are two
+/// binary searches away.
+struct TermStats {
+    s_lo: usize,
+    /// Sorted ascending values per term (flat).
+    offsets: Vec<usize>,
+    vals: Vec<f64>,
+    /// Prefix sums of `vals` (prefix[i] = Σ vals[..i]) per term, flat and
+    /// aligned with `vals` (+1 slot per term).
+    prefix: Vec<f64>,
+    mf: Vec<u32>,
+}
+
+impl TermStats {
+    fn build(means: &MeanSet, s_lo: usize) -> Self {
+        let d = means.m.n_cols();
+        let width = d - s_lo;
+        let mut per_term: Vec<Vec<f64>> = vec![Vec::new(); width];
+        for j in 0..means.k() {
+            let (ts, vs) = means.m.row(j);
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t >= s_lo {
+                    per_term[t - s_lo].push(v);
+                }
+            }
+        }
+        let mut offsets = vec![0usize; width + 1];
+        for (i, l) in per_term.iter().enumerate() {
+            offsets[i + 1] = offsets[i] + l.len();
+        }
+        let mut vals = Vec::with_capacity(offsets[width]);
+        let mut prefix = Vec::with_capacity(offsets[width] + width);
+        let mut mf = vec![0u32; width];
+        for (i, mut l) in per_term.into_iter().enumerate() {
+            l.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            mf[i] = l.len() as u32;
+            let mut acc = 0.0;
+            for &v in &l {
+                vals.push(v);
+                acc += v;
+            }
+            let _ = acc;
+            // per-term prefix sums: rebuild with explicit base
+            let base = vals.len() - l.len();
+            let mut run = 0.0;
+            prefix.push(0.0);
+            for q in 0..l.len() {
+                run += vals[base + q];
+                prefix.push(run);
+            }
+        }
+        Self {
+            s_lo,
+            offsets,
+            vals,
+            prefix,
+            mf,
+        }
+    }
+
+    /// For term `s` and threshold `v`: `(mfH, cnt_low, sum_low)` —
+    /// entries ≥ v, entries < v, and the value-sum of the latter.
+    fn split(&self, s: usize, v: f64) -> (u32, u32, f64) {
+        let i = s - self.s_lo;
+        let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+        let seg = &self.vals[a..b];
+        let cnt_low = seg.partition_point(|&x| x < v);
+        // prefix array has (len + 1) entries per term, offset by a + i.
+        let pa = a + i;
+        let sum_low = self.prefix[pa + cnt_low];
+        let mfh = (seg.len() - cnt_low) as u32;
+        (mfh, cnt_low as u32, sum_low)
+    }
+}
+
+/// Estimate the structural parameters. `rho_assign` is the per-object
+/// similarity to its assigned centroid (from the last update step).
+pub fn estimate(
+    ds: &Dataset,
+    means: &MeanSet,
+    rho_assign: &[f64],
+    xp: &ObjInvIndex,
+    cfg: &EstConfig,
+) -> Estimate {
+    let d = ds.d();
+    let n = ds.n();
+    let k = means.k();
+    assert!(k >= 2, "EstParams needs K >= 2");
+    let s_lo = cfg.fixed_t.unwrap_or(cfg.s_min).min(d);
+    assert!(
+        xp.s_lo <= s_lo,
+        "partial object index starts at {} but estimation needs terms from {}",
+        xp.s_lo,
+        s_lo
+    );
+    let stats = TermStats::build(means, s_lo);
+
+    // Column averages over the mean set: (1/K) Σ_q v_c(s,q), needed for
+    // ρ̄_i (Eq. 32).
+    let colavg = {
+        let mut c = means.m.column_sum();
+        for v in &mut c {
+            *v /= k as f64;
+        }
+        c
+    };
+
+    // Strided object subsample for the φ̃3 expectation (see EstConfig).
+    // The sweep's cost is driven by *postings* in the indexed range, not
+    // objects (long NYT-like documents carry ~4x the postings per
+    // object), so the stride also caps sampled postings at ~50 per
+    // object of the object budget.
+    let stride = if cfg.max_sample_objects == 0 {
+        1
+    } else {
+        let by_objects = (n / cfg.max_sample_objects.max(1)).max(1);
+        let posting_budget = cfg.max_sample_objects.saturating_mul(50).max(1);
+        let by_postings = (xp.nnz() / posting_budget).max(1);
+        by_objects.max(by_postings)
+    };
+    let scale3 = stride as f64;
+    let in_sample = |i: usize| i % stride == 0;
+
+    // ρ̄_i and the per-object exponent scale γ_i = ln(K/e)/(ρ_a − ρ̄).
+    let ln_ke = (k as f64).ln() - 1.0;
+    let mut gamma = vec![0.0f64; n];
+    for i in (0..n).step_by(stride) {
+        let (ts, vs) = ds.x.row(i);
+        let mut rbar = 0.0;
+        for (&t, &u) in ts.iter().zip(vs) {
+            rbar += u * colavg[t as usize];
+        }
+        let denom = (rho_assign[i] - rbar).max(1e-9);
+        gamma[i] = ln_ke / denom;
+    }
+
+    // v_th candidates: quantiles of the mean-feature values in the
+    // high-df region (the skewed tail is where the threshold lives,
+    // Section VII-B).
+    let v_candidates: Vec<f64> = if let Some(v) = cfg.fixed_v {
+        vec![v]
+    } else {
+        let mut vals: Vec<f64> = stats.vals.clone();
+        if vals.is_empty() {
+            vec![1.0]
+        } else {
+            vals.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let m = cfg.n_candidates.max(2);
+            (0..m)
+                .map(|h| {
+                    let q = 0.5 + 0.4999 * h as f64 / (m - 1) as f64;
+                    crate::util::stats::quantile_sorted(&vals, q)
+                })
+                .filter(|&v| v > 0.0)
+                .collect::<Vec<_>>()
+                .into_iter()
+                .fold(Vec::new(), |mut acc, v| {
+                    // dedup near-identical candidates
+                    if acc.last().map(|&l: &f64| (v - l).abs() > 1e-12).unwrap_or(true) {
+                        acc.push(v);
+                    }
+                    acc
+                })
+        }
+    };
+
+    // φ1 over the full range (prefix of df·mf). mf for s < s_lo comes
+    // from the mean set's column df.
+    let mf_full: Vec<u32> = means.m.column_df();
+    let mut phi1 = vec![0.0f64; d + 1]; // phi1[s'] = Σ_{s<s'} df·mf
+    for s in 0..d {
+        phi1[s + 1] = phi1[s] + ds.df[s] as f64 * mf_full[s] as f64;
+    }
+
+    let mut curve: Vec<CandidatePoint> = Vec::new();
+    let mut best = Estimate {
+        t_th: d,
+        v_th: v_candidates.last().cloned().unwrap_or(1.0),
+        j_value: f64::INFINITY,
+        curve: Vec::new(),
+    };
+
+    // Buffers reused across candidates.
+    let mut e_slack = vec![0.0f64; n]; // Δρ̄ numerator per object
+    let mut nth = vec![0u32; n]; // ntH per object
+    let mut contrib = vec![0.0f64; n]; // current φ̃3 contribution
+
+    for &v_h in &v_candidates {
+        // Per-term derived quantities over [s_lo, d).
+        let width = d - s_lo;
+        let mut dv = vec![0.0f64; width]; // Δv̄_h(s)
+        let mut phi2_suffix = vec![0.0f64; width + 1];
+        for s in (s_lo..d).rev() {
+            let (mfh, cnt_low, sum_low) = stats.split(s, v_h);
+            let mf_s = stats.mf[s - s_lo] as f64;
+            dv[s - s_lo] =
+                (cnt_low as f64 * v_h - sum_low + (k as f64 - mf_s) * v_h) / k as f64;
+            phi2_suffix[s - s_lo] =
+                phi2_suffix[s - s_lo + 1] + ds.df[s] as f64 * mfh as f64;
+        }
+
+        if let Some(t_fixed) = cfg.fixed_t {
+            // Direct evaluation at the pinned t_th (ThV/ThT ablations):
+            // one pass over the indexed postings.
+            let mut phi3 = 0.0f64;
+            for i in 0..n {
+                e_slack[i] = 0.0;
+                nth[i] = 0;
+            }
+            for s in t_fixed..d {
+                let (oids, ovals) = xp.postings(s);
+                for (&i, &u) in oids.iter().zip(ovals) {
+                    let i = i as usize;
+                    if !in_sample(i) {
+                        continue;
+                    }
+                    e_slack[i] += u * dv[s - s_lo];
+                    nth[i] += 1;
+                }
+            }
+            for i in (0..n).step_by(stride) {
+                if nth[i] > 0 {
+                    let p = fast_exp(gamma[i] * e_slack[i]).min(k as f64);
+                    phi3 += nth[i] as f64 * p;
+                }
+            }
+            let j = phi1[t_fixed] + phi2_suffix[t_fixed.max(s_lo) - s_lo] + phi3 * scale3;
+            curve.push(CandidatePoint {
+                v_th: v_h,
+                t_th: t_fixed,
+                j_value: j,
+            });
+            if j < best.j_value {
+                best.t_th = t_fixed;
+                best.v_th = v_h;
+                best.j_value = j;
+            }
+            continue;
+        }
+
+        // Descending sweep s' = d-1 .. s_min with incremental φ̃3
+        // (Algorithm 7 lines 7–15).
+        for i in 0..n {
+            e_slack[i] = 0.0;
+            nth[i] = 0;
+            contrib[i] = 0.0;
+        }
+        let mut phi3_total = 0.0f64;
+        let mut best_t = d;
+        let mut best_j = phi1[d]; // s' = D: everything Region 1
+        for s in (cfg.s_min..d).rev() {
+            let (oids, ovals) = xp.postings(s);
+            let dvs = dv[s - s_lo];
+            for (&i, &u) in oids.iter().zip(ovals) {
+                let i = i as usize;
+                if !in_sample(i) {
+                    continue;
+                }
+                phi3_total -= contrib[i];
+                e_slack[i] += u * dvs;
+                nth[i] += 1;
+                let p = fast_exp(gamma[i] * e_slack[i]).min(k as f64);
+                contrib[i] = nth[i] as f64 * p;
+                phi3_total += contrib[i];
+            }
+            let j = phi1[s] + phi2_suffix[s - s_lo] + phi3_total * scale3;
+            if j < best_j {
+                best_j = j;
+                best_t = s;
+            }
+        }
+        curve.push(CandidatePoint {
+            v_th: v_h,
+            t_th: best_t,
+            j_value: best_j,
+        });
+        if best_j < best.j_value {
+            best.t_th = best_t;
+            best.v_th = v_h;
+            best.j_value = best_j;
+        }
+    }
+
+    best.curve = curve;
+    best
+}
+
+/// Exact multiplication-count predictor for given `(t_th, v_th)` using
+/// the *actual* filter (no probability model): runs the gathering phase
+/// accounting without performing the assignments. Used by
+/// `benches/exp_estparams` to produce the "actual" series of Figs. 13–14.
+pub fn actual_mult_count(
+    ds: &Dataset,
+    means: &MeanSet,
+    rho_assign: &[f64],
+    t_th: usize,
+    v_th: f64,
+) -> u64 {
+    use crate::index::EsIndex;
+    let idx = EsIndex::build(means, t_th, v_th);
+    let k = means.k();
+    let n = ds.n();
+    let mut rho = vec![0.0f64; k];
+    let mut total = 0u64;
+    for i in 0..n {
+        let (ts, vs) = ds.x.row(i);
+        let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+        let mut y_base = 0.0;
+        for &u in &vs[p0..] {
+            y_base += u * v_th; // scaled object values
+        }
+        // Folded accumulator (see EsIndex docs): after the gathering
+        // loops rho[j] is the upper bound directly.
+        rho.iter_mut().for_each(|r| *r = y_base);
+        let mut mult = 0u64;
+        for (&t, &u) in ts[..p0].iter().zip(&vs[..p0]) {
+            let (ids, vals) = idx.r1.postings(t as usize);
+            mult += ids.len() as u64;
+            let us = u * v_th;
+            for (&c, &v) in ids.iter().zip(vals) {
+                rho[c as usize] += us * v;
+            }
+        }
+        for (&t, &u) in ts[p0..].iter().zip(&vs[p0..]) {
+            let (ids, vals) = idx.r2.postings(t as usize);
+            mult += ids.len() as u64;
+            let us = u * v_th;
+            for (&c, &v) in ids.iter().zip(vals) {
+                rho[c as usize] += us * v;
+            }
+        }
+        let rho_max = rho_assign[i];
+        let mut z = 0u64;
+        for &r in rho.iter() {
+            if r > rho_max {
+                z += 1;
+            }
+        }
+        mult += z * (ts.len() - p0) as u64;
+        total += mult;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny};
+    use crate::index::update_means;
+    use crate::sparse::build_dataset;
+
+    fn setup() -> (Dataset, MeanSet, Vec<f64>) {
+        let c = generate(&tiny(13));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 1,
+            max_iters: 3,
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let upd = update_means(&ds, &out.assign, 12, None, None);
+        (ds, upd.means, upd.rho)
+    }
+
+    #[test]
+    fn term_stats_split_consistent() {
+        let (_, means, _) = setup();
+        let d = means.m.n_cols();
+        let s_lo = d / 2;
+        let stats = TermStats::build(&means, s_lo);
+        for s in s_lo..d {
+            let (mfh, cnt_low, sum_low) = stats.split(s, 0.1);
+            assert_eq!(mfh + cnt_low, stats.mf[s - s_lo]);
+            // brute force against the mean set
+            let mut bf_cnt = 0u32;
+            let mut bf_sum = 0.0;
+            let mut bf_high = 0u32;
+            for j in 0..means.k() {
+                let dense = means.m.row_dense(j);
+                let v = dense[s];
+                if v != 0.0 {
+                    if v < 0.1 {
+                        bf_cnt += 1;
+                        bf_sum += v;
+                    } else {
+                        bf_high += 1;
+                    }
+                }
+            }
+            assert_eq!(cnt_low, bf_cnt, "term {s}");
+            assert_eq!(mfh, bf_high, "term {s}");
+            assert!((sum_low - bf_sum).abs() < 1e-9, "term {s}");
+        }
+    }
+
+    #[test]
+    fn estimate_returns_sane_parameters() {
+        let (ds, means, rho) = setup();
+        let d = ds.d();
+        let s_min = d * 6 / 10;
+        let xp = ObjInvIndex::build(&ds.x, s_min);
+        let est = estimate(
+            &ds,
+            &means,
+            &rho,
+            &xp,
+            &EstConfig {
+                s_min,
+                n_candidates: 12,
+                fixed_t: None,
+                fixed_v: None,
+                max_sample_objects: 0,
+            },
+        );
+        assert!(est.t_th >= s_min && est.t_th <= d, "t_th={}", est.t_th);
+        assert!(est.v_th > 0.0 && est.v_th <= 1.0, "v_th={}", est.v_th);
+        assert!(est.j_value.is_finite());
+        assert!(!est.curve.is_empty());
+        // J at the chosen point is the minimum over the curve.
+        for p in &est.curve {
+            assert!(est.j_value <= p.j_value + 1e-9);
+        }
+    }
+
+    #[test]
+    fn estimate_beats_extreme_parameters() {
+        // The estimated J must be no worse than both degenerate choices:
+        // t_th = D (everything exact: J = Σ df·mf = MIVI cost).
+        let (ds, means, rho) = setup();
+        let d = ds.d();
+        let s_min = d / 2;
+        let xp = ObjInvIndex::build(&ds.x, s_min);
+        let est = estimate(
+            &ds,
+            &means,
+            &rho,
+            &xp,
+            &EstConfig {
+                s_min,
+                n_candidates: 16,
+                fixed_t: None,
+                fixed_v: None,
+                max_sample_objects: 0,
+            },
+        );
+        let mivi_cost: f64 = (0..d)
+            .map(|s| ds.df[s] as f64 * means.m.column_df()[s] as f64)
+            .sum();
+        assert!(
+            est.j_value <= mivi_cost + 1e-6,
+            "estimated J {} worse than MIVI cost {}",
+            est.j_value,
+            mivi_cost
+        );
+    }
+
+    #[test]
+    fn fixed_t_mode_pins_t() {
+        let (ds, means, rho) = setup();
+        let xp = ObjInvIndex::build(&ds.x, 0);
+        let est = estimate(
+            &ds,
+            &means,
+            &rho,
+            &xp,
+            &EstConfig {
+                s_min: 0,
+                n_candidates: 8,
+                fixed_t: Some(0),
+                fixed_v: None,
+                max_sample_objects: 0,
+            },
+        );
+        assert_eq!(est.t_th, 0);
+        assert!(est.curve.iter().all(|p| p.t_th == 0));
+    }
+
+    #[test]
+    fn fixed_v_mode_pins_v() {
+        let (ds, means, rho) = setup();
+        let d = ds.d();
+        let s_min = d / 2;
+        let xp = ObjInvIndex::build(&ds.x, s_min);
+        let est = estimate(
+            &ds,
+            &means,
+            &rho,
+            &xp,
+            &EstConfig {
+                s_min,
+                n_candidates: 8,
+                fixed_t: None,
+                fixed_v: Some(1.0),
+                max_sample_objects: 0,
+            },
+        );
+        assert_eq!(est.v_th, 1.0);
+    }
+
+    #[test]
+    fn actual_mult_decreases_from_mivi_at_good_params() {
+        let (ds, means, rho) = setup();
+        let d = ds.d();
+        // Full-exact configuration ≙ MIVI cost.
+        let mivi = actual_mult_count(&ds, &means, &rho, d, 1.0);
+        // A reasonable filter configuration should not exceed it.
+        let filt = actual_mult_count(&ds, &means, &rho, d * 7 / 10, 0.08);
+        assert!(
+            filt <= mivi,
+            "filtered mult {filt} > MIVI {mivi} — filter made things worse"
+        );
+    }
+}

@@ -1,0 +1,335 @@
+//! Inverted-index data structures over the *mean* set (Section II) and
+//! over the object set (used by DIVI and by EstParams' partial object
+//! index X^p, Appendix C).
+//!
+//! A mean-inverted index stores, for every term id `s`, the tuple array
+//! `ξ_s = [(mean id c, feature value v)]` of centroids whose mean vector
+//! is non-zero at `s` — `(mf)_s = |ξ_s|`. For the ICP filter the array is
+//! arranged in two blocks, **moving centroids first** (Fig. 6), so the
+//! moving-only scan is "iterate the first `(mfM)_s` entries": no
+//! per-entry conditional branch, which is the AFM trick that keeps branch
+//! mispredictions low.
+//!
+//! Storage is flat (CSC-like): one offsets array plus parallel `ids` /
+//! `vals` arrays — no per-term `Vec` allocations on the hot path.
+
+use crate::index::means::MeanSet;
+use crate::sparse::CsrMatrix;
+
+/// Mean-inverted index with the two-block (moving | invariant) layout.
+#[derive(Debug, Clone)]
+pub struct InvIndex {
+    pub d: usize,
+    pub k: usize,
+    offsets: Vec<usize>,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+    /// `mfm[s]` — number of *moving* centroids in `ξ_s` (the first block).
+    pub mfm: Vec<u32>,
+    /// Moving centroid ids, ascending (the paper's j' → j map in G_1).
+    pub moving_ids: Vec<u32>,
+}
+
+impl InvIndex {
+    /// Build from a mean set. Only terms `s < t_lim` are indexed (pass
+    /// `d` for a full index; ES/TA/CS pass `t_th` and store the
+    /// `s ≥ t_th` region in their own specialized structures).
+    pub fn build(means: &MeanSet, t_lim: usize) -> Self {
+        let d = means.m.n_cols();
+        let k = means.k();
+        let t_lim = t_lim.min(d);
+
+        // Pass 1: count entries per (term, block).
+        let mut cnt_mov = vec![0u32; t_lim];
+        let mut cnt_inv = vec![0u32; t_lim];
+        for j in 0..k {
+            let (ts, _) = means.m.row(j);
+            let moving = means.moved[j];
+            for &t in ts {
+                let t = t as usize;
+                if t < t_lim {
+                    if moving {
+                        cnt_mov[t] += 1;
+                    } else {
+                        cnt_inv[t] += 1;
+                    }
+                }
+            }
+        }
+        let mut offsets = vec![0usize; t_lim + 1];
+        for s in 0..t_lim {
+            offsets[s + 1] = offsets[s] + (cnt_mov[s] + cnt_inv[s]) as usize;
+        }
+        let nnz = offsets[t_lim];
+        let mut ids = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+
+        // Pass 2: fill. Iterating j ascending keeps ids ascending within
+        // each block (deterministic layout).
+        let mut cur_mov: Vec<usize> = (0..t_lim).map(|s| offsets[s]).collect();
+        let mut cur_inv: Vec<usize> = (0..t_lim)
+            .map(|s| offsets[s] + cnt_mov[s] as usize)
+            .collect();
+        for j in 0..k {
+            let (ts, vs) = means.m.row(j);
+            let moving = means.moved[j];
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t < t_lim {
+                    let slot = if moving {
+                        let s = cur_mov[t];
+                        cur_mov[t] += 1;
+                        s
+                    } else {
+                        let s = cur_inv[t];
+                        cur_inv[t] += 1;
+                        s
+                    };
+                    ids[slot] = j as u32;
+                    vals[slot] = v;
+                }
+            }
+        }
+
+        let moving_ids: Vec<u32> = (0..k as u32).filter(|&j| means.moved[j as usize]).collect();
+        Self {
+            d,
+            k,
+            offsets,
+            ids,
+            vals,
+            mfm: cnt_mov,
+            moving_ids,
+        }
+    }
+
+    /// Number of indexed terms (`t_lim` at build time).
+    pub fn t_lim(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// `(mf)_s` — full array length for term `s`.
+    #[inline]
+    pub fn mf(&self, s: usize) -> usize {
+        self.offsets[s + 1] - self.offsets[s]
+    }
+
+    /// Full tuple array `ξ_s` as `(ids, vals)` slices.
+    #[inline]
+    pub fn postings(&self, s: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.offsets[s], self.offsets[s + 1]);
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    /// Moving-block prefix of `ξ_s` (the first `(mfM)_s` entries).
+    #[inline]
+    pub fn postings_moving(&self, s: usize) -> (&[u32], &[f64]) {
+        let a = self.offsets[s];
+        let b = a + self.mfm[s] as usize;
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    /// Total stored tuples Σ_s (mf)_s.
+    pub fn nnz(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Σ_s over a row's terms of (mf)_s — the MIVI multiplication count
+    /// for one object (Fig. 3(b) integrand).
+    pub fn mult_cost_for(&self, terms: &[u32]) -> u64 {
+        terms
+            .iter()
+            .filter(|&&t| (t as usize) < self.t_lim())
+            .map(|&t| self.mf(t as usize) as u64)
+            .sum()
+    }
+
+    /// Scale all stored values by `factor` (the Appendix-A scaling: the
+    /// ES family stores mean values divided by `v_th`).
+    pub fn scale_values(&mut self, factor: f64) {
+        for v in &mut self.vals {
+            *v *= factor;
+        }
+    }
+
+    /// Approximate resident bytes (paper's Max MEM accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.ids.len() * 4
+            + self.vals.len() * 8
+            + self.mfm.len() * 4
+            + self.moving_ids.len() * 4
+    }
+}
+
+/// Object-inverted index: per term, the array `η_s = [(object id,
+/// value)]`. Used by DIVI (Section II) over the whole vocabulary and by
+/// EstParams as the partial index `X^p` over `s ≥ s_min` (Appendix C).
+#[derive(Debug, Clone)]
+pub struct ObjInvIndex {
+    /// First indexed term id (0 for DIVI, `s_min` for X^p).
+    pub s_lo: usize,
+    pub d: usize,
+    pub n: usize,
+    offsets: Vec<usize>,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl ObjInvIndex {
+    pub fn build(x: &CsrMatrix, s_lo: usize) -> Self {
+        let d = x.n_cols();
+        let n = x.n_rows();
+        assert!(s_lo <= d);
+        let width = d - s_lo;
+        let mut counts = vec![0u32; width];
+        for (_, t, _) in x.iter() {
+            let t = t as usize;
+            if t >= s_lo {
+                counts[t - s_lo] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; width + 1];
+        for s in 0..width {
+            offsets[s + 1] = offsets[s] + counts[s] as usize;
+        }
+        let nnz = offsets[width];
+        let mut ids = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        let mut cur = offsets.clone();
+        for (i, t, v) in x.iter() {
+            let t = t as usize;
+            if t >= s_lo {
+                let slot = cur[t - s_lo];
+                ids[slot] = i as u32;
+                vals[slot] = v;
+                cur[t - s_lo] += 1;
+            }
+        }
+        Self {
+            s_lo,
+            d,
+            n,
+            offsets,
+            ids,
+            vals,
+        }
+    }
+
+    /// Postings `(object ids, values)` for term `s` (`s ≥ s_lo`).
+    #[inline]
+    pub fn postings(&self, s: usize) -> (&[u32], &[f64]) {
+        debug_assert!(s >= self.s_lo && s < self.d);
+        let (a, b) = (self.offsets[s - self.s_lo], self.offsets[s - self.s_lo + 1]);
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    /// Document frequency of term `s` within the indexed range.
+    #[inline]
+    pub fn df(&self, s: usize) -> usize {
+        self.offsets[s - self.s_lo + 1] - self.offsets[s - self.s_lo]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::means::update_means;
+    use crate::sparse::build_dataset;
+
+    fn small_means() -> (crate::sparse::Dataset, MeanSet) {
+        let docs = vec![
+            vec![(0, 3), (1, 1)],
+            vec![(0, 2), (1, 2)],
+            vec![(2, 3), (3, 1)],
+            vec![(2, 2), (3, 2)],
+            vec![(1, 1), (3, 1)],
+            vec![(0, 1), (2, 1)],
+        ];
+        let ds = build_dataset("t", 4, &docs);
+        let assign = vec![0, 0, 1, 1, 2, 2];
+        let out = update_means(&ds, &assign, 3, None, None);
+        (ds, out.means)
+    }
+
+    #[test]
+    fn index_matches_means() {
+        let (_, mut means) = small_means();
+        means.moved = vec![true, false, true];
+        let idx = InvIndex::build(&means, means.m.n_cols());
+        // Every mean entry must appear exactly once.
+        let mut total = 0;
+        for s in 0..idx.t_lim() {
+            let (ids, vals) = idx.postings(s);
+            total += ids.len();
+            for (&j, &v) in ids.iter().zip(vals) {
+                let dense = means.m.row_dense(j as usize);
+                assert_eq!(dense[s], v, "mismatch at term {s} mean {j}");
+            }
+            // moving block first
+            let mfm = idx.mfm[s] as usize;
+            for (q, &j) in ids.iter().enumerate() {
+                let is_moving = means.moved[j as usize];
+                assert_eq!(q < mfm, is_moving, "block ordering broken at {s}");
+            }
+            // ascending ids within each block
+            assert!(ids[..mfm].windows(2).all(|w| w[0] < w[1]));
+            assert!(ids[mfm..].windows(2).all(|w| w[0] < w[1]));
+        }
+        assert_eq!(total, means.m.nnz());
+        assert_eq!(idx.moving_ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn partial_index_range() {
+        let (_, means) = small_means();
+        let idx = InvIndex::build(&means, 2); // only terms 0..2
+        assert_eq!(idx.t_lim(), 2);
+        let kept: usize = (0..2).map(|s| idx.mf(s)).sum();
+        assert_eq!(kept, idx.nnz());
+        let full = InvIndex::build(&means, 4);
+        assert_eq!(idx.mf(0), full.mf(0));
+        assert_eq!(idx.mf(1), full.mf(1));
+    }
+
+    #[test]
+    fn mult_cost_sums_mf() {
+        let (_, means) = small_means();
+        let idx = InvIndex::build(&means, 4);
+        let cost = idx.mult_cost_for(&[0, 3]);
+        assert_eq!(cost, (idx.mf(0) + idx.mf(3)) as u64);
+    }
+
+    #[test]
+    fn obj_index_roundtrip() {
+        let (ds, _) = small_means();
+        let full = ObjInvIndex::build(&ds.x, 0);
+        assert_eq!(full.nnz(), ds.x.nnz());
+        for s in 0..ds.d() {
+            let (ids, vals) = full.postings(s);
+            assert_eq!(ids.len(), full.df(s));
+            for (&i, &v) in ids.iter().zip(vals) {
+                let (ts, vs) = ds.x.row(i as usize);
+                let pos = ts.iter().position(|&t| t as usize == s).unwrap();
+                assert_eq!(vs[pos], v);
+            }
+            // df consistency with the dataset
+            assert_eq!(full.df(s) as u32, ds.df[s]);
+        }
+    }
+
+    #[test]
+    fn obj_index_partial_range() {
+        let (ds, _) = small_means();
+        let part = ObjInvIndex::build(&ds.x, 2);
+        let full = ObjInvIndex::build(&ds.x, 0);
+        for s in 2..ds.d() {
+            assert_eq!(part.postings(s), full.postings(s));
+        }
+        assert!(part.nnz() <= full.nnz());
+    }
+}

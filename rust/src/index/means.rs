@@ -1,0 +1,332 @@
+//! The update step shared by every algorithm (Algorithm 6, steps 1–2):
+//! build the cluster means (centroids) from the current assignment,
+//! L2-normalize them, compute each object's similarity to its own centroid
+//! (the `ρ_{a(i)}^{[r]}` threshold used by the next assignment step), and
+//! track which centroids *moved* (for the ICP filter).
+
+use crate::sparse::{CsrMatrix, Dataset};
+
+/// The mean (centroid) set at one iteration.
+#[derive(Debug, Clone)]
+pub struct MeanSet {
+    /// K × D sparse matrix of unit-norm mean-feature vectors.
+    pub m: CsrMatrix,
+    /// `moved[j]`: did cluster j's membership change in the assignment
+    /// step that produced this mean set? Invariant (`!moved`) centroids
+    /// are exactly equal to their previous-iteration values, which is
+    /// what the ICP filter exploits (Section IV-B).
+    pub moved: Vec<bool>,
+    /// Number of members per cluster (empty clusters keep their previous
+    /// mean and are never "moving").
+    pub sizes: Vec<u32>,
+}
+
+impl MeanSet {
+    pub fn k(&self) -> usize {
+        self.m.n_rows()
+    }
+
+    /// Number of moving centroids — the paper's `(nMv)`.
+    pub fn n_moving(&self) -> usize {
+        self.moved.iter().filter(|&&m| m).count()
+    }
+
+    /// Average non-zeros per mean (compare paper §VI-A: 2094.94 for
+    /// PubMed at K = 80 000).
+    pub fn avg_nnz(&self) -> f64 {
+        self.m.avg_row_nnz()
+    }
+}
+
+/// Output of one update step.
+#[derive(Debug, Clone)]
+pub struct UpdateOutput {
+    pub means: MeanSet,
+    /// `rho[i]` = exact similarity of object i to its assigned centroid,
+    /// used as the pruning threshold `ρ_(max)` at the next assignment.
+    pub rho: Vec<f64>,
+    /// Objective J = Σ_i ρ_{a(i)} (Eq. 47; larger is better).
+    pub objective: f64,
+}
+
+/// Compute the update step (Algorithm 6 steps (1)–(2)).
+///
+/// * `assign[i]` — cluster of object i (current assignment).
+/// * `prev` — previous mean set; clusters whose membership did not change
+///   (and empty clusters) reuse the previous mean row verbatim, which is
+///   both faster and makes the ICP invariance *exact* rather than
+///   approximate.
+/// * `changed[j]` — whether cluster j's membership changed; pass
+///   `None` on the first call (everything is built fresh and marked
+///   moving).
+pub fn update_means(
+    ds: &Dataset,
+    assign: &[u32],
+    k: usize,
+    prev: Option<&MeanSet>,
+    changed: Option<&[bool]>,
+) -> UpdateOutput {
+    update_means_with_rho(ds, assign, k, prev, changed, None)
+}
+
+/// [`update_means`] with the previous iteration's `ρ_{a(i)}` values:
+/// members of an *unchanged* cluster keep both their mean and their
+/// similarity, so ρ can be copied instead of recomputed — the dominant
+/// cost of the update step once most centroids are invariant (§Perf).
+pub fn update_means_with_rho(
+    ds: &Dataset,
+    assign: &[u32],
+    k: usize,
+    prev: Option<&MeanSet>,
+    changed: Option<&[bool]>,
+    prev_rho: Option<&[f64]>,
+) -> UpdateOutput {
+    let n = ds.n();
+    let d = ds.d();
+    assert_eq!(assign.len(), n);
+    if let Some(p) = prev {
+        assert_eq!(p.k(), k);
+    }
+
+    // Bucket members by cluster (counting sort: two passes, no per-cluster
+    // Vec allocations).
+    let mut sizes = vec![0u32; k];
+    for &a in assign {
+        sizes[a as usize] += 1;
+    }
+    let mut starts = vec![0usize; k + 1];
+    for j in 0..k {
+        starts[j + 1] = starts[j] + sizes[j] as usize;
+    }
+    let mut members = vec![0u32; n];
+    let mut cursor = starts.clone();
+    for (i, &a) in assign.iter().enumerate() {
+        members[cursor[a as usize]] = i as u32;
+        cursor[a as usize] += 1;
+    }
+
+    let mut rho = vec![0.0f64; n];
+    let mut moved = vec![false; k];
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); k];
+
+    // Dense scratch for the tentative mean λ plus a touched-term list so
+    // resetting costs O(touched), not O(D).
+    let mut lambda = vec![0.0f64; d];
+    let mut touched: Vec<u32> = Vec::new();
+
+    for j in 0..k {
+        let mem = &members[starts[j]..starts[j + 1]];
+        let membership_changed = changed.map(|c| c[j]).unwrap_or(true);
+        if mem.is_empty() || (!membership_changed && prev.is_some()) {
+            // Empty cluster: keep previous mean (invariant). Unchanged
+            // cluster: reuse previous mean verbatim — identical values,
+            // marked invariant.
+            if let Some(p) = prev {
+                let (ts, vs) = p.m.row(j);
+                rows[j] = ts.iter().cloned().zip(vs.iter().cloned()).collect();
+                // The mean is unchanged, so each member's similarity is
+                // unchanged too: copy it when available (fast path),
+                // else recompute via a sparse merge.
+                if let Some(pr) = prev_rho {
+                    for &i in mem {
+                        rho[i as usize] = pr[i as usize];
+                    }
+                } else {
+                    for &i in mem {
+                        rho[i as usize] = dot_row_sparse(&ds.x, i as usize, &rows[j]);
+                    }
+                }
+                moved[j] = false;
+                continue;
+            }
+            // No previous means (first iteration) and empty cluster:
+            // leave a zero mean; it can never win an argmax.
+            moved[j] = false;
+            continue;
+        }
+
+        // (1) Tentative mean λ = Σ members.
+        touched.clear();
+        for &i in mem {
+            let (ts, vs) = ds.x.row(i as usize);
+            for (&t, &v) in ts.iter().zip(vs) {
+                if lambda[t as usize] == 0.0 {
+                    touched.push(t);
+                }
+                lambda[t as usize] += v;
+            }
+        }
+        // L2-normalize λ.
+        let norm = touched
+            .iter()
+            .map(|&t| lambda[t as usize] * lambda[t as usize])
+            .sum::<f64>()
+            .sqrt();
+        if norm > 0.0 {
+            for &t in &touched {
+                lambda[t as usize] /= norm;
+            }
+        }
+        // (2) Similarities of members to their own centroid, while λ is
+        // dense in scratch: O(nt_i) each (Algorithm 6 lines 6–7).
+        for &i in mem {
+            let (ts, vs) = ds.x.row(i as usize);
+            let mut s = 0.0;
+            for (&t, &v) in ts.iter().zip(vs) {
+                s += v * lambda[t as usize];
+            }
+            rho[i as usize] = s;
+        }
+        // Extract the sparse row (term-sorted) and reset scratch.
+        touched.sort_unstable();
+        let row: Vec<(u32, f64)> = touched
+            .iter()
+            .map(|&t| (t, lambda[t as usize]))
+            .filter(|&(_, v)| v != 0.0)
+            .collect();
+        for &t in &touched {
+            lambda[t as usize] = 0.0;
+        }
+        rows[j] = row;
+        moved[j] = true;
+    }
+
+    let m = CsrMatrix::from_rows(d, &rows);
+    let objective = rho.iter().sum();
+    UpdateOutput {
+        means: MeanSet { m, moved, sizes },
+        rho,
+        objective,
+    }
+}
+
+/// Dot of CSR row `i` with a term-sorted sparse tuple list.
+fn dot_row_sparse(x: &CsrMatrix, i: usize, row: &[(u32, f64)]) -> f64 {
+    let (ts, vs) = x.row(i);
+    let (mut a, mut b, mut acc) = (0usize, 0usize, 0.0);
+    while a < ts.len() && b < row.len() {
+        match ts[a].cmp(&row[b].0) {
+            std::cmp::Ordering::Less => a += 1,
+            std::cmp::Ordering::Greater => b += 1,
+            std::cmp::Ordering::Equal => {
+                acc += vs[a] * row[b].1;
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+    acc
+}
+
+/// Determine which clusters' membership changed between two assignments;
+/// used to mark moving/invariant centroids for the ICP filter.
+pub fn membership_changes(prev: &[u32], next: &[u32], k: usize) -> Vec<bool> {
+    assert_eq!(prev.len(), next.len());
+    let mut changed = vec![false; k];
+    for (&p, &q) in prev.iter().zip(next) {
+        if p != q {
+            changed[p as usize] = true;
+            changed[q as usize] = true;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::build_dataset;
+
+    fn toy_ds() -> Dataset {
+        // 6 docs, clearly two groups sharing terms.
+        let docs = vec![
+            vec![(0, 3), (1, 1)],
+            vec![(0, 2), (1, 2)],
+            vec![(0, 4)],
+            vec![(2, 3), (3, 1)],
+            vec![(2, 2), (3, 2)],
+            vec![(3, 4)],
+        ];
+        build_dataset("toy", 4, &docs)
+    }
+
+    #[test]
+    fn means_are_unit_norm_and_rho_correct() {
+        let ds = toy_ds();
+        let assign = vec![0, 0, 0, 1, 1, 1];
+        let out = update_means(&ds, &assign, 2, None, None);
+        assert_eq!(out.means.k(), 2);
+        for j in 0..2 {
+            assert!((out.means.m.row_norm(j) - 1.0).abs() < 1e-12);
+        }
+        // rho[i] must equal dot(x_i, mean_{a(i)}) by definition.
+        for i in 0..6 {
+            let dense = out.means.m.row_dense(assign[i] as usize);
+            let expect = ds.x.row_dot_dense(i, &dense);
+            assert!((out.rho[i] - expect).abs() < 1e-12);
+        }
+        assert!((out.objective - out.rho.iter().sum::<f64>()).abs() < 1e-12);
+        assert_eq!(out.means.sizes, vec![3, 3]);
+        assert!(out.means.moved.iter().all(|&m| m));
+    }
+
+    #[test]
+    fn unchanged_cluster_reuses_previous_mean_exactly() {
+        let ds = toy_ds();
+        let a0 = vec![0, 0, 0, 1, 1, 1];
+        let first = update_means(&ds, &a0, 2, None, None);
+        // Same assignment again: no cluster changed.
+        let changed = membership_changes(&a0, &a0, 2);
+        assert!(changed.iter().all(|&c| !c));
+        let second = update_means(&ds, &a0, 2, Some(&first.means), Some(&changed));
+        assert_eq!(second.means.m, first.means.m); // bitwise identical
+        assert!(second.means.moved.iter().all(|&m| !m));
+        for i in 0..6 {
+            assert!((second.rho[i] - first.rho[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn membership_changes_marks_both_sides() {
+        let prev = vec![0, 0, 1, 1];
+        let next = vec![0, 1, 1, 1];
+        let ch = membership_changes(&prev, &next, 3);
+        assert_eq!(ch, vec![true, true, false]);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_previous_mean() {
+        let ds = toy_ds();
+        let a0 = vec![0, 0, 0, 1, 1, 1];
+        let first = update_means(&ds, &a0, 2, None, None);
+        // Everybody moves to cluster 0; cluster 1 becomes empty.
+        let a1 = vec![0, 0, 0, 0, 0, 0];
+        let changed = membership_changes(&a0, &a1, 2);
+        let second = update_means(&ds, &a1, 2, Some(&first.means), Some(&changed));
+        assert_eq!(second.means.sizes, vec![6, 0]);
+        // Cluster 1 kept its old mean row and is marked invariant.
+        assert_eq!(second.means.m.row(1), first.means.m.row(1));
+        assert!(!second.means.moved[1]);
+        assert!(second.means.moved[0]);
+    }
+
+    #[test]
+    fn first_call_with_empty_cluster_yields_zero_mean() {
+        let ds = toy_ds();
+        // cluster 2 gets nobody
+        let assign = vec![0, 0, 0, 1, 1, 1];
+        let mut a = assign.clone();
+        a[5] = 1;
+        let prev: Option<&MeanSet> = None;
+        let out = update_means(&ds, &a, 2, prev, None);
+        assert_eq!(out.means.k(), 2);
+        // force K=4 via a fake previous set is covered elsewhere; here we
+        // simply check no panic and valid norms.
+        for j in 0..out.means.k() {
+            let nz = out.means.m.row_nnz(j);
+            if nz > 0 {
+                assert!((out.means.m.row_norm(j) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Index structures: the update step producing the mean set, the
+//! two-block mean-inverted index, the object-inverted index, and the
+//! three-region structured indexes for the ES / TA / CS filters.
+
+pub mod inverted;
+pub mod means;
+pub mod structured;
+
+pub use inverted::{InvIndex, ObjInvIndex};
+pub use means::{
+    membership_changes, update_means, update_means_with_rho, MeanSet, UpdateOutput,
+};
+pub use structured::{CsIndex, EsIndex, PartialIndex, Region2, TaIndex};

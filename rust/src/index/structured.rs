@@ -1,0 +1,575 @@
+//! The three-region structured mean-inverted indexes (Section IV-A,
+//! Fig. 5/6) for the ES, TA, and CS main filters.
+//!
+//! All three share the Region-1 `InvIndex` over terms `s < t_th` (two
+//! blocks, moving first). They differ in how the high-df region
+//! `t_th ≤ s < D` is organized:
+//!
+//! * **ES** (`EsIndex`): Region 2 keeps only tuples with `v ≥ v_th`
+//!   (arranged moving-high | invariant-high); Region-3 values live in the
+//!   *partial mean-inverted index* `M^p` — a full-expression
+//!   `(D − t_th) × K` matrix of values `< v_th` (0 elsewhere) addressed
+//!   by centroid id. Values are **scaled** by `1 / v_th` (and object
+//!   values by `v_th`, Appendix A) so the Region-3 upper bound is a pure
+//!   addition `ρ_j + y_(i,j)`.
+//! * **TA** (`TaIndex`): the `s ≥ t_th` arrays are sorted in descending
+//!   feature value (threshold-algorithm order), with an *additional*
+//!   moving-only sorted copy for the ICP combination; the partial index
+//!   holds **all** values (the filter threshold is per object, so nothing
+//!   can be pre-split).
+//! * **CS** (`CsIndex`): the `s ≥ t_th` arrays store *squared* values
+//!   (for the on-the-fly partial L2 norms of Eq. 21), two-block like
+//!   Region 1; the partial index holds all values.
+
+use crate::index::inverted::InvIndex;
+use crate::index::means::MeanSet;
+
+/// Flat per-term arrays over the high-df region `t_th ≤ s < D`.
+#[derive(Debug, Clone, Default)]
+pub struct Region2 {
+    pub t_th: usize,
+    offsets: Vec<usize>,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+    /// Moving-block length per term (counts only stored entries).
+    pub mfm: Vec<u32>,
+}
+
+impl Region2 {
+    #[inline]
+    pub fn len(&self, s: usize) -> usize {
+        let i = s - self.t_th;
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    #[inline]
+    pub fn postings(&self, s: usize) -> (&[u32], &[f64]) {
+        let i = s - self.t_th;
+        let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    #[inline]
+    pub fn postings_moving(&self, s: usize) -> (&[u32], &[f64]) {
+        let i = s - self.t_th;
+        let a = self.offsets[i];
+        let b = a + self.mfm[i] as usize;
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>() + self.ids.len() * 4 + self.vals.len() * 8 + self.mfm.len() * 4
+    }
+}
+
+/// Full-expression partial mean-inverted index `M^p` (Table III): one
+/// dense K-length row of values per term in `t_th ≤ s < D`, directly
+/// addressable by centroid id at the verification phase.
+#[derive(Debug, Clone, Default)]
+pub struct PartialIndex {
+    pub t_th: usize,
+    pub k: usize,
+    w: Vec<f64>,
+}
+
+impl PartialIndex {
+    #[inline]
+    pub fn row(&self, s: usize) -> &[f64] {
+        let i = (s - self.t_th) * self.k;
+        &self.w[i..i + self.k]
+    }
+
+    /// Memory footprint — the paper's
+    /// `K · (D − t_th + 1) · sizeof(double)` accounting (Section IV-A).
+    pub fn mem_bytes(&self) -> usize {
+        self.w.len() * 8
+    }
+}
+
+/// Structured index for the ES filter (the proposed algorithm).
+///
+/// **Folded representation (§Perf).** Beyond the paper's Appendix-A
+/// scaling, this implementation folds the per-centroid remaining-mass
+/// accumulator `y_(i,j)` into ρ itself:
+///
+/// * the ρ accumulator is initialized to `y_base = Σ_{s ≥ t_th} u'_s`
+///   instead of 0;
+/// * Region-2 entries store `v/v_th − 1`, so one multiply-add both adds
+///   the exact partial similarity and retires the upper-bound mass;
+/// * the ES filter is then the bare comparison `ρ_j > ρ_max` — no
+///   addition, no second array (fewer instructions *and* half the
+///   accumulator cache traffic than the paper's formulation);
+/// * the partial index stores **deficits** `1 − v/(v_th)` (1 where the
+///   mean is zero, 0 for Region-2 entries), so the verification phase
+///   *subtracts* `u'·deficit` and ρ lands exactly on the similarity.
+#[derive(Debug, Clone)]
+pub struct EsIndex {
+    /// Region 1 (`s < t_th`), two-block, values scaled by `1/v_th`.
+    pub r1: InvIndex,
+    /// Region 2 (`s ≥ t_th`, `v ≥ v_th` only), two-block, storing
+    /// `v/v_th − 1` (folded form, see above).
+    pub r2: Region2,
+    /// Region-3 deficits `1 − v/v_th` (0 for Region-2 entries), full
+    /// expression.
+    pub partial: PartialIndex,
+    pub t_th: usize,
+    pub v_th: f64,
+    pub moving_ids: Vec<u32>,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl EsIndex {
+    /// Build from a mean set given the structural parameters. All stored
+    /// feature values are divided by `v_th` (Appendix-A scaling; pass
+    /// `v_th = 1.0` to disable, e.g. for the ThT ablation).
+    pub fn build(means: &MeanSet, t_th: usize, v_th: f64) -> Self {
+        let d = means.m.n_cols();
+        let k = means.k();
+        let t_th = t_th.min(d);
+        assert!(v_th > 0.0, "v_th must be positive (got {v_th})");
+        let inv_scale = 1.0 / v_th;
+
+        let r1 = InvIndex::build(means, t_th);
+        // Region-1 values must be scaled too (exact partial similarities
+        // in the scaled domain). InvIndex stores raw values; rebuild its
+        // vals scaled: cheaper to scale in place via a dedicated pass.
+        let mut r1 = r1;
+        if v_th != 1.0 {
+            r1.scale_values(inv_scale);
+        }
+
+        let width = d - t_th;
+        // Pass 1: counts.
+        let mut cnt_mov = vec![0u32; width];
+        let mut cnt_inv = vec![0u32; width];
+        for j in 0..k {
+            let (ts, vs) = means.m.row(j);
+            let moving = means.moved[j];
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t >= t_th && v >= v_th {
+                    if moving {
+                        cnt_mov[t - t_th] += 1;
+                    } else {
+                        cnt_inv[t - t_th] += 1;
+                    }
+                }
+            }
+        }
+        let mut offsets = vec![0usize; width + 1];
+        for i in 0..width {
+            offsets[i + 1] = offsets[i] + (cnt_mov[i] + cnt_inv[i]) as usize;
+        }
+        let nnz = offsets[width];
+        let mut ids = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        // Deficit default 1.0: a term where a mean has no value carries
+        // its full upper-bound mass to be retired at verification.
+        let mut w = vec![1.0f64; width * k];
+        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i]).collect();
+        let mut cur_inv: Vec<usize> = (0..width)
+            .map(|i| offsets[i] + cnt_mov[i] as usize)
+            .collect();
+        for j in 0..k {
+            let (ts, vs) = means.m.row(j);
+            let moving = means.moved[j];
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t >= t_th {
+                    let i = t - t_th;
+                    if v >= v_th {
+                        let slot = if moving {
+                            let s = cur_mov[i];
+                            cur_mov[i] += 1;
+                            s
+                        } else {
+                            let s = cur_inv[i];
+                            cur_inv[i] += 1;
+                            s
+                        };
+                        ids[slot] = j as u32;
+                        // Folded form: the multiply-add u'·(v' − 1) both
+                        // accumulates the exact partial similarity and
+                        // retires the bound mass.
+                        vals[slot] = v * inv_scale - 1.0;
+                        // Region-2 entry: nothing left to retire.
+                        w[i * k + j] = 0.0;
+                    } else {
+                        // Region 3: deficit 1 − v/v_th (Table III's w,
+                        // folded).
+                        w[i * k + j] = 1.0 - v * inv_scale;
+                    }
+                }
+            }
+        }
+
+        let moving_ids = r1.moving_ids.clone();
+        Self {
+            r1,
+            r2: Region2 {
+                t_th,
+                offsets,
+                ids,
+                vals,
+                mfm: cnt_mov,
+            },
+            partial: PartialIndex { t_th, k, w },
+            t_th,
+            v_th,
+            moving_ids,
+            k,
+            d,
+        }
+    }
+
+    /// `(mfH)_s` — kept (high-value) entries at term `s ≥ t_th`.
+    #[inline]
+    pub fn mfh(&self, s: usize) -> usize {
+        self.r2.len(s)
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.r1.mem_bytes() + self.r2.mem_bytes() + self.partial.mem_bytes()
+    }
+}
+
+/// Structured index for the TA (threshold-algorithm) filter, Appendix F-A.
+#[derive(Debug, Clone)]
+pub struct TaIndex {
+    /// Region 1 two-block index (`s < t_th`), unscaled.
+    pub r1: InvIndex,
+    /// `s ≥ t_th` arrays sorted descending by value — all centroids.
+    pub r2_all: Region2,
+    /// Additional moving-only sorted arrays (for `G_(ta)1`).
+    pub r2_moving: Region2,
+    /// Full-expression partial index with **all** values (w′ in Alg 8).
+    pub partial: PartialIndex,
+    pub t_th: usize,
+    pub moving_ids: Vec<u32>,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl TaIndex {
+    pub fn build(means: &MeanSet, t_th: usize) -> Self {
+        let d = means.m.n_cols();
+        let k = means.k();
+        let t_th = t_th.min(d);
+        let r1 = InvIndex::build(means, t_th);
+        let width = d - t_th;
+
+        // Gather per-term tuple lists for the high region, then sort each
+        // descending by value (the TA posting-list order).
+        let mut per_term: Vec<Vec<(u32, f64)>> = vec![Vec::new(); width];
+        let mut w = vec![0.0f64; width * k];
+        for j in 0..k {
+            let (ts, vs) = means.m.row(j);
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t >= t_th {
+                    per_term[t - t_th].push((j as u32, v));
+                    w[(t - t_th) * k + j] = v;
+                }
+            }
+        }
+        let sort_desc = |list: &mut Vec<(u32, f64)>| {
+            list.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        };
+        let flatten = |lists: &[Vec<(u32, f64)>]| -> Region2 {
+            let mut offsets = vec![0usize; lists.len() + 1];
+            for (i, l) in lists.iter().enumerate() {
+                offsets[i + 1] = offsets[i] + l.len();
+            }
+            let mut ids = Vec::with_capacity(offsets[lists.len()]);
+            let mut vals = Vec::with_capacity(offsets[lists.len()]);
+            for l in lists {
+                for &(j, v) in l {
+                    ids.push(j);
+                    vals.push(v);
+                }
+            }
+            Region2 {
+                t_th,
+                offsets,
+                ids,
+                vals,
+                mfm: vec![0; lists.len()], // not used for TA ordering
+            }
+        };
+
+        let mut all = per_term.clone();
+        for l in &mut all {
+            sort_desc(l);
+        }
+        let mut moving: Vec<Vec<(u32, f64)>> = per_term
+            .into_iter()
+            .map(|l| {
+                l.into_iter()
+                    .filter(|&(j, _)| means.moved[j as usize])
+                    .collect()
+            })
+            .collect();
+        for l in &mut moving {
+            sort_desc(l);
+        }
+
+        let moving_ids = r1.moving_ids.clone();
+        Self {
+            r1,
+            r2_all: flatten(&all),
+            r2_moving: flatten(&moving),
+            partial: PartialIndex { t_th, k, w },
+            t_th,
+            moving_ids,
+            k,
+            d,
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.r1.mem_bytes()
+            + self.r2_all.mem_bytes()
+            + self.r2_moving.mem_bytes()
+            + self.partial.mem_bytes()
+    }
+}
+
+/// Structured index for the CS (Cauchy–Schwarz) filter, Appendix F-B.
+#[derive(Debug, Clone)]
+pub struct CsIndex {
+    /// Region 1 two-block index (`s < t_th`), unscaled.
+    pub r1: InvIndex,
+    /// `s ≥ t_th` arrays of (id, value²), two-block moving-first — the
+    /// partial squared-mean-inverted index `M^p_sq` of Alg 10.
+    pub r2_sq: Region2,
+    /// Full-expression partial index with all values (verification).
+    pub partial: PartialIndex,
+    pub t_th: usize,
+    pub moving_ids: Vec<u32>,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl CsIndex {
+    pub fn build(means: &MeanSet, t_th: usize) -> Self {
+        let d = means.m.n_cols();
+        let k = means.k();
+        let t_th = t_th.min(d);
+        let r1 = InvIndex::build(means, t_th);
+        let width = d - t_th;
+
+        let mut cnt_mov = vec![0u32; width];
+        let mut cnt_inv = vec![0u32; width];
+        for j in 0..k {
+            let (ts, _) = means.m.row(j);
+            let moving = means.moved[j];
+            for &t in ts {
+                let t = t as usize;
+                if t >= t_th {
+                    if moving {
+                        cnt_mov[t - t_th] += 1;
+                    } else {
+                        cnt_inv[t - t_th] += 1;
+                    }
+                }
+            }
+        }
+        let mut offsets = vec![0usize; width + 1];
+        for i in 0..width {
+            offsets[i + 1] = offsets[i] + (cnt_mov[i] + cnt_inv[i]) as usize;
+        }
+        let nnz = offsets[width];
+        let mut ids = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        let mut w = vec![0.0f64; width * k];
+        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i]).collect();
+        let mut cur_inv: Vec<usize> = (0..width)
+            .map(|i| offsets[i] + cnt_mov[i] as usize)
+            .collect();
+        for j in 0..k {
+            let (ts, vs) = means.m.row(j);
+            let moving = means.moved[j];
+            for (&t, &v) in ts.iter().zip(vs) {
+                let t = t as usize;
+                if t >= t_th {
+                    let i = t - t_th;
+                    let slot = if moving {
+                        let s = cur_mov[i];
+                        cur_mov[i] += 1;
+                        s
+                    } else {
+                        let s = cur_inv[i];
+                        cur_inv[i] += 1;
+                        s
+                    };
+                    ids[slot] = j as u32;
+                    vals[slot] = v * v; // squared value (Eq. 21)
+                    w[i * k + j] = v;
+                }
+            }
+        }
+
+        let moving_ids = r1.moving_ids.clone();
+        Self {
+            r1,
+            r2_sq: Region2 {
+                t_th,
+                offsets,
+                ids,
+                vals,
+                mfm: cnt_mov,
+            },
+            partial: PartialIndex { t_th, k, w },
+            t_th,
+            moving_ids,
+            k,
+            d,
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.r1.mem_bytes() + self.r2_sq.mem_bytes() + self.partial.mem_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::means::update_means;
+    use crate::sparse::build_dataset;
+
+    fn means_with_moves() -> (crate::sparse::Dataset, MeanSet) {
+        let docs = vec![
+            vec![(0, 3), (1, 1), (4, 2)],
+            vec![(0, 2), (1, 2), (5, 1)],
+            vec![(2, 3), (3, 1), (4, 1)],
+            vec![(2, 2), (3, 2), (5, 2)],
+            vec![(1, 1), (3, 1), (5, 3)],
+            vec![(0, 1), (2, 1), (4, 4)],
+        ];
+        let ds = build_dataset("t", 6, &docs);
+        let assign = vec![0, 0, 1, 1, 2, 2];
+        let mut out = update_means(&ds, &assign, 3, None, None);
+        out.means.moved = vec![true, false, true];
+        (ds, out.means)
+    }
+
+    /// Reconstruct every mean value reachable through an EsIndex and check
+    /// it matches the mean set (after unscaling).
+    #[test]
+    fn es_index_partition_is_complete_and_exclusive() {
+        let (_, means) = means_with_moves();
+        let d = means.m.n_cols();
+        let k = means.k();
+        for t_th in [0usize, d / 2, d] {
+            let v_th = 0.2;
+            let idx = EsIndex::build(&means, t_th, v_th);
+            let mut seen = vec![vec![0.0f64; d]; k];
+            let mut in_r2 = vec![vec![false; d]; k];
+            for s in 0..t_th {
+                let (ids, vals) = idx.r1.postings(s);
+                for (&j, &v) in ids.iter().zip(vals) {
+                    seen[j as usize][s] += v * v_th;
+                }
+            }
+            for s in t_th..d {
+                let (ids, vals) = idx.r2.postings(s);
+                for (&j, &v) in ids.iter().zip(vals) {
+                    // Folded storage: v = value/v_th − 1.
+                    let unscaled = (v + 1.0) * v_th;
+                    assert!(
+                        unscaled >= v_th - 1e-12,
+                        "region-2 entry below threshold"
+                    );
+                    seen[j as usize][s] += unscaled;
+                    in_r2[j as usize][s] = true;
+                }
+                let row = idx.partial.row(s);
+                for (j, &deficit) in row.iter().enumerate() {
+                    if in_r2[j][s] {
+                        assert_eq!(deficit, 0.0, "region-2 entry must have 0 deficit");
+                        continue;
+                    }
+                    // deficit = 1 − value/v_th; 1.0 ⇔ mean is zero here.
+                    let unscaled = (1.0 - deficit) * v_th;
+                    assert!(unscaled < v_th + 1e-12, "region-3 entry above threshold");
+                    seen[j][s] += unscaled;
+                }
+            }
+            for j in 0..k {
+                let dense = means.m.row_dense(j);
+                for s in 0..d {
+                    assert!(
+                        (seen[j][s] - dense[s]).abs() < 1e-9,
+                        "t_th={t_th} mean {j} term {s}: {} vs {}",
+                        seen[j][s],
+                        dense[s]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn es_region2_moving_block_first() {
+        let (_, means) = means_with_moves();
+        let d = means.m.n_cols();
+        let idx = EsIndex::build(&means, d / 2, 0.05);
+        for s in d / 2..d {
+            let (ids, _) = idx.r2.postings(s);
+            let mfm = idx.r2.mfm[s - d / 2] as usize;
+            for (q, &j) in ids.iter().enumerate() {
+                assert_eq!(q < mfm, means.moved[j as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn ta_index_sorted_descending() {
+        let (_, means) = means_with_moves();
+        let d = means.m.n_cols();
+        let idx = TaIndex::build(&means, d / 2);
+        for s in d / 2..d {
+            let (_, vals) = idx.r2_all.postings(s);
+            assert!(vals.windows(2).all(|w| w[0] >= w[1]), "not sorted at {s}");
+            let (mids, mvals) = idx.r2_moving.postings(s);
+            assert!(mvals.windows(2).all(|w| w[0] >= w[1]));
+            assert!(mids.iter().all(|&j| means.moved[j as usize]));
+        }
+        // partial index holds all values
+        let total: usize = (d / 2..d)
+            .map(|s| idx.partial.row(s).iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        let expected: usize = (d / 2..d).map(|s| idx.r2_all.len(s)).sum();
+        assert_eq!(total, expected);
+    }
+
+    #[test]
+    fn cs_index_squares_values() {
+        let (_, means) = means_with_moves();
+        let d = means.m.n_cols();
+        let idx = CsIndex::build(&means, d / 2);
+        for s in d / 2..d {
+            let (ids, sq) = idx.r2_sq.postings(s);
+            for (&j, &vsq) in ids.iter().zip(sq) {
+                let dense = means.m.row_dense(j as usize);
+                assert!((vsq - dense[s] * dense[s]).abs() < 1e-12);
+                assert!((idx.partial.row(s)[j as usize] - dense[s]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_nonzero() {
+        let (_, means) = means_with_moves();
+        let d = means.m.n_cols();
+        let es = EsIndex::build(&means, d / 2, 0.1);
+        assert!(es.mem_bytes() > 0);
+        assert_eq!(es.partial.mem_bytes(), (d - d / 2) * means.k() * 8);
+    }
+}

@@ -1,0 +1,37 @@
+//! # skm — Accelerated Spherical K-Means for Large-Scale Sparse Documents
+//!
+//! A production-grade reproduction of *"Accelerating Spherical K-Means
+//! Clustering for Large-Scale Sparse Document Data"* (Aoyama & Saito,
+//! 2024): the **ES-ICP** algorithm, every comparator it is evaluated
+//! against, the structural-parameter estimator, the universal-
+//! characteristics analyzers, and a complete bench harness regenerating
+//! every table and figure of the paper.
+//!
+//! ## Layout (three-layer architecture, see DESIGN.md)
+//!
+//! - [`sparse`], [`corpus`] — the sparse document substrate and corpus
+//!   generation/loading.
+//! - [`index`] — mean-inverted indexes, including the three-region
+//!   structured index driven by the structural parameters `(t_th, v_th)`.
+//! - [`algo`] — the clustering algorithms (MIVI, DIVI, Ding+, ICP,
+//!   ES-ICP, TA-ICP, CS-ICP, and the ablations ES/ThV/ThT/…-MIVI).
+//! - [`estparams`] — the Section-V estimator for `(t_th, v_th)`.
+//! - [`ucs`] — universal-characteristics analysis (Zipf, bounded Zipf,
+//!   feature-value concentration, CPS).
+//! - [`metrics`] — Mult counters, CPR, PMU counters, NMI/CV.
+//! - [`coordinator`] — experiment orchestration, presets, equivalence
+//!   audits.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas dense
+//!   cross-check kernels (`artifacts/*.hlo.txt`).
+//! - [`util`] — offline-friendly RNG/CLI/IO/timing utilities.
+
+pub mod algo;
+pub mod coordinator;
+pub mod corpus;
+pub mod estparams;
+pub mod index;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod ucs;
+pub mod util;

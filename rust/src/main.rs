@@ -1,0 +1,292 @@
+//! `skm` — command-line driver for the spherical-k-means reproduction.
+//!
+//! Subcommands:
+//!   cluster    run one algorithm on a preset or UCI corpus
+//!   compare    run several algorithms and print the paper-style tables
+//!   audit      verify an algorithm reproduces MIVI's solution
+//!   ucs        print the universal-characteristics report
+//!   estparams  run the structural-parameter estimator and report (t_th, v_th)
+//!   info       environment / artifacts status
+//!
+//! Examples:
+//!   skm cluster --preset pubmed-like --algo es-icp --seed 42
+//!   skm compare --preset nyt-like --algos mivi,icp,es-icp --seed 1
+//!   skm audit --preset tiny --algo all
+//!   skm cluster --input docword.pubmed.txt --max-docs 100000 --algo es-icp
+
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::coordinator::compare::absolute_table;
+use skm::coordinator::{audit_equivalence, comparison_rate_table, preset, run_and_summarize};
+use skm::corpus::read_uci_bow_file;
+use skm::estparams::{estimate, EstConfig};
+use skm::index::{update_means, ObjInvIndex};
+use skm::sparse::{build_dataset, Dataset};
+use skm::ucs;
+use skm::util::cli::Args;
+use skm::util::io::fmt_sig;
+
+fn load_dataset(args: &Args) -> Dataset {
+    if let Some(path) = args.get("input") {
+        let max_docs = args.get("max-docs").map(|s| s.parse().expect("--max-docs"));
+        let corpus = read_uci_bow_file(path, max_docs).expect("read UCI bag-of-words");
+        build_dataset("uci", corpus.n_terms, &corpus.docs)
+    } else {
+        let name = args.get_or("preset", "pubmed-like");
+        let seed = args.get_parsed::<u64>("corpus-seed", 7);
+        let scale = args.get("scale").map(|s| s.parse().expect("--scale"));
+        preset(name, seed, scale)
+            .unwrap_or_else(|| panic!("unknown preset {name:?}"))
+            .dataset()
+    }
+}
+
+fn config_for(args: &Args, ds: &Dataset) -> ClusterConfig {
+    let default_k = (ds.n() / 100).max(2);
+    ClusterConfig {
+        k: args.get_parsed("k", default_k),
+        seed: args.get_parsed("seed", 42),
+        max_iters: args.get_parsed("max-iters", 200),
+        ..Default::default()
+    }
+}
+
+fn describe(ds: &Dataset, k: usize) {
+    eprintln!(
+        "dataset {}: N={} D={} avg-terms={:.1} (sparsity {:.2e}), K={}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        ds.avg_terms(),
+        ds.sparsity_indicator(),
+        k
+    );
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("cluster") => cmd_cluster(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("audit") => cmd_audit(&args),
+        Some("ucs") => cmd_ucs(&args),
+        Some("estparams") => cmd_estparams(&args),
+        Some("info") => cmd_info(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "usage: skm <cluster|compare|audit|ucs|estparams|info> [--preset NAME] [--algo NAME] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    let kind = AlgoKind::parse(args.get_or("algo", "es-icp")).expect("--algo");
+    describe(&ds, cfg.k);
+    let out = run_clustering(kind, &ds, &cfg);
+    println!(
+        "{}: {} iterations ({}), J={:.4}, total {:.2}s (assign {:.2}s / update {:.2}s), avg mult/iter {}, max mem {:.3} GB",
+        kind.name(),
+        out.iterations(),
+        if out.converged { "converged" } else { "iteration cap" },
+        out.objective,
+        out.total_secs(),
+        out.total_assign_secs(),
+        out.total_update_secs(),
+        fmt_sig(out.avg_mult()),
+        out.max_mem_bytes as f64 / 1e9
+    );
+    if let (Some(t), Some(v)) = (out.t_th, out.v_th) {
+        println!(
+            "structural parameters: t_th={t} ({:.3}·D), v_th={v:.4}",
+            t as f64 / ds.d() as f64
+        );
+    }
+    if args.flag("log") {
+        println!("iter  mult          CPR       assign(s)  update(s)  changes  moving");
+        for l in &out.logs {
+            println!(
+                "{:>4}  {:<12}  {:<8}  {:<9.4}  {:<9.4}  {:>7}  {:>6}",
+                l.iter,
+                fmt_sig(l.counters.mult as f64),
+                fmt_sig(l.cpr),
+                l.assign_secs,
+                l.update_secs,
+                l.changes,
+                l.n_moving
+            );
+        }
+    }
+}
+
+fn parse_algos(spec: &str) -> Vec<AlgoKind> {
+    if spec == "all" {
+        return AlgoKind::all().to_vec();
+    }
+    spec.split(',')
+        .map(|s| AlgoKind::parse(s.trim()).unwrap_or_else(|| panic!("unknown algo {s:?}")))
+        .collect()
+}
+
+fn cmd_compare(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    let kinds = parse_algos(args.get_or("algos", "mivi,icp,ta-icp,cs-icp,es-icp"));
+    describe(&ds, cfg.k);
+    let mut summaries = Vec::new();
+    for kind in kinds {
+        eprintln!("running {} ...", kind.name());
+        let (_, s) = run_and_summarize(kind, &ds, &cfg);
+        eprintln!(
+            "  {} iters, avg {:.3}s/iter, avg mult {}",
+            s.iterations,
+            s.avg_secs,
+            fmt_sig(s.avg_mult)
+        );
+        summaries.push(s);
+    }
+    println!("\nAbsolute values (per iteration):");
+    println!("{}", absolute_table(&summaries).render());
+    let reference = args.get_or("reference", summaries.last().map(|s| s.name).unwrap_or("MIVI"));
+    println!("Rates relative to {reference} (cf. paper Tables IV/VI):");
+    println!("{}", comparison_rate_table(&summaries, reference).render());
+}
+
+fn cmd_audit(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    let kinds = parse_algos(args.get_or("algo", "all"));
+    describe(&ds, cfg.k);
+    let mut failures = 0;
+    for kind in kinds {
+        if kind == AlgoKind::Mivi {
+            continue;
+        }
+        let rep = audit_equivalence(kind, &ds, &cfg, 1e-9);
+        println!(
+            "{:<8} {}  exact={}  fp-ties={}  divergences={}  iters {}/{}",
+            rep.algo,
+            if rep.passed() { "PASS" } else { "FAIL" },
+            rep.exact_matches,
+            rep.tie_matches,
+            rep.divergences,
+            rep.algo_iterations,
+            rep.mivi_iterations
+        );
+        if !rep.passed() {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_ucs(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    describe(&ds, cfg.k);
+    eprintln!("clustering with ES-ICP to obtain the mean set ...");
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+
+    let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
+    let rf_df = ucs::rank_frequency(&df);
+    let (alpha_df, r2_df) = ucs::zipf_exponent(&rf_df, 100);
+    let tf = ds.x.column_sum();
+    let (alpha_tf, r2_tf) = ucs::zipf_exponent(&ucs::rank_frequency(&tf), 100);
+    let mf: Vec<f64> = upd.means.m.column_df().iter().map(|&x| x as f64).collect();
+    let rf_mf = ucs::rank_frequency(&mf);
+    let (alpha_mf, r2_mf) = ucs::zipf_exponent(&rf_mf, 100);
+    println!("UC1 Zipf:  df alpha={alpha_df:.3} (r2={r2_df:.3}), tf alpha={alpha_tf:.3} (r2={r2_tf:.3})");
+    println!(
+        "UC2 bounded Zipf on mf: alpha={alpha_mf:.3} (r2={r2_mf:.3}), max mf={} (K={})",
+        rf_mf[0].1, cfg.k
+    );
+    let (total, topfrac) = ucs::mult_volume(&ds, &upd.means);
+    println!(
+        "UC3 df–mf concentration: total df·mf volume {} — top 10% of term ids carry {:.1}%",
+        fmt_sig(total),
+        topfrac * 100.0
+    );
+    println!(
+        "UC3 feature-value concentration: {} mean components > 1/sqrt(2) across K={} centroids; mean nnz avg {:.1}",
+        ucs::concentration_count(&upd.means),
+        cfg.k,
+        upd.means.avg_nnz()
+    );
+    let curve = ucs::cps_curve(&ds, &upd.means, &out.assign, 100);
+    println!(
+        "UC4 Pareto CPS: CPS(0.1)={:.3} CPS(0.2)={:.3} CPS(0.5)={:.3} (paper PubMed: 0.92 at 0.1)",
+        curve.value_at(0.1),
+        curve.value_at(0.2),
+        curve.value_at(0.5)
+    );
+}
+
+fn cmd_estparams(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    describe(&ds, cfg.k);
+    // Two MIVI iterations to get realistic means, as ES-ICP does.
+    let warm = ClusterConfig {
+        max_iters: 2,
+        ..cfg.clone()
+    };
+    let out = run_clustering(AlgoKind::Mivi, &ds, &warm);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+    let s_min = (ds.d() as f64 * cfg.s_min_frac) as usize;
+    let xp = ObjInvIndex::build(&ds.x, s_min);
+    let est = estimate(
+        &ds,
+        &upd.means,
+        &upd.rho,
+        &xp,
+        &EstConfig {
+            s_min,
+            n_candidates: cfg.n_vth_candidates,
+            fixed_t: None,
+            fixed_v: None,
+            max_sample_objects: 10_000,
+        },
+    );
+    println!(
+        "estimated t_th={} ({:.3}·D)  v_th={:.4}  approx J={}",
+        est.t_th,
+        est.t_th as f64 / ds.d() as f64,
+        est.v_th,
+        fmt_sig(est.j_value)
+    );
+    println!("v_h        best t_h    J(t_h, v_h)");
+    for p in &est.curve {
+        println!("{:<9.4}  {:<9}  {}", p.v_th, p.t_th, fmt_sig(p.j_value));
+    }
+}
+
+fn cmd_info() {
+    println!("skm — ES-ICP spherical k-means reproduction");
+    println!("algorithms: {}", AlgoKind::all().iter().map(|k| k.name()).collect::<Vec<_>>().join(", "));
+    let dir = skm::runtime::PjrtRuntime::default_dir();
+    println!("artifacts dir: {dir:?}");
+    for name in ["assign_block", "kmeans_step"] {
+        let p = dir.join(format!("{name}.hlo.txt"));
+        println!("  {name}: {}", if p.exists() { "present" } else { "MISSING (run `make artifacts`)" });
+    }
+    match skm::runtime::PjrtRuntime::new(&dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    println!(
+        "hardware PMU counters: {}",
+        if skm::metrics::PerfGroup::try_new().is_some() {
+            "available"
+        } else {
+            "unavailable (software cost model will be used)"
+        }
+    );
+}

@@ -1,0 +1,118 @@
+//! Software cost counters — the paper's primary efficiency metric is the
+//! number of multiplications for similarity calculations (Section I,
+//! footnote 2), plus proxies for the other two performance-degradation
+//! factors when hardware counters are unavailable (see `metrics::perf`).
+//!
+//! Counters are incremented at *loop granularity* (e.g. "this object
+//! touched an inverted array of length mf_s → mf_s multiply-adds"), never
+//! per scalar operation, so instrumentation does not distort the timings
+//! it accompanies.
+
+/// Per-iteration cost counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounters {
+    /// Multiply-add operations for similarity and upper-bound
+    /// calculations (the paper's "Mult"; upper-bound multiplications are
+    /// included, Section VI-D).
+    pub mult: u64,
+    /// Data-dependent conditional branches whose outcome is irregular
+    /// (value comparisons inside inner loops) — the BM proxy.
+    pub irregular_branches: u64,
+    /// Touches of arrays that are cold / too large for cache (full-
+    /// expression mean vectors, partial indexes) — the LLCM proxy.
+    pub cold_touches: u64,
+    /// Centroids that passed the pruning filters and reached the
+    /// verification phase: Σ_i |Z_i| (numerator of the CPR, Eq. 22).
+    pub candidates: u64,
+    /// Exact similarities fully computed.
+    pub exact_sims: u64,
+    /// Square-root operations (the CS filter's per-candidate cost,
+    /// Appendix F-B).
+    pub sqrts: u64,
+}
+
+impl OpCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, other: &OpCounters) {
+        self.mult += other.mult;
+        self.irregular_branches += other.irregular_branches;
+        self.cold_touches += other.cold_touches;
+        self.candidates += other.candidates;
+        self.exact_sims += other.exact_sims;
+        self.sqrts += other.sqrts;
+    }
+
+    /// Complementary pruning rate for one iteration (Eq. 22):
+    /// CPR = (1/N) Σ |Z_i| / K. Lower is a better filter.
+    pub fn cpr(&self, n: usize, k: usize) -> f64 {
+        if n == 0 || k == 0 {
+            return 0.0;
+        }
+        self.candidates as f64 / (n as f64 * k as f64)
+    }
+}
+
+/// Accumulates per-iteration snapshots for a whole clustering run.
+#[derive(Debug, Clone, Default)]
+pub struct RunCounters {
+    pub per_iter: Vec<OpCounters>,
+}
+
+impl RunCounters {
+    pub fn push(&mut self, c: OpCounters) {
+        self.per_iter.push(c);
+    }
+
+    pub fn total(&self) -> OpCounters {
+        let mut t = OpCounters::default();
+        for c in &self.per_iter {
+            t.add(c);
+        }
+        t
+    }
+
+    pub fn avg_mult(&self) -> f64 {
+        if self.per_iter.is_empty() {
+            return 0.0;
+        }
+        self.total().mult as f64 / self.per_iter.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_total() {
+        let mut run = RunCounters::default();
+        run.push(OpCounters {
+            mult: 10,
+            candidates: 4,
+            ..Default::default()
+        });
+        run.push(OpCounters {
+            mult: 30,
+            irregular_branches: 5,
+            ..Default::default()
+        });
+        let t = run.total();
+        assert_eq!(t.mult, 40);
+        assert_eq!(t.irregular_branches, 5);
+        assert_eq!(run.avg_mult(), 20.0);
+    }
+
+    #[test]
+    fn cpr_matches_definition() {
+        let c = OpCounters {
+            candidates: 50,
+            ..Default::default()
+        };
+        // N=10 objects, K=10 centroids, 50 candidates → CPR = 0.5
+        assert!((c.cpr(10, 10) - 0.5).abs() < 1e-12);
+        assert_eq!(c.cpr(0, 10), 0.0);
+    }
+}

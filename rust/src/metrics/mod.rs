@@ -1,0 +1,12 @@
+//! Instrumentation and evaluation: software cost counters (Mult, CPR),
+//! hardware PMU counters (Inst/BM/LLCM via perf_event_open), and
+//! clustering-quality measures (objective J, NMI, CV) used by the
+//! Appendix-H study.
+
+pub mod counters;
+pub mod nmi;
+pub mod perf;
+
+pub use counters::{OpCounters, RunCounters};
+pub use nmi::{entropy, mutual_information, nmi, pairwise_nmi};
+pub use perf::{measure, PerfGroup, PerfReading};

@@ -1,0 +1,125 @@
+//! Clustering-comparison measures for the initial-state-independence study
+//! (Appendix H): normalized mutual information (Eqs. 49–50), entropy, and
+//! the pairwise-NMI average over seed ensembles.
+
+use std::collections::HashMap;
+
+/// Entropy (nats) of a labeling.
+pub fn entropy(labels: &[u32]) -> f64 {
+    let n = labels.len() as f64;
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    for &l in labels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Mutual information (nats) between two labelings of the same objects.
+pub fn mutual_information(a: &[u32], b: &[u32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut joint: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut ca: HashMap<u32, u64> = HashMap::new();
+    let mut cb: HashMap<u32, u64> = HashMap::new();
+    for (&x, &y) in a.iter().zip(b) {
+        *joint.entry((x, y)).or_insert(0) += 1;
+        *ca.entry(x).or_insert(0) += 1;
+        *cb.entry(y).or_insert(0) += 1;
+    }
+    joint
+        .iter()
+        .map(|(&(x, y), &c)| {
+            let pxy = c as f64 / n;
+            let px = ca[&x] as f64 / n;
+            let py = cb[&y] as f64 / n;
+            pxy * (pxy / (px * py)).ln()
+        })
+        .sum()
+}
+
+/// NMI(C_a, C_b) = I / sqrt(H_a · H_b) (Eq. 49). Returns 1.0 when both
+/// labelings are single-cluster (degenerate but identical).
+pub fn nmi(a: &[u32], b: &[u32]) -> f64 {
+    let ha = entropy(a);
+    let hb = entropy(b);
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0;
+    }
+    if ha == 0.0 || hb == 0.0 {
+        return 0.0;
+    }
+    (mutual_information(a, b) / (ha * hb).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Average pairwise NMI over an ensemble of labelings (Eq. 50), plus the
+/// standard deviation across pairs. Requires at least 2 labelings.
+pub fn pairwise_nmi(ensemble: &[Vec<u32>]) -> (f64, f64) {
+    assert!(ensemble.len() >= 2);
+    let mut vals = Vec::new();
+    for i in 0..ensemble.len() {
+        for j in (i + 1)..ensemble.len() {
+            vals.push(nmi(&ensemble[i], &ensemble[j]));
+        }
+    }
+    let m = crate::util::stats::mean(&vals);
+    let s = crate::util::stats::std_dev(&vals);
+    (m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform() {
+        let labels = [0, 0, 1, 1, 2, 2, 3, 3];
+        assert!((entropy(&labels) - (4f64).ln()).abs() < 1e-12);
+        assert_eq!(entropy(&[5, 5, 5]), 0.0);
+    }
+
+    #[test]
+    fn nmi_identical_is_one() {
+        let a = [0, 1, 2, 0, 1, 2, 1, 1];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        // NMI is invariant to label renaming
+        let b: Vec<u32> = a.iter().map(|&x| 10 - x).collect();
+        assert!((nmi(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_independent_is_near_zero() {
+        // a splits first/second half; b splits even/odd — independent.
+        let n = 1000;
+        let a: Vec<u32> = (0..n).map(|i| (i < n / 2) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+        assert!(nmi(&a, &b) < 0.01);
+    }
+
+    #[test]
+    fn nmi_symmetric() {
+        let a = [0, 0, 1, 1, 2, 2];
+        let b = [0, 1, 1, 2, 2, 2];
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pairwise_over_ensemble() {
+        let e = vec![vec![0, 0, 1, 1], vec![1, 1, 0, 0], vec![0, 1, 0, 1]];
+        let (m, s) = pairwise_nmi(&e);
+        // pairs (0,1) identical → 1.0; (0,2) and (1,2) independent → 0.0
+        assert!((m - 1.0 / 3.0).abs() < 1e-9, "m={m}");
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! computations (`artifacts/*.hlo.txt`) from Rust, with **no Python on
+//! the execution path**.
+//!
+//! Build path (see `python/compile/aot.py`): JAX lowers the Layer-2
+//! model (which calls the Layer-1 Pallas kernel) to StableHLO, converts
+//! it to an `XlaComputation`, and dumps **HLO text** — the interchange
+//! format this image's xla_extension 0.5.1 accepts (jax ≥ 0.5 protos
+//! carry 64-bit ids the proto path rejects; the text parser reassigns
+//! ids).
+//!
+//! Runtime path (this module): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Compiled
+//! executables are cached per artifact name.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Expected dense-block shapes, kept in sync with `python/compile/aot.py`
+/// (`BLOCK_B`, `BLOCK_K`, `BLOCK_D` there).
+pub const BLOCK_B: usize = 64;
+pub const BLOCK_K: usize = 32;
+pub const BLOCK_D: usize = 256;
+
+/// A PJRT client plus a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts directory: `$SKM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SKM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True if the named artifact exists on disk.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load (and cache) an artifact by name (`name` → `name.hlo.txt`).
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 inputs with the given shapes; returns
+    /// the flattened outputs of the result tuple.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let expected: i64 = shape.iter().product();
+                anyhow::ensure!(
+                    expected as usize == data.len(),
+                    "shape {shape:?} wants {expected} elements, got {}",
+                    data.len()
+                );
+                xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| {
+                // Outputs may be f32 or i32 (argmax indices); convert to
+                // f32 uniformly for a simple interface.
+                let p = p
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("convert: {e:?}"))?;
+                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Dense-block assignment via the AOT Pallas/JAX kernel: given a
+    /// `B×D` block of objects and `K×D` means (both dense f32,
+    /// row-major), returns `(argmax ids, best sims)`.
+    ///
+    /// Shapes must match the compiled block ([`BLOCK_B`], [`BLOCK_K`],
+    /// [`BLOCK_D`]); use [`pad_to`] helpers for partial blocks.
+    pub fn assign_block(&mut self, x: &[f32], m: &[f32]) -> Result<(Vec<u32>, Vec<f32>)> {
+        let outs = self.execute_f32(
+            "assign_block",
+            &[
+                (x, &[BLOCK_B as i64, BLOCK_D as i64]),
+                (m, &[BLOCK_K as i64, BLOCK_D as i64]),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "assign_block returned {} outputs", outs.len());
+        let ids = outs[0].iter().map(|&v| v as u32).collect();
+        Ok((ids, outs[1].clone()))
+    }
+
+    /// One dense spherical-k-means step via the AOT kernel: returns
+    /// `(assignments, new unit-norm means (K×D), objective)`.
+    pub fn kmeans_step(&mut self, x: &[f32], m: &[f32]) -> Result<(Vec<u32>, Vec<f32>, f32)> {
+        let outs = self.execute_f32(
+            "kmeans_step",
+            &[
+                (x, &[BLOCK_B as i64, BLOCK_D as i64]),
+                (m, &[BLOCK_K as i64, BLOCK_D as i64]),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 3, "kmeans_step returned {} outputs", outs.len());
+        let ids = outs[0].iter().map(|&v| v as u32).collect();
+        Ok((ids, outs[1].clone(), outs[2][0]))
+    }
+}
+
+/// Pad a dense row-major `rows×cols` matrix to `target_rows×target_cols`
+/// with zeros (partial blocks → full compiled block shapes).
+pub fn pad_to(data: &[f32], rows: usize, cols: usize, target_rows: usize, target_cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    assert!(rows <= target_rows && cols <= target_cols);
+    let mut out = vec![0.0f32; target_rows * target_cols];
+    for r in 0..rows {
+        out[r * target_cols..r * target_cols + cols]
+            .copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Project sparse rows onto the `proj_d` highest-df terms (term ids
+/// `D - proj_d ..`) as dense f32 rows — the dense cross-check subspace
+/// used by the hybrid example (see DESIGN.md §2).
+pub fn densify_top_terms(
+    x: &crate::sparse::CsrMatrix,
+    rows: &[usize],
+    proj_d: usize,
+) -> Vec<f32> {
+    let d = x.n_cols();
+    let lo = d.saturating_sub(proj_d);
+    let mut out = vec![0.0f32; rows.len() * proj_d];
+    for (r, &i) in rows.iter().enumerate() {
+        let (ts, vs) = x.row(i);
+        for (&t, &v) in ts.iter().zip(vs) {
+            let t = t as usize;
+            if t >= lo {
+                out[r * proj_d + (t - lo)] = v as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_roundtrip() {
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let p = pad_to(&data, 2, 3, 4, 5);
+        assert_eq!(p.len(), 20);
+        assert_eq!(&p[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(p[3], 0.0);
+        assert_eq!(&p[5..8], &[4.0, 5.0, 6.0]);
+        assert_eq!(p[19], 0.0);
+    }
+
+    #[test]
+    fn densify_top_terms_places_values() {
+        use crate::sparse::CsrMatrix;
+        let m = CsrMatrix::from_rows(10, &[vec![(1, 0.5), (8, 0.25), (9, 0.75)]]);
+        let dense = densify_top_terms(&m, &[0], 4); // terms 6..10
+        assert_eq!(dense.len(), 4);
+        assert_eq!(dense, vec![0.0, 0.0, 0.25, 0.75]); // term 1 dropped
+    }
+
+    /// Full PJRT round-trip — only runs when artifacts are built
+    /// (`make artifacts`); the integration test in `rust/tests`
+    /// exercises it unconditionally via the Makefile flow.
+    #[test]
+    fn pjrt_assign_block_if_artifacts_present() {
+        let dir = PjrtRuntime::default_dir();
+        if !dir.join("assign_block.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&dir).expect("client");
+        let mut x = vec![0.0f32; BLOCK_B * BLOCK_D];
+        let mut m = vec![0.0f32; BLOCK_K * BLOCK_D];
+        // object r matches mean r % K exactly.
+        for r in 0..BLOCK_B {
+            x[r * BLOCK_D + (r % BLOCK_K)] = 1.0;
+        }
+        for j in 0..BLOCK_K {
+            m[j * BLOCK_D + j] = 1.0;
+        }
+        let (ids, sims) = rt.assign_block(&x, &m).expect("assign");
+        for r in 0..BLOCK_B {
+            assert_eq!(ids[r], (r % BLOCK_K) as u32, "row {r}");
+            assert!((sims[r] - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! BM25 feature extraction — an alternative weighting to the paper's
+//! tf-idf (Eq. 15), addressing the paper's future-work item "(1) various
+//! data sets and features" (Section IX).
+//!
+//! Okapi BM25 weight of term s in document i:
+//!
+//! ```text
+//! w(s,i) = idf(s) · tf(s,i)·(k1 + 1) / (tf(s,i) + k1·(1 − b + b·len_i/avg_len))
+//! idf(s) = ln( (N − df_s + 0.5) / (df_s + 0.5) + 1 )
+//! ```
+//!
+//! followed by L2 normalization, so the resulting vectors live on the
+//! unit hypersphere exactly like the tf-idf ones — every algorithm and
+//! every UC analysis applies unchanged. The df-ascending term relabeling
+//! is shared with [`super::tfidf::build_dataset`].
+
+use crate::sparse::csr::CsrMatrix;
+use crate::sparse::tfidf::Dataset;
+
+/// BM25 hyperparameters (standard defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Bm25Params {
+    pub k1: f64,
+    pub b: f64,
+}
+
+impl Default for Bm25Params {
+    fn default() -> Self {
+        Self { k1: 1.2, b: 0.75 }
+    }
+}
+
+/// Build a clustering dataset with BM25 weights instead of tf-idf.
+pub fn build_dataset_bm25(
+    name: &str,
+    n_terms: usize,
+    docs: &[Vec<(u32, u32)>],
+    params: Bm25Params,
+) -> Dataset {
+    let n = docs.len();
+    assert!(n > 0, "empty corpus");
+
+    // Document frequencies and lengths.
+    let mut df_orig = vec![0u32; n_terms];
+    let mut doc_len = vec![0u64; n];
+    for (i, doc) in docs.iter().enumerate() {
+        let mut terms: Vec<u32> = doc.iter().map(|&(t, _)| t).collect();
+        terms.sort_unstable();
+        terms.dedup();
+        for t in terms {
+            df_orig[t as usize] += 1;
+        }
+        doc_len[i] = doc.iter().map(|&(_, c)| c as u64).sum();
+    }
+    let avg_len = doc_len.iter().sum::<u64>() as f64 / n as f64;
+
+    // df-ascending relabeling (same contract as tf-idf's build_dataset —
+    // the ES filter's Region split depends on it).
+    let mut present: Vec<u32> = (0..n_terms as u32)
+        .filter(|&t| df_orig[t as usize] > 0)
+        .collect();
+    present.sort_unstable_by_key(|&t| (df_orig[t as usize], t));
+    let d_eff = present.len();
+    let mut relabel = vec![u32::MAX; n_terms];
+    for (new_id, &old_id) in present.iter().enumerate() {
+        relabel[old_id as usize] = new_id as u32;
+    }
+    let df: Vec<u32> = present.iter().map(|&t| df_orig[t as usize]).collect();
+
+    let n_f = n as f64;
+    let rows: Vec<Vec<(u32, f64)>> = docs
+        .iter()
+        .enumerate()
+        .map(|(i, doc)| {
+            let len_norm = 1.0 - params.b + params.b * doc_len[i] as f64 / avg_len;
+            doc.iter()
+                .filter(|&&(_, c)| c > 0)
+                .map(|&(t, c)| {
+                    let dfs = df_orig[t as usize] as f64;
+                    let idf = ((n_f - dfs + 0.5) / (dfs + 0.5) + 1.0).ln();
+                    let tf = c as f64;
+                    let w = idf * tf * (params.k1 + 1.0) / (tf + params.k1 * len_norm);
+                    (relabel[t as usize], w)
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut x = CsrMatrix::from_rows(d_eff, &rows);
+    x.l2_normalize_rows();
+    Dataset {
+        x,
+        df,
+        orig_term: present,
+        name: format!("{name}-bm25"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny};
+    use crate::metrics::nmi;
+
+    fn corpus() -> crate::corpus::BowCorpus {
+        generate(&tiny(404))
+    }
+
+    #[test]
+    fn unit_norm_and_df_ascending() {
+        let c = corpus();
+        let ds = build_dataset_bm25("t", c.n_terms, &c.docs, Bm25Params::default());
+        assert!(ds.df.windows(2).all(|w| w[0] <= w[1]));
+        for i in 0..ds.n() {
+            let norm = ds.x.row_norm(i);
+            assert!((norm - 1.0).abs() < 1e-12, "row {i}: {norm}");
+        }
+    }
+
+    #[test]
+    fn weights_positive_and_idf_monotone() {
+        let c = corpus();
+        let ds = build_dataset_bm25("t", c.n_terms, &c.docs, Bm25Params::default());
+        // BM25 idf(+1 variant) is strictly positive, so all weights > 0.
+        for i in 0..ds.n() {
+            let (_, vs) = ds.x.row(i);
+            assert!(vs.iter().all(|&v| v > 0.0), "row {i} has nonpositive weight");
+        }
+    }
+
+    #[test]
+    fn saturation_with_k1() {
+        // With k1 -> 0, term frequency saturates immediately: weights for
+        // tf=1 and tf=10 of the same term should coincide (up to idf).
+        let docs = vec![vec![(0, 1), (1, 1)], vec![(0, 10), (1, 1)]];
+        let ds = build_dataset_bm25(
+            "t",
+            2,
+            &docs,
+            Bm25Params { k1: 1e-9, b: 0.0 },
+        );
+        // After normalization both docs should have identical vectors.
+        let a = ds.x.row_dense(0);
+        let b = ds.x.row_dense(1);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn algorithms_stay_exact_on_bm25_features() {
+        // The exactness guarantees are weighting-agnostic: ES-ICP must
+        // match MIVI on BM25 features too.
+        let c = corpus();
+        let ds = build_dataset_bm25("t", c.n_terms, &c.docs, Bm25Params::default());
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 5,
+            ..Default::default()
+        };
+        let a = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let b = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        let t = run_clustering(AlgoKind::TaIcp, &ds, &cfg);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.assign, t.assign);
+    }
+
+    #[test]
+    fn bm25_clusters_similarly_to_tfidf() {
+        let c = corpus();
+        let tfidf = crate::sparse::build_dataset("t", c.n_terms, &c.docs);
+        let bm25 = build_dataset_bm25("t", c.n_terms, &c.docs, Bm25Params::default());
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = run_clustering(AlgoKind::EsIcp, &tfidf, &cfg);
+        let b = run_clustering(AlgoKind::EsIcp, &bm25, &cfg);
+        let agreement = nmi(&a.assign, &b.assign);
+        assert!(
+            agreement > 0.4,
+            "tf-idf and BM25 clusterings unrelated: NMI={agreement}"
+        );
+    }
+}

@@ -1,0 +1,340 @@
+//! Compressed sparse row (CSR) storage for document-feature matrices.
+//!
+//! A row is the paper's "sparse expression" of an object: a tuple array
+//! `[(term id, feature value)]` with term IDs stored in ascending order.
+//! The clustering engine requires the *global* term-ID order to be
+//! ascending document frequency (df); that relabeling is done by
+//! `sparse::tfidf::build_dataset`, not here.
+
+/// CSR sparse matrix with `u32` column indices and `f64` values.
+///
+/// `f64` matches the paper's `sizeof(double)` memory accounting for the
+/// partial mean-inverted index (Section IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    n_cols: usize,
+    /// Row start offsets; `indptr.len() == n_rows + 1`.
+    indptr: Vec<usize>,
+    /// Column (term) ids, ascending within each row.
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row tuple lists. Each row's tuples are sorted by
+    /// column id; duplicate columns within a row are summed.
+    pub fn from_rows(n_cols: usize, rows: &[Vec<(u32, f64)>]) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for row in rows {
+            // Fast path: already strictly sorted (the common case for
+            // rows produced by the update step) — no copy, no sort, no
+            // dedup scan (§Perf).
+            if row.windows(2).all(|w| w[0].0 < w[1].0) {
+                for &(c, v) in row {
+                    debug_assert!((c as usize) < n_cols);
+                    indices.push(c);
+                    values.push(v);
+                }
+                indptr.push(indices.len());
+                continue;
+            }
+            scratch.clear();
+            scratch.extend_from_slice(row);
+            scratch.sort_unstable_by_key(|t| t.0);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                assert!((c as usize) < n_cols, "column {c} out of range {n_cols}");
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                values.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Self {
+            n_cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Build directly from raw CSR arrays (caller guarantees validity;
+    /// checked in debug builds).
+    pub fn from_raw(n_cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64>) -> Self {
+        debug_assert!(!indptr.is_empty());
+        debug_assert_eq!(*indptr.last().unwrap(), indices.len());
+        debug_assert_eq!(indices.len(), values.len());
+        #[cfg(debug_assertions)]
+        for r in 0..indptr.len() - 1 {
+            let seg = &indices[indptr[r]..indptr[r + 1]];
+            debug_assert!(seg.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted");
+            debug_assert!(seg.iter().all(|&c| (c as usize) < n_cols));
+        }
+        Self {
+            n_cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Number of non-zeros in row `i` — the paper's `(nt)_i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Row `i` as parallel slices `(term ids, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> (&[u32], &mut [f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &mut self.values[s..e])
+    }
+
+    /// Iterate `(row, term, value)` over all non-zeros.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u32, f64)> + '_ {
+        (0..self.n_rows()).flat_map(move |r| {
+            let (ts, vs) = self.row(r);
+            ts.iter().zip(vs.iter()).map(move |(&t, &v)| (r, t, v))
+        })
+    }
+
+    /// L2 norm of row `i`.
+    pub fn row_norm(&self, i: usize) -> f64 {
+        let (_, vs) = self.row(i);
+        vs.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// L1 norm of row `i` — `||x_i||_1` used by the TA filter (Eq. 16).
+    pub fn row_l1(&self, i: usize) -> f64 {
+        let (_, vs) = self.row(i);
+        vs.iter().map(|v| v.abs()).sum::<f64>()
+    }
+
+    /// Scale every row to unit L2 norm (rows with zero norm are left
+    /// untouched). Returns the number of zero rows encountered.
+    pub fn l2_normalize_rows(&mut self) -> usize {
+        let mut zeros = 0;
+        for i in 0..self.n_rows() {
+            let n = self.row_norm(i);
+            if n > 0.0 {
+                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+                for v in &mut self.values[s..e] {
+                    *v /= n;
+                }
+            } else {
+                zeros += 1;
+            }
+        }
+        zeros
+    }
+
+    /// Dot product of two rows (sorted-merge set intersection).
+    pub fn row_dot(&self, a: usize, b: usize) -> f64 {
+        let (ta, va) = self.row(a);
+        let (tb, vb) = self.row(b);
+        dot_sorted(ta, va, tb, vb)
+    }
+
+    /// Dot product of row `i` against a dense vector.
+    pub fn row_dot_dense(&self, i: usize, dense: &[f64]) -> f64 {
+        let (ts, vs) = self.row(i);
+        ts.iter()
+            .zip(vs.iter())
+            .map(|(&t, &v)| v * dense[t as usize])
+            .sum()
+    }
+
+    /// Document frequency per column: in how many rows each column occurs.
+    pub fn column_df(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.n_cols];
+        for &c in &self.indices {
+            df[c as usize] += 1;
+        }
+        df
+    }
+
+    /// Sum of values per column (term frequency when values are counts).
+    pub fn column_sum(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.n_cols];
+        for (_, c, v) in self.iter() {
+            s[c as usize] += v;
+        }
+        s
+    }
+
+    /// Remap column ids: `new_id = perm[old_id]`. `perm` must be a
+    /// permutation of `0..n_cols`. Rows are re-sorted afterwards.
+    pub fn permute_columns(&mut self, perm: &[u32]) {
+        assert_eq!(perm.len(), self.n_cols);
+        for c in &mut self.indices {
+            *c = perm[*c as usize];
+        }
+        // Re-sort each row by the new ids.
+        for r in 0..self.n_rows() {
+            let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+            let mut pairs: Vec<(u32, f64)> = self.indices[s..e]
+                .iter()
+                .cloned()
+                .zip(self.values[s..e].iter().cloned())
+                .collect();
+            pairs.sort_unstable_by_key(|t| t.0);
+            for (k, (c, v)) in pairs.into_iter().enumerate() {
+                self.indices[s + k] = c;
+                self.values[s + k] = v;
+            }
+        }
+    }
+
+    /// Densify row `i` into a `n_cols`-length vector (test/oracle helper).
+    pub fn row_dense(&self, i: usize) -> Vec<f64> {
+        let mut d = vec![0.0; self.n_cols];
+        let (ts, vs) = self.row(i);
+        for (&t, &v) in ts.iter().zip(vs) {
+            d[t as usize] = v;
+        }
+        d
+    }
+
+    /// Average row nnz — the paper's `D̂`.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.n_rows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows() as f64
+        }
+    }
+}
+
+/// Sparse·sparse dot product over sorted (ids, values) pairs.
+#[inline]
+pub fn dot_sorted(ta: &[u32], va: &[f64], tb: &[u32], vb: &[f64]) -> f64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f64);
+    while i < ta.len() && j < tb.len() {
+        match ta[i].cmp(&tb[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                acc += va[i] * vb[j];
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        CsrMatrix::from_rows(
+            5,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![],
+                vec![(2, 1.0), (4, 1.0), (0, 4.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn shape_and_rows() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.n_cols(), 5);
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(m.row(2).0.len(), 0);
+        // unsorted input row 3 got sorted
+        assert_eq!(m.row(3).0, &[0, 2, 4]);
+        assert_eq!(m.row_nnz(3), 3);
+    }
+
+    #[test]
+    fn duplicate_columns_are_summed() {
+        let m = CsrMatrix::from_rows(3, &[vec![(1, 1.0), (1, 2.0), (0, 1.0)]]);
+        assert_eq!(m.row(0), (&[0u32, 1][..], &[1.0, 3.0][..]));
+    }
+
+    #[test]
+    fn norms_and_normalize() {
+        let mut m = sample();
+        assert!((m.row_norm(0) - 5.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(m.row_l1(3), 6.0);
+        let zeros = m.l2_normalize_rows();
+        assert_eq!(zeros, 1); // the empty row
+        for i in [0usize, 1, 3] {
+            assert!((m.row_norm(i) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dots() {
+        let m = sample();
+        // rows 0 and 3 share terms {0, 2}: 1*4 + 2*1 = 6
+        assert_eq!(m.row_dot(0, 3), 6.0);
+        assert_eq!(m.row_dot(0, 1), 0.0);
+        let dense = [1.0, 1.0, 1.0, 1.0, 1.0];
+        assert_eq!(m.row_dot_dense(3, &dense), 6.0);
+    }
+
+    #[test]
+    fn df_and_colsum() {
+        let m = sample();
+        assert_eq!(m.column_df(), vec![2, 1, 2, 0, 1]);
+        assert_eq!(m.column_sum(), vec![5.0, 3.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn permute_columns_preserves_data() {
+        let mut m = sample();
+        let before = m.row_dense(3);
+        // reverse permutation
+        let perm: Vec<u32> = (0..5).rev().collect();
+        m.permute_columns(&perm);
+        let after = m.row_dense(3);
+        for c in 0..5 {
+            assert_eq!(before[c], after[4 - c]);
+        }
+        // rows stay sorted
+        let (ts, _) = m.row(3);
+        assert!(ts.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn dot_sorted_edge_cases() {
+        assert_eq!(dot_sorted(&[], &[], &[1], &[2.0]), 0.0);
+        assert_eq!(dot_sorted(&[0, 5], &[1.0, 2.0], &[5], &[3.0]), 6.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Sparse document substrate: CSR matrices, sparse dot products, tf-idf
+//! feature extraction, and the `Dataset` type consumed by every
+//! clustering algorithm.
+
+pub mod bm25;
+pub mod csr;
+pub mod tfidf;
+
+pub use bm25::{build_dataset_bm25, Bm25Params};
+pub use csr::{dot_sorted, CsrMatrix};
+pub use tfidf::{build_dataset, Dataset};

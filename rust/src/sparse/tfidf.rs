@@ -1,0 +1,181 @@
+//! Feature extraction: raw term counts → tf-idf → L2 normalization →
+//! df-ascending term relabeling — producing the `Dataset` every algorithm
+//! consumes.
+//!
+//! Matches Section VI-A of the paper:
+//!   tf-idf(s, i) = tf(s, i) * log(N / df_s)                      (Eq. 15)
+//! followed by L2 normalization (objects live on the unit hypersphere),
+//! with term IDs relabeled so that **ascending term ID == ascending
+//! document frequency** (Section IV-A) — the ES filter's Region-1/2 split
+//! on term IDs depends on this ordering.
+
+use crate::sparse::csr::CsrMatrix;
+
+/// A prepared clustering dataset: unit-norm tf-idf feature vectors with
+/// df-ascending term IDs, plus the per-term document frequencies.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// N × D unit-norm feature matrix, term IDs ascending in df.
+    pub x: CsrMatrix,
+    /// Document frequency per (relabeled) term; nondecreasing in term id.
+    pub df: Vec<u32>,
+    /// Maps relabeled term id → original term id (for interpretability).
+    pub orig_term: Vec<u32>,
+    /// Human-readable dataset label ("pubmed-like", "nyt-like", ...).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Average number of distinct terms per document — the paper's `D̂`.
+    pub fn avg_terms(&self) -> f64 {
+        self.x.avg_row_nnz()
+    }
+
+    /// Sparsity indicator `D̂ / D` (Section I).
+    pub fn sparsity_indicator(&self) -> f64 {
+        self.avg_terms() / self.d() as f64
+    }
+}
+
+/// Build a `Dataset` from bag-of-words counts.
+///
+/// `docs[i]` lists `(term id, count)` pairs (any order, duplicates summed);
+/// `n_terms` is the vocabulary size. Terms that appear in **no** document
+/// are dropped during relabeling (the paper's D counts only distinct terms
+/// present in the data set).
+pub fn build_dataset(name: &str, n_terms: usize, docs: &[Vec<(u32, u32)>]) -> Dataset {
+    let n = docs.len();
+    assert!(n > 0, "empty corpus");
+
+    // Pass 1: document frequencies over the original vocabulary.
+    let mut df_orig = vec![0u32; n_terms];
+    for doc in docs {
+        // Dedup within doc for df counting.
+        let mut terms: Vec<u32> = doc.iter().map(|&(t, _)| t).collect();
+        terms.sort_unstable();
+        terms.dedup();
+        for t in terms {
+            df_orig[t as usize] += 1;
+        }
+    }
+
+    // Relabel: sort original terms by (df ascending, original id) — the
+    // deterministic tiebreak keeps runs reproducible.
+    let mut present: Vec<u32> = (0..n_terms as u32).filter(|&t| df_orig[t as usize] > 0).collect();
+    present.sort_unstable_by_key(|&t| (df_orig[t as usize], t));
+    let d_eff = present.len();
+    let mut relabel = vec![u32::MAX; n_terms];
+    for (new_id, &old_id) in present.iter().enumerate() {
+        relabel[old_id as usize] = new_id as u32;
+    }
+    let df: Vec<u32> = present.iter().map(|&t| df_orig[t as usize]).collect();
+
+    // Pass 2: tf-idf rows in the relabeled vocabulary.
+    let n_f = n as f64;
+    let rows: Vec<Vec<(u32, f64)>> = docs
+        .iter()
+        .map(|doc| {
+            doc.iter()
+                .filter(|&&(_, c)| c > 0)
+                .map(|&(t, c)| {
+                    let nt = relabel[t as usize];
+                    debug_assert!(nt != u32::MAX);
+                    let idf = (n_f / df_orig[t as usize] as f64).ln();
+                    (nt, c as f64 * idf)
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut x = CsrMatrix::from_rows(d_eff, &rows);
+    x.l2_normalize_rows();
+
+    Dataset {
+        x,
+        df,
+        orig_term: present,
+        name: name.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_docs() -> (usize, Vec<Vec<(u32, u32)>>) {
+        // vocab 6; term 5 never used; term 0 in all docs (df=4, idf=0!),
+        // term 1 in 2 docs, terms 2..4 in 1 doc each.
+        let docs = vec![
+            vec![(0, 2), (1, 1), (2, 3)],
+            vec![(0, 1), (1, 2)],
+            vec![(0, 5), (3, 1)],
+            vec![(0, 1), (4, 2)],
+        ];
+        (6, docs)
+    }
+
+    #[test]
+    fn df_ascending_after_relabel() {
+        let (nt, docs) = toy_docs();
+        let ds = build_dataset("toy", nt, &docs);
+        assert_eq!(ds.d(), 5); // term 5 dropped
+        assert!(ds.df.windows(2).all(|w| w[0] <= w[1]), "df not ascending");
+        assert_eq!(*ds.df.last().unwrap(), 4); // term 0 has df=4
+        assert_eq!(*ds.orig_term.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn rows_are_unit_norm_where_possible() {
+        let (nt, docs) = toy_docs();
+        let ds = build_dataset("toy", nt, &docs);
+        for i in 0..ds.n() {
+            let norm = ds.x.row_norm(i);
+            // doc 2 = {0 (idf 0), 3}: still nonzero because of term 3.
+            assert!((norm - 1.0).abs() < 1e-12, "row {i} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn idf_zero_terms_vanish_in_weight_but_norm_is_fine() {
+        let (nt, docs) = toy_docs();
+        let ds = build_dataset("toy", nt, &docs);
+        // the ubiquitous term (df = N) has idf = ln(1) = 0 → zero weight
+        let ubiquitous_new_id = ds.d() as u32 - 1;
+        for i in 0..ds.n() {
+            let (ts, vs) = ds.x.row(i);
+            for (&t, &v) in ts.iter().zip(vs) {
+                if t == ubiquitous_new_id {
+                    assert_eq!(v, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tfidf_values_match_formula() {
+        let docs = vec![vec![(0, 2), (1, 1)], vec![(1, 3)]];
+        let ds = build_dataset("t", 2, &docs);
+        // df: term0 = 1, term1 = 2 → relabeled term0 → id0, term1 → id1
+        // doc0 raw: tfidf(term0) = 2 ln 2, tfidf(term1) = 1 ln 1 = 0
+        let (ts, vs) = ds.x.row(0);
+        assert_eq!(ts, &[0, 1]);
+        assert!((vs[0] - 1.0).abs() < 1e-12); // normalized: only nonzero entry
+        assert_eq!(vs[1], 0.0);
+    }
+
+    #[test]
+    fn sparsity_indicator() {
+        let (nt, docs) = toy_docs();
+        let ds = build_dataset("toy", nt, &docs);
+        let expected = (3.0 + 2.0 + 2.0 + 2.0) / 4.0 / 5.0;
+        assert!((ds.sparsity_indicator() - expected).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cumulative partial similarity (CPS) — the Pareto-principle-like
+//! phenomenon of Section III / Appendix I (Figs. 4(b), 21, 22).
+//!
+//! For each object, the partial similarities
+//! `δρ(p) = u_(i,p) · μ_(a(i), t_(i,p))` to its own centroid are sorted
+//! descending and accumulated; `CPS(i, h)` is the fraction of the total
+//! similarity reached after the top `h` products and `NR = h / nt_i` the
+//! normalized rank (Eqs. 52–54). Binned averaging over all objects
+//! (Eqs. 55–56) yields the `CPS̄(NR)` curve with its standard deviation.
+
+use crate::index::MeanSet;
+use crate::sparse::Dataset;
+
+/// The averaged CPS curve over all objects.
+#[derive(Debug, Clone)]
+pub struct CpsCurve {
+    /// Normalized ranks (bin centers), 0 ..= 1.
+    pub nr: Vec<f64>,
+    /// Average CPS per bin.
+    pub mean: Vec<f64>,
+    /// Standard deviation per bin.
+    pub std: Vec<f64>,
+}
+
+impl CpsCurve {
+    /// CPS̄ at a given normalized rank (nearest bin) — e.g.
+    /// `value_at(0.1)` reproduces the paper's "10% of multiplications →
+    /// 92% of the similarity" headline.
+    pub fn value_at(&self, nr: f64) -> f64 {
+        let idx = ((nr.clamp(0.0, 1.0)) * (self.nr.len() - 1) as f64).round() as usize;
+        self.mean[idx]
+    }
+}
+
+/// Compute the averaged CPS curve with `bins + 1` points (δb = 1/bins;
+/// the paper uses δb = 0.01). Objects with zero similarity to their
+/// centroid are skipped (no curve is defined for them).
+pub fn cps_curve(ds: &Dataset, means: &MeanSet, assign: &[u32], bins: usize) -> CpsCurve {
+    assert!(bins >= 1);
+    let nb = bins + 1;
+    let mut sum = vec![0.0f64; nb];
+    let mut sumsq = vec![0.0f64; nb];
+    let mut count = 0u64;
+
+    let mut partials: Vec<f64> = Vec::new();
+    // Dense scratch per centroid would be K×D; instead densify each mean
+    // on demand per *cluster* by grouping objects (cheaper: sort object
+    // ids by assignment).
+    let k = means.k();
+    let mut by_cluster: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (i, &a) in assign.iter().enumerate() {
+        by_cluster[a as usize].push(i as u32);
+    }
+    let mut dense = vec![0.0f64; means.m.n_cols()];
+    for j in 0..k {
+        if by_cluster[j].is_empty() {
+            continue;
+        }
+        let (ts, vs) = means.m.row(j);
+        for (&t, &v) in ts.iter().zip(vs) {
+            dense[t as usize] = v;
+        }
+        for &i in &by_cluster[j] {
+            let (ots, ovs) = ds.x.row(i as usize);
+            partials.clear();
+            let mut total = 0.0;
+            for (&t, &u) in ots.iter().zip(ovs) {
+                let p = u * dense[t as usize];
+                if p > 0.0 {
+                    partials.push(p);
+                    total += p;
+                }
+            }
+            if total <= 0.0 || partials.is_empty() {
+                continue;
+            }
+            partials.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            // Cumulative curve, linearly interpolated onto the bins.
+            // NR(i, h) = h / nt_i uses the object's distinct-term count
+            // (Eq. 53) — products that are zero contribute no mass but
+            // do occupy rank positions.
+            let nt = ots.len() as f64;
+            let mut cum = 0.0;
+            let mut h = 0usize;
+            for b in 0..nb {
+                let target_h = (b as f64 / bins as f64) * nt;
+                while (h as f64) < target_h && h < partials.len() {
+                    cum += partials[h];
+                    h += 1;
+                }
+                // Fractional part via linear interpolation.
+                let frac = target_h - target_h.floor();
+                let extra = if h < partials.len() && frac > 0.0 && (h as f64) <= target_h {
+                    partials[h] * frac
+                } else {
+                    0.0
+                };
+                let cps = ((cum + extra) / total).min(1.0);
+                sum[b] += cps;
+                sumsq[b] += cps * cps;
+            }
+            count += 1;
+        }
+        for &t in ts {
+            dense[t as usize] = 0.0;
+        }
+    }
+
+    let n = count.max(1) as f64;
+    let mean: Vec<f64> = sum.iter().map(|s| s / n).collect();
+    let std: Vec<f64> = sum
+        .iter()
+        .zip(&sumsq)
+        .map(|(s, sq)| {
+            let m = s / n;
+            (sq / n - m * m).max(0.0).sqrt()
+        })
+        .collect();
+    CpsCurve {
+        nr: (0..nb).map(|b| b as f64 / bins as f64).collect(),
+        mean,
+        std,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::index::update_means;
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn cps_curve_is_monotone_and_ends_at_one() {
+        let c = generate(&CorpusSpec {
+            n_docs: 600,
+            ..tiny(66)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 15,
+            seed: 8,
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let upd = update_means(&ds, &out.assign, 15, None, None);
+        let curve = cps_curve(&ds, &upd.means, &out.assign, 100);
+        assert_eq!(curve.nr.len(), 101);
+        assert!((curve.mean[0]).abs() < 1e-9);
+        assert!((curve.mean[100] - 1.0).abs() < 1e-9);
+        for w in curve.mean.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "CPS not monotone");
+        }
+        // Pareto-like: the curve is strongly concave — a small NR already
+        // captures most of the similarity (paper: CPS(0.1) ≈ 0.92 on
+        // PubMed; synthetic corpora are less extreme but clearly super-
+        // linear).
+        assert!(
+            curve.value_at(0.1) > 0.3,
+            "CPS(0.1) = {} — no Pareto concentration",
+            curve.value_at(0.1)
+        );
+        assert!(curve.value_at(0.5) > 0.8);
+        // STD is small at the endpoints by construction.
+        assert!(curve.std[0] < 1e-9 && curve.std[100] < 1e-9);
+    }
+}

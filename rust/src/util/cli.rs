@@ -1,0 +1,138 @@
+//! Minimal command-line argument parser (the offline build has no `clap`).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` conventions used by the `skm` binary, the examples, and the
+//! bench harnesses:
+//!
+//! ```no_run
+//! # // no_run: doctest executables cannot resolve libxla's rpath in
+//! # // this offline image; the same assertions run in #[test]s below.
+//! use skm::util::cli::Args;
+//! let args = Args::parse_from(["cluster", "--algo", "es-icp", "--k=100", "--verbose"]);
+//! assert_eq!(args.subcommand(), Some("cluster"));
+//! assert_eq!(args.get("algo"), Some("es-icp"));
+//! assert_eq!(args.get_parsed::<usize>("k", 8), 100);
+//! assert!(args.flag("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn parse_from<I, S>(items: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Self::default();
+        let items: Vec<String> = items.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < items.len() {
+            let it = &items[i];
+            if let Some(stripped) = it.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.options
+                        .insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(it.clone());
+            } else {
+                out.positional.push(it.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse an option value, falling back to `default` when absent.
+    /// Panics with a clear message on malformed input (CLI surface, so a
+    /// loud failure is the right behavior).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// True if a bare `--name` flag was given (or `--name=true`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.get(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NOTE grammar: a bare `--name` immediately followed by a
+        // non-`--` token is an option (`--name value`); trailing bare
+        // `--name` is a boolean flag. Use `--name=true` to force a flag
+        // before positional arguments.
+        let a = Args::parse_from(["run", "file.txt", "--n", "100", "--k=5", "--fast"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get_parsed::<usize>("k", 0), 5);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.positional(), &["file.txt".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(Vec::<String>::new());
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_parsed::<f64>("alpha", 1.5), 1.5);
+        assert_eq!(a.get_or("algo", "mivi"), "mivi");
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = Args::parse_from(["x", "--verbose", "--k", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_parsed::<u32>("k", 0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_number_panics() {
+        let a = Args::parse_from(["x", "--k", "abc"]);
+        let _ = a.get_parsed::<usize>("k", 0);
+    }
+}

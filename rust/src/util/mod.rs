@@ -1,0 +1,9 @@
+//! Foundation utilities: RNG, statistics, CLI parsing, output writers,
+//! timing. Everything here is dependency-free because the build
+//! environment is offline (see DESIGN.md §3).
+
+pub mod cli;
+pub mod io;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,357 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The build environment is offline (no `rand` crate), so we implement the
+//! small set of generators and samplers the corpus generator and the
+//! seeding logic need: SplitMix64 for seeding, PCG32 as the workhorse
+//! stream, plus uniform / Zipf / symmetric-Dirichlet-ish / categorical
+//! samplers. All generators are deterministic given a seed, which the
+//! exactness audits (DESIGN.md §6) rely on.
+
+/// SplitMix64: used to expand a single `u64` seed into independent streams.
+///
+/// Reference: Steele, Lea, Flood, "Fast splittable pseudorandom number
+/// generators", OOPSLA 2014.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32): small, fast, statistically solid stream generator.
+///
+/// Reference: O'Neill, "PCG: A family of simple fast space-efficient
+/// statistically good algorithms for random number generation" (2014).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Construct from a seed; the stream id is derived via SplitMix64 so
+    /// `Pcg32::new(s)` and `Pcg32::new(s + 1)` are independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let initstate = sm.next_u64();
+        let initseq = sm.next_u64();
+        let mut rng = Self {
+            state: 0,
+            inc: (initseq << 1) | 1,
+        };
+        let _ = rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        let _ = rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift
+    /// rejection method (unbiased).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n), order randomized.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        // Floyd's algorithm: O(k) expected insertions.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j as u32 + 1) as usize;
+            if chosen.insert(t) {
+                out.push(t);
+            } else {
+                chosen.insert(j);
+                out.push(j);
+            }
+        }
+        self.shuffle(&mut out);
+        out
+    }
+
+    /// Standard normal via Box–Muller (we only need modest quality).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                let v = self.next_f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; used for Dirichlet sampling in
+    /// the topic-model corpus generator.
+    pub fn next_gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boosting: Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.next_gamma(shape + 1.0);
+            let u = self.next_f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3;
+            }
+        }
+    }
+}
+
+/// Samples ranks from a (truncated) Zipf distribution
+/// `P(rank = r) ∝ (r + shift)^(-alpha)`, `r ∈ 1..=n`, by inverting the
+/// cumulative distribution with a precomputed table (binary search).
+///
+/// A table-based sampler is exact for our purposes and fast enough: the
+/// corpus generator draws tens of millions of term ranks.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    /// Cumulative unnormalized mass, `cdf[r-1] = sum_{r'<=r} (r'+shift)^-alpha`.
+    cdf: Vec<f64>,
+    total: f64,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        Self::with_shift(n, alpha, 0.0)
+    }
+
+    /// Zipf–Mandelbrot variant with a rank shift (flattens the head, which
+    /// matches empirical document-frequency curves better — cf. paper
+    /// Fig. 2 where the head of the df curve bends below the power law).
+    pub fn with_shift(n: usize, alpha: f64, shift: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 1..=n {
+            acc += (r as f64 + shift).powf(-alpha);
+            cdf.push(acc);
+        }
+        Self { cdf, total: acc }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw a 1-based rank.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64() * self.total;
+        // partition_point returns the first index with cdf[idx] >= u.
+        self.cdf.partition_point(|&c| c < u) + 1
+    }
+}
+
+/// Weighted categorical sampler over arbitrary nonnegative weights
+/// (cumulative-table + binary search). Used for topic mixtures.
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+    total: f64,
+}
+
+impl Categorical {
+    pub fn new(weights: &[f64]) -> Self {
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            debug_assert!(w >= 0.0 && w.is_finite());
+            acc += w;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "Categorical: all weights zero");
+        Self { cdf, total: acc }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64() * self.total;
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic_and_distinct_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let mut c = Pcg32::new(43);
+        let xa: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let xb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let xc: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(xa, xb);
+        assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Pcg32::new(1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg32::new(3);
+        let z = ZipfSampler::new(1000, 1.1);
+        let mut counts = vec![0u32; 1001];
+        for _ in 0..50_000 {
+            let r = z.sample(&mut rng);
+            assert!((1..=1000).contains(&r));
+            counts[r] += 1;
+        }
+        // rank 1 should be much more frequent than rank 100
+        assert!(counts[1] > counts[100] * 10);
+        // and the tail should still be sampled
+        assert!(counts[500..].iter().map(|&c| c as u64).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn zipf_empirical_exponent_roughly_matches() {
+        // Fit log(freq) vs log(rank) for the top ranks; slope ≈ -alpha.
+        let mut rng = Pcg32::new(9);
+        let alpha = 1.0;
+        let z = ZipfSampler::new(5000, alpha);
+        let mut counts = vec![0u32; 5001];
+        for _ in 0..400_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let pts: Vec<(f64, f64)> = (1..=50)
+            .map(|r| ((r as f64).ln(), (counts[r].max(1) as f64).ln()))
+            .collect();
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        assert!(
+            (slope + alpha).abs() < 0.15,
+            "slope={slope}, expected ~{}",
+            -alpha
+        );
+    }
+
+    #[test]
+    fn gamma_positive_mean_matches_shape() {
+        let mut rng = Pcg32::new(11);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| rng.next_gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut rng = Pcg32::new(5);
+        for _ in 0..100 {
+            let k = 1 + rng.gen_range(50) as usize;
+            let s = rng.sample_distinct(60, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&x| x < 60));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg32::new(13);
+        let c = Categorical::new(&[1.0, 0.0, 3.0]);
+        let mut counts = [0u32; 3];
+        for _ in 0..40_000 {
+            counts[c.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+}

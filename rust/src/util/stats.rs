@@ -1,0 +1,191 @@
+//! Small statistics helpers shared by the UCs analyzers, the seeding
+//! experiments (Appendix H), and the bench harnesses.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation CV = sigma / mean (Eq. 51, Appendix H).
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    std_dev(xs) / m
+}
+
+/// Ordinary least squares fit `y = a + b x`; returns `(a, b, r2)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return (0.0, 0.0, 0.0);
+    }
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let syy: f64 = ys.iter().map(|y| y * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-300 {
+        return (sy / n, 0.0, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    let ss_tot = syy - sy * sy / n;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Fit a power law `y = c * x^slope` over points with x, y > 0 by OLS on
+/// log-log coordinates; returns `(slope, log_c, r2)`. Used for the Zipf /
+/// bounded-Zipf exponents in Section III.
+pub fn power_law_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, y)| **x > 0.0 && **y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .collect();
+    let lx: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ly: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (a, b, r2) = linear_fit(&lx, &ly);
+    (b, a, r2)
+}
+
+/// Fast approximate `exp(x)` (Schraudolph-style bit manipulation refined
+/// with one polynomial correction step; relative error < 0.1% over the
+/// range the EstParams estimator uses). EstParams evaluates millions of
+/// exponentials per parameter sweep (Appendix C); its probability model
+/// is itself an approximation, so a 1e-3-accurate exp is more than
+/// enough and ~5× faster than libm.
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    if x < -700.0 {
+        return 0.0;
+    }
+    if x > 700.0 {
+        return f64::INFINITY;
+    }
+    // exp(x) = 2^(x/ln2) = 2^i * 2^f,  i = round(x/ln2), |f| <= 0.5
+    let y = x * std::f64::consts::LOG2_E;
+    let i = y.round();
+    let f = y - i;
+    // 2^f for |f| <= 0.5 via a degree-4 minimax-ish polynomial on f·ln2.
+    let z = f * std::f64::consts::LN_2;
+    let p = 1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0 + z * (1.0 / 24.0))));
+    // Assemble 2^i through the exponent bits.
+    let bits = (((i as i64) + 1023) as u64) << 52;
+    f64::from_bits(bits) * p
+}
+
+/// Quantile by linear interpolation over a *sorted* slice; q in [0, 1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Histogram with `bins` equal-width buckets over `[lo, hi]`; out-of-range
+/// values are clamped into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<u64> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0u64; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_cv() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+        assert!((coefficient_of_variation(&xs) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_law_fit_recovers_exponent() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 5.0 * x.powf(-1.3)).collect();
+        let (slope, _, r2) = power_law_fit(&xs, &ys);
+        assert!((slope + 1.3).abs() < 1e-6, "slope={slope}");
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn fast_exp_accuracy() {
+        for i in -200..=200 {
+            let x = i as f64 * 0.11;
+            let approx = fast_exp(x);
+            let exact = x.exp();
+            let rel = ((approx - exact) / exact).abs();
+            assert!(rel < 1e-3, "x={x}: {approx} vs {exact} (rel {rel})");
+        }
+        assert_eq!(fast_exp(-1000.0), 0.0);
+        assert!(fast_exp(1000.0).is_infinite());
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 100.0);
+        assert!((quantile_sorted(&xs, 0.5) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.05, 0.15, 0.15, 0.95, -3.0, 7.0];
+        let h = histogram(&xs, 0.0, 1.0, 10);
+        assert_eq!(h[0], 2); // 0.05 and clamped -3.0
+        assert_eq!(h[1], 2);
+        assert_eq!(h[9], 2); // 0.95 and clamped 7.0
+        assert_eq!(h.iter().sum::<u64>(), 6);
+    }
+}

@@ -1,0 +1,134 @@
+//! Wall-clock timing helpers and a tiny benchmarking loop (the offline
+//! build has no `criterion`; the `benches/` harnesses use this instead).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch that accumulates across start/stop cycles; used to
+/// split assignment-step vs update-step time as the paper's appendix
+/// tables do.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.total += s.elapsed();
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(s) => self.total + s.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure once, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Statistics from a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchStats {
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: mean {:.3} ms  min {:.3} ms  max {:.3} ms  (+/- {:.3} ms, n={})",
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.std_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until either `max_iters` or `budget` seconds are spent (at least one).
+pub fn bench(warmup: usize, max_iters: usize, budget_s: f64, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let budget = Duration::from_secs_f64(budget_s);
+    let t0 = Instant::now();
+    while samples.len() < max_iters.max(1) && (samples.is_empty() || t0.elapsed() < budget) {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        iters: n,
+        mean_s: mean,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(0.0, f64::max),
+        std_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.secs();
+        assert!(t1 >= 0.004);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.secs() > t1);
+        sw.reset();
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn bench_runs_at_least_once() {
+        let mut count = 0;
+        let stats = bench(1, 5, 0.05, || {
+            count += 1;
+        });
+        assert!(stats.iters >= 1);
+        assert!(count >= stats.iters); // warmup + timed
+        assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s + 1e-12);
+    }
+}

@@ -1,0 +1,264 @@
+//! Edge-case and failure-injection tests: degenerate inputs, boundary
+//! parameter values, and adversarial corpus shapes that the paper's
+//! algorithms must survive *exactly* (same solution as MIVI) without
+//! panicking.
+
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::index::{update_means, EsIndex, InvIndex, MeanSet};
+use skm::sparse::{build_dataset, CsrMatrix, Dataset};
+
+fn run_all(ds: &Dataset, cfg: &ClusterConfig) {
+    let base = run_clustering(AlgoKind::Mivi, ds, cfg);
+    for &kind in AlgoKind::all() {
+        if kind == AlgoKind::Mivi {
+            continue;
+        }
+        let out = run_clustering(kind, ds, cfg);
+        assert_eq!(
+            out.assign,
+            base.assign,
+            "{} diverged on edge case",
+            kind.name()
+        );
+    }
+}
+
+/// K = 1: everything collapses into one cluster after one iteration.
+#[test]
+fn single_cluster() {
+    let c = generate(&tiny(1000));
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 1,
+        seed: 1,
+        ..Default::default()
+    };
+    run_all(&ds, &cfg);
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    assert!(out.assign.iter().all(|&a| a == 0));
+    assert!(out.converged);
+}
+
+/// K = N: every document is its own cluster seed; heavy tie territory.
+#[test]
+fn k_equals_n_over_2() {
+    let c = generate(&CorpusSpec {
+        n_docs: 120,
+        ..tiny(1001)
+    });
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 60,
+        seed: 2,
+        ..Default::default()
+    };
+    run_all(&ds, &cfg);
+}
+
+/// Duplicate documents: exact ties everywhere; deterministic tie-break
+/// must keep all algorithms aligned.
+#[test]
+fn duplicate_documents() {
+    let c = generate(&CorpusSpec {
+        n_docs: 80,
+        ..tiny(1002)
+    });
+    let mut docs = c.docs.clone();
+    let dups: Vec<_> = docs.iter().take(40).cloned().collect();
+    docs.extend(dups); // 40 exact duplicates
+    let ds = build_dataset("t", c.n_terms, &docs);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 3,
+        ..Default::default()
+    };
+    run_all(&ds, &cfg);
+}
+
+/// Single-term documents: extreme sparsity (nt = 1), many zero
+/// similarities.
+#[test]
+fn single_term_documents() {
+    let mut docs = Vec::new();
+    for i in 0..200u32 {
+        docs.push(vec![(i % 23, 1 + i % 5)]);
+    }
+    let ds = build_dataset("t", 23, &docs);
+    let cfg = ClusterConfig {
+        k: 6,
+        seed: 4,
+        ..Default::default()
+    };
+    run_all(&ds, &cfg);
+}
+
+/// A corpus where one term appears in every document (idf = 0 weight)
+/// plus near-empty docs.
+#[test]
+fn ubiquitous_term_and_tiny_docs() {
+    let mut docs = Vec::new();
+    for i in 0..150u32 {
+        let mut d = vec![(0u32, 3u32)]; // ubiquitous term
+        if i % 3 != 0 {
+            d.push((1 + (i % 17), 2));
+        }
+        if i % 5 == 0 {
+            d.push((20 + (i % 7), 1));
+        }
+        docs.push(d);
+    }
+    let ds = build_dataset("t", 40, &docs);
+    // Docs consisting ONLY of the idf-0 term have zero-norm vectors —
+    // the pipeline must not produce NaNs and clustering must agree.
+    let cfg = ClusterConfig {
+        k: 5,
+        seed: 5,
+        ..Default::default()
+    };
+    let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+    assert!(base.objective.is_finite());
+    for kind in [AlgoKind::EsIcp, AlgoKind::CsIcp, AlgoKind::TaIcp, AlgoKind::Icp] {
+        let out = run_clustering(kind, &ds, &cfg);
+        assert_eq!(out.assign, base.assign, "{}", kind.name());
+        assert!(out.objective.is_finite());
+    }
+}
+
+/// max_iters = 1: no convergence, but valid partial output.
+#[test]
+fn iteration_cap() {
+    let c = generate(&tiny(1003));
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 6,
+        max_iters: 1,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    assert_eq!(out.iterations(), 1);
+    assert!(!out.converged);
+}
+
+/// Extreme structural parameters on the EsIndex must partition cleanly.
+#[test]
+fn es_index_parameter_boundaries() {
+    let c = generate(&tiny(1004));
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 6,
+        seed: 7,
+        max_iters: 2,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, 6, None, None);
+    let d = ds.d();
+    for (t_th, v_th) in [
+        (0usize, 1e-9f64), // everything Region 2 (all values ≥ v_th)
+        (0, 2.0),          // v_th above all values: everything Region 3
+        (d, 1.0),          // everything Region 1
+        (d - 1, 0.5),
+        (1, 0.5),
+    ] {
+        let idx = EsIndex::build(&upd.means, t_th, v_th);
+        // Every mean entry is represented exactly once (r1 + r2 + the
+        // non-trivial deficit cells of the partial index).
+        let r1_nnz: usize = (0..t_th).map(|s| idx.r1.mf(s)).sum();
+        let r2_nnz = idx.r2.nnz();
+        let partial_nnz: usize = (t_th..d)
+            .map(|s| {
+                idx.partial
+                    .row(s)
+                    .iter()
+                    .filter(|&&w| w > 0.0 && w < 1.0)
+                    .count()
+            })
+            .sum();
+        assert_eq!(
+            r1_nnz + r2_nnz + partial_nnz,
+            upd.means.m.nnz(),
+            "partition broken at t_th={t_th} v_th={v_th}"
+        );
+    }
+}
+
+/// InvIndex with no moving centroids and all moving centroids.
+#[test]
+fn inv_index_moving_block_extremes() {
+    let c = generate(&tiny(1005));
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % 4).collect();
+    let upd = update_means(&ds, &assign, 4, None, None);
+    let mut means: MeanSet = upd.means;
+
+    means.moved = vec![false; 4];
+    let idx = InvIndex::build(&means, ds.d());
+    assert!(idx.moving_ids.is_empty());
+    for s in 0..ds.d() {
+        assert_eq!(idx.mfm[s], 0);
+        let (ids, _) = idx.postings_moving(s);
+        assert!(ids.is_empty());
+    }
+
+    means.moved = vec![true; 4];
+    let idx = InvIndex::build(&means, ds.d());
+    assert_eq!(idx.moving_ids, vec![0, 1, 2, 3]);
+    for s in 0..ds.d() {
+        assert_eq!(idx.mfm[s] as usize, idx.mf(s));
+    }
+}
+
+/// CSR with explicitly zero values (idf-0 terms) keeps algorithms
+/// consistent: a zero value participates in postings but adds nothing.
+#[test]
+fn explicit_zero_values() {
+    let m = CsrMatrix::from_rows(4, &[vec![(0, 0.0), (1, 1.0)], vec![(1, 1.0)]]);
+    assert_eq!(m.nnz(), 3);
+    assert_eq!(m.row_dot(0, 1), 1.0);
+    let df = m.column_df();
+    assert_eq!(df[0], 1); // the zero entry still counts structurally
+}
+
+/// Seeds differing only in the corpus (not the clustering seed) give
+/// different data but each run remains internally consistent.
+#[test]
+fn cross_corpus_stability() {
+    for cs in [2000u64, 2001, 2002] {
+        let c = generate(&CorpusSpec {
+            n_docs: 250,
+            ..tiny(cs)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 7,
+            seed: 1,
+            ..Default::default()
+        };
+        let a = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        let b = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        assert_eq!(a.assign, b.assign, "nondeterminism at corpus seed {cs}");
+        assert_eq!(a.objective, b.objective);
+    }
+}
+
+/// NYT-style long documents (large nt) with a small vocabulary stress
+/// the Region-2 paths (most terms above t_th).
+#[test]
+fn long_documents_small_vocab() {
+    let c = generate(&CorpusSpec {
+        n_docs: 150,
+        n_terms: 300,
+        mean_doc_len: 200.0,
+        ..tiny(1006)
+    });
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    assert!(ds.avg_terms() > 50.0);
+    let cfg = ClusterConfig {
+        k: 6,
+        seed: 8,
+        ..Default::default()
+    };
+    run_all(&ds, &cfg);
+}

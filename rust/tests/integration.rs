@@ -1,0 +1,286 @@
+//! Integration tests: whole-system behavior across modules — corpus →
+//! features → clustering → (equivalence, metrics, indexes) — plus
+//! property-style sweeps with the crate's own RNG, and the PJRT runtime
+//! path when artifacts are present.
+
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::coordinator::{audit_equivalence, preset, run_and_summarize};
+use skm::corpus::{generate, read_uci_bow, tiny, CorpusSpec};
+use skm::index::update_means;
+use skm::metrics::nmi;
+use skm::sparse::build_dataset;
+use skm::ucs;
+use skm::util::rng::Pcg32;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("it", c.n_terms, &c.docs)
+}
+
+/// The repo's central claim: every algorithm is an exact acceleration.
+/// Property-style sweep over seeds and K values for all 12 algorithms.
+#[test]
+fn equivalence_sweep_all_algorithms() {
+    let mut failures = Vec::new();
+    for trial in 0..3u64 {
+        let ds = dataset(350 + 150 * trial as usize, 500 + trial);
+        let k = 8 + 4 * trial as usize;
+        let cfg = ClusterConfig {
+            k,
+            seed: 900 + trial,
+            ..Default::default()
+        };
+        for &kind in AlgoKind::all() {
+            if kind == AlgoKind::Mivi {
+                continue;
+            }
+            let rep = audit_equivalence(kind, &ds, &cfg, 1e-9);
+            if !rep.passed() {
+                failures.push(format!(
+                    "trial {trial} K={k} {}: {} divergences",
+                    rep.algo, rep.divergences
+                ));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{failures:?}");
+}
+
+/// Accelerations must also agree on the number of iterations (identical
+/// trajectories, not just identical fixed points).
+#[test]
+fn trajectory_lengths_agree() {
+    let ds = dataset(500, 321);
+    let cfg = ClusterConfig {
+        k: 12,
+        seed: 77,
+        ..Default::default()
+    };
+    let base = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+    for kind in [AlgoKind::EsIcp, AlgoKind::TaIcp, AlgoKind::CsIcp, AlgoKind::Icp] {
+        let out = run_clustering(kind, &ds, &cfg);
+        assert_eq!(out.iterations(), base.iterations(), "{}", kind.name());
+        assert!(out.converged);
+        // Per-iteration change counts match exactly.
+        let ch_a: Vec<usize> = base.logs.iter().map(|l| l.changes).collect();
+        let ch_b: Vec<usize> = out.logs.iter().map(|l| l.changes).collect();
+        assert_eq!(ch_a, ch_b, "{}", kind.name());
+    }
+}
+
+/// UCI loader → clustering end-to-end on an in-memory bag-of-words file.
+#[test]
+fn uci_corpus_end_to_end() {
+    // Synthesize a corpus, serialize it to the UCI format, read it back,
+    // and verify the datasets match.
+    let c = generate(&tiny(31));
+    let mut text = format!(
+        "{}\n{}\n{}\n",
+        c.n_docs(),
+        c.n_terms,
+        c.docs.iter().map(|d| d.len()).sum::<usize>()
+    );
+    for (i, doc) in c.docs.iter().enumerate() {
+        for &(t, cnt) in doc {
+            text.push_str(&format!("{} {} {}\n", i + 1, t + 1, cnt));
+        }
+    }
+    let rt = read_uci_bow(text.as_bytes(), None).unwrap();
+    assert_eq!(rt.docs, c.docs);
+    let ds = build_dataset("uci", rt.n_terms, &rt.docs);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 4,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    assert!(out.converged);
+    assert!(out.objective > 0.0);
+}
+
+/// Clustering quality sanity: with planted topics, the solution should
+/// correlate with the ground truth (NMI well above random).
+#[test]
+fn recovers_planted_topics() {
+    let spec = CorpusSpec {
+        n_docs: 600,
+        n_topics: 10,
+        anchor_prob: 0.5,
+        ..tiny(88)
+    };
+    let c = generate(&spec);
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 3,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let score = nmi(&out.assign, &c.labels);
+    assert!(score > 0.5, "NMI vs planted topics = {score}");
+}
+
+/// Preset workloads materialize with the advertised statistics.
+#[test]
+fn preset_statistics() {
+    let p = preset("pubmed-like", 7, Some(0.05)).unwrap();
+    let ds = p.dataset();
+    assert!(ds.n() > 500);
+    // K ≈ N/100 as in the paper's setting.
+    assert!((p.k as f64 - ds.n() as f64 / 100.0).abs() <= 1.0 + ds.n() as f64 * 0.01);
+    // Sparse in the paper's sense.
+    assert!(ds.sparsity_indicator() < 0.1);
+}
+
+/// Objective is non-decreasing and CPR non-increasing (late vs early)
+/// for the filter algorithms on a moderately sized run.
+#[test]
+fn run_invariants() {
+    let ds = dataset(700, 654);
+    let cfg = ClusterConfig {
+        k: 14,
+        seed: 21,
+        ..Default::default()
+    };
+    for kind in [AlgoKind::EsIcp, AlgoKind::CsIcp, AlgoKind::TaIcp] {
+        let (out, summary) = run_and_summarize(kind, &ds, &cfg);
+        for w in out.logs.windows(2) {
+            assert!(
+                w[1].objective >= w[0].objective - 1e-9,
+                "{}: objective decreased",
+                kind.name()
+            );
+        }
+        let early = out.logs[1].cpr; // after filters activate
+        let late = out.logs.last().unwrap().cpr;
+        assert!(
+            late <= early + 1e-12,
+            "{}: CPR grew {early} -> {late}",
+            kind.name()
+        );
+        assert!(summary.converged);
+    }
+}
+
+/// The ES upper bound is valid: for random (object, centroid) pairs the
+/// bound from the folded index is ≥ the exact similarity.
+#[test]
+fn es_bound_validity_property() {
+    use skm::index::EsIndex;
+    let ds = dataset(400, 777);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 5,
+        max_iters: 3,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, 10, None, None);
+    let d = ds.d();
+    let mut rng = Pcg32::new(2);
+    for &t_frac in &[0.0, 0.5, 0.8, 0.95] {
+        let t_th = (d as f64 * t_frac) as usize;
+        let v_th = 0.05 + rng.next_f64() * 0.2;
+        let idx = EsIndex::build(&upd.means, t_th, v_th);
+        let mut rho = vec![0.0f64; 10];
+        for _ in 0..50 {
+            let i = rng.gen_range(ds.n() as u32) as usize;
+            let (ts, vs) = ds.x.row(i);
+            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let y_base: f64 = vs[p0..].iter().map(|u| u * v_th).sum();
+            rho.iter_mut().for_each(|r| *r = y_base);
+            for (&t, &u) in ts[..p0].iter().zip(&vs[..p0]) {
+                let (ids, vals) = idx.r1.postings(t as usize);
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += u * v_th * v;
+                }
+            }
+            for (&t, &u) in ts[p0..].iter().zip(&vs[p0..]) {
+                let (ids, vals) = idx.r2.postings(t as usize);
+                for (&c, &v) in ids.iter().zip(vals) {
+                    rho[c as usize] += u * v_th * v;
+                }
+            }
+            for j in 0..10 {
+                let exact = ds.x.row_dot_dense(i, &upd.means.m.row_dense(j));
+                assert!(
+                    rho[j] >= exact - 1e-9,
+                    "bound violated: t_th={t_th} v_th={v_th} i={i} j={j}: {} < {exact}",
+                    rho[j]
+                );
+            }
+        }
+    }
+}
+
+/// Zipf + concentration UCs hold on the preset corpora (the premise of
+/// the whole design).
+#[test]
+fn ucs_hold_on_presets() {
+    let p = preset("pubmed-like", 7, Some(0.03)).unwrap();
+    let ds = p.dataset();
+    let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
+    let (alpha, r2) = ucs::zipf_exponent(&ucs::rank_frequency(&df), 80);
+    assert!(alpha > 0.3 && r2 > 0.75, "alpha={alpha} r2={r2}");
+
+    let cfg = ClusterConfig {
+        k: p.k.max(4),
+        seed: 1,
+        max_iters: 15,
+        ..Default::default()
+    };
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let upd = update_means(&ds, &out.assign, cfg.k, None, None);
+    assert!(ucs::concentration_count(&upd.means) > 0);
+    let curve = ucs::cps_curve(&ds, &upd.means, &out.assign, 50);
+    assert!(curve.value_at(0.5) > 0.7, "CPS(0.5)={}", curve.value_at(0.5));
+}
+
+/// PJRT runtime end-to-end (requires `make artifacts`; skips otherwise —
+/// the Makefile `test` target always builds artifacts first).
+#[test]
+fn pjrt_runtime_integration() {
+    use skm::runtime::{PjrtRuntime, BLOCK_B, BLOCK_D, BLOCK_K};
+    let dir = PjrtRuntime::default_dir();
+    if !dir.join("kmeans_step.hlo.txt").exists() {
+        eprintln!("skipping pjrt_runtime_integration: artifacts not built");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&dir).expect("client");
+    // Random unit rows; iterate the dense step and check the objective
+    // is monotone and assignments stabilize.
+    let mut rng = Pcg32::new(99);
+    let mut make_rows = |rows: usize| {
+        let mut x = vec![0.0f32; rows * BLOCK_D];
+        for r in 0..rows {
+            let mut norm = 0.0f32;
+            for t in 0..BLOCK_D {
+                let v = rng.next_f64() as f32;
+                x[r * BLOCK_D + t] = v;
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            for t in 0..BLOCK_D {
+                x[r * BLOCK_D + t] /= norm;
+            }
+        }
+        x
+    };
+    let x = make_rows(BLOCK_B);
+    let mut m = make_rows(BLOCK_K);
+    let mut prev_obj = f32::NEG_INFINITY;
+    let mut last_assign = Vec::new();
+    for _ in 0..8 {
+        let (assign, new_m, obj) = rt.kmeans_step(&x, &m).expect("kmeans_step");
+        assert!(obj >= prev_obj - 1e-3, "objective decreased: {prev_obj} -> {obj}");
+        prev_obj = obj;
+        m = new_m;
+        last_assign = assign;
+    }
+    // Converged assignments are a valid labeling.
+    assert_eq!(last_assign.len(), BLOCK_B);
+    assert!(last_assign.iter().all(|&a| (a as usize) < BLOCK_K));
+}

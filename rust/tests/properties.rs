@@ -1,0 +1,257 @@
+//! Property-based tests (hand-rolled generators — no proptest crate in
+//! the offline environment): randomized sweeps asserting structural
+//! invariants of the substrate and the coordinator state machine.
+
+use skm::algo::{run_clustering, seed_means, AlgoKind, ClusterConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::index::{membership_changes, update_means, InvIndex};
+use skm::metrics::{entropy, mutual_information, nmi};
+use skm::sparse::{build_dataset, dot_sorted, CsrMatrix};
+use skm::util::rng::Pcg32;
+use skm::util::stats::{fast_exp, quantile_sorted};
+
+/// Random sparse rows for CSR property tests.
+fn random_rows(rng: &mut Pcg32, n: usize, d: usize, max_nnz: usize) -> Vec<Vec<(u32, f64)>> {
+    (0..n)
+        .map(|_| {
+            let nnz = rng.gen_range(max_nnz as u32 + 1) as usize;
+            let cols = rng.sample_distinct(d, nnz.min(d));
+            cols.into_iter()
+                .map(|c| (c as u32, rng.next_f64() * 10.0 - 5.0))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_csr_roundtrip_row_access() {
+    let mut rng = Pcg32::new(42);
+    for trial in 0..30 {
+        let d = 5 + rng.gen_range(100) as usize;
+        let rows = random_rows(&mut rng, 20, d, 12);
+        let m = CsrMatrix::from_rows(d, &rows);
+        for (i, row) in rows.iter().enumerate() {
+            let dense = m.row_dense(i);
+            let mut expect = vec![0.0; d];
+            for &(c, v) in row {
+                expect[c as usize] += v;
+            }
+            for c in 0..d {
+                assert!(
+                    (dense[c] - expect[c]).abs() < 1e-12,
+                    "trial {trial} row {i} col {c}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dot_sorted_matches_dense_dot() {
+    let mut rng = Pcg32::new(7);
+    for _ in 0..50 {
+        let d = 10 + rng.gen_range(80) as usize;
+        let rows = random_rows(&mut rng, 2, d, 15);
+        let m = CsrMatrix::from_rows(d, &rows);
+        let (ta, va) = m.row(0);
+        let (tb, vb) = m.row(1);
+        let sparse = dot_sorted(ta, va, tb, vb);
+        let dense: f64 = m
+            .row_dense(0)
+            .iter()
+            .zip(m.row_dense(1).iter())
+            .map(|(a, b)| a * b)
+            .sum();
+        assert!((sparse - dense).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_permute_columns_preserves_dots() {
+    let mut rng = Pcg32::new(13);
+    for _ in 0..20 {
+        let d = 8 + rng.gen_range(40) as usize;
+        let rows = random_rows(&mut rng, 6, d, 10);
+        let m = CsrMatrix::from_rows(d, &rows);
+        let mut perm: Vec<u32> = (0..d as u32).collect();
+        rng.shuffle(&mut perm);
+        let mut p = m.clone();
+        p.permute_columns(&perm);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!(
+                    (m.row_dot(i, j) - p.row_dot(i, j)).abs() < 1e-9,
+                    "dot not invariant under column permutation"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_inverted_index_is_transpose() {
+    // For random mean sets: reading the index column-wise reconstructs
+    // exactly the mean matrix.
+    let mut rng = Pcg32::new(99);
+    for _ in 0..10 {
+        let c = generate(&CorpusSpec {
+            n_docs: 100 + rng.gen_range(150) as usize,
+            ..tiny(rng.next_u64())
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let k = 3 + rng.gen_range(6) as usize;
+        let assign: Vec<u32> = (0..ds.n()).map(|_| rng.gen_range(k as u32)).collect();
+        let upd = update_means(&ds, &assign, k, None, None);
+        let idx = InvIndex::build(&upd.means, ds.d());
+        let mut total = 0usize;
+        for s in 0..ds.d() {
+            let (ids, vals) = idx.postings(s);
+            for (&j, &v) in ids.iter().zip(vals) {
+                assert_eq!(upd.means.m.row_dense(j as usize)[s], v);
+                total += 1;
+            }
+        }
+        assert_eq!(total, upd.means.m.nnz());
+    }
+}
+
+#[test]
+fn prop_membership_changes_symmetric_difference() {
+    let mut rng = Pcg32::new(5);
+    for _ in 0..30 {
+        let n = 50;
+        let k = 6;
+        let a: Vec<u32> = (0..n).map(|_| rng.gen_range(k)).collect();
+        let mut b = a.clone();
+        // Flip a random subset.
+        let flips = rng.gen_range(10) as usize;
+        for _ in 0..flips {
+            let i = rng.gen_range(n) as usize;
+            b[i] = rng.gen_range(k);
+        }
+        let ch = membership_changes(&a, &b, k as usize);
+        for j in 0..k as usize {
+            let members_a: Vec<usize> =
+                (0..n as usize).filter(|&i| a[i] == j as u32).collect();
+            let members_b: Vec<usize> =
+                (0..n as usize).filter(|&i| b[i] == j as u32).collect();
+            assert_eq!(
+                ch[j],
+                members_a != members_b,
+                "changed flag wrong for cluster {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_update_means_objective_equals_rho_sum() {
+    let mut rng = Pcg32::new(21);
+    for _ in 0..8 {
+        let c = generate(&CorpusSpec {
+            n_docs: 120,
+            ..tiny(rng.next_u64())
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let k = 5;
+        let assign: Vec<u32> = (0..ds.n()).map(|_| rng.gen_range(k)).collect();
+        let upd = update_means(&ds, &assign, k as usize, None, None);
+        let sum: f64 = upd.rho.iter().sum();
+        assert!((upd.objective - sum).abs() < 1e-9);
+        // ρ is a cosine similarity: bounded by 1 + ε.
+        assert!(upd.rho.iter().all(|&r| (-1e-9..=1.0 + 1e-9).contains(&r)));
+    }
+}
+
+#[test]
+fn prop_seeding_rows_are_dataset_rows() {
+    let c = generate(&tiny(77));
+    let ds = build_dataset("t", c.n_terms, &c.docs);
+    for seed in 0..5u64 {
+        let means = seed_means(&ds, 9, seed);
+        for j in 0..9 {
+            let (ts, vs) = means.m.row(j);
+            // Each seed mean equals some dataset row exactly.
+            let found = (0..ds.n()).any(|i| ds.x.row(i) == (ts, vs));
+            assert!(found, "seed mean {j} is not a dataset row");
+        }
+    }
+}
+
+#[test]
+fn prop_nmi_information_inequalities() {
+    // I(X;Y) <= min(H(X), H(Y)); NMI in [0, 1]; NMI(x,x) = 1.
+    let mut rng = Pcg32::new(31);
+    for _ in 0..40 {
+        let n = 200;
+        let ka = 1 + rng.gen_range(8);
+        let kb = 1 + rng.gen_range(8);
+        let a: Vec<u32> = (0..n).map(|_| rng.gen_range(ka)).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.gen_range(kb)).collect();
+        let i = mutual_information(&a, &b);
+        assert!(i >= -1e-12);
+        assert!(i <= entropy(&a).min(entropy(&b)) + 1e-9);
+        let s = nmi(&a, &b);
+        assert!((0.0..=1.0).contains(&s));
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-9 || entropy(&a) == 0.0);
+    }
+}
+
+#[test]
+fn prop_fast_exp_bounded_error_random() {
+    let mut rng = Pcg32::new(55);
+    for _ in 0..10_000 {
+        let x = rng.next_f64() * 80.0 - 40.0;
+        let rel = (fast_exp(x) - x.exp()).abs() / x.exp();
+        assert!(rel < 1e-3, "x={x} rel={rel}");
+    }
+}
+
+#[test]
+fn prop_quantile_monotone() {
+    let mut rng = Pcg32::new(61);
+    for _ in 0..20 {
+        let mut xs: Vec<f64> = (0..100).map(|_| rng.next_f64() * 100.0).collect();
+        xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for q in 0..=20 {
+            let v = quantile_sorted(&xs, q as f64 / 20.0);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+        assert_eq!(quantile_sorted(&xs, 0.0), xs[0]);
+        assert_eq!(quantile_sorted(&xs, 1.0), xs[99]);
+    }
+}
+
+/// Coordinator state-machine invariant: per-iteration change counts are
+/// positive until the final iteration, where they are zero; CPR stays in
+/// [0, 1]; memory reports are stable.
+#[test]
+fn prop_coordinator_iteration_state() {
+    let mut rng = Pcg32::new(71);
+    for _ in 0..4 {
+        let c = generate(&CorpusSpec {
+            n_docs: 200 + rng.gen_range(200) as usize,
+            ..tiny(rng.next_u64())
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 6 + rng.gen_range(6) as usize,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        assert!(out.converged);
+        let logs = &out.logs;
+        for (idx, l) in logs.iter().enumerate() {
+            assert!((0.0..=1.0 + 1e-12).contains(&l.cpr), "CPR out of range");
+            assert!(l.mem_bytes > 0);
+            if idx + 1 < logs.len() {
+                assert!(l.changes > 0, "premature zero-change iteration");
+            } else {
+                assert_eq!(l.changes, 0, "final iteration must be stable");
+            }
+        }
+    }
+}
