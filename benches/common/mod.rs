@@ -3,10 +3,19 @@
 //! standard header each harness prints.
 //!
 //! Environment knobs (all optional):
-//!   SKM_SCALE  — multiply the preset's corpus size (default 1.0)
-//!   SKM_SEED   — clustering seed (default 42)
-//!   SKM_OUT    — output dir (default target/experiments)
+//!   SKM_SCALE   — multiply the preset's corpus size (default 1.0)
+//!   SKM_SEED    — clustering seed (default 42)
+//!   SKM_OUT     — output dir (default target/experiments)
+//!   SKM_THREADS — sharded-engine worker threads (default 1 = serial)
+//!   SKM_SHARD   — objects per shard (default 0 = one shard per thread)
+//!
+//! `SKM_THREADS`/`SKM_SHARD` flow into every harness through
+//! `coordinator::run_and_summarize` (harnesses driving
+//! `run_clustering_with` directly can use `ParConfig::from_env`); the
+//! sharded engine is bit-identical to the serial path, so the knobs
+//! change elapsed time only.
 
+use skm::algo::ParConfig;
 use skm::coordinator::{preset, Preset};
 use skm::sparse::Dataset;
 use skm::util::io::Table;
@@ -54,6 +63,14 @@ pub fn header(exp: &str, what: &str, ds: &Dataset, k: usize) {
         ds.d(),
         ds.avg_terms()
     );
+    let par = ParConfig::from_env();
+    if par.is_parallel() {
+        println!(
+            "sharded engine: {} threads, shard size {} (bit-identical to serial)",
+            par.threads,
+            par.shard_size(ds.n())
+        );
+    }
     println!("==================================================================");
 }
 

@@ -74,7 +74,13 @@ fn main() {
         eprintln!("artifacts not built — run `make artifacts` first");
         std::process::exit(1);
     }
-    let mut rt = PjrtRuntime::new(&dir).expect("PJRT client");
+    let mut rt = match PjrtRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime unavailable: {e:#}");
+            std::process::exit(1);
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
 
     let mut rng = Pcg32::new(2024);
@@ -107,6 +113,14 @@ fn main() {
         m_pjrt = new_m;
         m_rust = new_m_rust;
     }
-    println!("\n12 dense k-means steps executed through the AOT Pallas/JAX artifact ✓");
-    println!("Rust reference and PJRT trajectory agree ✓");
+    println!(
+        "\n12 dense k-means steps executed through the runtime executor ({}) ✓",
+        rt.platform()
+    );
+    println!("Rust reference and runtime trajectory agree ✓");
+    println!(
+        "note: on the native-cpu fallback this cross-checks the runtime executor, \
+         not the HLO artifact itself — relink the XLA backend for the full \
+         three-layer signal"
+    );
 }

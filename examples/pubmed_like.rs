@@ -98,7 +98,13 @@ fn main() {
         return;
     }
     println!("\n== PJRT dense cross-check (Layer 1+2 from Rust) ==");
-    let mut rt = PjrtRuntime::new(&dir).expect("PJRT client");
+    let mut rt = match PjrtRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("[skip] runtime unavailable: {e:#}");
+            return;
+        }
+    };
     println!("platform: {}", rt.platform());
 
     // Sample BLOCK_B objects and BLOCK_K centroids; project both onto the

@@ -8,8 +8,12 @@
 //! squared-mean-inverted index — a second K-length accumulator array
 //! whose traffic is the cache-miss source the paper measures — and needs
 //! one square root per scanned centroid.
+//!
+//! The per-object routine lives in [`CsAssigner::assign_range`] and is
+//! shared verbatim by the serial and sharded parallel paths (see
+//! `algo::par`).
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::CsIndex;
 use crate::metrics::counters::OpCounters;
 use crate::sparse::Dataset;
@@ -21,10 +25,8 @@ pub struct CsAssigner {
     /// ‖x_i^p‖₂ over terms ≥ t_th (Eq. 20), precomputed per object when
     /// the preset t_th activates.
     xp_norm: Vec<f64>,
-    rho: Vec<f64>,
-    /// On-the-fly squared mean norms in the object subspace (Eq. 21).
-    normsq: Vec<f64>,
-    z: Vec<u32>,
+    /// K at the last rebuild (per-shard scratch accounting: ρ + norms).
+    k: usize,
 }
 
 impl CsAssigner {
@@ -34,9 +36,7 @@ impl CsAssigner {
             t_th: ds.d(),
             idx: None,
             xp_norm: vec![0.0; ds.n()],
-            rho: Vec::new(),
-            normsq: Vec::new(),
-            z: Vec::new(),
+            k: 0,
         }
     }
 
@@ -47,43 +47,39 @@ impl CsAssigner {
             self.xp_norm[i] = vs[p0..].iter().map(|v| v * v).sum::<f64>().sqrt();
         }
     }
-}
 
-impl Assigner for CsAssigner {
-    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
-        if st.iter >= 2 {
-            let new_t = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
-            if new_t != self.t_th {
-                self.t_th = new_t;
-                self.compute_xp_norms(ds);
-            }
-        }
-        self.idx = Some(CsIndex::build(&st.means, self.t_th));
-        self.rho.resize(st.k, 0.0);
-        self.normsq.resize(st.k, 0.0);
-    }
-
-    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+    /// Assignment of objects `[lo, lo + out.len())`. `out` holds the
+    /// previous assignments on entry and the new ones on exit.
+    fn assign_range(
+        &self,
+        ds: &Dataset,
+        k: usize,
+        rho_prev: &[f64],
+        xstate: &[bool],
+        lo: usize,
+        out: &mut [u32],
+    ) -> (OpCounters, usize) {
         let idx = self.idx.as_ref().expect("rebuild not called");
-        let k = st.k;
-        let n = ds.n();
         let t_th = self.t_th;
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
+        // Shard-local scratch.
+        let mut rho = vec![0.0f64; k];
+        let mut normsq = vec![0.0f64; k];
+        let mut z: Vec<u32> = Vec::new();
 
-        for i in 0..n {
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
             let (ts, us) = ds.x.row(i);
             let p0 = ts.partition_point(|&t| (t as usize) < t_th);
 
-            let rho = &mut self.rho;
-            let normsq = &mut self.normsq;
             rho.iter_mut().for_each(|r| *r = 0.0);
             normsq.iter_mut().for_each(|v| *v = 0.0);
-            self.z.clear();
-            let rho_max0 = st.rho[i];
+            z.clear();
+            let rho_max0 = rho_prev[i];
             let mut mult = 0u64;
 
-            let icp_active = self.use_icp && st.xstate[i];
+            let icp_active = self.use_icp && xstate[i];
 
             // Region 1 exact (Algorithm 11 lines 2–4).
             for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
@@ -120,7 +116,7 @@ impl Assigner for CsAssigner {
                     mult += 1;
                     counters.sqrts += 1;
                     if rho[j] + xp * normsq[j].sqrt() > rho_max0 {
-                        self.z.push(j as u32);
+                        z.push(j as u32);
                     }
                 }
             } else {
@@ -128,7 +124,7 @@ impl Assigner for CsAssigner {
                     mult += 1;
                     counters.sqrts += 1;
                     if rho[j] + xp * normsq[j].sqrt() > rho_max0 {
-                        self.z.push(j as u32);
+                        z.push(j as u32);
                     }
                 }
             }
@@ -136,18 +132,18 @@ impl Assigner for CsAssigner {
             // Verification: exact `s ≥ t_th` contribution via the full
             // partial index (same structure as Algorithm 4's phase).
             let nth = (ts.len() - p0) as u64;
-            mult += self.z.len() as u64 * nth;
-            counters.cold_touches += self.z.len() as u64 * nth;
+            mult += z.len() as u64 * nth;
+            counters.cold_touches += z.len() as u64 * nth;
             for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
                 let row = idx.partial.row(t as usize);
-                for &j in &self.z {
+                for &j in &z {
                     rho[j as usize] += u * row[j as usize];
                 }
             }
 
-            let mut amax = st.assign[i];
+            let mut amax = *slot;
             let mut rmax = rho_max0;
-            for &j in &self.z {
+            for &j in &z {
                 if rho[j as usize] > rmax {
                     rmax = rho[j as usize];
                     amax = j;
@@ -155,20 +151,65 @@ impl Assigner for CsAssigner {
             }
 
             counters.mult += mult;
-            counters.candidates += self.z.len() as u64;
-            counters.exact_sims += self.z.len() as u64;
-            if amax != st.assign[i] {
-                st.assign[i] = amax;
+            counters.candidates += z.len() as u64;
+            counters.exact_sims += z.len() as u64;
+            if amax != *slot {
+                *slot = amax;
                 changes += 1;
             }
         }
         (counters, changes)
     }
+}
+
+impl Assigner for CsAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        if st.iter >= 2 {
+            let new_t = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
+            if new_t != self.t_th {
+                self.t_th = new_t;
+                self.compute_xp_norms(ds);
+            }
+        }
+        self.idx = Some(CsIndex::build(&st.means, self.t_th));
+        self.k = st.k;
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        self.assign_range(ds, *k, rho, xstate, 0, assign)
+    }
+
+    fn assign_par(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let this = &*self;
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
+        par::run_sharded(cfg, assign, |lo, chunk| {
+            this.assign_range(ds, k, rho, xstate, lo, chunk)
+        })
+    }
 
     fn mem_bytes(&self) -> usize {
         self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
             + self.xp_norm.len() * 8
-            + (self.rho.len() + self.normsq.len()) * 8
+            + self.k * 2 * 8
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {
@@ -178,7 +219,7 @@ impl Assigner for CsAssigner {
 
 #[cfg(test)]
 mod tests {
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
     use crate::corpus::{generate, tiny, CorpusSpec};
     use crate::sparse::build_dataset;
 
@@ -219,5 +260,23 @@ mod tests {
         assert!(cs.total_mult() < base.total_mult());
         let sq: u64 = cs.logs.iter().map(|l| l.counters.sqrts).sum();
         assert!(sq > 0);
+    }
+
+    #[test]
+    fn sharded_cs_bit_identical() {
+        let c = generate(&CorpusSpec {
+            n_docs: 500,
+            ..tiny(90)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 2,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::CsIcp, &ds, &cfg);
+        let par = run_clustering_with(AlgoKind::CsIcp, &ds, &cfg, &ParConfig::with_threads(5));
+        assert_eq!(serial.assign, par.assign);
+        assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
     }
 }

@@ -12,8 +12,14 @@
 //! indexing into the dense mean array — the cache-hostile access pattern
 //! (plus the per-group irregular branches) that makes Ding+ slower than
 //! MIVI despite ~4× fewer multiplications (Table II).
+//!
+//! Sharding: the per-object bound matrix `gub` (N × G, row-major per
+//! object) is split along the same object-shard boundaries as the
+//! assignment vector (`par::run_sharded_with`), so each worker owns its
+//! objects' bounds exclusively and the sharded path is bit-identical to
+//! the serial one.
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::metrics::counters::OpCounters;
 use crate::sparse::Dataset;
 
@@ -39,9 +45,7 @@ impl DingAssigner {
     pub fn new(ds: &Dataset, cfg: &ClusterConfig) -> Self {
         let k = cfg.k;
         let n_groups = (k / 10).clamp(1, k);
-        let group_of: Vec<u32> = (0..k)
-            .map(|j| ((j * n_groups) / k) as u32)
-            .collect();
+        let group_of: Vec<u32> = (0..k).map(|j| ((j * n_groups) / k) as u32).collect();
         let mut group_start = vec![0usize; n_groups + 1];
         for &g in &group_of {
             group_start[g as usize + 1] += 1;
@@ -80,6 +84,136 @@ impl DingAssigner {
             s += u * row[t as usize];
         }
         s
+    }
+
+    /// Assignment of objects `[lo, lo + out.len())`; `gub` is the bound
+    /// sub-matrix for exactly those objects (`out.len() × n_groups`).
+    fn assign_range(
+        &self,
+        ds: &Dataset,
+        first_pass: bool,
+        rho_prev: &[f64],
+        lo: usize,
+        out: &mut [u32],
+        gub: &mut [f64],
+    ) -> (OpCounters, usize) {
+        let ng = self.n_groups;
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+
+        if first_pass {
+            // Iteration 1: exact full evaluation, recording per-group
+            // maxima to initialize the bounds. The group that ends up
+            // holding the assigned centroid gets an infinite bound: all
+            // other groups' bounds are valid for "best excluding the
+            // assigned centroid" because the assigned centroid is not in
+            // them (the Yinyang own-group refinement).
+            for (off, slot) in out.iter_mut().enumerate() {
+                let i = lo + off;
+                let (ts, _) = ds.x.row(i);
+                let nt = ts.len() as u64;
+                let mut amax = *slot;
+                let mut rmax = rho_prev[i];
+                for g in 0..ng {
+                    let mut gmax = f64::NEG_INFINITY;
+                    for j in self.group_start[g]..self.group_start[g + 1] {
+                        let s = self.exact_sim(ds, i, j);
+                        counters.mult += nt;
+                        counters.cold_touches += nt;
+                        if s > gmax {
+                            gmax = s;
+                        }
+                        if s > rmax {
+                            rmax = s;
+                            amax = j as u32;
+                        }
+                    }
+                    gub[off * ng + g] = gmax;
+                }
+                gub[off * ng + self.group_of[amax as usize] as usize] = f64::INFINITY;
+                counters.candidates += self.k as u64;
+                counters.exact_sims += self.k as u64;
+                if amax != *slot {
+                    *slot = amax;
+                    changes += 1;
+                }
+            }
+            return (counters, changes);
+        }
+
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
+            let (ts, _) = ds.x.row(i);
+            let nt = ts.len() as u64;
+            // The exact own similarity is ρ from the update step; bounds
+            // are for "best in group excluding the assigned centroid".
+            let a0 = *slot;
+            let own = rho_prev[i];
+            let mut amax = a0;
+            let mut rmax = own;
+            let base = off * ng;
+            for g in 0..ng {
+                // Carry the bound across the mean update.
+                gub[base + g] += self.group_drift[g];
+                counters.irregular_branches += 1;
+                if gub[base + g] <= rmax {
+                    continue; // group pruned
+                }
+                // Evaluate the group exactly and tighten its bound
+                // (excluding the assigned centroid, whose similarity is
+                // already known exactly).
+                let mut gmax = f64::NEG_INFINITY;
+                for j in self.group_start[g]..self.group_start[g + 1] {
+                    if j as u32 == a0 {
+                        continue;
+                    }
+                    let s = self.exact_sim(ds, i, j);
+                    counters.mult += nt;
+                    counters.cold_touches += nt;
+                    counters.exact_sims += 1;
+                    counters.candidates += 1;
+                    if s > gmax {
+                        gmax = s;
+                    }
+                    if s > rmax {
+                        rmax = s;
+                        amax = j as u32;
+                    }
+                }
+                gub[base + g] = gmax;
+            }
+            if amax != a0 {
+                // The old centroid is no longer excluded from its group's
+                // bound; invalidate so the next iteration re-evaluates.
+                gub[base + self.group_of[a0 as usize] as usize] = f64::INFINITY;
+                *slot = amax;
+                changes += 1;
+            }
+        }
+        (counters, changes)
+    }
+
+    /// Shared serial/parallel driver: splits `gub` along the shard
+    /// boundaries and runs [`DingAssigner::assign_range`] per shard.
+    fn assign_with(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let first_pass = !self.first_pass_done;
+        let mut gub = std::mem::take(&mut self.gub);
+        let result = {
+            let this = &*self;
+            let IterState { assign, rho, .. } = st;
+            let rho = &rho[..];
+            par::run_sharded_with(cfg, assign, &mut gub, this.n_groups, |lo, chunk, g| {
+                this.assign_range(ds, first_pass, rho, lo, chunk, g)
+            })
+        };
+        self.gub = gub;
+        self.first_pass_done = true;
+        result
     }
 }
 
@@ -120,102 +254,16 @@ impl Assigner for DingAssigner {
     }
 
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
-        let n = ds.n();
-        let mut counters = OpCounters::new();
-        let mut changes = 0usize;
-        let nt_avg = ds.x.nnz() as u64 / n.max(1) as u64;
-        let _ = nt_avg;
+        self.assign_with(ds, st, &ParConfig::serial())
+    }
 
-        if !self.first_pass_done {
-            // Iteration 1: exact full evaluation, recording per-group
-            // maxima to initialize the bounds. The group that ends up
-            // holding the assigned centroid gets an infinite bound: all
-            // other groups' bounds are valid for "best excluding the
-            // assigned centroid" because the assigned centroid is not in
-            // them (the Yinyang own-group refinement).
-            for i in 0..n {
-                let (ts, _) = ds.x.row(i);
-                let nt = ts.len() as u64;
-                let mut amax = st.assign[i];
-                let mut rmax = st.rho[i];
-                for g in 0..self.n_groups {
-                    let mut gmax = f64::NEG_INFINITY;
-                    for j in self.group_start[g]..self.group_start[g + 1] {
-                        let s = self.exact_sim(ds, i, j);
-                        counters.mult += nt;
-                        counters.cold_touches += nt;
-                        if s > gmax {
-                            gmax = s;
-                        }
-                        if s > rmax {
-                            rmax = s;
-                            amax = j as u32;
-                        }
-                    }
-                    self.gub[i * self.n_groups + g] = gmax;
-                }
-                self.gub[i * self.n_groups + self.group_of[amax as usize] as usize] =
-                    f64::INFINITY;
-                counters.candidates += self.k as u64;
-                counters.exact_sims += self.k as u64;
-                if amax != st.assign[i] {
-                    st.assign[i] = amax;
-                    changes += 1;
-                }
-            }
-            self.first_pass_done = true;
-            return (counters, changes);
-        }
-
-        for i in 0..n {
-            let (ts, _) = ds.x.row(i);
-            let nt = ts.len() as u64;
-            // The exact own similarity is ρ from the update step; bounds
-            // are for "best in group excluding the assigned centroid".
-            let a0 = st.assign[i];
-            let own = st.rho[i];
-            let mut amax = a0;
-            let mut rmax = own;
-            let base = i * self.n_groups;
-            for g in 0..self.n_groups {
-                // Carry the bound across the mean update.
-                self.gub[base + g] += self.group_drift[g];
-                counters.irregular_branches += 1;
-                if self.gub[base + g] <= rmax {
-                    continue; // group pruned
-                }
-                // Evaluate the group exactly and tighten its bound
-                // (excluding the assigned centroid, whose similarity is
-                // already known exactly).
-                let mut gmax = f64::NEG_INFINITY;
-                for j in self.group_start[g]..self.group_start[g + 1] {
-                    if j as u32 == a0 {
-                        continue;
-                    }
-                    let s = self.exact_sim(ds, i, j);
-                    counters.mult += nt;
-                    counters.cold_touches += nt;
-                    counters.exact_sims += 1;
-                    counters.candidates += 1;
-                    if s > gmax {
-                        gmax = s;
-                    }
-                    if s > rmax {
-                        rmax = s;
-                        amax = j as u32;
-                    }
-                }
-                self.gub[base + g] = gmax;
-            }
-            if amax != a0 {
-                // The old centroid is no longer excluded from its group's
-                // bound; invalidate so the next iteration re-evaluates.
-                self.gub[base + self.group_of[a0 as usize] as usize] = f64::INFINITY;
-                st.assign[i] = amax;
-                changes += 1;
-            }
-        }
-        (counters, changes)
+    fn assign_par(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        self.assign_with(ds, st, cfg)
     }
 
     fn mem_bytes(&self) -> usize {
@@ -226,7 +274,7 @@ impl Assigner for DingAssigner {
 
 #[cfg(test)]
 mod tests {
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
     use crate::corpus::{generate, tiny, CorpusSpec};
     use crate::sparse::build_dataset;
 
@@ -278,5 +326,35 @@ mod tests {
         let dc: u64 = ding.logs.iter().map(|l| l.counters.cold_touches).sum();
         let bc: u64 = base.logs.iter().map(|l| l.counters.cold_touches).sum();
         assert!(dc > bc);
+    }
+
+    #[test]
+    fn sharded_ding_bit_identical() {
+        // Ding carries per-object bound state across iterations — the
+        // sharded path must preserve it exactly.
+        let c = generate(&CorpusSpec {
+            n_docs: 600,
+            n_topics: 24,
+            ..tiny(101)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 24,
+            seed: 8,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::Ding, &ds, &cfg);
+        for par in [
+            ParConfig::with_threads(4),
+            ParConfig {
+                threads: 2,
+                shard: 41,
+            },
+        ] {
+            let out = run_clustering_with(AlgoKind::Ding, &ds, &cfg, &par);
+            assert_eq!(serial.assign, out.assign, "{par:?}");
+            assert_eq!(serial.objective.to_bits(), out.objective.to_bits());
+            assert_eq!(serial.total_mult(), out.total_mult());
+        }
     }
 }

@@ -7,40 +7,116 @@
 //! enjoys (the paper measured ~10× the elapsed time at identical Mult,
 //! Table II) — DIVI exists to demonstrate that instruction counts alone
 //! do not determine speed.
+//!
+//! Sharding: object postings are stored ascending, so a shard restricts
+//! every posting list to its `[lo, hi)` sub-range with two binary
+//! searches and scatters into a shard-local accumulator. Each object's
+//! partial-similarity additions happen in exactly the serial order, so
+//! the sharded path is bit-identical to the serial one (see `algo::par`).
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
-use crate::index::ObjInvIndex;
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
+use crate::index::{MeanSet, ObjInvIndex};
 use crate::metrics::counters::OpCounters;
 use crate::sparse::Dataset;
 
 pub struct DiviAssigner {
     /// Object-inverted index (built once; objects never change).
     obj_idx: ObjInvIndex,
-    /// Mean rows (kept as the means CSR via IterState).
-    /// Per-object accumulator for the current mean.
-    score: Vec<f64>,
-    /// Epoch tags: `version[i] == cur_epoch` ⇔ `score[i]` is live. This
-    /// per-entry check is exactly the kind of irregular conditional the
-    /// AFM analysis blames for DIVI's branch behavior.
-    version: Vec<u32>,
-    touched: Vec<u32>,
-    epoch: u32,
-    /// Best similarity / argmax per object for the current iteration.
-    best: Vec<f64>,
-    besta: Vec<u32>,
+    /// Number of objects (scratch accounting).
+    n: usize,
 }
 
 impl DiviAssigner {
     pub fn new(ds: &Dataset) -> Self {
         Self {
             obj_idx: ObjInvIndex::build(&ds.x, 0),
-            score: vec![0.0; ds.n()],
-            version: vec![u32::MAX; ds.n()],
-            touched: Vec::new(),
-            epoch: 0,
-            best: vec![0.0; ds.n()],
-            besta: vec![0; ds.n()],
+            n: ds.n(),
         }
+    }
+
+    /// Assignment of objects `[lo, lo + out.len())`: the mean-major DIVI
+    /// loop nest over the shard's slice of every posting list.
+    fn assign_range(
+        &self,
+        k: usize,
+        means: &MeanSet,
+        rho_prev: &[f64],
+        lo: usize,
+        out: &mut [u32],
+    ) -> (OpCounters, usize) {
+        let len = out.len();
+        let hi = lo + len;
+        // Serial path (or a shard covering everything): skip the
+        // per-posting-list binary searches — DIVI's reference timings
+        // are the point of this algorithm, so the full-range hot loop
+        // must stay identical to the classic loop nest.
+        let full_range = lo == 0 && hi >= self.n;
+        let mut counters = OpCounters::new();
+
+        // Shard-local state, indexed by `i - lo`.
+        //
+        // `version[li] == epoch` ⇔ `score[li]` is live for the current
+        // mean. This per-entry check is exactly the kind of irregular
+        // conditional the AFM analysis blames for DIVI's branch behavior.
+        let mut score = vec![0.0f64; len];
+        let mut version = vec![u32::MAX; len];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut epoch = 0u32;
+        // Running best initialized with the previous-iteration thresholds
+        // (same tie-break semantics as MIVI's ρ_max).
+        let mut best = rho_prev[lo..hi].to_vec();
+        let mut besta = out.to_vec();
+
+        for j in 0..k {
+            epoch = epoch.wrapping_add(1);
+            touched.clear();
+            let (mts, mvs) = means.m.row(j);
+            let mut mult = 0u64;
+            for (&t, &v) in mts.iter().zip(mvs) {
+                let (oids, ovals) = self.obj_idx.postings(t as usize);
+                // Posting ids ascend: restrict to this shard's objects.
+                let (oids, ovals) = if full_range {
+                    (oids, ovals)
+                } else {
+                    let a = oids.partition_point(|&i| (i as usize) < lo);
+                    let b = oids.partition_point(|&i| (i as usize) < hi);
+                    (&oids[a..b], &ovals[a..b])
+                };
+                mult += oids.len() as u64;
+                // Scattered writes into the accumulator: the
+                // cache-hostile inner loop.
+                counters.cold_touches += oids.len() as u64;
+                for (&i, &u) in oids.iter().zip(ovals) {
+                    let li = i as usize - lo;
+                    if version[li] != epoch {
+                        version[li] = epoch;
+                        score[li] = 0.0;
+                        touched.push(li as u32);
+                    }
+                    counters.irregular_branches += 1;
+                    score[li] += u * v;
+                }
+            }
+            counters.mult += mult;
+            for &li in &touched {
+                let li = li as usize;
+                if score[li] > best[li] {
+                    best[li] = score[li];
+                    besta[li] = j as u32;
+                }
+            }
+        }
+        counters.candidates += (len * k) as u64;
+        counters.exact_sims += (len * k) as u64;
+
+        let mut changes = 0;
+        for (slot, &b) in out.iter_mut().zip(&besta) {
+            if b != *slot {
+                *slot = b;
+                changes += 1;
+            }
+        }
+        (counters, changes)
     }
 }
 
@@ -49,68 +125,45 @@ impl Assigner for DiviAssigner {
         // The object index never changes; means are read from `st`.
     }
 
-    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
-        let n = ds.n();
-        let k = st.k;
-        let mut counters = OpCounters::new();
+    fn assign(&mut self, _ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let IterState {
+            assign,
+            rho,
+            means,
+            k,
+            ..
+        } = st;
+        self.assign_range(*k, means, rho, 0, assign)
+    }
 
-        // Initialize the running best with the previous-iteration
-        // thresholds (same tie-break semantics as MIVI's ρ_max).
-        self.best.copy_from_slice(&st.rho);
-        self.besta.copy_from_slice(&st.assign);
-
-        for j in 0..k {
-            self.epoch = self.epoch.wrapping_add(1);
-            self.touched.clear();
-            let (mts, mvs) = st.means.m.row(j);
-            let mut mult = 0u64;
-            for (&t, &v) in mts.iter().zip(mvs) {
-                let (oids, ovals) = self.obj_idx.postings(t as usize);
-                mult += oids.len() as u64;
-                // Scattered writes into the N-length accumulator: the
-                // cache-hostile inner loop.
-                counters.cold_touches += oids.len() as u64;
-                for (&i, &u) in oids.iter().zip(ovals) {
-                    let i = i as usize;
-                    if self.version[i] != self.epoch {
-                        self.version[i] = self.epoch;
-                        self.score[i] = 0.0;
-                        self.touched.push(i as u32);
-                    }
-                    counters.irregular_branches += 1;
-                    self.score[i] += u * v;
-                }
-            }
-            counters.mult += mult;
-            for &i in &self.touched {
-                let i = i as usize;
-                if self.score[i] > self.best[i] {
-                    self.best[i] = self.score[i];
-                    self.besta[i] = j as u32;
-                }
-            }
-        }
-        counters.candidates += (n * k) as u64;
-        counters.exact_sims += (n * k) as u64;
-
-        let mut changes = 0;
-        for i in 0..n {
-            if self.besta[i] != st.assign[i] {
-                st.assign[i] = self.besta[i];
-                changes += 1;
-            }
-        }
-        (counters, changes)
+    fn assign_par(
+        &mut self,
+        _ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let this = &*self;
+        let IterState {
+            assign,
+            rho,
+            means,
+            k,
+            ..
+        } = st;
+        let (k, rho, means) = (*k, &rho[..], &*means);
+        par::run_sharded(cfg, assign, |lo, chunk| {
+            this.assign_range(k, means, rho, lo, chunk)
+        })
     }
 
     fn mem_bytes(&self) -> usize {
-        self.obj_idx.nnz() * 12 + self.score.len() * 17 // score+version+best+besta
+        self.obj_idx.nnz() * 12 + self.n * 17 // score+version+best+besta
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
     use crate::corpus::{generate, tiny};
     use crate::sparse::build_dataset;
 
@@ -133,5 +186,29 @@ mod tests {
         let ta: u64 = a.logs.iter().map(|l| l.counters.irregular_branches).sum();
         let tb: u64 = b.logs.iter().map(|l| l.counters.irregular_branches).sum();
         assert!(tb > ta);
+    }
+
+    #[test]
+    fn sharded_divi_bit_identical() {
+        let c = generate(&tiny(32));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 9,
+            seed: 5,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::Divi, &ds, &cfg);
+        for par in [
+            ParConfig::with_threads(4),
+            ParConfig {
+                threads: 3,
+                shard: 17,
+            },
+        ] {
+            let out = run_clustering_with(AlgoKind::Divi, &ds, &cfg, &par);
+            assert_eq!(serial.assign, out.assign, "{par:?}");
+            assert_eq!(serial.objective.to_bits(), out.objective.to_bits());
+            assert_eq!(serial.total_mult(), out.total_mult());
+        }
     }
 }

@@ -17,8 +17,14 @@
 //!
 //! The structural parameters are estimated by `estparams` at the first
 //! and second update steps (Algorithm 6 lines 17–19).
+//!
+//! The per-object routine lives in [`EsAssigner::assign_range`] and is
+//! shared verbatim by the serial and sharded parallel paths (bit-identical
+//! by construction; see `algo::par`). Estimation and index construction
+//! stay serial inside `rebuild` — the shared structured index is then
+//! read-only for the whole assignment step.
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::estparams::{estimate, EstConfig};
 use crate::index::{EsIndex, ObjInvIndex};
 use crate::metrics::counters::OpCounters;
@@ -52,9 +58,8 @@ pub struct EsAssigner {
     /// Partial object inverted index for EstParams (built lazily).
     xp: Option<ObjInvIndex>,
     estimations_done: usize,
-    // Scratch (per-object accumulators, length K).
-    rho: Vec<f64>,
-    z: Vec<u32>,
+    /// K at the last rebuild (per-shard scratch accounting).
+    k: usize,
 }
 
 impl EsAssigner {
@@ -68,8 +73,7 @@ impl EsAssigner {
             xs_scale: 1.0,
             xp: None,
             estimations_done: 0,
-            rho: Vec::new(),
-            z: Vec::new(),
+            k: 0,
         }
     }
 
@@ -120,59 +124,28 @@ impl EsAssigner {
         }
         self.xs_scale = self.v_th;
     }
-}
 
-impl Assigner for EsAssigner {
-    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
-        // EstParams at the first and second update steps (st.iter is the
-        // iteration of the NEXT assignment, so 2 and 3).
-        // The probability model behind EstParams assumes K > e (Eq. 28
-        // divides the tail mass 1/K; ln(K/e) must be positive). For very
-        // small K the filter cannot pay off anyway — keep the degenerate
-        // (D, 1.0) parameters, i.e. exact MIVI behavior.
-        if st.k >= 4 && (st.iter == 2 || st.iter == 3) && self.estimations_done < 2 {
-            let mut ec = self.est_config(ds, cfg);
-            if self.estimations_done == 0 {
-                // The first estimation exists only to cheapen iteration
-                // 2 (Appendix A): a coarse grid over a small object
-                // sample is enough. The second estimation (authoritative,
-                // used for the rest of the run) gets the full budget.
-                ec.n_candidates = (ec.n_candidates / 3).max(5);
-                ec.max_sample_objects = ec.max_sample_objects.min(1_500);
-            }
-            if self.xp.as_ref().map(|x| x.s_lo > ec.s_min.min(ec.fixed_t.unwrap_or(usize::MAX)))
-                .unwrap_or(true)
-            {
-                let lo = ec.fixed_t.map(|t| t.min(ec.s_min)).unwrap_or(ec.s_min);
-                self.xp = Some(ObjInvIndex::build(&ds.x, lo));
-            }
-            let est = estimate(ds, &st.means, &st.rho, self.xp.as_ref().unwrap(), &ec);
-            self.t_th = est.t_th;
-            self.v_th = est.v_th;
-            self.estimations_done += 1;
-            self.rescale_objects(ds);
-            if self.estimations_done == 2 {
-                // X^p is only needed by EstParams; release it for the
-                // long steady-state phase (its transient footprint is
-                // merged into the estimation cost, like the paper's
-                // elapsed-time accounting in footnote 7).
-                self.xp = None;
-            }
-        }
-        self.idx = Some(EsIndex::build(&st.means, self.t_th, self.v_th));
-        self.rho.resize(st.k, 0.0);
-    }
-
-    fn assign(&mut self, _ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+    /// Assignment of objects `[lo, lo + out.len())` against the shared
+    /// structured index. `out` holds the previous assignments on entry.
+    fn assign_range(
+        &self,
+        k: usize,
+        rho_prev: &[f64],
+        xstate: &[bool],
+        lo: usize,
+        out: &mut [u32],
+    ) -> (OpCounters, usize) {
         let idx = self.idx.as_ref().expect("rebuild not called");
-        let k = st.k;
-        let n = self.xs.n_rows();
         let t_th = self.t_th;
+        let use_icp = self.use_icp();
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        let use_icp = self.use_icp();
+        // Shard-local scratch (folded ρ accumulator + survivor list).
+        let mut rho = vec![0.0f64; k];
+        let mut z: Vec<u32> = Vec::new();
 
-        for i in 0..n {
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
             let (ts, us) = self.xs.row(i);
             // Split the object's terms at t_th (terms are ascending).
             let p0 = ts.partition_point(|&t| (t as usize) < t_th);
@@ -185,13 +158,12 @@ impl Assigner for EsAssigner {
             // Region-3 upper-bound mass; Region-2 entries store v−1 so
             // one multiply-add accumulates and retires simultaneously.
             // After the gathering phase, rho[j] IS the upper bound.
-            let rho = &mut self.rho;
             rho.iter_mut().for_each(|r| *r = y_base);
-            self.z.clear();
-            let rho_max0 = st.rho[i];
+            z.clear();
+            let rho_max0 = rho_prev[i];
             let mut mult = 0u64;
 
-            let icp_active = use_icp && st.xstate[i];
+            let icp_active = use_icp && xstate[i];
             if icp_active {
                 // G_1: moving blocks only (Algorithm 5).
                 for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
@@ -211,7 +183,7 @@ impl Assigner for EsAssigner {
                 // ES filter over moving centroids: a bare comparison.
                 for &j in &idx.moving_ids {
                     if rho[j as usize] > rho_max0 {
-                        self.z.push(j);
+                        z.push(j);
                     }
                 }
             } else {
@@ -232,7 +204,7 @@ impl Assigner for EsAssigner {
                 }
                 for (j, &r) in rho.iter().enumerate() {
                     if r > rho_max0 {
-                        self.z.push(j as u32);
+                        z.push(j as u32);
                     }
                 }
             }
@@ -241,17 +213,17 @@ impl Assigner for EsAssigner {
             // mass through the deficit index — rho lands exactly on the
             // similarity (Algorithm 4 l.12–13, folded).
             let nth = (ts.len() - p0) as u64;
-            mult += self.z.len() as u64 * nth;
+            mult += z.len() as u64 * nth;
             for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
                 let row = idx.partial.row(t as usize);
-                for &j in &self.z {
+                for &j in &z {
                     rho[j as usize] -= u * row[j as usize];
                 }
             }
 
-            let mut amax = st.assign[i];
+            let mut amax = *slot;
             let mut rmax = rho_max0;
-            for &j in &self.z {
+            for &j in &z {
                 if rho[j as usize] > rmax {
                     rmax = rho[j as usize];
                     amax = j;
@@ -259,14 +231,90 @@ impl Assigner for EsAssigner {
             }
 
             counters.mult += mult;
-            counters.candidates += self.z.len() as u64;
-            counters.exact_sims += self.z.len() as u64;
-            if amax != st.assign[i] {
-                st.assign[i] = amax;
+            counters.candidates += z.len() as u64;
+            counters.exact_sims += z.len() as u64;
+            if amax != *slot {
+                *slot = amax;
                 changes += 1;
             }
         }
         (counters, changes)
+    }
+}
+
+impl Assigner for EsAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        // EstParams at the first and second update steps (st.iter is the
+        // iteration of the NEXT assignment, so 2 and 3).
+        // The probability model behind EstParams assumes K > e (Eq. 28
+        // divides the tail mass 1/K; ln(K/e) must be positive). For very
+        // small K the filter cannot pay off anyway — keep the degenerate
+        // (D, 1.0) parameters, i.e. exact MIVI behavior.
+        if st.k >= 4 && (st.iter == 2 || st.iter == 3) && self.estimations_done < 2 {
+            let mut ec = self.est_config(ds, cfg);
+            if self.estimations_done == 0 {
+                // The first estimation exists only to cheapen iteration
+                // 2 (Appendix A): a coarse grid over a small object
+                // sample is enough. The second estimation (authoritative,
+                // used for the rest of the run) gets the full budget.
+                ec.n_candidates = (ec.n_candidates / 3).max(5);
+                ec.max_sample_objects = ec.max_sample_objects.min(1_500);
+            }
+            if self
+                .xp
+                .as_ref()
+                .map(|x| x.s_lo > ec.s_min.min(ec.fixed_t.unwrap_or(usize::MAX)))
+                .unwrap_or(true)
+            {
+                let lo = ec.fixed_t.map(|t| t.min(ec.s_min)).unwrap_or(ec.s_min);
+                self.xp = Some(ObjInvIndex::build(&ds.x, lo));
+            }
+            let est = estimate(ds, &st.means, &st.rho, self.xp.as_ref().unwrap(), &ec);
+            self.t_th = est.t_th;
+            self.v_th = est.v_th;
+            self.estimations_done += 1;
+            self.rescale_objects(ds);
+            if self.estimations_done == 2 {
+                // X^p is only needed by EstParams; release it for the
+                // long steady-state phase (its transient footprint is
+                // merged into the estimation cost, like the paper's
+                // elapsed-time accounting in footnote 7).
+                self.xp = None;
+            }
+        }
+        self.idx = Some(EsIndex::build(&st.means, self.t_th, self.v_th));
+        self.k = st.k;
+    }
+
+    fn assign(&mut self, _ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        self.assign_range(*k, rho, xstate, 0, assign)
+    }
+
+    fn assign_par(
+        &mut self,
+        _ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let this = &*self;
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
+        par::run_sharded(cfg, assign, |lo, chunk| {
+            this.assign_range(k, rho, xstate, lo, chunk)
+        })
     }
 
     fn mem_bytes(&self) -> usize {
@@ -276,7 +324,7 @@ impl Assigner for EsAssigner {
         // this matches the paper's Max MEM accounting where the partial
         // mean-inverted index is the differentiating term (§VI-D).
         let idx = self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0);
-        idx + self.rho.len() * 8
+        idx + self.k * 8
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {
@@ -286,7 +334,7 @@ impl Assigner for EsAssigner {
 
 #[cfg(test)]
 mod tests {
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
     use crate::corpus::{generate, tiny, CorpusSpec};
     use crate::sparse::build_dataset;
 
@@ -379,5 +427,24 @@ mod tests {
         // ES-ICP's (the Appendix-D Max MEM observation).
         let es = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
         assert!(out.max_mem_bytes > es.max_mem_bytes);
+    }
+
+    #[test]
+    fn sharded_es_icp_bit_identical() {
+        let ds = dataset(46);
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 4,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+        for threads in [2usize, 7] {
+            let par =
+                run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &ParConfig::with_threads(threads));
+            assert_eq!(serial.assign, par.assign, "threads={threads}");
+            assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
+            assert_eq!(serial.t_th, par.t_th);
+            assert_eq!(serial.v_th, par.v_th);
+        }
     }
 }

@@ -10,8 +10,12 @@
 //! and the argmax only over moving centroids — invariant centroids
 //! provably cannot win (their similarity is unchanged, and it already
 //! lost at the previous assignment).
+//!
+//! The per-object routine lives in [`MiviAssigner::assign_range`] and is
+//! shared verbatim by the serial path and the sharded parallel path, so
+//! the two are bit-identical by construction (see `algo::par`).
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::InvIndex;
 use crate::metrics::counters::OpCounters;
 use crate::sparse::Dataset;
@@ -19,8 +23,9 @@ use crate::sparse::Dataset;
 pub struct MiviAssigner {
     use_icp: bool,
     idx: Option<InvIndex>,
-    /// Similarity accumulator ρ (length K).
-    rho: Vec<f64>,
+    /// K at the last rebuild — sizes the per-shard similarity
+    /// accumulator (scratch accounting in `mem_bytes`).
+    k: usize,
 }
 
 impl MiviAssigner {
@@ -28,28 +33,31 @@ impl MiviAssigner {
         Self {
             use_icp,
             idx: None,
-            rho: Vec::new(),
+            k: 0,
         }
     }
-}
 
-impl Assigner for MiviAssigner {
-    fn rebuild(&mut self, ds: &Dataset, st: &IterState, _cfg: &ClusterConfig) {
-        self.idx = Some(InvIndex::build(&st.means, ds.d()));
-        self.rho.resize(st.k, 0.0);
-    }
-
-    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+    /// Assignment of objects `[lo, lo + out.len())`. `out` holds the
+    /// previous assignments on entry and the new ones on exit.
+    fn assign_range(
+        &self,
+        ds: &Dataset,
+        k: usize,
+        rho_prev: &[f64],
+        xstate: &[bool],
+        lo: usize,
+        out: &mut [u32],
+    ) -> (OpCounters, usize) {
         let idx = self.idx.as_ref().expect("rebuild not called");
-        let k = st.k;
-        let n = ds.n();
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        let rho = &mut self.rho;
+        // Similarity accumulator ρ (length K), local to the shard.
+        let mut rho = vec![0.0f64; k];
 
-        for i in 0..n {
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
             let (ts, vs) = ds.x.row(i);
-            let icp_active = self.use_icp && st.xstate[i];
+            let icp_active = self.use_icp && xstate[i];
 
             rho.iter_mut().for_each(|r| *r = 0.0);
             let mut mult = 0u64;
@@ -63,8 +71,8 @@ impl Assigner for MiviAssigner {
                         rho[c as usize] += u * v;
                     }
                 }
-                let mut amax = st.assign[i];
-                let mut rmax = st.rho[i];
+                let mut amax = *slot;
+                let mut rmax = rho_prev[i];
                 for &j in &idx.moving_ids {
                     if rho[j as usize] > rmax {
                         rmax = rho[j as usize];
@@ -74,8 +82,8 @@ impl Assigner for MiviAssigner {
                 counters.mult += mult;
                 counters.candidates += idx.moving_ids.len() as u64;
                 counters.exact_sims += idx.moving_ids.len() as u64;
-                if amax != st.assign[i] {
-                    st.assign[i] = amax;
+                if amax != *slot {
+                    *slot = amax;
                     changes += 1;
                 }
             } else {
@@ -87,8 +95,8 @@ impl Assigner for MiviAssigner {
                         rho[c as usize] += u * v;
                     }
                 }
-                let mut amax = st.assign[i];
-                let mut rmax = st.rho[i];
+                let mut amax = *slot;
+                let mut rmax = rho_prev[i];
                 for (j, &r) in rho.iter().enumerate() {
                     if r > rmax {
                         rmax = r;
@@ -98,24 +106,62 @@ impl Assigner for MiviAssigner {
                 counters.mult += mult;
                 counters.candidates += k as u64;
                 counters.exact_sims += k as u64;
-                if amax != st.assign[i] {
-                    st.assign[i] = amax;
+                if amax != *slot {
+                    *slot = amax;
                     changes += 1;
                 }
             }
         }
         (counters, changes)
     }
+}
+
+impl Assigner for MiviAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, _cfg: &ClusterConfig) {
+        self.idx = Some(InvIndex::build(&st.means, ds.d()));
+        self.k = st.k;
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        self.assign_range(ds, *k, rho, xstate, 0, assign)
+    }
+
+    fn assign_par(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let this = &*self;
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
+        par::run_sharded(cfg, assign, |lo, chunk| {
+            this.assign_range(ds, k, rho, xstate, lo, chunk)
+        })
+    }
 
     fn mem_bytes(&self) -> usize {
-        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0) + self.rho.len() * 8
+        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0) + self.k * 8
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig};
     use crate::corpus::{generate, tiny};
     use crate::sparse::build_dataset;
 
@@ -211,5 +257,20 @@ mod tests {
         assert_eq!(a.iterations(), b.iterations());
         // ICP must not do more multiplications than MIVI.
         assert!(b.total_mult() <= a.total_mult());
+    }
+
+    #[test]
+    fn sharded_mivi_bit_identical() {
+        let ds = toy();
+        let cfg = ClusterConfig {
+            k: 10,
+            seed: 6,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::Mivi, &ds, &cfg);
+        let par = run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &ParConfig::with_threads(4));
+        assert_eq!(serial.assign, par.assign);
+        assert_eq!(serial.iterations(), par.iterations());
+        assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
     }
 }

@@ -27,9 +27,12 @@ pub mod ding;
 pub mod divi;
 pub mod esicp;
 pub mod mivi;
+pub mod par;
 pub mod ta;
 
-use crate::index::{membership_changes, update_means_with_rho, MeanSet};
+pub use par::ParConfig;
+
+use crate::index::{membership_changes, update_means_with_rho_par, MeanSet};
 use crate::metrics::counters::OpCounters;
 use crate::sparse::{CsrMatrix, Dataset};
 use crate::util::rng::Pcg32;
@@ -218,7 +221,12 @@ impl ClusterOutput {
 }
 
 /// The assignment-step strategy implemented by each algorithm.
-pub trait Assigner {
+///
+/// `Sync` is a supertrait so a shared `&dyn Assigner` can be handed to
+/// the scoped worker threads of the sharded engine ([`par`]); every
+/// assigner's per-iteration structures are plain read-only data during
+/// the assignment step.
+pub trait Assigner: Sync {
     /// Rebuild per-iteration structures after an update step (or from the
     /// seed means before iteration 1). `st.iter` is the iteration whose
     /// assignment comes next.
@@ -227,6 +235,21 @@ pub trait Assigner {
     /// Run one assignment step: update `st.assign` in place, return the
     /// cost counters and the number of changed assignments.
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize);
+
+    /// Sharded multi-threaded assignment step. Implementations run the
+    /// *same* per-object routine as [`Assigner::assign`] over contiguous
+    /// object shards (see [`par::run_sharded`]) so the result — new
+    /// assignments, counters, change count — is bit-identical to the
+    /// serial path. The default falls back to serial execution.
+    fn assign_par(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        par: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let _ = par;
+        self.assign(ds, st)
+    }
 
     /// Bytes held by the algorithm-specific structures right now.
     fn mem_bytes(&self) -> usize;
@@ -276,8 +299,23 @@ pub fn seed_means(ds: &Dataset, k: usize, seed: u64) -> MeanSet {
     }
 }
 
-/// Run a complete clustering with the given algorithm. See module docs.
+/// Run a complete clustering with the given algorithm on the serial
+/// (reference) path. See module docs.
 pub fn run_clustering(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> ClusterOutput {
+    run_clustering_with(kind, ds, cfg, &ParConfig::serial())
+}
+
+/// Run a complete clustering with the given algorithm under a sharded
+/// execution configuration. With `par.threads > 1` the assignment step
+/// runs over contiguous object shards and the update step over cluster
+/// ranges on a [`std::thread::scope`] pool; results are **bit-identical**
+/// to [`run_clustering`] (see [`par`] module docs for the argument).
+pub fn run_clustering_with(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+) -> ClusterOutput {
     let n = ds.n();
     let mut st = IterState {
         k: cfg.k,
@@ -307,7 +345,11 @@ pub fn run_clustering(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> Clus
 
         let mut asg_sw = Stopwatch::new();
         asg_sw.start();
-        let (counters, changes) = assigner.assign(ds, &mut st);
+        let (counters, changes) = if par.is_parallel() {
+            assigner.assign_par(ds, &mut st, par)
+        } else {
+            assigner.assign(ds, &mut st)
+        };
         asg_sw.stop();
 
         let mem = assigner.mem_bytes();
@@ -335,13 +377,14 @@ pub fn run_clustering(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> Clus
         let changed = membership_changes(&prev_assign, &st.assign, cfg.k);
         let mut sw = Stopwatch::new();
         sw.start();
-        let upd = update_means_with_rho(
+        let upd = update_means_with_rho_par(
             ds,
             &st.assign,
             cfg.k,
             Some(&st.means),
             Some(&changed),
             Some(&st.rho),
+            par.threads,
         );
         // ICP eligibility for the next assignment (Eq. 5): similarity
         // non-decreasing w.r.t. the *same* centroid.

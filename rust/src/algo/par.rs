@@ -1,0 +1,288 @@
+//! Sharded multi-threaded execution of the assignment step (§Perf).
+//!
+//! The assignment step of every algorithm in this crate is
+//! *embarrassingly parallel over objects*: the new assignment of object
+//! `i` depends only on the read-only per-iteration structures (the mean
+//! set / structured index built by `rebuild`) and on object `i`'s own
+//! previous state (`assign[i]`, `rho[i]`, `xstate[i]`). The engine here
+//! exploits that by chunking the objects into contiguous **shards**,
+//! processing shards on a [`std::thread::scope`] pool, and merging the
+//! per-shard [`OpCounters`] / change counts in fixed shard order.
+//!
+//! **Determinism contract.** Because every object's computation performs
+//! exactly the same floating-point operations in exactly the same order
+//! as the serial path (each shard runs the serial per-object routine),
+//! and the counter merge is integer addition, the parallel engine is
+//! **bit-identical** to the serial path — same assignments, same
+//! objective trajectory, same counters — for any `threads`/`shard`
+//! combination. `rust/tests/parallel.rs` enforces this for all
+//! [`super::AlgoKind`]s.
+//!
+//! The update step is parallelized over *clusters* with the same
+//! guarantee (each cluster's mean is computed by the serial per-cluster
+//! routine); see [`crate::index::update_means_with_rho_par`].
+
+use crate::metrics::counters::OpCounters;
+
+/// Configuration of the sharded execution engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParConfig {
+    /// Worker threads for the assignment and update steps. `0` and `1`
+    /// both mean serial execution on the calling thread.
+    pub threads: usize,
+    /// Objects per shard. `0` selects one contiguous shard per thread
+    /// (`ceil(N / threads)`), which minimizes scratch allocations; small
+    /// explicit shards trade that for better load balance.
+    pub shard: usize,
+}
+
+impl Default for ParConfig {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl ParConfig {
+    /// Serial execution (the reference path).
+    pub fn serial() -> Self {
+        Self {
+            threads: 1,
+            shard: 0,
+        }
+    }
+
+    /// `threads` workers with auto shard size.
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            shard: 0,
+        }
+    }
+
+    /// Read `SKM_THREADS` / `SKM_SHARD` (both optional; defaults are
+    /// serial). This is how the bench harnesses and
+    /// `coordinator::run_and_summarize` pick up parallelism without
+    /// signature churn.
+    pub fn from_env() -> Self {
+        let get = |name: &str| {
+            std::env::var(name)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+        };
+        Self {
+            threads: get("SKM_THREADS").unwrap_or(1).max(1),
+            shard: get("SKM_SHARD").unwrap_or(0),
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Effective shard size for `n` objects (always ≥ 1).
+    pub fn shard_size(&self, n: usize) -> usize {
+        let auto = {
+            let t = self.threads.max(1);
+            (n + t - 1) / t.max(1)
+        };
+        let s = if self.shard > 0 { self.shard } else { auto };
+        s.max(1)
+    }
+}
+
+/// Run `f` over contiguous shards of `assign`, in parallel when
+/// `par.is_parallel()`, and merge the per-shard results in fixed shard
+/// order. `f(lo, chunk)` receives the global index of the first object
+/// in the shard and the shard's mutable slice of the assignment vector
+/// (holding the *previous* assignments on entry; `f` writes the new
+/// ones in place, exactly like the serial per-object loops do).
+pub fn run_sharded<F>(par: &ParConfig, assign: &mut [u32], f: F) -> (OpCounters, usize)
+where
+    F: Fn(usize, &mut [u32]) -> (OpCounters, usize) + Sync,
+{
+    let n = assign.len();
+    if !par.is_parallel() || n == 0 {
+        return f(0, assign);
+    }
+    let shard = par.shard_size(n);
+    let n_shards = (n + shard - 1) / shard;
+    let threads = par.threads.min(n_shards).max(1);
+    let mut results: Vec<(OpCounters, usize)> = vec![(OpCounters::new(), 0); n_shards];
+
+    {
+        // Shared work queue: workers pull shards as they finish, so
+        // many small shards genuinely load-balance uneven objects.
+        // Which worker runs which shard varies run to run, but results
+        // are merged by shard index below, so the output is
+        // deterministic regardless.
+        let work: Vec<(usize, &mut [u32], &mut (OpCounters, usize))> = assign
+            .chunks_mut(shard)
+            .zip(results.iter_mut())
+            .enumerate()
+            .map(|(si, (chunk, slot))| (si * shard, chunk, slot))
+            .collect();
+        let queue = std::sync::Mutex::new(work);
+        let queue = &queue;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(move || loop {
+                    let item = queue.lock().unwrap().pop();
+                    match item {
+                        Some((lo, chunk, slot)) => *slot = f(lo, chunk),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+
+    let mut counters = OpCounters::new();
+    let mut changes = 0usize;
+    for &(c, ch) in &results {
+        counters.add(&c);
+        changes += ch;
+    }
+    (counters, changes)
+}
+
+/// [`run_sharded`] with an additional per-object mutable state array
+/// (`per_obj` entries per object, e.g. Ding+'s group-bound matrix),
+/// split along the same shard boundaries so each worker owns its
+/// objects' state exclusively.
+pub fn run_sharded_with<T, F>(
+    par: &ParConfig,
+    assign: &mut [u32],
+    extra: &mut [T],
+    per_obj: usize,
+    f: F,
+) -> (OpCounters, usize)
+where
+    T: Send,
+    F: Fn(usize, &mut [u32], &mut [T]) -> (OpCounters, usize) + Sync,
+{
+    let n = assign.len();
+    assert_eq!(extra.len(), n * per_obj, "per-object state size mismatch");
+    if !par.is_parallel() || n == 0 {
+        return f(0, assign, extra);
+    }
+    let shard = par.shard_size(n);
+    let n_shards = (n + shard - 1) / shard;
+    let threads = par.threads.min(n_shards).max(1);
+    let mut results: Vec<(OpCounters, usize)> = vec![(OpCounters::new(), 0); n_shards];
+
+    {
+        // Shared work queue, exactly as in [`run_sharded`].
+        let work: Vec<(usize, &mut [u32], &mut [T], &mut (OpCounters, usize))> = assign
+            .chunks_mut(shard)
+            .zip(extra.chunks_mut(shard * per_obj))
+            .zip(results.iter_mut())
+            .enumerate()
+            .map(|(si, ((chunk, ext), slot))| (si * shard, chunk, ext, slot))
+            .collect();
+        let queue = std::sync::Mutex::new(work);
+        let queue = &queue;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(move || loop {
+                    let item = queue.lock().unwrap().pop();
+                    match item {
+                        Some((lo, chunk, ext, slot)) => *slot = f(lo, chunk, ext),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+
+    let mut counters = OpCounters::new();
+    let mut changes = 0usize;
+    for &(c, ch) in &results {
+        counters.add(&c);
+        changes += ch;
+    }
+    (counters, changes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_size_auto_and_explicit() {
+        let p = ParConfig::with_threads(4);
+        assert_eq!(p.shard_size(100), 25);
+        assert_eq!(p.shard_size(101), 26);
+        assert_eq!(p.shard_size(3), 1);
+        let q = ParConfig { threads: 4, shard: 7 };
+        assert_eq!(q.shard_size(100), 7);
+        assert_eq!(ParConfig::serial().shard_size(10), 10);
+        assert_eq!(ParConfig::serial().shard_size(0), 1);
+    }
+
+    /// The sharded driver must agree with the serial closure application
+    /// for every threads/shard combination, including counter merging.
+    #[test]
+    fn sharded_matches_serial_closure() {
+        let n = 103;
+        let step = |lo: usize, chunk: &mut [u32]| {
+            let mut c = OpCounters::new();
+            let mut changes = 0;
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let i = (lo + off) as u32;
+                let next = (*slot).wrapping_mul(31).wrapping_add(i) % 17;
+                c.mult += u64::from(next) + 1;
+                c.candidates += 1;
+                if next != *slot {
+                    *slot = next;
+                    changes += 1;
+                }
+            }
+            (c, changes)
+        };
+
+        let mut base: Vec<u32> = (0..n as u32).map(|i| i % 5).collect();
+        let (bc, bch) = run_sharded(&ParConfig::serial(), &mut base, step);
+
+        for threads in [2usize, 4, 7] {
+            for shard in [0usize, 1, 13, 64] {
+                let mut v: Vec<u32> = (0..n as u32).map(|i| i % 5).collect();
+                let par = ParConfig { threads, shard };
+                let (c, ch) = run_sharded(&par, &mut v, step);
+                assert_eq!(v, base, "threads={threads} shard={shard}");
+                assert_eq!(c, bc, "threads={threads} shard={shard}");
+                assert_eq!(ch, bch, "threads={threads} shard={shard}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_with_extra_state_partitions_cleanly() {
+        let n = 50;
+        let per = 3;
+        let step = |lo: usize, chunk: &mut [u32], ext: &mut [f64]| {
+            assert_eq!(ext.len(), chunk.len() * per);
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let i = lo + off;
+                for g in 0..per {
+                    ext[off * per + g] += (i * per + g) as f64;
+                }
+                *slot = i as u32;
+            }
+            (OpCounters::new(), chunk.len())
+        };
+        for par in [ParConfig::serial(), ParConfig { threads: 3, shard: 8 }] {
+            let mut assign = vec![0u32; n];
+            let mut extra = vec![0.0f64; n * per];
+            let (_, ch) = run_sharded_with(&par, &mut assign, &mut extra, per, step);
+            assert_eq!(ch, n);
+            for i in 0..n {
+                assert_eq!(assign[i], i as u32);
+                for g in 0..per {
+                    assert_eq!(extra[i * per + g], (i * per + g) as f64);
+                }
+            }
+        }
+    }
+}

@@ -11,8 +11,12 @@
 //! against `v_ta` to skip the already-consumed prefix (more irregular
 //! branches). Both effects are counted in `OpCounters` and visible to
 //! the hardware PMU counters.
+//!
+//! The per-object routine lives in [`TaAssigner::assign_range`] and is
+//! shared verbatim by the serial and sharded parallel paths (see
+//! `algo::par`).
 
-use crate::algo::{Assigner, ClusterConfig, IterState};
+use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::TaIndex;
 use crate::metrics::counters::OpCounters;
 use crate::sparse::Dataset;
@@ -25,9 +29,8 @@ pub struct TaAssigner {
     idx: Option<TaIndex>,
     /// ‖x_i‖₁ per object (Eq. 16 denominator), precomputed once.
     l1: Vec<f64>,
-    rho: Vec<f64>,
-    y: Vec<f64>,
-    z: Vec<u32>,
+    /// K at the last rebuild (per-shard scratch accounting: ρ and y).
+    k: usize,
 }
 
 impl TaAssigner {
@@ -38,34 +41,32 @@ impl TaAssigner {
             t_th: ds.d(),
             idx: None,
             l1,
-            rho: Vec::new(),
-            y: Vec::new(),
-            z: Vec::new(),
+            k: 0,
         }
     }
-}
 
-impl Assigner for TaAssigner {
-    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
-        // Switch to the preset t_th once a real threshold ρ_max exists
-        // (after the first update step).
-        if st.iter >= 2 {
-            self.t_th = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
-        }
-        self.idx = Some(TaIndex::build(&st.means, self.t_th));
-        self.rho.resize(st.k, 0.0);
-        self.y.resize(st.k, 0.0);
-    }
-
-    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+    /// Assignment of objects `[lo, lo + out.len())`. `out` holds the
+    /// previous assignments on entry and the new ones on exit.
+    fn assign_range(
+        &self,
+        ds: &Dataset,
+        k: usize,
+        rho_prev: &[f64],
+        xstate: &[bool],
+        lo: usize,
+        out: &mut [u32],
+    ) -> (OpCounters, usize) {
         let idx = self.idx.as_ref().expect("rebuild not called");
-        let k = st.k;
-        let n = ds.n();
         let t_th = self.t_th;
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
+        // Shard-local scratch.
+        let mut rho = vec![0.0f64; k];
+        let mut y = vec![0.0f64; k];
+        let mut z: Vec<u32> = Vec::new();
 
-        for i in 0..n {
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
             let (ts, us) = ds.x.row(i);
             let p0 = ts.partition_point(|&t| (t as usize) < t_th);
             let mut y_base = 0.0;
@@ -73,18 +74,16 @@ impl Assigner for TaAssigner {
                 y_base += u;
             }
 
-            let rho = &mut self.rho;
-            let y = &mut self.y;
             rho.iter_mut().for_each(|r| *r = 0.0);
             y.iter_mut().for_each(|v| *v = y_base);
-            self.z.clear();
-            let rho_max0 = st.rho[i];
+            z.clear();
+            let rho_max0 = rho_prev[i];
             // Individual threshold (Eq. 16). ρ_max < 0 only before the
             // first update; v_ta ≤ 0 then disables the region-2 break.
             let v_ta = rho_max0 / self.l1[i].max(f64::MIN_POSITIVE);
             let mut mult = 0u64;
 
-            let icp_active = self.use_icp && st.xstate[i];
+            let icp_active = self.use_icp && xstate[i];
 
             // Region 1 exact partial similarities.
             for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
@@ -129,7 +128,7 @@ impl Assigner for TaAssigner {
                     }
                     mult += 1;
                     if rho[j] + v_ta * y[j] > rho_max0 {
-                        self.z.push(j as u32);
+                        z.push(j as u32);
                     }
                 }
             } else {
@@ -140,7 +139,7 @@ impl Assigner for TaAssigner {
                     }
                     mult += 1;
                     if rho[j] + v_ta * y[j] > rho_max0 {
-                        self.z.push(j as u32);
+                        z.push(j as u32);
                     }
                 }
             }
@@ -150,7 +149,7 @@ impl Assigner for TaAssigner {
             // conditional the paper calls out (Algorithm 8 lines 12–15).
             for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
                 let row = idx.partial.row(t as usize);
-                for &j in &self.z {
+                for &j in &z {
                     let w = row[j as usize];
                     counters.irregular_branches += 1;
                     counters.cold_touches += 1;
@@ -161,9 +160,9 @@ impl Assigner for TaAssigner {
                 }
             }
 
-            let mut amax = st.assign[i];
+            let mut amax = *slot;
             let mut rmax = rho_max0;
-            for &j in &self.z {
+            for &j in &z {
                 if rho[j as usize] > rmax {
                     rmax = rho[j as usize];
                     amax = j;
@@ -171,20 +170,63 @@ impl Assigner for TaAssigner {
             }
 
             counters.mult += mult;
-            counters.candidates += self.z.len() as u64;
-            counters.exact_sims += self.z.len() as u64;
-            if amax != st.assign[i] {
-                st.assign[i] = amax;
+            counters.candidates += z.len() as u64;
+            counters.exact_sims += z.len() as u64;
+            if amax != *slot {
+                *slot = amax;
                 changes += 1;
             }
         }
         (counters, changes)
     }
+}
+
+impl Assigner for TaAssigner {
+    fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
+        // Switch to the preset t_th once a real threshold ρ_max exists
+        // (after the first update step).
+        if st.iter >= 2 {
+            self.t_th = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
+        }
+        self.idx = Some(TaIndex::build(&st.means, self.t_th));
+        self.k = st.k;
+    }
+
+    fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        self.assign_range(ds, *k, rho, xstate, 0, assign)
+    }
+
+    fn assign_par(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let this = &*self;
+        let IterState {
+            assign,
+            rho,
+            xstate,
+            k,
+            ..
+        } = st;
+        let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
+        par::run_sharded(cfg, assign, |lo, chunk| {
+            this.assign_range(ds, k, rho, xstate, lo, chunk)
+        })
+    }
 
     fn mem_bytes(&self) -> usize {
         self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
             + self.l1.len() * 8
-            + (self.rho.len() + self.y.len()) * 8
+            + self.k * 2 * 8
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {
@@ -194,7 +236,7 @@ impl Assigner for TaAssigner {
 
 #[cfg(test)]
 mod tests {
-    use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+    use crate::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
     use crate::corpus::{generate, tiny, CorpusSpec};
     use crate::sparse::build_dataset;
 
@@ -236,5 +278,23 @@ mod tests {
         let tb: u64 = ta.logs.iter().map(|l| l.counters.irregular_branches).sum();
         let bb: u64 = base.logs.iter().map(|l| l.counters.irregular_branches).sum();
         assert!(tb > bb, "TA should show the irregular-branch penalty");
+    }
+
+    #[test]
+    fn sharded_ta_bit_identical() {
+        let c = generate(&CorpusSpec {
+            n_docs: 500,
+            ..tiny(79)
+        });
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 12,
+            seed: 3,
+            ..Default::default()
+        };
+        let serial = run_clustering(AlgoKind::TaIcp, &ds, &cfg);
+        let par = run_clustering_with(AlgoKind::TaIcp, &ds, &cfg, &ParConfig::with_threads(3));
+        assert_eq!(serial.assign, par.assign);
+        assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
     }
 }

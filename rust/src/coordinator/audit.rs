@@ -6,7 +6,7 @@
 //! within tolerance), which we verify by recomputing exact similarities
 //! against the *candidate's* final mean set.
 
-use crate::algo::{run_clustering, AlgoKind, ClusterConfig};
+use crate::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use crate::index::update_means;
 use crate::sparse::Dataset;
 
@@ -31,15 +31,29 @@ impl AuditReport {
     }
 }
 
-/// Audit `kind` against MIVI on the given dataset/config.
+/// Audit `kind` against MIVI on the given dataset/config (serial).
 pub fn audit_equivalence(
     kind: AlgoKind,
     ds: &Dataset,
     cfg: &ClusterConfig,
     tol: f64,
 ) -> AuditReport {
-    let base = run_clustering(AlgoKind::Mivi, ds, cfg);
-    let cand = run_clustering(kind, ds, cfg);
+    audit_equivalence_with(kind, ds, cfg, tol, &ParConfig::serial())
+}
+
+/// [`audit_equivalence`] running both clusterings on the sharded
+/// engine. Since the engine is bit-identical to the serial path, the
+/// audit verdict cannot depend on `par` — this merely makes large
+/// audits faster (the `skm audit --threads N` path).
+pub fn audit_equivalence_with(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    tol: f64,
+    par: &ParConfig,
+) -> AuditReport {
+    let base = run_clustering_with(AlgoKind::Mivi, ds, cfg, par);
+    let cand = run_clustering_with(kind, ds, cfg, par);
 
     let mut exact = 0usize;
     let mut ties = 0usize;

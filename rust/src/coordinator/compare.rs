@@ -4,7 +4,7 @@
 //! PMU readings (or their software proxies), and print the paper-style
 //! rate tables (rates relative to a reference algorithm).
 
-use crate::algo::{run_clustering, AlgoKind, ClusterConfig, ClusterOutput};
+use crate::algo::{run_clustering_with, AlgoKind, ClusterConfig, ClusterOutput, ParConfig};
 use crate::metrics::perf::{PerfGroup, PerfReading};
 use crate::sparse::Dataset;
 use crate::util::io::{fmt_sig, Table};
@@ -34,16 +34,34 @@ pub struct AlgoRunSummary {
 
 /// Run one algorithm and summarize it, measuring hardware counters
 /// around the whole clustering when the PMU is available.
+///
+/// Thread plumbing: the sharded engine configuration is read from the
+/// `SKM_THREADS` / `SKM_SHARD` environment knobs (default: serial), so
+/// every bench harness and preset runs parallel without signature
+/// churn. The engine is bit-identical to the serial path, so only the
+/// elapsed-time columns are affected. Use [`run_and_summarize_with`]
+/// to pass an explicit [`ParConfig`] (e.g. from the `--threads` CLI
+/// flag).
 pub fn run_and_summarize(
     kind: AlgoKind,
     ds: &Dataset,
     cfg: &ClusterConfig,
 ) -> (ClusterOutput, AlgoRunSummary) {
+    run_and_summarize_with(kind, ds, cfg, &ParConfig::from_env())
+}
+
+/// [`run_and_summarize`] with an explicit sharded-engine configuration.
+pub fn run_and_summarize_with(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+) -> (ClusterOutput, AlgoRunSummary) {
     let group = PerfGroup::try_new();
     if let Some(g) = &group {
         g.start();
     }
-    let out = run_clustering(kind, ds, cfg);
+    let out = run_clustering_with(kind, ds, cfg, par);
     let perf = group.map(|g| g.stop());
 
     let iters = out.iterations().max(1) as f64;

@@ -6,6 +6,8 @@ pub mod audit;
 pub mod compare;
 pub mod presets;
 
-pub use audit::{audit_equivalence, AuditReport};
-pub use compare::{comparison_rate_table, run_and_summarize, AlgoRunSummary};
+pub use audit::{audit_equivalence, audit_equivalence_with, AuditReport};
+pub use compare::{
+    comparison_rate_table, run_and_summarize, run_and_summarize_with, AlgoRunSummary,
+};
 pub use presets::{preset, Preset};

@@ -25,6 +25,12 @@ impl Preset {
     }
 
     /// Default cluster configuration for this workload.
+    ///
+    /// Thread plumbing note: presets deliberately carry no parallelism
+    /// knob — preset runs pick up `SKM_THREADS` / `SKM_SHARD` through
+    /// `coordinator::run_and_summarize` (the sharded engine is
+    /// bit-identical to the serial path, so a preset's results never
+    /// depend on that choice).
     pub fn config(&self, seed: u64) -> ClusterConfig {
         ClusterConfig {
             k: self.k,

@@ -73,6 +73,11 @@ pub fn update_means(
 /// members of an *unchanged* cluster keep both their mean and their
 /// similarity, so ρ can be copied instead of recomputed — the dominant
 /// cost of the update step once most centroids are invariant (§Perf).
+///
+/// **Sync contract:** the per-cluster body of this function is
+/// duplicated verbatim inside [`update_means_with_rho_par`]'s workers;
+/// any change here must be mirrored there (the parallel path is
+/// required to be bit-identical).
 pub fn update_means_with_rho(
     ds: &Dataset,
     assign: &[u32],
@@ -200,6 +205,191 @@ pub fn update_means_with_rho(
     }
 }
 
+/// [`update_means_with_rho`] parallelized over **cluster ranges** on a
+/// [`std::thread::scope`] pool (`threads ≤ 1` falls back to the serial
+/// function). Each cluster's tentative mean, normalization, and member
+/// similarities are computed by exactly one worker running the serial
+/// per-cluster routine — accumulation in member order, norm over the
+/// touched-term list in insertion order — and the per-thread partial
+/// results (mean rows, moved flags, member ρ values) are merged in fixed
+/// cluster order. The output is therefore **bit-identical** to the
+/// serial path for any thread count: same mean values, same ρ, and the
+/// objective is summed over the same index order.
+///
+/// **Sync contract:** the worker body below is the per-cluster routine
+/// of [`update_means_with_rho`] verbatim (only the ρ writes go through
+/// an `(object, value)` list instead of the shared vector). Any change
+/// to either copy must be mirrored in the other — the determinism
+/// suite (`rust/tests/parallel.rs` and `par_update_bit_identical_to_serial`
+/// below) enforces the equivalence.
+pub fn update_means_with_rho_par(
+    ds: &Dataset,
+    assign: &[u32],
+    k: usize,
+    prev: Option<&MeanSet>,
+    changed: Option<&[bool]>,
+    prev_rho: Option<&[f64]>,
+    threads: usize,
+) -> UpdateOutput {
+    if threads <= 1 || k < 2 {
+        return update_means_with_rho(ds, assign, k, prev, changed, prev_rho);
+    }
+    let n = ds.n();
+    let d = ds.d();
+    assert_eq!(assign.len(), n);
+    if let Some(p) = prev {
+        assert_eq!(p.k(), k);
+    }
+
+    // Bucket members by cluster (identical to the serial pass).
+    let mut sizes = vec![0u32; k];
+    for &a in assign {
+        sizes[a as usize] += 1;
+    }
+    let mut starts = vec![0usize; k + 1];
+    for j in 0..k {
+        starts[j + 1] = starts[j] + sizes[j] as usize;
+    }
+    let mut members = vec![0u32; n];
+    let mut cursor = starts.clone();
+    for (i, &a) in assign.iter().enumerate() {
+        members[cursor[a as usize]] = i as u32;
+        cursor[a as usize] += 1;
+    }
+
+    /// Partial result for one contiguous cluster range `[j0, j0+len)`.
+    struct ClusterRange {
+        j0: usize,
+        rows: Vec<Vec<(u32, f64)>>,
+        moved: Vec<bool>,
+        /// `(object id, ρ)` for every member of the range's clusters.
+        rho: Vec<(u32, f64)>,
+    }
+
+    let workers = threads.min(k).max(1);
+    let chunk = (k + workers - 1) / workers;
+    let members_ref = &members;
+    let starts_ref = &starts;
+
+    let results: Vec<ClusterRange> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..workers {
+            let j0 = t * chunk;
+            let j1 = ((t + 1) * chunk).min(k);
+            if j0 >= j1 {
+                break;
+            }
+            handles.push(scope.spawn(move || {
+                let mut out = ClusterRange {
+                    j0,
+                    rows: Vec::with_capacity(j1 - j0),
+                    moved: Vec::with_capacity(j1 - j0),
+                    rho: Vec::new(),
+                };
+                // Thread-local dense scratch, exactly like the serial path.
+                let mut lambda = vec![0.0f64; d];
+                let mut touched: Vec<u32> = Vec::new();
+                for j in j0..j1 {
+                    let mem = &members_ref[starts_ref[j]..starts_ref[j + 1]];
+                    let membership_changed = changed.map(|c| c[j]).unwrap_or(true);
+                    if mem.is_empty() || (!membership_changed && prev.is_some()) {
+                        if let Some(p) = prev {
+                            let (ts, vs) = p.m.row(j);
+                            let row: Vec<(u32, f64)> =
+                                ts.iter().cloned().zip(vs.iter().cloned()).collect();
+                            if let Some(pr) = prev_rho {
+                                for &i in mem {
+                                    out.rho.push((i, pr[i as usize]));
+                                }
+                            } else {
+                                for &i in mem {
+                                    out.rho.push((i, dot_row_sparse(&ds.x, i as usize, &row)));
+                                }
+                            }
+                            out.rows.push(row);
+                            out.moved.push(false);
+                            continue;
+                        }
+                        out.rows.push(Vec::new());
+                        out.moved.push(false);
+                        continue;
+                    }
+
+                    touched.clear();
+                    for &i in mem {
+                        let (ts, vs) = ds.x.row(i as usize);
+                        for (&t, &v) in ts.iter().zip(vs) {
+                            if lambda[t as usize] == 0.0 {
+                                touched.push(t);
+                            }
+                            lambda[t as usize] += v;
+                        }
+                    }
+                    let norm = touched
+                        .iter()
+                        .map(|&t| lambda[t as usize] * lambda[t as usize])
+                        .sum::<f64>()
+                        .sqrt();
+                    if norm > 0.0 {
+                        for &t in &touched {
+                            lambda[t as usize] /= norm;
+                        }
+                    }
+                    for &i in mem {
+                        let (ts, vs) = ds.x.row(i as usize);
+                        let mut s = 0.0;
+                        for (&t, &v) in ts.iter().zip(vs) {
+                            s += v * lambda[t as usize];
+                        }
+                        out.rho.push((i, s));
+                    }
+                    touched.sort_unstable();
+                    let row: Vec<(u32, f64)> = touched
+                        .iter()
+                        .map(|&t| (t, lambda[t as usize]))
+                        .filter(|&(_, v)| v != 0.0)
+                        .collect();
+                    for &t in &touched {
+                        lambda[t as usize] = 0.0;
+                    }
+                    out.rows.push(row);
+                    out.moved.push(true);
+                }
+                out
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("update-step worker panicked"))
+            .collect()
+    });
+
+    // Merge the partial mean rows / moved flags / ρ in fixed cluster order.
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); k];
+    let mut moved = vec![false; k];
+    let mut rho = vec![0.0f64; n];
+    for range in results {
+        let j0 = range.j0;
+        for (off, m) in range.moved.iter().enumerate() {
+            moved[j0 + off] = *m;
+        }
+        for (off, row) in range.rows.into_iter().enumerate() {
+            rows[j0 + off] = row;
+        }
+        for (i, r) in range.rho {
+            rho[i as usize] = r;
+        }
+    }
+
+    let m = CsrMatrix::from_rows(d, &rows);
+    let objective = rho.iter().sum();
+    UpdateOutput {
+        means: MeanSet { m, moved, sizes },
+        rho,
+        objective,
+    }
+}
+
 /// Dot of CSR row `i` with a term-sorted sparse tuple list.
 fn dot_row_sparse(x: &CsrMatrix, i: usize, row: &[(u32, f64)]) -> f64 {
     let (ts, vs) = x.row(i);
@@ -308,6 +498,50 @@ mod tests {
         assert_eq!(second.means.m.row(1), first.means.m.row(1));
         assert!(!second.means.moved[1]);
         assert!(second.means.moved[0]);
+    }
+
+    #[test]
+    fn par_update_bit_identical_to_serial() {
+        use crate::corpus::{generate, tiny};
+        let c = generate(&tiny(71));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let k = 9usize;
+        let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % k as u32).collect();
+        let serial = update_means_with_rho(&ds, &assign, k, None, None, None);
+        for threads in [2usize, 4, 7] {
+            let par = update_means_with_rho_par(&ds, &assign, k, None, None, None, threads);
+            assert_eq!(par.means.m, serial.means.m, "threads={threads}");
+            assert_eq!(par.means.moved, serial.means.moved);
+            assert_eq!(par.means.sizes, serial.means.sizes);
+            assert_eq!(par.rho, serial.rho, "threads={threads}");
+            assert_eq!(
+                par.objective.to_bits(),
+                serial.objective.to_bits(),
+                "threads={threads}"
+            );
+        }
+        // Second step with unchanged membership + previous means/ρ: the
+        // reuse fast paths must stay bit-identical too.
+        let changed = membership_changes(&assign, &assign, k);
+        let s2 = update_means_with_rho(
+            &ds,
+            &assign,
+            k,
+            Some(&serial.means),
+            Some(&changed),
+            Some(&serial.rho),
+        );
+        let p2 = update_means_with_rho_par(
+            &ds,
+            &assign,
+            k,
+            Some(&serial.means),
+            Some(&changed),
+            Some(&serial.rho),
+            4,
+        );
+        assert_eq!(p2.means.m, s2.means.m);
+        assert_eq!(p2.rho, s2.rho);
     }
 
     #[test]

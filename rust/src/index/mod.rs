@@ -8,6 +8,7 @@ pub mod structured;
 
 pub use inverted::{InvIndex, ObjInvIndex};
 pub use means::{
-    membership_changes, update_means, update_means_with_rho, MeanSet, UpdateOutput,
+    membership_changes, update_means, update_means_with_rho, update_means_with_rho_par, MeanSet,
+    UpdateOutput,
 };
 pub use structured::{CsIndex, EsIndex, PartialIndex, Region2, TaIndex};

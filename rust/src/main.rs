@@ -14,9 +14,11 @@
 //!   skm audit --preset tiny --algo all
 //!   skm cluster --input docword.pubmed.txt --max-docs 100000 --algo es-icp
 
-use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::coordinator::compare::absolute_table;
-use skm::coordinator::{audit_equivalence, comparison_rate_table, preset, run_and_summarize};
+use skm::coordinator::{
+    audit_equivalence_with, comparison_rate_table, preset, run_and_summarize_with,
+};
 use skm::corpus::read_uci_bow_file;
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{update_means, ObjInvIndex};
@@ -50,6 +52,26 @@ fn config_for(args: &Args, ds: &Dataset) -> ClusterConfig {
     }
 }
 
+/// Sharded-engine configuration from `--threads` / `--shard` (falling
+/// back to the `SKM_THREADS` / `SKM_SHARD` environment knobs). The
+/// engine is bit-identical to the serial path, so these flags change
+/// wall-clock time only — never results.
+fn par_for(args: &Args) -> ParConfig {
+    let env = ParConfig::from_env();
+    ParConfig {
+        threads: if args.get("threads").is_some() {
+            args.threads()
+        } else {
+            env.threads
+        },
+        shard: if args.get("shard").is_some() {
+            args.shard()
+        } else {
+            env.shard
+        },
+    }
+}
+
 fn describe(ds: &Dataset, k: usize) {
     eprintln!(
         "dataset {}: N={} D={} avg-terms={:.1} (sparsity {:.2e}), K={}",
@@ -76,7 +98,7 @@ fn main() {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: skm <cluster|compare|audit|ucs|estparams|info> [--preset NAME] [--algo NAME] ..."
+                "usage: skm <cluster|compare|audit|ucs|estparams|info> [--preset NAME] [--algo NAME] [--threads N] ..."
             );
             std::process::exit(2);
         }
@@ -86,9 +108,17 @@ fn main() {
 fn cmd_cluster(args: &Args) {
     let ds = load_dataset(args);
     let cfg = config_for(args, &ds);
+    let par = par_for(args);
     let kind = AlgoKind::parse(args.get_or("algo", "es-icp")).expect("--algo");
     describe(&ds, cfg.k);
-    let out = run_clustering(kind, &ds, &cfg);
+    if par.is_parallel() {
+        eprintln!(
+            "sharded engine: {} threads, shard {}",
+            par.threads,
+            par.shard_size(ds.n())
+        );
+    }
+    let out = run_clustering_with(kind, &ds, &cfg, &par);
     println!(
         "{}: {} iterations ({}), J={:.4}, total {:.2}s (assign {:.2}s / update {:.2}s), avg mult/iter {}, max mem {:.3} GB",
         kind.name(),
@@ -136,12 +166,13 @@ fn parse_algos(spec: &str) -> Vec<AlgoKind> {
 fn cmd_compare(args: &Args) {
     let ds = load_dataset(args);
     let cfg = config_for(args, &ds);
+    let par = par_for(args);
     let kinds = parse_algos(args.get_or("algos", "mivi,icp,ta-icp,cs-icp,es-icp"));
     describe(&ds, cfg.k);
     let mut summaries = Vec::new();
     for kind in kinds {
         eprintln!("running {} ...", kind.name());
-        let (_, s) = run_and_summarize(kind, &ds, &cfg);
+        let (_, s) = run_and_summarize_with(kind, &ds, &cfg, &par);
         eprintln!(
             "  {} iters, avg {:.3}s/iter, avg mult {}",
             s.iterations,
@@ -160,6 +191,7 @@ fn cmd_compare(args: &Args) {
 fn cmd_audit(args: &Args) {
     let ds = load_dataset(args);
     let cfg = config_for(args, &ds);
+    let par = par_for(args);
     let kinds = parse_algos(args.get_or("algo", "all"));
     describe(&ds, cfg.k);
     let mut failures = 0;
@@ -167,7 +199,7 @@ fn cmd_audit(args: &Args) {
         if kind == AlgoKind::Mivi {
             continue;
         }
-        let rep = audit_equivalence(kind, &ds, &cfg, 1e-9);
+        let rep = audit_equivalence_with(kind, &ds, &cfg, 1e-9, &par);
         println!(
             "{:<8} {}  exact={}  fp-ties={}  divergences={}  iters {}/{}",
             rep.algo,
@@ -192,7 +224,7 @@ fn cmd_ucs(args: &Args) {
     let cfg = config_for(args, &ds);
     describe(&ds, cfg.k);
     eprintln!("clustering with ES-ICP to obtain the mean set ...");
-    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    let out = run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &par_for(args));
     let upd = update_means(&ds, &out.assign, cfg.k, None, None);
 
     let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
@@ -238,7 +270,7 @@ fn cmd_estparams(args: &Args) {
         max_iters: 2,
         ..cfg.clone()
     };
-    let out = run_clustering(AlgoKind::Mivi, &ds, &warm);
+    let out = run_clustering_with(AlgoKind::Mivi, &ds, &warm, &par_for(args));
     let upd = update_means(&ds, &out.assign, cfg.k, None, None);
     let s_min = (ds.d() as f64 * cfg.s_min_frac) as usize;
     let xp = ObjInvIndex::build(&ds.x, s_min);

@@ -1,20 +1,33 @@
-//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! PJRT runtime — executes the AOT-compiled JAX/Pallas dense-block
 //! computations (`artifacts/*.hlo.txt`) from Rust, with **no Python on
 //! the execution path**.
 //!
 //! Build path (see `python/compile/aot.py`): JAX lowers the Layer-2
 //! model (which calls the Layer-1 Pallas kernel) to StableHLO, converts
 //! it to an `XlaComputation`, and dumps **HLO text** — the interchange
-//! format this image's xla_extension 0.5.1 accepts (jax ≥ 0.5 protos
-//! carry 64-bit ids the proto path rejects; the text parser reassigns
-//! ids).
+//! format the original image's xla_extension 0.5.1 accepts.
 //!
-//! Runtime path (this module): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. Compiled
-//! executables are cached per artifact name.
+//! ## Feature gating (offline-green builds)
+//!
+//! The XLA PJRT toolchain (`xla_extension` + the `xla` bindings crate)
+//! is not available in the offline build environment, so this module is
+//! gated behind the **`pjrt`** cargo feature:
+//!
+//! * **default build** (no features): only the dependency-free helpers
+//!   ([`pad_to`], [`densify_top_terms`], the block-shape constants) are
+//!   functional; [`PjrtRuntime::new`] returns a descriptive error so
+//!   call sites (the `skm info` subcommand, the hybrid examples, the
+//!   integration test) compile and degrade gracefully.
+//! * **`--features pjrt`**: [`PjrtRuntime`] compiles a **native CPU
+//!   executor** for the two known artifacts — `assign_block` and
+//!   `kmeans_step` — implementing exactly the dense math of
+//!   `python/compile/model.py` (and of the pure-Rust reference in
+//!   `examples/hybrid_dense.rs`), still with no Python/XLA dependency.
+//!   Arbitrary HLO execution ([`PjrtRuntime::execute_f32`]) keeps a
+//!   stub error path; relinking the real `xla` bindings is a drop-in
+//!   replacement for the two `native_*` functions below.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Expected dense-block shapes, kept in sync with `python/compile/aot.py`
@@ -23,21 +36,24 @@ pub const BLOCK_B: usize = 64;
 pub const BLOCK_K: usize = 32;
 pub const BLOCK_D: usize = 256;
 
-/// A PJRT client plus a cache of compiled executables.
+/// A PJRT-style executor rooted at an artifacts directory. See the
+/// module docs for what each feature configuration provides.
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl PjrtRuntime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
+    /// Create an executor rooted at an artifacts directory. Errors when
+    /// the crate was built without the `pjrt` feature.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        if !cfg!(feature = "pjrt") {
+            bail!(
+                "skm was built without the `pjrt` feature; rebuild with \
+                 `cargo build --features pjrt` to enable the runtime module"
+            );
+        }
         Ok(Self {
-            client,
             artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
         })
     }
 
@@ -49,7 +65,7 @@ impl PjrtRuntime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu (xla backend not linked)".to_string()
     }
 
     /// True if the named artifact exists on disk.
@@ -57,100 +73,118 @@ impl PjrtRuntime {
         self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
     }
 
-    /// Load (and cache) an artifact by name (`name` → `name.hlo.txt`).
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), exe);
+    /// Path of an artifact, erroring when it is missing (the native
+    /// executor still insists the AOT pipeline ran, so the cross-check
+    /// examples exercise the same preconditions as the XLA-linked
+    /// build).
+    fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {path:?} not found (run `make artifacts`)");
         }
-        Ok(&self.cache[name])
+        Ok(path)
     }
 
-    /// Execute an artifact on f32 inputs with the given shapes; returns
-    /// the flattened outputs of the result tuple.
+    /// Execute an artifact on f32 inputs with the given shapes.
+    ///
+    /// Stub error path: executing *arbitrary* HLO requires the XLA PJRT
+    /// backend, which is not linked in this build; only the two known
+    /// dense-block entry points ([`PjrtRuntime::assign_block`],
+    /// [`PjrtRuntime::kmeans_step`]) have native implementations.
     pub fn execute_f32(
         &mut self,
         name: &str,
         inputs: &[(&[f32], &[i64])],
     ) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let expected: i64 = shape.iter().product();
-                anyhow::ensure!(
-                    expected as usize == data.len(),
-                    "shape {shape:?} wants {expected} elements, got {}",
-                    data.len()
-                );
-                xla::Literal::vec1(data)
-                    .reshape(shape)
-                    .map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let exe = self.load(name)?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True.
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| {
-                // Outputs may be f32 or i32 (argmax indices); convert to
-                // f32 uniformly for a simple interface.
-                let p = p
-                    .convert(xla::PrimitiveType::F32)
-                    .map_err(|e| anyhow!("convert: {e:?}"))?;
-                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-            })
-            .collect()
+        for (data, shape) in inputs {
+            let expected: i64 = shape.iter().product();
+            anyhow::ensure!(
+                expected as usize == data.len(),
+                "shape {shape:?} wants {expected} elements, got {}",
+                data.len()
+            );
+        }
+        let path = self.artifact_path(name)?;
+        bail!(
+            "cannot execute {path:?}: the XLA PJRT backend is not linked into \
+             this build (native implementations exist only for assign_block \
+             and kmeans_step)"
+        );
     }
 
-    /// Dense-block assignment via the AOT Pallas/JAX kernel: given a
-    /// `B×D` block of objects and `K×D` means (both dense f32,
-    /// row-major), returns `(argmax ids, best sims)`.
+    /// Dense-block assignment: given a `B×D` block of objects and `K×D`
+    /// means (both dense f32, row-major), returns `(argmax ids, best
+    /// sims)`.
     ///
     /// Shapes must match the compiled block ([`BLOCK_B`], [`BLOCK_K`],
     /// [`BLOCK_D`]); use [`pad_to`] helpers for partial blocks.
     pub fn assign_block(&mut self, x: &[f32], m: &[f32]) -> Result<(Vec<u32>, Vec<f32>)> {
-        let outs = self.execute_f32(
-            "assign_block",
-            &[
-                (x, &[BLOCK_B as i64, BLOCK_D as i64]),
-                (m, &[BLOCK_K as i64, BLOCK_D as i64]),
-            ],
-        )?;
-        anyhow::ensure!(outs.len() == 2, "assign_block returned {} outputs", outs.len());
-        let ids = outs[0].iter().map(|&v| v as u32).collect();
-        Ok((ids, outs[1].clone()))
+        self.artifact_path("assign_block")
+            .context("assign_block artifact")?;
+        anyhow::ensure!(x.len() == BLOCK_B * BLOCK_D, "x must be BLOCK_B x BLOCK_D");
+        anyhow::ensure!(m.len() == BLOCK_K * BLOCK_D, "m must be BLOCK_K x BLOCK_D");
+        Ok(native_assign_block(x, m))
     }
 
-    /// One dense spherical-k-means step via the AOT kernel: returns
-    /// `(assignments, new unit-norm means (K×D), objective)`.
+    /// One dense spherical-k-means step: returns `(assignments, new
+    /// unit-norm means (K×D), objective)`.
     pub fn kmeans_step(&mut self, x: &[f32], m: &[f32]) -> Result<(Vec<u32>, Vec<f32>, f32)> {
-        let outs = self.execute_f32(
-            "kmeans_step",
-            &[
-                (x, &[BLOCK_B as i64, BLOCK_D as i64]),
-                (m, &[BLOCK_K as i64, BLOCK_D as i64]),
-            ],
-        )?;
-        anyhow::ensure!(outs.len() == 3, "kmeans_step returned {} outputs", outs.len());
-        let ids = outs[0].iter().map(|&v| v as u32).collect();
-        Ok((ids, outs[1].clone(), outs[2][0]))
+        self.artifact_path("kmeans_step")
+            .context("kmeans_step artifact")?;
+        anyhow::ensure!(x.len() == BLOCK_B * BLOCK_D, "x must be BLOCK_B x BLOCK_D");
+        anyhow::ensure!(m.len() == BLOCK_K * BLOCK_D, "m must be BLOCK_K x BLOCK_D");
+        Ok(native_kmeans_step(x, m))
     }
+}
+
+/// Native argmax-similarity over one dense block — the same math the
+/// AOT `assign_block` artifact encodes (`python/compile/model.py`).
+fn native_assign_block(x: &[f32], m: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let mut ids = vec![0u32; BLOCK_B];
+    let mut sims = vec![0.0f32; BLOCK_B];
+    for r in 0..BLOCK_B {
+        let xr = &x[r * BLOCK_D..(r + 1) * BLOCK_D];
+        let (mut best, mut bestv) = (0usize, f32::NEG_INFINITY);
+        for j in 0..BLOCK_K {
+            let mr = &m[j * BLOCK_D..(j + 1) * BLOCK_D];
+            let s: f32 = xr.iter().zip(mr).map(|(a, b)| a * b).sum();
+            if s > bestv {
+                bestv = s;
+                best = j;
+            }
+        }
+        ids[r] = best as u32;
+        sims[r] = bestv;
+    }
+    (ids, sims)
+}
+
+/// Native dense spherical-k-means step — assignment, member-sum means,
+/// L2 normalization; empty/zero clusters keep their previous mean
+/// (matching `python/compile/model.py::kmeans_step`).
+fn native_kmeans_step(x: &[f32], m: &[f32]) -> (Vec<u32>, Vec<f32>, f32) {
+    let (assign, sims) = native_assign_block(x, m);
+    let obj: f32 = sims.iter().sum();
+    let mut sums = vec![0.0f32; BLOCK_K * BLOCK_D];
+    let mut counts = vec![0u32; BLOCK_K];
+    for r in 0..BLOCK_B {
+        let j = assign[r] as usize;
+        counts[j] += 1;
+        for t in 0..BLOCK_D {
+            sums[j * BLOCK_D + t] += x[r * BLOCK_D + t];
+        }
+    }
+    let mut new_m = m.to_vec();
+    for j in 0..BLOCK_K {
+        let row = &sums[j * BLOCK_D..(j + 1) * BLOCK_D];
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if counts[j] > 0 && norm > 0.0 {
+            for t in 0..BLOCK_D {
+                new_m[j * BLOCK_D + t] = row[t] / norm;
+            }
+        }
+    }
+    (assign, new_m, obj)
 }
 
 /// Pad a dense row-major `rows×cols` matrix to `target_rows×target_cols`
@@ -213,30 +247,77 @@ mod tests {
         assert_eq!(dense, vec![0.0, 0.0, 0.25, 0.75]); // term 1 dropped
     }
 
-    /// Full PJRT round-trip — only runs when artifacts are built
-    /// (`make artifacts`); the integration test in `rust/tests`
-    /// exercises it unconditionally via the Makefile flow.
+    /// Without the `pjrt` feature the runtime degrades to a clear error
+    /// (the stub error path); with it, construction succeeds.
     #[test]
-    fn pjrt_assign_block_if_artifacts_present() {
-        let dir = PjrtRuntime::default_dir();
-        if !dir.join("assign_block.hlo.txt").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
+    fn feature_gate_behavior() {
+        let r = PjrtRuntime::new("artifacts");
+        if cfg!(feature = "pjrt") {
+            assert!(r.is_ok());
+        } else {
+            let msg = format!("{:#}", r.err().expect("must error without pjrt"));
+            assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
         }
-        let mut rt = PjrtRuntime::new(&dir).expect("client");
+    }
+
+    /// The native executor matches a hand-rolled argmax on a block where
+    /// object r matches mean r % K exactly (the original PJRT smoke
+    /// test, now independent of artifacts).
+    #[test]
+    fn native_assign_block_identity_pattern() {
         let mut x = vec![0.0f32; BLOCK_B * BLOCK_D];
         let mut m = vec![0.0f32; BLOCK_K * BLOCK_D];
-        // object r matches mean r % K exactly.
         for r in 0..BLOCK_B {
             x[r * BLOCK_D + (r % BLOCK_K)] = 1.0;
         }
         for j in 0..BLOCK_K {
             m[j * BLOCK_D + j] = 1.0;
         }
-        let (ids, sims) = rt.assign_block(&x, &m).expect("assign");
+        let (ids, sims) = native_assign_block(&x, &m);
         for r in 0..BLOCK_B {
             assert_eq!(ids[r], (r % BLOCK_K) as u32, "row {r}");
             assert!((sims[r] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    /// The native k-means step keeps unit-norm means and a non-decreasing
+    /// objective — the invariants the AOT artifact is cross-checked
+    /// against in `examples/hybrid_dense.rs`.
+    #[test]
+    fn native_kmeans_step_invariants() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(7);
+        let mut unit_rows = |rows: usize| {
+            let mut x = vec![0.0f32; rows * BLOCK_D];
+            for r in 0..rows {
+                let mut norm = 0.0f32;
+                for t in 0..BLOCK_D {
+                    let v = rng.next_f64() as f32 + 1e-3;
+                    x[r * BLOCK_D + t] = v;
+                    norm += v * v;
+                }
+                let norm = norm.sqrt();
+                for t in 0..BLOCK_D {
+                    x[r * BLOCK_D + t] /= norm;
+                }
+            }
+            x
+        };
+        let x = unit_rows(BLOCK_B);
+        let mut m = unit_rows(BLOCK_K);
+        let mut prev = f32::NEG_INFINITY;
+        for _ in 0..6 {
+            let (assign, new_m, obj) = native_kmeans_step(&x, &m);
+            assert_eq!(assign.len(), BLOCK_B);
+            assert!(assign.iter().all(|&a| (a as usize) < BLOCK_K));
+            assert!(obj >= prev - 1e-3, "objective decreased: {prev} -> {obj}");
+            for j in 0..BLOCK_K {
+                let row = &new_m[j * BLOCK_D..(j + 1) * BLOCK_D];
+                let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+                assert!((norm - 1.0).abs() < 1e-4, "mean {j} norm {norm}");
+            }
+            prev = obj;
+            m = new_m;
         }
     }
 }

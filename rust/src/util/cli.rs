@@ -93,6 +93,19 @@ impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.get(name) == Some("true")
     }
+
+    /// `--threads N` — worker threads for the sharded execution engine
+    /// (default 1 = serial). Consumed by the `skm` binary and examples;
+    /// the engine itself lives in `algo::par`.
+    pub fn threads(&self) -> usize {
+        self.get_parsed::<usize>("threads", 1).max(1)
+    }
+
+    /// `--shard N` — objects per shard for the sharded engine
+    /// (default 0 = one shard per thread).
+    pub fn shard(&self) -> usize {
+        self.get_parsed::<usize>("shard", 0)
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +140,19 @@ mod tests {
         let a = Args::parse_from(["x", "--verbose", "--k", "3"]);
         assert!(a.flag("verbose"));
         assert_eq!(a.get_parsed::<u32>("k", 0), 3);
+    }
+
+    #[test]
+    fn threads_and_shard_accessors() {
+        let a = Args::parse_from(["cluster", "--threads", "6", "--shard=128"]);
+        assert_eq!(a.threads(), 6);
+        assert_eq!(a.shard(), 128);
+        let b = Args::parse_from(Vec::<String>::new());
+        assert_eq!(b.threads(), 1);
+        assert_eq!(b.shard(), 0);
+        // --threads 0 clamps to serial rather than panicking downstream.
+        let c = Args::parse_from(["x", "--threads", "0"]);
+        assert_eq!(c.threads(), 1);
     }
 
     #[test]

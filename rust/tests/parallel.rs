@@ -1,0 +1,177 @@
+//! Determinism suite for the sharded multi-threaded engine
+//! (`algo::par`): the parallel path must be **bit-identical** to the
+//! serial reference path — same assignments, same per-iteration
+//! objective trajectory, same merged operation counters — for every
+//! algorithm, thread count, and shard size.
+
+use skm::algo::{run_clustering, run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::metrics::nmi;
+use skm::sparse::build_dataset;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("par", c.n_terms, &c.docs)
+}
+
+/// Satellite: bit-identical assignments, per-iteration objectives, and
+/// NMI between serial and `threads ∈ {2, 4, 7}` across ≥3 seeds and
+/// ≥3 `AlgoKind`s (including `EsIcp`).
+#[test]
+fn determinism_across_threads_seeds_and_kinds() {
+    let kinds = [
+        AlgoKind::EsIcp,
+        AlgoKind::Mivi,
+        AlgoKind::TaIcp,
+        AlgoKind::CsIcp,
+    ];
+    for (trial, &seed) in [31u64, 32, 33].iter().enumerate() {
+        let ds = dataset(300 + 100 * trial, 700 + seed);
+        let cfg = ClusterConfig {
+            k: 9 + trial,
+            seed,
+            ..Default::default()
+        };
+        for &kind in &kinds {
+            let serial = run_clustering(kind, &ds, &cfg);
+            for threads in [2usize, 4, 7] {
+                let par = run_clustering_with(
+                    kind,
+                    &ds,
+                    &cfg,
+                    &ParConfig::with_threads(threads),
+                );
+                let tag = format!("{} seed={seed} threads={threads}", kind.name());
+                // Bit-identical assignments …
+                assert_eq!(par.assign, serial.assign, "{tag}: assignments diverged");
+                // … hence NMI exactly 1 …
+                assert!(
+                    (nmi(&par.assign, &serial.assign) - 1.0).abs() < 1e-12,
+                    "{tag}: NMI != 1"
+                );
+                // … identical trajectory length and per-iteration
+                // objectives, compared bitwise, not with a tolerance.
+                assert_eq!(par.iterations(), serial.iterations(), "{tag}");
+                for (a, b) in par.logs.iter().zip(&serial.logs) {
+                    assert_eq!(
+                        a.objective.to_bits(),
+                        b.objective.to_bits(),
+                        "{tag}: objective diverged at iteration {}",
+                        a.iter
+                    );
+                    assert_eq!(a.changes, b.changes, "{tag}: change counts diverged");
+                }
+                assert_eq!(
+                    par.objective.to_bits(),
+                    serial.objective.to_bits(),
+                    "{tag}: final objective"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite: merged per-thread `OpCounters` exactly equal the serial
+/// counters (mult / branch / cold-touch / candidate / exact-sim / sqrt
+/// totals) for MIVI and ES-ICP on a synthetic corpus.
+#[test]
+fn counter_merge_exactly_matches_serial() {
+    let ds = dataset(420, 811);
+    let cfg = ClusterConfig {
+        k: 11,
+        seed: 5,
+        ..Default::default()
+    };
+    for kind in [AlgoKind::Mivi, AlgoKind::EsIcp] {
+        let serial = run_clustering(kind, &ds, &cfg);
+        for threads in [2usize, 4, 7] {
+            let par =
+                run_clustering_with(kind, &ds, &cfg, &ParConfig::with_threads(threads));
+            assert_eq!(
+                par.logs.len(),
+                serial.logs.len(),
+                "{} threads={threads}",
+                kind.name()
+            );
+            for (a, b) in par.logs.iter().zip(&serial.logs) {
+                assert_eq!(
+                    a.counters, b.counters,
+                    "{} threads={threads}: counters diverged at iteration {}",
+                    kind.name(),
+                    a.iter
+                );
+            }
+            assert_eq!(par.total_mult(), serial.total_mult());
+        }
+    }
+}
+
+/// Every one of the 12 algorithm kinds runs its assignment step through
+/// the sharded engine and lands on the serial solution exactly.
+#[test]
+fn all_twelve_kinds_sharded_exactly() {
+    let ds = dataset(320, 900);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 17,
+        ..Default::default()
+    };
+    let par = ParConfig::with_threads(3);
+    for &kind in AlgoKind::all() {
+        let serial = run_clustering(kind, &ds, &cfg);
+        let sharded = run_clustering_with(kind, &ds, &cfg, &par);
+        assert_eq!(sharded.assign, serial.assign, "{}", kind.name());
+        assert_eq!(
+            sharded.objective.to_bits(),
+            serial.objective.to_bits(),
+            "{}",
+            kind.name()
+        );
+        assert_eq!(sharded.iterations(), serial.iterations(), "{}", kind.name());
+    }
+}
+
+/// Shard size must not matter either: odd shard sizes that split the
+/// corpus unevenly (including shards much smaller than N/threads)
+/// reproduce the serial run bit-for-bit.
+#[test]
+fn shard_size_is_immaterial() {
+    let ds = dataset(310, 1000);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 23,
+        ..Default::default()
+    };
+    for kind in [AlgoKind::EsIcp, AlgoKind::Ding, AlgoKind::Divi] {
+        let serial = run_clustering(kind, &ds, &cfg);
+        for shard in [1usize, 23, 97, 512] {
+            let par = ParConfig { threads: 4, shard };
+            let out = run_clustering_with(kind, &ds, &cfg, &par);
+            assert_eq!(
+                out.assign,
+                serial.assign,
+                "{} shard={shard}",
+                kind.name()
+            );
+            assert_eq!(out.objective.to_bits(), serial.objective.to_bits());
+            assert_eq!(out.total_mult(), serial.total_mult());
+        }
+    }
+}
+
+/// The engine's config plumbing: `ParConfig::from_env` defaults to
+/// serial when the knobs are unset, and `--threads`-style explicit
+/// configs clamp zero to serial.
+#[test]
+fn par_config_defaults() {
+    std::env::remove_var("SKM_THREADS");
+    std::env::remove_var("SKM_SHARD");
+    let p = ParConfig::from_env();
+    assert!(!p.is_parallel());
+    assert_eq!(p.shard, 0);
+    assert!(!ParConfig::with_threads(0).is_parallel());
+    assert!(ParConfig::with_threads(2).is_parallel());
+}
