@@ -1,28 +1,204 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation (not a paper
-//! experiment). Times the building blocks of the assignment step in
-//! isolation so optimization work can attribute gains:
+//! experiment). Times the building blocks of the assignment/update loop
+//! in isolation so optimization work can attribute gains:
 //!
 //!   * plain TAAT accumulation over the mean-inverted index (MIVI core)
 //!   * ES gathering (Region 1+2, two-block arrays) + filter + verify
 //!   * mean-set construction (update step)
-//!   * EsIndex / InvIndex build
+//!   * EsIndex / InvIndex from-scratch builds
+//!   * **incremental splice vs from-scratch rebuild** at late
+//!     iterations (moving fraction < 30%) for all four structured
+//!     index kinds, with a bitwise equality check
+//!   * the ES-ICP phase-level breakdown (gather / verify / update /
+//!     rebuild)
 //!   * EstParams sweep
+//!
+//! Emits a machine-readable baseline to `$SKM_BENCH_JSON` (default
+//! `BENCH_hot_path.json`); the committed copy at the repo root is the
+//! reference trajectory — regenerate with `cargo bench --bench
+//! hot_path` after hot-path changes.
 
 mod common;
 
 use common::{bench_preset, header};
-use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::algo::{
+    make_assigner, run_clustering, seed_means, AlgoKind, Assigner, ClusterConfig, IterState,
+};
 use skm::estparams::{estimate, EstConfig};
-use skm::index::{update_means, EsIndex, InvIndex, ObjInvIndex};
-use skm::util::timer::bench;
+use skm::index::{
+    membership_changes, update_means, update_means_with_rho, CsIndex, CsMaintainer, EsIndex,
+    EsMaintainer, InvIndex, InvMaintainer, MeanSet, ObjInvIndex, TaIndex, TaMaintainer,
+};
+use skm::sparse::Dataset;
+use skm::util::json::Json;
+use skm::util::timer::{bench, BenchStats};
+use std::time::Instant;
+
+/// Drive a plain MIVI Lloyd loop, collecting the mean set after every
+/// update step (the realistic moved-flag trajectory the incremental
+/// maintainers see in production).
+fn mivi_trajectory(ds: &Dataset, cfg: &ClusterConfig, max_iters: usize) -> Vec<MeanSet> {
+    let n = ds.n();
+    let mut st = IterState {
+        k: cfg.k,
+        assign: vec![0; n],
+        rho: vec![-1.0; n],
+        xstate: vec![false; n],
+        means: seed_means(ds, cfg.k, cfg.seed),
+        iter: 1,
+    };
+    let mut assigner = make_assigner(AlgoKind::Mivi, ds, cfg);
+    assigner.rebuild(ds, &st, cfg);
+    let mut seq = vec![st.means.clone()];
+    for r in 1..=max_iters {
+        st.iter = r;
+        let prev = st.assign.clone();
+        let (_, changes) = assigner.assign(ds, &mut st);
+        if changes == 0 && r > 1 {
+            break;
+        }
+        let changed = membership_changes(&prev, &st.assign, cfg.k);
+        let upd = update_means_with_rho(
+            ds,
+            &st.assign,
+            cfg.k,
+            Some(&st.means),
+            Some(&changed),
+            Some(&st.rho),
+        );
+        st.means = upd.means;
+        st.rho = upd.rho;
+        st.iter = r + 1;
+        assigner.rebuild(ds, &st, cfg);
+        seq.push(st.means.clone());
+    }
+    seq
+}
+
+/// The late-iteration window: starting one mean set before the first
+/// iteration whose moving fraction drops under `frac` (the maintainer
+/// needs a predecessor to prime on), through the end of the run.
+fn late_window(seq: &[MeanSet], frac: f64) -> &[MeanSet] {
+    let k = seq[0].k().max(1) as f64;
+    let start = seq
+        .iter()
+        .position(|m| (m.n_moving() as f64) / k < frac)
+        .unwrap_or(seq.len().saturating_sub(6).max(1))
+        .max(1);
+    &seq[start - 1..]
+}
+
+fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        best = best.min(f());
+    }
+    best
+}
+
+/// Shared measurement protocol for one index kind: best-of-`reps`
+/// from-scratch passes over the window vs best-of-`reps` incremental
+/// passes where each rep gets a fresh maintainer, primed (untimed) on
+/// the window's first mean set. Keeping the protocol in one place keeps
+/// all four index kinds' numbers comparable by construction.
+fn time_rebuild_cmp(
+    name: &'static str,
+    reps: usize,
+    window: &[MeanSet],
+    scratch_build: impl Fn(&MeanSet),
+    mut make_updater: impl FnMut() -> Box<dyn FnMut(&MeanSet)>,
+) -> RebuildCmp {
+    let steps = (window.len() - 1).max(1) as f64;
+    let scratch = best_of(reps, || {
+        let t0 = Instant::now();
+        for m in &window[1..] {
+            scratch_build(m);
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    let incremental = best_of(reps, || {
+        let mut update = make_updater();
+        update(&window[0]); // prime: the first build is always full
+        let t0 = Instant::now();
+        for m in &window[1..] {
+            update(m);
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    RebuildCmp {
+        name,
+        scratch_ms_per_iter: scratch * 1e3 / steps,
+        incremental_ms_per_iter: incremental * 1e3 / steps,
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (q, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: value {q}");
+    }
+}
+
+fn assert_inv_eq(a: &InvIndex, b: &InvIndex, tag: &str) {
+    let (ao, ai, av, am) = a.raw_parts();
+    let (bo, bi, bv, bm) = b.raw_parts();
+    assert_eq!(ao, bo, "{tag}: offsets");
+    assert_eq!(ai, bi, "{tag}: ids");
+    assert_eq!(am, bm, "{tag}: mfm");
+    assert_bits_eq(av, bv, tag);
+    assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+}
+
+/// Per-index-kind scratch-vs-incremental comparison over the window.
+struct RebuildCmp {
+    name: &'static str,
+    scratch_ms_per_iter: f64,
+    incremental_ms_per_iter: f64,
+}
+
+impl RebuildCmp {
+    fn json(&self) -> (&str, Json) {
+        (
+            self.name,
+            Json::obj(vec![
+                ("scratch_ms_per_iter", Json::Num(self.scratch_ms_per_iter)),
+                (
+                    "incremental_ms_per_iter",
+                    Json::Num(self.incremental_ms_per_iter),
+                ),
+                (
+                    "speedup",
+                    Json::Num(self.scratch_ms_per_iter / self.incremental_ms_per_iter.max(1e-12)),
+                ),
+            ]),
+        )
+    }
+
+    fn print(&self) {
+        println!(
+            "rebuild {}: scratch {:.3} ms/iter  incremental {:.3} ms/iter  ({:.2}x)",
+            self.name,
+            self.scratch_ms_per_iter,
+            self.incremental_ms_per_iter,
+            self.scratch_ms_per_iter / self.incremental_ms_per_iter.max(1e-12)
+        );
+    }
+}
 
 fn main() {
-    let (p, ds, seed) = bench_preset("pubmed-like");
+    let (p, ds, seed) = bench_preset("nyt-like");
     let cfg = p.config(seed);
-    header("hot_path", "assignment-step microbenchmarks (§Perf)", &ds, cfg.k);
+    header(
+        "hot_path",
+        "assignment/update hot-path microbenchmarks (§Perf)",
+        &ds,
+        cfg.k,
+    );
     let k = cfg.k;
+    let reps = 3usize;
+    let mut micro: Vec<(String, BenchStats)> = Vec::new();
 
-    // Converged state for realistic index shapes.
+    // Converged-ish state for realistic index shapes.
     let warm = ClusterConfig {
         max_iters: 4,
         ..cfg.clone()
@@ -30,12 +206,13 @@ fn main() {
     let out = run_clustering(AlgoKind::Mivi, &ds, &warm);
     let upd = update_means(&ds, &out.assign, k, None, None);
 
-    // --- index builds ---------------------------------------------------
+    // --- index builds (from scratch) -------------------------------------
     let s = bench(1, 10, 2.0, || {
         let idx = InvIndex::build(&upd.means, ds.d());
         std::hint::black_box(idx.nnz());
     });
     println!("{}", s.summary("InvIndex::build (full)"));
+    micro.push(("invindex_build_full".into(), s));
 
     let t_th = ds.d() * 8 / 10;
     let s = bench(1, 10, 2.0, || {
@@ -43,6 +220,7 @@ fn main() {
         std::hint::black_box(idx.mem_bytes());
     });
     println!("{}", s.summary("EsIndex::build (t_th=0.8D)"));
+    micro.push(("esindex_build".into(), s));
 
     // --- update step ------------------------------------------------------
     let changed = vec![true; k];
@@ -51,12 +229,14 @@ fn main() {
         std::hint::black_box(u.objective);
     });
     println!("{}", s.summary("update_means (all clusters moving)"));
+    micro.push(("update_means_all_moving".into(), s));
     let unchanged = vec![false; k];
     let s = bench(1, 10, 3.0, || {
         let u = update_means(&ds, &out.assign, k, Some(&upd.means), Some(&unchanged));
         std::hint::black_box(u.objective);
     });
     println!("{}", s.summary("update_means (all clusters invariant)"));
+    micro.push(("update_means_all_invariant".into(), s));
 
     // --- TAAT accumulation core (MIVI inner loops) -----------------------
     let idx = InvIndex::build(&upd.means, ds.d());
@@ -77,46 +257,178 @@ fn main() {
         std::hint::black_box(acc);
     });
     println!("{}", s.summary("TAAT accumulate (2000 objects)"));
+    micro.push(("taat_accumulate_2000".into(), s));
 
-    // --- ES gathering + verification -------------------------------------
-    let es_idx = EsIndex::build(&upd.means, t_th, 0.02);
-    let s = bench(1, 5, 3.0, || {
-        let mut acc = 0usize;
-        for i in 0..ds.n().min(2000) {
-            let (ts, vs) = ds.x.row(i);
-            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
-            let mut y_base = 0.0;
-            for &u in &vs[p0..] {
-                y_base += u * 0.02;
-            }
-            // Folded accumulator: rho[j] is the upper bound directly.
-            rho.iter_mut().for_each(|r| *r = y_base);
-            for (&t, &u) in ts[..p0].iter().zip(&vs[..p0]) {
-                let (ids, vals) = es_idx.r1.postings(t as usize);
-                let us = u * 0.02;
-                for (&c, &v) in ids.iter().zip(vals) {
-                    rho[c as usize] += us * v;
-                }
-            }
-            for (&t, &u) in ts[p0..].iter().zip(&vs[p0..]) {
-                let (ids, vals) = es_idx.r2.postings(t as usize);
-                let us = u * 0.02;
-                for (&c, &v) in ids.iter().zip(vals) {
-                    rho[c as usize] += us * v;
-                }
-            }
-            let rho_max = upd.rho[i];
-            let mut z = 0usize;
-            for &r in rho.iter() {
-                if r > rho_max {
-                    z += 1;
-                }
-            }
-            acc += z;
+    // --- incremental splice vs from-scratch rebuild ----------------------
+    // Realistic late-iteration trajectory: few centroids move, which is
+    // exactly the regime the incremental maintainers target.
+    let seq = mivi_trajectory(&ds, &cfg, 40);
+    let window = late_window(&seq, 0.30);
+    let steps = (window.len() - 1).max(1) as f64;
+    let kf = window[0].k() as f64;
+    let moving_frac: f64 = window[1..]
+        .iter()
+        .map(|m| m.n_moving() as f64 / kf)
+        .sum::<f64>()
+        / steps;
+    let dirty_frac: f64 = window
+        .windows(2)
+        .map(|w| w[1].dirty_against(&w[0].moved) as f64 / kf)
+        .sum::<f64>()
+        / steps;
+    println!(
+        "late window: {} transitions, avg moving fraction {:.3}, avg dirty fraction {:.3}",
+        window.len() - 1,
+        moving_frac,
+        dirty_frac
+    );
+    let d = ds.d();
+    let (v_th, ta_t) = (0.02f64, (d as f64 * 0.9) as usize);
+
+    let cmps: Vec<RebuildCmp> = vec![
+        time_rebuild_cmp(
+            "inv",
+            reps,
+            window,
+            |m| {
+                std::hint::black_box(InvIndex::build(m, d).nnz());
+            },
+            || {
+                let mut maint = InvMaintainer::new();
+                maint.max_dirty_frac = 1.0;
+                Box::new(move |m: &MeanSet| {
+                    std::hint::black_box(maint.update(m, d, 1.0).nnz());
+                })
+            },
+        ),
+        time_rebuild_cmp(
+            "es",
+            reps,
+            window,
+            |m| {
+                std::hint::black_box(EsIndex::build(m, t_th, v_th).mem_bytes());
+            },
+            || {
+                let mut maint = EsMaintainer::new();
+                maint.max_dirty_frac = 1.0;
+                Box::new(move |m: &MeanSet| {
+                    std::hint::black_box(maint.update(m, t_th, v_th).mem_bytes());
+                })
+            },
+        ),
+        time_rebuild_cmp(
+            "ta",
+            reps,
+            window,
+            |m| {
+                std::hint::black_box(TaIndex::build(m, ta_t).mem_bytes());
+            },
+            || {
+                let mut maint = TaMaintainer::new();
+                maint.max_dirty_frac = 1.0;
+                Box::new(move |m: &MeanSet| {
+                    std::hint::black_box(maint.update(m, ta_t).mem_bytes());
+                })
+            },
+        ),
+        time_rebuild_cmp(
+            "cs",
+            reps,
+            window,
+            |m| {
+                std::hint::black_box(CsIndex::build(m, ta_t).mem_bytes());
+            },
+            || {
+                let mut maint = CsMaintainer::new();
+                maint.max_dirty_frac = 1.0;
+                Box::new(move |m: &MeanSet| {
+                    std::hint::black_box(maint.update(m, ta_t).mem_bytes());
+                })
+            },
+        ),
+    ];
+    for c in &cmps {
+        c.print();
+    }
+
+    // Bitwise equality of the final spliced index vs a scratch build —
+    // the per-kind assertions differ because the region structures do.
+    {
+        let mut maint = InvMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        for m in window {
+            maint.update(m, d, 1.0);
         }
-        std::hint::black_box(acc);
-    });
-    println!("{}", s.summary("ES gather+filter (2000 objects)"));
+        assert!(maint.incremental_rebuilds > 0);
+        assert_inv_eq(
+            maint.index().unwrap(),
+            &InvIndex::build(window.last().unwrap(), d),
+            "inv splice",
+        );
+    }
+    {
+        let mut maint = EsMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        for m in window {
+            maint.update(m, t_th, v_th);
+        }
+        let got = maint.index().unwrap();
+        let want = EsIndex::build(window.last().unwrap(), t_th, v_th);
+        assert_inv_eq(&got.r1, &want.r1, "es splice r1");
+        assert_eq!(got.r2.raw_parts().0, want.r2.raw_parts().0, "es r2 offsets");
+        assert_eq!(got.r2.raw_parts().1, want.r2.raw_parts().1, "es r2 ids");
+        assert_eq!(got.r2.raw_parts().3, want.r2.raw_parts().3, "es r2 mfm");
+        assert_bits_eq(got.r2.raw_parts().2, want.r2.raw_parts().2, "es r2 vals");
+        assert_bits_eq(got.partial.values(), want.partial.values(), "es partial");
+    }
+    {
+        let mut maint = TaMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        for m in window {
+            maint.update(m, ta_t);
+        }
+        let got = maint.index().unwrap();
+        let want = TaIndex::build(window.last().unwrap(), ta_t);
+        assert_inv_eq(&got.r1, &want.r1, "ta splice r1");
+        assert_eq!(got.r2_all.raw_parts().0, want.r2_all.raw_parts().0);
+        assert_eq!(got.r2_all.raw_parts().1, want.r2_all.raw_parts().1);
+        assert_bits_eq(got.r2_all.raw_parts().2, want.r2_all.raw_parts().2, "ta all");
+        assert_eq!(got.r2_moving.raw_parts().0, want.r2_moving.raw_parts().0);
+        assert_eq!(got.r2_moving.raw_parts().1, want.r2_moving.raw_parts().1);
+        assert_bits_eq(
+            got.r2_moving.raw_parts().2,
+            want.r2_moving.raw_parts().2,
+            "ta moving",
+        );
+        assert_bits_eq(got.partial.values(), want.partial.values(), "ta partial");
+    }
+    {
+        let mut maint = CsMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        for m in window {
+            maint.update(m, ta_t);
+        }
+        let got = maint.index().unwrap();
+        let want = CsIndex::build(window.last().unwrap(), ta_t);
+        assert_inv_eq(&got.r1, &want.r1, "cs splice r1");
+        assert_eq!(got.r2_sq.raw_parts().0, want.r2_sq.raw_parts().0);
+        assert_eq!(got.r2_sq.raw_parts().1, want.r2_sq.raw_parts().1);
+        assert_eq!(got.r2_sq.raw_parts().3, want.r2_sq.raw_parts().3);
+        assert_bits_eq(got.r2_sq.raw_parts().2, want.r2_sq.raw_parts().2, "cs sq");
+        assert_bits_eq(got.partial.values(), want.partial.values(), "cs partial");
+    }
+
+    // --- ES-ICP phase breakdown (full run) -------------------------------
+    let es_out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    println!(
+        "ES-ICP phases over {} iters: assign {:.3}s (gather {:.3}s / verify {:.3}s), update {:.3}s, rebuild {:.3}s",
+        es_out.iterations(),
+        es_out.total_assign_secs(),
+        es_out.total_gather_secs(),
+        es_out.total_verify_secs(),
+        es_out.total_update_secs() - es_out.total_rebuild_secs(),
+        es_out.total_rebuild_secs()
+    );
 
     // --- EstParams --------------------------------------------------------
     let s_min = ds.d() * 8 / 10;
@@ -136,4 +448,86 @@ fn main() {
         std::hint::black_box(est.t_th);
     });
     println!("{}", s.summary("EstParams (21 candidates)"));
+    micro.push(("estparams_21".into(), s));
+
+    // --- machine-readable baseline ---------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::str("hot_path")),
+        (
+            "note",
+            Json::str("regenerate with: cargo bench --bench hot_path"),
+        ),
+        (
+            "dataset",
+            Json::obj(vec![
+                ("preset", Json::str("nyt-like")),
+                ("name", Json::str(ds.name.clone())),
+                ("n", Json::UInt(ds.n() as u64)),
+                ("d", Json::UInt(ds.d() as u64)),
+                ("k", Json::UInt(k as u64)),
+                ("seed", Json::UInt(seed)),
+            ]),
+        ),
+        (
+            "incremental_rebuild",
+            Json::obj(vec![
+                ("window_transitions", Json::UInt((window.len() - 1) as u64)),
+                ("avg_moving_fraction", Json::Num(moving_frac)),
+                ("avg_dirty_fraction", Json::Num(dirty_frac)),
+                (
+                    "indexes",
+                    Json::Obj(
+                        cmps.iter()
+                            .map(|c| {
+                                let (name, j) = c.json();
+                                (name.to_string(), j)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "es_icp_run",
+            Json::obj(vec![
+                ("iterations", Json::UInt(es_out.iterations() as u64)),
+                (
+                    "phase_secs",
+                    Json::obj(vec![
+                        ("assign", Json::Num(es_out.total_assign_secs())),
+                        ("gather", Json::Num(es_out.total_gather_secs())),
+                        ("verify", Json::Num(es_out.total_verify_secs())),
+                        (
+                            "update",
+                            Json::Num(
+                                es_out.total_update_secs() - es_out.total_rebuild_secs(),
+                            ),
+                        ),
+                        ("rebuild", Json::Num(es_out.total_rebuild_secs())),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "microbench",
+            Json::Arr(
+                micro
+                    .iter()
+                    .map(|(name, s)| {
+                        Json::obj(vec![
+                            ("name", Json::str(name.clone())),
+                            ("mean_ms", Json::Num(s.mean_s * 1e3)),
+                            ("min_ms", Json::Num(s.min_s * 1e3)),
+                            ("max_ms", Json::Num(s.max_s * 1e3)),
+                            ("iters", Json::UInt(s.iters as u64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path =
+        std::env::var("SKM_BENCH_JSON").unwrap_or_else(|_| "BENCH_hot_path.json".to_string());
+    std::fs::write(&path, json.render_pretty()).expect("write bench json");
+    println!("[wrote {path}]");
 }

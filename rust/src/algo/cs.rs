@@ -13,20 +13,42 @@
 //! shared verbatim by the serial and sharded parallel paths (see
 //! `algo::par`).
 
+use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
-use crate::index::CsIndex;
+use crate::index::CsMaintainer;
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::{phase_timing_enabled, PhaseTimes};
 use crate::sparse::Dataset;
+use std::mem::size_of;
+use std::time::Instant;
+
+/// Pooled per-worker scratch: ρ and squared-norm accumulators plus the
+/// survivor list.
+#[derive(Default)]
+struct CsScratch {
+    rho: Vec<f64>,
+    normsq: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl CsScratch {
+    fn mem_bytes(&self) -> usize {
+        (self.rho.capacity() + self.normsq.capacity()) * size_of::<f64>()
+            + self.z.capacity() * size_of::<u32>()
+    }
+}
 
 pub struct CsAssigner {
     use_icp: bool,
     t_th: usize,
-    idx: Option<CsIndex>,
+    /// Persistent squared-postings index + incremental splice state.
+    maint: CsMaintainer,
     /// ‖x_i^p‖₂ over terms ≥ t_th (Eq. 20), precomputed per object when
     /// the preset t_th activates.
     xp_norm: Vec<f64>,
-    /// K at the last rebuild (per-shard scratch accounting: ρ + norms).
-    k: usize,
+    scratch: ScratchPool<CsScratch>,
+    /// Per-object gather/verify probes (`SKM_PHASE_TIMING`, default on).
+    phase_timing: bool,
 }
 
 impl CsAssigner {
@@ -34,9 +56,10 @@ impl CsAssigner {
         Self {
             use_icp,
             t_th: ds.d(),
-            idx: None,
+            maint: CsMaintainer::new(),
             xp_norm: vec![0.0; ds.n()],
-            k: 0,
+            scratch: ScratchPool::new(),
+            phase_timing: phase_timing_enabled(),
         }
     }
 
@@ -59,14 +82,34 @@ impl CsAssigner {
         lo: usize,
         out: &mut [u32],
     ) -> (OpCounters, usize) {
-        let idx = self.idx.as_ref().expect("rebuild not called");
+        let idx = self.maint.index().expect("rebuild not called");
         let t_th = self.t_th;
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        // Shard-local scratch.
-        let mut rho = vec![0.0f64; k];
-        let mut normsq = vec![0.0f64; k];
-        let mut z: Vec<u32> = Vec::new();
+        // Pooled shard scratch — no per-call allocations (§Perf).
+        let s = self.scratch.checkout(CsScratch::default);
+        let CsScratch {
+            mut rho,
+            mut normsq,
+            mut z,
+        } = s;
+        if rho.len() != k {
+            rho.clear();
+            rho.resize(k, 0.0);
+            normsq.clear();
+            normsq.resize(k, 0.0);
+        }
+        // Clear before reserving: `reserve` is relative to len, so this
+        // guarantees capacity ≥ K once and pushes never reallocate.
+        z.clear();
+        if z.capacity() < k {
+            z.reserve(k);
+        }
+        let mut ph = PhaseTimes::default();
+        // Per-object probes cost two Instant::now() calls per object;
+        // SKM_PHASE_TIMING=0 turns them off (phases then read 0).
+        let timing = self.phase_timing;
+        let mut t0 = Instant::now();
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
@@ -129,6 +172,14 @@ impl CsAssigner {
                 }
             }
 
+            let t1 = if timing {
+                let t1 = Instant::now();
+                ph.gather += (t1 - t0).as_secs_f64();
+                t1
+            } else {
+                t0
+            };
+
             // Verification: exact `s ≥ t_th` contribution via the full
             // partial index (same structure as Algorithm 4's phase).
             let nth = (ts.len() - p0) as u64;
@@ -157,7 +208,13 @@ impl CsAssigner {
                 *slot = amax;
                 changes += 1;
             }
+            if timing {
+                let t2 = Instant::now();
+                ph.verify += (t2 - t1).as_secs_f64();
+                t0 = t2;
+            }
         }
+        self.scratch.checkin(CsScratch { rho, normsq, z }, ph);
         (counters, changes)
     }
 }
@@ -171,8 +228,9 @@ impl Assigner for CsAssigner {
                 self.compute_xp_norms(ds);
             }
         }
-        self.idx = Some(CsIndex::build(&st.means, self.t_th));
-        self.k = st.k;
+        // Incremental splice when t_th is unchanged and few centroids
+        // moved; full rebuild otherwise (first pass, preset switch).
+        self.maint.update(&st.means, self.t_th);
     }
 
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
@@ -207,9 +265,13 @@ impl Assigner for CsAssigner {
     }
 
     fn mem_bytes(&self) -> usize {
-        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
-            + self.xp_norm.len() * 8
-            + self.k * 2 * 8
+        self.maint.mem_bytes()
+            + self.xp_norm.len() * size_of::<f64>()
+            + self.scratch.mem_bytes(CsScratch::mem_bytes)
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        self.scratch.drain_phases()
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {

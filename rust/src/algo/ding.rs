@@ -21,7 +21,10 @@
 
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
 use crate::sparse::Dataset;
+use std::mem::size_of;
+use std::time::Instant;
 
 pub struct DingAssigner {
     /// Dense K × D mean matrix (full expression, Section II).
@@ -36,9 +39,13 @@ pub struct DingAssigner {
     group_start: Vec<usize>,
     /// Max drift per group at this iteration.
     group_drift: Vec<f64>,
-    /// Per-object per-group similarity upper bounds (N × G).
+    /// Per-object per-group similarity upper bounds (N × G). Persistent
+    /// across iterations — Ding's scratch was always hoisted; the bound
+    /// matrix doubles as the pruning state.
     gub: Vec<f64>,
     first_pass_done: bool,
+    /// Assignment-step phase seconds since the last `take_phases` drain.
+    phases: PhaseTimes,
 }
 
 impl DingAssigner {
@@ -64,6 +71,7 @@ impl DingAssigner {
             group_drift: vec![0.0; n_groups],
             gub: vec![f64::INFINITY; ds.n() * n_groups],
             first_pass_done: false,
+            phases: PhaseTimes::default(),
         }
     }
 
@@ -202,6 +210,7 @@ impl DingAssigner {
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
         let first_pass = !self.first_pass_done;
+        let t0 = Instant::now();
         let mut gub = std::mem::take(&mut self.gub);
         let result = {
             let this = &*self;
@@ -213,6 +222,9 @@ impl DingAssigner {
         };
         self.gub = gub;
         self.first_pass_done = true;
+        // Ding+ has no verification phase: bounds + exact evaluation are
+        // one interleaved gathering pass.
+        self.phases.gather += t0.elapsed().as_secs_f64();
         result
     }
 }
@@ -267,8 +279,14 @@ impl Assigner for DingAssigner {
     }
 
     fn mem_bytes(&self) -> usize {
-        (self.dense.len() + self.prev_dense.len() + self.gub.len()) * 8
-            + self.group_of.len() * 4
+        (self.dense.len() + self.prev_dense.len() + self.gub.len() + self.group_drift.len())
+            * size_of::<f64>()
+            + self.group_of.len() * size_of::<u32>()
+            + self.group_start.len() * size_of::<usize>()
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        std::mem::take(&mut self.phases)
     }
 }
 

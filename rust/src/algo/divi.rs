@@ -14,16 +14,43 @@
 //! partial-similarity additions happen in exactly the serial order, so
 //! the sharded path is bit-identical to the serial one (see `algo::par`).
 
+use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::{MeanSet, ObjInvIndex};
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
 use crate::sparse::Dataset;
+use std::mem::size_of;
+use std::time::Instant;
+
+/// Pooled per-worker scratch: the shard-length partial-sum arrays and
+/// running-best state. `version[li] == epoch` marks a live `score[li]`;
+/// `0` marks never-touched, and the epoch counter persists across
+/// iterations (recycled before it could wrap into live values).
+#[derive(Default)]
+struct DiviScratch {
+    score: Vec<f64>,
+    version: Vec<u32>,
+    touched: Vec<u32>,
+    best: Vec<f64>,
+    besta: Vec<u32>,
+    epoch: u32,
+}
+
+impl DiviScratch {
+    fn mem_bytes(&self) -> usize {
+        (self.score.capacity() + self.best.capacity()) * size_of::<f64>()
+            + (self.version.capacity() + self.touched.capacity() + self.besta.capacity())
+                * size_of::<u32>()
+    }
+}
 
 pub struct DiviAssigner {
     /// Object-inverted index (built once; objects never change).
     obj_idx: ObjInvIndex,
-    /// Number of objects (scratch accounting).
+    /// Number of objects (serial shard covers everything).
     n: usize,
+    scratch: ScratchPool<DiviScratch>,
 }
 
 impl DiviAssigner {
@@ -31,6 +58,7 @@ impl DiviAssigner {
         Self {
             obj_idx: ObjInvIndex::build(&ds.x, 0),
             n: ds.n(),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -53,22 +81,48 @@ impl DiviAssigner {
         let full_range = lo == 0 && hi >= self.n;
         let mut counters = OpCounters::new();
 
-        // Shard-local state, indexed by `i - lo`.
+        // Pooled shard-local state, indexed by `i - lo` (§Perf: no
+        // per-call allocations once the pool is warm).
         //
         // `version[li] == epoch` ⇔ `score[li]` is live for the current
         // mean. This per-entry check is exactly the kind of irregular
         // conditional the AFM analysis blames for DIVI's branch behavior.
-        let mut score = vec![0.0f64; len];
-        let mut version = vec![u32::MAX; len];
-        let mut touched: Vec<u32> = Vec::new();
-        let mut epoch = 0u32;
+        let s = self.scratch.checkout(DiviScratch::default);
+        let DiviScratch {
+            mut score,
+            mut version,
+            mut touched,
+            mut best,
+            mut besta,
+            mut epoch,
+        } = s;
+        if score.len() < len {
+            score.resize(len, 0.0);
+            version.resize(len, 0);
+        }
+        // Clear before reserving: `reserve` is relative to len, so this
+        // guarantees capacity ≥ shard length once and pushes never
+        // reallocate (the checked-in scratch arrives non-empty).
+        touched.clear();
+        if touched.capacity() < len {
+            touched.reserve(len);
+        }
+        // Epoch-space guard: `0` marks never-touched entries; recycle
+        // before the per-mean increments could wrap into live values.
+        if epoch > u32::MAX - k as u32 - 1 {
+            version.iter_mut().for_each(|v| *v = 0);
+            epoch = 0;
+        }
         // Running best initialized with the previous-iteration thresholds
         // (same tie-break semantics as MIVI's ρ_max).
-        let mut best = rho_prev[lo..hi].to_vec();
-        let mut besta = out.to_vec();
+        best.clear();
+        best.extend_from_slice(&rho_prev[lo..hi]);
+        besta.clear();
+        besta.extend_from_slice(out);
+        let t0 = Instant::now();
 
         for j in 0..k {
-            epoch = epoch.wrapping_add(1);
+            epoch += 1;
             touched.clear();
             let (mts, mvs) = means.m.row(j);
             let mut mult = 0u64;
@@ -116,6 +170,23 @@ impl DiviAssigner {
                 changes += 1;
             }
         }
+        // DIVI has no verification phase: the mean-major scatter pass is
+        // all gathering.
+        let ph = PhaseTimes {
+            gather: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        self.scratch.checkin(
+            DiviScratch {
+                score,
+                version,
+                touched,
+                best,
+                besta,
+                epoch,
+            },
+            ph,
+        );
         (counters, changes)
     }
 }
@@ -157,7 +228,11 @@ impl Assigner for DiviAssigner {
     }
 
     fn mem_bytes(&self) -> usize {
-        self.obj_idx.nnz() * 12 + self.n * 17 // score+version+best+besta
+        self.obj_idx.mem_bytes() + self.scratch.mem_bytes(DiviScratch::mem_bytes)
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        self.scratch.drain_phases()
     }
 }
 

@@ -24,11 +24,15 @@
 //! stay serial inside `rebuild` — the shared structured index is then
 //! read-only for the whole assignment step.
 
+use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::estparams::{estimate, EstConfig};
-use crate::index::{EsIndex, ObjInvIndex};
+use crate::index::{EsMaintainer, ObjInvIndex};
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::{phase_timing_enabled, PhaseTimes};
 use crate::sparse::{CsrMatrix, Dataset};
+use std::mem::size_of;
+use std::time::Instant;
 
 /// Which variant of the ES family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +46,20 @@ pub enum EsMode {
     TermOnly,
 }
 
+/// Pooled per-worker scratch: the folded ρ accumulator and the
+/// survivor list `Z`.
+#[derive(Default)]
+struct EsScratch {
+    rho: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl EsScratch {
+    fn mem_bytes(&self) -> usize {
+        self.rho.capacity() * size_of::<f64>() + self.z.capacity() * size_of::<u32>()
+    }
+}
+
 pub struct EsAssigner {
     mode: EsMode,
     /// Current structural parameters. Before the first estimation this
@@ -50,7 +68,10 @@ pub struct EsAssigner {
     /// special-casing).
     t_th: usize,
     v_th: f64,
-    idx: Option<EsIndex>,
+    /// Persistent structured index + incremental splice state (§Perf);
+    /// falls back to a from-scratch build whenever EstParams changes
+    /// `(t_th, v_th)`.
+    maint: EsMaintainer,
     /// Object matrix with values scaled by `v_th` (Appendix A). Rebuilt
     /// only when `v_th` changes (estimations happen twice).
     xs: CsrMatrix,
@@ -58,8 +79,9 @@ pub struct EsAssigner {
     /// Partial object inverted index for EstParams (built lazily).
     xp: Option<ObjInvIndex>,
     estimations_done: usize,
-    /// K at the last rebuild (per-shard scratch accounting).
-    k: usize,
+    scratch: ScratchPool<EsScratch>,
+    /// Per-object gather/verify probes (`SKM_PHASE_TIMING`, default on).
+    phase_timing: bool,
 }
 
 impl EsAssigner {
@@ -68,12 +90,13 @@ impl EsAssigner {
             mode,
             t_th: ds.d(),
             v_th: 1.0,
-            idx: None,
+            maint: EsMaintainer::new(),
             xs: ds.x.clone(),
             xs_scale: 1.0,
             xp: None,
             estimations_done: 0,
-            k: 0,
+            scratch: ScratchPool::new(),
+            phase_timing: phase_timing_enabled(),
         }
     }
 
@@ -135,14 +158,31 @@ impl EsAssigner {
         lo: usize,
         out: &mut [u32],
     ) -> (OpCounters, usize) {
-        let idx = self.idx.as_ref().expect("rebuild not called");
+        let idx = self.maint.index().expect("rebuild not called");
         let t_th = self.t_th;
         let use_icp = self.use_icp();
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        // Shard-local scratch (folded ρ accumulator + survivor list).
-        let mut rho = vec![0.0f64; k];
-        let mut z: Vec<u32> = Vec::new();
+        // Pooled shard scratch (folded ρ accumulator + survivor list):
+        // no per-call allocations — `z` is pre-reserved to K so pushes
+        // never grow it (§Perf).
+        let s = self.scratch.checkout(EsScratch::default);
+        let EsScratch { mut rho, mut z } = s;
+        if rho.len() != k {
+            rho.clear();
+            rho.resize(k, 0.0);
+        }
+        // Clear before reserving: `reserve` is relative to len, so this
+        // guarantees capacity ≥ K once and pushes never reallocate.
+        z.clear();
+        if z.capacity() < k {
+            z.reserve(k);
+        }
+        let mut ph = PhaseTimes::default();
+        // Per-object probes cost two Instant::now() calls per object;
+        // SKM_PHASE_TIMING=0 turns them off (phases then read 0).
+        let timing = self.phase_timing;
+        let mut t0 = Instant::now();
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
@@ -209,6 +249,14 @@ impl EsAssigner {
                 }
             }
 
+            let t1 = if timing {
+                let t1 = Instant::now();
+                ph.gather += (t1 - t0).as_secs_f64();
+                t1
+            } else {
+                t0
+            };
+
             // Verification phase: retire the survivors' remaining bound
             // mass through the deficit index — rho lands exactly on the
             // similarity (Algorithm 4 l.12–13, folded).
@@ -237,7 +285,13 @@ impl EsAssigner {
                 *slot = amax;
                 changes += 1;
             }
+            if timing {
+                let t2 = Instant::now();
+                ph.verify += (t2 - t1).as_secs_f64();
+                t0 = t2;
+            }
         }
+        self.scratch.checkin(EsScratch { rho, z }, ph);
         (counters, changes)
     }
 }
@@ -282,8 +336,10 @@ impl Assigner for EsAssigner {
                 self.xp = None;
             }
         }
-        self.idx = Some(EsIndex::build(&st.means, self.t_th, self.v_th));
-        self.k = st.k;
+        // Incremental maintenance: splice the persistent index when the
+        // parameters are unchanged and few centroids moved; full rebuild
+        // otherwise (in particular right after the estimations above).
+        self.maint.update(&st.means, self.t_th, self.v_th);
     }
 
     fn assign(&mut self, _ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
@@ -322,9 +378,14 @@ impl Assigner for EsAssigner {
         // paper scales in place, Algorithm 4 lines 1-2), and X^p lives
         // only through the two estimations, so neither is counted here —
         // this matches the paper's Max MEM accounting where the partial
-        // mean-inverted index is the differentiating term (§VI-D).
-        let idx = self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0);
-        idx + self.k * 8
+        // mean-inverted index is the differentiating term (§VI-D). The
+        // maintainer's persistent splice state and the pooled scratch
+        // ARE counted (they live for the whole run).
+        self.maint.mem_bytes() + self.scratch.mem_bytes(EsScratch::mem_bytes)
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        self.scratch.drain_phases()
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {

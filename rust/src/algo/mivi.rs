@@ -15,25 +15,40 @@
 //! shared verbatim by the serial path and the sharded parallel path, so
 //! the two are bit-identical by construction (see `algo::par`).
 
+use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
-use crate::index::InvIndex;
+use crate::index::InvMaintainer;
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
 use crate::sparse::Dataset;
+use std::mem::size_of;
+use std::time::Instant;
+
+/// Pooled per-worker scratch: the K-length similarity accumulator.
+#[derive(Default)]
+struct MiviScratch {
+    rho: Vec<f64>,
+}
+
+impl MiviScratch {
+    fn mem_bytes(&self) -> usize {
+        self.rho.capacity() * size_of::<f64>()
+    }
+}
 
 pub struct MiviAssigner {
     use_icp: bool,
-    idx: Option<InvIndex>,
-    /// K at the last rebuild — sizes the per-shard similarity
-    /// accumulator (scratch accounting in `mem_bytes`).
-    k: usize,
+    /// Persistent index + incremental splice state (§Perf).
+    maint: InvMaintainer,
+    scratch: ScratchPool<MiviScratch>,
 }
 
 impl MiviAssigner {
     pub fn new(_ds: &Dataset, use_icp: bool) -> Self {
         Self {
             use_icp,
-            idx: None,
-            k: 0,
+            maint: InvMaintainer::new(),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -48,11 +63,17 @@ impl MiviAssigner {
         lo: usize,
         out: &mut [u32],
     ) -> (OpCounters, usize) {
-        let idx = self.idx.as_ref().expect("rebuild not called");
+        let idx = self.maint.index().expect("rebuild not called");
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        // Similarity accumulator ρ (length K), local to the shard.
-        let mut rho = vec![0.0f64; k];
+        // Pooled shard scratch — no per-call allocations (§Perf).
+        let mut s = self.scratch.checkout(MiviScratch::default);
+        if s.rho.len() != k {
+            s.rho.clear();
+            s.rho.resize(k, 0.0);
+        }
+        let rho = &mut s.rho;
+        let t0 = Instant::now();
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
@@ -112,14 +133,20 @@ impl MiviAssigner {
                 }
             }
         }
+        // MIVI/ICP have no separate verification phase: the whole
+        // term-at-a-time pass (accumulation + argmax) is gathering.
+        let ph = PhaseTimes {
+            gather: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        self.scratch.checkin(s, ph);
         (counters, changes)
     }
 }
 
 impl Assigner for MiviAssigner {
     fn rebuild(&mut self, ds: &Dataset, st: &IterState, _cfg: &ClusterConfig) {
-        self.idx = Some(InvIndex::build(&st.means, ds.d()));
-        self.k = st.k;
+        self.maint.update(&st.means, ds.d(), 1.0);
     }
 
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
@@ -154,7 +181,11 @@ impl Assigner for MiviAssigner {
     }
 
     fn mem_bytes(&self) -> usize {
-        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0) + self.k * 8
+        self.maint.mem_bytes() + self.scratch.mem_bytes(MiviScratch::mem_bytes)
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        self.scratch.drain_phases()
     }
 }
 

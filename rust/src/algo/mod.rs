@@ -34,6 +34,7 @@ pub use par::ParConfig;
 
 use crate::index::{membership_changes, update_means_with_rho_par, MeanSet};
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
 use crate::sparse::{CsrMatrix, Dataset};
 use crate::util::rng::Pcg32;
 use crate::util::timer::Stopwatch;
@@ -166,9 +167,23 @@ pub struct IterLog {
     pub iter: usize,
     pub counters: OpCounters,
     pub assign_secs: f64,
-    /// Update-step time (mean construction + index rebuild + EstParams,
-    /// merged as in the paper's footnote 7).
+    /// Mean-construction time (update step proper: centroid sums,
+    /// normalization, ρ, ICP bookkeeping).
     pub update_secs: f64,
+    /// Index-maintenance time (incremental splice or from-scratch
+    /// rebuild, plus EstParams where applicable) performed during this
+    /// iteration's update window — i.e. over the mean set whose
+    /// `n_moving` is logged in the same record. Record 1 additionally
+    /// carries the initial seed-index build. Together with
+    /// `update_secs` this is the paper's footnote-7 "update step".
+    pub rebuild_secs: f64,
+    /// Assignment gathering-phase seconds (region accumulation +
+    /// pruning filters), summed across shard workers — CPU-seconds
+    /// under `--threads N`, wall time in serial runs.
+    pub gather_secs: f64,
+    /// Assignment verification-phase seconds (partial-index exact pass
+    /// + argmax), same units caveat as `gather_secs`.
+    pub verify_secs: f64,
     pub changes: usize,
     pub cpr: f64,
     pub mem_bytes: usize,
@@ -207,8 +222,32 @@ impl ClusterOutput {
         self.logs.iter().map(|l| l.assign_secs).sum()
     }
 
+    /// Total update-step seconds in the paper's footnote-7 sense: mean
+    /// construction **plus** index maintenance / EstParams.
     pub fn total_update_secs(&self) -> f64 {
-        self.logs.iter().map(|l| l.update_secs).sum()
+        self.logs.iter().map(|l| l.update_secs + l.rebuild_secs).sum()
+    }
+
+    /// Index-maintenance (rebuild-phase) seconds alone.
+    pub fn total_rebuild_secs(&self) -> f64 {
+        self.logs.iter().map(|l| l.rebuild_secs).sum()
+    }
+
+    pub fn total_gather_secs(&self) -> f64 {
+        self.logs.iter().map(|l| l.gather_secs).sum()
+    }
+
+    pub fn total_verify_secs(&self) -> f64 {
+        self.logs.iter().map(|l| l.verify_secs).sum()
+    }
+
+    /// Operation counters summed over the whole run.
+    pub fn total_counters(&self) -> OpCounters {
+        let mut c = OpCounters::new();
+        for l in &self.logs {
+            c.add(&l.counters);
+        }
+        c
     }
 
     pub fn total_secs(&self) -> f64 {
@@ -251,8 +290,21 @@ pub trait Assigner: Sync {
         self.assign(ds, st)
     }
 
-    /// Bytes held by the algorithm-specific structures right now.
+    /// Bytes held by the algorithm-specific structures right now
+    /// (indexes, persistent maintainer state, pooled scratch).
     fn mem_bytes(&self) -> usize;
+
+    /// Drain the gather/verify phase seconds accumulated since the last
+    /// call (the coordinator calls this once per assignment step). The
+    /// six built-in assigners all override this: ES/TA/CS split
+    /// gather/verify per object, MIVI/DIVI/Ding report their whole pass
+    /// as gather. The default reports no breakdown (all-zero) — an
+    /// assigner that does not override it logs zero phase times.
+    /// Summed across shard workers, so parallel runs report
+    /// CPU-seconds, not wall time (see [`PhaseTimes`]).
+    fn take_phases(&mut self) -> PhaseTimes {
+        PhaseTimes::default()
+    }
 
     /// Current structural parameters, if applicable.
     fn params(&self) -> (Option<usize>, Option<f64>) {
@@ -332,12 +384,13 @@ pub fn run_clustering_with(
     let mut objective = f64::NAN;
     let mut converged = false;
 
-    // Initial structures from the seed means.
-    let mut upd_sw = Stopwatch::new();
-    upd_sw.start();
+    // Initial structures from the seed means; carried into iteration
+    // 1's rebuild phase (see the attribution note at the log push).
+    let mut rb_sw = Stopwatch::new();
+    rb_sw.start();
     assigner.rebuild(ds, &st, cfg);
-    upd_sw.stop();
-    let mut carry_update_secs = upd_sw.secs();
+    rb_sw.stop();
+    let mut carry_rebuild_secs = rb_sw.secs();
 
     for r in 1..=cfg.max_iters {
         st.iter = r;
@@ -351,6 +404,7 @@ pub fn run_clustering_with(
             assigner.assign(ds, &mut st)
         };
         asg_sw.stop();
+        let phases = assigner.take_phases();
 
         let mem = assigner.mem_bytes();
         max_mem = max_mem.max(mem);
@@ -362,7 +416,10 @@ pub fn run_clustering_with(
                 iter: r,
                 counters,
                 assign_secs: asg_sw.secs(),
-                update_secs: carry_update_secs,
+                update_secs: 0.0,
+                rebuild_secs: carry_rebuild_secs,
+                gather_secs: phases.gather,
+                verify_secs: phases.verify,
                 changes,
                 cpr: counters.cpr(n, cfg.k),
                 mem_bytes: mem,
@@ -373,10 +430,10 @@ pub fn run_clustering_with(
             break;
         }
 
-        // Update step (+ index rebuild + EstParams where applicable).
+        // Update step: mean construction + ρ / ICP bookkeeping …
         let changed = membership_changes(&prev_assign, &st.assign, cfg.k);
-        let mut sw = Stopwatch::new();
-        sw.start();
+        let mut upd_sw = Stopwatch::new();
+        upd_sw.start();
         let upd = update_means_with_rho_par(
             ds,
             &st.assign,
@@ -395,21 +452,36 @@ pub fn run_clustering_with(
         st.means = upd.means;
         st.rho = upd.rho;
         st.iter = r + 1;
-        assigner.rebuild(ds, &st, cfg);
-        sw.stop();
+        upd_sw.stop();
 
+        // … and the rebuild phase: incremental index splice (or full
+        // rebuild) + EstParams, timed separately for the breakdown.
+        let mut rb_sw = Stopwatch::new();
+        rb_sw.start();
+        assigner.rebuild(ds, &st, cfg);
+        rb_sw.stop();
+
+        // Attribution convention: row r's `rebuild_secs` is the index
+        // maintenance performed during r's update window — it rebuilds
+        // over the post-update means, i.e. exactly the mean set whose
+        // `n_moving` is logged in the same row, so rebuild cost and
+        // mover count line up for the Fig-style plots and --bench-json.
+        // Row 1 additionally carries the initial seed-index build.
         logs.push(IterLog {
             iter: r,
             counters,
             assign_secs: asg_sw.secs(),
-            update_secs: carry_update_secs + sw.secs(),
+            update_secs: upd_sw.secs(),
+            rebuild_secs: carry_rebuild_secs + rb_sw.secs(),
+            gather_secs: phases.gather,
+            verify_secs: phases.verify,
             changes,
             cpr: counters.cpr(n, cfg.k),
             mem_bytes: assigner.mem_bytes(),
             n_moving: st.means.n_moving(),
             objective,
         });
-        carry_update_secs = 0.0;
+        carry_rebuild_secs = 0.0;
         max_mem = max_mem.max(assigner.mem_bytes());
     }
 

@@ -23,6 +23,64 @@
 //! routine); see [`crate::index::update_means_with_rho_par`].
 
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
+use std::sync::Mutex;
+
+/// A pool of per-worker scratch objects (§Perf: the allocation-free
+/// iteration loop). Assignment-step scratch — ρ accumulators, survivor
+/// lists, bound arrays — used to be allocated on every `assign_range`
+/// call; pooling hoists it into persistent storage reused across
+/// iterations, so the steady-state assignment loop performs **zero**
+/// heap allocations (enforced by `rust/tests/alloc_free.rs`).
+///
+/// Workers `checkout` a scratch at shard start and `checkin` at shard
+/// end, folding their locally accumulated [`PhaseTimes`] into the pool;
+/// the coordinator drains the merged phases once per iteration. Scratch
+/// contents are fully reset per object, so *which* pooled instance a
+/// worker gets never affects results — the engine stays bit-identical
+/// to the serial path.
+pub struct ScratchPool<T> {
+    items: Mutex<Vec<T>>,
+    phases: Mutex<PhaseTimes>,
+}
+
+impl<T> Default for ScratchPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ScratchPool<T> {
+    pub fn new() -> Self {
+        Self {
+            items: Mutex::new(Vec::new()),
+            phases: Mutex::new(PhaseTimes::default()),
+        }
+    }
+
+    /// Pop a pooled scratch, or create one with `make` (first use only).
+    pub fn checkout(&self, make: impl FnOnce() -> T) -> T {
+        let pooled = self.items.lock().unwrap().pop();
+        pooled.unwrap_or_else(make)
+    }
+
+    /// Return a scratch to the pool and fold in the shard's phase times.
+    pub fn checkin(&self, item: T, phases: PhaseTimes) {
+        self.phases.lock().unwrap().add(&phases);
+        self.items.lock().unwrap().push(item);
+    }
+
+    /// Take (and reset) the phase times accumulated since the last drain.
+    pub fn drain_phases(&self) -> PhaseTimes {
+        std::mem::take(&mut *self.phases.lock().unwrap())
+    }
+
+    /// Bytes held by all pooled scratch objects, as reported by `f`
+    /// (Max-MEM accounting of the persistent scratch).
+    pub fn mem_bytes(&self, f: impl Fn(&T) -> usize) -> usize {
+        self.items.lock().unwrap().iter().map(f).sum()
+    }
+}
 
 /// Configuration of the sharded execution engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -208,6 +266,34 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scratch_pool_reuses_and_merges_phases() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        let mut a = pool.checkout(|| Vec::with_capacity(16));
+        a.push(1);
+        pool.checkin(
+            a,
+            PhaseTimes {
+                gather: 1.0,
+                ..Default::default()
+            },
+        );
+        let b = pool.checkout(Vec::new);
+        assert!(b.capacity() >= 16, "pooled scratch was not reused");
+        pool.checkin(
+            b,
+            PhaseTimes {
+                verify: 2.0,
+                ..Default::default()
+            },
+        );
+        let ph = pool.drain_phases();
+        assert_eq!(ph.gather, 1.0);
+        assert_eq!(ph.verify, 2.0);
+        assert_eq!(pool.drain_phases().total(), 0.0);
+        assert!(pool.mem_bytes(|v| v.capacity()) >= 16);
+    }
 
     #[test]
     fn shard_size_auto_and_explicit() {

@@ -16,21 +16,43 @@
 //! shared verbatim by the serial and sharded parallel paths (see
 //! `algo::par`).
 
+use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
-use crate::index::TaIndex;
+use crate::index::TaMaintainer;
 use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::{phase_timing_enabled, PhaseTimes};
 use crate::sparse::Dataset;
+use std::mem::size_of;
+use std::time::Instant;
+
+/// Pooled per-worker scratch: ρ and remaining-mass accumulators plus
+/// the survivor list.
+#[derive(Default)]
+struct TaScratch {
+    rho: Vec<f64>,
+    y: Vec<f64>,
+    z: Vec<u32>,
+}
+
+impl TaScratch {
+    fn mem_bytes(&self) -> usize {
+        (self.rho.capacity() + self.y.capacity()) * size_of::<f64>()
+            + self.z.capacity() * size_of::<u32>()
+    }
+}
 
 pub struct TaAssigner {
     use_icp: bool,
     /// Preset `t_th` (paper §VI-C: 0.9·D); `D` before iteration 2 so the
     /// first pass degenerates to plain MIVI.
     t_th: usize,
-    idx: Option<TaIndex>,
+    /// Persistent sorted-postings index + incremental splice state.
+    maint: TaMaintainer,
     /// ‖x_i‖₁ per object (Eq. 16 denominator), precomputed once.
     l1: Vec<f64>,
-    /// K at the last rebuild (per-shard scratch accounting: ρ and y).
-    k: usize,
+    scratch: ScratchPool<TaScratch>,
+    /// Per-object gather/verify probes (`SKM_PHASE_TIMING`, default on).
+    phase_timing: bool,
 }
 
 impl TaAssigner {
@@ -39,9 +61,10 @@ impl TaAssigner {
         Self {
             use_icp,
             t_th: ds.d(),
-            idx: None,
+            maint: TaMaintainer::new(),
             l1,
-            k: 0,
+            scratch: ScratchPool::new(),
+            phase_timing: phase_timing_enabled(),
         }
     }
 
@@ -56,14 +79,34 @@ impl TaAssigner {
         lo: usize,
         out: &mut [u32],
     ) -> (OpCounters, usize) {
-        let idx = self.idx.as_ref().expect("rebuild not called");
+        let idx = self.maint.index().expect("rebuild not called");
         let t_th = self.t_th;
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
-        // Shard-local scratch.
-        let mut rho = vec![0.0f64; k];
-        let mut y = vec![0.0f64; k];
-        let mut z: Vec<u32> = Vec::new();
+        // Pooled shard scratch — no per-call allocations (§Perf).
+        let s = self.scratch.checkout(TaScratch::default);
+        let TaScratch {
+            mut rho,
+            mut y,
+            mut z,
+        } = s;
+        if rho.len() != k {
+            rho.clear();
+            rho.resize(k, 0.0);
+            y.clear();
+            y.resize(k, 0.0);
+        }
+        // Clear before reserving: `reserve` is relative to len, so this
+        // guarantees capacity ≥ K once and pushes never reallocate.
+        z.clear();
+        if z.capacity() < k {
+            z.reserve(k);
+        }
+        let mut ph = PhaseTimes::default();
+        // Per-object probes cost two Instant::now() calls per object;
+        // SKM_PHASE_TIMING=0 turns them off (phases then read 0).
+        let timing = self.phase_timing;
+        let mut t0 = Instant::now();
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
@@ -144,6 +187,14 @@ impl TaAssigner {
                 }
             }
 
+            let t1 = if timing {
+                let t1 = Instant::now();
+                ph.gather += (t1 - t0).as_secs_f64();
+                t1
+            } else {
+                t0
+            };
+
             // Verification: add the not-yet-consumed region-2/3 values
             // (those `< v_ta`), skipping consumed ones with the
             // conditional the paper calls out (Algorithm 8 lines 12–15).
@@ -176,7 +227,13 @@ impl TaAssigner {
                 *slot = amax;
                 changes += 1;
             }
+            if timing {
+                let t2 = Instant::now();
+                ph.verify += (t2 - t1).as_secs_f64();
+                t0 = t2;
+            }
         }
+        self.scratch.checkin(TaScratch { rho, y, z }, ph);
         (counters, changes)
     }
 }
@@ -184,12 +241,13 @@ impl TaAssigner {
 impl Assigner for TaAssigner {
     fn rebuild(&mut self, ds: &Dataset, st: &IterState, cfg: &ClusterConfig) {
         // Switch to the preset t_th once a real threshold ρ_max exists
-        // (after the first update step).
+        // (after the first update step). The maintainer detects the
+        // parameter change and falls back to a full build, then splices
+        // incrementally for the rest of the run.
         if st.iter >= 2 {
             self.t_th = ((ds.d() as f64 * cfg.t_th_frac) as usize).min(ds.d());
         }
-        self.idx = Some(TaIndex::build(&st.means, self.t_th));
-        self.k = st.k;
+        self.maint.update(&st.means, self.t_th);
     }
 
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
@@ -224,9 +282,13 @@ impl Assigner for TaAssigner {
     }
 
     fn mem_bytes(&self) -> usize {
-        self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
-            + self.l1.len() * 8
-            + self.k * 2 * 8
+        self.maint.mem_bytes()
+            + self.l1.len() * size_of::<f64>()
+            + self.scratch.mem_bytes(TaScratch::mem_bytes)
+    }
+
+    fn take_phases(&mut self) -> PhaseTimes {
+        self.scratch.drain_phases()
     }
 
     fn params(&self) -> (Option<usize>, Option<f64>) {

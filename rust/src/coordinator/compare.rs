@@ -8,6 +8,7 @@ use crate::algo::{run_clustering_with, AlgoKind, ClusterConfig, ClusterOutput, P
 use crate::metrics::perf::{PerfGroup, PerfReading};
 use crate::sparse::Dataset;
 use crate::util::io::{fmt_sig, Table};
+use crate::util::json::Json;
 
 /// Everything the paper's tables report about one algorithm run.
 #[derive(Debug, Clone)]
@@ -21,7 +22,18 @@ pub struct AlgoRunSummary {
     /// Average elapsed seconds per iteration (assignment + update).
     pub avg_secs: f64,
     pub avg_assign_secs: f64,
+    /// Update step in the paper's footnote-7 sense (mean construction +
+    /// index rebuild + EstParams).
     pub avg_update_secs: f64,
+    /// Index-maintenance (rebuild) share of `avg_update_secs`.
+    pub avg_rebuild_secs: f64,
+    /// Assignment gathering-phase seconds per iteration. Summed across
+    /// shard workers: CPU-seconds under `--threads N` (may exceed
+    /// `avg_assign_secs`), wall time in serial runs.
+    pub avg_gather_secs: f64,
+    /// Assignment verification-phase seconds per iteration (same units
+    /// caveat as `avg_gather_secs`).
+    pub avg_verify_secs: f64,
     pub max_mem_gb: f64,
     /// Hardware counters over the whole run, if the PMU is accessible.
     pub perf: Option<PerfReading>,
@@ -74,6 +86,9 @@ pub fn run_and_summarize_with(
         avg_secs: out.total_secs() / iters,
         avg_assign_secs: out.total_assign_secs() / iters,
         avg_update_secs: out.total_update_secs() / iters,
+        avg_rebuild_secs: out.total_rebuild_secs() / iters,
+        avg_gather_secs: out.total_gather_secs() / iters,
+        avg_verify_secs: out.total_verify_secs() / iters,
         max_mem_gb: out.max_mem_bytes as f64 / 1e9,
         perf,
         sw_irregular_branches: out.logs.iter().map(|l| l.counters.irregular_branches).sum(),
@@ -174,11 +189,145 @@ pub fn absolute_table(summaries: &[AlgoRunSummary]) -> Table {
     t
 }
 
+/// Machine-readable report for one clustering run: dataset shape,
+/// iteration count, phase-level timing breakdown (assign split into
+/// gather/verify, update split into mean-update/rebuild), total
+/// `OpCounters`, and the per-iteration trajectory. Consumed by the
+/// `skm … --bench-json <path>` flag and the hot-path bench baseline.
+pub fn cluster_run_json(ds: &Dataset, cfg: &ClusterConfig, out: &ClusterOutput) -> Json {
+    let c = out.total_counters();
+    let per_iter: Vec<Json> = out
+        .logs
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("iter", Json::UInt(l.iter as u64)),
+                ("mult", Json::UInt(l.counters.mult)),
+                ("cpr", Json::Num(l.cpr)),
+                ("assign_secs", Json::Num(l.assign_secs)),
+                ("gather_secs", Json::Num(l.gather_secs)),
+                ("verify_secs", Json::Num(l.verify_secs)),
+                ("update_secs", Json::Num(l.update_secs)),
+                ("rebuild_secs", Json::Num(l.rebuild_secs)),
+                ("changes", Json::UInt(l.changes as u64)),
+                ("n_moving", Json::UInt(l.n_moving as u64)),
+                ("mem_bytes", Json::UInt(l.mem_bytes as u64)),
+                ("objective", Json::Num(l.objective)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("algo", Json::str(out.algo.name())),
+        (
+            "dataset",
+            Json::obj(vec![
+                ("name", Json::str(ds.name.clone())),
+                ("n", Json::UInt(ds.n() as u64)),
+                ("d", Json::UInt(ds.d() as u64)),
+                ("k", Json::UInt(cfg.k as u64)),
+                ("seed", Json::UInt(cfg.seed)),
+            ]),
+        ),
+        ("iterations", Json::UInt(out.iterations() as u64)),
+        ("converged", Json::Bool(out.converged)),
+        ("objective", Json::Num(out.objective)),
+        ("max_mem_bytes", Json::UInt(out.max_mem_bytes as u64)),
+        (
+            "t_th",
+            out.t_th.map(|t| Json::UInt(t as u64)).unwrap_or(Json::Null),
+        ),
+        ("v_th", out.v_th.map(Json::Num).unwrap_or(Json::Null)),
+        (
+            "phase_secs",
+            Json::obj(vec![
+                ("assign", Json::Num(out.total_assign_secs())),
+                ("gather", Json::Num(out.total_gather_secs())),
+                ("verify", Json::Num(out.total_verify_secs())),
+                ("update", Json::Num(out.total_update_secs() - out.total_rebuild_secs())),
+                ("rebuild", Json::Num(out.total_rebuild_secs())),
+                ("total", Json::Num(out.total_secs())),
+            ]),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("mult", Json::UInt(c.mult)),
+                ("irregular_branches", Json::UInt(c.irregular_branches)),
+                ("cold_touches", Json::UInt(c.cold_touches)),
+                ("candidates", Json::UInt(c.candidates)),
+                ("exact_sims", Json::UInt(c.exact_sims)),
+                ("sqrts", Json::UInt(c.sqrts)),
+            ]),
+        ),
+        ("per_iter", Json::Arr(per_iter)),
+    ])
+}
+
+/// [`cluster_run_json`] over several runs (the `compare --bench-json`
+/// shape): one entry per algorithm, same dataset.
+pub fn compare_runs_json(ds: &Dataset, cfg: &ClusterConfig, outs: &[ClusterOutput]) -> Json {
+    Json::obj(vec![
+        (
+            "dataset",
+            Json::obj(vec![
+                ("name", Json::str(ds.name.clone())),
+                ("n", Json::UInt(ds.n() as u64)),
+                ("d", Json::UInt(ds.d() as u64)),
+                ("k", Json::UInt(cfg.k as u64)),
+                ("seed", Json::UInt(cfg.seed)),
+            ]),
+        ),
+        (
+            "runs",
+            Json::Arr(outs.iter().map(|o| cluster_run_json(ds, cfg, o)).collect()),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::corpus::{generate, tiny};
     use crate::sparse::build_dataset;
+
+    #[test]
+    fn run_json_has_phases_and_counters() {
+        let c = generate(&tiny(124));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 8,
+            seed: 5,
+            ..Default::default()
+        };
+        let (out, _) = run_and_summarize(AlgoKind::EsIcp, &ds, &cfg);
+        let j = cluster_run_json(&ds, &cfg, &out);
+        let text = j.render();
+        for key in [
+            "\"phase_secs\"",
+            "\"gather\"",
+            "\"verify\"",
+            "\"rebuild\"",
+            "\"per_iter\"",
+            "\"counters\"",
+            "\"mult\"",
+        ] {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
+        // Phase-breakdown consistency (serial run): the per-object
+        // probes time subsets of the assignment loop, so their sum can
+        // only fall short of the wall time, never exceed it.
+        assert!(out.total_gather_secs() > 0.0, "gather never timed");
+        for l in &out.logs {
+            assert!(
+                l.gather_secs + l.verify_secs <= l.assign_secs + 1e-6,
+                "iter {}: phase sum {} + {} exceeds assign wall time {}",
+                l.iter,
+                l.gather_secs,
+                l.verify_secs,
+                l.assign_secs
+            );
+        }
+    }
 
     #[test]
     fn summarize_and_tables() {

@@ -8,6 +8,7 @@ pub mod presets;
 
 pub use audit::{audit_equivalence, audit_equivalence_with, AuditReport};
 pub use compare::{
-    comparison_rate_table, run_and_summarize, run_and_summarize_with, AlgoRunSummary,
+    cluster_run_json, compare_runs_json, comparison_rate_table, run_and_summarize,
+    run_and_summarize_with, AlgoRunSummary,
 };
 pub use presets::{preset, Preset};

@@ -12,18 +12,27 @@
 //!
 //! Storage is flat (CSC-like): one offsets array plus parallel `ids` /
 //! `vals` arrays — no per-term `Vec` allocations on the hot path.
+//!
+//! Indexes are *persistent* across iterations: instead of rebuilding
+//! from scratch each update step, [`crate::index::maintain`] splices
+//! only the postings of centroids that moved (and those that just
+//! became invariant) into the two-block layout — byte-identical to a
+//! from-scratch build, at a cost proportional to the moved mass.
 
 use crate::index::means::MeanSet;
 use crate::sparse::CsrMatrix;
 
 /// Mean-inverted index with the two-block (moving | invariant) layout.
+///
+/// Fields are `pub(crate)` so the incremental splice engine
+/// ([`crate::index::maintain`]) can rebuild the flat arrays in place.
 #[derive(Debug, Clone)]
 pub struct InvIndex {
     pub d: usize,
     pub k: usize,
-    offsets: Vec<usize>,
-    ids: Vec<u32>,
-    vals: Vec<f64>,
+    pub(crate) offsets: Vec<usize>,
+    pub(crate) ids: Vec<u32>,
+    pub(crate) vals: Vec<f64>,
     /// `mfm[s]` — number of *moving* centroids in `ξ_s` (the first block).
     pub mfm: Vec<u32>,
     /// Moving centroid ids, ascending (the paper's j' → j map in G_1).
@@ -35,6 +44,14 @@ impl InvIndex {
     /// `d` for a full index; ES/TA/CS pass `t_th` and store the
     /// `s ≥ t_th` region in their own specialized structures).
     pub fn build(means: &MeanSet, t_lim: usize) -> Self {
+        Self::build_scaled(means, t_lim, 1.0)
+    }
+
+    /// [`InvIndex::build`] with the Appendix-A value scaling folded into
+    /// construction: every stored value is `v · scale`, written once
+    /// (the ES family passes `1 / v_th`; there is no separate
+    /// scale-in-place post-pass).
+    pub fn build_scaled(means: &MeanSet, t_lim: usize, scale: f64) -> Self {
         let d = means.m.n_cols();
         let k = means.k();
         let t_lim = t_lim.min(d);
@@ -86,7 +103,7 @@ impl InvIndex {
                         s
                     };
                     ids[slot] = j as u32;
-                    vals[slot] = v;
+                    vals[slot] = v * scale;
                 }
             }
         }
@@ -144,21 +161,21 @@ impl InvIndex {
             .sum()
     }
 
-    /// Scale all stored values by `factor` (the Appendix-A scaling: the
-    /// ES family stores mean values divided by `v_th`).
-    pub fn scale_values(&mut self, factor: f64) {
-        for v in &mut self.vals {
-            *v *= factor;
-        }
+    /// The flat storage `(offsets, ids, vals, mfm)` — exposed so the
+    /// incremental-maintenance equality suite can compare indexes
+    /// bitwise (offsets/ids/mfm with `==`, vals via `f64::to_bits`).
+    pub fn raw_parts(&self) -> (&[usize], &[u32], &[f64], &[u32]) {
+        (&self.offsets, &self.ids, &self.vals, &self.mfm)
     }
 
     /// Approximate resident bytes (paper's Max MEM accounting).
     pub fn mem_bytes(&self) -> usize {
-        self.offsets.len() * std::mem::size_of::<usize>()
-            + self.ids.len() * 4
-            + self.vals.len() * 8
-            + self.mfm.len() * 4
-            + self.moving_ids.len() * 4
+        use std::mem::size_of;
+        self.offsets.len() * size_of::<usize>()
+            + self.ids.len() * size_of::<u32>()
+            + self.vals.len() * size_of::<f64>()
+            + self.mfm.len() * size_of::<u32>()
+            + self.moving_ids.len() * size_of::<u32>()
     }
 }
 
@@ -233,6 +250,14 @@ impl ObjInvIndex {
     pub fn nnz(&self) -> usize {
         self.ids.len()
     }
+
+    /// Approximate resident bytes (Max MEM accounting).
+    pub fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.offsets.len() * size_of::<usize>()
+            + self.ids.len() * size_of::<u32>()
+            + self.vals.len() * size_of::<f64>()
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +319,22 @@ mod tests {
         let full = InvIndex::build(&means, 4);
         assert_eq!(idx.mf(0), full.mf(0));
         assert_eq!(idx.mf(1), full.mf(1));
+    }
+
+    #[test]
+    fn build_scaled_folds_scaling() {
+        let (_, mut means) = small_means();
+        means.moved = vec![true, false, true];
+        let raw = InvIndex::build(&means, 4);
+        let scaled = InvIndex::build_scaled(&means, 4, 0.5);
+        let (ro, ri, rv, rm) = raw.raw_parts();
+        let (so, si, sv, sm) = scaled.raw_parts();
+        assert_eq!(ro, so);
+        assert_eq!(ri, si);
+        assert_eq!(rm, sm);
+        for (a, b) in rv.iter().zip(sv) {
+            assert_eq!((a * 0.5).to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,1195 @@
+//! Incremental structured-index maintenance (§Perf).
+//!
+//! Every iteration the update step produces a new [`MeanSet`] in which —
+//! late in a run — only a shrinking fraction of centroids actually
+//! changed (`MeanSet::moved`, the same invariance the ICP filter
+//! exploits). The from-scratch `build` constructors nevertheless pay
+//! O(nnz(M)) tuple placement plus an O(K·(D−t_th)) dense partial-index
+//! fill per iteration. The maintainers here persist each index across
+//! iterations and *splice* instead:
+//!
+//! * **Two-block regions** (`InvIndex` / `Region2`): a centroid is
+//!   *dirty* when it is moving now (values changed) **or** was moving at
+//!   the previous build (it must relocate from the moving block to the
+//!   invariant block). Per term, the new moving block is re-scattered
+//!   from the moving rows, the invariant block is a two-way merge of the
+//!   surviving old invariant entries with relocated entries, and maximal
+//!   runs of untouched terms are block-copied. Cost: O(dirty nnz +
+//!   touched postings), with untouched regions moving at `memcpy` speed.
+//! * **Sorted regions** (TA): `r2_all` has no block structure, so only
+//!   centroids moving *now* are dirty; their entries are removed from
+//!   and re-merged into each touched term's descending-value order.
+//!   `r2_moving` contains only moving centroids and is rebuilt from the
+//!   moving rows alone.
+//! * **Partial index** (`M^p`): only moved centroids' columns are
+//!   rewritten (clear the old row's cells, write the new row's cells) —
+//!   the dense O(K·(D−t_th)) fill disappears.
+//!
+//! The spliced index is **byte-identical** to a from-scratch build for
+//! the same mean set (enforced by `rust/tests/incremental.rs` and the
+//! hot-path bench). The from-scratch path remains as the fallback
+//! whenever the structural parameters `(t_th, v_th)` change after an
+//! EstParams run, on the first build, or when the dirty fraction exceeds
+//! each maintainer's `max_dirty_frac` (splicing a mostly-dirty index
+//! costs more than rebuilding it).
+//!
+//! All scratch (counts, cursors, spare flat arrays) is persistent and
+//! reused across iterations, so steady-state maintenance performs no
+//! per-iteration allocations beyond amortized high-water growth.
+
+use crate::index::inverted::InvIndex;
+use crate::index::means::MeanSet;
+use crate::index::structured::{CsIndex, EsIndex, TaIndex};
+
+/// Default dirty-fraction threshold above which maintainers fall back to
+/// a from-scratch build. Overridable with the `SKM_SPLICE_FRAC`
+/// environment knob (`0` disables splicing, `1` always splices);
+/// results are identical either way — only elapsed time changes.
+pub fn default_dirty_frac() -> f64 {
+    std::env::var("SKM_SPLICE_FRAC")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.5)
+}
+
+/// Snapshot of the mean rows and moved flags as of the last index build
+/// (flat CSR copy; `set_from` reuses capacity, so steady-state snapshots
+/// are allocation-free).
+#[derive(Debug, Default)]
+struct PrevMeans {
+    offsets: Vec<usize>,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+    moved: Vec<bool>,
+    d: usize,
+}
+
+impl PrevMeans {
+    fn set_from(&mut self, means: &MeanSet) {
+        self.offsets.clear();
+        self.ids.clear();
+        self.vals.clear();
+        self.moved.clear();
+        self.offsets.push(0);
+        for j in 0..means.k() {
+            let (ts, vs) = means.m.row(j);
+            self.ids.extend_from_slice(ts);
+            self.vals.extend_from_slice(vs);
+            self.offsets.push(self.ids.len());
+        }
+        self.moved.extend_from_slice(&means.moved);
+        self.d = means.m.n_cols();
+    }
+
+    fn k(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    #[inline]
+    fn row(&self, j: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.offsets[j], self.offsets[j + 1]);
+        (&self.ids[a..b], &self.vals[a..b])
+    }
+
+    fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.offsets.capacity() * size_of::<usize>()
+            + self.ids.capacity() * size_of::<u32>()
+            + self.vals.capacity() * size_of::<f64>()
+            + self.moved.capacity()
+    }
+}
+
+/// Persistent scratch for the splice passes: per-term counts/cursors,
+/// the insertion CSR, and the spare flat arrays the new layout is built
+/// into (swapped with the live index afterwards, so the old arrays
+/// become the next iteration's spares).
+#[derive(Debug, Default)]
+struct SpliceScratch {
+    cnt_mov: Vec<u32>,
+    cnt_inv: Vec<u32>,
+    touched: Vec<bool>,
+    ins_cnt: Vec<u32>,
+    ins_off: Vec<usize>,
+    ins_ids: Vec<u32>,
+    ins_vals: Vec<f64>,
+    cur: Vec<usize>,
+    new_offsets: Vec<usize>,
+    new_ids: Vec<u32>,
+    new_vals: Vec<f64>,
+    new_mfm: Vec<u32>,
+    sort_buf: Vec<(u32, f64)>,
+}
+
+impl SpliceScratch {
+    fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        (self.cnt_mov.capacity()
+            + self.cnt_inv.capacity()
+            + self.ins_cnt.capacity()
+            + self.new_mfm.capacity()
+            + self.ins_ids.capacity()
+            + self.new_ids.capacity())
+            * size_of::<u32>()
+            + (self.ins_off.capacity() + self.cur.capacity() + self.new_offsets.capacity())
+                * size_of::<usize>()
+            + (self.ins_vals.capacity() + self.new_vals.capacity()) * size_of::<f64>()
+            + self.touched.capacity()
+            + self.sort_buf.capacity() * size_of::<(u32, f64)>()
+    }
+}
+
+/// Splice a two-block (moving | invariant) flat postings region over
+/// terms `[t_lo, t_hi)` from the previous build's mean snapshot to the
+/// new mean set. `map` is the value transform (returning `None` drops
+/// the entry, e.g. the ES `v ≥ v_th` filter); it must be the same
+/// transform the from-scratch builder applies, so spliced values are
+/// bitwise identical to freshly built ones.
+#[allow(clippy::too_many_arguments)]
+fn splice_two_block<F>(
+    t_lo: usize,
+    t_hi: usize,
+    offsets: &mut Vec<usize>,
+    ids: &mut Vec<u32>,
+    vals: &mut Vec<f64>,
+    mfm: &mut Vec<u32>,
+    prev: &PrevMeans,
+    means: &MeanSet,
+    map: F,
+    sc: &mut SpliceScratch,
+) where
+    F: Fn(f64) -> Option<f64>,
+{
+    let k = means.k();
+    let width = t_hi - t_lo;
+    debug_assert_eq!(offsets.len(), width + 1);
+    debug_assert_eq!(mfm.len(), width);
+    debug_assert_eq!(prev.k(), k);
+
+    // Per-term counts seeded from the current layout. Every old moving
+    // id is dirty (it was moving), so the moving counts drain to exactly
+    // the new moving insertions below.
+    sc.cnt_mov.clear();
+    sc.cnt_mov.extend_from_slice(mfm);
+    sc.cnt_inv.clear();
+    sc.cnt_inv
+        .extend((0..width).map(|i| (offsets[i + 1] - offsets[i] - mfm[i] as usize) as u32));
+    sc.touched.clear();
+    sc.touched.resize(width, false);
+    sc.ins_cnt.clear();
+    sc.ins_cnt.resize(width, 0);
+
+    for j in 0..k {
+        let was = prev.moved[j];
+        let now = means.moved[j];
+        if !was && !now {
+            continue; // clean: same values, same (invariant) block
+        }
+        // Remove the old contribution.
+        let (ots, ovs) = prev.row(j);
+        for (&t, &v) in ots.iter().zip(ovs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi && map(v).is_some() {
+                let i = t - t_lo;
+                sc.touched[i] = true;
+                if was {
+                    sc.cnt_mov[i] -= 1;
+                } else {
+                    sc.cnt_inv[i] -= 1;
+                }
+            }
+        }
+        // Add the new contribution.
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi && map(v).is_some() {
+                let i = t - t_lo;
+                sc.touched[i] = true;
+                if now {
+                    sc.cnt_mov[i] += 1;
+                } else {
+                    sc.cnt_inv[i] += 1;
+                    sc.ins_cnt[i] += 1; // relocation into the invariant block
+                }
+            }
+        }
+    }
+
+    // New offsets.
+    sc.new_offsets.clear();
+    sc.new_offsets.reserve(width + 1);
+    sc.new_offsets.push(0);
+    for i in 0..width {
+        let last = *sc.new_offsets.last().unwrap();
+        sc.new_offsets
+            .push(last + sc.cnt_mov[i] as usize + sc.cnt_inv[i] as usize);
+    }
+    let nnz = *sc.new_offsets.last().unwrap();
+    sc.new_ids.clear();
+    sc.new_ids.resize(nnz, 0);
+    sc.new_vals.clear();
+    sc.new_vals.resize(nnz, 0.0);
+
+    // Insertion CSR: entries of dirty centroids that are invariant NOW
+    // (relocations out of the old moving block; their rows are verbatim
+    // identical to the previous iteration, only the block changes).
+    sc.ins_off.clear();
+    sc.ins_off.reserve(width + 1);
+    sc.ins_off.push(0);
+    for i in 0..width {
+        let last = *sc.ins_off.last().unwrap();
+        sc.ins_off.push(last + sc.ins_cnt[i] as usize);
+    }
+    let ins_nnz = *sc.ins_off.last().unwrap();
+    sc.ins_ids.clear();
+    sc.ins_ids.resize(ins_nnz, 0);
+    sc.ins_vals.clear();
+    sc.ins_vals.resize(ins_nnz, 0.0);
+    sc.cur.clear();
+    sc.cur.extend_from_slice(&sc.ins_off[..width]);
+    for j in 0..k {
+        if !(prev.moved[j] && !means.moved[j]) {
+            continue;
+        }
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                if let Some(w) = map(v) {
+                    let i = t - t_lo;
+                    let slot = sc.cur[i];
+                    sc.ins_ids[slot] = j as u32;
+                    sc.ins_vals[slot] = w;
+                    sc.cur[i] += 1;
+                }
+            }
+        }
+    }
+
+    // Moving-block scatter: iterating j ascending keeps ids ascending
+    // within each term's moving block, exactly like the scratch builder.
+    sc.cur.clear();
+    sc.cur.extend_from_slice(&sc.new_offsets[..width]);
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                if let Some(w) = map(v) {
+                    let i = t - t_lo;
+                    let slot = sc.cur[i];
+                    sc.new_ids[slot] = j as u32;
+                    sc.new_vals[slot] = w;
+                    sc.cur[i] += 1;
+                }
+            }
+        }
+    }
+
+    // Invariant blocks: block-copy maximal untouched runs, merge touched
+    // terms (old invariant survivors × relocations, both id-ascending).
+    let mut i = 0usize;
+    while i < width {
+        if !sc.touched[i] {
+            let run = i;
+            while i < width && !sc.touched[i] {
+                debug_assert_eq!(mfm[i], 0, "untouched term cannot hold moving entries");
+                i += 1;
+            }
+            let (a, b) = (offsets[run], offsets[i]);
+            let dst = sc.new_offsets[run];
+            sc.new_ids[dst..dst + (b - a)].copy_from_slice(&ids[a..b]);
+            sc.new_vals[dst..dst + (b - a)].copy_from_slice(&vals[a..b]);
+            continue;
+        }
+        let mut a = offsets[i] + mfm[i] as usize;
+        let a_end = offsets[i + 1];
+        let mut b = sc.ins_off[i];
+        let b_end = sc.ins_off[i + 1];
+        let mut out = sc.new_offsets[i] + sc.cnt_mov[i] as usize;
+        while a < a_end {
+            let ja = ids[a];
+            if means.moved[ja as usize] {
+                a += 1; // departed to the moving block
+                continue;
+            }
+            while b < b_end && sc.ins_ids[b] < ja {
+                sc.new_ids[out] = sc.ins_ids[b];
+                sc.new_vals[out] = sc.ins_vals[b];
+                out += 1;
+                b += 1;
+            }
+            sc.new_ids[out] = ja;
+            sc.new_vals[out] = vals[a];
+            out += 1;
+            a += 1;
+        }
+        while b < b_end {
+            sc.new_ids[out] = sc.ins_ids[b];
+            sc.new_vals[out] = sc.ins_vals[b];
+            out += 1;
+            b += 1;
+        }
+        debug_assert_eq!(out, sc.new_offsets[i + 1]);
+        i += 1;
+    }
+
+    sc.new_mfm.clear();
+    sc.new_mfm.extend_from_slice(&sc.cnt_mov);
+
+    // Install the new layout; the old arrays become next round's spares.
+    std::mem::swap(offsets, &mut sc.new_offsets);
+    std::mem::swap(ids, &mut sc.new_ids);
+    std::mem::swap(vals, &mut sc.new_vals);
+    std::mem::swap(mfm, &mut sc.new_mfm);
+}
+
+/// Splice a per-term descending-value sorted region (TA's `r2_all`)
+/// over terms `[t_lo, t_hi)`. Only centroids moving *now* are dirty
+/// (there is no block structure, so relocations keep their exact slot);
+/// their old entries are filtered out and their new entries merged back
+/// in `(value desc, id asc)` order — the same strict total order the
+/// scratch builder sorts by, hence a unique, bitwise-identical layout.
+#[allow(clippy::too_many_arguments)]
+fn splice_sorted_desc(
+    t_lo: usize,
+    t_hi: usize,
+    offsets: &mut Vec<usize>,
+    ids: &mut Vec<u32>,
+    vals: &mut Vec<f64>,
+    prev: &PrevMeans,
+    means: &MeanSet,
+    sc: &mut SpliceScratch,
+) {
+    let k = means.k();
+    let width = t_hi - t_lo;
+    debug_assert_eq!(offsets.len(), width + 1);
+
+    sc.cnt_inv.clear();
+    sc.cnt_inv
+        .extend((0..width).map(|i| (offsets[i + 1] - offsets[i]) as u32));
+    sc.touched.clear();
+    sc.touched.resize(width, false);
+    sc.ins_cnt.clear();
+    sc.ins_cnt.resize(width, 0);
+
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (ots, _) = prev.row(j);
+        for &t in ots {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                sc.touched[t - t_lo] = true;
+                sc.cnt_inv[t - t_lo] -= 1;
+            }
+        }
+        let (nts, _) = means.m.row(j);
+        for &t in nts {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                sc.touched[t - t_lo] = true;
+                sc.cnt_inv[t - t_lo] += 1;
+                sc.ins_cnt[t - t_lo] += 1;
+            }
+        }
+    }
+
+    sc.new_offsets.clear();
+    sc.new_offsets.reserve(width + 1);
+    sc.new_offsets.push(0);
+    for i in 0..width {
+        let last = *sc.new_offsets.last().unwrap();
+        sc.new_offsets.push(last + sc.cnt_inv[i] as usize);
+    }
+    let nnz = *sc.new_offsets.last().unwrap();
+    sc.new_ids.clear();
+    sc.new_ids.resize(nnz, 0);
+    sc.new_vals.clear();
+    sc.new_vals.resize(nnz, 0.0);
+
+    // Insertion CSR over the moving rows.
+    sc.ins_off.clear();
+    sc.ins_off.reserve(width + 1);
+    sc.ins_off.push(0);
+    for i in 0..width {
+        let last = *sc.ins_off.last().unwrap();
+        sc.ins_off.push(last + sc.ins_cnt[i] as usize);
+    }
+    let ins_nnz = *sc.ins_off.last().unwrap();
+    sc.ins_ids.clear();
+    sc.ins_ids.resize(ins_nnz, 0);
+    sc.ins_vals.clear();
+    sc.ins_vals.resize(ins_nnz, 0.0);
+    sc.cur.clear();
+    sc.cur.extend_from_slice(&sc.ins_off[..width]);
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                let i = t - t_lo;
+                let slot = sc.cur[i];
+                sc.ins_ids[slot] = j as u32;
+                sc.ins_vals[slot] = v;
+                sc.cur[i] += 1;
+            }
+        }
+    }
+
+    // `a` before `b` in TA order: value desc, id asc (strict total
+    // order — ids are distinct within a term).
+    #[inline]
+    fn ta_before(va: f64, ia: u32, vb: f64, ib: u32) -> bool {
+        va > vb || (va == vb && ia < ib)
+    }
+
+    let mut i = 0usize;
+    while i < width {
+        if !sc.touched[i] {
+            let run = i;
+            while i < width && !sc.touched[i] {
+                i += 1;
+            }
+            let (a, b) = (offsets[run], offsets[i]);
+            let dst = sc.new_offsets[run];
+            sc.new_ids[dst..dst + (b - a)].copy_from_slice(&ids[a..b]);
+            sc.new_vals[dst..dst + (b - a)].copy_from_slice(&vals[a..b]);
+            continue;
+        }
+        // Sort this term's insertions into TA order.
+        sc.sort_buf.clear();
+        for q in sc.ins_off[i]..sc.ins_off[i + 1] {
+            sc.sort_buf.push((sc.ins_ids[q], sc.ins_vals[q]));
+        }
+        sc.sort_buf
+            .sort_unstable_by(|x, y| y.1.partial_cmp(&x.1).unwrap().then(x.0.cmp(&y.0)));
+        // Merge survivors (old order minus dirty ids) with insertions.
+        let mut a = offsets[i];
+        let a_end = offsets[i + 1];
+        let mut b = 0usize;
+        let b_end = sc.sort_buf.len();
+        let mut out = sc.new_offsets[i];
+        while a < a_end {
+            let (ja, va) = (ids[a], vals[a]);
+            if means.moved[ja as usize] {
+                a += 1; // stale entry of a moved centroid
+                continue;
+            }
+            while b < b_end && ta_before(sc.sort_buf[b].1, sc.sort_buf[b].0, va, ja) {
+                sc.new_ids[out] = sc.sort_buf[b].0;
+                sc.new_vals[out] = sc.sort_buf[b].1;
+                out += 1;
+                b += 1;
+            }
+            sc.new_ids[out] = ja;
+            sc.new_vals[out] = va;
+            out += 1;
+            a += 1;
+        }
+        while b < b_end {
+            sc.new_ids[out] = sc.sort_buf[b].0;
+            sc.new_vals[out] = sc.sort_buf[b].1;
+            out += 1;
+            b += 1;
+        }
+        debug_assert_eq!(out, sc.new_offsets[i + 1]);
+        i += 1;
+    }
+
+    std::mem::swap(offsets, &mut sc.new_offsets);
+    std::mem::swap(ids, &mut sc.new_ids);
+    std::mem::swap(vals, &mut sc.new_vals);
+}
+
+/// Rebuild a per-term descending-value sorted region from the moving
+/// rows only (TA's `r2_moving` holds nothing else, so "incremental" is
+/// a from-moving-rows rebuild — cost proportional to the moving mass).
+fn rebuild_moving_sorted(
+    t_lo: usize,
+    t_hi: usize,
+    offsets: &mut Vec<usize>,
+    ids: &mut Vec<u32>,
+    vals: &mut Vec<f64>,
+    means: &MeanSet,
+    sc: &mut SpliceScratch,
+) {
+    let k = means.k();
+    let width = t_hi - t_lo;
+
+    sc.ins_cnt.clear();
+    sc.ins_cnt.resize(width, 0);
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (nts, _) = means.m.row(j);
+        for &t in nts {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                sc.ins_cnt[t - t_lo] += 1;
+            }
+        }
+    }
+    sc.new_offsets.clear();
+    sc.new_offsets.reserve(width + 1);
+    sc.new_offsets.push(0);
+    for i in 0..width {
+        let last = *sc.new_offsets.last().unwrap();
+        sc.new_offsets.push(last + sc.ins_cnt[i] as usize);
+    }
+    let nnz = *sc.new_offsets.last().unwrap();
+    sc.new_ids.clear();
+    sc.new_ids.resize(nnz, 0);
+    sc.new_vals.clear();
+    sc.new_vals.resize(nnz, 0.0);
+    sc.cur.clear();
+    sc.cur.extend_from_slice(&sc.new_offsets[..width]);
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_lo && t < t_hi {
+                let i = t - t_lo;
+                let slot = sc.cur[i];
+                sc.new_ids[slot] = j as u32;
+                sc.new_vals[slot] = v;
+                sc.cur[i] += 1;
+            }
+        }
+    }
+    for i in 0..width {
+        let (a, b) = (sc.new_offsets[i], sc.new_offsets[i + 1]);
+        sc.sort_buf.clear();
+        for q in a..b {
+            sc.sort_buf.push((sc.new_ids[q], sc.new_vals[q]));
+        }
+        sc.sort_buf
+            .sort_unstable_by(|x, y| y.1.partial_cmp(&x.1).unwrap().then(x.0.cmp(&y.0)));
+        for (q, &(id, v)) in sc.sort_buf.iter().enumerate() {
+            sc.new_ids[a + q] = id;
+            sc.new_vals[a + q] = v;
+        }
+    }
+
+    std::mem::swap(offsets, &mut sc.new_offsets);
+    std::mem::swap(ids, &mut sc.new_ids);
+    std::mem::swap(vals, &mut sc.new_vals);
+}
+
+/// Rewrite only the moved centroids' columns of a full-expression
+/// partial index (`w` is row-major per term over `t_th ≤ s < D`).
+/// Invariant centroids' columns are untouched — their rows are verbatim
+/// identical to the previous iteration, so their cells already match a
+/// from-scratch fill.
+fn rewrite_partial_columns<G>(
+    t_th: usize,
+    k: usize,
+    w: &mut [f64],
+    default: f64,
+    prev: &PrevMeans,
+    means: &MeanSet,
+    cell: G,
+) where
+    G: Fn(f64) -> f64,
+{
+    for j in 0..k {
+        if !means.moved[j] {
+            continue;
+        }
+        let (ots, _) = prev.row(j);
+        for &t in ots {
+            let t = t as usize;
+            if t >= t_th {
+                w[(t - t_th) * k + j] = default;
+            }
+        }
+        let (nts, nvs) = means.m.row(j);
+        for (&t, &v) in nts.iter().zip(nvs) {
+            let t = t as usize;
+            if t >= t_th {
+                w[(t - t_th) * k + j] = cell(v);
+            }
+        }
+    }
+}
+
+fn set_moving_ids(moving_ids: &mut Vec<u32>, means: &MeanSet) {
+    moving_ids.clear();
+    for j in 0..means.k() {
+        if means.moved[j] {
+            moving_ids.push(j as u32);
+        }
+    }
+}
+
+fn dirty_count(prev_moved: &[bool], means: &MeanSet) -> usize {
+    means.dirty_against(prev_moved)
+}
+
+/// How the last `update` call rebuilt the index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebuildKind {
+    /// Nothing built yet.
+    None,
+    /// From-scratch `build` (first build, parameter change, or dirty
+    /// fraction above threshold).
+    Full,
+    /// In-place incremental splice.
+    Incremental,
+}
+
+macro_rules! maintainer_common {
+    ($index:ty) => {
+        /// The maintained index, if `update` has run at least once.
+        pub fn index(&self) -> Option<&$index> {
+            self.idx.as_ref()
+        }
+
+        /// How the last `update` rebuilt the index (bench/test hook).
+        pub fn last_rebuild(&self) -> RebuildKind {
+            self.last_rebuild
+        }
+
+        /// Persistent-state bytes: the index itself plus the mean
+        /// snapshot and splice scratch (counted toward Max MEM).
+        pub fn mem_bytes(&self) -> usize {
+            self.idx.as_ref().map(|i| i.mem_bytes()).unwrap_or(0)
+                + self.prev.mem_bytes()
+                + self.sc.mem_bytes()
+        }
+    };
+}
+
+/// Maintainer for the plain two-block [`InvIndex`] (MIVI / ICP, and the
+/// Region-1 part when used standalone).
+pub struct InvMaintainer {
+    idx: Option<InvIndex>,
+    prev: PrevMeans,
+    t_lim: usize,
+    scale: f64,
+    sc: SpliceScratch,
+    /// Dirty fraction above which `update` falls back to a full build.
+    pub max_dirty_frac: f64,
+    pub full_rebuilds: u64,
+    pub incremental_rebuilds: u64,
+    last_rebuild: RebuildKind,
+}
+
+impl Default for InvMaintainer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InvMaintainer {
+    pub fn new() -> Self {
+        Self {
+            idx: None,
+            prev: PrevMeans::default(),
+            t_lim: usize::MAX,
+            scale: 1.0,
+            sc: SpliceScratch::default(),
+            max_dirty_frac: default_dirty_frac(),
+            full_rebuilds: 0,
+            incremental_rebuilds: 0,
+            last_rebuild: RebuildKind::None,
+        }
+    }
+
+    maintainer_common!(InvIndex);
+
+    /// Bring the index up to date with `means`; splices when the layout
+    /// parameters are unchanged and the dirty fraction is low enough,
+    /// else rebuilds from scratch. Byte-identical either way.
+    pub fn update(&mut self, means: &MeanSet, t_lim: usize, scale: f64) -> &InvIndex {
+        let k = means.k();
+        let d = means.m.n_cols();
+        let t_lim = t_lim.min(d);
+        let compatible = self.idx.is_some()
+            && self.prev.k() == k
+            && self.prev.d == d
+            && self.t_lim == t_lim
+            && self.scale.to_bits() == scale.to_bits();
+        let dirty = if compatible {
+            dirty_count(&self.prev.moved, means)
+        } else {
+            k
+        };
+        if compatible && (dirty as f64) <= self.max_dirty_frac * k as f64 {
+            let idx = self.idx.as_mut().unwrap();
+            splice_two_block(
+                0,
+                t_lim,
+                &mut idx.offsets,
+                &mut idx.ids,
+                &mut idx.vals,
+                &mut idx.mfm,
+                &self.prev,
+                means,
+                |v| Some(v * scale),
+                &mut self.sc,
+            );
+            set_moving_ids(&mut idx.moving_ids, means);
+            self.incremental_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Incremental;
+        } else {
+            self.idx = Some(InvIndex::build_scaled(means, t_lim, scale));
+            self.full_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Full;
+        }
+        self.t_lim = t_lim;
+        self.scale = scale;
+        self.prev.set_from(means);
+        self.idx.as_ref().unwrap()
+    }
+}
+
+/// Maintainer for the ES three-region structured index.
+pub struct EsMaintainer {
+    idx: Option<EsIndex>,
+    prev: PrevMeans,
+    t_th: usize,
+    v_th: f64,
+    sc: SpliceScratch,
+    pub max_dirty_frac: f64,
+    pub full_rebuilds: u64,
+    pub incremental_rebuilds: u64,
+    last_rebuild: RebuildKind,
+}
+
+impl Default for EsMaintainer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EsMaintainer {
+    pub fn new() -> Self {
+        Self {
+            idx: None,
+            prev: PrevMeans::default(),
+            t_th: usize::MAX,
+            v_th: f64::NAN,
+            sc: SpliceScratch::default(),
+            max_dirty_frac: default_dirty_frac(),
+            full_rebuilds: 0,
+            incremental_rebuilds: 0,
+            last_rebuild: RebuildKind::None,
+        }
+    }
+
+    maintainer_common!(EsIndex);
+
+    pub fn update(&mut self, means: &MeanSet, t_th: usize, v_th: f64) -> &EsIndex {
+        let k = means.k();
+        let d = means.m.n_cols();
+        let t_th = t_th.min(d);
+        assert!(v_th > 0.0, "v_th must be positive (got {v_th})");
+        let compatible = self.idx.is_some()
+            && self.prev.k() == k
+            && self.prev.d == d
+            && self.t_th == t_th
+            && self.v_th.to_bits() == v_th.to_bits();
+        let dirty = if compatible {
+            dirty_count(&self.prev.moved, means)
+        } else {
+            k
+        };
+        if compatible && (dirty as f64) <= self.max_dirty_frac * k as f64 {
+            let inv_scale = 1.0 / v_th;
+            let idx = self.idx.as_mut().unwrap();
+            splice_two_block(
+                0,
+                t_th,
+                &mut idx.r1.offsets,
+                &mut idx.r1.ids,
+                &mut idx.r1.vals,
+                &mut idx.r1.mfm,
+                &self.prev,
+                means,
+                |v| Some(v * inv_scale),
+                &mut self.sc,
+            );
+            splice_two_block(
+                t_th,
+                d,
+                &mut idx.r2.offsets,
+                &mut idx.r2.ids,
+                &mut idx.r2.vals,
+                &mut idx.r2.mfm,
+                &self.prev,
+                means,
+                |v| {
+                    if v >= v_th {
+                        Some(v * inv_scale - 1.0)
+                    } else {
+                        None
+                    }
+                },
+                &mut self.sc,
+            );
+            rewrite_partial_columns(
+                t_th,
+                k,
+                &mut idx.partial.w,
+                1.0,
+                &self.prev,
+                means,
+                |v| {
+                    if v >= v_th {
+                        0.0
+                    } else {
+                        1.0 - v * inv_scale
+                    }
+                },
+            );
+            set_moving_ids(&mut idx.r1.moving_ids, means);
+            set_moving_ids(&mut idx.moving_ids, means);
+            self.incremental_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Incremental;
+        } else {
+            self.idx = Some(EsIndex::build(means, t_th, v_th));
+            self.full_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Full;
+        }
+        self.t_th = t_th;
+        self.v_th = v_th;
+        self.prev.set_from(means);
+        self.idx.as_ref().unwrap()
+    }
+}
+
+/// Maintainer for the TA sorted-postings structured index.
+pub struct TaMaintainer {
+    idx: Option<TaIndex>,
+    prev: PrevMeans,
+    t_th: usize,
+    sc: SpliceScratch,
+    pub max_dirty_frac: f64,
+    pub full_rebuilds: u64,
+    pub incremental_rebuilds: u64,
+    last_rebuild: RebuildKind,
+}
+
+impl Default for TaMaintainer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TaMaintainer {
+    pub fn new() -> Self {
+        Self {
+            idx: None,
+            prev: PrevMeans::default(),
+            t_th: usize::MAX,
+            sc: SpliceScratch::default(),
+            max_dirty_frac: default_dirty_frac(),
+            full_rebuilds: 0,
+            incremental_rebuilds: 0,
+            last_rebuild: RebuildKind::None,
+        }
+    }
+
+    maintainer_common!(TaIndex);
+
+    pub fn update(&mut self, means: &MeanSet, t_th: usize) -> &TaIndex {
+        let k = means.k();
+        let d = means.m.n_cols();
+        let t_th = t_th.min(d);
+        let compatible =
+            self.idx.is_some() && self.prev.k() == k && self.prev.d == d && self.t_th == t_th;
+        let dirty = if compatible {
+            dirty_count(&self.prev.moved, means)
+        } else {
+            k
+        };
+        if compatible && (dirty as f64) <= self.max_dirty_frac * k as f64 {
+            let idx = self.idx.as_mut().unwrap();
+            splice_two_block(
+                0,
+                t_th,
+                &mut idx.r1.offsets,
+                &mut idx.r1.ids,
+                &mut idx.r1.vals,
+                &mut idx.r1.mfm,
+                &self.prev,
+                means,
+                Some,
+                &mut self.sc,
+            );
+            splice_sorted_desc(
+                t_th,
+                d,
+                &mut idx.r2_all.offsets,
+                &mut idx.r2_all.ids,
+                &mut idx.r2_all.vals,
+                &self.prev,
+                means,
+                &mut self.sc,
+            );
+            rebuild_moving_sorted(
+                t_th,
+                d,
+                &mut idx.r2_moving.offsets,
+                &mut idx.r2_moving.ids,
+                &mut idx.r2_moving.vals,
+                means,
+                &mut self.sc,
+            );
+            rewrite_partial_columns(t_th, k, &mut idx.partial.w, 0.0, &self.prev, means, |v| v);
+            set_moving_ids(&mut idx.r1.moving_ids, means);
+            set_moving_ids(&mut idx.moving_ids, means);
+            self.incremental_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Incremental;
+        } else {
+            self.idx = Some(TaIndex::build(means, t_th));
+            self.full_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Full;
+        }
+        self.t_th = t_th;
+        self.prev.set_from(means);
+        self.idx.as_ref().unwrap()
+    }
+}
+
+/// Maintainer for the CS squared-postings structured index.
+pub struct CsMaintainer {
+    idx: Option<CsIndex>,
+    prev: PrevMeans,
+    t_th: usize,
+    sc: SpliceScratch,
+    pub max_dirty_frac: f64,
+    pub full_rebuilds: u64,
+    pub incremental_rebuilds: u64,
+    last_rebuild: RebuildKind,
+}
+
+impl Default for CsMaintainer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CsMaintainer {
+    pub fn new() -> Self {
+        Self {
+            idx: None,
+            prev: PrevMeans::default(),
+            t_th: usize::MAX,
+            sc: SpliceScratch::default(),
+            max_dirty_frac: default_dirty_frac(),
+            full_rebuilds: 0,
+            incremental_rebuilds: 0,
+            last_rebuild: RebuildKind::None,
+        }
+    }
+
+    maintainer_common!(CsIndex);
+
+    pub fn update(&mut self, means: &MeanSet, t_th: usize) -> &CsIndex {
+        let k = means.k();
+        let d = means.m.n_cols();
+        let t_th = t_th.min(d);
+        let compatible =
+            self.idx.is_some() && self.prev.k() == k && self.prev.d == d && self.t_th == t_th;
+        let dirty = if compatible {
+            dirty_count(&self.prev.moved, means)
+        } else {
+            k
+        };
+        if compatible && (dirty as f64) <= self.max_dirty_frac * k as f64 {
+            let idx = self.idx.as_mut().unwrap();
+            splice_two_block(
+                0,
+                t_th,
+                &mut idx.r1.offsets,
+                &mut idx.r1.ids,
+                &mut idx.r1.vals,
+                &mut idx.r1.mfm,
+                &self.prev,
+                means,
+                Some,
+                &mut self.sc,
+            );
+            splice_two_block(
+                t_th,
+                d,
+                &mut idx.r2_sq.offsets,
+                &mut idx.r2_sq.ids,
+                &mut idx.r2_sq.vals,
+                &mut idx.r2_sq.mfm,
+                &self.prev,
+                means,
+                |v| Some(v * v),
+                &mut self.sc,
+            );
+            rewrite_partial_columns(t_th, k, &mut idx.partial.w, 0.0, &self.prev, means, |v| v);
+            set_moving_ids(&mut idx.r1.moving_ids, means);
+            set_moving_ids(&mut idx.moving_ids, means);
+            self.incremental_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Incremental;
+        } else {
+            self.idx = Some(CsIndex::build(means, t_th));
+            self.full_rebuilds += 1;
+            self.last_rebuild = RebuildKind::Full;
+        }
+        self.t_th = t_th;
+        self.prev.set_from(means);
+        self.idx.as_ref().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::means::update_means;
+    use crate::sparse::build_dataset;
+
+    fn means_seq() -> Vec<MeanSet> {
+        // A tiny dataset with hand-driven assignment changes so the
+        // moved flags cycle through all dirty transitions:
+        // moving→moving, moving→invariant, invariant→moving, clean.
+        let docs = vec![
+            vec![(0, 3), (1, 1), (4, 2)],
+            vec![(0, 2), (1, 2), (5, 1)],
+            vec![(2, 3), (3, 1), (4, 1)],
+            vec![(2, 2), (3, 2), (5, 2)],
+            vec![(1, 1), (3, 1), (5, 3)],
+            vec![(0, 1), (2, 1), (4, 4)],
+            vec![(0, 1), (3, 2), (5, 1)],
+            vec![(1, 2), (2, 2), (4, 1)],
+        ];
+        let ds = build_dataset("t", 6, &docs);
+        let assigns: Vec<Vec<u32>> = vec![
+            vec![0, 0, 1, 1, 2, 2, 3, 3],
+            vec![0, 0, 1, 1, 2, 3, 3, 2], // clusters 2,3 change; 0,1 stay
+            vec![0, 1, 1, 1, 2, 3, 3, 2], // clusters 0,1 change; 2,3 stay
+            vec![0, 1, 1, 1, 2, 3, 3, 2], // nothing changes
+            vec![0, 1, 1, 0, 2, 3, 3, 2], // clusters 0,1 change again
+        ];
+        let mut out = update_means(&ds, &assigns[0], 4, None, None);
+        let mut seq = vec![out.means.clone()];
+        for w in assigns.windows(2) {
+            let changed = crate::index::means::membership_changes(&w[0], &w[1], 4);
+            out = update_means(&ds, &w[1], 4, Some(&out.means), Some(&changed));
+            seq.push(out.means.clone());
+        }
+        seq
+    }
+
+    fn assert_inv_eq(a: &InvIndex, b: &InvIndex, tag: &str) {
+        let (ao, ai, av, am) = a.raw_parts();
+        let (bo, bi, bv, bm) = b.raw_parts();
+        assert_eq!(ao, bo, "{tag}: offsets");
+        assert_eq!(ai, bi, "{tag}: ids");
+        assert_eq!(am, bm, "{tag}: mfm");
+        assert_eq!(av.len(), bv.len(), "{tag}: vals len");
+        for (q, (x, y)) in av.iter().zip(bv).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: vals[{q}]");
+        }
+        assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+    }
+
+    #[test]
+    fn inv_splice_matches_scratch_over_sequence() {
+        let seq = means_seq();
+        let d = seq[0].m.n_cols();
+        let mut maint = InvMaintainer::new();
+        maint.max_dirty_frac = 1.0; // always splice once primed
+        for (r, means) in seq.iter().enumerate() {
+            maint.update(means, d, 1.0);
+            let scratch = InvIndex::build(means, d);
+            assert_inv_eq(maint.index().unwrap(), &scratch, &format!("iter {r}"));
+        }
+        assert!(maint.incremental_rebuilds >= 3);
+        assert_eq!(maint.full_rebuilds, 1);
+    }
+
+    #[test]
+    fn es_splice_matches_scratch_including_partial() {
+        let seq = means_seq();
+        let d = seq[0].m.n_cols();
+        let (t_th, v_th) = (d / 2, 0.2);
+        let mut maint = EsMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        for (r, means) in seq.iter().enumerate() {
+            maint.update(means, t_th, v_th);
+            let scratch = EsIndex::build(means, t_th, v_th);
+            let got = maint.index().unwrap();
+            assert_inv_eq(&got.r1, &scratch.r1, &format!("iter {r} r1"));
+            assert_eq!(got.r2.raw_parts().0, scratch.r2.raw_parts().0);
+            assert_eq!(got.r2.raw_parts().1, scratch.r2.raw_parts().1);
+            assert_eq!(got.r2.raw_parts().3, scratch.r2.raw_parts().3);
+            for (x, y) in got.r2.raw_parts().2.iter().zip(scratch.r2.raw_parts().2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "iter {r} r2 vals");
+            }
+            for (x, y) in got.partial.values().iter().zip(scratch.partial.values()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "iter {r} partial");
+            }
+            assert_eq!(got.moving_ids, scratch.moving_ids);
+        }
+        assert!(maint.incremental_rebuilds >= 3);
+    }
+
+    #[test]
+    fn param_change_falls_back_to_full_rebuild() {
+        let seq = means_seq();
+        let d = seq[0].m.n_cols();
+        let mut maint = EsMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        maint.update(&seq[0], d / 2, 0.2);
+        assert_eq!(maint.last_rebuild(), RebuildKind::Full);
+        maint.update(&seq[1], d / 2, 0.2);
+        assert_eq!(maint.last_rebuild(), RebuildKind::Incremental);
+        // EstParams re-parameterization: t_th changes → full rebuild.
+        maint.update(&seq[2], d / 3, 0.2);
+        assert_eq!(maint.last_rebuild(), RebuildKind::Full);
+        let scratch = EsIndex::build(&seq[2], d / 3, 0.2);
+        assert_eq!(
+            maint.index().unwrap().partial.values().len(),
+            scratch.partial.values().len()
+        );
+        // … and v_th changes → full rebuild, then splicing resumes.
+        maint.update(&seq[3], d / 3, 0.1);
+        assert_eq!(maint.last_rebuild(), RebuildKind::Full);
+        maint.update(&seq[4], d / 3, 0.1);
+        assert_eq!(maint.last_rebuild(), RebuildKind::Incremental);
+        let scratch = EsIndex::build(&seq[4], d / 3, 0.1);
+        for (x, y) in maint
+            .index()
+            .unwrap()
+            .partial
+            .values()
+            .iter()
+            .zip(scratch.partial.values())
+        {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dirty_threshold_falls_back() {
+        let seq = means_seq();
+        let d = seq[0].m.n_cols();
+        let mut maint = InvMaintainer::new();
+        maint.max_dirty_frac = 0.0; // never splice
+        for means in &seq {
+            maint.update(means, d, 1.0);
+            assert_eq!(maint.last_rebuild(), RebuildKind::Full);
+        }
+        assert_eq!(maint.incremental_rebuilds, 0);
+    }
+}

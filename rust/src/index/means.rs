@@ -36,6 +36,19 @@ impl MeanSet {
     pub fn avg_nnz(&self) -> f64 {
         self.m.avg_row_nnz()
     }
+
+    /// Number of centroids the incremental index maintainers must touch
+    /// relative to a previous build's moved flags: moving now (values
+    /// changed) or moving then (must relocate between the moving and
+    /// invariant blocks). See [`crate::index::maintain`].
+    pub fn dirty_against(&self, prev_moved: &[bool]) -> usize {
+        debug_assert_eq!(prev_moved.len(), self.moved.len());
+        prev_moved
+            .iter()
+            .zip(&self.moved)
+            .filter(|&(&was, &now)| was || now)
+            .count()
+    }
 }
 
 /// Output of one update step.

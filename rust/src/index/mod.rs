@@ -1,12 +1,16 @@
 //! Index structures: the update step producing the mean set, the
-//! two-block mean-inverted index, the object-inverted index, and the
-//! three-region structured indexes for the ES / TA / CS filters.
+//! two-block mean-inverted index, the object-inverted index, the
+//! three-region structured indexes for the ES / TA / CS filters, and
+//! the incremental maintainers that splice those indexes across
+//! iterations instead of rebuilding them from scratch.
 
 pub mod inverted;
+pub mod maintain;
 pub mod means;
 pub mod structured;
 
 pub use inverted::{InvIndex, ObjInvIndex};
+pub use maintain::{CsMaintainer, EsMaintainer, InvMaintainer, RebuildKind, TaMaintainer};
 pub use means::{
     membership_changes, update_means, update_means_with_rho, update_means_with_rho_par, MeanSet,
     UpdateOutput,

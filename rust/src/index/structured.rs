@@ -20,17 +20,29 @@
 //! * **CS** (`CsIndex`): the `s ≥ t_th` arrays store *squared* values
 //!   (for the on-the-fly partial L2 norms of Eq. 21), two-block like
 //!   Region 1; the partial index holds all values.
+//!
+//! **Lifecycle (§Perf).** The `build` constructors here are the
+//! from-scratch reference path. In the clustering loop the structured
+//! indexes persist across iterations and are maintained *incrementally*
+//! by [`crate::index::maintain`]: only the postings of centroids that
+//! moved (or just became invariant) are spliced, and only moved
+//! centroids' columns of the partial index are rewritten — byte-identical
+//! to a from-scratch build by construction, with the from-scratch path
+//! kept as the fallback whenever `(t_th, v_th)` change (EstParams).
 
 use crate::index::inverted::InvIndex;
 use crate::index::means::MeanSet;
 
 /// Flat per-term arrays over the high-df region `t_th ≤ s < D`.
+///
+/// Fields are `pub(crate)` so the incremental splice engine
+/// ([`crate::index::maintain`]) can rebuild the flat arrays in place.
 #[derive(Debug, Clone, Default)]
 pub struct Region2 {
     pub t_th: usize,
-    offsets: Vec<usize>,
-    ids: Vec<u32>,
-    vals: Vec<f64>,
+    pub(crate) offsets: Vec<usize>,
+    pub(crate) ids: Vec<u32>,
+    pub(crate) vals: Vec<f64>,
     /// Moving-block length per term (counts only stored entries).
     pub mfm: Vec<u32>,
 }
@@ -61,8 +73,18 @@ impl Region2 {
         self.ids.len()
     }
 
+    /// The flat storage `(offsets, ids, vals, mfm)` for the bitwise
+    /// incremental-vs-scratch equality suite.
+    pub fn raw_parts(&self) -> (&[usize], &[u32], &[f64], &[u32]) {
+        (&self.offsets, &self.ids, &self.vals, &self.mfm)
+    }
+
     pub fn mem_bytes(&self) -> usize {
-        self.offsets.len() * std::mem::size_of::<usize>() + self.ids.len() * 4 + self.vals.len() * 8 + self.mfm.len() * 4
+        use std::mem::size_of;
+        self.offsets.len() * size_of::<usize>()
+            + self.ids.len() * size_of::<u32>()
+            + self.vals.len() * size_of::<f64>()
+            + self.mfm.len() * size_of::<u32>()
     }
 }
 
@@ -73,7 +95,7 @@ impl Region2 {
 pub struct PartialIndex {
     pub t_th: usize,
     pub k: usize,
-    w: Vec<f64>,
+    pub(crate) w: Vec<f64>,
 }
 
 impl PartialIndex {
@@ -83,10 +105,16 @@ impl PartialIndex {
         &self.w[i..i + self.k]
     }
 
+    /// The full dense value array (row-major per term) for the bitwise
+    /// incremental-vs-scratch equality suite.
+    pub fn values(&self) -> &[f64] {
+        &self.w
+    }
+
     /// Memory footprint — the paper's
     /// `K · (D − t_th + 1) · sizeof(double)` accounting (Section IV-A).
     pub fn mem_bytes(&self) -> usize {
-        self.w.len() * 8
+        self.w.len() * std::mem::size_of::<f64>()
     }
 }
 
@@ -134,14 +162,10 @@ impl EsIndex {
         assert!(v_th > 0.0, "v_th must be positive (got {v_th})");
         let inv_scale = 1.0 / v_th;
 
-        let r1 = InvIndex::build(means, t_th);
-        // Region-1 values must be scaled too (exact partial similarities
-        // in the scaled domain). InvIndex stores raw values; rebuild its
-        // vals scaled: cheaper to scale in place via a dedicated pass.
-        let mut r1 = r1;
-        if v_th != 1.0 {
-            r1.scale_values(inv_scale);
-        }
+        // Region-1 values are scaled during construction (exact partial
+        // similarities in the scaled domain): each value is written
+        // exactly once — no scale-in-place post-pass.
+        let r1 = InvIndex::build_scaled(means, t_th, inv_scale);
 
         let width = d - t_th;
         // Pass 1: counts.

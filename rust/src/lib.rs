@@ -21,7 +21,10 @@
 //!   generation/loading.
 //! - [`index`] — mean-inverted indexes, including the three-region
 //!   structured index driven by the structural parameters `(t_th, v_th)`,
-//!   and the (optionally cluster-parallel) update step.
+//!   the (optionally cluster-parallel) update step, and
+//!   [`index::maintain`] — incremental index maintenance that splices
+//!   only moved centroids' postings across iterations (byte-identical
+//!   to a from-scratch build, enforced by `rust/tests/incremental.rs`).
 //! - [`algo`] — the clustering algorithms (MIVI, DIVI, Ding+, ICP,
 //!   ES-ICP, TA-ICP, CS-ICP, and the ablations ES/ThV/ThT/…-MIVI), plus
 //!   [`algo::par`] — the sharded multi-threaded assignment engine

@@ -13,11 +13,17 @@
 //!   skm compare --preset nyt-like --algos mivi,icp,es-icp --seed 1
 //!   skm audit --preset tiny --algo all
 //!   skm cluster --input docword.pubmed.txt --max-docs 100000 --algo es-icp
+//!   skm cluster --preset nyt-like --algo es-icp --bench-json run.json
+//!
+//! `--bench-json <path>` (cluster and compare) dumps the phase-level
+//! timing breakdown (gather / verify / update / rebuild), iteration
+//! count, and operation counters as JSON.
 
 use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::coordinator::compare::absolute_table;
 use skm::coordinator::{
-    audit_equivalence_with, comparison_rate_table, preset, run_and_summarize_with,
+    audit_equivalence_with, cluster_run_json, compare_runs_json, comparison_rate_table, preset,
+    run_and_summarize_with,
 };
 use skm::corpus::read_uci_bow_file;
 use skm::estparams::{estimate, EstConfig};
@@ -138,19 +144,33 @@ fn cmd_cluster(args: &Args) {
         );
     }
     if args.flag("log") {
-        println!("iter  mult          CPR       assign(s)  update(s)  changes  moving");
+        println!(
+            "iter  mult          CPR       assign(s)  update(s)  rebuild(s)  changes  moving"
+        );
         for l in &out.logs {
             println!(
-                "{:>4}  {:<12}  {:<8}  {:<9.4}  {:<9.4}  {:>7}  {:>6}",
+                "{:>4}  {:<12}  {:<8}  {:<9.4}  {:<9.4}  {:<10.4}  {:>7}  {:>6}",
                 l.iter,
                 fmt_sig(l.counters.mult as f64),
                 fmt_sig(l.cpr),
                 l.assign_secs,
                 l.update_secs,
+                l.rebuild_secs,
                 l.changes,
                 l.n_moving
             );
         }
+    }
+    write_bench_json(args, &cluster_run_json(&ds, &cfg, &out));
+}
+
+/// `--bench-json <path>`: dump the phase-level timing breakdown,
+/// iteration count, and OpCounters of the run(s) as JSON.
+fn write_bench_json(args: &Args, json: &skm::util::json::Json) {
+    if let Some(path) = args.get("bench-json") {
+        std::fs::write(path, json.render_pretty())
+            .unwrap_or_else(|e| panic!("--bench-json {path}: {e}"));
+        eprintln!("[wrote {path}]");
     }
 }
 
@@ -170,9 +190,10 @@ fn cmd_compare(args: &Args) {
     let kinds = parse_algos(args.get_or("algos", "mivi,icp,ta-icp,cs-icp,es-icp"));
     describe(&ds, cfg.k);
     let mut summaries = Vec::new();
+    let mut outs = Vec::new();
     for kind in kinds {
         eprintln!("running {} ...", kind.name());
-        let (_, s) = run_and_summarize_with(kind, &ds, &cfg, &par);
+        let (out, s) = run_and_summarize_with(kind, &ds, &cfg, &par);
         eprintln!(
             "  {} iters, avg {:.3}s/iter, avg mult {}",
             s.iterations,
@@ -180,12 +201,14 @@ fn cmd_compare(args: &Args) {
             fmt_sig(s.avg_mult)
         );
         summaries.push(s);
+        outs.push(out);
     }
     println!("\nAbsolute values (per iteration):");
     println!("{}", absolute_table(&summaries).render());
     let reference = args.get_or("reference", summaries.last().map(|s| s.name).unwrap_or("MIVI"));
     println!("Rates relative to {reference} (cf. paper Tables IV/VI):");
     println!("{}", comparison_rate_table(&summaries, reference).render());
+    write_bench_json(args, &compare_runs_json(&ds, &cfg, &outs));
 }
 
 fn cmd_audit(args: &Args) {

@@ -9,4 +9,4 @@ pub mod perf;
 
 pub use counters::{OpCounters, RunCounters};
 pub use nmi::{entropy, mutual_information, nmi, pairwise_nmi};
-pub use perf::{measure, PerfGroup, PerfReading};
+pub use perf::{measure, PerfGroup, PerfReading, PhaseTimes};

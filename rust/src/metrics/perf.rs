@@ -214,6 +214,58 @@ impl Drop for PerfGroup {
     }
 }
 
+/// Wall-clock seconds spent in each phase of one clustering iteration
+/// (§Perf instrumentation): index **rebuild** (incremental splice or
+/// from-scratch build, plus EstParams), assignment **gather**
+/// (region-1/2 accumulation + pruning filters), assignment **verify**
+/// (partial-index exact pass + argmax), and mean **update** (centroid
+/// construction + ρ/ICP bookkeeping).
+///
+/// Assigners accumulate gather/verify per shard and the coordinator
+/// fills rebuild/update; the merged breakdown lands in
+/// `algo::IterLog` and the `--bench-json` report. Timing never affects
+/// results — the sharded engine stays bit-identical to the serial path.
+///
+/// **Units caveat:** `gather`/`verify` are summed across shard workers,
+/// so under `--threads N` they are *CPU-seconds* and can exceed the
+/// assignment *wall* time by up to N×; they equal wall time only in
+/// serial runs. `rebuild`/`update` are wall-clock (the coordinator
+/// times those phases on one thread).
+///
+/// The per-object gather/verify probes cost two `Instant::now()` calls
+/// per object (~50 ns); set `SKM_PHASE_TIMING=0` to disable them for
+/// maximum-fidelity timing runs (the phases then read 0).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimes {
+    pub rebuild: f64,
+    pub gather: f64,
+    pub verify: f64,
+    pub update: f64,
+}
+
+/// Whether the per-object gather/verify probes are enabled
+/// (`SKM_PHASE_TIMING`, default on; `0` disables). Read once per
+/// assigner at construction.
+pub fn phase_timing_enabled() -> bool {
+    std::env::var("SKM_PHASE_TIMING")
+        .map(|v| v != "0")
+        .unwrap_or(true)
+}
+
+impl PhaseTimes {
+    pub fn add(&mut self, o: &PhaseTimes) {
+        self.rebuild += o.rebuild;
+        self.gather += o.gather;
+        self.verify += o.verify;
+        self.update += o.update;
+    }
+
+    /// Total seconds across all four phases.
+    pub fn total(&self) -> f64 {
+        self.rebuild + self.gather + self.verify + self.update
+    }
+}
+
 /// Counter values from one measurement window.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PerfReading {
@@ -272,6 +324,24 @@ mod tests {
         } else {
             println!("perf unavailable in this environment (fallback path)");
         }
+    }
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::default();
+        p.add(&PhaseTimes {
+            rebuild: 1.0,
+            gather: 2.0,
+            verify: 3.0,
+            update: 4.0,
+        });
+        p.add(&PhaseTimes {
+            rebuild: 0.5,
+            ..Default::default()
+        });
+        assert_eq!(p.rebuild, 1.5);
+        assert_eq!(p.gather, 2.0);
+        assert_eq!(p.total(), 10.5);
     }
 
     #[test]

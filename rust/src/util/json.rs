@@ -1,0 +1,189 @@
+//! Minimal JSON value builder/serializer (the offline build has no
+//! `serde`). Used by the `--bench-json` CLI flag and the hot-path
+//! bench harness to emit machine-readable phase timings and counters.
+//!
+//! Output is deterministic: object fields serialize in insertion order,
+//! floats use Rust's shortest-roundtrip `Display`, and non-finite
+//! floats degrade to `null` (JSON has no NaN/Inf).
+
+use std::fmt;
+
+/// A JSON value. Construct with the helper constructors and serialize
+/// with [`Json::render`] (compact) or [`Json::render_pretty`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Finite floats; NaN/Inf serialize as `null`.
+    Num(f64),
+    /// Unsigned integers (counters can exceed `f64`'s 2^53 precision).
+    UInt(u64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Compact single-line rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Two-space-indented rendering (for committed baselines).
+    pub fn render_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let s = format!("{v}");
+                    out.push_str(&s);
+                    // Keep integral floats as valid JSON numbers — they
+                    // already are ("1" is a number) — nothing to fix up.
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::UInt(v) => out.push_str(&v.to_string()),
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (q, item) in items.iter().enumerate() {
+                    if q > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (q, (key, value)) in fields.iter().enumerate() {
+                    if q > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(key, out);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    value.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Num(1.5).render(), "1.5");
+        assert_eq!(Json::Num(1.0).render(), "1");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::UInt(u64::MAX).render(), "18446744073709551615");
+        assert_eq!(Json::Int(-3).render(), "-3");
+    }
+
+    #[test]
+    fn strings_escape() {
+        assert_eq!(Json::str("a\"b\\c\nd").render(), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(Json::str("\u{01}").render(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn containers_render_in_order() {
+        let j = Json::obj(vec![
+            ("b", Json::UInt(1)),
+            ("a", Json::Arr(vec![Json::Num(0.5), Json::Null])),
+        ]);
+        assert_eq!(j.render(), "{\"b\":1,\"a\":[0.5,null]}");
+        assert_eq!(Json::Arr(vec![]).render(), "[]");
+        assert_eq!(Json::obj(vec![]).render(), "{}");
+    }
+
+    #[test]
+    fn pretty_is_parseable_shape() {
+        let j = Json::obj(vec![(
+            "phases",
+            Json::obj(vec![("gather", Json::Num(0.25))]),
+        )]);
+        let p = j.render_pretty();
+        assert!(p.contains("\"phases\": {"));
+        assert!(p.ends_with("}\n"));
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod io;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod timer;

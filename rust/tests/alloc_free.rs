@@ -1,0 +1,124 @@
+//! Counting-allocator proof of the allocation-free steady-state
+//! assignment loop (§Perf): once the per-shard scratch pools are warm
+//! (a few Lloyd iterations), `Assigner::assign` must perform **zero**
+//! heap allocations for every algorithm. This is its own integration
+//! test binary so the `#[global_allocator]` cannot interfere with the
+//! rest of the suite.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use skm::algo::{make_assigner, seed_means, AlgoKind, ClusterConfig, IterState};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::index::{membership_changes, update_means_with_rho};
+use skm::sparse::build_dataset;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+/// Warm an assigner through `warm_iters` full Lloyd iterations (which
+/// covers the EstParams runs at iterations 2–3 and the preset `t_th`
+/// switches), then assert that further serial assignment steps do not
+/// touch the allocator at all.
+#[test]
+fn steady_state_assignment_is_allocation_free() {
+    let c = generate(&CorpusSpec {
+        n_docs: 300,
+        ..tiny(7)
+    });
+    let ds = build_dataset("alloc", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 3,
+        ..Default::default()
+    };
+    let kinds = [
+        AlgoKind::Mivi,
+        AlgoKind::Icp,
+        AlgoKind::EsIcp,
+        AlgoKind::Es,
+        AlgoKind::TaIcp,
+        AlgoKind::CsIcp,
+        AlgoKind::Divi,
+        AlgoKind::Ding,
+    ];
+    let n = ds.n();
+    for kind in kinds {
+        let mut st = IterState {
+            k: cfg.k,
+            assign: vec![0; n],
+            rho: vec![-1.0; n],
+            xstate: vec![false; n],
+            means: seed_means(&ds, cfg.k, cfg.seed),
+            iter: 1,
+        };
+        let mut assigner = make_assigner(kind, &ds, &cfg);
+        assigner.rebuild(&ds, &st, &cfg);
+        for r in 1..=4 {
+            st.iter = r;
+            let prev = st.assign.clone();
+            let _ = assigner.assign(&ds, &mut st);
+            let changed = membership_changes(&prev, &st.assign, cfg.k);
+            let upd = update_means_with_rho(
+                &ds,
+                &st.assign,
+                cfg.k,
+                Some(&st.means),
+                Some(&changed),
+                Some(&st.rho),
+            );
+            for i in 0..n {
+                st.xstate[i] = prev[i] == st.assign[i] && upd.rho[i] >= st.rho[i];
+            }
+            st.means = upd.means;
+            st.rho = upd.rho;
+            st.iter = r + 1;
+            assigner.rebuild(&ds, &st, &cfg);
+        }
+        // Settle once after the final rebuild, drain phases, then count.
+        let _ = assigner.assign(&ds, &mut st);
+        let _ = assigner.take_phases();
+
+        let before = allocs();
+        for _ in 0..3 {
+            let _ = assigner.assign(&ds, &mut st);
+        }
+        let after = allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "{}: steady-state assignment allocated {} times",
+            kind.name(),
+            after - before
+        );
+    }
+}

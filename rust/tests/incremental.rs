@@ -1,0 +1,238 @@
+//! Incremental-vs-scratch index equality suite (§Perf tentpole):
+//! over realistic Lloyd trajectories (3 seeds × ≥5 iterations), the
+//! incrementally spliced index must be **bitwise identical** to a
+//! from-scratch build for every structured index kind — offsets, ids,
+//! vals (compared via `f64::to_bits`), mfm, moving_ids, and the dense
+//! partial-index rows — including across the EstParams
+//! re-parameterization boundary where the maintainers must fall back
+//! to a full rebuild and then resume splicing.
+
+use skm::algo::{make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::index::{
+    membership_changes, update_means_with_rho, CsIndex, CsMaintainer, EsIndex, EsMaintainer,
+    InvIndex, InvMaintainer, MeanSet, RebuildKind, TaIndex, TaMaintainer,
+};
+use skm::sparse::{build_dataset, Dataset};
+
+fn dataset(seed: u64) -> Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs: 400,
+        ..tiny(seed)
+    });
+    build_dataset("inc", c.n_terms, &c.docs)
+}
+
+/// Drive a plain MIVI Lloyd loop, collecting the mean set after every
+/// update step — the realistic moved-flag trajectory (moving fraction
+/// decays, centroids relocate between the moving and invariant blocks).
+fn trajectory(ds: &Dataset, cfg: &ClusterConfig, iters: usize) -> Vec<MeanSet> {
+    let n = ds.n();
+    let mut st = IterState {
+        k: cfg.k,
+        assign: vec![0; n],
+        rho: vec![-1.0; n],
+        xstate: vec![false; n],
+        means: seed_means(ds, cfg.k, cfg.seed),
+        iter: 1,
+    };
+    let mut assigner = make_assigner(AlgoKind::Mivi, ds, cfg);
+    assigner.rebuild(ds, &st, cfg);
+    let mut seq = vec![st.means.clone()];
+    for r in 1..=iters {
+        st.iter = r;
+        let prev = st.assign.clone();
+        let _ = assigner.assign(ds, &mut st);
+        // No convergence break: a fixed-point step yields an all-invariant
+        // mean set, which is itself a splice edge case worth covering.
+        let changed = membership_changes(&prev, &st.assign, cfg.k);
+        let upd = update_means_with_rho(
+            ds,
+            &st.assign,
+            cfg.k,
+            Some(&st.means),
+            Some(&changed),
+            Some(&st.rho),
+        );
+        st.means = upd.means;
+        st.rho = upd.rho;
+        st.iter = r + 1;
+        assigner.rebuild(ds, &st, cfg);
+        seq.push(st.means.clone());
+    }
+    assert!(seq.len() >= 6, "trajectory too short: {}", seq.len());
+    seq
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: value count");
+    for (q, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: value {q}");
+    }
+}
+
+fn assert_inv_eq(a: &InvIndex, b: &InvIndex, tag: &str) {
+    let (ao, ai, av, am) = a.raw_parts();
+    let (bo, bi, bv, bm) = b.raw_parts();
+    assert_eq!(ao, bo, "{tag}: offsets");
+    assert_eq!(ai, bi, "{tag}: ids");
+    assert_eq!(am, bm, "{tag}: mfm");
+    assert_bits_eq(av, bv, &format!("{tag}: vals"));
+    assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+}
+
+fn assert_region2_eq(a: &skm::index::Region2, b: &skm::index::Region2, tag: &str) {
+    let (ao, ai, av, am) = a.raw_parts();
+    let (bo, bi, bv, bm) = b.raw_parts();
+    assert_eq!(ao, bo, "{tag}: offsets");
+    assert_eq!(ai, bi, "{tag}: ids");
+    assert_eq!(am, bm, "{tag}: mfm");
+    assert_bits_eq(av, bv, &format!("{tag}: vals"));
+}
+
+fn assert_es_eq(a: &EsIndex, b: &EsIndex, tag: &str) {
+    assert_inv_eq(&a.r1, &b.r1, &format!("{tag} r1"));
+    assert_region2_eq(&a.r2, &b.r2, &format!("{tag} r2"));
+    assert_bits_eq(a.partial.values(), b.partial.values(), &format!("{tag} partial"));
+    assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+}
+
+fn assert_ta_eq(a: &TaIndex, b: &TaIndex, tag: &str) {
+    assert_inv_eq(&a.r1, &b.r1, &format!("{tag} r1"));
+    assert_region2_eq(&a.r2_all, &b.r2_all, &format!("{tag} r2_all"));
+    assert_region2_eq(&a.r2_moving, &b.r2_moving, &format!("{tag} r2_moving"));
+    assert_bits_eq(a.partial.values(), b.partial.values(), &format!("{tag} partial"));
+    assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+}
+
+fn assert_cs_eq(a: &CsIndex, b: &CsIndex, tag: &str) {
+    assert_inv_eq(&a.r1, &b.r1, &format!("{tag} r1"));
+    assert_region2_eq(&a.r2_sq, &b.r2_sq, &format!("{tag} r2_sq"));
+    assert_bits_eq(a.partial.values(), b.partial.values(), &format!("{tag} partial"));
+    assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+}
+
+/// The core matrix: 3 seeds × all structured kinds × every iteration of
+/// a ≥5-step realistic trajectory, incremental forced on.
+#[test]
+fn incremental_equals_scratch_all_kinds_seeds_iterations() {
+    for seed in [11u64, 22, 33] {
+        let ds = dataset(seed);
+        let cfg = ClusterConfig {
+            k: 12,
+            seed,
+            ..Default::default()
+        };
+        let seq = trajectory(&ds, &cfg, 12);
+        let d = ds.d();
+        let (t_th, v_th) = (d * 7 / 10, 0.05);
+
+        let mut inv = InvMaintainer::new();
+        let mut es = EsMaintainer::new();
+        let mut ta = TaMaintainer::new();
+        let mut cs = CsMaintainer::new();
+        inv.max_dirty_frac = 1.0;
+        es.max_dirty_frac = 1.0;
+        ta.max_dirty_frac = 1.0;
+        cs.max_dirty_frac = 1.0;
+
+        for (r, means) in seq.iter().enumerate() {
+            let tag = format!("seed {seed} iter {r}");
+            inv.update(means, d, 1.0);
+            assert_inv_eq(inv.index().unwrap(), &InvIndex::build(means, d), &tag);
+
+            es.update(means, t_th, v_th);
+            assert_es_eq(es.index().unwrap(), &EsIndex::build(means, t_th, v_th), &tag);
+
+            ta.update(means, t_th);
+            assert_ta_eq(ta.index().unwrap(), &TaIndex::build(means, t_th), &tag);
+
+            cs.update(means, t_th);
+            assert_cs_eq(cs.index().unwrap(), &CsIndex::build(means, t_th), &tag);
+        }
+        // The splice path (not just the fallback) must actually have run.
+        for (name, incs) in [
+            ("inv", inv.incremental_rebuilds),
+            ("es", es.incremental_rebuilds),
+            ("ta", ta.incremental_rebuilds),
+            ("cs", cs.incremental_rebuilds),
+        ] {
+            assert!(incs >= 4, "seed {seed}: {name} spliced only {incs} times");
+        }
+    }
+}
+
+/// The EstParams boundary: changing `(t_th, v_th)` mid-run must fall
+/// back to a full rebuild (sizes change!) and still match scratch,
+/// then splicing resumes under the new parameters.
+#[test]
+fn estparams_reparameterization_boundary() {
+    let ds = dataset(44);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 44,
+        ..Default::default()
+    };
+    let seq = trajectory(&ds, &cfg, 10);
+    let d = ds.d();
+    // Parameter schedule mimicking the two EstParams runs: degenerate →
+    // coarse estimate → final estimate, then steady state.
+    let schedule: Vec<(usize, f64)> = (0..seq.len())
+        .map(|r| match r {
+            0 => (d, 1.0),
+            1 => (d * 8 / 10, 0.08),
+            _ => (d * 7 / 10, 0.04),
+        })
+        .collect();
+
+    let mut es = EsMaintainer::new();
+    es.max_dirty_frac = 1.0;
+    for (r, means) in seq.iter().enumerate() {
+        let (t_th, v_th) = schedule[r];
+        es.update(means, t_th, v_th);
+        let expect_full = r == 0 || schedule[r] != schedule[r - 1];
+        assert_eq!(
+            es.last_rebuild(),
+            if expect_full {
+                RebuildKind::Full
+            } else {
+                RebuildKind::Incremental
+            },
+            "iter {r}"
+        );
+        assert_es_eq(
+            es.index().unwrap(),
+            &EsIndex::build(means, t_th, v_th),
+            &format!("boundary iter {r}"),
+        );
+    }
+    assert_eq!(es.full_rebuilds, 3); // r = 0, 1, 2
+    assert!(es.incremental_rebuilds as usize >= seq.len() - 3);
+}
+
+/// The production default (dirty-fraction heuristic) must agree with
+/// scratch too, whichever path each iteration takes.
+#[test]
+fn auto_threshold_equals_scratch() {
+    let ds = dataset(55);
+    let cfg = ClusterConfig {
+        k: 14,
+        seed: 55,
+        ..Default::default()
+    };
+    let seq = trajectory(&ds, &cfg, 10);
+    let d = ds.d();
+    let mut es = EsMaintainer::new(); // default max_dirty_frac
+    for (r, means) in seq.iter().enumerate() {
+        es.update(means, d * 7 / 10, 0.05);
+        assert_es_eq(
+            es.index().unwrap(),
+            &EsIndex::build(means, d * 7 / 10, 0.05),
+            &format!("auto iter {r}"),
+        );
+    }
+    assert_eq!(
+        es.full_rebuilds + es.incremental_rebuilds,
+        seq.len() as u64
+    );
+}
