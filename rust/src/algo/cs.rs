@@ -13,6 +13,7 @@
 //! shared verbatim by the serial and sharded parallel paths (see
 //! `algo::par`).
 
+use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::CsMaintainer;
@@ -65,9 +66,8 @@ impl CsAssigner {
 
     fn compute_xp_norms(&mut self, ds: &Dataset) {
         for i in 0..ds.n() {
-            let (ts, vs) = ds.x.row(i);
-            let p0 = ts.partition_point(|&t| (t as usize) < self.t_th);
-            self.xp_norm[i] = vs[p0..].iter().map(|v| v * v).sum::<f64>().sqrt();
+            let (_, (_, hvs)) = ds.x.row_split(i, self.t_th);
+            self.xp_norm[i] = hvs.iter().map(|v| v * v).sum::<f64>().sqrt();
         }
     }
 
@@ -113,8 +113,7 @@ impl CsAssigner {
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
-            let (ts, us) = ds.x.row(i);
-            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let ((lts, lus), (hts, hus)) = ds.x.row_split(i, t_th);
 
             rho.iter_mut().for_each(|r| *r = 0.0);
             normsq.iter_mut().for_each(|v| *v = 0.0);
@@ -124,31 +123,26 @@ impl CsAssigner {
 
             let icp_active = self.use_icp && xstate[i];
 
-            // Region 1 exact (Algorithm 11 lines 2–4).
-            for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
-                let (ids, vals) = if icp_active {
-                    idx.r1.postings_moving(t as usize)
-                } else {
-                    idx.r1.postings(t as usize)
-                };
-                mult += ids.len() as u64;
-                for (&c, &v) in ids.iter().zip(vals) {
-                    rho[c as usize] += u * v;
-                }
+            // Region 1 exact (Algorithm 11 lines 2–4) through the
+            // shared dispatch (moving prefix under ICP, dense tail rows
+            // on the full scan).
+            for (&t, &u) in lts.iter().zip(lus) {
+                mult += idx.r1.gather_term(t as usize, u, &mut rho, icp_active);
             }
             // Squared mean norms in the object subspace (lines 5–7):
             // additions of pre-squared values, but through a *second*
-            // K-length accumulator (the LLCM source).
-            for &t in &ts[p0..] {
+            // K-length accumulator (the LLCM source). Unit scatter —
+            // the values are pre-squared, no per-object multiply.
+            for &t in hts {
                 let (ids, sq) = if icp_active {
                     idx.r2_sq.postings_moving(t as usize)
                 } else {
                     idx.r2_sq.postings(t as usize)
                 };
                 counters.cold_touches += ids.len() as u64;
-                for (&c, &vsq) in ids.iter().zip(sq) {
-                    normsq[c as usize] += vsq;
-                }
+                // SAFETY: squared-postings ids are centroid ids < k ==
+                // normsq.len() by index construction.
+                unsafe { kernel::scatter_add_unit(&mut normsq, ids, sq) };
             }
             // UBP filter (lines 8–12): ρ_j + ‖x^p‖·√(‖μ^p_j‖²) — one
             // multiplication and one square root per scanned centroid.
@@ -182,24 +176,15 @@ impl CsAssigner {
 
             // Verification: exact `s ≥ t_th` contribution via the full
             // partial index (same structure as Algorithm 4's phase).
-            let nth = (ts.len() - p0) as u64;
+            let nth = hts.len() as u64;
             mult += z.len() as u64 * nth;
             counters.cold_touches += z.len() as u64 * nth;
-            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+            for (&t, &u) in hts.iter().zip(hus) {
                 let row = idx.partial.row(t as usize);
-                for &j in &z {
-                    rho[j as usize] += u * row[j as usize];
-                }
+                kernel::verify_axpy_ids(&mut rho, &z, row, u, 1.0);
             }
 
-            let mut amax = *slot;
-            let mut rmax = rho_max0;
-            for &j in &z {
-                if rho[j as usize] > rmax {
-                    rmax = rho[j as usize];
-                    amax = j;
-                }
-            }
+            let (amax, _) = kernel::argmax_ids(&rho, &z, rho_max0, *slot);
 
             counters.mult += mult;
             counters.candidates += z.len() as u64;

@@ -19,6 +19,7 @@
 //! objects' bounds exclusively and the sharded path is bit-identical to
 //! the serial one.
 
+use crate::algo::kernel;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::metrics::counters::OpCounters;
 use crate::metrics::perf::PhaseTimes;
@@ -83,15 +84,14 @@ impl DingAssigner {
     /// Exact similarity of object `i` to centroid `j` by direct indexing
     /// into the dense mean (the paper's "simply and quickly access a
     /// mean-feature value by using a data-object term ID as a key").
+    /// Routed through the shared micro-kernel: strict left-to-right
+    /// accumulation, so the sum is bit-identical to the naive loop.
     #[inline]
     fn exact_sim(&self, ds: &Dataset, i: usize, j: usize) -> f64 {
         let (ts, us) = ds.x.row(i);
-        let row = self.mean_row(j);
-        let mut s = 0.0;
-        for (&t, &u) in ts.iter().zip(us) {
-            s += u * row[t as usize];
-        }
-        s
+        // SAFETY: CSR term ids are < D == mean_row(j).len() by
+        // construction; ts/us are one row's parallel slices.
+        unsafe { kernel::sparse_dot_dense(ts, us, self.mean_row(j)) }
     }
 
     /// Assignment of objects `[lo, lo + out.len())`; `gub` is the bound

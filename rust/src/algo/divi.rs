@@ -14,6 +14,7 @@
 //! partial-similarity additions happen in exactly the serial order, so
 //! the sharded path is bit-identical to the serial one (see `algo::par`).
 
+use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::{MeanSet, ObjInvIndex};
@@ -138,18 +139,27 @@ impl DiviAssigner {
                 };
                 mult += oids.len() as u64;
                 // Scattered writes into the accumulator: the
-                // cache-hostile inner loop.
+                // cache-hostile inner loop (kernel-routed, but the
+                // per-entry epoch conditional is intrinsic to DIVI —
+                // it is exactly the irregular branch being counted).
                 counters.cold_touches += oids.len() as u64;
-                for (&i, &u) in oids.iter().zip(ovals) {
-                    let li = i as usize - lo;
-                    if version[li] != epoch {
-                        version[li] = epoch;
-                        score[li] = 0.0;
-                        touched.push(li as u32);
-                    }
-                    counters.irregular_branches += 1;
-                    score[li] += u * v;
-                }
+                counters.irregular_branches += oids.len() as u64;
+                // SAFETY: the posting slice was restricted to this
+                // shard's object range [lo, hi) above (or covers the
+                // full range with lo == 0), and score/version span the
+                // shard (len >= hi - lo).
+                unsafe {
+                    kernel::scatter_add_versioned(
+                        &mut score,
+                        &mut version,
+                        &mut touched,
+                        epoch,
+                        oids,
+                        ovals,
+                        v,
+                        lo,
+                    )
+                };
             }
             counters.mult += mult;
             for &li in &touched {

@@ -24,6 +24,7 @@
 //! stay serial inside `rebuild` — the shared structured index is then
 //! read-only for the whole assignment step.
 
+use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::estparams::{estimate, EstConfig};
@@ -186,11 +187,10 @@ impl EsAssigner {
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
-            let (ts, us) = self.xs.row(i);
             // Split the object's terms at t_th (terms are ascending).
-            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let ((lts, lus), (hts, hus)) = self.xs.row_split(i, t_th);
             let mut y_base = 0.0;
-            for &u in &us[p0..] {
+            for &u in hus {
                 y_base += u;
             }
 
@@ -199,54 +199,35 @@ impl EsAssigner {
             // one multiply-add accumulates and retires simultaneously.
             // After the gathering phase, rho[j] IS the upper bound.
             rho.iter_mut().for_each(|r| *r = y_base);
-            z.clear();
             let rho_max0 = rho_prev[i];
             let mut mult = 0u64;
 
             let icp_active = use_icp && xstate[i];
+            // Region 1 through the shared dispatch (moving prefix under
+            // ICP, dense tail rows on the full scan — Algorithm 5).
+            for (&t, &u) in lts.iter().zip(lus) {
+                mult += idx.r1.gather_term(t as usize, u, &mut rho, icp_active);
+            }
             if icp_active {
-                // G_1: moving blocks only (Algorithm 5).
-                for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
-                    let (ids, vals) = idx.r1.postings_moving(t as usize);
-                    mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
-                }
-                for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                // G_1 over Region 2's moving blocks, then the ES filter
+                // over moving centroids: a bare comparison.
+                for (&t, &u) in hts.iter().zip(hus) {
                     let (ids, vals) = idx.r2.postings_moving(t as usize);
                     mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
+                    // SAFETY: region-2 ids are centroid ids < k ==
+                    // rho.len() by index construction.
+                    unsafe { kernel::scatter_add(&mut rho, ids, vals, u) };
                 }
-                // ES filter over moving centroids: a bare comparison.
-                for &j in &idx.moving_ids {
-                    if rho[j as usize] > rho_max0 {
-                        z.push(j);
-                    }
-                }
+                kernel::collect_above_ids(&rho, &idx.moving_ids, rho_max0, &mut z);
             } else {
-                // G_0: full arrays.
-                for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
-                    let (ids, vals) = idx.r1.postings(t as usize);
-                    mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
-                }
-                for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+                // G_0 over the full Region-2 arrays.
+                for (&t, &u) in hts.iter().zip(hus) {
                     let (ids, vals) = idx.r2.postings(t as usize);
                     mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
+                    // SAFETY: as above.
+                    unsafe { kernel::scatter_add(&mut rho, ids, vals, u) };
                 }
-                for (j, &r) in rho.iter().enumerate() {
-                    if r > rho_max0 {
-                        z.push(j as u32);
-                    }
-                }
+                kernel::collect_above(&rho, rho_max0, &mut z);
             }
 
             let t1 = if timing {
@@ -260,23 +241,14 @@ impl EsAssigner {
             // Verification phase: retire the survivors' remaining bound
             // mass through the deficit index — rho lands exactly on the
             // similarity (Algorithm 4 l.12–13, folded).
-            let nth = (ts.len() - p0) as u64;
+            let nth = hts.len() as u64;
             mult += z.len() as u64 * nth;
-            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+            for (&t, &u) in hts.iter().zip(hus) {
                 let row = idx.partial.row(t as usize);
-                for &j in &z {
-                    rho[j as usize] -= u * row[j as usize];
-                }
+                kernel::verify_axpy_ids(&mut rho, &z, row, u, -1.0);
             }
 
-            let mut amax = *slot;
-            let mut rmax = rho_max0;
-            for &j in &z {
-                if rho[j as usize] > rmax {
-                    rmax = rho[j as usize];
-                    amax = j;
-                }
-            }
+            let (amax, _) = kernel::argmax_ids(&rho, &z, rho_max0, *slot);
 
             counters.mult += mult;
             counters.candidates += z.len() as u64;

@@ -1,0 +1,413 @@
+//! The shared gather micro-kernels (§Perf tentpole) — the innermost
+//! loops of every assignment step, extracted into one place so all six
+//! assigners (`mivi`, `esicp`, `ta`, `cs`, `divi`, `ding`) run the
+//! *same* tuned code instead of six hand-rolled copies.
+//!
+//! ## Why this module exists (the AFM argument)
+//!
+//! The paper's §III–IV analysis attributes MIVI-family speed to three
+//! architecture-friendly properties of the gathering phase:
+//!
+//! 1. **Multiplication volume concentrates** on a few high-df terms
+//!    against high mean-feature values (UC3), so the bytes that matter
+//!    fit in cache *if the layout lets them stay there*;
+//! 2. the two-block postings layout makes the moving-only scan
+//!    **branch-free** (no per-entry `if moving` test);
+//! 3. the scatter-add `ρ[c] += u·v` itself is a pure data-flow loop —
+//!    every iteration is independent (distinct accumulator slots), so
+//!    the only obstacles to peak throughput are *bounds checks*, *loop
+//!    overhead*, and *cache misses on ρ / the postings stream*.
+//!
+//! The kernels here attack exactly those three: fixed-order 4-way
+//! unrolling (less loop overhead, wider instruction window),
+//! `get_unchecked` indexing guarded by debug assertions (no release-
+//! mode bounds checks in the hottest loop of the codebase), and
+//! software prefetch of upcoming ρ cache lines on x86_64 (the postings
+//! stream is sequential and prefetches itself; the ρ scatter targets do
+//! not). The companion memory-layout work lives in
+//! [`crate::index::inverted`]: `u32` posting offsets (half the index
+//! metadata traffic) and the dense Region-1 tail block whose gather is
+//! [`dense_axpy`] — a contiguous FMA loop with zero indirection, the
+//! paper's "frequently used data kept in cache" region made literal.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every kernel performs **the same floating-point operations in the
+//! same left-to-right order** as the naive scalar loop it replaces
+//! (unrolling is purely mechanical: four sequential statements per
+//! iteration, one accumulator, no reassociation). Results are therefore
+//! bit-identical to the pre-kernel code — enforced against in-crate
+//! scalar references by `rust/tests/kernel.rs` (random lengths,
+//! remainders 1–3, empty slices, duplicate ids) and end-to-end by the
+//! `parallel` / `incremental` equivalence suites.
+//!
+//! The dense path is the one deliberate re-ordering: a dense row adds
+//! `u·w[j]` for *every* `j`, padding the absent entries with `w[j] = 0`.
+//! Within one term each centroid appears at most once, so the adds land
+//! in **distinct** accumulator slots and per-term ordering is
+//! irrelevant; the padded adds contribute `u·0.0 = ±0.0`, and
+//! `x + (±0.0)` is a bitwise no-op for every `x` except `x = -0.0`
+//! (where `-0.0 + 0.0 = +0.0`). An accumulator that starts at `+0.0`
+//! can never *become* `-0.0` under IEEE-754 addition (a sum is `-0.0`
+//! only when both addends are `-0.0`), so the dense gather is bit-
+//! identical to the sparse scatter for any accumulator initialized at
+//! `+0.0` or above — which all assigners do (`0.0` or the nonnegative
+//! `y_base`). `rust/tests/kernel.rs` checks this equivalence with
+//! adversarial (negative / underflowing) values.
+//!
+//! ## Safety
+//!
+//! The posting-rate kernels ([`scatter_add`], [`scatter_add_unit`],
+//! [`sparse_dot_dense`], [`scatter_add_versioned`]) are **`unsafe
+//! fn`**: they index with `get_unchecked` and require every id to fall
+//! inside the accumulator slice. The safe boundary sits where that
+//! invariant is actually enforced — the [`crate::index`] builders
+//! produce ids `< K` by construction and the assigners size their
+//! scratch to `K` — so call sites carry one `SAFETY:` comment citing
+//! exactly that. The invariant is additionally re-checked per call in
+//! debug builds (full-slice scan); CI runs the suite optimized with
+//! debug assertions enabled, and the kernel tests run under Miri. The
+//! per-candidate scans ([`argmax_ids`], [`collect_above_ids`],
+//! [`verify_axpy_ids`]) run once per survivor, not once per posting,
+//! so they keep ordinary bounds-checked indexing and stay safe.
+
+/// How many entries ahead of the current position the ρ prefetch runs.
+/// Far enough to cover DRAM latency at ~4 entries/cycle, near enough
+/// that the line is still resident when the store arrives.
+const PREFETCH_AHEAD: usize = 16;
+
+/// Prefetch the accumulator cache line targeted by `ids[at]` (x86_64
+/// only; a no-op elsewhere — the scalar fallback the portability story
+/// requires). Reads `ids` in bounds-checked fashion: `at` may run past
+/// the end near the tail, where the prefetch simply stops.
+#[inline(always)]
+fn prefetch_acc(acc: &[f64], ids: &[u32], at: usize) {
+    // Skipped under Miri: a prefetch has no observable semantics, and
+    // the interpreter need not model the intrinsic.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        if let Some(&c) = ids.get(at) {
+            let c = c as usize;
+            if c < acc.len() {
+                // SAFETY: `c < acc.len()` just checked; prefetch has no
+                // architectural effect beyond the cache.
+                unsafe {
+                    core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                        acc.as_ptr().add(c) as *const i8,
+                    );
+                }
+            }
+        }
+    }
+    #[cfg(any(not(target_arch = "x86_64"), miri))]
+    {
+        let _ = (acc, ids, at);
+    }
+}
+
+/// Debug-only validation of the unchecked-kernel invariant: parallel
+/// slices, every id inside the accumulator.
+#[inline(always)]
+fn debug_check(acc: &[f64], ids: &[u32], vals: &[f64]) {
+    debug_assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    debug_assert!(
+        ids.iter().all(|&c| (c as usize) < acc.len()),
+        "posting id out of accumulator range"
+    );
+}
+
+/// Branch-free scatter-add over a postings slice:
+/// `acc[ids[q]] += u * vals[q]` for `q` in order.
+///
+/// Fixed-order 4-way unrolled with `get_unchecked` indexing and ρ-line
+/// prefetch; bit-identical to [`scatter_add_scalar`] (same operations,
+/// same order — see the module docs). Duplicate ids are fine: the
+/// strictly sequential order makes their accumulation well-defined.
+///
+/// # Safety
+///
+/// `ids.len() == vals.len()` and every id must be `< acc.len()`. Both
+/// are debug-asserted per call; in-crate callers get them from the
+/// [`crate::index`] builders (ids `< K`) with `K`-length accumulators.
+#[inline]
+pub unsafe fn scatter_add(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    debug_check(acc, ids, vals);
+    let n = ids.len().min(vals.len());
+    let mut q = 0usize;
+    while q + 4 <= n {
+        // Cover all four scatter targets of the block PREFETCH_AHEAD
+        // entries out — the targets are effectively random lines, so
+        // each needs its own prefetch.
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+        // SAFETY: q+3 < n ≤ ids.len() == vals.len(); ids < acc.len() is
+        // this function's contract, checked above in debug builds.
+        unsafe {
+            let c0 = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c0) += u * *vals.get_unchecked(q);
+            let c1 = *ids.get_unchecked(q + 1) as usize;
+            *acc.get_unchecked_mut(c1) += u * *vals.get_unchecked(q + 1);
+            let c2 = *ids.get_unchecked(q + 2) as usize;
+            *acc.get_unchecked_mut(c2) += u * *vals.get_unchecked(q + 2);
+            let c3 = *ids.get_unchecked(q + 3) as usize;
+            *acc.get_unchecked_mut(c3) += u * *vals.get_unchecked(q + 3);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: q < n; same contract as above.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c) += u * *vals.get_unchecked(q);
+        }
+        q += 1;
+    }
+}
+
+/// [`scatter_add`] without the weight: `acc[ids[q]] += vals[q]` (the CS
+/// filter's squared-norm accumulation, which stores pre-squared values
+/// and needs no per-object multiply).
+///
+/// # Safety
+///
+/// Same contract as [`scatter_add`]: parallel slices, every id
+/// `< acc.len()` (debug-asserted).
+#[inline]
+pub unsafe fn scatter_add_unit(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    debug_check(acc, ids, vals);
+    let n = ids.len().min(vals.len());
+    let mut q = 0usize;
+    while q + 4 <= n {
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+        // SAFETY: as in `scatter_add`.
+        unsafe {
+            let c0 = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c0) += *vals.get_unchecked(q);
+            let c1 = *ids.get_unchecked(q + 1) as usize;
+            *acc.get_unchecked_mut(c1) += *vals.get_unchecked(q + 1);
+            let c2 = *ids.get_unchecked(q + 2) as usize;
+            *acc.get_unchecked_mut(c2) += *vals.get_unchecked(q + 2);
+            let c3 = *ids.get_unchecked(q + 3) as usize;
+            *acc.get_unchecked_mut(c3) += *vals.get_unchecked(q + 3);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: as in `scatter_add`.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c) += *vals.get_unchecked(q);
+        }
+        q += 1;
+    }
+}
+
+/// Naive bounds-checked scatter-add — the pre-kernel reference loop.
+/// Kept for the bit-identity tests (`rust/tests/kernel.rs`) and the
+/// scalar baseline of the gather-kernel bench section.
+#[inline]
+pub fn scatter_add_scalar(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    for (&c, &v) in ids.iter().zip(vals) {
+        acc[c as usize] += u * v;
+    }
+}
+
+/// Naive bounds-checked unit scatter-add (reference for
+/// [`scatter_add_unit`]).
+#[inline]
+pub fn scatter_add_unit_scalar(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    for (&c, &v) in ids.iter().zip(vals) {
+        acc[c as usize] += v;
+    }
+}
+
+/// Dense gather over a Region-1 tail row: `acc[j] += u * row[j]` for
+/// every `j` — contiguous streaming FMA, zero indirection, no scatter.
+/// Used for terms inside the dense block of
+/// [`crate::index::InvIndex`]; bit-identical to scatter-adding the
+/// term's sparse postings under the `+0.0`-padding argument in the
+/// module docs.
+#[inline]
+pub fn dense_axpy(acc: &mut [f64], row: &[f64], u: f64) {
+    debug_assert_eq!(acc.len(), row.len(), "dense row must span the accumulator");
+    let n = acc.len().min(row.len());
+    let mut j = 0usize;
+    while j + 4 <= n {
+        // SAFETY: j+3 < n ≤ both lengths.
+        unsafe {
+            *acc.get_unchecked_mut(j) += u * *row.get_unchecked(j);
+            *acc.get_unchecked_mut(j + 1) += u * *row.get_unchecked(j + 1);
+            *acc.get_unchecked_mut(j + 2) += u * *row.get_unchecked(j + 2);
+            *acc.get_unchecked_mut(j + 3) += u * *row.get_unchecked(j + 3);
+        }
+        j += 4;
+    }
+    while j < n {
+        // SAFETY: j < n.
+        unsafe {
+            *acc.get_unchecked_mut(j) += u * *row.get_unchecked(j);
+        }
+        j += 1;
+    }
+}
+
+/// The ρ-argmax scan over the whole accumulator, with the shared
+/// tie-break semantics every assigner uses: keep `(amax, rmax)` unless
+/// **strictly** better, lowest index first. Previously six hand-rolled
+/// copies (`rho[j] > rmax` loops) drifting apart; now one.
+#[inline]
+pub fn argmax_scan(acc: &[f64], mut rmax: f64, mut amax: u32) -> (u32, f64) {
+    for (j, &r) in acc.iter().enumerate() {
+        if r > rmax {
+            rmax = r;
+            amax = j as u32;
+        }
+    }
+    (amax, rmax)
+}
+
+/// [`argmax_scan`] restricted to a candidate id list (the survivor set
+/// `Z`, or the moving-centroid list under ICP). Runs once per
+/// candidate, not per posting, so ordinary bounds-checked indexing is
+/// kept and the function stays safe (panics on an out-of-range id).
+#[inline]
+pub fn argmax_ids(acc: &[f64], ids: &[u32], mut rmax: f64, mut amax: u32) -> (u32, f64) {
+    for &j in ids {
+        let r = acc[j as usize];
+        if r > rmax {
+            rmax = r;
+            amax = j;
+        }
+    }
+    (amax, rmax)
+}
+
+/// The ES main filter over the whole accumulator: collect every index
+/// whose (folded upper-bound) value strictly beats the threshold.
+/// `z` is cleared first; callers pre-reserve it to K so pushes never
+/// allocate (the §Perf allocation-free contract).
+#[inline]
+pub fn collect_above(acc: &[f64], thresh: f64, z: &mut Vec<u32>) {
+    z.clear();
+    for (j, &r) in acc.iter().enumerate() {
+        if r > thresh {
+            z.push(j as u32);
+        }
+    }
+}
+
+/// [`collect_above`] restricted to a candidate id list (the ICP
+/// moving-centroid scan). Safe bounds-checked indexing, like
+/// [`argmax_ids`].
+#[inline]
+pub fn collect_above_ids(acc: &[f64], ids: &[u32], thresh: f64, z: &mut Vec<u32>) {
+    z.clear();
+    for &j in ids {
+        if acc[j as usize] > thresh {
+            z.push(j);
+        }
+    }
+}
+
+/// Verification-phase update over the survivor list against one dense
+/// partial-index row: `acc[j] += sign · u · row[j]` for `j ∈ z`.
+/// ES retires deficits with `sign = -1`; CS adds exact Region-3
+/// contributions with `sign = +1`. Runs once per survivor (the filters
+/// already pruned the candidate set), so safe bounds-checked indexing
+/// is kept.
+#[inline]
+pub fn verify_axpy_ids(acc: &mut [f64], z: &[u32], row: &[f64], u: f64, sign: f64) {
+    let su = sign * u;
+    for &j in z {
+        let j = j as usize;
+        acc[j] += su * row[j];
+    }
+}
+
+/// Sparse·dense dot product in strict left-to-right term order —
+/// Ding+'s exact similarity through the dense mean row (object term id
+/// as direct key). One sequential accumulator, so the sum order (and
+/// hence every bit) matches the naive loop; the win is the removed
+/// bounds checks and unrolled loop control.
+///
+/// # Safety
+///
+/// `ts.len() == us.len()` and every term id must be `< row.len()`
+/// (debug-asserted). In-crate callers pass CSR rows whose term ids are
+/// `< D` with `D`-length dense mean rows.
+#[inline]
+pub unsafe fn sparse_dot_dense(ts: &[u32], us: &[f64], row: &[f64]) -> f64 {
+    debug_assert_eq!(ts.len(), us.len());
+    debug_assert!(ts.iter().all(|&t| (t as usize) < row.len()));
+    let n = ts.len().min(us.len());
+    let mut s = 0.0f64;
+    let mut q = 0usize;
+    while q + 4 <= n {
+        // SAFETY: q+3 < n; term ids in range is the caller invariant,
+        // checked above in debug builds.
+        unsafe {
+            s += *us.get_unchecked(q) * *row.get_unchecked(*ts.get_unchecked(q) as usize);
+            s += *us.get_unchecked(q + 1)
+                * *row.get_unchecked(*ts.get_unchecked(q + 1) as usize);
+            s += *us.get_unchecked(q + 2)
+                * *row.get_unchecked(*ts.get_unchecked(q + 2) as usize);
+            s += *us.get_unchecked(q + 3)
+                * *row.get_unchecked(*ts.get_unchecked(q + 3) as usize);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: as above.
+        unsafe {
+            s += *us.get_unchecked(q) * *row.get_unchecked(*ts.get_unchecked(q) as usize);
+        }
+        q += 1;
+    }
+    s
+}
+
+/// DIVI's epoch-versioned scatter-add (the deliberately cache-hostile
+/// strawman loop, kept faithful): `score[i − lo] += u·v` with lazy
+/// per-epoch reset and a touched list. Returns nothing; the caller
+/// accounts `ids.len()` multiplications and irregular branches.
+///
+/// # Safety
+///
+/// Ids must be global object ids in `[lo, lo + score.len())` and
+/// `version.len() >= score.len()` (debug-asserted). In-crate callers
+/// pass posting slices already restricted to the shard's id range.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn scatter_add_versioned(
+    score: &mut [f64],
+    version: &mut [u32],
+    touched: &mut Vec<u32>,
+    epoch: u32,
+    ids: &[u32],
+    vals: &[f64],
+    u: f64,
+    lo: usize,
+) {
+    debug_assert_eq!(ids.len(), vals.len());
+    debug_assert!(version.len() >= score.len());
+    debug_assert!(ids
+        .iter()
+        .all(|&i| (i as usize) >= lo && (i as usize) - lo < score.len()));
+    for (&i, &v) in ids.iter().zip(vals) {
+        let li = i as usize - lo;
+        // SAFETY: caller invariant, checked above in debug builds.
+        unsafe {
+            if *version.get_unchecked(li) != epoch {
+                *version.get_unchecked_mut(li) = epoch;
+                *score.get_unchecked_mut(li) = 0.0;
+                touched.push(li as u32);
+            }
+            *score.get_unchecked_mut(li) += u * v;
+        }
+    }
+}

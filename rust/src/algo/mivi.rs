@@ -13,8 +13,12 @@
 //!
 //! The per-object routine lives in [`MiviAssigner::assign_range`] and is
 //! shared verbatim by the serial path and the sharded parallel path, so
-//! the two are bit-identical by construction (see `algo::par`).
+//! the two are bit-identical by construction (see `algo::par`). The
+//! inner loops route through the shared gather micro-kernels
+//! ([`crate::algo::kernel`]): unrolled unchecked scatter-add, the dense
+//! Region-1 tail gather, and the deduplicated ρ-argmax scans.
 
+use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::InvMaintainer;
@@ -83,54 +87,29 @@ impl MiviAssigner {
             rho.iter_mut().for_each(|r| *r = 0.0);
             let mut mult = 0u64;
 
-            if icp_active {
-                // Moving blocks only.
-                for (&t, &u) in ts.iter().zip(vs) {
-                    let (ids, vals) = idx.postings_moving(t as usize);
-                    mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
-                }
-                let mut amax = *slot;
-                let mut rmax = rho_prev[i];
-                for &j in &idx.moving_ids {
-                    if rho[j as usize] > rmax {
-                        rmax = rho[j as usize];
-                        amax = j;
-                    }
-                }
-                counters.mult += mult;
-                counters.candidates += idx.moving_ids.len() as u64;
-                counters.exact_sims += idx.moving_ids.len() as u64;
-                if amax != *slot {
-                    *slot = amax;
-                    changes += 1;
-                }
+            // Moving blocks only under ICP; the full pass (Algorithm 1)
+            // gathers dense-tail terms through contiguous FMA rows —
+            // one shared dispatch (`InvIndex::gather_term`), identical
+            // mult accounting either way.
+            for (&t, &u) in ts.iter().zip(vs) {
+                mult += idx.gather_term(t as usize, u, rho, icp_active);
+            }
+            let (amax, _) = if icp_active {
+                kernel::argmax_ids(rho, &idx.moving_ids, rho_prev[i], *slot)
             } else {
-                // Full MIVI pass (Algorithm 1).
-                for (&t, &u) in ts.iter().zip(vs) {
-                    let (ids, vals) = idx.postings(t as usize);
-                    mult += ids.len() as u64;
-                    for (&c, &v) in ids.iter().zip(vals) {
-                        rho[c as usize] += u * v;
-                    }
-                }
-                let mut amax = *slot;
-                let mut rmax = rho_prev[i];
-                for (j, &r) in rho.iter().enumerate() {
-                    if r > rmax {
-                        rmax = r;
-                        amax = j as u32;
-                    }
-                }
-                counters.mult += mult;
-                counters.candidates += k as u64;
-                counters.exact_sims += k as u64;
-                if amax != *slot {
-                    *slot = amax;
-                    changes += 1;
-                }
+                kernel::argmax_scan(rho, rho_prev[i], *slot)
+            };
+            let scanned = if icp_active {
+                idx.moving_ids.len() as u64
+            } else {
+                k as u64
+            };
+            counters.mult += mult;
+            counters.candidates += scanned;
+            counters.exact_sims += scanned;
+            if amax != *slot {
+                *slot = amax;
+                changes += 1;
             }
         }
         // MIVI/ICP have no separate verification phase: the whole

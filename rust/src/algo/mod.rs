@@ -26,6 +26,7 @@ pub mod cs;
 pub mod ding;
 pub mod divi;
 pub mod esicp;
+pub mod kernel;
 pub mod mivi;
 pub mod par;
 pub mod ta;

@@ -33,6 +33,15 @@ use std::sync::Mutex;
 /// iterations, so the steady-state assignment loop performs **zero**
 /// heap allocations (enforced by `rust/tests/alloc_free.rs`).
 ///
+/// The pooled accumulators are exactly the scatter targets of the
+/// [`crate::algo::kernel`] micro-kernels: one K-length ρ array per
+/// worker stays hot in that worker's private cache across every object
+/// of its shard — the cache-residency half of the AFM argument, while
+/// the kernels supply the branch-free instruction stream half. The
+/// kernels' safety contract (ids `< K`) is guaranteed here by
+/// construction: scratch is sized to `K` on checkout and the shared
+/// index is read-only for the whole assignment step.
+///
 /// Workers `checkout` a scratch at shard start and `checkin` at shard
 /// end, folding their locally accumulated [`PhaseTimes`] into the pool;
 /// the coordinator drains the merged phases once per iteration. Scratch

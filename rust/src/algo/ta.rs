@@ -16,6 +16,7 @@
 //! shared verbatim by the serial and sharded parallel paths (see
 //! `algo::par`).
 
+use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
 use crate::index::TaMaintainer;
@@ -110,10 +111,9 @@ impl TaAssigner {
 
         for (off, slot) in out.iter_mut().enumerate() {
             let i = lo + off;
-            let (ts, us) = ds.x.row(i);
-            let p0 = ts.partition_point(|&t| (t as usize) < t_th);
+            let ((lts, lus), (hts, hus)) = ds.x.row_split(i, t_th);
             let mut y_base = 0.0;
-            for &u in &us[p0..] {
+            for &u in hus {
                 y_base += u;
             }
 
@@ -128,21 +128,18 @@ impl TaAssigner {
 
             let icp_active = self.use_icp && xstate[i];
 
-            // Region 1 exact partial similarities.
-            for (&t, &u) in ts[..p0].iter().zip(&us[..p0]) {
-                let (ids, vals) = if icp_active {
-                    idx.r1.postings_moving(t as usize)
-                } else {
-                    idx.r1.postings(t as usize)
-                };
-                mult += ids.len() as u64;
-                for (&c, &v) in ids.iter().zip(vals) {
-                    rho[c as usize] += u * v;
-                }
+            // Region 1 exact partial similarities through the shared
+            // dispatch (moving prefix under ICP, dense tail rows on the
+            // full scan).
+            for (&t, &u) in lts.iter().zip(lus) {
+                mult += idx.r1.gather_term(t as usize, u, &mut rho, icp_active);
             }
             // Region 2: walk the sorted list until v < v_ta (the TA
-            // stopping rule — one irregular branch per visited entry).
-            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+            // stopping rule — one irregular branch per visited entry;
+            // the data-dependent break keeps this loop out of the
+            // branch-free kernels by design — it IS the comparator's
+            // measured weakness).
+            for (&t, &u) in hts.iter().zip(hus) {
                 let (ids, vals) = if icp_active {
                     idx.r2_moving.postings(t as usize)
                 } else {
@@ -198,7 +195,7 @@ impl TaAssigner {
             // Verification: add the not-yet-consumed region-2/3 values
             // (those `< v_ta`), skipping consumed ones with the
             // conditional the paper calls out (Algorithm 8 lines 12–15).
-            for (&t, &u) in ts[p0..].iter().zip(&us[p0..]) {
+            for (&t, &u) in hts.iter().zip(hus) {
                 let row = idx.partial.row(t as usize);
                 for &j in &z {
                     let w = row[j as usize];
@@ -211,14 +208,7 @@ impl TaAssigner {
                 }
             }
 
-            let mut amax = *slot;
-            let mut rmax = rho_max0;
-            for &j in &z {
-                if rho[j as usize] > rmax {
-                    rmax = rho[j as usize];
-                    amax = j;
-                }
-            }
+            let (amax, _) = kernel::argmax_ids(&rho, &z, rho_max0, *slot);
 
             counters.mult += mult;
             counters.candidates += z.len() as u64;

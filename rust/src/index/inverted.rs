@@ -13,6 +13,37 @@
 //! Storage is flat (CSC-like): one offsets array plus parallel `ids` /
 //! `vals` arrays — no per-term `Vec` allocations on the hot path.
 //!
+//! ## Compact layout (§Perf tentpole)
+//!
+//! Posting **offsets are `u32`**, not `usize`: a mean-inverted index
+//! holds at most `nnz(M) ≤ K·D̂` tuples (≈1.6·10⁸ at the paper's
+//! largest PubMed configuration), far under `u32::MAX`, and the
+//! narrower offsets halve the index-metadata traffic of every postings
+//! lookup (the offsets array is touched once per object·term — the
+//! second-hottest stream after the postings themselves). Construction
+//! asserts the bound. The *object*-side [`ObjInvIndex`] keeps `usize`
+//! offsets: object nnz grows with the corpus, not with K, and that
+//! index sits outside the per-iteration gather loop.
+//!
+//! ## The dense Region-1 tail block
+//!
+//! Term ids are globally ordered by ascending df, so the **highest-df
+//! terms sit at the top of Region 1** — and by UC3 those few terms
+//! against high mean-feature values carry almost all multiplications.
+//! Their tuple arrays are also the *fullest* (nearly every centroid has
+//! a value at a stop-word-like term). For a short suffix of terms whose
+//! arrays are ≥¾ full, the index additionally materializes a **dense
+//! row-major block** (`K` doubles per term, capped to stay
+//! cache-resident): the gathering phase then runs
+//! [`crate::algo::kernel::dense_axpy`] — a contiguous FMA loop with
+//! zero indirection — instead of the id-indirected scatter. This is the
+//! paper's "frequently used data kept in cache" region made literal.
+//! The block is *derived* state, rebuilt deterministically from the
+//! sparse arrays after every build or splice; bit-identity of the dense
+//! gather rests on the `+0.0`-padding argument in
+//! [`crate::algo::kernel`]'s docs. The moving-block (ICP) scans keep
+//! using the sparse arrays — the two-block structure is untouched.
+//!
 //! Indexes are *persistent* across iterations: instead of rebuilding
 //! from scratch each update step, [`crate::index::maintain`] splices
 //! only the postings of centroids that moved (and those that just
@@ -22,6 +53,23 @@
 use crate::index::means::MeanSet;
 use crate::sparse::CsrMatrix;
 
+/// Minimum fill (numerator / denominator) for a term to join the dense
+/// tail block: `mf(s) / k ≥ 3/4`.
+const DENSE_MIN_FILL_NUM: usize = 3;
+const DENSE_MIN_FILL_DEN: usize = 4;
+
+/// Byte budget for the dense tail block (256 KiB — comfortably inside
+/// L2, the "kept in cache" constraint).
+const DENSE_MAX_BYTES: usize = 256 * 1024;
+
+/// Floor on the dense-block term budget. At very large K a single row
+/// exceeds [`DENSE_MAX_BYTES`] (K = 80 000 ⇒ 640 KB/row), but densifying
+/// a ≥¾-full term still wins regardless of cache residency: the gather
+/// drops the 4-byte id stream and the scatter indirection entirely and
+/// streams 8 bytes/centroid sequentially. So the top few qualifying
+/// terms are always mirrored, budget notwithstanding.
+const DENSE_MIN_TERMS: usize = 4;
+
 /// Mean-inverted index with the two-block (moving | invariant) layout.
 ///
 /// Fields are `pub(crate)` so the incremental splice engine
@@ -30,13 +78,19 @@ use crate::sparse::CsrMatrix;
 pub struct InvIndex {
     pub d: usize,
     pub k: usize,
-    pub(crate) offsets: Vec<usize>,
+    pub(crate) offsets: Vec<u32>,
     pub(crate) ids: Vec<u32>,
     pub(crate) vals: Vec<f64>,
     /// `mfm[s]` — number of *moving* centroids in `ξ_s` (the first block).
     pub mfm: Vec<u32>,
     /// Moving centroid ids, ascending (the paper's j' → j map in G_1).
     pub moving_ids: Vec<u32>,
+    /// First term of the dense tail block (`== t_lim` when the block is
+    /// empty). Derived from the sparse arrays; see the module docs.
+    pub(crate) dense_lo: usize,
+    /// Row-major `k`-length rows for terms `s ∈ [dense_lo, t_lim)`
+    /// (zero-padded mirror of the sparse postings).
+    pub(crate) dense_w: Vec<f64>,
 }
 
 impl InvIndex {
@@ -73,19 +127,25 @@ impl InvIndex {
                 }
             }
         }
-        let mut offsets = vec![0usize; t_lim + 1];
+        let mut offsets = vec![0u32; t_lim + 1];
+        let mut acc = 0usize;
         for s in 0..t_lim {
-            offsets[s + 1] = offsets[s] + (cnt_mov[s] + cnt_inv[s]) as usize;
+            acc += (cnt_mov[s] + cnt_inv[s]) as usize;
+            offsets[s + 1] = acc as u32;
         }
-        let nnz = offsets[t_lim];
+        assert!(
+            acc <= u32::MAX as usize,
+            "mean-inverted index nnz {acc} overflows the u32 offset layout"
+        );
+        let nnz = acc;
         let mut ids = vec![0u32; nnz];
         let mut vals = vec![0.0f64; nnz];
 
         // Pass 2: fill. Iterating j ascending keeps ids ascending within
         // each block (deterministic layout).
-        let mut cur_mov: Vec<usize> = (0..t_lim).map(|s| offsets[s]).collect();
+        let mut cur_mov: Vec<usize> = (0..t_lim).map(|s| offsets[s] as usize).collect();
         let mut cur_inv: Vec<usize> = (0..t_lim)
-            .map(|s| offsets[s] + cnt_mov[s] as usize)
+            .map(|s| offsets[s] as usize + cnt_mov[s] as usize)
             .collect();
         for j in 0..k {
             let (ts, vs) = means.m.row(j);
@@ -109,7 +169,7 @@ impl InvIndex {
         }
 
         let moving_ids: Vec<u32> = (0..k as u32).filter(|&j| means.moved[j as usize]).collect();
-        Self {
+        let mut idx = Self {
             d,
             k,
             offsets,
@@ -117,6 +177,95 @@ impl InvIndex {
             vals,
             mfm: cnt_mov,
             moving_ids,
+            dense_lo: t_lim,
+            dense_w: Vec::new(),
+        };
+        idx.refresh_dense_tail();
+        idx
+    }
+
+    /// Rebuild the derived dense tail block from the sparse arrays.
+    /// Deterministic in the sparse layout alone, so two byte-identical
+    /// sparse indexes always carry byte-identical dense blocks; called
+    /// after every from-scratch build and every incremental splice.
+    pub(crate) fn refresh_dense_tail(&mut self) {
+        let t_lim = self.offsets.len() - 1;
+        let k = self.k;
+        let max_terms = if k == 0 {
+            0
+        } else {
+            (DENSE_MAX_BYTES / (k * std::mem::size_of::<f64>())).max(DENSE_MIN_TERMS)
+        };
+        let mut lo = t_lim;
+        while lo > 0
+            && t_lim - lo < max_terms
+            && self.mf(lo - 1) * DENSE_MIN_FILL_DEN >= k * DENSE_MIN_FILL_NUM
+        {
+            lo -= 1;
+        }
+        self.dense_lo = lo;
+        self.dense_w.clear();
+        self.dense_w.resize((t_lim - lo) * k, 0.0);
+        for s in lo..t_lim {
+            let (a, b) = (self.offsets[s] as usize, self.offsets[s + 1] as usize);
+            let row = &mut self.dense_w[(s - lo) * k..(s - lo + 1) * k];
+            for q in a..b {
+                row[self.ids[q] as usize] = self.vals[q];
+            }
+        }
+    }
+
+    /// The dense tail row for term `s`, if `s` is inside the dense
+    /// block: a `k`-length zero-padded value row addressed by centroid
+    /// id, for [`crate::algo::kernel::dense_axpy`]. `None` ⇒ use the
+    /// sparse postings. Multiplication accounting stays [`InvIndex::mf`]
+    /// either way (padded zeros are layout, not work).
+    #[inline]
+    pub fn dense_row(&self, s: usize) -> Option<&[f64]> {
+        if s >= self.dense_lo && s < self.offsets.len() - 1 {
+            let i = (s - self.dense_lo) * self.k;
+            Some(&self.dense_w[i..i + self.k])
+        } else {
+            None
+        }
+    }
+
+    /// `(dense_lo, dense values)` — the derived dense tail block, for
+    /// the equality suites and the bench reporters.
+    pub fn dense_parts(&self) -> (usize, &[f64]) {
+        (self.dense_lo, &self.dense_w)
+    }
+
+    /// Gather one term into the accumulator and return the charged
+    /// multiplication count — THE shared dispatch of every assigner's
+    /// Region-1 scan (one place, not four drifting copies):
+    ///
+    /// * `moving_only` (ICP `G_1`): the moving-block prefix, always
+    ///   sparse (a strict subset is never dense-mirrored);
+    /// * full scan inside the dense tail: contiguous
+    ///   [`crate::algo::kernel::dense_axpy`] row, still charging the
+    ///   true `mf(s)`;
+    /// * full scan elsewhere: unrolled unchecked scatter-add.
+    /// This is the safe boundary over the unsafe scatter kernel: the
+    /// builders/splicers only ever store centroid ids `< k`, so any
+    /// accumulator of length ≥ `k` satisfies the kernel contract.
+    #[inline]
+    pub fn gather_term(&self, s: usize, u: f64, acc: &mut [f64], moving_only: bool) -> u64 {
+        assert!(acc.len() >= self.k, "accumulator shorter than K");
+        if moving_only {
+            let (ids, vals) = self.postings_moving(s);
+            // SAFETY: ids are centroid ids < k ≤ acc.len() by index
+            // construction; ids/vals are parallel postings slices.
+            unsafe { crate::algo::kernel::scatter_add(acc, ids, vals, u) };
+            ids.len() as u64
+        } else if let Some(row) = self.dense_row(s) {
+            crate::algo::kernel::dense_axpy(acc, row, u);
+            self.mf(s) as u64
+        } else {
+            let (ids, vals) = self.postings(s);
+            // SAFETY: as above.
+            unsafe { crate::algo::kernel::scatter_add(acc, ids, vals, u) };
+            ids.len() as u64
         }
     }
 
@@ -128,20 +277,20 @@ impl InvIndex {
     /// `(mf)_s` — full array length for term `s`.
     #[inline]
     pub fn mf(&self, s: usize) -> usize {
-        self.offsets[s + 1] - self.offsets[s]
+        (self.offsets[s + 1] - self.offsets[s]) as usize
     }
 
     /// Full tuple array `ξ_s` as `(ids, vals)` slices.
     #[inline]
     pub fn postings(&self, s: usize) -> (&[u32], &[f64]) {
-        let (a, b) = (self.offsets[s], self.offsets[s + 1]);
+        let (a, b) = (self.offsets[s] as usize, self.offsets[s + 1] as usize);
         (&self.ids[a..b], &self.vals[a..b])
     }
 
     /// Moving-block prefix of `ξ_s` (the first `(mfM)_s` entries).
     #[inline]
     pub fn postings_moving(&self, s: usize) -> (&[u32], &[f64]) {
-        let a = self.offsets[s];
+        let a = self.offsets[s] as usize;
         let b = a + self.mfm[s] as usize;
         (&self.ids[a..b], &self.vals[a..b])
     }
@@ -164,18 +313,20 @@ impl InvIndex {
     /// The flat storage `(offsets, ids, vals, mfm)` — exposed so the
     /// incremental-maintenance equality suite can compare indexes
     /// bitwise (offsets/ids/mfm with `==`, vals via `f64::to_bits`).
-    pub fn raw_parts(&self) -> (&[usize], &[u32], &[f64], &[u32]) {
+    pub fn raw_parts(&self) -> (&[u32], &[u32], &[f64], &[u32]) {
         (&self.offsets, &self.ids, &self.vals, &self.mfm)
     }
 
-    /// Approximate resident bytes (paper's Max MEM accounting).
+    /// Approximate resident bytes (paper's Max MEM accounting); counts
+    /// the derived dense tail block too — it is resident state.
     pub fn mem_bytes(&self) -> usize {
         use std::mem::size_of;
-        self.offsets.len() * size_of::<usize>()
+        self.offsets.len() * size_of::<u32>()
             + self.ids.len() * size_of::<u32>()
             + self.vals.len() * size_of::<f64>()
             + self.mfm.len() * size_of::<u32>()
             + self.moving_ids.len() * size_of::<u32>()
+            + self.dense_w.len() * size_of::<f64>()
     }
 }
 
@@ -335,6 +486,43 @@ mod tests {
         for (a, b) in rv.iter().zip(sv) {
             assert_eq!((a * 0.5).to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn dense_tail_mirrors_sparse_postings() {
+        // Every cluster touches term 3 (the highest-df id), so its
+        // tuple array is 100% full and joins the dense tail; term 2
+        // lives in one cluster only (fill 1/3 < 3/4) and stays sparse.
+        let docs = vec![
+            vec![(0, 2), (3, 1)],
+            vec![(1, 1), (3, 2)],
+            vec![(2, 3), (3, 1)],
+            vec![(2, 1), (3, 1)],
+            vec![(0, 1), (3, 2)],
+            vec![(1, 2), (3, 1)],
+        ];
+        let ds = build_dataset("t", 4, &docs);
+        let assign = vec![0, 0, 1, 1, 2, 2];
+        let mut out = update_means(&ds, &assign, 3, None, None);
+        out.means.moved = vec![true, false, true];
+        let idx = InvIndex::build(&out.means, 4);
+        let (dense_lo, dense_w) = idx.dense_parts();
+        assert_eq!(dense_lo, 3, "only the full term should be dense");
+        assert_eq!(dense_w.len(), idx.k);
+        assert!(idx.dense_row(2).is_none());
+        let row = idx.dense_row(3).expect("term 3 is in the dense block");
+        // The dense row is the zero-padded mirror of the postings, and
+        // gathering through it is bit-identical to the sparse scatter.
+        let (ids, vals) = idx.postings(3);
+        let mut scattered = vec![0.0f64; idx.k];
+        crate::algo::kernel::scatter_add_scalar(&mut scattered, ids, vals, 1.7);
+        let mut dense = vec![0.0f64; idx.k];
+        crate::algo::kernel::dense_axpy(&mut dense, row, 1.7);
+        for (a, b) in scattered.iter().zip(&dense) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // mult accounting is unchanged by the dense mirror.
+        assert_eq!(idx.mf(3), ids.len());
     }
 
     #[test]

@@ -114,7 +114,9 @@ struct SpliceScratch {
     ins_ids: Vec<u32>,
     ins_vals: Vec<f64>,
     cur: Vec<usize>,
-    new_offsets: Vec<usize>,
+    /// Spare offsets in the live indexes' compact `u32` layout (swapped
+    /// in wholesale, so the element type must match).
+    new_offsets: Vec<u32>,
     new_ids: Vec<u32>,
     new_vals: Vec<f64>,
     new_mfm: Vec<u32>,
@@ -129,10 +131,10 @@ impl SpliceScratch {
             + self.ins_cnt.capacity()
             + self.new_mfm.capacity()
             + self.ins_ids.capacity()
-            + self.new_ids.capacity())
+            + self.new_ids.capacity()
+            + self.new_offsets.capacity())
             * size_of::<u32>()
-            + (self.ins_off.capacity() + self.cur.capacity() + self.new_offsets.capacity())
-                * size_of::<usize>()
+            + (self.ins_off.capacity() + self.cur.capacity()) * size_of::<usize>()
             + (self.ins_vals.capacity() + self.new_vals.capacity()) * size_of::<f64>()
             + self.touched.capacity()
             + self.sort_buf.capacity() * size_of::<(u32, f64)>()
@@ -149,7 +151,7 @@ impl SpliceScratch {
 fn splice_two_block<F>(
     t_lo: usize,
     t_hi: usize,
-    offsets: &mut Vec<usize>,
+    offsets: &mut Vec<u32>,
     ids: &mut Vec<u32>,
     vals: &mut Vec<f64>,
     mfm: &mut Vec<u32>,
@@ -172,8 +174,7 @@ fn splice_two_block<F>(
     sc.cnt_mov.clear();
     sc.cnt_mov.extend_from_slice(mfm);
     sc.cnt_inv.clear();
-    sc.cnt_inv
-        .extend((0..width).map(|i| (offsets[i + 1] - offsets[i] - mfm[i] as usize) as u32));
+    sc.cnt_inv.extend((0..width).map(|i| offsets[i + 1] - offsets[i] - mfm[i]));
     sc.touched.clear();
     sc.touched.resize(width, false);
     sc.ins_cnt.clear();
@@ -216,16 +217,20 @@ fn splice_two_block<F>(
         }
     }
 
-    // New offsets.
+    // New offsets (compact u32 layout; accumulate wide, assert, store).
     sc.new_offsets.clear();
     sc.new_offsets.reserve(width + 1);
     sc.new_offsets.push(0);
+    let mut off_acc = 0usize;
     for i in 0..width {
-        let last = *sc.new_offsets.last().unwrap();
-        sc.new_offsets
-            .push(last + sc.cnt_mov[i] as usize + sc.cnt_inv[i] as usize);
+        off_acc += sc.cnt_mov[i] as usize + sc.cnt_inv[i] as usize;
+        sc.new_offsets.push(off_acc as u32);
     }
-    let nnz = *sc.new_offsets.last().unwrap();
+    assert!(
+        off_acc <= u32::MAX as usize,
+        "spliced nnz {off_acc} overflows the u32 offset layout"
+    );
+    let nnz = off_acc;
     sc.new_ids.clear();
     sc.new_ids.resize(nnz, 0);
     sc.new_vals.clear();
@@ -270,7 +275,7 @@ fn splice_two_block<F>(
     // Moving-block scatter: iterating j ascending keeps ids ascending
     // within each term's moving block, exactly like the scratch builder.
     sc.cur.clear();
-    sc.cur.extend_from_slice(&sc.new_offsets[..width]);
+    sc.cur.extend(sc.new_offsets[..width].iter().map(|&o| o as usize));
     for j in 0..k {
         if !means.moved[j] {
             continue;
@@ -300,17 +305,17 @@ fn splice_two_block<F>(
                 debug_assert_eq!(mfm[i], 0, "untouched term cannot hold moving entries");
                 i += 1;
             }
-            let (a, b) = (offsets[run], offsets[i]);
-            let dst = sc.new_offsets[run];
+            let (a, b) = (offsets[run] as usize, offsets[i] as usize);
+            let dst = sc.new_offsets[run] as usize;
             sc.new_ids[dst..dst + (b - a)].copy_from_slice(&ids[a..b]);
             sc.new_vals[dst..dst + (b - a)].copy_from_slice(&vals[a..b]);
             continue;
         }
-        let mut a = offsets[i] + mfm[i] as usize;
-        let a_end = offsets[i + 1];
+        let mut a = offsets[i] as usize + mfm[i] as usize;
+        let a_end = offsets[i + 1] as usize;
         let mut b = sc.ins_off[i];
         let b_end = sc.ins_off[i + 1];
-        let mut out = sc.new_offsets[i] + sc.cnt_mov[i] as usize;
+        let mut out = sc.new_offsets[i] as usize + sc.cnt_mov[i] as usize;
         while a < a_end {
             let ja = ids[a];
             if means.moved[ja as usize] {
@@ -334,7 +339,7 @@ fn splice_two_block<F>(
             out += 1;
             b += 1;
         }
-        debug_assert_eq!(out, sc.new_offsets[i + 1]);
+        debug_assert_eq!(out, sc.new_offsets[i + 1] as usize);
         i += 1;
     }
 
@@ -358,7 +363,7 @@ fn splice_two_block<F>(
 fn splice_sorted_desc(
     t_lo: usize,
     t_hi: usize,
-    offsets: &mut Vec<usize>,
+    offsets: &mut Vec<u32>,
     ids: &mut Vec<u32>,
     vals: &mut Vec<f64>,
     prev: &PrevMeans,
@@ -370,8 +375,7 @@ fn splice_sorted_desc(
     debug_assert_eq!(offsets.len(), width + 1);
 
     sc.cnt_inv.clear();
-    sc.cnt_inv
-        .extend((0..width).map(|i| (offsets[i + 1] - offsets[i]) as u32));
+    sc.cnt_inv.extend((0..width).map(|i| offsets[i + 1] - offsets[i]));
     sc.touched.clear();
     sc.touched.resize(width, false);
     sc.ins_cnt.clear();
@@ -403,11 +407,16 @@ fn splice_sorted_desc(
     sc.new_offsets.clear();
     sc.new_offsets.reserve(width + 1);
     sc.new_offsets.push(0);
+    let mut off_acc = 0usize;
     for i in 0..width {
-        let last = *sc.new_offsets.last().unwrap();
-        sc.new_offsets.push(last + sc.cnt_inv[i] as usize);
+        off_acc += sc.cnt_inv[i] as usize;
+        sc.new_offsets.push(off_acc as u32);
     }
-    let nnz = *sc.new_offsets.last().unwrap();
+    assert!(
+        off_acc <= u32::MAX as usize,
+        "spliced nnz {off_acc} overflows the u32 offset layout"
+    );
+    let nnz = off_acc;
     sc.new_ids.clear();
     sc.new_ids.resize(nnz, 0);
     sc.new_vals.clear();
@@ -459,8 +468,8 @@ fn splice_sorted_desc(
             while i < width && !sc.touched[i] {
                 i += 1;
             }
-            let (a, b) = (offsets[run], offsets[i]);
-            let dst = sc.new_offsets[run];
+            let (a, b) = (offsets[run] as usize, offsets[i] as usize);
+            let dst = sc.new_offsets[run] as usize;
             sc.new_ids[dst..dst + (b - a)].copy_from_slice(&ids[a..b]);
             sc.new_vals[dst..dst + (b - a)].copy_from_slice(&vals[a..b]);
             continue;
@@ -473,11 +482,11 @@ fn splice_sorted_desc(
         sc.sort_buf
             .sort_unstable_by(|x, y| y.1.partial_cmp(&x.1).unwrap().then(x.0.cmp(&y.0)));
         // Merge survivors (old order minus dirty ids) with insertions.
-        let mut a = offsets[i];
-        let a_end = offsets[i + 1];
+        let mut a = offsets[i] as usize;
+        let a_end = offsets[i + 1] as usize;
         let mut b = 0usize;
         let b_end = sc.sort_buf.len();
-        let mut out = sc.new_offsets[i];
+        let mut out = sc.new_offsets[i] as usize;
         while a < a_end {
             let (ja, va) = (ids[a], vals[a]);
             if means.moved[ja as usize] {
@@ -501,7 +510,7 @@ fn splice_sorted_desc(
             out += 1;
             b += 1;
         }
-        debug_assert_eq!(out, sc.new_offsets[i + 1]);
+        debug_assert_eq!(out, sc.new_offsets[i + 1] as usize);
         i += 1;
     }
 
@@ -516,7 +525,7 @@ fn splice_sorted_desc(
 fn rebuild_moving_sorted(
     t_lo: usize,
     t_hi: usize,
-    offsets: &mut Vec<usize>,
+    offsets: &mut Vec<u32>,
     ids: &mut Vec<u32>,
     vals: &mut Vec<f64>,
     means: &MeanSet,
@@ -542,17 +551,22 @@ fn rebuild_moving_sorted(
     sc.new_offsets.clear();
     sc.new_offsets.reserve(width + 1);
     sc.new_offsets.push(0);
+    let mut off_acc = 0usize;
     for i in 0..width {
-        let last = *sc.new_offsets.last().unwrap();
-        sc.new_offsets.push(last + sc.ins_cnt[i] as usize);
+        off_acc += sc.ins_cnt[i] as usize;
+        sc.new_offsets.push(off_acc as u32);
     }
-    let nnz = *sc.new_offsets.last().unwrap();
+    assert!(
+        off_acc <= u32::MAX as usize,
+        "spliced nnz {off_acc} overflows the u32 offset layout"
+    );
+    let nnz = off_acc;
     sc.new_ids.clear();
     sc.new_ids.resize(nnz, 0);
     sc.new_vals.clear();
     sc.new_vals.resize(nnz, 0.0);
     sc.cur.clear();
-    sc.cur.extend_from_slice(&sc.new_offsets[..width]);
+    sc.cur.extend(sc.new_offsets[..width].iter().map(|&o| o as usize));
     for j in 0..k {
         if !means.moved[j] {
             continue;
@@ -570,7 +584,7 @@ fn rebuild_moving_sorted(
         }
     }
     for i in 0..width {
-        let (a, b) = (sc.new_offsets[i], sc.new_offsets[i + 1]);
+        let (a, b) = (sc.new_offsets[i] as usize, sc.new_offsets[i + 1] as usize);
         sc.sort_buf.clear();
         for q in a..b {
             sc.sort_buf.push((sc.new_ids[q], sc.new_vals[q]));
@@ -742,6 +756,10 @@ impl InvMaintainer {
                 &mut self.sc,
             );
             set_moving_ids(&mut idx.moving_ids, means);
+            // Re-derive the dense Region-1 tail from the freshly
+            // spliced sparse arrays (deterministic in them, so this
+            // matches a from-scratch build bit-for-bit).
+            idx.refresh_dense_tail();
             self.incremental_rebuilds += 1;
             self.last_rebuild = RebuildKind::Incremental;
         } else {
@@ -857,6 +875,7 @@ impl EsMaintainer {
             );
             set_moving_ids(&mut idx.r1.moving_ids, means);
             set_moving_ids(&mut idx.moving_ids, means);
+            idx.r1.refresh_dense_tail();
             self.incremental_rebuilds += 1;
             self.last_rebuild = RebuildKind::Incremental;
         } else {
@@ -952,6 +971,7 @@ impl TaMaintainer {
             rewrite_partial_columns(t_th, k, &mut idx.partial.w, 0.0, &self.prev, means, |v| v);
             set_moving_ids(&mut idx.r1.moving_ids, means);
             set_moving_ids(&mut idx.moving_ids, means);
+            idx.r1.refresh_dense_tail();
             self.incremental_rebuilds += 1;
             self.last_rebuild = RebuildKind::Incremental;
         } else {
@@ -1039,6 +1059,7 @@ impl CsMaintainer {
             rewrite_partial_columns(t_th, k, &mut idx.partial.w, 0.0, &self.prev, means, |v| v);
             set_moving_ids(&mut idx.r1.moving_ids, means);
             set_moving_ids(&mut idx.moving_ids, means);
+            idx.r1.refresh_dense_tail();
             self.incremental_rebuilds += 1;
             self.last_rebuild = RebuildKind::Incremental;
         } else {

@@ -35,12 +35,16 @@ use crate::index::means::MeanSet;
 
 /// Flat per-term arrays over the high-df region `t_th ≤ s < D`.
 ///
+/// Offsets are `u32`, like [`InvIndex`]'s (the compact-layout argument
+/// in [`crate::index::inverted`]'s module docs); construction asserts
+/// the nnz bound.
+///
 /// Fields are `pub(crate)` so the incremental splice engine
 /// ([`crate::index::maintain`]) can rebuild the flat arrays in place.
 #[derive(Debug, Clone, Default)]
 pub struct Region2 {
     pub t_th: usize,
-    pub(crate) offsets: Vec<usize>,
+    pub(crate) offsets: Vec<u32>,
     pub(crate) ids: Vec<u32>,
     pub(crate) vals: Vec<f64>,
     /// Moving-block length per term (counts only stored entries).
@@ -51,20 +55,20 @@ impl Region2 {
     #[inline]
     pub fn len(&self, s: usize) -> usize {
         let i = s - self.t_th;
-        self.offsets[i + 1] - self.offsets[i]
+        (self.offsets[i + 1] - self.offsets[i]) as usize
     }
 
     #[inline]
     pub fn postings(&self, s: usize) -> (&[u32], &[f64]) {
         let i = s - self.t_th;
-        let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
         (&self.ids[a..b], &self.vals[a..b])
     }
 
     #[inline]
     pub fn postings_moving(&self, s: usize) -> (&[u32], &[f64]) {
         let i = s - self.t_th;
-        let a = self.offsets[i];
+        let a = self.offsets[i] as usize;
         let b = a + self.mfm[i] as usize;
         (&self.ids[a..b], &self.vals[a..b])
     }
@@ -75,13 +79,13 @@ impl Region2 {
 
     /// The flat storage `(offsets, ids, vals, mfm)` for the bitwise
     /// incremental-vs-scratch equality suite.
-    pub fn raw_parts(&self) -> (&[usize], &[u32], &[f64], &[u32]) {
+    pub fn raw_parts(&self) -> (&[u32], &[u32], &[f64], &[u32]) {
         (&self.offsets, &self.ids, &self.vals, &self.mfm)
     }
 
     pub fn mem_bytes(&self) -> usize {
         use std::mem::size_of;
-        self.offsets.len() * size_of::<usize>()
+        self.offsets.len() * size_of::<u32>()
             + self.ids.len() * size_of::<u32>()
             + self.vals.len() * size_of::<f64>()
             + self.mfm.len() * size_of::<u32>()
@@ -185,19 +189,25 @@ impl EsIndex {
                 }
             }
         }
-        let mut offsets = vec![0usize; width + 1];
+        let mut offsets = vec![0u32; width + 1];
+        let mut acc = 0usize;
         for i in 0..width {
-            offsets[i + 1] = offsets[i] + (cnt_mov[i] + cnt_inv[i]) as usize;
+            acc += (cnt_mov[i] + cnt_inv[i]) as usize;
+            offsets[i + 1] = acc as u32;
         }
-        let nnz = offsets[width];
+        assert!(
+            acc <= u32::MAX as usize,
+            "region-2 nnz {acc} overflows the u32 offset layout"
+        );
+        let nnz = acc;
         let mut ids = vec![0u32; nnz];
         let mut vals = vec![0.0f64; nnz];
         // Deficit default 1.0: a term where a mean has no value carries
         // its full upper-bound mass to be retired at verification.
         let mut w = vec![1.0f64; width * k];
-        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i]).collect();
+        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i] as usize).collect();
         let mut cur_inv: Vec<usize> = (0..width)
-            .map(|i| offsets[i] + cnt_mov[i] as usize)
+            .map(|i| offsets[i] as usize + cnt_mov[i] as usize)
             .collect();
         for j in 0..k {
             let (ts, vs) = means.m.row(j);
@@ -305,12 +315,18 @@ impl TaIndex {
             list.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         };
         let flatten = |lists: &[Vec<(u32, f64)>]| -> Region2 {
-            let mut offsets = vec![0usize; lists.len() + 1];
+            let mut offsets = vec![0u32; lists.len() + 1];
+            let mut acc = 0usize;
             for (i, l) in lists.iter().enumerate() {
-                offsets[i + 1] = offsets[i] + l.len();
+                acc += l.len();
+                offsets[i + 1] = acc as u32;
             }
-            let mut ids = Vec::with_capacity(offsets[lists.len()]);
-            let mut vals = Vec::with_capacity(offsets[lists.len()]);
+            assert!(
+                acc <= u32::MAX as usize,
+                "TA region nnz {acc} overflows the u32 offset layout"
+            );
+            let mut ids = Vec::with_capacity(acc);
+            let mut vals = Vec::with_capacity(acc);
             for l in lists {
                 for &(j, v) in l {
                     ids.push(j);
@@ -403,17 +419,23 @@ impl CsIndex {
                 }
             }
         }
-        let mut offsets = vec![0usize; width + 1];
+        let mut offsets = vec![0u32; width + 1];
+        let mut acc = 0usize;
         for i in 0..width {
-            offsets[i + 1] = offsets[i] + (cnt_mov[i] + cnt_inv[i]) as usize;
+            acc += (cnt_mov[i] + cnt_inv[i]) as usize;
+            offsets[i + 1] = acc as u32;
         }
-        let nnz = offsets[width];
+        assert!(
+            acc <= u32::MAX as usize,
+            "CS region nnz {acc} overflows the u32 offset layout"
+        );
+        let nnz = acc;
         let mut ids = vec![0u32; nnz];
         let mut vals = vec![0.0f64; nnz];
         let mut w = vec![0.0f64; width * k];
-        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i]).collect();
+        let mut cur_mov: Vec<usize> = (0..width).map(|i| offsets[i] as usize).collect();
         let mut cur_inv: Vec<usize> = (0..width)
-            .map(|i| offsets[i] + cnt_mov[i] as usize)
+            .map(|i| offsets[i] as usize + cnt_mov[i] as usize)
             .collect();
         for j in 0..k {
             let (ts, vs) = means.m.row(j);

@@ -26,7 +26,12 @@
 //!   only moved centroids' postings across iterations (byte-identical
 //!   to a from-scratch build, enforced by `rust/tests/incremental.rs`).
 //! - [`algo`] — the clustering algorithms (MIVI, DIVI, Ding+, ICP,
-//!   ES-ICP, TA-ICP, CS-ICP, and the ablations ES/ThV/ThT/…-MIVI), plus
+//!   ES-ICP, TA-ICP, CS-ICP, and the ablations ES/ThV/ThT/…-MIVI);
+//!   [`algo::kernel`] — the shared gather micro-kernels every assigner's
+//!   inner loops route through (unrolled unchecked scatter-add, dense
+//!   Region-1 tail gather, deduplicated argmax/filter scans), bit-
+//!   identical to the naive loops by construction
+//!   (`rust/tests/kernel.rs`); plus
 //!   [`algo::par`] — the sharded multi-threaded assignment engine
 //!   (`ParConfig { threads, shard }`), **bit-identical** to the serial
 //!   path for every algorithm and enforced so by

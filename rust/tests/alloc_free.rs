@@ -8,7 +8,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use skm::algo::{make_assigner, seed_means, AlgoKind, ClusterConfig, IterState};
+use skm::algo::{make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState};
 use skm::corpus::{generate, tiny, CorpusSpec};
 use skm::index::{membership_changes, update_means_with_rho};
 use skm::sparse::build_dataset;

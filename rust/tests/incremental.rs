@@ -79,6 +79,12 @@ fn assert_inv_eq(a: &InvIndex, b: &InvIndex, tag: &str) {
     assert_eq!(am, bm, "{tag}: mfm");
     assert_bits_eq(av, bv, &format!("{tag}: vals"));
     assert_eq!(a.moving_ids, b.moving_ids, "{tag}: moving_ids");
+    // The derived dense Region-1 tail must come out identical too (the
+    // maintainers re-derive it after every splice).
+    let (alo, aw) = a.dense_parts();
+    let (blo, bw) = b.dense_parts();
+    assert_eq!(alo, blo, "{tag}: dense_lo");
+    assert_bits_eq(aw, bw, &format!("{tag}: dense_w"));
 }
 
 fn assert_region2_eq(a: &skm::index::Region2, b: &skm::index::Region2, tag: &str) {

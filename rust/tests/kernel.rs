@@ -1,0 +1,332 @@
+//! Property/fuzz-style bit-identity suite for the gather micro-kernels
+//! (§Perf tentpole): the unrolled / `get_unchecked` / dense-block
+//! kernels in `skm::algo::kernel` must be **bit-identical** to the
+//! naive bounds-checked scalar scatter-add across random posting
+//! lengths (covering the 4-way unroll remainders 0–3), empty slices,
+//! duplicate centroid ids, adversarial values (negative, underflowing,
+//! exact zeros), and through a real `InvIndex` with an active dense
+//! Region-1 tail. This binary is also the Miri target for the unsafe
+//! indexing (see the CI `miri` job).
+
+use skm::algo::kernel;
+use skm::index::{update_means, InvIndex};
+use skm::sparse::build_dataset;
+use skm::util::rng::Pcg32;
+
+fn random_vals(rng: &mut Pcg32, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|_| match rng.gen_range(12) {
+            0 => 0.0,
+            1 => -(rng.next_f64() + 0.05),
+            2 => rng.next_f64() * 1e-308, // underflow-adjacent
+            3 => -rng.next_f64() * 1e-308,
+            _ => rng.next_f64(),
+        })
+        .collect()
+}
+
+#[test]
+fn scatter_add_bit_identical_across_lengths_and_duplicates() {
+    let mut rng = Pcg32::new(0xbead_cafe);
+    for trial in 0..500usize {
+        let k = 1 + rng.gen_range(64) as usize;
+        // Length schedule sweeps the unroll remainders 0–3 explicitly
+        // (trial % 4) on top of random multiples of 4.
+        let len = 4 * rng.gen_range(32) as usize + trial % 4;
+        // Random ids with guaranteed duplicates on many trials.
+        let bound = 1 + rng.gen_range(k as u32);
+        let ids: Vec<u32> = (0..len).map(|_| rng.gen_range(bound)).collect();
+        let vals = random_vals(&mut rng, len);
+        let u = rng.next_f64() * 3.0 - 1.0;
+        // Accumulators start at arbitrary nonnegative values (what the
+        // assigners do: 0.0 or y_base ≥ 0).
+        let init: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+
+        let mut naive = init.clone();
+        kernel::scatter_add_scalar(&mut naive, &ids, &vals, u);
+        let mut tuned = init.clone();
+        // SAFETY: ids were generated < k == tuned.len(); parallel slices.
+        unsafe { kernel::scatter_add(&mut tuned, &ids, &vals, u) };
+        for (q, (a, b)) in naive.iter().zip(&tuned).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "trial {trial} slot {q}: {a} vs {b}"
+            );
+        }
+
+        let mut naive_u = init.clone();
+        kernel::scatter_add_unit_scalar(&mut naive_u, &ids, &vals);
+        let mut tuned_u = init;
+        // SAFETY: as above.
+        unsafe { kernel::scatter_add_unit(&mut tuned_u, &ids, &vals) };
+        for (a, b) in naive_u.iter().zip(&tuned_u) {
+            assert_eq!(a.to_bits(), b.to_bits(), "unit trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn empty_slices_are_noops() {
+    let mut acc = vec![0.25f64, -1.5, 3.0];
+    let snapshot = acc.clone();
+    // SAFETY: empty posting slices trivially satisfy the id contract.
+    unsafe {
+        kernel::scatter_add(&mut acc, &[], &[], 7.0);
+        kernel::scatter_add_unit(&mut acc, &[], &[]);
+    }
+    assert_eq!(acc, snapshot);
+    let (amax, rmax) = kernel::argmax_ids(&acc, &[], 9.0, 2);
+    assert_eq!((amax, rmax), (2, 9.0));
+    let mut z = vec![1u32];
+    kernel::collect_above_ids(&acc, &[], f64::NEG_INFINITY, &mut z);
+    assert!(z.is_empty());
+}
+
+#[test]
+fn dense_axpy_equals_sparse_scatter_with_zero_padding() {
+    // The +0.0-padding argument from the kernel module docs, fuzzed:
+    // for accumulators initialized at +0.0 (or any value reachable by
+    // accumulation from +0.0), adding `u·0.0` for absent entries is a
+    // bitwise no-op, so the dense row gather matches the sparse scatter
+    // even with negative and underflowing values in play.
+    let mut rng = Pcg32::new(0x00d5_ee1d);
+    for trial in 0..300usize {
+        let k = 1 + rng.gen_range(48) as usize;
+        let mut row = vec![0.0f64; k];
+        let mut ids = Vec::new();
+        let mut vals = Vec::new();
+        for j in 0..k {
+            if rng.gen_range(4) != 0 {
+                let v = match rng.gen_range(6) {
+                    0 => -(rng.next_f64() + 0.01),
+                    1 => rng.next_f64() * 1e-308,
+                    _ => rng.next_f64(),
+                };
+                row[j] = v;
+                ids.push(j as u32);
+                vals.push(v);
+            }
+        }
+        let u = rng.next_f64() * 2.0;
+        let mut sparse = vec![0.0f64; k];
+        kernel::scatter_add_scalar(&mut sparse, &ids, &vals, u);
+        let mut dense = vec![0.0f64; k];
+        kernel::dense_axpy(&mut dense, &row, u);
+        for (j, (a, b)) in sparse.iter().zip(&dense).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} slot {j}");
+        }
+    }
+}
+
+#[test]
+fn argmax_and_filter_kernels_match_naive_scans() {
+    let mut rng = Pcg32::new(0x5ee_d00d);
+    for _ in 0..200 {
+        let k = 1 + rng.gen_range(40) as usize;
+        let acc: Vec<f64> = (0..k).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let thresh = rng.next_f64() * 2.0 - 1.0;
+        let init_a = rng.gen_range(k as u32);
+
+        let (mut amax, mut rmax) = (init_a, thresh);
+        for (j, &r) in acc.iter().enumerate() {
+            if r > rmax {
+                rmax = r;
+                amax = j as u32;
+            }
+        }
+        assert_eq!(kernel::argmax_scan(&acc, thresh, init_a), (amax, rmax));
+
+        let subset: Vec<u32> = (0..k as u32).filter(|_| rng.gen_range(3) > 0).collect();
+        let (mut am, mut rm) = (init_a, thresh);
+        let mut keep = Vec::new();
+        for &j in &subset {
+            if acc[j as usize] > thresh {
+                keep.push(j);
+            }
+            if acc[j as usize] > rm {
+                rm = acc[j as usize];
+                am = j;
+            }
+        }
+        assert_eq!(kernel::argmax_ids(&acc, &subset, thresh, init_a), (am, rm));
+        let mut z = Vec::new();
+        kernel::collect_above_ids(&acc, &subset, thresh, &mut z);
+        assert_eq!(z, keep);
+
+        let full: Vec<u32> = (0..k as u32).filter(|&j| acc[j as usize] > thresh).collect();
+        kernel::collect_above(&acc, thresh, &mut z);
+        assert_eq!(z, full);
+    }
+}
+
+#[test]
+fn verify_axpy_matches_naive_loop_both_signs() {
+    let mut rng = Pcg32::new(0xfee1_600d);
+    for _ in 0..100 {
+        let k = 1 + rng.gen_range(32) as usize;
+        let row: Vec<f64> = (0..k).map(|_| rng.next_f64() - 0.4).collect();
+        let init: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+        let z: Vec<u32> = (0..k as u32).filter(|_| rng.gen_range(2) == 0).collect();
+        let u = rng.next_f64() + 0.1;
+        for sign in [1.0f64, -1.0] {
+            let mut naive = init.clone();
+            let su = sign * u;
+            for &j in &z {
+                naive[j as usize] += su * row[j as usize];
+            }
+            let mut tuned = init.clone();
+            kernel::verify_axpy_ids(&mut tuned, &z, &row, u, sign);
+            for (a, b) in naive.iter().zip(&tuned) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_dot_dense_is_order_exact() {
+    let mut rng = Pcg32::new(0xd1d_0bee);
+    for trial in 0..200usize {
+        let d = 1 + rng.gen_range(100) as usize;
+        let nt = 4 * rng.gen_range(12) as usize + trial % 4;
+        let ts: Vec<u32> = (0..nt).map(|_| rng.gen_range(d as u32)).collect();
+        let us = random_vals(&mut rng, nt);
+        let row: Vec<f64> = (0..d).map(|_| rng.next_f64() - 0.5).collect();
+        let mut naive = 0.0f64;
+        for (&t, &u) in ts.iter().zip(&us) {
+            naive += u * row[t as usize];
+        }
+        // SAFETY: term ids were generated < d == row.len().
+        let got = unsafe { kernel::sparse_dot_dense(&ts, &us, &row) };
+        assert_eq!(naive.to_bits(), got.to_bits(), "trial {trial}");
+    }
+}
+
+#[test]
+fn versioned_scatter_resets_lazily() {
+    // DIVI's epoch-versioned scatter: stale slots are reset on first
+    // touch of the epoch, untouched slots keep their stale value, and
+    // duplicates accumulate in order.
+    let mut score = vec![99.0f64; 3];
+    let mut version = vec![0u32; 3];
+    let mut touched = Vec::new();
+    // SAFETY: ids 5/6 lie in [lo, lo + score.len()) = [5, 8);
+    // score/version are parallel length-3 arrays.
+    unsafe {
+        kernel::scatter_add_versioned(
+            &mut score,
+            &mut version,
+            &mut touched,
+            1,
+            &[5, 6, 5],
+            &[1.0, 2.0, 3.0],
+            2.0,
+            5,
+        )
+    };
+    assert_eq!(touched, vec![0, 1]);
+    assert_eq!(score[0], 8.0); // 2·1 + 2·3, stale 99 discarded
+    assert_eq!(score[1], 4.0);
+    assert_eq!(score[2], 99.0); // untouched slot keeps stale value
+    assert_eq!(version, vec![1, 1, 0]);
+}
+
+/// End-to-end through a real index: a full-array gather routed the way
+/// the assigners now do it (`InvIndex::gather_term`: dense tail rows
+/// where available, kernel scatter elsewhere) must match the naive
+/// per-posting loop bit for bit, and the dense block must mirror the
+/// sparse postings exactly.
+#[test]
+fn invindex_gather_dense_aware_matches_naive() {
+    // A corpus whose top term ids are near-universal, so the dense tail
+    // activates (term ids are df-ascending after build_dataset).
+    let mut rng = Pcg32::new(0x1d_ead_5eed);
+    let n_docs = 60usize;
+    let d = 12usize;
+    let docs: Vec<Vec<(u32, u32)>> = (0..n_docs)
+        .map(|_| {
+            let mut row: Vec<(u32, u32)> = Vec::new();
+            for t in 0..d as u32 {
+                // Higher term id ⇒ higher df (roughly), topping out at
+                // always-present.
+                let p = 2 + t;
+                if rng.gen_range(d as u32 + 2) < p {
+                    row.push((t, 1 + rng.gen_range(4)));
+                }
+            }
+            if row.is_empty() {
+                row.push((0, 1));
+            }
+            row
+        })
+        .collect();
+    let ds = build_dataset("kernel-e2e", d, &docs);
+    let k = 7usize;
+    let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % k as u32).collect();
+    let mut out = update_means(&ds, &assign, k, None, None);
+    // Mixed moving flags so the two-block layout is nontrivial.
+    for (j, m) in out.means.moved.iter_mut().enumerate() {
+        *m = j % 2 == 0;
+    }
+    let idx = InvIndex::build(&out.means, ds.d());
+    let (dense_lo, _) = idx.dense_parts();
+    assert!(
+        dense_lo < ds.d(),
+        "dense tail never activated — corpus not top-heavy enough"
+    );
+
+    // Dense rows mirror the sparse postings exactly.
+    for s in dense_lo..ds.d() {
+        let row = idx.dense_row(s).unwrap();
+        let (ids, vals) = idx.postings(s);
+        let mut mirror = vec![0.0f64; k];
+        for (&c, &v) in ids.iter().zip(vals) {
+            mirror[c as usize] = v;
+        }
+        for (a, b) in mirror.iter().zip(row) {
+            assert_eq!(a.to_bits(), b.to_bits(), "term {s}");
+        }
+    }
+
+    // Full gather per object: naive postings loop vs the dense-aware
+    // kernel routing, bitwise.
+    for i in 0..ds.n() {
+        let (ts, us) = ds.x.row(i);
+        let mut naive = vec![0.0f64; k];
+        for (&t, &u) in ts.iter().zip(us) {
+            let (ids, vals) = idx.postings(t as usize);
+            for (&c, &v) in ids.iter().zip(vals) {
+                naive[c as usize] += u * v;
+            }
+        }
+        let mut routed = vec![0.0f64; k];
+        let mut mult = 0u64;
+        for (&t, &u) in ts.iter().zip(us) {
+            mult += idx.gather_term(t as usize, u, &mut routed, false);
+        }
+        for (j, (a, b)) in naive.iter().zip(&routed).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "object {i} centroid {j}");
+        }
+        // The shared dispatch must charge exactly the naive count.
+        let naive_mult: u64 = ts.iter().map(|&t| idx.mf(t as usize) as u64).sum();
+        assert_eq!(mult, naive_mult, "object {i} mult accounting");
+
+        // Moving-only (ICP G_1) path: bit-identical to a naive scan of
+        // the moving prefixes, and never dense-routed.
+        let mut naive_mov = vec![0.0f64; k];
+        for (&t, &u) in ts.iter().zip(us) {
+            let (ids, vals) = idx.postings_moving(t as usize);
+            for (&c, &v) in ids.iter().zip(vals) {
+                naive_mov[c as usize] += u * v;
+            }
+        }
+        let mut routed_mov = vec![0.0f64; k];
+        for (&t, &u) in ts.iter().zip(us) {
+            idx.gather_term(t as usize, u, &mut routed_mov, true);
+        }
+        for (j, (a, b)) in naive_mov.iter().zip(&routed_mov).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "object {i} moving centroid {j}");
+        }
+    }
+}
