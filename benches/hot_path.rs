@@ -27,7 +27,9 @@ use common::{bench_preset, header};
 use skm::algo::kernel;
 use skm::algo::{
     make_assigner, run_clustering, seed_means, AlgoKind, Assigner, ClusterConfig, IterState,
+    ParConfig,
 };
+use skm::coordinator::minibatch::{run_minibatch, BatchSchedule, MiniBatchConfig};
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{
     membership_changes, update_means, update_means_with_rho, CsIndex, CsMaintainer, EsIndex,
@@ -525,6 +527,37 @@ fn main() {
         es_out.total_rebuild_secs()
     );
 
+    // --- mini-batch / streaming driver ------------------------------------
+    // One ES-ICP streaming run (sequential batches, classic count decay)
+    // against the full-batch run above: per-round phase costs, rounds to
+    // the quiet-epoch exit, and the achieved objective relative to Lloyd.
+    let mb_batch = (ds.n() / 8).max(256).min(ds.n());
+    let mb_rpe = (ds.n() + mb_batch - 1) / mb_batch;
+    let mb_cfg = MiniBatchConfig {
+        batch: mb_batch,
+        schedule: BatchSchedule::Sequential,
+        decay: 1.0,
+        max_rounds: 24 * mb_rpe,
+        sample_seed: seed,
+    };
+    let mb_t0 = Instant::now();
+    let mb_out = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb_cfg, &ParConfig::serial());
+    let mb_wall = mb_t0.elapsed().as_secs_f64();
+    let mb_rounds = mb_out.n_rounds().max(1) as f64;
+    let mb_obj_ratio = mb_out.objective / es_out.objective;
+    println!(
+        "minibatch ES-ICP: batch {} ({} rounds, {} epochs-equivalent), {:.3} ms/round \
+         [assign {:.3} / update {:.3} / rebuild {:.3}], objective ratio vs full batch {:.4}",
+        mb_batch,
+        mb_out.n_rounds(),
+        mb_out.objects_processed() / ds.n().max(1),
+        mb_wall * 1e3 / mb_rounds,
+        mb_out.total_assign_secs() * 1e3 / mb_rounds,
+        (mb_out.total_update_secs() - mb_out.total_rebuild_secs()) * 1e3 / mb_rounds,
+        mb_out.total_rebuild_secs() * 1e3 / mb_rounds,
+        mb_obj_ratio
+    );
+
     // --- EstParams --------------------------------------------------------
     let s_min = ds.d() * 8 / 10;
     let xp = ObjInvIndex::build(&ds.x, s_min);
@@ -626,6 +659,38 @@ fn main() {
                         ("rebuild", Json::Num(es_out.total_rebuild_secs())),
                     ]),
                 ),
+            ]),
+        ),
+        (
+            "minibatch",
+            Json::obj(vec![
+                ("algo", Json::str("ES-ICP")),
+                ("batch", Json::UInt(mb_batch as u64)),
+                ("schedule", Json::str(mb_cfg.schedule.name())),
+                ("decay", Json::Num(mb_cfg.decay)),
+                ("rounds", Json::UInt(mb_out.n_rounds() as u64)),
+                ("converged", Json::Bool(mb_out.converged)),
+                (
+                    "objects_processed",
+                    Json::UInt(mb_out.objects_processed() as u64),
+                ),
+                ("wall_ms_per_round", Json::Num(mb_wall * 1e3 / mb_rounds)),
+                (
+                    "assign_ms_per_round",
+                    Json::Num(mb_out.total_assign_secs() * 1e3 / mb_rounds),
+                ),
+                (
+                    "update_ms_per_round",
+                    Json::Num(
+                        (mb_out.total_update_secs() - mb_out.total_rebuild_secs()) * 1e3
+                            / mb_rounds,
+                    ),
+                ),
+                (
+                    "rebuild_ms_per_round",
+                    Json::Num(mb_out.total_rebuild_secs() * 1e3 / mb_rounds),
+                ),
+                ("objective_ratio_vs_full", Json::Num(mb_obj_ratio)),
             ]),
         ),
         (

@@ -235,6 +235,18 @@ impl Assigner for CsAssigner {
         st: &mut IterState,
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
+        let n = st.assign.len();
+        self.assign_span(ds, st, 0, n, cfg)
+    }
+
+    fn assign_span(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        lo: usize,
+        hi: usize,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
         let this = &*self;
         let IterState {
             assign,
@@ -244,8 +256,8 @@ impl Assigner for CsAssigner {
             ..
         } = st;
         let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
-        par::run_sharded(cfg, assign, |lo, chunk| {
-            this.assign_range(ds, k, rho, xstate, lo, chunk)
+        par::run_sharded(cfg, &mut assign[lo..hi], |rel, chunk| {
+            this.assign_range(ds, k, rho, xstate, lo + rel, chunk)
         })
     }
 

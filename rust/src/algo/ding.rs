@@ -13,11 +13,15 @@
 //! (plus the per-group irregular branches) that makes Ding+ slower than
 //! MIVI despite ~4× fewer multiplications (Table II).
 //!
-//! Sharding: the per-object bound matrix `gub` (N × G, row-major per
-//! object) is split along the same object-shard boundaries as the
-//! assignment vector (`par::run_sharded_with`), so each worker owns its
-//! objects' bounds exclusively and the sharded path is bit-identical to
-//! the serial one.
+//! Sharding: the per-object bound matrix `gub` (N × (G + 1), row-major
+//! per object: G group bounds plus a last-tightened round stamp) is
+//! split along the same object-shard boundaries as the assignment
+//! vector (`par::run_sharded_with`), so each worker owns its objects'
+//! bounds exclusively and the sharded path is bit-identical to the
+//! serial one. The stamp keeps the mini-batch path sound: bounds are
+//! drift-corrected only one round at a time, so rows whose object
+//! skipped rounds take the exact first-pass evaluation (all centroids,
+//! own included) rather than an under-corrected pruning pass.
 
 use crate::algo::kernel;
 use crate::algo::{par, Assigner, ClusterConfig, IterState, ParConfig};
@@ -40,10 +44,24 @@ pub struct DingAssigner {
     group_start: Vec<usize>,
     /// Max drift per group at this iteration.
     group_drift: Vec<f64>,
-    /// Per-object per-group similarity upper bounds (N × G). Persistent
-    /// across iterations — Ding's scratch was always hoisted; the bound
-    /// matrix doubles as the pruning state.
+    /// Per-object pruning state, `stride = n_groups + 1` slots per
+    /// object: `n_groups` per-group similarity upper bounds followed by
+    /// one **round stamp** (the round the row was last tightened, as an
+    /// exact small-integer f64). Persistent across iterations; the
+    /// stamp exists for the mini-batch path — the one-round drift
+    /// correction in the assignment loop is only valid for objects
+    /// visited on the immediately preceding round, so a stale or
+    /// never-stamped row is routed through the exact first-pass body
+    /// (all centroids evaluated, own included, bounds re-initialized)
+    /// instead of silently under-correcting or excluding a
+    /// possibly-moved own centroid. Full-batch runs visit every object
+    /// every round, so the stamp check never fires there and behavior
+    /// is bit-identical to the pre-stamp code.
     gub: Vec<f64>,
+    /// Rebuild counter == the 1-based round whose assignment comes next
+    /// (`rebuild` is called exactly once before every assignment round
+    /// in both the full-batch and mini-batch drivers).
+    round: u32,
     first_pass_done: bool,
     /// Assignment-step phase seconds since the last `take_phases` drain.
     phases: PhaseTimes,
@@ -61,6 +79,11 @@ impl DingAssigner {
         for g in 0..n_groups {
             group_start[g + 1] += group_start[g];
         }
+        let stride = n_groups + 1;
+        let mut gub = vec![f64::INFINITY; ds.n() * stride];
+        for i in 0..ds.n() {
+            gub[i * stride + n_groups] = 0.0; // round stamp: never visited
+        }
         Self {
             dense: vec![0.0; k * ds.d()],
             prev_dense: vec![0.0; k * ds.d()],
@@ -70,7 +93,8 @@ impl DingAssigner {
             group_of,
             group_start,
             group_drift: vec![0.0; n_groups],
-            gub: vec![f64::INFINITY; ds.n() * n_groups],
+            gub,
+            round: 0,
             first_pass_done: false,
             phases: PhaseTimes::default(),
         }
@@ -95,7 +119,8 @@ impl DingAssigner {
     }
 
     /// Assignment of objects `[lo, lo + out.len())`; `gub` is the bound
-    /// sub-matrix for exactly those objects (`out.len() × n_groups`).
+    /// sub-matrix for exactly those objects
+    /// (`out.len() × (n_groups + 1)`, bounds + round stamp per row).
     fn assign_range(
         &self,
         ds: &Dataset,
@@ -106,20 +131,35 @@ impl DingAssigner {
         gub: &mut [f64],
     ) -> (OpCounters, usize) {
         let ng = self.n_groups;
+        let stride = ng + 1;
+        let round_f = self.round as f64;
         let mut counters = OpCounters::new();
         let mut changes = 0usize;
 
-        if first_pass {
-            // Iteration 1: exact full evaluation, recording per-group
-            // maxima to initialize the bounds. The group that ends up
-            // holding the assigned centroid gets an infinite bound: all
-            // other groups' bounds are valid for "best excluding the
-            // assigned centroid" because the assigned centroid is not in
-            // them (the Yinyang own-group refinement).
-            for (off, slot) in out.iter_mut().enumerate() {
-                let i = lo + off;
-                let (ts, _) = ds.x.row(i);
-                let nt = ts.len() as u64;
+        for (off, slot) in out.iter_mut().enumerate() {
+            let i = lo + off;
+            let base = off * stride;
+            let (ts, _) = ds.x.row(i);
+            let nt = ts.len() as u64;
+
+            // First-pass evaluation — globally on iteration 1, and
+            // per-object for (a) anyone the mini-batch schedule has
+            // never visited (their ρ still carries the −1.0 init
+            // sentinel, so there is no exact own similarity to
+            // exclude-and-reuse) and (b) anyone whose bound row was not
+            // tightened on the immediately preceding round (the
+            // one-round drift correction below would under-correct, and
+            // the own centroid may have moved since the stale ρ, so the
+            // exclude-a0 path would be unsound — every centroid gets
+            // evaluated here instead, a0 included): exact full
+            // evaluation, recording per-group maxima to initialize the
+            // bounds. The group that ends up holding the assigned
+            // centroid gets an infinite bound: all other groups' bounds
+            // are valid for "best excluding the assigned centroid"
+            // because the assigned centroid is not in them (the Yinyang
+            // own-group refinement). Full-batch runs tighten every row
+            // every round, so the stamp clause never fires there.
+            if first_pass || rho_prev[i] < 0.0 || gub[base + ng] + 1.0 != round_f {
                 let mut amax = *slot;
                 let mut rmax = rho_prev[i];
                 for g in 0..ng {
@@ -136,30 +176,25 @@ impl DingAssigner {
                             amax = j as u32;
                         }
                     }
-                    gub[off * ng + g] = gmax;
+                    gub[base + g] = gmax;
                 }
-                gub[off * ng + self.group_of[amax as usize] as usize] = f64::INFINITY;
+                gub[base + self.group_of[amax as usize] as usize] = f64::INFINITY;
+                gub[base + ng] = round_f;
                 counters.candidates += self.k as u64;
                 counters.exact_sims += self.k as u64;
                 if amax != *slot {
                     *slot = amax;
                     changes += 1;
                 }
+                continue;
             }
-            return (counters, changes);
-        }
 
-        for (off, slot) in out.iter_mut().enumerate() {
-            let i = lo + off;
-            let (ts, _) = ds.x.row(i);
-            let nt = ts.len() as u64;
             // The exact own similarity is ρ from the update step; bounds
             // are for "best in group excluding the assigned centroid".
             let a0 = *slot;
             let own = rho_prev[i];
             let mut amax = a0;
             let mut rmax = own;
-            let base = off * ng;
             for g in 0..ng {
                 // Carry the bound across the mean update.
                 gub[base + g] += self.group_drift[g];
@@ -190,6 +225,7 @@ impl DingAssigner {
                 }
                 gub[base + g] = gmax;
             }
+            gub[base + ng] = round_f;
             if amax != a0 {
                 // The old centroid is no longer excluded from its group's
                 // bound; invalidate so the next iteration re-evaluates.
@@ -201,24 +237,35 @@ impl DingAssigner {
         (counters, changes)
     }
 
-    /// Shared serial/parallel driver: splits `gub` along the shard
-    /// boundaries and runs [`DingAssigner::assign_range`] per shard.
+    /// Shared serial/parallel/span driver: slices the per-object bound
+    /// matrix `gub` along the same `[lo, hi)` object span as the
+    /// assignment slice and runs [`DingAssigner::assign_range`] per
+    /// shard. A full span is the classic assignment step; partial spans
+    /// serve the mini-batch driver (each object's bound row stays owned
+    /// by exactly one worker either way).
     fn assign_with(
         &mut self,
         ds: &Dataset,
         st: &mut IterState,
+        lo: usize,
+        hi: usize,
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
         let first_pass = !self.first_pass_done;
+        let stride = self.n_groups + 1;
         let t0 = Instant::now();
         let mut gub = std::mem::take(&mut self.gub);
         let result = {
             let this = &*self;
             let IterState { assign, rho, .. } = st;
             let rho = &rho[..];
-            par::run_sharded_with(cfg, assign, &mut gub, this.n_groups, |lo, chunk, g| {
-                this.assign_range(ds, first_pass, rho, lo, chunk, g)
-            })
+            par::run_sharded_with(
+                cfg,
+                &mut assign[lo..hi],
+                &mut gub[lo * stride..hi * stride],
+                stride,
+                |rel, chunk, g| this.assign_range(ds, first_pass, rho, lo + rel, chunk, g),
+            )
         };
         self.gub = gub;
         self.first_pass_done = true;
@@ -231,6 +278,9 @@ impl DingAssigner {
 
 impl Assigner for DingAssigner {
     fn rebuild(&mut self, _ds: &Dataset, st: &IterState, _cfg: &ClusterConfig) {
+        // One rebuild precedes every assignment round in both drivers;
+        // the counter stamps bound rows with their tightening round.
+        self.round += 1;
         // Densify the new means and compute per-group max drift.
         std::mem::swap(&mut self.dense, &mut self.prev_dense);
         self.dense.iter_mut().for_each(|v| *v = 0.0);
@@ -266,7 +316,8 @@ impl Assigner for DingAssigner {
     }
 
     fn assign(&mut self, ds: &Dataset, st: &mut IterState) -> (OpCounters, usize) {
-        self.assign_with(ds, st, &ParConfig::serial())
+        let n = st.assign.len();
+        self.assign_with(ds, st, 0, n, &ParConfig::serial())
     }
 
     fn assign_par(
@@ -275,7 +326,19 @@ impl Assigner for DingAssigner {
         st: &mut IterState,
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
-        self.assign_with(ds, st, cfg)
+        let n = st.assign.len();
+        self.assign_with(ds, st, 0, n, cfg)
+    }
+
+    fn assign_span(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        lo: usize,
+        hi: usize,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        self.assign_with(ds, st, lo, hi, cfg)
     }
 
     fn mem_bytes(&self) -> usize {

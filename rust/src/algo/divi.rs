@@ -219,8 +219,20 @@ impl Assigner for DiviAssigner {
 
     fn assign_par(
         &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let n = st.assign.len();
+        self.assign_span(ds, st, 0, n, cfg)
+    }
+
+    fn assign_span(
+        &mut self,
         _ds: &Dataset,
         st: &mut IterState,
+        lo: usize,
+        hi: usize,
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
         let this = &*self;
@@ -232,8 +244,8 @@ impl Assigner for DiviAssigner {
             ..
         } = st;
         let (k, rho, means) = (*k, &rho[..], &*means);
-        par::run_sharded(cfg, assign, |lo, chunk| {
-            this.assign_range(k, means, rho, lo, chunk)
+        par::run_sharded(cfg, &mut assign[lo..hi], |rel, chunk| {
+            this.assign_range(k, means, rho, lo + rel, chunk)
         })
     }
 

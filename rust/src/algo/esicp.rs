@@ -327,8 +327,20 @@ impl Assigner for EsAssigner {
 
     fn assign_par(
         &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        cfg: &ParConfig,
+    ) -> (OpCounters, usize) {
+        let n = st.assign.len();
+        self.assign_span(ds, st, 0, n, cfg)
+    }
+
+    fn assign_span(
+        &mut self,
         _ds: &Dataset,
         st: &mut IterState,
+        lo: usize,
+        hi: usize,
         cfg: &ParConfig,
     ) -> (OpCounters, usize) {
         let this = &*self;
@@ -340,8 +352,8 @@ impl Assigner for EsAssigner {
             ..
         } = st;
         let (k, rho, xstate) = (*k, &rho[..], &xstate[..]);
-        par::run_sharded(cfg, assign, |lo, chunk| {
-            this.assign_range(k, rho, xstate, lo, chunk)
+        par::run_sharded(cfg, &mut assign[lo..hi], |rel, chunk| {
+            this.assign_range(k, rho, xstate, lo + rel, chunk)
         })
     }
 

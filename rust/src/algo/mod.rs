@@ -291,6 +291,30 @@ pub trait Assigner: Sync {
         self.assign(ds, st)
     }
 
+    /// Assignment step restricted to the contiguous object span
+    /// `[lo, hi)` — the mini-batch / streaming entry point
+    /// ([`crate::coordinator::minibatch`]). Implementations run the
+    /// same per-object routine as [`Assigner::assign`] over the span
+    /// (sharded when `par.is_parallel()`), so a span covering every
+    /// object is bit-identical to [`Assigner::assign_par`], and a
+    /// partial span updates only `st.assign[lo..hi]` (counters cover
+    /// exactly those objects). All six built-in assigners override
+    /// this; the default supports only the full span.
+    fn assign_span(
+        &mut self,
+        ds: &Dataset,
+        st: &mut IterState,
+        lo: usize,
+        hi: usize,
+        par: &ParConfig,
+    ) -> (OpCounters, usize) {
+        assert!(
+            lo == 0 && hi == st.assign.len(),
+            "this assigner does not support partial-span (mini-batch) assignment"
+        );
+        self.assign_par(ds, st, par)
+    }
+
     /// Bytes held by the algorithm-specific structures right now
     /// (indexes, persistent maintainer state, pooled scratch).
     fn mem_bytes(&self) -> usize;

@@ -1,0 +1,667 @@
+//! Mini-batch / streaming spherical k-means on the structured index
+//! (§Stream tentpole).
+//!
+//! The full-batch driver ([`crate::algo::run_clustering_with`]) walks
+//! Lloyd iterations over all N objects. At traffic scale (the ROADMAP's
+//! million-document streams) that is the wrong granularity: fresh
+//! documents arrive continuously and each assignment pass over the full
+//! corpus costs O(N) before a single centroid moves. The driver here
+//! processes **batches**:
+//!
+//! 1. pick a batch (a sequential window sweeping the corpus in storage
+//!    order, or a seeded random sample without replacement),
+//! 2. run the assignment step for the batch only, through the existing
+//!    [`Assigner`] machinery ([`Assigner::assign_span`] — the same
+//!    per-object routines, sharded and bit-deterministic),
+//! 3. fold the batch into the mean set with per-centroid count-decay
+//!    learning rates ([`crate::index::update_means_minibatch`]),
+//! 4. let the incremental maintainers splice only the touched centroids
+//!    into the structured index (`index::maintain`, the PR-2 engine:
+//!    per-batch index cost scales with the moved mass, and the
+//!    `SKM_SPLICE_FRAC` dirty-fraction fallback applies per batch).
+//!
+//! ## Determinism and the Lloyd-parity contract
+//!
+//! Batch selection is a pure function of `(schedule, sample_seed,
+//! round)`; the batch assignment is the sharded engine (bit-identical
+//! for any thread/shard count); the update is serial batch-sized work;
+//! counters merge in fixed run order. Hence **same seed ⇒ identical
+//! assignments, ρ, objectives, and merged [`OpCounters`] for any thread
+//! count** — enforced by `rust/tests/minibatch.rs`.
+//!
+//! With `batch == n` and `decay == 0` every round degenerates to a full
+//! Lloyd iteration, and the driver is **bit-exact** against
+//! [`crate::algo::run_clustering_with`]: same assignment trajectory,
+//! same per-round objective bits, same counters, same convergence round
+//! (also enforced by `rust/tests/minibatch.rs`).
+//!
+//! ## What partial batches approximate
+//!
+//! An object outside the current batch keeps its stored ρ (similarity
+//! to its centroid as of its *last* refresh). If its centroid has moved
+//! since, that threshold is stale — the pruning filters may over- or
+//! under-prune relative to an exact pass, which is the standard
+//! mini-batch approximation (Sculley-style); results remain
+//! deterministic. The ICP auxiliary filter is *never* armed from stale
+//! state: the driver tracks each centroid's last-moved round and each
+//! object's last-refreshed round, and clears the object's eligibility
+//! flag when the centroid moved after the refresh (an invariant-centroid
+//! argument from stale ρ would be unsound, not merely approximate).
+
+use crate::algo::{
+    make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState, ParConfig,
+};
+use crate::index::update_means_minibatch;
+use crate::metrics::counters::OpCounters;
+use crate::sparse::Dataset;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// How each round's batch is drawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// Contiguous windows sweeping the corpus in storage order (the
+    /// streaming mode: documents are consumed in arrival order, e.g.
+    /// straight out of `corpus::loader`'s UCI reader).
+    Sequential,
+    /// A seeded random sample without replacement per round
+    /// (Floyd-style reservoir draw via [`Pcg32::sample_distinct`]) —
+    /// the classic mini-batch k-means regime.
+    Reservoir,
+}
+
+impl BatchSchedule {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" | "stream" => BatchSchedule::Sequential,
+            "reservoir" | "random" | "sample" => BatchSchedule::Reservoir,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchSchedule::Sequential => "sequential",
+            BatchSchedule::Reservoir => "reservoir",
+        }
+    }
+}
+
+/// Configuration of the mini-batch / streaming driver.
+#[derive(Debug, Clone)]
+pub struct MiniBatchConfig {
+    /// Objects per round (clamped to `[1, n]`; `batch == n` with
+    /// `decay == 0` is bit-exact full-batch Lloyd).
+    pub batch: usize,
+    pub schedule: BatchSchedule,
+    /// Count-decay forgetting factor: per batch, `c_j ← decay·c_j + m_j`
+    /// and the learning rate is `η_j = m_j / c_j`. `1.0` = classic
+    /// count decay (Sculley-style mini-batch k-means), `< 1` forgets
+    /// old batches (drifting streams), `0.0` = memoryless (`η = 1`,
+    /// batch means replace centroids — the Lloyd-parity mode).
+    pub decay: f64,
+    /// Hard cap on rounds (one batch each).
+    pub max_rounds: usize,
+    /// Seed of the batch-sampling stream (Reservoir schedule). Kept
+    /// separate from [`ClusterConfig::seed`] so seeding and sampling
+    /// can be varied independently.
+    pub sample_seed: u64,
+}
+
+/// Epoch budget of the default policy — the single source for both
+/// [`MiniBatchConfig::default_for`] and the CLI's `--rounds` default
+/// (which must rescale it when `--batch-size` overrides the batch).
+pub const DEFAULT_EPOCH_BUDGET: usize = 64;
+
+impl MiniBatchConfig {
+    /// The one default policy for an `n`-object workload (shared by
+    /// `Preset::minibatch_config` and the `skm cluster --minibatch`
+    /// flag defaults — one place, so they cannot drift): ~16 sequential
+    /// batches per epoch floored at 256 objects, classic count decay,
+    /// and a [`DEFAULT_EPOCH_BUDGET`]-epoch round budget.
+    pub fn default_for(n: usize) -> Self {
+        let n = n.max(1);
+        let batch = (n / 16).max(256).min(n);
+        let rounds_per_epoch = (n + batch - 1) / batch;
+        Self {
+            batch,
+            schedule: BatchSchedule::Sequential,
+            decay: 1.0,
+            max_rounds: DEFAULT_EPOCH_BUDGET * rounds_per_epoch,
+            sample_seed: 0xba7c_4e5d,
+        }
+    }
+}
+
+/// Per-round record (the mini-batch analog of [`crate::algo::IterLog`]).
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    /// 1-based round number (`IterState::iter` of this round's batch).
+    pub round: usize,
+    /// Objects in this round's batch.
+    pub batch_len: usize,
+    pub counters: OpCounters,
+    pub changes: usize,
+    pub assign_secs: f64,
+    /// Gather/verify split of the batch assignment (CPU-seconds across
+    /// shard workers, like [`crate::algo::IterLog`]).
+    pub gather_secs: f64,
+    pub verify_secs: f64,
+    pub update_secs: f64,
+    pub rebuild_secs: f64,
+    pub n_moving: usize,
+    /// Σ_i ρ_i over ALL objects, with objects no batch has refreshed
+    /// yet counting as 0 (their −1.0 init sentinels are compensated).
+    /// Entries outside the batch carry their last refreshed value, so
+    /// in streaming mode this is a running estimate of the Lloyd
+    /// objective; at `batch == n` the compensation is a no-op and the
+    /// value is bit-exactly the full-batch objective.
+    pub objective: f64,
+    pub mem_bytes: usize,
+}
+
+/// Result of a complete mini-batch run.
+pub struct MiniBatchOutput {
+    pub algo: AlgoKind,
+    pub assign: Vec<u32>,
+    pub objective: f64,
+    pub rounds: Vec<RoundLog>,
+    /// A full epoch's worth of consecutive rounds saw zero assignment
+    /// changes before the round cap.
+    pub converged: bool,
+    pub max_mem_bytes: usize,
+    pub t_th: Option<usize>,
+    pub v_th: Option<f64>,
+}
+
+impl MiniBatchOutput {
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn total_counters(&self) -> OpCounters {
+        let mut c = OpCounters::new();
+        for r in &self.rounds {
+            c.add(&r.counters);
+        }
+        c
+    }
+
+    pub fn total_assign_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.assign_secs).sum()
+    }
+
+    pub fn total_update_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.update_secs + r.rebuild_secs).sum()
+    }
+
+    pub fn total_rebuild_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.rebuild_secs).sum()
+    }
+
+    /// Objects assigned across all rounds (≥ one epoch ⇒ ≥ n).
+    pub fn objects_processed(&self) -> usize {
+        self.rounds.iter().map(|r| r.batch_len).sum()
+    }
+}
+
+/// Decompose a sorted list of distinct object ids into maximal
+/// contiguous `(lo, hi)` runs — the span form the assigners consume.
+fn runs_from_sorted_ids(ids: &[usize], runs: &mut Vec<(usize, usize)>) {
+    runs.clear();
+    let mut q = 0usize;
+    while q < ids.len() {
+        let lo = ids[q];
+        let mut hi = lo + 1;
+        q += 1;
+        while q < ids.len() && ids[q] == hi {
+            hi += 1;
+            q += 1;
+        }
+        runs.push((lo, hi));
+    }
+}
+
+/// Run mini-batch / streaming clustering. See module docs for the
+/// determinism and Lloyd-parity contracts.
+pub fn run_minibatch(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    mb: &MiniBatchConfig,
+    par: &ParConfig,
+) -> MiniBatchOutput {
+    let n = ds.n();
+    let k = cfg.k;
+    let b = mb.batch.clamp(1, n);
+    let rounds_per_epoch = (n + b - 1) / b;
+    assert!(
+        (0.0..=1.0).contains(&mb.decay),
+        "decay must be in [0, 1] (got {})",
+        mb.decay
+    );
+    assert!(
+        mb.max_rounds < u32::MAX as usize,
+        "max_rounds out of range"
+    );
+
+    let mut st = IterState {
+        k,
+        assign: vec![0; n],
+        rho: vec![-1.0; n],
+        xstate: vec![false; n],
+        means: seed_means(ds, k, cfg.seed),
+        iter: 1,
+    };
+    let mut assigner = make_assigner(kind, ds, cfg);
+
+    // Initial structures from the seed means; carried into round 1's
+    // rebuild attribution exactly like the full-batch driver.
+    let mut rb_sw = Stopwatch::new();
+    rb_sw.start();
+    assigner.rebuild(ds, &st, cfg);
+    rb_sw.stop();
+    let mut carry_rebuild_secs = rb_sw.secs();
+
+    // Driver state: decayed per-centroid batch mass, incrementally
+    // maintained full-assignment sizes, and the ρ/ICP staleness clocks.
+    let mut counts = vec![0.0f64; k];
+    let mut sizes = vec![0u32; k];
+    for &a in &st.assign {
+        sizes[a as usize] += 1;
+    }
+    let mut obs_round = vec![0u32; n];
+    // Objects no batch has refreshed yet: their ρ still holds the −1.0
+    // init sentinel, which the logged objective compensates (each such
+    // object counts as 0, not −1). Zero from the first full span on, so
+    // the compensation is a no-op — bit-exact — in Lloyd-parity mode.
+    let mut never_seen = n;
+    let mut last_moved = vec![0u32; k];
+    // The two most recent distinct rounds in which ANY centroid moved.
+    // The ICP eligibility gate needs them: centroids that moved at the
+    // round producing the current means are in `moving_ids` and get
+    // scanned fresh, but a centroid that moved at an *earlier* round
+    // since an object's last refresh is invariant now and would be
+    // unsoundly skipped — so eligibility requires the object's refresh
+    // to postdate every move round except the latest.
+    let mut mr_latest = 0u32;
+    let mut mr_prev = 0u32;
+    let mut rng = Pcg32::new(mb.sample_seed ^ 0x00ba_7c4e);
+
+    let mut cursor = 0usize;
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut prev_b: Vec<u32> = Vec::new();
+    let mut changed = vec![false; k];
+    // Objects processed so far. `st.iter` advances per completed
+    // *epoch* (n objects), not per round: the assigners key EstParams
+    // and the TA/CS preset switches off `st.iter ∈ {2, 3}`, and those
+    // must not fire while most ρ entries still carry the −1.0 init
+    // sentinel (EstParams would derive garbage (t_th, v_th) from the
+    // clamped sentinel slack and pin it for the whole run). With
+    // `batch == n` one epoch IS one round, so `st.iter` takes exactly
+    // the full-batch driver's values — Lloyd parity is unaffected.
+    let mut processed = 0usize;
+
+    let mut logs: Vec<RoundLog> = Vec::new();
+    let mut quiet = 0usize;
+    let mut converged = false;
+    let mut max_mem = 0usize;
+    let mut objective = f64::NAN;
+
+    for r in 1..=mb.max_rounds {
+        st.iter = 1 + processed / n;
+
+        // --- batch selection → contiguous runs ---------------------------
+        match mb.schedule {
+            BatchSchedule::Sequential => {
+                let lo = cursor;
+                let hi = (lo + b).min(n);
+                cursor = if hi == n { 0 } else { hi };
+                runs.clear();
+                runs.push((lo, hi));
+            }
+            BatchSchedule::Reservoir => {
+                let mut ids = rng.sample_distinct(n, b);
+                ids.sort_unstable();
+                runs_from_sorted_ids(&ids, &mut runs);
+            }
+        }
+        let batch_len: usize = runs.iter().map(|&(lo, hi)| hi - lo).sum();
+
+        // Snapshot the batch's previous assignments (O(batch)): feeds
+        // the changed-cluster flags, size deltas, and ICP eligibility.
+        prev_b.clear();
+        for &(lo, hi) in &runs {
+            prev_b.extend_from_slice(&st.assign[lo..hi]);
+        }
+        // Gate ICP eligibility against staleness. The carried flag is
+        // valid only if (a) the object's own centroid has not moved
+        // since the object's ρ was last refreshed, and (b) no *other*
+        // centroid moved at a round the current moving set no longer
+        // reflects: moves at the latest move round are in `moving_ids`
+        // (scanned fresh by the G_1 path), but moves at any earlier
+        // round since the object's last *comparison* belong to
+        // centroids that are invariant now — skipping them would be
+        // unsound, not merely approximate. `stale_bar` is the most
+        // recent move round whose movers are NOT in the current moving
+        // set; the comparison the object's eligibility rests on saw
+        // means from the round BEFORE its refresh round, so the gate is
+        // strict: moves at `obs_round[i]` itself postdate it.
+        let stale_bar = if mr_latest as usize == r - 1 {
+            mr_prev
+        } else {
+            mr_latest
+        };
+        for &(lo, hi) in &runs {
+            for i in lo..hi {
+                st.xstate[i] = st.xstate[i]
+                    && last_moved[st.assign[i] as usize] <= obs_round[i]
+                    && obs_round[i] > stale_bar;
+            }
+        }
+
+        // --- batch assignment (sharded, bit-deterministic) ---------------
+        let mut asg_sw = Stopwatch::new();
+        asg_sw.start();
+        let mut counters = OpCounters::new();
+        let mut changes = 0usize;
+        for &(lo, hi) in &runs {
+            let (c, ch) = assigner.assign_span(ds, &mut st, lo, hi, par);
+            counters.add(&c);
+            changes += ch;
+        }
+        asg_sw.stop();
+        let phases = assigner.take_phases();
+        processed += batch_len;
+
+        let mem = assigner.mem_bytes();
+        max_mem = max_mem.max(mem);
+
+        if changes == 0 {
+            quiet += 1;
+        } else {
+            quiet = 0;
+        }
+        if quiet >= rounds_per_epoch && r > rounds_per_epoch {
+            // A full epoch of batches saw no reassignment: log the
+            // final (pure-assignment) round, exactly like the
+            // full-batch driver's fixed-point exit.
+            logs.push(RoundLog {
+                round: r,
+                batch_len,
+                counters,
+                changes,
+                assign_secs: asg_sw.secs(),
+                gather_secs: phases.gather,
+                verify_secs: phases.verify,
+                update_secs: 0.0,
+                rebuild_secs: carry_rebuild_secs,
+                n_moving: st.means.n_moving(),
+                objective,
+                mem_bytes: mem,
+            });
+            converged = true;
+            break;
+        }
+
+        // --- changed flags + size bookkeeping (O(batch)) ------------------
+        changed.iter_mut().for_each(|c| *c = false);
+        let mut off = 0usize;
+        for &(lo, hi) in &runs {
+            for i in lo..hi {
+                let was = prev_b[off];
+                off += 1;
+                let now = st.assign[i];
+                if was != now {
+                    changed[was as usize] = true;
+                    changed[now as usize] = true;
+                    sizes[was as usize] -= 1;
+                    sizes[now as usize] += 1;
+                } else if mb.decay > 0.0 {
+                    // Streaming mode: every batch member nudges its
+                    // centroid, membership change or not. (Memoryless
+                    // mode keeps Lloyd's invariant-reuse semantics.)
+                    changed[now as usize] = true;
+                }
+            }
+        }
+
+        // --- count-decay update step --------------------------------------
+        let mut upd_sw = Stopwatch::new();
+        upd_sw.start();
+        let upd = update_means_minibatch(
+            ds, &st.assign, &runs, k, &st.means, &changed, &st.rho, &sizes, &mut counts,
+            mb.decay,
+        );
+        // ICP eligibility (Eq. 5) and staleness clocks for the batch.
+        // A member's ρ is genuinely current only when its cluster was
+        // rebuilt this round (recomputed against the new mean) or when
+        // the carried value is still in sync (refreshed before, and the
+        // mean unmoved since — `last_moved` still holds pre-round
+        // values here). A first-visited member of an untouched cluster
+        // keeps the −1.0 sentinel: that is NOT a refresh — its clocks
+        // stay put (so the objective compensation still covers it) and
+        // eligibility must not be armed from the sentinel.
+        let mut off = 0usize;
+        for &(lo, hi) in &runs {
+            for i in lo..hi {
+                let a = st.assign[i] as usize;
+                let recomputed = upd.means.moved[a];
+                let carried_current = obs_round[i] > 0 && last_moved[a] <= obs_round[i];
+                if recomputed || carried_current {
+                    st.xstate[i] = prev_b[off] == st.assign[i] && upd.rho[i] >= st.rho[i];
+                    if obs_round[i] == 0 {
+                        never_seen -= 1;
+                    }
+                    obs_round[i] = r as u32;
+                } else {
+                    st.xstate[i] = false;
+                }
+                off += 1;
+            }
+        }
+        let any_moved = upd.means.moved.iter().any(|&m| m);
+        for (j, m) in upd.means.moved.iter().enumerate() {
+            if *m {
+                last_moved[j] = r as u32;
+            }
+        }
+        if any_moved {
+            mr_prev = mr_latest;
+            mr_latest = r as u32;
+        }
+        // Compensate the −1.0 sentinels of never-refreshed objects so
+        // early-epoch objectives are a meaningful running estimate
+        // (unseen objects contribute 0). `never_seen == 0` leaves the
+        // sum untouched — the Lloyd-parity bit-exactness path.
+        objective = if never_seen > 0 {
+            upd.objective + never_seen as f64
+        } else {
+            upd.objective
+        };
+        st.means = upd.means;
+        st.rho = upd.rho;
+        st.iter = 1 + processed / n;
+        upd_sw.stop();
+
+        // --- incremental index maintenance (splice only dirty centroids) --
+        let mut rb_sw = Stopwatch::new();
+        rb_sw.start();
+        assigner.rebuild(ds, &st, cfg);
+        rb_sw.stop();
+
+        logs.push(RoundLog {
+            round: r,
+            batch_len,
+            counters,
+            changes,
+            assign_secs: asg_sw.secs(),
+            gather_secs: phases.gather,
+            verify_secs: phases.verify,
+            update_secs: upd_sw.secs(),
+            rebuild_secs: carry_rebuild_secs + rb_sw.secs(),
+            n_moving: st.means.n_moving(),
+            objective,
+            mem_bytes: assigner.mem_bytes(),
+        });
+        carry_rebuild_secs = 0.0;
+        max_mem = max_mem.max(assigner.mem_bytes());
+    }
+
+    let (t_th, v_th) = assigner.params();
+    MiniBatchOutput {
+        algo: kind,
+        assign: st.assign,
+        objective,
+        rounds: logs,
+        converged,
+        max_mem_bytes: max_mem,
+        t_th,
+        v_th,
+    }
+}
+
+/// Machine-readable report for one mini-batch run (the `--bench-json`
+/// shape of the streaming mode).
+pub fn minibatch_run_json(
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    mb: &MiniBatchConfig,
+    out: &MiniBatchOutput,
+) -> Json {
+    let c = out.total_counters();
+    let per_round: Vec<Json> = out
+        .rounds
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("round", Json::UInt(l.round as u64)),
+                ("batch_len", Json::UInt(l.batch_len as u64)),
+                ("mult", Json::UInt(l.counters.mult)),
+                ("changes", Json::UInt(l.changes as u64)),
+                ("assign_secs", Json::Num(l.assign_secs)),
+                ("update_secs", Json::Num(l.update_secs)),
+                ("rebuild_secs", Json::Num(l.rebuild_secs)),
+                ("n_moving", Json::UInt(l.n_moving as u64)),
+                ("objective", Json::Num(l.objective)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("algo", Json::str(out.algo.name())),
+        ("mode", Json::str("minibatch")),
+        (
+            "dataset",
+            Json::obj(vec![
+                ("name", Json::str(ds.name.clone())),
+                ("n", Json::UInt(ds.n() as u64)),
+                ("d", Json::UInt(ds.d() as u64)),
+                ("k", Json::UInt(cfg.k as u64)),
+                ("seed", Json::UInt(cfg.seed)),
+            ]),
+        ),
+        (
+            "minibatch",
+            Json::obj(vec![
+                ("batch", Json::UInt(mb.batch as u64)),
+                ("schedule", Json::str(mb.schedule.name())),
+                ("decay", Json::Num(mb.decay)),
+                ("sample_seed", Json::UInt(mb.sample_seed)),
+            ]),
+        ),
+        ("rounds", Json::UInt(out.n_rounds() as u64)),
+        ("converged", Json::Bool(out.converged)),
+        ("objective", Json::Num(out.objective)),
+        ("objects_processed", Json::UInt(out.objects_processed() as u64)),
+        ("max_mem_bytes", Json::UInt(out.max_mem_bytes as u64)),
+        (
+            "t_th",
+            out.t_th.map(|t| Json::UInt(t as u64)).unwrap_or(Json::Null),
+        ),
+        ("v_th", out.v_th.map(Json::Num).unwrap_or(Json::Null)),
+        (
+            "phase_secs",
+            Json::obj(vec![
+                ("assign", Json::Num(out.total_assign_secs())),
+                (
+                    "update",
+                    Json::Num(out.total_update_secs() - out.total_rebuild_secs()),
+                ),
+                ("rebuild", Json::Num(out.total_rebuild_secs())),
+            ]),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("mult", Json::UInt(c.mult)),
+                ("irregular_branches", Json::UInt(c.irregular_branches)),
+                ("cold_touches", Json::UInt(c.cold_touches)),
+                ("candidates", Json::UInt(c.candidates)),
+                ("exact_sims", Json::UInt(c.exact_sims)),
+                ("sqrts", Json::UInt(c.sqrts)),
+            ]),
+        ),
+        ("per_round", Json::Arr(per_round)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny, CorpusSpec};
+    use crate::sparse::build_dataset;
+
+    fn dataset(n_docs: usize, seed: u64) -> Dataset {
+        let c = generate(&CorpusSpec {
+            n_docs,
+            ..tiny(seed)
+        });
+        build_dataset("mb", c.n_terms, &c.docs)
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in [BatchSchedule::Sequential, BatchSchedule::Reservoir] {
+            assert_eq!(BatchSchedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(BatchSchedule::parse("stream"), Some(BatchSchedule::Sequential));
+        assert_eq!(BatchSchedule::parse("random"), Some(BatchSchedule::Reservoir));
+        assert_eq!(BatchSchedule::parse("nope"), None);
+    }
+
+    #[test]
+    fn runs_decomposition_is_maximal_and_disjoint() {
+        let mut runs = Vec::new();
+        runs_from_sorted_ids(&[0, 1, 2, 5, 7, 8], &mut runs);
+        assert_eq!(runs, vec![(0, 3), (5, 6), (7, 9)]);
+        runs_from_sorted_ids(&[], &mut runs);
+        assert!(runs.is_empty());
+        runs_from_sorted_ids(&[4], &mut runs);
+        assert_eq!(runs, vec![(4, 5)]);
+    }
+
+    /// Unit-scope smoke of the driver itself; the epoch-coverage,
+    /// thread-determinism, Lloyd-parity, and quality suites live in
+    /// `rust/tests/minibatch.rs` (one place, no drifting copies).
+    #[test]
+    fn driver_smoke_one_epoch() {
+        let ds = dataset(250, 7);
+        let cfg = ClusterConfig {
+            k: 8,
+            seed: 3,
+            ..Default::default()
+        };
+        let mb = MiniBatchConfig {
+            batch: 64,
+            schedule: BatchSchedule::Sequential,
+            decay: 1.0,
+            max_rounds: 4,
+            sample_seed: 1,
+        };
+        let out = run_minibatch(AlgoKind::Mivi, &ds, &cfg, &mb, &ParConfig::serial());
+        assert_eq!(out.n_rounds(), 4);
+        assert_eq!(out.objects_processed(), ds.n()); // 64·3 + 58
+        assert!(out.objective.is_finite());
+    }
+}

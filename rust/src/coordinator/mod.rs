@@ -4,11 +4,15 @@
 
 pub mod audit;
 pub mod compare;
+pub mod minibatch;
 pub mod presets;
 
 pub use audit::{audit_equivalence, audit_equivalence_with, AuditReport};
 pub use compare::{
     cluster_run_json, compare_runs_json, comparison_rate_table, run_and_summarize,
     run_and_summarize_with, AlgoRunSummary,
+};
+pub use minibatch::{
+    minibatch_run_json, run_minibatch, BatchSchedule, MiniBatchConfig, MiniBatchOutput, RoundLog,
 };
 pub use presets::{preset, Preset};

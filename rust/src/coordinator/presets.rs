@@ -6,6 +6,7 @@
 //! objects — is preserved.
 
 use crate::algo::ClusterConfig;
+use crate::coordinator::minibatch::MiniBatchConfig;
 use crate::corpus::{self, CorpusSpec};
 use crate::sparse::{build_dataset, Dataset};
 
@@ -36,6 +37,17 @@ impl Preset {
             k: self.k,
             seed,
             ..Default::default()
+        }
+    }
+
+    /// Default mini-batch / streaming configuration for this workload
+    /// ([`MiniBatchConfig::default_for`] the corpus size), with the
+    /// sampling seed following the corpus seed so a preset names one
+    /// deterministic stream end to end.
+    pub fn minibatch_config(&self) -> MiniBatchConfig {
+        MiniBatchConfig {
+            sample_seed: self.spec.seed,
+            ..MiniBatchConfig::default_for(self.spec.n_docs)
         }
     }
 }
@@ -119,6 +131,20 @@ mod tests {
         let a = preset("pubmed-like", 1, None).unwrap();
         let b = preset("pubmed-like", 1, Some(0.1)).unwrap();
         assert!(b.spec.n_docs < a.spec.n_docs);
+    }
+
+    #[test]
+    fn minibatch_defaults_are_sane() {
+        use crate::coordinator::minibatch::BatchSchedule;
+        for name in ["pubmed-like", "nyt-like", "tiny"] {
+            let p = preset(name, 1, None).unwrap();
+            let mb = p.minibatch_config();
+            assert!(mb.batch >= 1 && mb.batch <= p.spec.n_docs, "{name}");
+            assert_eq!(mb.schedule, BatchSchedule::Sequential);
+            assert_eq!(mb.decay, 1.0);
+            // Budget covers at least one epoch.
+            assert!(mb.max_rounds * mb.batch >= p.spec.n_docs, "{name}");
+        }
     }
 
     #[test]

@@ -403,6 +403,211 @@ pub fn update_means_with_rho_par(
     }
 }
 
+/// Mini-batch / streaming update step (§Stream): fold one batch of
+/// objects into the mean set with per-centroid **count-decay** learning
+/// rates, reusing the full-batch per-cluster routine so the degenerate
+/// configuration is *bit-exact* Lloyd.
+///
+/// * `runs` — the batch as maximal contiguous object-id ranges
+///   (ascending, disjoint; the driver's schedules produce these).
+/// * `changed[j]` — whether cluster `j` is rebuilt this batch. The
+///   driver sets it from batch membership changes (memoryless mode) or
+///   for every cluster with batch members (streaming mode).
+/// * `sizes` — full-assignment cluster sizes, maintained incrementally
+///   by the driver (copied into the returned [`MeanSet`]).
+/// * `counts[j]` — decayed batch mass `c_j`, updated in place:
+///   `c_j ← decay·c_j + m_j` with `m_j` the cluster's batch-member
+///   count; the learning rate is `η_j = m_j / c_j`. `decay = 1`
+///   is classic count decay (Sculley-style mini-batch k-means),
+///   `decay < 1` forgets old batches (drifting streams), and
+///   `decay = 0` is memoryless: `η_j = 1` exactly, so the batch mean
+///   replaces the centroid outright.
+///
+/// **Lloyd-parity contract.** When the batch covers every object and
+/// `η_j == 1` (first touch of `j`, or `decay == 0`), each rebuilt
+/// cluster runs the *same* floating-point operations in the same order
+/// as [`update_means_with_rho`]'s moving branch (member-order λ
+/// accumulation, touched-list norm, dense-scratch member ρ), reuse
+/// clusters take the same verbatim-copy path, and ρ entries outside the
+/// batch are carried from `prev_rho` — so the output (means, ρ,
+/// objective) is **bit-identical** to the full-batch update.
+/// `rust/tests/minibatch.rs` enforces this end to end. Any change to
+/// the per-cluster body here must be mirrored in
+/// [`update_means_with_rho`] / [`update_means_with_rho_par`] and vice
+/// versa (the existing sync contract extends to this function).
+///
+/// With `η < 1` the tentative vector is the spherical blend
+/// `(1−η)·μ_old + η·λ̂` (λ̂ the unit-normalized batch mean),
+/// re-normalized — centroids move toward fresh batches at a rate that
+/// decays as their accumulated mass grows.
+///
+/// **Cost floor.** Per call this does O(n) scalar work (the ρ carry
+/// and objective sum) plus O(nnz(M)) (untouched rows are cloned and the
+/// mean CSR is rebuilt) on top of the O(batch-terms) accumulation —
+/// only the *assignment* side of a round is strictly batch-scale. The
+/// floor is shared with the downstream index maintainers (their
+/// `PrevMeans` snapshot is O(nnz(M)) per round regardless), so fixing
+/// it requires incremental mean-CSR splicing too — a named ROADMAP
+/// open item, not attempted here.
+#[allow(clippy::too_many_arguments)]
+pub fn update_means_minibatch(
+    ds: &Dataset,
+    assign: &[u32],
+    runs: &[(usize, usize)],
+    k: usize,
+    prev: &MeanSet,
+    changed: &[bool],
+    prev_rho: &[f64],
+    sizes: &[u32],
+    counts: &mut [f64],
+    decay: f64,
+) -> UpdateOutput {
+    let n = ds.n();
+    let d = ds.d();
+    assert_eq!(assign.len(), n);
+    assert_eq!(prev.k(), k);
+    assert_eq!(counts.len(), k);
+    assert_eq!(prev_rho.len(), n);
+    debug_assert!(runs.windows(2).all(|w| w[0].1 <= w[1].0), "runs overlap");
+
+    // Bucket the batch members by cluster (counting sort over the runs,
+    // ascending object id — the member order the Lloyd-parity contract
+    // relies on).
+    let b: usize = runs.iter().map(|&(lo, hi)| hi - lo).sum();
+    let mut bsizes = vec![0u32; k];
+    for &(lo, hi) in runs {
+        for &a in &assign[lo..hi] {
+            bsizes[a as usize] += 1;
+        }
+    }
+    let mut starts = vec![0usize; k + 1];
+    for j in 0..k {
+        starts[j + 1] = starts[j] + bsizes[j] as usize;
+    }
+    let mut members = vec![0u32; b];
+    let mut cursor = starts.clone();
+    for &(lo, hi) in runs {
+        for i in lo..hi {
+            let a = assign[i] as usize;
+            members[cursor[a]] = i as u32;
+            cursor[a] += 1;
+        }
+    }
+
+    // ρ outside the batch is carried verbatim; batch members are
+    // overwritten below (reuse clusters keep the carried value — the
+    // same values the full-batch reuse path copies).
+    let mut rho = prev_rho.to_vec();
+    let mut moved = vec![false; k];
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); k];
+    let mut lambda = vec![0.0f64; d];
+    let mut touched: Vec<u32> = Vec::new();
+
+    for j in 0..k {
+        let mem = &members[starts[j]..starts[j + 1]];
+        if mem.is_empty() || !changed[j] {
+            // No batch members, or the driver ruled this cluster
+            // untouched: previous mean reused verbatim, invariant. The
+            // count-decay rule still applies with m_j = 0 — idle
+            // clusters forget, so a drifting stream re-adopts them at
+            // full learning rate instead of being damped by ancient
+            // mass. (With decay = 0 this zeroes the count, which the
+            // Lloyd-parity mode never reads.)
+            counts[j] *= decay;
+            let (ts, vs) = prev.m.row(j);
+            rows[j] = ts.iter().cloned().zip(vs.iter().cloned()).collect();
+            continue;
+        }
+
+        let m_j = mem.len() as f64;
+        let carried = decay * counts[j];
+        counts[j] = carried + m_j;
+        let eta = m_j / counts[j];
+
+        // Batch mean λ, accumulated in member order and normalized over
+        // the touched list in insertion order (identical to the
+        // full-batch routine).
+        touched.clear();
+        for &i in mem {
+            let (ts, vs) = ds.x.row(i as usize);
+            for (&t, &v) in ts.iter().zip(vs) {
+                if lambda[t as usize] == 0.0 {
+                    touched.push(t);
+                }
+                lambda[t as usize] += v;
+            }
+        }
+        let norm = touched
+            .iter()
+            .map(|&t| lambda[t as usize] * lambda[t as usize])
+            .sum::<f64>()
+            .sqrt();
+        if norm > 0.0 {
+            for &t in &touched {
+                lambda[t as usize] /= norm;
+            }
+        }
+        if carried != 0.0 {
+            // η < 1: spherical blend (1−η)·μ_old + η·λ̂, re-normalized.
+            // (η == 1 skips this block entirely — the bit-exact
+            // full-batch Lloyd path performs no extra operations.)
+            for &t in &touched {
+                lambda[t as usize] *= eta;
+            }
+            let (ots, ovs) = prev.m.row(j);
+            for (&t, &v) in ots.iter().zip(ovs) {
+                if lambda[t as usize] == 0.0 {
+                    touched.push(t);
+                }
+                lambda[t as usize] += (1.0 - eta) * v;
+            }
+            let bnorm = touched
+                .iter()
+                .map(|&t| lambda[t as usize] * lambda[t as usize])
+                .sum::<f64>()
+                .sqrt();
+            if bnorm > 0.0 {
+                for &t in &touched {
+                    lambda[t as usize] /= bnorm;
+                }
+            }
+        }
+        // Batch members' similarities to their (new) centroid while it
+        // is dense in scratch.
+        for &i in mem {
+            let (ts, vs) = ds.x.row(i as usize);
+            let mut s = 0.0;
+            for (&t, &v) in ts.iter().zip(vs) {
+                s += v * lambda[t as usize];
+            }
+            rho[i as usize] = s;
+        }
+        touched.sort_unstable();
+        let row: Vec<(u32, f64)> = touched
+            .iter()
+            .map(|&t| (t, lambda[t as usize]))
+            .filter(|&(_, v)| v != 0.0)
+            .collect();
+        for &t in &touched {
+            lambda[t as usize] = 0.0;
+        }
+        rows[j] = row;
+        moved[j] = true;
+    }
+
+    let m = CsrMatrix::from_rows(d, &rows);
+    let objective = rho.iter().sum();
+    UpdateOutput {
+        means: MeanSet {
+            m,
+            moved,
+            sizes: sizes.to_vec(),
+        },
+        rho,
+        objective,
+    }
+}
+
 /// Dot of CSR row `i` with a term-sorted sparse tuple list.
 fn dot_row_sparse(x: &CsrMatrix, i: usize, row: &[(u32, f64)]) -> f64 {
     let (ts, vs) = x.row(i);
@@ -555,6 +760,119 @@ mod tests {
         );
         assert_eq!(p2.means.m, s2.means.m);
         assert_eq!(p2.rho, s2.rho);
+    }
+
+    #[test]
+    fn minibatch_full_span_eta_one_is_bitwise_lloyd() {
+        use crate::corpus::{generate, tiny};
+        let c = generate(&tiny(91));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let k = 7usize;
+        let a0: Vec<u32> = (0..ds.n() as u32).map(|i| i % k as u32).collect();
+        let first = update_means(&ds, &a0, k, None, None);
+        // Second assignment perturbs some memberships.
+        let mut a1 = a0.clone();
+        for i in (0..ds.n()).step_by(9) {
+            a1[i] = (a1[i] + 1) % k as u32;
+        }
+        let changed = membership_changes(&a0, &a1, k);
+        let full = update_means_with_rho(
+            &ds,
+            &a1,
+            k,
+            Some(&first.means),
+            Some(&changed),
+            Some(&first.rho),
+        );
+        // Mini-batch over the full span with zero carried mass: must be
+        // bit-identical (means, ρ, objective) to the full-batch update.
+        let mut sizes = vec![0u32; k];
+        for &a in &a1 {
+            sizes[a as usize] += 1;
+        }
+        let mut counts = vec![0.0f64; k];
+        let mb = update_means_minibatch(
+            &ds,
+            &a1,
+            &[(0, ds.n())],
+            k,
+            &first.means,
+            &changed,
+            &first.rho,
+            &sizes,
+            &mut counts,
+            0.0,
+        );
+        assert_eq!(mb.means.m, full.means.m);
+        assert_eq!(mb.means.moved, full.means.moved);
+        assert_eq!(mb.means.sizes, full.means.sizes);
+        for (a, b) in mb.rho.iter().zip(&full.rho) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(mb.objective.to_bits(), full.objective.to_bits());
+        // Memoryless counts hold exactly the last batch's masses.
+        for j in 0..k {
+            let m_j = a1.iter().filter(|&&a| a as usize == j).count() as f64;
+            if changed[j] && m_j > 0.0 {
+                assert_eq!(counts[j], m_j);
+            }
+        }
+    }
+
+    #[test]
+    fn minibatch_blend_keeps_unit_norms_and_counts_decay() {
+        use crate::corpus::{generate, tiny};
+        let c = generate(&tiny(92));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let k = 6usize;
+        let assign: Vec<u32> = (0..ds.n() as u32).map(|i| (i * 7 % k as u32)).collect();
+        let seed = update_means(&ds, &assign, k, None, None);
+        let mut counts = vec![0.0f64; k];
+        let mut sizes = vec![0u32; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let changed = vec![true; k];
+        // Two successive batches over different windows; decay 0.5.
+        let mut prev = seed.means.clone();
+        let mut rho = seed.rho.clone();
+        for (lo, hi) in [(0usize, ds.n() / 2), (ds.n() / 4, ds.n())] {
+            let out = update_means_minibatch(
+                &ds,
+                &assign,
+                &[(lo, hi)],
+                k,
+                &prev,
+                &changed,
+                &rho,
+                &sizes,
+                &mut counts,
+                0.5,
+            );
+            for j in 0..k {
+                if out.means.m.row_nnz(j) > 0 {
+                    let norm = out.means.m.row_norm(j);
+                    assert!(
+                        (norm - 1.0).abs() < 1e-9,
+                        "cluster {j} not unit norm after blend: {norm}"
+                    );
+                }
+            }
+            prev = out.means;
+            rho = out.rho;
+        }
+        // Counts carry decayed history: after two overlapping batches
+        // every cluster with members in both windows holds
+        // 0.5·m1 + m2, strictly more than its second-batch mass.
+        for j in 0..k {
+            let m2 = assign[ds.n() / 4..]
+                .iter()
+                .filter(|&&a| a as usize == j)
+                .count() as f64;
+            if m2 > 0.0 && counts[j] > 0.0 {
+                assert!(counts[j] >= m2, "cluster {j}: count {} < {m2}", counts[j]);
+            }
+        }
     }
 
     #[test]

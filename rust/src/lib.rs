@@ -44,7 +44,12 @@
 //!   feature-value concentration, CPS).
 //! - [`metrics`] — Mult counters, CPR, PMU counters, NMI/CV.
 //! - [`coordinator`] — experiment orchestration, presets, equivalence
-//!   audits.
+//!   audits, and [`coordinator::minibatch`] — the mini-batch /
+//!   streaming driver (seeded-deterministic batches through
+//!   `Assigner::assign_span`, per-centroid count-decay updates, and
+//!   per-batch incremental index splicing; `batch == n` with
+//!   `decay == 0` is bit-exact full-batch Lloyd, enforced by
+//!   `rust/tests/minibatch.rs`).
 //! - [`runtime`] — executor for the AOT-compiled JAX/Pallas dense
 //!   cross-check kernels (`artifacts/*.hlo.txt`), gated behind the
 //!   **`pjrt`** cargo feature: the default build is offline-green with

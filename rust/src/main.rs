@@ -14,6 +14,13 @@
 //!   skm audit --preset tiny --algo all
 //!   skm cluster --input docword.pubmed.txt --max-docs 100000 --algo es-icp
 //!   skm cluster --preset nyt-like --algo es-icp --bench-json run.json
+//!   skm cluster --preset pubmed-like --algo es-icp --minibatch --batch-size 2048 --decay 1
+//!
+//! `--minibatch` switches `cluster` to the streaming driver
+//! (`coordinator::minibatch`): seeded-deterministic batches through the
+//! same assigners and incremental index maintenance, with
+//! `--batch-size`, `--schedule sequential|reservoir`, `--decay`,
+//! `--rounds`, and `--sample-seed` knobs.
 //!
 //! `--bench-json <path>` (cluster and compare) dumps the phase-level
 //! timing breakdown (gather / verify / update / rebuild), iteration
@@ -22,7 +29,8 @@
 use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::coordinator::compare::absolute_table;
 use skm::coordinator::{
-    audit_equivalence_with, cluster_run_json, compare_runs_json, comparison_rate_table, preset,
+    audit_equivalence_with, cluster_run_json, compare_runs_json, comparison_rate_table,
+    minibatch_run_json, preset, run_minibatch, BatchSchedule, MiniBatchConfig,
     run_and_summarize_with,
 };
 use skm::corpus::read_uci_bow_file;
@@ -124,6 +132,9 @@ fn cmd_cluster(args: &Args) {
             par.shard_size(ds.n())
         );
     }
+    if args.minibatch() {
+        return cmd_cluster_minibatch(args, &ds, &cfg, &par, kind);
+    }
     let out = run_clustering_with(kind, &ds, &cfg, &par);
     println!(
         "{}: {} iterations ({}), J={:.4}, total {:.2}s (assign {:.2}s / update {:.2}s), avg mult/iter {}, max mem {:.3} GB",
@@ -162,6 +173,85 @@ fn cmd_cluster(args: &Args) {
         }
     }
     write_bench_json(args, &cluster_run_json(&ds, &cfg, &out));
+}
+
+/// The `--minibatch` arm of `cluster`: batches through
+/// `coordinator::minibatch` with `--batch-size` / `--schedule` /
+/// `--decay` / `--rounds` / `--sample-seed` (defaults: 1/16 of the
+/// corpus floored at 256, sequential, 1.0, 64 epochs, the clustering
+/// seed). `--batch-size <n> --decay 0` is bit-exact full-batch Lloyd.
+fn cmd_cluster_minibatch(
+    args: &Args,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+    kind: AlgoKind,
+) {
+    let n = ds.n();
+    // One default policy, shared with Preset::minibatch_config.
+    let defaults = MiniBatchConfig::default_for(n);
+    let batch = match args.batch_size() {
+        0 => defaults.batch,
+        b => b.min(n),
+    };
+    let schedule =
+        BatchSchedule::parse(args.get_or("schedule", "sequential")).expect("--schedule");
+    let rounds_per_epoch = (n + batch - 1) / batch;
+    let mb = MiniBatchConfig {
+        batch,
+        schedule,
+        decay: args.decay(),
+        // The shared epoch budget, rescaled to the (possibly overridden)
+        // batch size.
+        max_rounds: args.get_parsed(
+            "rounds",
+            skm::coordinator::minibatch::DEFAULT_EPOCH_BUDGET * rounds_per_epoch,
+        ),
+        sample_seed: args.get_parsed("sample-seed", cfg.seed),
+    };
+    eprintln!(
+        "mini-batch mode: batch {} ({} rounds/epoch), schedule {}, decay {}",
+        mb.batch,
+        rounds_per_epoch,
+        mb.schedule.name(),
+        mb.decay
+    );
+    let out = run_minibatch(kind, ds, cfg, &mb, par);
+    println!(
+        "{} (mini-batch): {} rounds ({}), J={:.4}, {} objects processed, total {:.2}s (assign {:.2}s / update {:.2}s), max mem {:.3} GB",
+        kind.name(),
+        out.n_rounds(),
+        if out.converged { "quiet epoch" } else { "round cap" },
+        out.objective,
+        out.objects_processed(),
+        out.total_assign_secs() + out.total_update_secs(),
+        out.total_assign_secs(),
+        out.total_update_secs(),
+        out.max_mem_bytes as f64 / 1e9
+    );
+    if let (Some(t), Some(v)) = (out.t_th, out.v_th) {
+        println!(
+            "structural parameters: t_th={t} ({:.3}·D), v_th={v:.4}",
+            t as f64 / ds.d() as f64
+        );
+    }
+    if args.flag("log") {
+        println!("round  batch  mult          assign(s)  update(s)  rebuild(s)  changes  moving");
+        for l in &out.rounds {
+            println!(
+                "{:>5}  {:>5}  {:<12}  {:<9.4}  {:<9.4}  {:<10.4}  {:>7}  {:>6}",
+                l.round,
+                l.batch_len,
+                fmt_sig(l.counters.mult as f64),
+                l.assign_secs,
+                l.update_secs,
+                l.rebuild_secs,
+                l.changes,
+                l.n_moving
+            );
+        }
+    }
+    write_bench_json(args, &minibatch_run_json(ds, cfg, &mb, &out));
 }
 
 /// `--bench-json <path>`: dump the phase-level timing breakdown,

@@ -106,6 +106,27 @@ impl Args {
     pub fn shard(&self) -> usize {
         self.get_parsed::<usize>("shard", 0)
     }
+
+    /// `--minibatch` — run the mini-batch / streaming driver instead of
+    /// full-batch Lloyd (consumed by the `skm` binary; the driver lives
+    /// in `coordinator::minibatch`).
+    pub fn minibatch(&self) -> bool {
+        self.flag("minibatch")
+    }
+
+    /// `--batch-size N` — objects per mini-batch round (0 = the
+    /// workload's default, ~1/16 of the corpus floored at 256).
+    pub fn batch_size(&self) -> usize {
+        self.get_parsed::<usize>("batch-size", 0)
+    }
+
+    /// `--decay F` — count-decay forgetting factor in [0, 1]:
+    /// per batch `c_j ← decay·c_j + m_j`, learning rate `m_j / c_j`.
+    /// 1.0 = classic count decay; 0.0 = memoryless (with
+    /// `--batch-size n` this is bit-exact full-batch Lloyd).
+    pub fn decay(&self) -> f64 {
+        self.get_parsed::<f64>("decay", 1.0)
+    }
 }
 
 #[cfg(test)]
@@ -160,5 +181,17 @@ mod tests {
     fn malformed_number_panics() {
         let a = Args::parse_from(["x", "--k", "abc"]);
         let _ = a.get_parsed::<usize>("k", 0);
+    }
+
+    #[test]
+    fn minibatch_accessors() {
+        let a = Args::parse_from(["cluster", "--minibatch", "--batch-size", "512", "--decay=0.5"]);
+        assert!(a.minibatch());
+        assert_eq!(a.batch_size(), 512);
+        assert_eq!(a.decay(), 0.5);
+        let b = Args::parse_from(Vec::<String>::new());
+        assert!(!b.minibatch());
+        assert_eq!(b.batch_size(), 0);
+        assert_eq!(b.decay(), 1.0);
     }
 }

@@ -1,0 +1,276 @@
+//! Determinism and Lloyd-parity suite for the mini-batch / streaming
+//! driver (`coordinator::minibatch`), extending the `parallel.rs`
+//! patterns to batched execution:
+//!
+//! * **same seed + any thread count ⇒ identical results** — batch
+//!   selection is seed-deterministic and the batch assignment runs on
+//!   the bit-identical sharded engine, so assignments, per-round merged
+//!   `OpCounters`, change counts, and objective bits must agree across
+//!   `threads ∈ {2, 4, 7}` and the serial path;
+//! * **`batch == n`, `decay == 0` ⇒ bit-exact full-batch Lloyd** — the
+//!   degenerate configuration must reproduce
+//!   `algo::run_clustering_with` round for round: same assignment
+//!   trajectory, same counters, same objective bits, same convergence
+//!   round, for all 12 `AlgoKind`s.
+
+use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::coordinator::minibatch::{run_minibatch, BatchSchedule, MiniBatchConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::sparse::build_dataset;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("mb", c.n_terms, &c.docs)
+}
+
+/// (b) of the acceptance criteria: the memoryless full-span
+/// configuration IS full-batch Lloyd, bit for bit, for every algorithm
+/// kind — trajectory, counters, objective bits, convergence.
+#[test]
+fn batch_equals_n_reproduces_full_batch_lloyd_bit_exactly() {
+    let ds = dataset(340, 1200);
+    let cfg = ClusterConfig {
+        k: 10,
+        seed: 7,
+        ..Default::default()
+    };
+    let mb = MiniBatchConfig {
+        batch: ds.n(),
+        schedule: BatchSchedule::Sequential,
+        decay: 0.0,
+        max_rounds: cfg.max_iters,
+        sample_seed: 99,
+    };
+    for &kind in AlgoKind::all() {
+        let full = run_clustering_with(kind, &ds, &cfg, &ParConfig::serial());
+        let out = run_minibatch(kind, &ds, &cfg, &mb, &ParConfig::serial());
+        let tag = kind.name();
+        assert_eq!(out.assign, full.assign, "{tag}: assignments diverged");
+        assert_eq!(out.n_rounds(), full.iterations(), "{tag}: trajectory length");
+        assert_eq!(out.converged, full.converged, "{tag}: convergence");
+        for (a, b) in out.rounds.iter().zip(&full.logs) {
+            assert_eq!(a.round, b.iter, "{tag}");
+            assert_eq!(a.counters, b.counters, "{tag}: counters at round {}", a.round);
+            assert_eq!(a.changes, b.changes, "{tag}: changes at round {}", a.round);
+            assert_eq!(
+                a.objective.to_bits(),
+                b.objective.to_bits(),
+                "{tag}: objective bits at round {}",
+                a.round
+            );
+            assert_eq!(a.n_moving, b.n_moving, "{tag}: n_moving at round {}", a.round);
+            assert_eq!(a.batch_len, ds.n(), "{tag}");
+        }
+        assert_eq!(
+            out.objective.to_bits(),
+            full.objective.to_bits(),
+            "{tag}: final objective"
+        );
+        assert_eq!(out.t_th, full.t_th, "{tag}");
+        assert_eq!(out.v_th, full.v_th, "{tag}");
+    }
+}
+
+/// The parallel fallback of the same contract: batch == n under the
+/// sharded engine still reproduces the serial full-batch run (the span
+/// path shares run_sharded with assign_par).
+#[test]
+fn batch_equals_n_parallel_matches_serial_lloyd() {
+    let ds = dataset(300, 1300);
+    let cfg = ClusterConfig {
+        k: 9,
+        seed: 4,
+        ..Default::default()
+    };
+    let mb = MiniBatchConfig {
+        batch: ds.n(),
+        schedule: BatchSchedule::Sequential,
+        decay: 0.0,
+        max_rounds: cfg.max_iters,
+        sample_seed: 1,
+    };
+    for kind in [AlgoKind::EsIcp, AlgoKind::Ding] {
+        let full = run_clustering_with(kind, &ds, &cfg, &ParConfig::serial());
+        let out = run_minibatch(kind, &ds, &cfg, &mb, &ParConfig::with_threads(4));
+        assert_eq!(out.assign, full.assign, "{}", kind.name());
+        assert_eq!(
+            out.objective.to_bits(),
+            full.objective.to_bits(),
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+/// (a) of the acceptance criteria: seeded determinism across thread
+/// counts — assignments, merged OpCounters, change counts, and
+/// objective bits agree between serial and `threads ∈ {2, 4, 7}` for
+/// both schedules.
+#[test]
+fn minibatch_deterministic_across_thread_counts() {
+    let ds = dataset(390, 1400);
+    let cfg = ClusterConfig {
+        k: 11,
+        seed: 13,
+        ..Default::default()
+    };
+    for schedule in [BatchSchedule::Sequential, BatchSchedule::Reservoir] {
+        let mb = MiniBatchConfig {
+            batch: 96,
+            schedule,
+            decay: 1.0,
+            max_rounds: 40,
+            sample_seed: 21,
+        };
+        for kind in [
+            AlgoKind::Mivi,
+            AlgoKind::EsIcp,
+            AlgoKind::TaIcp,
+            AlgoKind::CsIcp,
+            // Ding carries per-object pruning state (bounds + round
+            // stamps) across rounds — the hardest case for batch
+            // determinism.
+            AlgoKind::Ding,
+        ] {
+            let serial = run_minibatch(kind, &ds, &cfg, &mb, &ParConfig::serial());
+            for threads in [2usize, 4, 7] {
+                let par =
+                    run_minibatch(kind, &ds, &cfg, &mb, &ParConfig::with_threads(threads));
+                let tag = format!(
+                    "{} schedule={} threads={threads}",
+                    kind.name(),
+                    schedule.name()
+                );
+                assert_eq!(par.assign, serial.assign, "{tag}: assignments");
+                assert_eq!(par.n_rounds(), serial.n_rounds(), "{tag}: rounds");
+                for (a, b) in par.rounds.iter().zip(&serial.rounds) {
+                    assert_eq!(
+                        a.counters, b.counters,
+                        "{tag}: merged counters at round {}",
+                        a.round
+                    );
+                    assert_eq!(a.changes, b.changes, "{tag}: round {}", a.round);
+                    assert_eq!(a.batch_len, b.batch_len, "{tag}: round {}", a.round);
+                    assert_eq!(
+                        a.objective.to_bits(),
+                        b.objective.to_bits(),
+                        "{tag}: objective at round {}",
+                        a.round
+                    );
+                }
+                assert_eq!(
+                    par.objective.to_bits(),
+                    serial.objective.to_bits(),
+                    "{tag}: final objective"
+                );
+            }
+        }
+    }
+}
+
+/// Reservoir sampling is a pure function of the sampling seed: the same
+/// seed replays the identical stream; a different seed draws different
+/// batches (visible in the per-round trajectories).
+#[test]
+fn reservoir_schedule_is_seed_deterministic() {
+    let ds = dataset(320, 1500);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 5,
+        ..Default::default()
+    };
+    let mb = |sample_seed: u64| MiniBatchConfig {
+        batch: 80,
+        schedule: BatchSchedule::Reservoir,
+        decay: 1.0,
+        max_rounds: 24,
+        sample_seed,
+    };
+    let a = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb(42), &ParConfig::serial());
+    let b = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb(42), &ParConfig::serial());
+    assert_eq!(a.assign, b.assign);
+    assert_eq!(a.n_rounds(), b.n_rounds());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.counters, y.counters, "round {}", x.round);
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits());
+    }
+    // A different sampling seed draws different batches: some round's
+    // trajectory must differ (counters are batch-content-dependent).
+    let c = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb(43), &ParConfig::serial());
+    let differs = a.n_rounds() != c.n_rounds()
+        || a.rounds
+            .iter()
+            .zip(&c.rounds)
+            .any(|(x, y)| x.counters != y.counters || x.changes != y.changes);
+    assert!(differs, "sampling seed had no observable effect");
+}
+
+/// Streaming bookkeeping invariants: epochs cover the corpus exactly
+/// under the sequential schedule (uneven final window included), the
+/// running objective is finite, and per-round batch sizes are bounded.
+#[test]
+fn sequential_epochs_cover_every_object() {
+    let ds = dataset(250, 1600);
+    let cfg = ClusterConfig {
+        k: 7,
+        seed: 2,
+        ..Default::default()
+    };
+    let b = 64usize; // 250 = 3·64 + 58
+    let rpe = (ds.n() + b - 1) / b;
+    let mb = MiniBatchConfig {
+        batch: b,
+        schedule: BatchSchedule::Sequential,
+        decay: 1.0,
+        max_rounds: 2 * rpe,
+        sample_seed: 3,
+    };
+    let out = run_minibatch(AlgoKind::TaIcp, &ds, &cfg, &mb, &ParConfig::serial());
+    assert!(out.n_rounds() >= rpe, "fewer rounds than one epoch");
+    let epoch1: usize = out.rounds[..rpe].iter().map(|r| r.batch_len).sum();
+    assert_eq!(epoch1, ds.n(), "first epoch must cover the corpus once");
+    if out.n_rounds() == 2 * rpe {
+        assert_eq!(out.objects_processed(), 2 * ds.n());
+    }
+    for l in &out.rounds {
+        assert!(l.batch_len >= 1 && l.batch_len <= b);
+        assert!(l.objective.is_finite());
+        assert!(l.mem_bytes > 0);
+    }
+}
+
+/// Mini-batch quality sanity: a streaming run's objective lands near
+/// the full-batch Lloyd objective (it cannot be bit-equal — batches
+/// approximate — but it must not collapse), and count-decay keeps the
+/// trajectory broadly improving.
+#[test]
+fn streaming_quality_tracks_full_batch() {
+    let ds = dataset(420, 1700);
+    let cfg = ClusterConfig {
+        k: 12,
+        seed: 9,
+        ..Default::default()
+    };
+    let full = run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &ParConfig::serial());
+    let b = ds.n() / 8;
+    let mb = MiniBatchConfig {
+        batch: b,
+        schedule: BatchSchedule::Reservoir,
+        decay: 1.0,
+        max_rounds: 40 * ((ds.n() + b - 1) / b),
+        sample_seed: 11,
+    };
+    let out = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb, &ParConfig::serial());
+    assert!(
+        out.objective >= 0.8 * full.objective,
+        "streaming objective {} too far below full-batch {}",
+        out.objective,
+        full.objective
+    );
+    let first = out.rounds.first().unwrap().objective;
+    let last = out.rounds.last().unwrap().objective;
+    assert!(last >= first, "objective regressed: {first} -> {last}");
+}

@@ -6,7 +6,7 @@ use skm::algo::{run_clustering, seed_means, AlgoKind, ClusterConfig};
 use skm::corpus::{generate, tiny, CorpusSpec};
 use skm::index::{membership_changes, update_means, InvIndex};
 use skm::metrics::{entropy, mutual_information, nmi};
-use skm::sparse::{build_dataset, dot_sorted, CsrMatrix};
+use skm::sparse::{build_dataset, build_dataset_bm25, dot_sorted, Bm25Params, CsrMatrix};
 use skm::util::rng::Pcg32;
 use skm::util::stats::{fast_exp, quantile_sorted};
 
@@ -42,6 +42,142 @@ fn prop_csr_roundtrip_row_access() {
                     "trial {trial} row {i} col {c}"
                 );
             }
+        }
+    }
+}
+
+/// CSR round trip: rows read back out of a matrix rebuild the identical
+/// matrix (structure and value bits), including empty rows and rows
+/// that arrived unsorted / with duplicate columns.
+#[test]
+fn prop_csr_rebuild_from_rows_is_identity() {
+    let mut rng = Pcg32::new(0xc5a_0071);
+    for trial in 0..25 {
+        let d = 4 + rng.gen_range(60) as usize;
+        let mut rows = random_rows(&mut rng, 15, d, 10);
+        rows.push(Vec::new()); // always include an empty row
+        let m = CsrMatrix::from_rows(d, &rows);
+        let readback: Vec<Vec<(u32, f64)>> = (0..m.n_rows())
+            .map(|i| {
+                let (ts, vs) = m.row(i);
+                ts.iter().cloned().zip(vs.iter().cloned()).collect()
+            })
+            .collect();
+        let rebuilt = CsrMatrix::from_rows(d, &readback);
+        assert_eq!(m, rebuilt, "trial {trial}: CSR round trip not identity");
+        assert_eq!(m.nnz(), rebuilt.nnz());
+    }
+}
+
+/// Random bag-of-words corpora: tf-idf weighting invariants — every
+/// stored weight is non-negative (idf = ln(N/df) ≥ 0, tf > 0), every
+/// row is unit-L2 (or exactly zero when all its terms are ubiquitous),
+/// and the relabeled document frequencies ascend.
+#[test]
+fn prop_tfidf_rows_nonnegative_and_unit_norm() {
+    let mut rng = Pcg32::new(0x7f1d_f01d);
+    for trial in 0..20 {
+        let n_terms = 10 + rng.gen_range(40) as usize;
+        let n_docs = 20 + rng.gen_range(60) as usize;
+        let docs: Vec<Vec<(u32, u32)>> = (0..n_docs)
+            .map(|_| {
+                let nnz = 1 + rng.gen_range(8) as usize;
+                rng.sample_distinct(n_terms, nnz.min(n_terms))
+                    .into_iter()
+                    .map(|t| (t as u32, 1 + rng.gen_range(9)))
+                    .collect()
+            })
+            .collect();
+        let ds = build_dataset("t", n_terms, &docs);
+        assert!(ds.df.windows(2).all(|w| w[0] <= w[1]), "trial {trial}: df order");
+        for i in 0..ds.n() {
+            let (_, vs) = ds.x.row(i);
+            assert!(
+                vs.iter().all(|&v| v >= 0.0 && v.is_finite()),
+                "trial {trial} row {i}: negative/non-finite tf-idf weight"
+            );
+            let norm = ds.x.row_norm(i);
+            assert!(
+                (norm - 1.0).abs() < 1e-9 || norm == 0.0,
+                "trial {trial} row {i}: norm {norm}"
+            );
+        }
+    }
+}
+
+/// Same invariants for the BM25 weighting (strictly positive weights —
+/// the +1 idf variant never vanishes), plus agreement of the df
+/// relabeling with tf-idf's (both sort by (df, original id)).
+#[test]
+fn prop_bm25_rows_positive_and_unit_norm() {
+    let mut rng = Pcg32::new(0xb2_5b25);
+    for trial in 0..15 {
+        let n_terms = 12 + rng.gen_range(30) as usize;
+        let n_docs = 25 + rng.gen_range(50) as usize;
+        let docs: Vec<Vec<(u32, u32)>> = (0..n_docs)
+            .map(|_| {
+                let nnz = 1 + rng.gen_range(6) as usize;
+                rng.sample_distinct(n_terms, nnz.min(n_terms))
+                    .into_iter()
+                    .map(|t| (t as u32, 1 + rng.gen_range(7)))
+                    .collect()
+            })
+            .collect();
+        let bm = build_dataset_bm25("t", n_terms, &docs, Bm25Params::default());
+        let tf = build_dataset("t", n_terms, &docs);
+        assert!(bm.df.windows(2).all(|w| w[0] <= w[1]), "trial {trial}");
+        assert_eq!(bm.df, tf.df, "trial {trial}: df relabeling disagrees");
+        assert_eq!(bm.orig_term, tf.orig_term, "trial {trial}");
+        for i in 0..bm.n() {
+            let (_, vs) = bm.x.row(i);
+            assert!(
+                vs.iter().all(|&v| v > 0.0 && v.is_finite()),
+                "trial {trial} row {i}: nonpositive BM25 weight"
+            );
+            let norm = bm.x.row_norm(i);
+            assert!((norm - 1.0).abs() < 1e-9, "trial {trial} row {i}: {norm}");
+        }
+    }
+}
+
+/// Feature-extraction edge cases: empty documents produce zero rows (no
+/// NaNs anywhere downstream of normalization), single-term documents
+/// normalize to a unit spike, and duplicate term entries within one
+/// document merge to the summed count's weight.
+#[test]
+fn prop_build_dataset_edge_rows() {
+    // Empty + single-term rows.
+    let docs = vec![
+        vec![],                    // empty document
+        vec![(3u32, 5u32)],        // single term
+        vec![(1, 2), (3, 1)],      // keeps term 3 from having df == N
+        vec![(1, 1)],
+    ];
+    let ds = build_dataset("edge", 6, &docs);
+    let (ts0, vs0) = ds.x.row(0);
+    assert!(ts0.is_empty() && vs0.is_empty(), "empty doc must give an empty row");
+    assert_eq!(ds.x.row_norm(0), 0.0);
+    let (ts1, vs1) = ds.x.row(1);
+    assert_eq!(ts1.len(), 1, "single-term doc keeps exactly one entry");
+    assert!((vs1[0] - 1.0).abs() < 1e-12, "unit spike after normalization");
+    for i in 0..ds.n() {
+        let (_, vs) = ds.x.row(i);
+        assert!(vs.iter().all(|v| v.is_finite()));
+    }
+
+    // Duplicate term ids within a document sum their counts' weights:
+    // [(t,2),(t,3)] must weigh like [(t,5)] (same idf, summed tf).
+    let dup = vec![vec![(0u32, 2u32), (0, 3), (2, 1)], vec![(1, 1), (2, 2)]];
+    let merged = vec![vec![(0u32, 5u32), (2, 1)], vec![(1, 1), (2, 2)]];
+    let a = build_dataset("dup", 4, &dup);
+    let b = build_dataset("merged", 4, &merged);
+    assert_eq!(a.df, b.df, "df must dedup within a document");
+    for i in 0..a.n() {
+        let (ta, va) = a.x.row(i);
+        let (tb, vb) = b.x.row(i);
+        assert_eq!(ta, tb, "row {i}: structure");
+        for (x, y) in va.iter().zip(vb) {
+            assert!((x - y).abs() < 1e-12, "row {i}: {x} vs {y}");
         }
     }
 }
