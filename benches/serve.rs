@@ -1,0 +1,310 @@
+//! Serving-layer benchmark: QPS and latency percentiles of the online
+//! query router (`serve::Router`) over a clustered corpus.
+//!
+//! Sections:
+//!   * **correctness gates** (before anything is timed): the pruned
+//!     router's top-p equals the brute-force dense scan (ids + score
+//!     bits) on a query subsample, and the sharded `serve_batch` output
+//!     is bitwise-equal to the serial loop on the full load.
+//!   * **routing**: pruned routing vs brute-force all-means scan,
+//!     queries/second.
+//!   * **serving (route + retrieve)**: single-thread QPS with latency
+//!     percentiles, then batch-sharded QPS across worker threads.
+//!
+//! Emits a machine-readable baseline to `$SKM_BENCH_JSON` (default
+//! `BENCH_serve.json`). CI's bench-smoke job regenerates and validates
+//! it; the batch-vs-serial speedup is reported (with a warning when a
+//! noisy runner fails to beat 1x) — bitwise equality is the hard gate.
+
+mod common;
+
+use common::{bench_preset, header};
+use skm::algo::{run_clustering_with, AlgoKind, ParConfig};
+use skm::serve::{
+    latency_stats, push_top, serve_batch, ClusteredCorpus, Query, Router, RouterParams,
+};
+use skm::util::json::Json;
+use skm::util::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let (p, ds, seed) = bench_preset("pubmed-like");
+    let cfg = p.config(seed);
+    header(
+        "serve",
+        "online nearest-centroid query serving (QPS / latency)",
+        &ds,
+        cfg.k,
+    );
+    let k = cfg.k;
+    let par_env = ParConfig::from_env();
+
+    // --- cluster + freeze -------------------------------------------------
+    let t0 = Instant::now();
+    let out = run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &par_env);
+    println!(
+        "clustered: {} iterations in {:.2}s (J={:.4})",
+        out.iterations(),
+        t0.elapsed().as_secs_f64(),
+        out.objective
+    );
+    let snap = ClusteredCorpus::from_output(ds, &out, k);
+    let params = RouterParams::estimate_for(&snap, &cfg);
+    let router = Router::new(&snap, params);
+    println!(
+        "router: t_th={} ({:.3}·D), v_th={:.4}, index {:.2} MB over snapshot {:.2} MB",
+        router.t_th(),
+        router.t_th() as f64 / snap.ds.d() as f64,
+        router.v_th(),
+        router.mem_bytes() as f64 / 1e6,
+        snap.mem_bytes() as f64 / 1e6
+    );
+
+    // --- query load: sampled corpus docs + random sparse queries ----------
+    let n_queries = std::env::var("SKM_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512usize)
+        .min(snap.ds.n());
+    let mut rng = Pcg32::new(seed ^ 0x5e4e);
+    let mut queries: Vec<Query> = rng
+        .sample_distinct(snap.ds.n(), n_queries * 3 / 4)
+        .into_iter()
+        .map(|i| Query::from_row(&snap.ds, i))
+        .collect();
+    let d = snap.ds.d();
+    while queries.len() < n_queries {
+        let nnz = 4 + rng.gen_range(24) as usize;
+        let pairs: Vec<(u32, f64)> = rng
+            .sample_distinct(d, nnz.min(d))
+            .into_iter()
+            .map(|t| (t as u32, 0.05 + rng.next_f64()))
+            .collect();
+        queries.push(Query::from_pairs(d, &pairs));
+    }
+    let sd = p.serve_defaults();
+    let (top_p, top_k) = (sd.top_p, sd.top_k);
+    println!(
+        "query load: {} queries, top-p {top_p}, top-k {top_k}",
+        queries.len()
+    );
+
+    // --- correctness gate 1: pruned routing == brute force ----------------
+    let brute_route = |q: &Query, pp: usize| -> Vec<(u32, f64)> {
+        let mut top: Vec<(f64, u32)> = Vec::new();
+        for j in 0..snap.k {
+            let (mts, mvs) = snap.means.m.row(j);
+            let sc = skm::sparse::dot_sorted(q.ids(), q.vals(), mts, mvs);
+            push_top(&mut top, pp, sc, j as u32);
+        }
+        top.into_iter().map(|(s, j)| (j, s)).collect()
+    };
+    for q in queries.iter().take(64) {
+        let (got, _) = router.route(q, top_p);
+        let want = brute_route(q, top_p);
+        assert_eq!(got.len(), want.len(), "routing soundness: length");
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.0, b.0, "routing soundness: centroid id");
+            assert_eq!(
+                a.1.to_bits(),
+                b.1.to_bits(),
+                "routing soundness: score bits"
+            );
+        }
+    }
+    println!("correctness: pruned routing bit-matches brute force (64 queries)");
+
+    // --- correctness gate 2: sharded batch == serial, bit for bit ---------
+    let batch_threads = if par_env.is_parallel() {
+        par_env.threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 8)
+    };
+    let (serial_results, serial_counters) =
+        serve_batch(&router, &queries, top_p, top_k, &ParConfig::serial());
+    let (batch_results, batch_counters) = serve_batch(
+        &router,
+        &queries,
+        top_p,
+        top_k,
+        &ParConfig::with_threads(batch_threads),
+    );
+    assert_eq!(serial_counters, batch_counters, "batch merged counters");
+    for (a, b) in serial_results.iter().zip(&batch_results) {
+        assert_eq!(a.centroids.len(), b.centroids.len());
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "batch centroid score bits");
+        }
+        for (x, y) in a.hits.iter().zip(&b.hits) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "batch hit score bits");
+        }
+    }
+    let bitwise_equal = true; // reaching here means every assert held
+    println!("correctness: {batch_threads}-thread serve_batch bit-matches serial");
+    let avg_candidates = serial_counters.candidates as f64 / queries.len().max(1) as f64;
+    println!(
+        "pruning: avg candidates/query {avg_candidates:.1} of K={k} (CPR {:.4})",
+        avg_candidates / k as f64
+    );
+
+    // --- routing throughput: pruned vs brute force ------------------------
+    let reps = 3usize;
+    let best_of = |mut f: Box<dyn FnMut() -> f64>| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            best = best.min(f());
+        }
+        best
+    };
+    let routed_secs = best_of(Box::new(|| {
+        let t = Instant::now();
+        let mut acc = 0u32;
+        for q in &queries {
+            let (r, _) = router.route(q, top_p);
+            acc ^= r[0].0;
+        }
+        std::hint::black_box(acc);
+        t.elapsed().as_secs_f64()
+    }));
+    let brute_secs = best_of(Box::new(|| {
+        let t = Instant::now();
+        let mut acc = 0u32;
+        for q in &queries {
+            let r = brute_route(q, top_p);
+            acc ^= r[0].0;
+        }
+        std::hint::black_box(acc);
+        t.elapsed().as_secs_f64()
+    }));
+    let route_qps = queries.len() as f64 / routed_secs;
+    let brute_qps = queries.len() as f64 / brute_secs;
+    println!(
+        "routing: pruned {route_qps:.0} QPS vs brute-force {brute_qps:.0} QPS ({:.2}x)",
+        route_qps / brute_qps.max(1e-12)
+    );
+
+    // --- serving latency (route + retrieve), single thread ----------------
+    let mut lat = vec![0.0f64; queries.len()];
+    let serial_secs = best_of(Box::new(|| {
+        let t = Instant::now();
+        for (q, slot) in queries.iter().zip(lat.iter_mut()) {
+            let tq = Instant::now();
+            std::hint::black_box(router.retrieve(q, top_p, top_k).hits.len());
+            *slot = tq.elapsed().as_secs_f64();
+        }
+        t.elapsed().as_secs_f64()
+    }));
+    let stats = latency_stats(&lat);
+    let serial_qps = queries.len() as f64 / serial_secs;
+    println!(
+        "serving (1 thread): {serial_qps:.0} QPS — latency mean {:.1} us, p50 {:.1}, p90 {:.1}, p99 {:.1}, max {:.1}",
+        stats.mean_s * 1e6,
+        stats.p50_s * 1e6,
+        stats.p90_s * 1e6,
+        stats.p99_s * 1e6,
+        stats.max_s * 1e6
+    );
+
+    // --- batch-sharded serving --------------------------------------------
+    let batch_secs = best_of(Box::new(|| {
+        let t = Instant::now();
+        let (r, _) = serve_batch(
+            &router,
+            &queries,
+            top_p,
+            top_k,
+            &ParConfig::with_threads(batch_threads),
+        );
+        std::hint::black_box(r.len());
+        t.elapsed().as_secs_f64()
+    }));
+    let batch_qps = queries.len() as f64 / batch_secs;
+    let speedup = batch_qps / serial_qps.max(1e-12);
+    println!(
+        "serving ({batch_threads} threads): {batch_qps:.0} QPS ({speedup:.2}x vs 1 thread, results bitwise-equal)"
+    );
+    if speedup < 1.0 {
+        println!(
+            "WARNING: batch-sharded QPS fell below single-thread on this runner ({speedup:.2}x)"
+        );
+    }
+
+    // --- machine-readable baseline ----------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        (
+            "note",
+            Json::str("regenerate with: cargo bench --bench serve"),
+        ),
+        (
+            "dataset",
+            Json::obj(vec![
+                ("preset", Json::str("pubmed-like")),
+                ("name", Json::str(snap.ds.name.clone())),
+                ("n", Json::UInt(snap.ds.n() as u64)),
+                ("d", Json::UInt(snap.ds.d() as u64)),
+                ("k", Json::UInt(k as u64)),
+                ("seed", Json::UInt(seed)),
+            ]),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("t_th", Json::UInt(router.t_th() as u64)),
+                ("v_th", Json::Num(router.v_th())),
+                ("top_p", Json::UInt(top_p as u64)),
+                ("top_k", Json::UInt(top_k as u64)),
+                ("index_mem_bytes", Json::UInt(router.mem_bytes() as u64)),
+            ]),
+        ),
+        (
+            "pruning",
+            Json::obj(vec![
+                ("avg_candidates_per_query", Json::Num(avg_candidates)),
+                ("candidate_fraction", Json::Num(avg_candidates / k as f64)),
+            ]),
+        ),
+        (
+            "routing",
+            Json::obj(vec![
+                ("pruned_qps", Json::Num(route_qps)),
+                ("brute_force_qps", Json::Num(brute_qps)),
+                ("speedup", Json::Num(route_qps / brute_qps.max(1e-12))),
+            ]),
+        ),
+        (
+            "serial",
+            Json::obj(vec![
+                ("queries", Json::UInt(queries.len() as u64)),
+                ("qps", Json::Num(serial_qps)),
+                (
+                    "latency_us",
+                    Json::obj(vec![
+                        ("mean", Json::Num(stats.mean_s * 1e6)),
+                        ("p50", Json::Num(stats.p50_s * 1e6)),
+                        ("p90", Json::Num(stats.p90_s * 1e6)),
+                        ("p99", Json::Num(stats.p99_s * 1e6)),
+                        ("max", Json::Num(stats.max_s * 1e6)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "batch",
+            Json::obj(vec![
+                ("threads", Json::UInt(batch_threads as u64)),
+                ("qps", Json::Num(batch_qps)),
+                ("speedup_vs_serial", Json::Num(speedup)),
+                ("bitwise_equal", Json::Bool(bitwise_equal)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("SKM_BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&path, json.render_pretty()).expect("write bench json");
+    println!("[wrote {path}]");
+}

@@ -1,0 +1,117 @@
+//! Online serving demo: cluster a PubMed-like corpus, freeze it into a
+//! `serve::ClusteredCorpus`, build the pruned query router over the
+//! structured mean index, and answer a few queries — corpus documents,
+//! a raw bag-of-words query embedded through the frozen tf-idf space,
+//! and an out-of-vocabulary query.
+//!
+//! Run: `cargo run --release --example serve`
+
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig, ParConfig};
+use skm::corpus::{generate, pubmed_like};
+use skm::serve::{serve_batch, ClusteredCorpus, Query, Router, RouterParams, ServeDefaults};
+use skm::sparse::build_dataset;
+use std::time::Instant;
+
+fn main() {
+    // ~4100 documents with PubMed-like statistics.
+    let spec = pubmed_like(5e-4, 42);
+    let corpus = generate(&spec);
+    let ds = build_dataset(&corpus.name, corpus.n_terms, &corpus.docs);
+    let k = (ds.n() / 100).max(8);
+    let cfg = ClusterConfig {
+        k,
+        seed: 42,
+        ..Default::default()
+    };
+    println!("corpus {}: N={} D={} K={k}", ds.name, ds.n(), ds.d());
+
+    // Cluster and freeze.
+    let out = run_clustering(AlgoKind::EsIcp, &ds, &cfg);
+    println!(
+        "clustered: {} iterations, J={:.4}",
+        out.iterations(),
+        out.objective
+    );
+    let snap = ClusteredCorpus::from_output(ds, &out, k);
+
+    // The router reuses the paper's machinery on the query side: the
+    // Section-V estimator picks (t_th, v_th) over the frozen means, and
+    // every query runs the ES-pruned gather + exact verification.
+    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let sd = ServeDefaults::default_for(k);
+    println!(
+        "router: t_th={} ({:.3}·D), v_th={:.4} — serving top-{} clusters / top-{} docs",
+        router.t_th(),
+        router.t_th() as f64 / snap.ds.d() as f64,
+        router.v_th(),
+        sd.top_p,
+        sd.top_k
+    );
+
+    // Query 1–3: corpus documents as queries (batch-served, 2 threads).
+    let doc_ids = [7usize, 191, 1033];
+    let queries: Vec<Query> = doc_ids
+        .iter()
+        .map(|&i| Query::from_row(&snap.ds, i))
+        .collect();
+    let t0 = Instant::now();
+    let (results, counters) = serve_batch(
+        &router,
+        &queries,
+        sd.top_p,
+        sd.top_k,
+        &ParConfig::with_threads(2),
+    );
+    println!(
+        "\nserved {} doc-queries in {:.2} ms (avg {:.1} candidate centroids of K={k})",
+        results.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        counters.candidates as f64 / results.len() as f64
+    );
+    for ((&i, q), r) in doc_ids.iter().zip(&queries).zip(&results) {
+        let (c0, s0) = r.centroids[0];
+        println!(
+            "doc {i} (cluster {}): routed to cluster {c0} (cos {s0:.4}); best hits {:?}",
+            snap.assign[i],
+            r.hits
+                .iter()
+                .take(3)
+                .map(|&(d, s)| format!("{d}@{s:.3}"))
+                .collect::<Vec<_>>()
+        );
+        // A document whose own cluster is scanned can never be beaten
+        // below its self-similarity.
+        if r.centroids.iter().any(|&(c, _)| c == snap.assign[i]) {
+            let self_score: f64 = q.vals().iter().map(|v| v * v).sum();
+            assert!(
+                r.hits[0].1 >= self_score - 1e-12,
+                "doc {i}: best hit below self-similarity"
+            );
+        }
+    }
+
+    // Query 4: a raw bag-of-words query in the ORIGINAL vocabulary,
+    // embedded through the frozen tf-idf space (the `skm serve
+    // --queries file.txt` path). Reuse a corpus document's raw counts.
+    let raw = &corpus.docs[500];
+    let embedded = snap.embed_bow(raw);
+    let r = router.retrieve(&embedded, sd.top_p, 3);
+    println!(
+        "\nembedded bag-of-words query ({} raw terms -> {} features): top hit doc {} at cos {:.4} (source doc 500)",
+        raw.len(),
+        embedded.nnz(),
+        r.hits[0].0,
+        r.hits[0].1
+    );
+
+    // Query 5: out-of-vocabulary terms only — embeds to the zero
+    // vector and routes deterministically with zero scores.
+    let oov = Query::from_pairs(snap.ds.d(), &[(snap.ds.d() as u32 + 9, 3.0)]);
+    assert!(oov.is_zero());
+    let (routed, _) = router.route(&oov, 2);
+    println!(
+        "OOV-only query: zero vector, deterministically routed to clusters {:?} with zero scores",
+        routed.iter().map(|&(c, _)| c).collect::<Vec<_>>()
+    );
+    assert!(routed.iter().all(|&(_, s)| s == 0.0));
+}

@@ -8,6 +8,7 @@
 use crate::algo::ClusterConfig;
 use crate::coordinator::minibatch::MiniBatchConfig;
 use crate::corpus::{self, CorpusSpec};
+use crate::serve::ServeDefaults;
 use crate::sparse::{build_dataset, Dataset};
 
 /// A named experimental workload.
@@ -49,6 +50,14 @@ impl Preset {
             sample_seed: self.spec.seed,
             ..MiniBatchConfig::default_for(self.spec.n_docs)
         }
+    }
+
+    /// Default serving knobs for this workload's K — the preset-level
+    /// convenience over [`ServeDefaults::default_for`], which is the
+    /// one shared policy (the `skm serve` subcommand applies it to its
+    /// own `--k`, which may differ from the preset's).
+    pub fn serve_defaults(&self) -> ServeDefaults {
+        ServeDefaults::default_for(self.k)
     }
 }
 
@@ -145,6 +154,15 @@ mod tests {
             // Budget covers at least one epoch.
             assert!(mb.max_rounds * mb.batch >= p.spec.n_docs, "{name}");
         }
+    }
+
+    #[test]
+    fn serve_defaults_track_k() {
+        let p = preset("pubmed-like", 1, None).unwrap();
+        let sd = p.serve_defaults();
+        assert_eq!(sd, crate::serve::ServeDefaults::default_for(p.k));
+        assert!(sd.top_p >= 1 && sd.top_p <= 8);
+        assert_eq!(sd.top_k, 10);
     }
 
     #[test]

@@ -9,20 +9,37 @@
 //! docID termID count
 //! ...
 //! ```
-//! IDs in the file are 1-based; we convert to 0-based.
+//! IDs in the file are 1-based; we convert to 0-based. Blank lines and
+//! comment lines (starting with `#` or `%`, as hand-annotated dumps and
+//! MatrixMarket-adjacent tools produce) are skipped anywhere in the
+//! file, including before the three headers.
 
 use crate::corpus::synth::BowCorpus;
 use anyhow::{bail, Context, Result};
 use std::io::BufRead;
+
+/// Next non-blank, non-comment line, or `None` at EOF. Returns the
+/// line as read (callers trim) — no copy beyond the one `lines()`
+/// already made, which matters at real-corpus scale (~10⁸ triples).
+fn next_data_line<B: BufRead>(lines: &mut std::io::Lines<B>) -> Result<Option<String>> {
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        return Ok(Some(line));
+    }
+    Ok(None)
+}
 
 /// Parse a UCI bag-of-words stream. `max_docs` optionally truncates the
 /// corpus (useful for scaled-down runs of the real data).
 pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> Result<BowCorpus> {
     let mut lines = std::io::BufReader::new(reader).lines();
     let mut header = |what: &str| -> Result<usize> {
-        let line = lines
-            .next()
-            .with_context(|| format!("missing {what} header"))??;
+        let line = next_data_line(&mut lines)?
+            .with_context(|| format!("missing {what} header"))?;
         line.trim()
             .parse::<usize>()
             .with_context(|| format!("bad {what} header: {line:?}"))
@@ -34,12 +51,8 @@ pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> Resu
 
     let mut docs: Vec<Vec<(u32, u32)>> = vec![Vec::new(); keep];
     let mut seen = 0usize;
-    for line in lines {
-        let line = line?;
+    while let Some(line) = next_data_line(&mut lines)? {
         let t = line.trim();
-        if t.is_empty() {
-            continue;
-        }
         let mut it = t.split_whitespace();
         let (a, b, c) = (
             it.next().context("triple: doc")?,
@@ -99,6 +112,15 @@ mod tests {
         let c = read_uci_bow(SAMPLE.as_bytes(), Some(2)).unwrap();
         assert_eq!(c.n_docs(), 2);
         assert_eq!(c.docs[1], vec![(1, 4), (4, 1)]);
+    }
+
+    #[test]
+    fn skips_comment_and_blank_lines() {
+        let annotated = "# hand-annotated dump\n% matrixmarket-style too\n3\n\n5\n6\n# triples follow\n1 1 2\n1 3 1\n2 2 4\n2 5 1\n\n3 1 1\n3 4 2\n";
+        let c = read_uci_bow(annotated.as_bytes(), None).unwrap();
+        let plain = read_uci_bow(SAMPLE.as_bytes(), None).unwrap();
+        assert_eq!(c.docs, plain.docs);
+        assert_eq!(c.n_terms, plain.n_terms);
     }
 
     #[test]

@@ -37,6 +37,17 @@ impl MeanSet {
         self.m.avg_row_nnz()
     }
 
+    /// Mark every centroid invariant. Used by the serving layer
+    /// ([`crate::serve`]) to freeze a finished clustering's means: a
+    /// snapshot's centroids never move again, so the two-block index
+    /// built over them has empty moving blocks and every query runs the
+    /// full (branch-free) scan path.
+    pub fn freeze(&mut self) {
+        for m in &mut self.moved {
+            *m = false;
+        }
+    }
+
     /// Number of centroids the incremental index maintainers must touch
     /// relative to a previous build's moved flags: moving now (values
     /// changed) or moving then (must relocate between the moving and

@@ -56,6 +56,13 @@
 //!   a stub error path, `--features pjrt` compiles a native CPU
 //!   executor for the two known dense-block artifacts (no Python/XLA
 //!   toolchain required either way).
+//! - [`serve`] — the online serving layer: [`serve::ClusteredCorpus`]
+//!   freezes a finished clustering, [`serve::Router`] routes sparse
+//!   queries to their top-p nearest centroids through the structured
+//!   mean index (ES-pruned, exact scores, bit-identical to brute force
+//!   — `rust/tests/serve.rs`), second-stage retrieval scans only the
+//!   routed clusters' members, and [`serve::serve_batch`] shards query
+//!   batches over the same scoped-thread engine as assignment.
 //! - [`util`] — offline-friendly RNG/CLI/IO/timing utilities.
 
 // The hot-path idiom here is deliberate index arithmetic over parallel
@@ -76,6 +83,7 @@ pub mod estparams;
 pub mod index;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod ucs;
 pub mod util;

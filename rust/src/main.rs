@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   cluster    run one algorithm on a preset or UCI corpus
 //!   compare    run several algorithms and print the paper-style tables
+//!   serve      cluster a corpus, then answer nearest-centroid queries
 //!   audit      verify an algorithm reproduces MIVI's solution
 //!   ucs        print the universal-characteristics report
 //!   estparams  run the structural-parameter estimator and report (t_th, v_th)
@@ -11,6 +12,8 @@
 //! Examples:
 //!   skm cluster --preset pubmed-like --algo es-icp --seed 42
 //!   skm compare --preset nyt-like --algos mivi,icp,es-icp --seed 1
+//!   skm serve --preset pubmed-like --top-p 4 --top-k 10 --threads 8
+//!   skm serve --preset nyt-like --queries queries.docword.txt --bench-json out.json
 //!   skm audit --preset tiny --algo all
 //!   skm cluster --input docword.pubmed.txt --max-docs 100000 --algo es-icp
 //!   skm cluster --preset nyt-like --algo es-icp --bench-json run.json
@@ -22,9 +25,18 @@
 //! `--batch-size`, `--schedule sequential|reservoir`, `--decay`,
 //! `--rounds`, and `--sample-seed` knobs.
 //!
-//! `--bench-json <path>` (cluster and compare) dumps the phase-level
-//! timing breakdown (gather / verify / update / rebuild), iteration
-//! count, and operation counters as JSON.
+//! `serve` clusters the corpus (any `--algo`, or `--minibatch` streaming),
+//! freezes the result into a `serve::ClusteredCorpus`, builds the pruned
+//! query router over the structured mean index, and serves a query batch:
+//! `--queries <docword file>` embeds raw bag-of-words queries into the
+//! frozen tf-idf space, otherwise `--n-queries` synthetic queries are
+//! sampled from the corpus (`--query-seed`). `--top-p`/`--top-k` size the
+//! answer, `--t-th`/`--v-th` override the estimated router parameters,
+//! and `--threads` shards the batch (bit-identical to serial).
+//!
+//! `--bench-json <path>` (cluster, compare, and serve) dumps the
+//! machine-readable report (phase timings / counters, or the per-query
+//! serving answers with QPS) as JSON.
 
 use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::coordinator::compare::absolute_table;
@@ -36,10 +48,15 @@ use skm::coordinator::{
 use skm::corpus::read_uci_bow_file;
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{update_means, ObjInvIndex};
+use skm::serve::{
+    serve_batch, serve_run_json, ClusteredCorpus, Query, Router, RouterParams, ServeDefaults,
+};
 use skm::sparse::{build_dataset, Dataset};
 use skm::ucs;
 use skm::util::cli::Args;
 use skm::util::io::fmt_sig;
+use skm::util::rng::Pcg32;
+use std::time::Instant;
 
 fn load_dataset(args: &Args) -> Dataset {
     if let Some(path) = args.get("input") {
@@ -103,6 +120,7 @@ fn main() {
     match args.subcommand() {
         Some("cluster") => cmd_cluster(&args),
         Some("compare") => cmd_compare(&args),
+        Some("serve") => cmd_serve(&args),
         Some("audit") => cmd_audit(&args),
         Some("ucs") => cmd_ucs(&args),
         Some("estparams") => cmd_estparams(&args),
@@ -112,7 +130,7 @@ fn main() {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: skm <cluster|compare|audit|ucs|estparams|info> [--preset NAME] [--algo NAME] [--threads N] ..."
+                "usage: skm <cluster|compare|serve|audit|ucs|estparams|info> [--preset NAME] [--algo NAME] [--threads N] ..."
             );
             std::process::exit(2);
         }
@@ -175,6 +193,33 @@ fn cmd_cluster(args: &Args) {
     write_bench_json(args, &cluster_run_json(&ds, &cfg, &out));
 }
 
+/// The one `--minibatch` knob semantics, shared by `cluster` and
+/// `serve` (so the two subcommands cannot drift): `--batch-size`
+/// defaults to the workload policy and clamps to N, `--schedule`
+/// defaults to sequential, the epoch budget is rescaled to the
+/// (possibly overridden) batch size unless `--rounds` pins it, and
+/// `--sample-seed` falls back to the clustering seed.
+fn minibatch_config_for(args: &Args, n: usize, cfg: &ClusterConfig) -> MiniBatchConfig {
+    // One default policy, shared with Preset::minibatch_config.
+    let defaults = MiniBatchConfig::default_for(n);
+    let batch = match args.batch_size() {
+        0 => defaults.batch,
+        b => b.min(n),
+    };
+    let rounds_per_epoch = (n + batch - 1) / batch;
+    MiniBatchConfig {
+        batch,
+        schedule: BatchSchedule::parse(args.get_or("schedule", "sequential"))
+            .expect("--schedule"),
+        decay: args.decay(),
+        max_rounds: args.get_parsed(
+            "rounds",
+            skm::coordinator::minibatch::DEFAULT_EPOCH_BUDGET * rounds_per_epoch,
+        ),
+        sample_seed: args.get_parsed("sample-seed", cfg.seed),
+    }
+}
+
 /// The `--minibatch` arm of `cluster`: batches through
 /// `coordinator::minibatch` with `--batch-size` / `--schedule` /
 /// `--decay` / `--rounds` / `--sample-seed` (defaults: 1/16 of the
@@ -188,27 +233,8 @@ fn cmd_cluster_minibatch(
     kind: AlgoKind,
 ) {
     let n = ds.n();
-    // One default policy, shared with Preset::minibatch_config.
-    let defaults = MiniBatchConfig::default_for(n);
-    let batch = match args.batch_size() {
-        0 => defaults.batch,
-        b => b.min(n),
-    };
-    let schedule =
-        BatchSchedule::parse(args.get_or("schedule", "sequential")).expect("--schedule");
-    let rounds_per_epoch = (n + batch - 1) / batch;
-    let mb = MiniBatchConfig {
-        batch,
-        schedule,
-        decay: args.decay(),
-        // The shared epoch budget, rescaled to the (possibly overridden)
-        // batch size.
-        max_rounds: args.get_parsed(
-            "rounds",
-            skm::coordinator::minibatch::DEFAULT_EPOCH_BUDGET * rounds_per_epoch,
-        ),
-        sample_seed: args.get_parsed("sample-seed", cfg.seed),
-    };
+    let mb = minibatch_config_for(args, n, cfg);
+    let rounds_per_epoch = (n + mb.batch - 1) / mb.batch;
     eprintln!(
         "mini-batch mode: batch {} ({} rounds/epoch), schedule {}, decay {}",
         mb.batch,
@@ -299,6 +325,133 @@ fn cmd_compare(args: &Args) {
     println!("Rates relative to {reference} (cf. paper Tables IV/VI):");
     println!("{}", comparison_rate_table(&summaries, reference).render());
     write_bench_json(args, &compare_runs_json(&ds, &cfg, &outs));
+}
+
+/// The `serve` subcommand: cluster the corpus, freeze it into a serving
+/// snapshot, build the pruned query router, and answer a query batch.
+fn cmd_serve(args: &Args) {
+    let ds = load_dataset(args);
+    let cfg = config_for(args, &ds);
+    let par = par_for(args);
+    let kind = AlgoKind::parse(args.get_or("algo", "es-icp")).expect("--algo");
+    let k = cfg.k;
+    describe(&ds, k);
+
+    // 1. Cluster (full-batch Lloyd, or the streaming driver under
+    //    --minibatch) and freeze the result.
+    eprintln!("clustering with {} ...", kind.name());
+    let snap = if args.minibatch() {
+        // Same knobs and defaults as `cluster --minibatch` — one
+        // shared helper, so the two subcommands cannot drift.
+        let mb = minibatch_config_for(args, ds.n(), &cfg);
+        let out = run_minibatch(kind, &ds, &cfg, &mb, &par);
+        eprintln!(
+            "  {} rounds, J={:.4} (streaming)",
+            out.n_rounds(),
+            out.objective
+        );
+        ClusteredCorpus::from_minibatch(ds, &out, k)
+    } else {
+        let out = run_clustering_with(kind, &ds, &cfg, &par);
+        eprintln!("  {} iterations, J={:.4}", out.iterations(), out.objective);
+        ClusteredCorpus::from_output(ds, &out, k)
+    };
+
+    // 2. The router: --t-th / --v-th each independently override the
+    //    Section-V estimator (estimation is skipped only when both are
+    //    given).
+    let params = match (args.get("t-th"), args.get("v-th")) {
+        (Some(t), Some(v)) => RouterParams {
+            t_th: t.parse().expect("--t-th"),
+            v_th: v.parse().expect("--v-th"),
+        },
+        (None, None) => RouterParams::estimate_for(&snap, &cfg),
+        (t, v) => {
+            let est = RouterParams::estimate_for(&snap, &cfg);
+            RouterParams {
+                t_th: t.map(|s| s.parse().expect("--t-th")).unwrap_or(est.t_th),
+                v_th: v.map(|s| s.parse().expect("--v-th")).unwrap_or(est.v_th),
+            }
+        }
+    };
+    let router = Router::new(&snap, params);
+    let defaults = ServeDefaults::default_for(k);
+    let top_p = match args.top_p() {
+        0 => defaults.top_p,
+        p => p,
+    };
+    let top_k = args.top_k();
+
+    // 3. Queries: a raw bag-of-words file embedded into the frozen
+    //    feature space, or synthetic queries sampled from the corpus.
+    let queries: Vec<Query> = if let Some(path) = args.get("queries") {
+        let qc = read_uci_bow_file(path, None).expect("read query docword file");
+        qc.docs.iter().map(|doc| snap.embed_bow(doc)).collect()
+    } else {
+        let nq = args
+            .get_parsed::<usize>("n-queries", 64)
+            .clamp(1, snap.ds.n());
+        let mut rng = Pcg32::new(args.get_parsed("query-seed", cfg.seed ^ 0x5e4e));
+        rng.sample_distinct(snap.ds.n(), nq)
+            .into_iter()
+            .map(|i| Query::from_row(&snap.ds, i))
+            .collect()
+    };
+    eprintln!(
+        "serving {} queries: top-p {top_p}, top-k {top_k}, router (t_th={} = {:.3}·D, v_th={:.4})",
+        queries.len(),
+        router.t_th(),
+        router.t_th() as f64 / snap.ds.d() as f64,
+        router.v_th()
+    );
+
+    // 4. Serve the batch (sharded; bit-identical to serial).
+    let t0 = Instant::now();
+    let (results, counters) = serve_batch(&router, &queries, top_p, top_k, &par);
+    let wall = t0.elapsed().as_secs_f64();
+    let nq = results.len().max(1) as f64;
+    println!(
+        "served {} queries in {wall:.3}s — {} QPS ({} thread{}), avg candidates/query {:.1} of K={k} (CPR {:.4}), avg exact sims/query {:.1}",
+        results.len(),
+        fmt_sig(results.len() as f64 / wall.max(1e-12)),
+        par.threads,
+        if par.threads == 1 { "" } else { "s" },
+        counters.candidates as f64 / nq,
+        counters.candidates as f64 / (nq * k as f64),
+        counters.exact_sims as f64 / nq
+    );
+    if args.flag("log") {
+        for (qi, r) in results.iter().enumerate() {
+            let cents: Vec<String> = r
+                .centroids
+                .iter()
+                .map(|&(c, s)| format!("{c}:{s:.4}"))
+                .collect();
+            let hits: Vec<String> = r
+                .hits
+                .iter()
+                .map(|&(i, s)| format!("{i}:{s:.4}"))
+                .collect();
+            println!(
+                "query {qi}: clusters [{}]  docs [{}]",
+                cents.join(" "),
+                hits.join(" ")
+            );
+        }
+    }
+    write_bench_json(
+        args,
+        &serve_run_json(
+            &snap,
+            &router,
+            top_p,
+            top_k,
+            par.threads,
+            &results,
+            wall,
+            None,
+        ),
+    );
 }
 
 fn cmd_audit(args: &Args) {

@@ -1,0 +1,145 @@
+//! Batch query serving on the sharded `std::thread::scope` engine.
+//!
+//! Query serving is embarrassingly parallel over queries, exactly like
+//! the assignment step is over objects ([`crate::algo::par`]): every
+//! query's computation reads only the shared frozen [`Router`] (index +
+//! means + corpus, all immutable for the whole batch) and writes only
+//! its own result slot. The engine here mirrors `par::run_sharded`:
+//! contiguous query shards on a shared work queue, workers pulling
+//! shards as they finish, results landing in **per-query slots** so the
+//! output order — and every score bit — is identical to the serial loop
+//! regardless of which worker served which shard. Merged counters are
+//! integer sums in fixed query order. `rust/tests/serve.rs` enforces
+//! bit-identity across thread counts.
+//!
+//! Workers share the router's [`crate::algo::par::ScratchPool`]: each
+//! checkout hands a worker a pooled K-length accumulator that stays hot
+//! in its cache across the shard, and scratch contents are fully reset
+//! per query, so pooling never affects results.
+
+use crate::algo::ParConfig;
+use crate::metrics::counters::OpCounters;
+use crate::serve::router::{Router, ServeResult};
+use crate::serve::snapshot::Query;
+
+/// Serve a batch of queries: per-query results in query order (each the
+/// exact [`Router::retrieve`] answer) plus the merged counters.
+/// Bit-identical to the serial loop for any `threads`/`shard`
+/// combination.
+pub fn serve_batch(
+    router: &Router<'_>,
+    queries: &[Query],
+    top_p: usize,
+    top_k: usize,
+    par: &ParConfig,
+) -> (Vec<ServeResult>, OpCounters) {
+    let n = queries.len();
+    let mut slots: Vec<Option<ServeResult>> = Vec::new();
+    slots.resize_with(n, || None);
+
+    if !par.is_parallel() || n == 0 {
+        // One scratch for the whole batch (contents reset per query).
+        let mut s = router.checkout_scratch();
+        for (q, slot) in queries.iter().zip(slots.iter_mut()) {
+            *slot = Some(router.retrieve_with(&mut s, q, top_p, top_k));
+        }
+        router.checkin_scratch(s);
+    } else {
+        let shard = par.shard_size(n);
+        let n_shards = (n + shard - 1) / shard;
+        let threads = par.threads.min(n_shards).max(1);
+        {
+            // Shared work queue, exactly as in `par::run_sharded`:
+            // scheduling varies run to run, the per-slot writes do not.
+            let work: Vec<(&[Query], &mut [Option<ServeResult>])> = queries
+                .chunks(shard)
+                .zip(slots.chunks_mut(shard))
+                .collect();
+            let queue = std::sync::Mutex::new(work);
+            let queue = &queue;
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(move || loop {
+                        let item = queue.lock().unwrap().pop();
+                        match item {
+                            Some((qs, out)) => {
+                                // Scratch checked out per SHARD, not per
+                                // query: the K-length accumulator stays
+                                // hot in this worker's cache and the
+                                // pool mutexes are off the per-query
+                                // path (scratch is reset per query, so
+                                // results are unaffected).
+                                let mut s = router.checkout_scratch();
+                                for (q, slot) in qs.iter().zip(out.iter_mut()) {
+                                    *slot =
+                                        Some(router.retrieve_with(&mut s, q, top_p, top_k));
+                                }
+                                router.checkin_scratch(s);
+                            }
+                            None => break,
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    let results: Vec<ServeResult> = slots
+        .into_iter()
+        .map(|r| r.expect("query slot left unserved"))
+        .collect();
+    let mut total = OpCounters::new();
+    for r in &results {
+        total.add(&r.counters);
+    }
+    (results, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::serve::router::RouterParams;
+    use crate::serve::snapshot::ClusteredCorpus;
+    use crate::sparse::build_dataset;
+
+    /// Unit-scope smoke: parallel batch output equals the serial loop in
+    /// order and bits. The full cross-thread suite (2/4/7 threads,
+    /// estimated params, adversarial queries) lives in
+    /// `rust/tests/serve.rs`.
+    #[test]
+    fn batch_smoke_matches_serial() {
+        let c = generate(&tiny(31));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let n = ds.n();
+        let assign: Vec<u32> = (0..n).map(|i| (i % 5) as u32).collect();
+        let snap = ClusteredCorpus::from_assignment(ds, assign, 5);
+        let router = Router::new(&snap, RouterParams::exact());
+        let queries: Vec<Query> = (0..17).map(|i| Query::from_row(&snap.ds, i * 3)).collect();
+        let (serial, sc) = serve_batch(&router, &queries, 2, 4, &ParConfig::serial());
+        let (par, pc) = serve_batch(
+            &router,
+            &queries,
+            2,
+            4,
+            &ParConfig {
+                threads: 3,
+                shard: 4,
+            },
+        );
+        assert_eq!(sc, pc);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.centroids.len(), b.centroids.len());
+            for (x, y) in a.centroids.iter().zip(&b.centroids) {
+                assert_eq!(x.0, y.0);
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+            for (x, y) in a.hits.iter().zip(&b.hits) {
+                assert_eq!(x.0, y.0);
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+            assert_eq!(a.counters, b.counters);
+        }
+    }
+}

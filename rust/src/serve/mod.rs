@@ -1,0 +1,72 @@
+//! The online serving layer (§Serve tentpole): nearest-centroid query
+//! routing and document retrieval over a finished clustering.
+//!
+//! Everything before this module clusters a corpus and discards the
+//! result; this is the piece that answers queries against it — the
+//! ROADMAP's traffic story. The pipeline:
+//!
+//! 1. [`ClusteredCorpus`] ([`snapshot`]) freezes a finished clustering:
+//!    corpus + assignment + recomputed unit-norm means (every centroid
+//!    marked invariant) + per-cluster member posting lists + the
+//!    inverse term relabeling for embedding raw bag-of-words queries.
+//! 2. [`Router`] ([`router`]) builds the three-region structured index
+//!    over the frozen means and routes a sparse query to its top-p
+//!    nearest centroids with **exact** cosine scores — the ES filter's
+//!    folded upper-bound gather (through the [`crate::algo::kernel`]
+//!    micro-kernels and the dense Region-1 tail) prunes the candidate
+//!    set, and the result is bit-identical to a brute-force scan over
+//!    all means (`rust/tests/serve.rs`).
+//! 3. [`Router::retrieve`] scans only the routed clusters' member
+//!    documents for the exact top-k nearest documents.
+//! 4. [`serve_batch`] ([`batch`]) shards query batches over
+//!    `std::thread::scope` exactly like the assignment engine
+//!    ([`crate::algo::par`]) — per-query result slots keep the output
+//!    (and every score bit) identical to the serial loop for any
+//!    thread count.
+//!
+//! Plumbing: the `skm serve` subcommand (cluster → snapshot → route a
+//! query file or synthetic batch, `--top-p`/`--top-k`/`--threads`),
+//! `benches/serve.rs` (QPS / latency percentiles, bitwise-verified
+//! batch vs serial), and `examples/serve.rs`.
+
+pub mod batch;
+pub mod report;
+pub mod router;
+pub mod snapshot;
+
+pub use batch::serve_batch;
+pub use report::{latency_stats, serve_run_json, LatencyStats};
+pub use router::{push_top, Router, RouterParams, ServeResult, UB_GUARD};
+pub use snapshot::{ClusteredCorpus, Query};
+
+/// Default serving knobs for a K-cluster workload: route to roughly one
+/// cluster per 32 (clamped to `[1, 8]`) and return ten documents — the
+/// usual recall/latency middle ground for cluster-pruned retrieval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeDefaults {
+    pub top_p: usize,
+    pub top_k: usize,
+}
+
+impl ServeDefaults {
+    pub fn default_for(k: usize) -> Self {
+        Self {
+            top_p: ((k + 31) / 32).clamp(1, 8),
+            top_k: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_scale_with_k() {
+        assert_eq!(ServeDefaults::default_for(1).top_p, 1);
+        assert_eq!(ServeDefaults::default_for(32).top_p, 1);
+        assert_eq!(ServeDefaults::default_for(64).top_p, 2);
+        assert_eq!(ServeDefaults::default_for(10_000).top_p, 8);
+        assert_eq!(ServeDefaults::default_for(64).top_k, 10);
+    }
+}

@@ -1,0 +1,224 @@
+//! Machine-readable serving reports: the `skm serve --bench-json` shape
+//! and the latency-percentile helper shared with `benches/serve.rs`.
+
+use crate::metrics::counters::OpCounters;
+use crate::serve::router::{Router, ServeResult};
+use crate::serve::snapshot::ClusteredCorpus;
+use crate::util::json::Json;
+
+/// Latency summary over per-query wall times (seconds in, reported in
+/// microseconds by [`serve_run_json`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// Compute latency percentiles (nearest-rank over the sorted samples).
+/// Empty input yields zeros.
+pub fn latency_stats(samples: &[f64]) -> LatencyStats {
+    if samples.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Nearest-rank percentile: the ceil(q·N)-th smallest sample.
+    let pick = |q: f64| {
+        let idx = ((q * sorted.len() as f64).ceil() as usize).saturating_sub(1);
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    LatencyStats {
+        mean_s: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        p50_s: pick(0.50),
+        p90_s: pick(0.90),
+        p99_s: pick(0.99),
+        max_s: *sorted.last().unwrap(),
+    }
+}
+
+impl LatencyStats {
+    fn json_us(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::Num(self.mean_s * 1e6)),
+            ("p50", Json::Num(self.p50_s * 1e6)),
+            ("p90", Json::Num(self.p90_s * 1e6)),
+            ("p99", Json::Num(self.p99_s * 1e6)),
+            ("max", Json::Num(self.max_s * 1e6)),
+        ])
+    }
+}
+
+/// Machine-readable report for one served batch: dataset/router shape,
+/// throughput, cost counters, optional latency percentiles, and the
+/// per-query top-p/top-k answers. Consumed by `skm serve --bench-json`.
+pub fn serve_run_json(
+    snap: &ClusteredCorpus,
+    router: &Router<'_>,
+    top_p: usize,
+    top_k: usize,
+    threads: usize,
+    results: &[ServeResult],
+    wall_secs: f64,
+    latency: Option<&LatencyStats>,
+) -> Json {
+    let mut counters = OpCounters::new();
+    for r in results {
+        counters.add(&r.counters);
+    }
+    let nq = results.len().max(1) as f64;
+    let per_query: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                (
+                    "centroids",
+                    Json::Arr(
+                        r.centroids
+                            .iter()
+                            .map(|&(c, s)| {
+                                Json::obj(vec![
+                                    ("cluster", Json::UInt(c as u64)),
+                                    ("score", Json::Num(s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "hits",
+                    Json::Arr(
+                        r.hits
+                            .iter()
+                            .map(|&(i, s)| {
+                                Json::obj(vec![
+                                    ("doc", Json::UInt(i as u64)),
+                                    ("score", Json::Num(s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("mode", Json::str("serve")),
+        (
+            "dataset",
+            Json::obj(vec![
+                ("name", Json::str(snap.ds.name.clone())),
+                ("n", Json::UInt(snap.ds.n() as u64)),
+                ("d", Json::UInt(snap.ds.d() as u64)),
+                ("k", Json::UInt(snap.k as u64)),
+            ]),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("t_th", Json::UInt(router.t_th() as u64)),
+                ("v_th", Json::Num(router.v_th())),
+                ("index_mem_bytes", Json::UInt(router.mem_bytes() as u64)),
+                ("snapshot_mem_bytes", Json::UInt(snap.mem_bytes() as u64)),
+            ]),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("top_p", Json::UInt(top_p as u64)),
+                ("top_k", Json::UInt(top_k as u64)),
+                ("threads", Json::UInt(threads as u64)),
+            ]),
+        ),
+        ("queries", Json::UInt(results.len() as u64)),
+        ("wall_secs", Json::Num(wall_secs)),
+        (
+            "qps",
+            Json::Num(results.len() as f64 / wall_secs.max(1e-12)),
+        ),
+        (
+            "pruning",
+            Json::obj(vec![
+                (
+                    "avg_candidates_per_query",
+                    Json::Num(counters.candidates as f64 / nq),
+                ),
+                (
+                    "candidate_fraction",
+                    Json::Num(counters.candidates as f64 / (nq * snap.k.max(1) as f64)),
+                ),
+            ]),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("mult", Json::UInt(counters.mult)),
+                ("candidates", Json::UInt(counters.candidates)),
+                ("exact_sims", Json::UInt(counters.exact_sims)),
+            ]),
+        ),
+        (
+            "latency_us",
+            latency.map(|l| l.json_us()).unwrap_or(Json::Null),
+        ),
+        ("per_query", Json::Arr(per_query)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::serve::router::RouterParams;
+    use crate::serve::serve_batch;
+    use crate::serve::snapshot::Query;
+    use crate::sparse::build_dataset;
+
+    #[test]
+    fn latency_stats_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let l = latency_stats(&samples);
+        assert_eq!(l.p50_s, 50.0);
+        assert_eq!(l.p90_s, 90.0);
+        assert_eq!(l.p99_s, 99.0);
+        assert_eq!(l.max_s, 100.0);
+        assert!((l.mean_s - 50.5).abs() < 1e-12);
+        assert_eq!(latency_stats(&[]).max_s, 0.0);
+    }
+
+    #[test]
+    fn serve_json_has_expected_fields() {
+        let c = generate(&tiny(55));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let n = ds.n();
+        let assign: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let snap = ClusteredCorpus::from_assignment(ds, assign, 4);
+        let router = Router::new(&snap, RouterParams::exact());
+        let queries: Vec<Query> = (0..5).map(|i| Query::from_row(&snap.ds, i)).collect();
+        let (results, _) = serve_batch(
+            &router,
+            &queries,
+            2,
+            3,
+            &crate::algo::ParConfig::serial(),
+        );
+        let j = serve_run_json(&snap, &router, 2, 3, 1, &results, 0.5, None);
+        let text = j.render();
+        for key in [
+            "\"mode\"",
+            "\"serve\"",
+            "\"router\"",
+            "\"t_th\"",
+            "\"qps\"",
+            "\"pruning\"",
+            "\"candidate_fraction\"",
+            "\"per_query\"",
+            "\"centroids\"",
+            "\"hits\"",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,439 @@
+//! Nearest-centroid query routing over the structured mean index, plus
+//! the exact second-stage document retrieval.
+//!
+//! ## Routing = one-object assignment, generalized to top-p
+//!
+//! The paper's structural insight applies verbatim on the query side: a
+//! query is just an object vector assigned to its nearest centroid(s),
+//! so the same three-region machinery that accelerates the assignment
+//! step routes queries. The [`Router`] builds an [`EsIndex`] over the
+//! snapshot's **frozen** means (every centroid invariant — the moving
+//! blocks are empty and every scan is the branch-free full pass) and
+//! scores a query in two phases, reusing the [`crate::algo::kernel`]
+//! micro-kernels end to end:
+//!
+//! 1. **Gather** (Regions 1 + 2): the folded upper-bound accumulation of
+//!    the ES filter — ρ starts at the Region-3 mass
+//!    `y = v_th · Σ_{s ≥ t_th} u_s`, Region 1 gathers through
+//!    [`crate::index::InvIndex::gather_term`] (dense-tail FMA rows
+//!    included), Region 2 through the unrolled unchecked scatter-add.
+//!    After this phase
+//!    `ρ_j` is an upper bound on the exact cosine `⟨q, μ_j⟩` (for
+//!    Region-3 terms `u·v ≤ u·v_th` since `0 ≤ v < v_th` and `u ≥ 0`).
+//! 2. **Verify**: take the `p` centroids with the largest upper bounds
+//!    as seeds, compute their exact cosines, and let `τ` be the worst
+//!    seed cosine — a provable lower bound on the true p-th best score
+//!    (any p exact scores bound the p-th order statistic from below).
+//!    Every centroid with `ρ_j < τ − ε` is pruned: its exact score is
+//!    `≤ ρ_j < τ ≤` p-th best, so it cannot enter the top-p. Survivors
+//!    are re-scored exactly and the final top-p selected by
+//!    `(score desc, id asc)`.
+//!
+//! ## Exactness contract
+//!
+//! Exact scores are sparse merges in ascending term order
+//! ([`dot_sorted_count`], the same float sequence as
+//! [`crate::sparse::dot_sorted`]) — **bit-identical** to a dense
+//! brute-force scan `Σ_s u_s · μ_j[s]` by the `+0.0`-padding argument of
+//! [`crate::algo::kernel`]'s docs (query and mean values are
+//! nonnegative, so accumulators never reach `-0.0`). Combined with the
+//! total `(score desc, id asc)` order, the routed top-p list — ids *and*
+//! score bits — equals the brute-force answer; `rust/tests/serve.rs`
+//! fuzzes this across seeds, K, p, and degenerate queries. The guard
+//! band [`UB_GUARD`] absorbs the float-rounding daylight between the
+//! folded upper-bound accumulation and the exact merges (≈1e-16 per op;
+//! the band only ever *adds* survivors, never drops one).
+//!
+//! The second stage, [`Router::retrieve`], scans only the routed
+//! clusters' member documents with the same exact merge and returns the
+//! top-k by the same total order — exact over the routed subset, also
+//! pinned by `rust/tests/serve.rs` against a naive restricted scan.
+//!
+//! Per-query scratch (the K-length ρ accumulator and the seed list)
+//! lives in a [`ScratchPool`], so steady-state routing allocates only
+//! the returned result vectors.
+
+use crate::algo::kernel;
+use crate::algo::par::ScratchPool;
+use crate::algo::ClusterConfig;
+use crate::estparams::EstConfig;
+use crate::index::{EsIndex, ObjInvIndex, PartialIndex};
+use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
+use crate::serve::snapshot::{ClusteredCorpus, Query};
+use std::mem::size_of;
+
+/// Absolute guard band on the upper-bound prune (cosine scores live in
+/// `[0, 1]`): a centroid survives when `ub ≥ τ − UB_GUARD`. Large
+/// enough to absorb any float-rounding shortfall of the folded gather
+/// against the exact merge, small enough to admit essentially no extra
+/// survivors.
+pub const UB_GUARD: f64 = 1e-9;
+
+/// Push `(score, id)` into a bounded best-first list ordered by
+/// `(score desc, id asc)` — the serving layer's one total order, shared
+/// by routing, retrieval, and the test oracles. `top` stays sorted;
+/// `cap == 0` keeps it empty.
+#[inline]
+pub fn push_top(top: &mut Vec<(f64, u32)>, cap: usize, score: f64, id: u32) {
+    if cap == 0 {
+        return;
+    }
+    let better = |s: f64, i: u32| s > score || (s == score && i < id);
+    if top.len() == cap {
+        let (ws, wi) = top[cap - 1];
+        if better(ws, wi) {
+            return;
+        }
+        top.pop();
+    }
+    let pos = top.partition_point(|&(s, i)| better(s, i));
+    top.insert(pos, (score, id));
+}
+
+/// Sparse·sparse dot in strict ascending-term merge order — the float
+/// sequence of [`crate::sparse::dot_sorted`] — returning the
+/// multiplication count for the cost accounting.
+#[inline]
+fn dot_sorted_count(ta: &[u32], va: &[f64], tb: &[u32], vb: &[f64]) -> (f64, u64) {
+    let (mut i, mut j, mut acc, mut m) = (0usize, 0usize, 0.0f64, 0u64);
+    while i < ta.len() && j < tb.len() {
+        match ta[i].cmp(&tb[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                acc += va[i] * vb[j];
+                m += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    (acc, m)
+}
+
+/// Structural parameters of the routing index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouterParams {
+    /// Region-1/2 term split (clamped to `D` at build).
+    pub t_th: usize,
+    /// Region-2 value threshold (must be positive; `1.0` with
+    /// `t_th == D` is the exact MIVI-style full gather).
+    pub v_th: f64,
+}
+
+impl RouterParams {
+    /// The degenerate parameters: everything in Region 1, no pruning
+    /// upper bound — an exact full gather (useful as a baseline and for
+    /// tiny K where the filter cannot pay off).
+    pub fn exact() -> Self {
+        Self {
+            t_th: usize::MAX,
+            v_th: 1.0,
+        }
+    }
+
+    /// Estimate `(t_th, v_th)` for the snapshot with the Section-V
+    /// estimator over the frozen means and ρ (the same machinery the
+    /// ES-ICP assigner runs at iterations 2–3). Falls back to
+    /// [`RouterParams::exact`] for `K < 4`, where the probability model
+    /// degenerates (same guard as the assigner).
+    pub fn estimate_for(snap: &ClusteredCorpus, cfg: &ClusterConfig) -> Self {
+        let d = snap.ds.d();
+        if snap.k < 4 {
+            return Self::exact();
+        }
+        let s_min = ((d as f64 * cfg.s_min_frac) as usize).min(d.saturating_sub(1));
+        let xp = ObjInvIndex::build(&snap.ds.x, s_min);
+        let est = crate::estparams::estimate(
+            &snap.ds,
+            &snap.means,
+            &snap.rho,
+            &xp,
+            &EstConfig {
+                s_min,
+                n_candidates: cfg.n_vth_candidates,
+                fixed_t: None,
+                fixed_v: None,
+                max_sample_objects: 4_000,
+            },
+        );
+        Self {
+            t_th: est.t_th,
+            v_th: est.v_th,
+        }
+    }
+}
+
+/// Pooled per-worker scratch: the K-length folded upper-bound
+/// accumulator and the seed list. Checked out once per shard by
+/// [`crate::serve::serve_batch`] (so the accumulator stays hot in one
+/// worker's cache across its whole shard, like the assignment engine's
+/// scratch) and once per call by the public one-shot entry points.
+/// Contents are fully reset per query, so pooling never affects
+/// results.
+#[derive(Default)]
+pub(crate) struct RouteScratch {
+    rho: Vec<f64>,
+    seeds: Vec<(f64, u32)>,
+}
+
+impl RouteScratch {
+    fn mem_bytes(&self) -> usize {
+        self.rho.capacity() * size_of::<f64>()
+            + self.seeds.capacity() * size_of::<(f64, u32)>()
+    }
+}
+
+/// One served query: routed centroids, retrieved documents (empty when
+/// only routing was requested), and the cost counters.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// Top-p `(cluster id, exact cosine)`, best first.
+    pub centroids: Vec<(u32, f64)>,
+    /// Top-k `(document id, exact cosine)` over the routed clusters'
+    /// members, best first.
+    pub hits: Vec<(u32, f64)>,
+    pub counters: OpCounters,
+}
+
+/// The online query router. See the module docs.
+pub struct Router<'a> {
+    snap: &'a ClusteredCorpus,
+    params: RouterParams,
+    idx: EsIndex,
+    scratch: ScratchPool<RouteScratch>,
+}
+
+impl<'a> Router<'a> {
+    /// Build the routing index over the snapshot's frozen means.
+    pub fn new(snap: &'a ClusteredCorpus, params: RouterParams) -> Self {
+        assert!(
+            params.v_th > 0.0 && params.v_th.is_finite(),
+            "v_th must be positive and finite (got {})",
+            params.v_th
+        );
+        let params = RouterParams {
+            t_th: params.t_th.min(snap.ds.d()),
+            v_th: params.v_th,
+        };
+        let mut idx = EsIndex::build(&snap.means, params.t_th, params.v_th);
+        // The ES verification phase retires Region-3 deficits through
+        // the dense partial index M^p; the router instead re-scores
+        // survivors by exact sparse merges (the bit-parity contract in
+        // the module docs), so M^p — a (D − t_th) × K f64 matrix, by
+        // far the largest piece of the structured index — is never
+        // read. Drop it so the serving index holds (and reports) only
+        // what routing uses.
+        idx.partial = PartialIndex::default();
+        Self {
+            snap,
+            params,
+            idx,
+            scratch: ScratchPool::new(),
+        }
+    }
+
+    pub fn t_th(&self) -> usize {
+        self.params.t_th
+    }
+
+    pub fn v_th(&self) -> f64 {
+        self.params.v_th
+    }
+
+    pub fn params(&self) -> RouterParams {
+        self.params
+    }
+
+    pub fn snapshot(&self) -> &'a ClusteredCorpus {
+        self.snap
+    }
+
+    /// Routing-index + pooled-scratch bytes (the snapshot accounts for
+    /// itself via [`ClusteredCorpus::mem_bytes`]).
+    pub fn mem_bytes(&self) -> usize {
+        self.idx.mem_bytes() + self.scratch.mem_bytes(RouteScratch::mem_bytes)
+    }
+
+    /// Check out a pooled scratch for a run of queries (one per shard;
+    /// see [`RouteScratch`]).
+    pub(crate) fn checkout_scratch(&self) -> RouteScratch {
+        self.scratch.checkout(RouteScratch::default)
+    }
+
+    /// Return a scratch to the pool.
+    pub(crate) fn checkin_scratch(&self, s: RouteScratch) {
+        self.scratch.checkin(s, PhaseTimes::default());
+    }
+
+    /// Route a query: the top-`p` centroids with **exact** cosine
+    /// scores, best first under `(score desc, id asc)` — bit-identical
+    /// to a brute-force scan over all means (module docs). `top_p` is
+    /// clamped to `[1, K]`.
+    pub fn route(&self, q: &Query, top_p: usize) -> (Vec<(u32, f64)>, OpCounters) {
+        let mut s = self.checkout_scratch();
+        let out = self.route_with(&mut s, q, top_p);
+        self.checkin_scratch(s);
+        out
+    }
+
+    /// The per-query routing core, against caller-held scratch.
+    pub(crate) fn route_with(
+        &self,
+        s: &mut RouteScratch,
+        q: &Query,
+        top_p: usize,
+    ) -> (Vec<(u32, f64)>, OpCounters) {
+        let k = self.snap.k;
+        assert_eq!(
+            q.d(),
+            self.snap.ds.d(),
+            "query vocabulary does not match the corpus"
+        );
+        let p = top_p.clamp(1, k);
+        let mut counters = OpCounters::new();
+        if s.rho.len() != k {
+            s.rho.clear();
+            s.rho.resize(k, 0.0);
+        }
+        let t_th = self.params.t_th;
+        let v_th = self.params.v_th;
+        let ((lts, lus), (hts, hus)) = q.split(t_th);
+
+        // Appendix-A scaling on the fly: u' = u·v_th. The Region-3
+        // upper-bound mass is Σ u' over the query's high terms.
+        let mut y_base = 0.0;
+        for &u in hus {
+            y_base += u * v_th;
+        }
+        s.rho.iter_mut().for_each(|r| *r = y_base);
+        let mut mult = 0u64;
+
+        // Gather: Region 1 through the shared dispatch (dense tail rows
+        // included), Region 2 through the unrolled kernel. Folded form:
+        // after this loop rho[j] upper-bounds the exact cosine.
+        for (&t, &u) in lts.iter().zip(lus) {
+            mult += self.idx.r1.gather_term(t as usize, u * v_th, &mut s.rho, false);
+        }
+        for (&t, &u) in hts.iter().zip(hus) {
+            let (ids, vals) = self.idx.r2.postings(t as usize);
+            mult += ids.len() as u64;
+            // SAFETY: Region-2 ids are centroid ids < k == rho.len() by
+            // index construction (same argument as the assigners').
+            unsafe { kernel::scatter_add(&mut s.rho, ids, vals, u * v_th) };
+        }
+
+        // Seeds: the p largest upper bounds. Score them exactly once —
+        // the scores go straight into the final selection — and let τ,
+        // their worst exact cosine, lower-bound the true p-th best
+        // score, so `ub < τ − ε` prunes.
+        s.seeds.clear();
+        for (j, &ub) in s.rho.iter().enumerate() {
+            push_top(&mut s.seeds, p, ub, j as u32);
+        }
+        let mut top: Vec<(f64, u32)> = Vec::with_capacity(p + 1);
+        let mut tau = f64::INFINITY;
+        for &(_, j) in s.seeds.iter() {
+            let (mts, mvs) = self.snap.means.m.row(j as usize);
+            let (sc, m) = dot_sorted_count(q.ids(), q.vals(), mts, mvs);
+            mult += m;
+            counters.exact_sims += 1;
+            counters.candidates += 1;
+            if sc < tau {
+                tau = sc;
+            }
+            push_top(&mut top, p, sc, j);
+        }
+        let thresh = tau - UB_GUARD;
+
+        // Verify the remaining survivors exactly (seeds are already
+        // scored and always pass the threshold — skip them instead of
+        // re-scoring). Final selection under the total order matches
+        // the brute-force oracle bit for bit: it sees exactly one
+        // (score, id) pair per candidate, and push_top's result is
+        // insertion-order independent.
+        for (j, &ub) in s.rho.iter().enumerate() {
+            if ub >= thresh && !s.seeds.iter().any(|&(_, id)| id as usize == j) {
+                counters.candidates += 1;
+                counters.exact_sims += 1;
+                let (mts, mvs) = self.snap.means.m.row(j);
+                let (sc, m) = dot_sorted_count(q.ids(), q.vals(), mts, mvs);
+                mult += m;
+                push_top(&mut top, p, sc, j as u32);
+            }
+        }
+        counters.mult = mult;
+        (top.into_iter().map(|(sc, j)| (j, sc)).collect(), counters)
+    }
+
+    /// Route, then scan the routed clusters' member documents for the
+    /// exact top-`k` nearest documents (same total order; exact over
+    /// the routed subset). `top_k == 0` returns routing only.
+    pub fn retrieve(&self, q: &Query, top_p: usize, top_k: usize) -> ServeResult {
+        let mut s = self.checkout_scratch();
+        let out = self.retrieve_with(&mut s, q, top_p, top_k);
+        self.checkin_scratch(s);
+        out
+    }
+
+    /// The per-query serving core, against caller-held scratch.
+    pub(crate) fn retrieve_with(
+        &self,
+        s: &mut RouteScratch,
+        q: &Query,
+        top_p: usize,
+        top_k: usize,
+    ) -> ServeResult {
+        let (centroids, mut counters) = self.route_with(s, q, top_p);
+        let mut hits: Vec<(f64, u32)> = Vec::with_capacity(top_k.min(64) + 1);
+        for &(c, _) in &centroids {
+            for &i in self.snap.members(c as usize) {
+                let (ts, vs) = self.snap.ds.x.row(i as usize);
+                let (sc, m) = dot_sorted_count(q.ids(), q.vals(), ts, vs);
+                counters.mult += m;
+                counters.exact_sims += 1;
+                push_top(&mut hits, top_k, sc, i);
+            }
+        }
+        ServeResult {
+            centroids,
+            hits: hits.into_iter().map(|(sc, i)| (i, sc)).collect(),
+            counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_top_orders_and_bounds() {
+        let mut top = Vec::new();
+        for (s, i) in [(0.5, 3u32), (0.9, 1), (0.5, 2), (0.1, 0), (0.9, 4)] {
+            push_top(&mut top, 3, s, i);
+        }
+        // (score desc, id asc): 0.9@1, 0.9@4, 0.5@2
+        assert_eq!(top, vec![(0.9, 1), (0.9, 4), (0.5, 2)]);
+        push_top(&mut top, 3, 0.95, 9);
+        assert_eq!(top[0], (0.95, 9));
+        assert_eq!(top.len(), 3);
+        let mut empty = Vec::new();
+        push_top(&mut empty, 0, 1.0, 1);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn dot_count_matches_dot_sorted() {
+        let (ta, va) = (vec![0u32, 2, 5], vec![0.5, 0.25, 0.75]);
+        let (tb, vb) = (vec![2u32, 5, 7], vec![1.0, 2.0, 4.0]);
+        let (s, m) = dot_sorted_count(&ta, &va, &tb, &vb);
+        assert_eq!(
+            s.to_bits(),
+            crate::sparse::dot_sorted(&ta, &va, &tb, &vb).to_bits()
+        );
+        assert_eq!(m, 2);
+        assert_eq!(dot_sorted_count(&[], &[], &tb, &vb), (0.0, 0));
+    }
+}

@@ -1,0 +1,356 @@
+//! The frozen serving snapshot: a finished clustering packaged for
+//! online queries.
+//!
+//! A [`ClusteredCorpus`] owns everything the query path needs — the
+//! feature-space corpus, the final assignment, the **frozen** mean set
+//! (every centroid marked invariant, see [`MeanSet::freeze`]), the
+//! per-object ρ values, and per-cluster posting lists of member
+//! documents (a counting-sorted CSR over clusters, the same layout the
+//! update step uses internally). It also keeps the inverse of the
+//! df-ascending term relabeling so raw bag-of-words queries in the
+//! *original* vocabulary can be embedded into the frozen tf-idf feature
+//! space ([`ClusteredCorpus::embed_bow`]).
+//!
+//! [`Query`] is the sparse unit-norm query vector consumed by
+//! [`crate::serve::Router`]: ascending term ids, nonnegative values
+//! (the tf-idf feature space is nonnegative, and the ES upper-bound
+//! argument requires it), out-of-vocabulary terms dropped at
+//! construction.
+
+use crate::algo::ClusterOutput;
+use crate::coordinator::MiniBatchOutput;
+use crate::index::{update_means, MeanSet};
+use crate::sparse::{CsrMatrix, Dataset};
+
+/// A sparse query vector in the frozen corpus feature space.
+///
+/// Invariants (enforced by the constructors): term ids ascending and
+/// `< d`, values finite and nonnegative, L2 norm 1 (or 0 for the empty
+/// query — a zero vector routes deterministically to the lowest-id
+/// centroids with score 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    d: usize,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl Query {
+    /// Build from `(term id, weight)` pairs in the *relabeled* (feature
+    /// space) vocabulary: out-of-vocabulary ids (`>= d`) and zero
+    /// weights are dropped, duplicates summed, the result sorted and
+    /// L2-normalized. Panics on negative or non-finite weights — the
+    /// tf-idf feature space is nonnegative and the router's Region-3
+    /// upper bound (`u·v ≤ u·v_th` for `v < v_th`) relies on that.
+    pub fn from_pairs(d: usize, pairs: &[(u32, f64)]) -> Self {
+        let kept: Vec<(u32, f64)> = pairs
+            .iter()
+            .filter(|&&(t, v)| (t as usize) < d && v != 0.0)
+            .copied()
+            .collect();
+        for &(t, v) in &kept {
+            assert!(
+                v.is_finite() && v >= 0.0,
+                "query weight at term {t} must be finite and nonnegative (got {v})"
+            );
+        }
+        // Route through CsrMatrix::from_rows so duplicate summing and
+        // sorting follow the exact float sequence build_dataset uses —
+        // embed_bow'ing a corpus document reproduces its row bits.
+        let m = CsrMatrix::from_rows(d, &[kept]);
+        let (ids, vals) = m.row(0);
+        let mut vals = vals.to_vec();
+        let norm = vals.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for v in &mut vals {
+                *v /= norm;
+            }
+        }
+        Self {
+            d,
+            ids: ids.to_vec(),
+            vals,
+        }
+    }
+
+    /// A corpus document as a query (rows are already unit-norm or zero).
+    pub fn from_row(ds: &Dataset, i: usize) -> Self {
+        let (ts, vs) = ds.x.row(i);
+        Self {
+            d: ds.d(),
+            ids: ts.to_vec(),
+            vals: vs.to_vec(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True for the zero vector (all terms were OOV or zero-weighted).
+    pub fn is_zero(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Split at the structural term threshold, like
+    /// [`CsrMatrix::row_split`]: `(low, high)` slices with ids `< t_th`
+    /// and `>= t_th`.
+    pub fn split(&self, t_th: usize) -> ((&[u32], &[f64]), (&[u32], &[f64])) {
+        let p0 = self.ids.partition_point(|&t| (t as usize) < t_th);
+        (
+            (&self.ids[..p0], &self.vals[..p0]),
+            (&self.ids[p0..], &self.vals[p0..]),
+        )
+    }
+}
+
+/// A finished clustering frozen for serving. See the module docs.
+#[derive(Debug, Clone)]
+pub struct ClusteredCorpus {
+    /// The corpus in feature space (unit-norm tf-idf rows).
+    pub ds: Dataset,
+    /// Final assignment a(i).
+    pub assign: Vec<u32>,
+    pub k: usize,
+    /// Frozen mean set: recomputed from the assignment, unit-norm,
+    /// every centroid marked invariant.
+    pub means: MeanSet,
+    /// Exact similarity of each document to its own centroid.
+    pub rho: Vec<f64>,
+    /// Clustering objective J = Σ_i ρ_{a(i)} over the frozen state.
+    pub objective: f64,
+    /// Per-cluster member posting lists (counting-sorted CSR layout).
+    member_offsets: Vec<usize>,
+    member_ids: Vec<u32>,
+    /// Original term id → relabeled feature-space id (`u32::MAX` when
+    /// the original term never occurred in the corpus).
+    orig_to_term: Vec<u32>,
+}
+
+impl ClusteredCorpus {
+    /// Freeze an assignment over `ds` into a serving snapshot. The mean
+    /// set is recomputed from the assignment (deterministic: the same
+    /// per-cluster float sequence as the update step), so any source of
+    /// assignments — full-batch, mini-batch, or external — yields a
+    /// self-consistent snapshot.
+    pub fn from_assignment(ds: Dataset, assign: Vec<u32>, k: usize) -> Self {
+        let n = ds.n();
+        assert_eq!(assign.len(), n, "assignment length != corpus size");
+        assert!(k >= 1, "need at least one cluster");
+        assert!(
+            assign.iter().all(|&a| (a as usize) < k),
+            "assignment id out of range (K={k})"
+        );
+        let upd = update_means(&ds, &assign, k, None, None);
+        let mut means = upd.means;
+        means.freeze();
+
+        // Counting sort of members by cluster (two passes, no
+        // per-cluster Vec allocations — the update step's layout).
+        let mut sizes = vec![0usize; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let mut member_offsets = vec![0usize; k + 1];
+        for j in 0..k {
+            member_offsets[j + 1] = member_offsets[j] + sizes[j];
+        }
+        let mut member_ids = vec![0u32; n];
+        let mut cursor = member_offsets.clone();
+        for (i, &a) in assign.iter().enumerate() {
+            member_ids[cursor[a as usize]] = i as u32;
+            cursor[a as usize] += 1;
+        }
+
+        // Inverse relabeling for embed_bow.
+        let max_orig = ds
+            .orig_term
+            .iter()
+            .max()
+            .map(|&t| t as usize + 1)
+            .unwrap_or(0);
+        let mut orig_to_term = vec![u32::MAX; max_orig];
+        for (new_id, &old_id) in ds.orig_term.iter().enumerate() {
+            orig_to_term[old_id as usize] = new_id as u32;
+        }
+
+        Self {
+            ds,
+            assign,
+            k,
+            means,
+            rho: upd.rho,
+            objective: upd.objective,
+            member_offsets,
+            member_ids,
+            orig_to_term,
+        }
+    }
+
+    /// Snapshot a full-batch clustering run.
+    pub fn from_output(ds: Dataset, out: &ClusterOutput, k: usize) -> Self {
+        Self::from_assignment(ds, out.assign.clone(), k)
+    }
+
+    /// Snapshot a mini-batch / streaming run.
+    pub fn from_minibatch(ds: Dataset, out: &MiniBatchOutput, k: usize) -> Self {
+        Self::from_assignment(ds, out.assign.clone(), k)
+    }
+
+    /// Member document ids of cluster `j` (ascending).
+    #[inline]
+    pub fn members(&self, j: usize) -> &[u32] {
+        &self.member_ids[self.member_offsets[j]..self.member_offsets[j + 1]]
+    }
+
+    /// Embed a raw bag-of-words document — `(original term id, count)`
+    /// pairs, e.g. straight out of [`crate::corpus::read_uci_bow`] — into
+    /// the frozen tf-idf feature space: original ids are mapped through
+    /// the df-ascending relabeling (unknown terms dropped as OOV),
+    /// weighted by `count · ln(N / df)` with the *corpus* document
+    /// frequencies, and L2-normalized. Embedding a corpus document
+    /// reproduces its dataset row bit for bit (up to dropped
+    /// zero-weight ubiquitous terms, which never change a score bit).
+    pub fn embed_bow(&self, doc: &[(u32, u32)]) -> Query {
+        let n_f = self.ds.n() as f64;
+        let pairs: Vec<(u32, f64)> = doc
+            .iter()
+            .filter(|&&(_, c)| c > 0)
+            .filter_map(|&(t, c)| {
+                let nt = *self.orig_to_term.get(t as usize)?;
+                if nt == u32::MAX {
+                    return None;
+                }
+                let idf = (n_f / self.ds.df[nt as usize] as f64).ln();
+                Some((nt, c as f64 * idf))
+            })
+            .collect();
+        Query::from_pairs(self.ds.d(), &pairs)
+    }
+
+    /// Approximate resident bytes of the snapshot (corpus CSR + means +
+    /// member lists + relabeling table).
+    pub fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let csr = |m: &CsrMatrix| {
+            m.nnz() * (size_of::<u32>() + size_of::<f64>())
+                + (m.n_rows() + 1) * size_of::<usize>()
+        };
+        csr(&self.ds.x)
+            + csr(&self.means.m)
+            + self.assign.len() * size_of::<u32>()
+            + self.rho.len() * size_of::<f64>()
+            + self.member_offsets.len() * size_of::<usize>()
+            + self.member_ids.len() * size_of::<u32>()
+            + self.orig_to_term.len() * size_of::<u32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+
+    fn snapshot() -> (ClusteredCorpus, Vec<Vec<(u32, u32)>>) {
+        let c = generate(&tiny(77));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let n = ds.n();
+        let k = 7;
+        let assign: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+        (
+            ClusteredCorpus::from_assignment(ds, assign, k),
+            c.docs.clone(),
+        )
+    }
+
+    #[test]
+    fn members_partition_the_corpus() {
+        let (snap, _) = snapshot();
+        let mut seen = vec![false; snap.ds.n()];
+        for j in 0..snap.k {
+            for &i in snap.members(j) {
+                assert_eq!(snap.assign[i as usize], j as u32);
+                assert!(!seen[i as usize], "doc {i} listed twice");
+                seen[i as usize] = true;
+            }
+            // ascending within each cluster
+            assert!(snap.members(j).windows(2).all(|w| w[0] < w[1]));
+        }
+        assert!(seen.iter().all(|&s| s), "member lists miss documents");
+    }
+
+    #[test]
+    fn means_are_frozen_and_unit_norm() {
+        let (snap, _) = snapshot();
+        assert_eq!(snap.means.n_moving(), 0);
+        for j in 0..snap.k {
+            let norm = snap.means.m.row_norm(j);
+            assert!(
+                norm == 0.0 || (norm - 1.0).abs() < 1e-9,
+                "mean {j} norm {norm}"
+            );
+        }
+        assert!(snap.objective.is_finite());
+        assert_eq!(snap.rho.len(), snap.ds.n());
+    }
+
+    #[test]
+    fn query_from_pairs_normalizes_and_drops_oov() {
+        let q = Query::from_pairs(4, &[(1, 3.0), (9, 5.0), (1, 1.0), (0, 0.0)]);
+        assert_eq!(q.ids(), &[1]);
+        assert!((q.vals()[0] - 1.0).abs() < 1e-12); // 4.0 normalized
+        assert!(!q.is_zero());
+        let z = Query::from_pairs(4, &[(7, 2.0)]);
+        assert!(z.is_zero(), "OOV-only query must be the zero vector");
+        let ((l, _), (h, _)) = q.split(2);
+        assert_eq!(l, &[1]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "nonnegative")]
+    fn query_rejects_negative_weights() {
+        let _ = Query::from_pairs(4, &[(1, -1.0)]);
+    }
+
+    #[test]
+    fn embed_bow_reproduces_corpus_rows() {
+        let (snap, docs) = snapshot();
+        for i in [0usize, 3, 10] {
+            let q = snap.embed_bow(&docs[i]);
+            let r = Query::from_row(&snap.ds, i);
+            // The embedded query may drop zero-weight (idf = 0) terms
+            // the row keeps explicitly; every kept value must match the
+            // row's bits and the dropped ones must be zeros.
+            let mut qi = 0usize;
+            for (&t, &v) in r.ids().iter().zip(r.vals()) {
+                if qi < q.ids().len() && q.ids()[qi] == t {
+                    assert_eq!(v.to_bits(), q.vals()[qi].to_bits(), "doc {i} term {t}");
+                    qi += 1;
+                } else {
+                    assert_eq!(v, 0.0, "doc {i} term {t} dropped but nonzero");
+                }
+            }
+            assert_eq!(qi, q.ids().len(), "doc {i}: embedded terms not in row");
+        }
+    }
+
+    #[test]
+    fn mem_bytes_positive() {
+        let (snap, _) = snapshot();
+        assert!(snap.mem_bytes() > 0);
+    }
+}

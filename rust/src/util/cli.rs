@@ -127,6 +127,19 @@ impl Args {
     pub fn decay(&self) -> f64 {
         self.get_parsed::<f64>("decay", 1.0)
     }
+
+    /// `--top-p N` — centroids the serving router returns per query
+    /// (0 = the workload default, ~K/32 clamped to [1, 8]). Consumed by
+    /// the `skm serve` subcommand; the router lives in `serve::router`.
+    pub fn top_p(&self) -> usize {
+        self.get_parsed::<usize>("top-p", 0)
+    }
+
+    /// `--top-k N` — documents the serving retrieval stage returns per
+    /// query (0 = routing only).
+    pub fn top_k(&self) -> usize {
+        self.get_parsed::<usize>("top-k", 10)
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +194,16 @@ mod tests {
     fn malformed_number_panics() {
         let a = Args::parse_from(["x", "--k", "abc"]);
         let _ = a.get_parsed::<usize>("k", 0);
+    }
+
+    #[test]
+    fn serve_accessors() {
+        let a = Args::parse_from(["serve", "--top-p", "4", "--top-k=25"]);
+        assert_eq!(a.top_p(), 4);
+        assert_eq!(a.top_k(), 25);
+        let b = Args::parse_from(Vec::<String>::new());
+        assert_eq!(b.top_p(), 0); // 0 = workload default
+        assert_eq!(b.top_k(), 10);
     }
 
     #[test]

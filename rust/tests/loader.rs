@@ -1,0 +1,114 @@
+//! Dedicated coverage for the UCI bag-of-words loader
+//! (`corpus::loader`): a hand-written file round-tripped from disk
+//! through `read_uci_bow_file` into a clustering-ready `Dataset`,
+//! including comment lines, the 1-based→0-based id conversion, and the
+//! malformed-input error surface.
+
+use skm::corpus::{read_uci_bow, read_uci_bow_file};
+use skm::sparse::build_dataset;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// A hand-written docword file: 4 docs over a 6-term vocabulary, with
+/// comment lines (both `#` and `%` styles), blank lines, and 1-based
+/// ids throughout. All six terms occur (term 6 only via doc 2).
+const HAND_WRITTEN: &str = "\
+# hand-written UCI bag-of-words sample
+% headers: N, D, NNZ
+4
+
+6
+8
+# doc term count (all ids 1-based)
+1 1 2
+1 3 1
+2 2 4
+
+2 6 1
+3 1 1
+% a comment between triples
+3 4 2
+4 5 3
+4 1 1
+";
+
+fn temp_file(name: &str, contents: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(format!("skm_loader_{}_{name}", std::process::id()));
+    let mut f = std::fs::File::create(&path).expect("create temp file");
+    f.write_all(contents.as_bytes()).expect("write temp file");
+    path
+}
+
+#[test]
+fn hand_written_file_round_trips_from_disk() {
+    let path = temp_file("roundtrip.txt", HAND_WRITTEN);
+    let c = read_uci_bow_file(path.to_str().unwrap(), None).expect("parse hand-written file");
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(c.n_docs(), 4);
+    assert_eq!(c.n_terms, 6);
+    // 1-based ids converted to 0-based, rows sorted by term.
+    assert_eq!(c.docs[0], vec![(0, 2), (2, 1)]);
+    assert_eq!(c.docs[1], vec![(1, 4), (5, 1)]);
+    assert_eq!(c.docs[2], vec![(0, 1), (3, 2)]);
+    assert_eq!(c.docs[3], vec![(0, 1), (4, 3)]);
+
+    // And the corpus feeds the full feature pipeline: term 6 (1-based)
+    // occurs once, term 1 in three docs — df-ascending relabeling puts
+    // the df=3 term last.
+    let ds = build_dataset("hand", c.n_terms, &c.docs);
+    assert_eq!(ds.n(), 4);
+    assert_eq!(ds.d(), 6); // terms 1..6 all occur (term 6 via doc 2)
+    assert!(ds.df.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(*ds.df.last().unwrap(), 3);
+    for i in 0..ds.n() {
+        let norm = ds.x.row_norm(i);
+        assert!(norm == 0.0 || (norm - 1.0).abs() < 1e-12, "row {i}: {norm}");
+    }
+}
+
+#[test]
+fn max_docs_truncates_file_reads() {
+    let path = temp_file("truncate.txt", HAND_WRITTEN);
+    let c = read_uci_bow_file(path.to_str().unwrap(), Some(2)).expect("parse truncated");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(c.n_docs(), 2);
+    assert_eq!(c.docs[1], vec![(1, 4), (5, 1)]);
+}
+
+#[test]
+fn malformed_lines_error_loudly() {
+    // A triple with a non-numeric count.
+    let bad_count = "2\n3\n2\n1 1 two\n2 2 1\n";
+    let err = read_uci_bow(bad_count.as_bytes(), None).unwrap_err();
+    assert!(format!("{err:#}").contains("count"), "unexpected error: {err:#}");
+
+    // A triple missing its count field.
+    let short = "1\n2\n1\n1 1\n";
+    assert!(read_uci_bow(short.as_bytes(), None).is_err());
+
+    // A non-numeric header.
+    let bad_header = "x\n2\n1\n1 1 1\n";
+    let err = read_uci_bow(bad_header.as_bytes(), None).unwrap_err();
+    assert!(format!("{err:#}").contains('N'), "unexpected error: {err:#}");
+
+    // Ids out of the declared ranges (0 is invalid: ids are 1-based).
+    for bad in ["1\n2\n1\n0 1 1\n", "1\n2\n1\n1 3 1\n", "2\n2\n1\n3 1 1\n"] {
+        assert!(read_uci_bow(bad.as_bytes(), None).is_err(), "{bad:?}");
+    }
+
+    // NNZ header disagreeing with the triple count.
+    let mismatch = "1\n2\n5\n1 1 1\n";
+    let err = read_uci_bow(mismatch.as_bytes(), None).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("NNZ"),
+        "unexpected error: {err:#}"
+    );
+
+    // Comments must not count as triples for the NNZ check.
+    let commented = "1\n2\n1\n# not a triple\n1 1 1\n% trailing comment\n";
+    assert!(read_uci_bow(commented.as_bytes(), None).is_ok());
+
+    // Missing headers entirely.
+    assert!(read_uci_bow("# only comments\n".as_bytes(), None).is_err());
+}

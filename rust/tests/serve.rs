@@ -1,0 +1,335 @@
+//! Concurrency + soundness suite for the online serving layer
+//! (`serve::{ClusteredCorpus, Router, serve_batch}`):
+//!
+//! * **Routing soundness** — the pruned top-p centroid list (ids *and*
+//!   score bits) equals a brute-force dense scan over all means, fuzzed
+//!   across corpus seeds, K, p, and router parameters (estimated,
+//!   degenerate-exact, and aggressive hand-picked), including zero-
+//!   vector, out-of-vocabulary, single-term, and random sparse queries.
+//!   The oracle scores through dense mean rows (`Σ_s u_s · μ_j[s]` in
+//!   ascending term order) while the router scores through sparse
+//!   merges — bit-equal by the `+0.0`-padding argument the dense
+//!   Region-1 tail already rests on, so this also cross-checks that
+//!   argument end to end.
+//! * **Batch determinism** — `serve_batch` under `threads ∈ {2, 4, 7}`
+//!   reproduces the serial loop bit for bit: per-query centroid/hit ids
+//!   and score bits, per-query counters, and the merged totals.
+//! * **Retrieval exactness** — the top-k documents equal a naive
+//!   full-corpus scan restricted to the routed clusters' members, and a
+//!   corpus document used as its own query can never be out-scored when
+//!   its cluster is scanned.
+
+use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::serve::{push_top, serve_batch, ClusteredCorpus, Query, Router, RouterParams};
+use skm::sparse::build_dataset;
+use skm::util::rng::Pcg32;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("serve", c.n_terms, &c.docs)
+}
+
+/// Cluster with MIVI and freeze the result.
+fn snapshot(n_docs: usize, corpus_seed: u64, k: usize, cfg_seed: u64) -> ClusteredCorpus {
+    let ds = dataset(n_docs, corpus_seed);
+    let cfg = ClusterConfig {
+        k,
+        seed: cfg_seed,
+        ..Default::default()
+    };
+    let out = run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &ParConfig::serial());
+    ClusteredCorpus::from_output(ds, &out, k)
+}
+
+/// Brute-force top-p oracle: dense scan over ALL means in ascending
+/// centroid id, scores accumulated over the query's terms against the
+/// dense mean row (the padded zeros contribute `u·0.0 = +0.0`, a
+/// bitwise no-op on the nonnegative accumulator — so these bits equal
+/// the router's sparse merges), selected under the shared
+/// `(score desc, id asc)` total order.
+fn brute_force_route(snap: &ClusteredCorpus, q: &Query, p: usize) -> Vec<(u32, f64)> {
+    let p = p.clamp(1, snap.k);
+    let mut top: Vec<(f64, u32)> = Vec::new();
+    for j in 0..snap.k {
+        let dense = snap.means.m.row_dense(j);
+        let mut sc = 0.0f64;
+        for (&t, &u) in q.ids().iter().zip(q.vals()) {
+            sc += u * dense[t as usize];
+        }
+        push_top(&mut top, p, sc, j as u32);
+    }
+    top.into_iter().map(|(s, j)| (j, s)).collect()
+}
+
+/// Naive retrieval oracle: score EVERY document of the routed clusters
+/// through its dense row, select top-k under the shared total order.
+fn brute_force_retrieve(
+    snap: &ClusteredCorpus,
+    q: &Query,
+    routed: &[(u32, f64)],
+    top_k: usize,
+) -> Vec<(u32, f64)> {
+    let mut top: Vec<(f64, u32)> = Vec::new();
+    for &(c, _) in routed {
+        for &i in snap.members(c as usize) {
+            let dense = snap.ds.x.row_dense(i as usize);
+            let mut sc = 0.0f64;
+            for (&t, &u) in q.ids().iter().zip(q.vals()) {
+                sc += u * dense[t as usize];
+            }
+            push_top(&mut top, top_k, sc, i);
+        }
+    }
+    top.into_iter().map(|(s, i)| (i, s)).collect()
+}
+
+fn assert_routes_eq(got: &[(u32, f64)], want: &[(u32, f64)], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: result length");
+    for (q, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.0, b.0, "{tag}: id at rank {q} ({got:?} vs {want:?})");
+        assert_eq!(
+            a.1.to_bits(),
+            b.1.to_bits(),
+            "{tag}: score bits at rank {q} ({} vs {})",
+            a.1,
+            b.1
+        );
+    }
+}
+
+/// The query mix every config is fuzzed with: corpus documents, random
+/// sparse queries, and the adversarial edge cases the ISSUE names.
+fn query_mix(snap: &ClusteredCorpus, rng: &mut Pcg32, n_docs: usize, n_rand: usize) -> Vec<Query> {
+    let d = snap.ds.d();
+    let n = snap.ds.n();
+    let mut queries = Vec::new();
+    for _ in 0..n_docs {
+        queries.push(Query::from_row(&snap.ds, rng.gen_range(n as u32) as usize));
+    }
+    for _ in 0..n_rand {
+        let nnz = 1 + rng.gen_range(12) as usize;
+        let pairs: Vec<(u32, f64)> = rng
+            .sample_distinct(d, nnz.min(d))
+            .into_iter()
+            .map(|t| (t as u32, 0.05 + rng.next_f64()))
+            .collect();
+        queries.push(Query::from_pairs(d, &pairs));
+    }
+    // Zero vector; OOV-only (drops to zero); mixed OOV + in-vocab;
+    // single high-df term; single low-df term.
+    queries.push(Query::from_pairs(d, &[]));
+    queries.push(Query::from_pairs(d, &[(d as u32, 1.0), (d as u32 + 7, 2.0)]));
+    queries.push(Query::from_pairs(
+        d,
+        &[(d as u32 + 1, 3.0), (d as u32 - 1, 1.0), (0, 0.5)],
+    ));
+    queries.push(Query::from_pairs(d, &[(d as u32 - 1, 1.0)]));
+    queries.push(Query::from_pairs(d, &[(0, 1.0)]));
+    queries
+}
+
+/// The headline soundness property: for every fuzz case the pruned
+/// router's top-p list is bit-identical to the brute-force dense scan.
+#[test]
+fn routing_matches_brute_force_across_seeds_k_p() {
+    for (corpus_seed, n_docs, k) in [(0xA1u64, 300, 6), (0xB2, 360, 17)] {
+        let snap = snapshot(n_docs, corpus_seed, k, 5);
+        let cfg = ClusterConfig {
+            k,
+            ..Default::default()
+        };
+        let d = snap.ds.d();
+        let params = [
+            RouterParams::estimate_for(&snap, &cfg),
+            RouterParams::exact(),
+            // Aggressive hand-picked split: large Region 2/3, low v_th.
+            RouterParams {
+                t_th: d / 2,
+                v_th: 0.05,
+            },
+        ];
+        for (pi, &prm) in params.iter().enumerate() {
+            let router = Router::new(&snap, prm);
+            let mut rng = Pcg32::new(corpus_seed ^ 0xfeed ^ pi as u64);
+            let queries = query_mix(&snap, &mut rng, 8, 6);
+            for p in [1usize, 2, 5, k] {
+                for (qi, q) in queries.iter().enumerate() {
+                    let (got, counters) = router.route(q, p);
+                    let want = brute_force_route(&snap, q, p);
+                    let tag = format!(
+                        "seed={corpus_seed:x} k={k} params#{pi} (t_th={}, v_th={}) p={p} query={qi}",
+                        router.t_th(),
+                        router.v_th()
+                    );
+                    assert_routes_eq(&got, &want, &tag);
+                    // Candidate accounting: at least the survivors that
+                    // made the answer, never more than K.
+                    assert!(counters.candidates >= got.len() as u64, "{tag}");
+                    assert!(counters.candidates <= k as u64, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// The estimated parameters must actually prune on a corpus-shaped
+/// query load (CPR < 1), otherwise the serving index is dead weight.
+#[test]
+fn estimated_router_prunes_candidates() {
+    let snap = snapshot(400, 0xC3, 16, 9);
+    let cfg = ClusterConfig {
+        k: 16,
+        ..Default::default()
+    };
+    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let mut rng = Pcg32::new(0xd00d);
+    let queries = query_mix(&snap, &mut rng, 24, 0);
+    let mut candidates = 0u64;
+    let mut total = 0u64;
+    for q in &queries {
+        let (_, c) = router.route(q, 1);
+        candidates += c.candidates;
+        total += snap.k as u64;
+    }
+    assert!(
+        candidates < total,
+        "router never pruned: {candidates} candidates over {total} centroid evaluations"
+    );
+}
+
+/// serve_batch under 2/4/7 threads is bit-identical to the serial loop:
+/// per-query ids, score bits, and counters, plus the merged totals.
+#[test]
+fn serve_batch_deterministic_across_thread_counts() {
+    let snap = snapshot(340, 0xD4, 11, 3);
+    let cfg = ClusterConfig {
+        k: 11,
+        ..Default::default()
+    };
+    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let mut rng = Pcg32::new(0xbeef);
+    let queries = query_mix(&snap, &mut rng, 24, 12);
+    let (top_p, top_k) = (3usize, 5usize);
+    let (serial, serial_total) =
+        serve_batch(&router, &queries, top_p, top_k, &ParConfig::serial());
+    for threads in [2usize, 4, 7] {
+        for shard in [0usize, 5] {
+            let par = ParConfig { threads, shard };
+            let (got, got_total) = serve_batch(&router, &queries, top_p, top_k, &par);
+            let tag = format!("threads={threads} shard={shard}");
+            assert_eq!(got.len(), serial.len(), "{tag}");
+            for (qi, (a, b)) in got.iter().zip(&serial).enumerate() {
+                assert_routes_eq(&a.centroids, &b.centroids, &format!("{tag} query={qi}"));
+                assert_routes_eq(&a.hits, &b.hits, &format!("{tag} query={qi} hits"));
+                assert_eq!(a.counters, b.counters, "{tag} query={qi} counters");
+            }
+            assert_eq!(got_total, serial_total, "{tag}: merged counters");
+        }
+    }
+}
+
+/// Retrieval exactness: the second stage's top-k equals a naive scan of
+/// every document in the routed clusters, for several (p, k) shapes.
+#[test]
+fn retrieval_matches_restricted_full_scan() {
+    let snap = snapshot(320, 0xE5, 9, 7);
+    let cfg = ClusterConfig {
+        k: 9,
+        ..Default::default()
+    };
+    for prm in [
+        RouterParams::estimate_for(&snap, &cfg),
+        RouterParams::exact(),
+    ] {
+        let router = Router::new(&snap, prm);
+        let mut rng = Pcg32::new(0xcafe);
+        let queries = query_mix(&snap, &mut rng, 10, 5);
+        for &(top_p, top_k) in &[(1usize, 1usize), (2, 5), (3, 17), (9, 4), (2, 0)] {
+            for (qi, q) in queries.iter().enumerate() {
+                let r = router.retrieve(q, top_p, top_k);
+                let want = brute_force_retrieve(&snap, q, &r.centroids, top_k);
+                let tag = format!(
+                    "t_th={} p={top_p} k={top_k} query={qi}",
+                    router.t_th()
+                );
+                assert_routes_eq(&r.hits, &want, &tag);
+                // Every hit must belong to a routed cluster.
+                for &(i, _) in &r.hits {
+                    let c = snap.assign[i as usize];
+                    assert!(
+                        r.centroids.iter().any(|&(rc, _)| rc == c),
+                        "{tag}: hit {i} outside routed clusters"
+                    );
+                }
+                // Best-first ordering under (score desc, id asc).
+                for w in r.hits.windows(2) {
+                    assert!(
+                        w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                        "{tag}: hits out of order"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A corpus document used as its own query: when every cluster is
+/// routed the document itself is scanned, so the best hit can never
+/// score below the document's self-similarity.
+#[test]
+fn self_query_is_never_outscored() {
+    let snap = snapshot(280, 0xF6, 8, 2);
+    let router = Router::new(&snap, RouterParams::exact());
+    for i in [0usize, 13, 97, 200] {
+        let q = Query::from_row(&snap.ds, i);
+        if q.is_zero() {
+            continue;
+        }
+        let self_score: f64 = q.vals().iter().map(|v| v * v).sum();
+        let r = router.retrieve(&q, snap.k, 3);
+        assert!(
+            r.hits[0].1 >= self_score - 1e-12,
+            "doc {i}: best hit {} below self-similarity {self_score}",
+            r.hits[0].1
+        );
+    }
+}
+
+/// Snapshots built from the streaming driver serve identically to ones
+/// built from the same assignment directly (the snapshot only depends
+/// on the assignment), and ES-ICP-clustered corpora route soundly too.
+#[test]
+fn snapshot_sources_are_interchangeable() {
+    use skm::coordinator::minibatch::{run_minibatch, BatchSchedule, MiniBatchConfig};
+    let ds = dataset(300, 0x17);
+    let k = 8;
+    let cfg = ClusterConfig {
+        k,
+        seed: 21,
+        ..Default::default()
+    };
+    let mb = MiniBatchConfig {
+        batch: 75,
+        schedule: BatchSchedule::Sequential,
+        decay: 1.0,
+        max_rounds: 24,
+        sample_seed: 4,
+    };
+    let out = run_minibatch(AlgoKind::EsIcp, &ds, &cfg, &mb, &ParConfig::serial());
+    let snap_a = ClusteredCorpus::from_minibatch(ds.clone(), &out, k);
+    let snap_b = ClusteredCorpus::from_assignment(ds, out.assign.clone(), k);
+    assert_eq!(snap_a.assign, snap_b.assign);
+    assert_eq!(snap_a.objective.to_bits(), snap_b.objective.to_bits());
+    let ra = Router::new(&snap_a, RouterParams::exact());
+    let rb = Router::new(&snap_b, RouterParams::exact());
+    let q = Query::from_row(&snap_a.ds, 42);
+    let (a, _) = ra.route(&q, 3);
+    let (b, _) = rb.route(&q, 3);
+    assert_routes_eq(&a, &b, "minibatch vs direct snapshot");
+    let want = brute_force_route(&snap_a, &q, 3);
+    assert_routes_eq(&a, &want, "minibatch snapshot vs brute force");
+}
