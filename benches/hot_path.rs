@@ -6,6 +6,10 @@
 //!   * **the gather micro-kernel** (`algo::kernel`): naive scalar
 //!     scatter-add vs the unrolled/unchecked/dense-tail kernel, with
 //!     ns/posting and effective GB/s, bitwise-verified first
+//!   * **the SIMD dispatch sweep**: the same gather forced onto every
+//!     backend the host supports (scalar/AVX2/AVX-512/NEON), each
+//!     bitwise-verified against the scalar oracle, with per-ISA
+//!     ns/posting, GB/s, and the reported (not gated) speedup
 //!   * ES gathering (Region 1+2, two-block arrays) + filter + verify
 //!   * mean-set construction (update step)
 //!   * EsIndex / InvIndex from-scratch builds
@@ -356,6 +360,89 @@ fn main() {
     micro.push(("gather_scalar_2000".into(), scalar.clone()));
     micro.push(("gather_kernel_2000".into(), tuned.clone()));
 
+    // --- SIMD backend sweep: the dispatched gather per detected ISA ------
+    // Same workload as the gather section, with the kernel dispatch
+    // table forced to each backend this host supports (scalar always
+    // included, so the sweep runs even on bare hosts). Bitwise equality
+    // against the scalar oracle is asserted per backend before anything
+    // is timed; the scalar-vs-SIMD ratio is *reported*, never gated —
+    // CI hosts differ too much for a speedup threshold.
+    let auto_backend = kernel::Backend::detect();
+    println!(
+        "simd dispatch: auto-detected backend {} (available: {})",
+        auto_backend.name(),
+        kernel::Backend::available()
+            .iter()
+            .map(|b| b.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let mut simd_rows: Vec<(String, Json)> = Vec::new();
+    {
+        let mut scalar_forced_ns = None;
+        for b in kernel::Backend::available() {
+            kernel::force_backend(b).expect("available backend must force");
+            // Bit-equality vs the scalar oracle over the full window.
+            let mut a = vec![0.0f64; k];
+            let mut bb = vec![0.0f64; k];
+            for i in 0..n_obj {
+                let (ts, vs) = ds.x.row(i);
+                a.iter_mut().for_each(|r| *r = 0.0);
+                bb.iter_mut().for_each(|r| *r = 0.0);
+                for (&t, &u) in ts.iter().zip(vs) {
+                    let (ids, vals) = idx.postings(t as usize);
+                    kernel::scatter_add_scalar(&mut a, ids, vals, u);
+                }
+                for (&t, &u) in ts.iter().zip(vs) {
+                    idx.gather_term(t as usize, u, &mut bb, false);
+                }
+                for (x, y) in a.iter().zip(&bb) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} gather diverged from scalar at object {i}",
+                        b.name()
+                    );
+                }
+            }
+            let s = bench(1, 7, 3.0, || {
+                let mut acc = 0.0f64;
+                for i in 0..n_obj {
+                    let (ts, vs) = ds.x.row(i);
+                    rho_g.iter_mut().for_each(|r| *r = 0.0);
+                    for (&t, &u) in ts.iter().zip(vs) {
+                        idx.gather_term(t as usize, u, &mut rho_g, false);
+                    }
+                    acc += rho_g[0];
+                }
+                std::hint::black_box(acc);
+            });
+            let ns = s.min_s * 1e9 / pp;
+            let base = *scalar_forced_ns.get_or_insert(ns);
+            println!(
+                "{}",
+                s.summary(&format!("gather dispatched [{}] (2000 objects)", b.name()))
+            );
+            println!(
+                "simd [{}]: {:.3} ns/posting, {:.2} GB/s effective, {:.2}x vs forced scalar",
+                b.name(),
+                ns,
+                BYTES_PER_POSTING / ns.max(1e-12),
+                base / ns.max(1e-12)
+            );
+            simd_rows.push((
+                b.name().to_string(),
+                Json::obj(vec![
+                    ("ns_per_posting", Json::Num(ns)),
+                    ("gbps", Json::Num(BYTES_PER_POSTING / ns.max(1e-12))),
+                    ("speedup_vs_scalar", Json::Num(base / ns.max(1e-12))),
+                ]),
+            ));
+            micro.push((format!("gather_{}_2000", b.name()), s));
+        }
+        kernel::reset_backend();
+    }
+
     // --- incremental splice vs from-scratch rebuild ----------------------
     // Realistic late-iteration trajectory: few centroids move, which is
     // exactly the regime the incremental maintainers target.
@@ -638,6 +725,13 @@ fn main() {
                     Json::Num(BYTES_PER_POSTING / kernel_ns.max(1e-12)),
                 ),
                 ("speedup", Json::Num(gather_speedup)),
+            ]),
+        ),
+        (
+            "simd",
+            Json::obj(vec![
+                ("active", Json::str(auto_backend.name())),
+                ("backends", Json::Obj(simd_rows)),
             ]),
         ),
         (

@@ -141,7 +141,9 @@ impl CsAssigner {
                 };
                 counters.cold_touches += ids.len() as u64;
                 // SAFETY: squared-postings ids are centroid ids < k ==
-                // normsq.len() by index construction.
+                // normsq.len() by index construction, with at most one
+                // posting per centroid in a term's list — pairwise
+                // distinct, as the SIMD backends require.
                 unsafe { kernel::scatter_add_unit(&mut normsq, ids, sq) };
             }
             // UBP filter (lines 8–12): ρ_j + ‖x^p‖·√(‖μ^p_j‖²) — one

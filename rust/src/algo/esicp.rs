@@ -215,7 +215,10 @@ impl EsAssigner {
                     let (ids, vals) = idx.r2.postings_moving(t as usize);
                     mult += ids.len() as u64;
                     // SAFETY: region-2 ids are centroid ids < k ==
-                    // rho.len() by index construction.
+                    // rho.len() by index construction, and each term's
+                    // posting list holds at most one entry per centroid,
+                    // so the ids are pairwise distinct as the SIMD
+                    // gather/scatter backends require.
                     unsafe { kernel::scatter_add(&mut rho, ids, vals, u) };
                 }
                 kernel::collect_above_ids(&rho, &idx.moving_ids, rho_max0, &mut z);
@@ -224,7 +227,8 @@ impl EsAssigner {
                 for (&t, &u) in hts.iter().zip(hus) {
                     let (ids, vals) = idx.r2.postings(t as usize);
                     mult += ids.len() as u64;
-                    // SAFETY: as above.
+                    // SAFETY: as above (in-bounds and pairwise-distinct
+                    // ids by index construction).
                     unsafe { kernel::scatter_add(&mut rho, ids, vals, u) };
                 }
                 kernel::collect_above(&rho, rho_max0, &mut z);

@@ -1,0 +1,921 @@
+//! The shared gather micro-kernels (§Perf tentpole) — the innermost
+//! loops of every assignment step, extracted into one place so all six
+//! assigners (`mivi`, `esicp`, `ta`, `cs`, `divi`, `ding`) and the
+//! serving router run the *same* tuned code instead of seven
+//! hand-rolled copies.
+//!
+//! ## Why this module exists (the AFM argument)
+//!
+//! The paper's §III–IV analysis attributes MIVI-family speed to three
+//! architecture-friendly properties of the gathering phase:
+//!
+//! 1. **Multiplication volume concentrates** on a few high-df terms
+//!    against high mean-feature values (UC3), so the bytes that matter
+//!    fit in cache *if the layout lets them stay there*;
+//! 2. the two-block postings layout makes the moving-only scan
+//!    **branch-free** (no per-entry `if moving` test);
+//! 3. the scatter-add `ρ[c] += u·v` itself is a pure data-flow loop —
+//!    every iteration is independent (distinct accumulator slots), so
+//!    the only obstacles to peak throughput are *bounds checks*, *loop
+//!    overhead*, *cache misses on ρ / the postings stream*, and — once
+//!    those are gone — the **scalar multiply width** itself.
+//!
+//! PR 3 attacked the first three (unrolling, `get_unchecked`, prefetch,
+//! `u32` offsets, the dense Region-1 tail). This module now also
+//! recovers the multiply width: explicit SIMD paths (AVX2, AVX-512F,
+//! NEON) selected **once at startup** into a [`KernelTable`] of
+//! function pointers shared by every worker — the paper's "share the
+//! structure with all objects" move applied to ISA selection, so the
+//! per-call dispatch is a perfectly predicted indirect branch.
+//!
+//! ## Runtime dispatch
+//!
+//! * The active backend resolves once from `SKM_KERNEL`
+//!   (`scalar|avx2|avx512|neon|auto`, default `auto` = best ISA the
+//!   host supports, detected via `is_x86_feature_detected!` /
+//!   `cfg(target_arch = "aarch64")`). Requesting an ISA the host lacks
+//!   is a **hard error** (panic with a clear message), never UB:
+//!   [`resolve_backend`] refuses before any `#[target_feature]` code
+//!   can run.
+//! * Under Miri the scalar table is used unconditionally — the
+//!   interpreter validates the `get_unchecked` arithmetic, not vendor
+//!   intrinsics.
+//! * [`force_backend`] / [`reset_backend`] swap the active table for
+//!   tests and benches ([`Backend::available`] enumerates what the
+//!   host can run). Production code never calls them.
+//!
+//! ## Bit-exactness contract (per kernel)
+//!
+//! Every dispatched path is **bit-identical** to the scalar oracle; the
+//! per-kernel arguments, each enforced by fuzz in `rust/tests/kernel.rs`
+//! and `rust/tests/simd.rs`:
+//!
+//! * [`dense_axpy`]: vector lanes compute `mul` then `add` as two
+//!   separately-rounded IEEE-754 ops — exactly the scalar
+//!   `acc[j] += u * row[j]` sequence. **No FMA contraction** on either
+//!   side: rustc never enables floating-point contraction (only an
+//!   explicit `f64::mul_add` or FMA intrinsic fuses, and none appears
+//!   on the bit-exact paths), so the "provably absent" claim reduces to
+//!   the absence of those tokens — grep-checkable.
+//! * [`scatter_add`] / [`scatter_add_unit`]: within one posting list a
+//!   centroid id appears **at most once** (the index builders emit one
+//!   posting per (term, centroid) — the same distinct-slot argument the
+//!   dense-tail docs make), so the lanes of a gather→mul→add→store
+//!   block touch pairwise-distinct accumulator slots and per-block
+//!   reordering cannot change any slot's operation sequence. Distinct
+//!   ids are therefore part of these kernels' `unsafe` contract
+//!   (debug-asserted per call).
+//! * [`argmax_scan`]: the SIMD scan keeps a per-lane running (value,
+//!   index) pair updated on **strictly-greater** compares, then reduces
+//!   lanes with an explicit lowest-index-wins tie-break and finally
+//!   applies one strictly-greater compare against the caller's initial
+//!   `(amax, rmax)` — reproducing the scalar scan's first-occurrence
+//!   semantics bit for bit, signed zeros included (a later `+0.0` never
+//!   displaces an earlier `-0.0`, exactly like the scalar `>`).
+//! * [`collect_above`]: compare-mask + movemask, emitting indices in
+//!   ascending order via trailing-zeros iteration — same output order,
+//!   same strict `>` threshold.
+//! * [`verify_axpy_ids`] stays a *safe* fn: the SIMD path first checks
+//!   the survivor list is strictly ascending and in bounds (true for
+//!   every in-crate caller — `collect_above*` output is ascending) and
+//!   otherwise falls back to the scalar loop, preserving exact
+//!   semantics (including panic behavior) for all safe inputs.
+//! * [`sparse_dot_dense`] keeps its **sequential scalar accumulator**
+//!   under every backend: a lane-parallel dot product reassociates the
+//!   sum and breaks bits. The opt-in `relaxed-simd` cargo feature
+//!   (documented, off by default, excluded from the golden/equivalence
+//!   suites) replaces it with a 4/8-lane accumulator on x86 — still
+//!   deterministic for a fixed backend, but **not** bit-identical to
+//!   scalar.
+//! * [`scatter_add_versioned`] (DIVI's deliberately cache-hostile
+//!   strawman) and the per-candidate scans ([`argmax_ids`],
+//!   [`collect_above_ids`]) stay scalar on every backend: the former is
+//!   kept faithful to the baseline being measured, the latter run once
+//!   per survivor, not once per posting.
+//!
+//! The dense path is the one deliberate re-ordering: a dense row adds
+//! `u·w[j]` for *every* `j`, padding the absent entries with `w[j] = 0`.
+//! Within one term each centroid appears at most once, so the adds land
+//! in **distinct** accumulator slots and per-term ordering is
+//! irrelevant; the padded adds contribute `u·0.0 = ±0.0`, and
+//! `x + (±0.0)` is a bitwise no-op for every `x` except `x = -0.0`
+//! (where `-0.0 + 0.0 = +0.0`). An accumulator that starts at `+0.0`
+//! can never *become* `-0.0` under IEEE-754 addition (a sum is `-0.0`
+//! only when both addends are `-0.0`), so the dense gather is bit-
+//! identical to the sparse scatter for any accumulator initialized at
+//! `+0.0` or above — which all assigners do (`0.0` or the nonnegative
+//! `y_base`). `rust/tests/kernel.rs` checks this equivalence with
+//! adversarial (negative / underflowing) values.
+//!
+//! ## Safety
+//!
+//! The posting-rate kernels ([`scatter_add`], [`scatter_add_unit`],
+//! [`sparse_dot_dense`], [`scatter_add_versioned`]) are **`unsafe
+//! fn`**: they index with `get_unchecked` (or vector gathers) and
+//! require every id to fall inside the accumulator slice —
+//! [`scatter_add`] / [`scatter_add_unit`] additionally require the ids
+//! to be pairwise distinct (see above). The safe boundary sits where
+//! those invariants are actually enforced — the [`crate::index`]
+//! builders produce ids `< K`, one posting per (term, centroid), and
+//! the assigners size their scratch to `K` — so call sites carry one
+//! `SAFETY:` comment citing exactly that. The invariants are re-checked
+//! per call in debug builds (full-slice scan plus a distinctness
+//! bitmap); CI runs the suite optimized with debug assertions enabled,
+//! and the kernel tests run under Miri on the scalar table.
+//! Mismatched `ids`/`vals` lengths are a **hard error** in every build
+//! profile (release included): a malformed postings slice must fail
+//! loudly, not silently truncate the gather.
+
+use std::sync::atomic::AtomicPtr;
+#[cfg(not(miri))]
+use std::sync::atomic::Ordering;
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+pub(crate) mod simd_x86;
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+pub(crate) mod simd_neon;
+
+/// Environment variable that selects the kernel backend at startup:
+/// `scalar|avx2|avx512|neon|auto` (empty / unset = `auto`).
+pub const KERNEL_ENV: &str = "SKM_KERNEL";
+
+/// How many entries ahead of the current position the ρ prefetch runs.
+/// Far enough to cover DRAM latency at ~4 entries/cycle, near enough
+/// that the line is still resident when the store arrives.
+pub(crate) const PREFETCH_AHEAD: usize = 16;
+
+/// Prefetch the accumulator cache line targeted by `ids[at]` (x86_64
+/// only; a no-op elsewhere — the scalar fallback the portability story
+/// requires). Reads `ids` in bounds-checked fashion: `at` may run past
+/// the end near the tail, where the prefetch simply stops.
+#[inline(always)]
+pub(crate) fn prefetch_acc(acc: &[f64], ids: &[u32], at: usize) {
+    // Skipped under Miri: a prefetch has no observable semantics, and
+    // the interpreter need not model the intrinsic.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        if let Some(&c) = ids.get(at) {
+            let c = c as usize;
+            if c < acc.len() {
+                // SAFETY: `c < acc.len()` just checked; prefetch has no
+                // architectural effect beyond the cache.
+                unsafe {
+                    core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                        acc.as_ptr().add(c) as *const i8,
+                    );
+                }
+            }
+        }
+    }
+    #[cfg(any(not(target_arch = "x86_64"), miri))]
+    {
+        let _ = (acc, ids, at);
+    }
+}
+
+/// Debug-only validation of the unchecked-kernel invariant: every id
+/// inside the accumulator.
+#[inline(always)]
+fn debug_check(acc: &[f64], ids: &[u32], vals: &[f64]) {
+    debug_assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    debug_assert!(
+        ids.iter().all(|&c| (c as usize) < acc.len()),
+        "posting id out of accumulator range"
+    );
+}
+
+/// Debug-only validation of the distinct-ids contract the SIMD
+/// gather/scatter blocks rely on (one posting per (term, centroid) —
+/// guaranteed by every index builder/splicer in this crate).
+#[inline(always)]
+fn debug_check_distinct(acc_len: usize, ids: &[u32]) {
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = vec![false; acc_len];
+        for &c in ids {
+            let c = c as usize;
+            assert!(
+                c < acc_len && !std::mem::replace(&mut seen[c], true),
+                "duplicate or out-of-range posting id {c} violates the scatter_add contract"
+            );
+        }
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (acc_len, ids);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// A kernel instruction-set backend. `Scalar` is the oracle every other
+/// backend must bit-match; it is also the Miri target and the fallback
+/// on hosts without SIMD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can run the backend. Feature detection is the
+    /// *only* gate in front of `#[target_feature]` code — an
+    /// unsupported backend is unreachable by construction.
+    pub fn is_supported(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Avx2 => {
+                #[cfg(all(target_arch = "x86_64", not(miri)))]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+                {
+                    false
+                }
+            }
+            Backend::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", not(miri)))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+                {
+                    false
+                }
+            }
+            // NEON is baseline on aarch64 — present whenever the arch is.
+            Backend::Neon => cfg!(all(target_arch = "aarch64", not(miri))),
+        }
+    }
+
+    /// Best supported backend on this host (the `auto` resolution).
+    pub fn detect() -> Backend {
+        for b in [Backend::Avx512, Backend::Avx2, Backend::Neon] {
+            if b.is_supported() {
+                return b;
+            }
+        }
+        Backend::Scalar
+    }
+
+    /// Every backend this host can run, scalar first — the sweep order
+    /// used by the per-backend equivalence tests and the bench.
+    pub fn available() -> Vec<Backend> {
+        [Backend::Scalar, Backend::Avx2, Backend::Avx512, Backend::Neon]
+            .into_iter()
+            .filter(|b| b.is_supported())
+            .collect()
+    }
+}
+
+/// Resolve a backend request (the `SKM_KERNEL` value, or `None` when
+/// unset) to a backend the host supports. Explicitly requesting an
+/// unsupported ISA is an error — never silently downgraded, never UB.
+pub fn resolve_backend(req: Option<&str>) -> Result<Backend, String> {
+    let b = match req.map(|s| s.trim().to_ascii_lowercase()) {
+        None => return Ok(Backend::detect()),
+        Some(s) => match s.as_str() {
+            "" | "auto" => return Ok(Backend::detect()),
+            "scalar" => Backend::Scalar,
+            "avx2" => Backend::Avx2,
+            "avx512" | "avx512f" => Backend::Avx512,
+            "neon" => Backend::Neon,
+            other => {
+                return Err(format!(
+                    "unknown kernel backend {other:?} (expected scalar|avx2|avx512|neon|auto)"
+                ))
+            }
+        },
+    };
+    if b.is_supported() {
+        Ok(b)
+    } else {
+        Err(format!(
+            "kernel backend {:?} was requested but this host does not support it",
+            b.name()
+        ))
+    }
+}
+
+/// The runtime dispatch table: one function pointer per vectorizable
+/// kernel, resolved once and shared by all workers. Entries are
+/// `unsafe fn` uniformly (some kernels have safe semantics, but
+/// `#[target_feature]` implementations coerce only to `unsafe fn`
+/// pointers); the public wrappers re-establish the safe API.
+struct KernelTable {
+    backend: Backend,
+    scatter_add: unsafe fn(&mut [f64], &[u32], &[f64], f64),
+    scatter_add_unit: unsafe fn(&mut [f64], &[u32], &[f64]),
+    dense_axpy: unsafe fn(&mut [f64], &[f64], f64),
+    argmax_scan: unsafe fn(&[f64], f64, u32) -> (u32, f64),
+    collect_above: unsafe fn(&[f64], f64, &mut Vec<u32>),
+    verify_axpy_ids: unsafe fn(&mut [f64], &[u32], &[f64], f64, f64),
+    sparse_dot_dense: unsafe fn(&[u32], &[f64], &[f64]) -> f64,
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    backend: Backend::Scalar,
+    scatter_add: scatter_add_unrolled,
+    scatter_add_unit: scatter_add_unit_unrolled,
+    dense_axpy: dense_axpy_unrolled,
+    argmax_scan: argmax_scan_fallback,
+    collect_above: collect_above_fallback,
+    verify_axpy_ids: verify_axpy_ids_fallback,
+    sparse_dot_dense: sparse_dot_dense_unrolled,
+};
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+static AVX2_TABLE: KernelTable = KernelTable {
+    backend: Backend::Avx2,
+    scatter_add: simd_x86::avx2::scatter_add,
+    scatter_add_unit: simd_x86::avx2::scatter_add_unit,
+    dense_axpy: simd_x86::avx2::dense_axpy,
+    argmax_scan: simd_x86::avx2::argmax_scan,
+    collect_above: simd_x86::avx2::collect_above,
+    verify_axpy_ids: simd_x86::avx2::verify_axpy_ids,
+    #[cfg(not(feature = "relaxed-simd"))]
+    sparse_dot_dense: sparse_dot_dense_unrolled,
+    #[cfg(feature = "relaxed-simd")]
+    sparse_dot_dense: simd_x86::avx2::sparse_dot_dense_relaxed,
+};
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+static AVX512_TABLE: KernelTable = KernelTable {
+    backend: Backend::Avx512,
+    scatter_add: simd_x86::avx512::scatter_add,
+    scatter_add_unit: simd_x86::avx512::scatter_add_unit,
+    dense_axpy: simd_x86::avx512::dense_axpy,
+    argmax_scan: simd_x86::avx512::argmax_scan,
+    collect_above: simd_x86::avx512::collect_above,
+    verify_axpy_ids: simd_x86::avx512::verify_axpy_ids,
+    #[cfg(not(feature = "relaxed-simd"))]
+    sparse_dot_dense: sparse_dot_dense_unrolled,
+    #[cfg(feature = "relaxed-simd")]
+    sparse_dot_dense: simd_x86::avx512::sparse_dot_dense_relaxed,
+};
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+static NEON_TABLE: KernelTable = KernelTable {
+    backend: Backend::Neon,
+    scatter_add: simd_neon::scatter_add,
+    scatter_add_unit: simd_neon::scatter_add_unit,
+    dense_axpy: simd_neon::dense_axpy,
+    // NEON has no f64 gather/scatter or movemask; the scan kernels keep
+    // the unrolled scalar path (still bit-exact by construction).
+    argmax_scan: argmax_scan_fallback,
+    collect_above: collect_above_fallback,
+    verify_axpy_ids: verify_axpy_ids_fallback,
+    sparse_dot_dense: sparse_dot_dense_unrolled,
+};
+
+/// Pointer to the active table. Null until first use; written once at
+/// startup (or by `force_backend`/`reset_backend` in tests/benches).
+/// An `AtomicPtr` rather than a `OnceLock` precisely so tests can swap
+/// backends; every stored pointer refers to one of the `'static`
+/// tables above, so loads are always valid.
+#[cfg_attr(miri, allow(dead_code))] // Miri pins the scalar table and never reads this.
+static ACTIVE: AtomicPtr<KernelTable> = AtomicPtr::new(std::ptr::null_mut());
+
+#[cfg(not(miri))]
+fn table_for(b: Backend) -> &'static KernelTable {
+    match b {
+        Backend::Scalar => &SCALAR_TABLE,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => &AVX2_TABLE,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 => &AVX512_TABLE,
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => &NEON_TABLE,
+        // Backends not compiled for this arch are rejected by
+        // `resolve_backend`/`force_backend` before reaching here.
+        #[allow(unreachable_patterns)]
+        _ => &SCALAR_TABLE,
+    }
+}
+
+#[cfg(not(miri))]
+#[cold]
+fn init_active() -> &'static KernelTable {
+    let req = std::env::var(KERNEL_ENV).ok();
+    let b = resolve_backend(req.as_deref()).unwrap_or_else(|e| panic!("{KERNEL_ENV}: {e}"));
+    let t = table_for(b);
+    ACTIVE.store(
+        t as *const KernelTable as *mut KernelTable,
+        Ordering::Release,
+    );
+    t
+}
+
+#[inline]
+fn table() -> &'static KernelTable {
+    // Miri always interprets the scalar oracle: vendor intrinsics are
+    // outside its model, and the unsafe indexing is what it validates.
+    #[cfg(miri)]
+    return &SCALAR_TABLE;
+    #[cfg(not(miri))]
+    {
+        let p = ACTIVE.load(Ordering::Acquire);
+        if p.is_null() {
+            init_active()
+        } else {
+            // SAFETY: ACTIVE only ever holds pointers to the 'static
+            // tables above.
+            unsafe { &*p }
+        }
+    }
+}
+
+/// The backend currently answering kernel calls.
+pub fn active_backend() -> Backend {
+    table().backend
+}
+
+/// Swap the active table (tests/benches only — production code resolves
+/// once at startup). Errors on a backend this host cannot run; the
+/// unsupported path is an error, never UB.
+pub fn force_backend(b: Backend) -> Result<(), String> {
+    if !b.is_supported() {
+        return Err(format!(
+            "kernel backend {:?} is not supported on this host",
+            b.name()
+        ));
+    }
+    #[cfg(not(miri))]
+    ACTIVE.store(
+        table_for(b) as *const KernelTable as *mut KernelTable,
+        Ordering::Release,
+    );
+    Ok(())
+}
+
+/// Re-resolve the backend from `SKM_KERNEL` / auto-detection (undoes a
+/// `force_backend` in tests/benches).
+pub fn reset_backend() {
+    #[cfg(not(miri))]
+    {
+        let _ = init_active();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatched API (signatures unchanged from the scalar-only era)
+// ---------------------------------------------------------------------------
+
+/// Branch-free scatter-add over a postings slice:
+/// `acc[ids[q]] += u * vals[q]` for `q` in order.
+///
+/// Dispatched (scalar unrolled / AVX2 gather / AVX-512 gather+scatter /
+/// NEON); every backend is bit-identical to [`scatter_add_scalar`]
+/// under this function's contract — see the module docs. Mismatched
+/// slice lengths are a hard error in every build profile.
+///
+/// # Safety
+///
+/// Every id must be `< acc.len()` **and the ids must be pairwise
+/// distinct** (the SIMD gather/scatter blocks reorder within a lane
+/// block, which is only sound on distinct slots). Both are
+/// debug-asserted per call; in-crate callers get them from the
+/// [`crate::index`] builders (one posting per (term, centroid), ids
+/// `< K`) with `K`-length accumulators.
+#[inline]
+pub unsafe fn scatter_add(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    debug_check(acc, ids, vals);
+    debug_check_distinct(acc.len(), ids);
+    // SAFETY: caller contract (in-range, distinct ids); the table only
+    // ever holds backends this host supports.
+    unsafe { (table().scatter_add)(acc, ids, vals, u) }
+}
+
+/// [`scatter_add`] without the weight: `acc[ids[q]] += vals[q]` (the CS
+/// filter's squared-norm accumulation, which stores pre-squared values
+/// and needs no per-object multiply).
+///
+/// # Safety
+///
+/// Same contract as [`scatter_add`]: every id `< acc.len()`, ids
+/// pairwise distinct (both debug-asserted). Mismatched lengths are a
+/// hard error.
+#[inline]
+pub unsafe fn scatter_add_unit(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    debug_check(acc, ids, vals);
+    debug_check_distinct(acc.len(), ids);
+    // SAFETY: as in `scatter_add`.
+    unsafe { (table().scatter_add_unit)(acc, ids, vals) }
+}
+
+/// Dense gather over a Region-1 tail row: `acc[j] += u * row[j]` for
+/// every `j` of the row — contiguous streaming mul+add, zero
+/// indirection, no scatter. Used for terms inside the dense block of
+/// [`crate::index::InvIndex`]; bit-identical to scatter-adding the
+/// term's sparse postings under the `+0.0`-padding argument in the
+/// module docs. The accumulator must cover the row (hard error
+/// otherwise); rows are 64-byte aligned by the index, but the kernels
+/// use unaligned loads so correctness never depends on that.
+#[inline]
+pub fn dense_axpy(acc: &mut [f64], row: &[f64], u: f64) {
+    assert!(
+        acc.len() >= row.len(),
+        "dense row must fit inside the accumulator"
+    );
+    // SAFETY: row fits in acc (checked above); every backend's impl
+    // touches exactly acc[..row.len()].
+    unsafe { (table().dense_axpy)(acc, row, u) }
+}
+
+/// The ρ-argmax scan over the whole accumulator, with the shared
+/// tie-break semantics every assigner uses: keep `(amax, rmax)` unless
+/// **strictly** better, lowest index first. Previously six hand-rolled
+/// copies (`rho[j] > rmax` loops) drifting apart; now one, dispatched.
+#[inline]
+pub fn argmax_scan(acc: &[f64], rmax: f64, amax: u32) -> (u32, f64) {
+    // SAFETY: every backend's impl only reads `acc` in bounds; the
+    // semantics are safe.
+    unsafe { (table().argmax_scan)(acc, rmax, amax) }
+}
+
+/// [`argmax_scan`] restricted to a candidate id list (the survivor set
+/// `Z`, or the moving-centroid list under ICP). Runs once per
+/// candidate, not per posting, so ordinary bounds-checked indexing is
+/// kept and the function stays safe and scalar on every backend
+/// (panics on an out-of-range id).
+#[inline]
+pub fn argmax_ids(acc: &[f64], ids: &[u32], mut rmax: f64, mut amax: u32) -> (u32, f64) {
+    for &j in ids {
+        let r = acc[j as usize];
+        if r > rmax {
+            rmax = r;
+            amax = j;
+        }
+    }
+    (amax, rmax)
+}
+
+/// The ES main filter over the whole accumulator: collect every index
+/// whose (folded upper-bound) value strictly beats the threshold.
+/// `z` is cleared first; callers pre-reserve it to K so pushes never
+/// allocate (the §Perf allocation-free contract). Dispatched
+/// (movemask-based on x86); output order is ascending on every backend.
+#[inline]
+pub fn collect_above(acc: &[f64], thresh: f64, z: &mut Vec<u32>) {
+    // SAFETY: every backend's impl only reads `acc` in bounds and
+    // pushes into `z`; the semantics are safe.
+    unsafe { (table().collect_above)(acc, thresh, z) }
+}
+
+/// [`collect_above`] restricted to a candidate id list (the ICP
+/// moving-centroid scan). Safe bounds-checked indexing, like
+/// [`argmax_ids`]; scalar on every backend.
+#[inline]
+pub fn collect_above_ids(acc: &[f64], ids: &[u32], thresh: f64, z: &mut Vec<u32>) {
+    z.clear();
+    for &j in ids {
+        if acc[j as usize] > thresh {
+            z.push(j);
+        }
+    }
+}
+
+/// Verification-phase update over the survivor list against one dense
+/// partial-index row: `acc[j] += sign · u · row[j]` for `j ∈ z`.
+/// ES retires deficits with `sign = -1`; CS adds exact Region-3
+/// contributions with `sign = +1`.
+///
+/// Stays a **safe** fn: the SIMD backends pre-validate that `z` is
+/// strictly ascending and in bounds (always true for the
+/// `collect_above*` output the assigners pass) and gather through
+/// `row`; any other input falls back to the scalar loop, so arbitrary
+/// safe inputs keep exact scalar semantics, panics included.
+#[inline]
+pub fn verify_axpy_ids(acc: &mut [f64], z: &[u32], row: &[f64], u: f64, sign: f64) {
+    // SAFETY: every backend's impl validates `z` before any unchecked
+    // access and otherwise runs the bounds-checked scalar loop.
+    unsafe { (table().verify_axpy_ids)(acc, z, row, u, sign) }
+}
+
+/// Sparse·dense dot product in strict left-to-right term order —
+/// Ding+'s exact similarity through the dense mean row (object term id
+/// as direct key). One sequential accumulator, so the sum order (and
+/// hence every bit) matches the naive loop; the win is the removed
+/// bounds checks and unrolled loop control. Scalar under every backend
+/// unless the `relaxed-simd` feature opts into a lane-parallel
+/// (reassociated, documented-inexact) x86 path. Mismatched lengths are
+/// a hard error.
+///
+/// # Safety
+///
+/// Every term id must be `< row.len()` (debug-asserted). In-crate
+/// callers pass CSR rows whose term ids are `< D` with `D`-length dense
+/// mean rows.
+#[inline]
+pub unsafe fn sparse_dot_dense(ts: &[u32], us: &[f64], row: &[f64]) -> f64 {
+    assert_eq!(ts.len(), us.len(), "term/value arrays must be parallel");
+    debug_assert!(ts.iter().all(|&t| (t as usize) < row.len()));
+    // SAFETY: caller contract (ids in range, parallel slices).
+    unsafe { (table().sparse_dot_dense)(ts, us, row) }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar oracles (naive, bounds-checked — the reference for every test)
+// ---------------------------------------------------------------------------
+
+/// Naive bounds-checked scatter-add — the pre-kernel reference loop.
+/// Kept for the bit-identity tests (`rust/tests/kernel.rs`,
+/// `rust/tests/simd.rs`) and the scalar baseline of the gather-kernel
+/// bench section. Unlike the dispatched [`scatter_add`], duplicate ids
+/// are fine here (strictly sequential order).
+#[inline]
+pub fn scatter_add_scalar(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    for (&c, &v) in ids.iter().zip(vals) {
+        acc[c as usize] += u * v;
+    }
+}
+
+/// Naive bounds-checked unit scatter-add (reference for
+/// [`scatter_add_unit`]); duplicate-tolerant like
+/// [`scatter_add_scalar`].
+#[inline]
+pub fn scatter_add_unit_scalar(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    for (&c, &v) in ids.iter().zip(vals) {
+        acc[c as usize] += v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar backend implementations (the unrolled/unchecked paths that were
+// this module's whole body before runtime dispatch existed)
+// ---------------------------------------------------------------------------
+
+/// Fixed-order 4-way unrolled scatter-add with `get_unchecked` indexing
+/// and ρ-line prefetch — the scalar backend's entry.
+///
+/// # Safety
+///
+/// Wrapper contract: parallel slices (already hard-checked), every id
+/// `< acc.len()`.
+pub(crate) unsafe fn scatter_add_unrolled(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    let n = ids.len();
+    let mut q = 0usize;
+    while q + 4 <= n {
+        // Cover all four scatter targets of the block PREFETCH_AHEAD
+        // entries out — the targets are effectively random lines, so
+        // each needs its own prefetch.
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+        // SAFETY: q+3 < n == ids.len() == vals.len(); ids < acc.len()
+        // is the wrapper's contract, checked there in debug builds.
+        unsafe {
+            let c0 = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c0) += u * *vals.get_unchecked(q);
+            let c1 = *ids.get_unchecked(q + 1) as usize;
+            *acc.get_unchecked_mut(c1) += u * *vals.get_unchecked(q + 1);
+            let c2 = *ids.get_unchecked(q + 2) as usize;
+            *acc.get_unchecked_mut(c2) += u * *vals.get_unchecked(q + 2);
+            let c3 = *ids.get_unchecked(q + 3) as usize;
+            *acc.get_unchecked_mut(c3) += u * *vals.get_unchecked(q + 3);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: q < n; same contract as above.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c) += u * *vals.get_unchecked(q);
+        }
+        q += 1;
+    }
+}
+
+/// Unit-weight variant of [`scatter_add_unrolled`].
+///
+/// # Safety
+///
+/// As [`scatter_add_unrolled`].
+pub(crate) unsafe fn scatter_add_unit_unrolled(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    let n = ids.len();
+    let mut q = 0usize;
+    while q + 4 <= n {
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+        prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+        // SAFETY: as in `scatter_add_unrolled`.
+        unsafe {
+            let c0 = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c0) += *vals.get_unchecked(q);
+            let c1 = *ids.get_unchecked(q + 1) as usize;
+            *acc.get_unchecked_mut(c1) += *vals.get_unchecked(q + 1);
+            let c2 = *ids.get_unchecked(q + 2) as usize;
+            *acc.get_unchecked_mut(c2) += *vals.get_unchecked(q + 2);
+            let c3 = *ids.get_unchecked(q + 3) as usize;
+            *acc.get_unchecked_mut(c3) += *vals.get_unchecked(q + 3);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: as in `scatter_add_unrolled`.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *acc.get_unchecked_mut(c) += *vals.get_unchecked(q);
+        }
+        q += 1;
+    }
+}
+
+/// 4-way unrolled dense axpy over `acc[..row.len()]`.
+///
+/// # Safety
+///
+/// Wrapper contract: `acc.len() >= row.len()` (already hard-checked).
+pub(crate) unsafe fn dense_axpy_unrolled(acc: &mut [f64], row: &[f64], u: f64) {
+    let n = row.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        // SAFETY: j+3 < n <= acc.len().
+        unsafe {
+            *acc.get_unchecked_mut(j) += u * *row.get_unchecked(j);
+            *acc.get_unchecked_mut(j + 1) += u * *row.get_unchecked(j + 1);
+            *acc.get_unchecked_mut(j + 2) += u * *row.get_unchecked(j + 2);
+            *acc.get_unchecked_mut(j + 3) += u * *row.get_unchecked(j + 3);
+        }
+        j += 4;
+    }
+    while j < n {
+        // SAFETY: j < n.
+        unsafe {
+            *acc.get_unchecked_mut(j) += u * *row.get_unchecked(j);
+        }
+        j += 1;
+    }
+}
+
+/// Scalar argmax scan — the oracle semantics every SIMD backend must
+/// reproduce (strict `>`, lowest index wins, signed-zero ties keep the
+/// incumbent).
+///
+/// # Safety
+///
+/// Safe semantics (only reads `acc` in bounds); `unsafe fn` purely for
+/// the uniform table type.
+pub(crate) unsafe fn argmax_scan_fallback(acc: &[f64], mut rmax: f64, mut amax: u32) -> (u32, f64) {
+    for (j, &r) in acc.iter().enumerate() {
+        if r > rmax {
+            rmax = r;
+            amax = j as u32;
+        }
+    }
+    (amax, rmax)
+}
+
+/// Scalar threshold filter — ascending push order.
+///
+/// # Safety
+///
+/// Safe semantics; `unsafe fn` purely for the uniform table type.
+pub(crate) unsafe fn collect_above_fallback(acc: &[f64], thresh: f64, z: &mut Vec<u32>) {
+    z.clear();
+    for (j, &r) in acc.iter().enumerate() {
+        if r > thresh {
+            z.push(j as u32);
+        }
+    }
+}
+
+/// Scalar survivor-list axpy — bounds-checked, panics on out-of-range
+/// ids exactly like direct indexing.
+///
+/// # Safety
+///
+/// Safe semantics; `unsafe fn` purely for the uniform table type.
+pub(crate) unsafe fn verify_axpy_ids_fallback(
+    acc: &mut [f64],
+    z: &[u32],
+    row: &[f64],
+    u: f64,
+    sign: f64,
+) {
+    let su = sign * u;
+    for &j in z {
+        let j = j as usize;
+        acc[j] += su * row[j];
+    }
+}
+
+/// Sequential-accumulator sparse·dense dot product, 4-way unrolled.
+///
+/// # Safety
+///
+/// Wrapper contract: parallel slices (hard-checked), every term id
+/// `< row.len()`.
+pub(crate) unsafe fn sparse_dot_dense_unrolled(ts: &[u32], us: &[f64], row: &[f64]) -> f64 {
+    let n = ts.len();
+    let mut s = 0.0f64;
+    let mut q = 0usize;
+    while q + 4 <= n {
+        // SAFETY: q+3 < n; term ids in range is the wrapper's contract.
+        unsafe {
+            s += *us.get_unchecked(q) * *row.get_unchecked(*ts.get_unchecked(q) as usize);
+            s += *us.get_unchecked(q + 1)
+                * *row.get_unchecked(*ts.get_unchecked(q + 1) as usize);
+            s += *us.get_unchecked(q + 2)
+                * *row.get_unchecked(*ts.get_unchecked(q + 2) as usize);
+            s += *us.get_unchecked(q + 3)
+                * *row.get_unchecked(*ts.get_unchecked(q + 3) as usize);
+        }
+        q += 4;
+    }
+    while q < n {
+        // SAFETY: as above.
+        unsafe {
+            s += *us.get_unchecked(q) * *row.get_unchecked(*ts.get_unchecked(q) as usize);
+        }
+        q += 1;
+    }
+    s
+}
+
+/// DIVI's epoch-versioned scatter-add (the deliberately cache-hostile
+/// strawman loop, kept faithful and **scalar on every backend** — it is
+/// the baseline being measured): `score[i − lo] += u·v` with lazy
+/// per-epoch reset and a touched list. Returns nothing; the caller
+/// accounts `ids.len()` multiplications and irregular branches.
+/// Mismatched lengths are a hard error.
+///
+/// # Safety
+///
+/// Ids must be global object ids in `[lo, lo + score.len())` and
+/// `version.len() >= score.len()` (debug-asserted). In-crate callers
+/// pass posting slices already restricted to the shard's id range.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn scatter_add_versioned(
+    score: &mut [f64],
+    version: &mut [u32],
+    touched: &mut Vec<u32>,
+    epoch: u32,
+    ids: &[u32],
+    vals: &[f64],
+    u: f64,
+    lo: usize,
+) {
+    assert_eq!(ids.len(), vals.len(), "postings arrays must be parallel");
+    debug_assert!(version.len() >= score.len());
+    debug_assert!(ids
+        .iter()
+        .all(|&i| (i as usize) >= lo && (i as usize) - lo < score.len()));
+    for (&i, &v) in ids.iter().zip(vals) {
+        let li = i as usize - lo;
+        // SAFETY: caller invariant, checked above in debug builds.
+        unsafe {
+            if *version.get_unchecked(li) != epoch {
+                *version.get_unchecked_mut(li) = epoch;
+                *score.get_unchecked_mut(li) = 0.0;
+                touched.push(li as u32);
+            }
+            *score.get_unchecked_mut(li) += u * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_rejects_unknown_names() {
+        assert!(resolve_backend(Some("scalar")).unwrap() == Backend::Scalar);
+        assert!(resolve_backend(Some("SCALAR")).unwrap() == Backend::Scalar);
+        assert!(resolve_backend(Some("  auto ")).is_ok());
+        assert!(resolve_backend(Some("")).is_ok());
+        assert!(resolve_backend(None).is_ok());
+        assert!(resolve_backend(Some("sse9")).is_err());
+    }
+
+    #[test]
+    fn detect_is_always_supported() {
+        assert!(Backend::detect().is_supported());
+        let avail = Backend::available();
+        assert_eq!(avail[0], Backend::Scalar);
+        assert!(avail.iter().all(|b| b.is_supported()));
+    }
+}

@@ -1,0 +1,93 @@
+//! AArch64 NEON backend for the gather micro-kernels.
+//!
+//! NEON is a baseline feature of AArch64, so these functions are always
+//! callable on that architecture; the dispatch table still routes
+//! through `Backend::Neon` so `SKM_KERNEL=scalar` keeps working and the
+//! fuzz suite can compare both paths on ARM CI hosts.
+//!
+//! Only the multiply-heavy kernels are vectorized. NEON has no
+//! gather/scatter, so the posting kernels vectorize the `u * v`
+//! multiply into a stack buffer with `vmulq_f64` (two separately
+//! rounded IEEE lanes — `vfmaq_f64` is never used, so no contraction)
+//! and then perform the indexed `+=` adds scalarly in posting order.
+//! That add order is *identical* to the scalar loop, which makes these
+//! two kernels bit-exact even for duplicate ids — stricter than the
+//! x86 versions need. The scan kernels (`argmax_scan`,
+//! `collect_above`) and `verify_axpy_ids` stay on the scalar fallbacks
+//! in `NEON_TABLE`; 2-wide compares gain little over the unrolled
+//! scalar form and the scalar path keeps the oracle argument trivial.
+
+#![allow(clippy::missing_safety_doc)] // wrapper-enforced contract, documented in mod.rs
+
+use core::arch::aarch64::*;
+
+/// NEON scatter-add: vectorized multiply, scalar in-order adds.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn scatter_add(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+    let n = ids.len();
+    let base = acc.as_mut_ptr();
+    let uu = vdupq_n_f64(u);
+    let mut buf = [0.0f64; 2];
+    let mut q = 0usize;
+    while q + 2 <= n {
+        // SAFETY: q+1 < n; ids in-range is the kernel contract
+        // (debug-checked by the wrapper).
+        unsafe {
+            let v = vld1q_f64(vals.as_ptr().add(q));
+            vst1q_f64(buf.as_mut_ptr(), vmulq_f64(uu, v));
+            *base.add(*ids.get_unchecked(q) as usize) += buf[0];
+            *base.add(*ids.get_unchecked(q + 1) as usize) += buf[1];
+        }
+        q += 2;
+    }
+    if q < n {
+        // SAFETY: q < n; same contract.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *base.add(c) += u * *vals.get_unchecked(q);
+        }
+    }
+}
+
+/// Unit-weight NEON scatter-add. No multiply at all, so this is the
+/// scalar add sequence verbatim; it exists so `Backend::Neon` owns a
+/// complete posting-kernel set.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn scatter_add_unit(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+    let n = ids.len();
+    let base = acc.as_mut_ptr();
+    let mut q = 0usize;
+    while q < n {
+        // SAFETY: q < n; ids in-range is the kernel contract.
+        unsafe {
+            let c = *ids.get_unchecked(q) as usize;
+            *base.add(c) += *vals.get_unchecked(q);
+        }
+        q += 1;
+    }
+}
+
+/// NEON dense axpy: contiguous 2-lane `vmulq`+`vaddq` (never `vfmaq`).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dense_axpy(acc: &mut [f64], row: &[f64], u: f64) {
+    let n = row.len();
+    let a = acc.as_mut_ptr();
+    let r = row.as_ptr();
+    let uu = vdupq_n_f64(u);
+    let mut j = 0usize;
+    while j + 2 <= n {
+        // SAFETY: j+1 < n <= acc.len() (wrapper contract).
+        unsafe {
+            let av = vld1q_f64(a.add(j));
+            let rv = vld1q_f64(r.add(j));
+            vst1q_f64(a.add(j), vaddq_f64(av, vmulq_f64(uu, rv)));
+        }
+        j += 2;
+    }
+    if j < n {
+        // SAFETY: j < n.
+        unsafe {
+            *a.add(j) += u * *r.add(j);
+        }
+    }
+}

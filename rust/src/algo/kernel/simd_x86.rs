@@ -1,0 +1,619 @@
+//! x86-64 SIMD backends (AVX2, AVX-512F) for the gather micro-kernels.
+//!
+//! Every function here is reached **only** through the dispatch table
+//! in the parent module, which is populated after
+//! `is_x86_feature_detected!` has confirmed the ISA — the
+//! `#[target_feature]` code is unreachable on hosts that lack it.
+//!
+//! Bit-exactness rests on the arguments documented per kernel in the
+//! parent module: separate `mul`/`add` intrinsics (never FMA — rustc
+//! performs no floating-point contraction, and no `mul_add`/`fmadd`
+//! token appears in this file), distinct posting ids per block for the
+//! gather→add→store / gather+scatter sequences, strictly-greater
+//! compare-masks with lowest-index-wins reductions for the scans, and a
+//! scalar fallback whenever a precondition the SIMD form needs (i32
+//! index range, ascending survivor list, minimum length) does not hold.
+//!
+//! The vector gathers index with **signed 32-bit** lane offsets, so any
+//! slice longer than `i32::MAX` elements falls back to the scalar
+//! path — unreachable for real accumulators (length K) and mean rows
+//! (length D), but checked rather than assumed.
+
+#![allow(clippy::missing_safety_doc)] // every fn: wrapper-enforced contract, documented in mod.rs
+
+pub(crate) mod avx2 {
+    use core::arch::x86_64::*;
+
+    use crate::algo::kernel::{
+        self, prefetch_acc, scatter_add_unit_unrolled, scatter_add_unrolled, PREFETCH_AHEAD,
+    };
+
+    /// AVX2 scatter-add: gather four accumulator slots, `mul`+`add`,
+    /// store the four lanes back scalarly (AVX2 has no scatter).
+    /// Distinct ids per the kernel contract make the per-block
+    /// reordering sound; each slot still sees exactly one
+    /// `+= u * v` with scalar-identical rounding.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn scatter_add(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+        if acc.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { scatter_add_unrolled(acc, ids, vals, u) };
+        }
+        let n = ids.len();
+        let base = acc.as_mut_ptr();
+        let uu = _mm256_set1_pd(u);
+        let mut buf = [0.0f64; 4];
+        let mut q = 0usize;
+        while q + 4 <= n {
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+            // SAFETY: q+3 < n; ids in-range/distinct is the kernel
+            // contract (debug-checked by the wrapper); ids fit i32
+            // (acc.len() <= i32::MAX checked above).
+            unsafe {
+                let idx = _mm_loadu_si128(ids.as_ptr().add(q) as *const __m128i);
+                let a = _mm256_i32gather_pd::<8>(base as *const f64, idx);
+                let v = _mm256_loadu_pd(vals.as_ptr().add(q));
+                let r = _mm256_add_pd(a, _mm256_mul_pd(uu, v));
+                _mm256_storeu_pd(buf.as_mut_ptr(), r);
+                *base.add(*ids.get_unchecked(q) as usize) = buf[0];
+                *base.add(*ids.get_unchecked(q + 1) as usize) = buf[1];
+                *base.add(*ids.get_unchecked(q + 2) as usize) = buf[2];
+                *base.add(*ids.get_unchecked(q + 3) as usize) = buf[3];
+            }
+            q += 4;
+        }
+        while q < n {
+            // SAFETY: q < n; same contract.
+            unsafe {
+                let c = *ids.get_unchecked(q) as usize;
+                *base.add(c) += u * *vals.get_unchecked(q);
+            }
+            q += 1;
+        }
+    }
+
+    /// Unit-weight AVX2 scatter-add (no multiply at all — pure
+    /// gather/add/store, same distinct-ids argument).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn scatter_add_unit(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+        if acc.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { scatter_add_unit_unrolled(acc, ids, vals) };
+        }
+        let n = ids.len();
+        let base = acc.as_mut_ptr();
+        let mut buf = [0.0f64; 4];
+        let mut q = 0usize;
+        while q + 4 <= n {
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 1);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 3);
+            // SAFETY: as in `scatter_add`.
+            unsafe {
+                let idx = _mm_loadu_si128(ids.as_ptr().add(q) as *const __m128i);
+                let a = _mm256_i32gather_pd::<8>(base as *const f64, idx);
+                let v = _mm256_loadu_pd(vals.as_ptr().add(q));
+                let r = _mm256_add_pd(a, v);
+                _mm256_storeu_pd(buf.as_mut_ptr(), r);
+                *base.add(*ids.get_unchecked(q) as usize) = buf[0];
+                *base.add(*ids.get_unchecked(q + 1) as usize) = buf[1];
+                *base.add(*ids.get_unchecked(q + 2) as usize) = buf[2];
+                *base.add(*ids.get_unchecked(q + 3) as usize) = buf[3];
+            }
+            q += 4;
+        }
+        while q < n {
+            // SAFETY: q < n; same contract.
+            unsafe {
+                let c = *ids.get_unchecked(q) as usize;
+                *base.add(c) += *vals.get_unchecked(q);
+            }
+            q += 1;
+        }
+    }
+
+    /// AVX2 dense axpy: contiguous 4-lane `mul`+`add` over the row.
+    /// Unaligned loads (the index 64-byte-aligns rows so these never
+    /// split a cache line, but correctness does not depend on it).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dense_axpy(acc: &mut [f64], row: &[f64], u: f64) {
+        let n = row.len();
+        let a = acc.as_mut_ptr();
+        let r = row.as_ptr();
+        let uu = _mm256_set1_pd(u);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            // SAFETY: j+3 < n <= acc.len() (wrapper contract).
+            unsafe {
+                let av = _mm256_loadu_pd(a.add(j));
+                let rv = _mm256_loadu_pd(r.add(j));
+                _mm256_storeu_pd(a.add(j), _mm256_add_pd(av, _mm256_mul_pd(uu, rv)));
+            }
+            j += 4;
+        }
+        while j < n {
+            // SAFETY: j < n.
+            unsafe {
+                *a.add(j) += u * *r.add(j);
+            }
+            j += 1;
+        }
+    }
+
+    /// AVX2 argmax: per-lane running (value, index-as-f64) pairs
+    /// updated on strictly-greater compares, reduced with an explicit
+    /// lowest-index-wins tie-break (numeric equality, so ±0.0 ties
+    /// resolve to the earlier element's bits — scalar semantics), then
+    /// one final strict compare against the caller's `(amax0, rmax0)`.
+    /// Indices as f64 lanes are exact (slice lengths < 2^53).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn argmax_scan(acc: &[f64], rmax0: f64, amax0: u32) -> (u32, f64) {
+        let n = acc.len();
+        if n < 8 {
+            // SAFETY: safe semantics.
+            return unsafe { kernel::argmax_scan_fallback(acc, rmax0, amax0) };
+        }
+        let p = acc.as_ptr();
+        // SAFETY: n >= 8; all block loads below stay < n.
+        unsafe {
+            // Lanes start at -inf so elements only *enter* the running
+            // max through the strict-GT blend. A NaN element therefore
+            // never occupies a lane (GT_OQ is false on unordered), so
+            // it cannot shadow later values in that lane — exactly the
+            // scalar semantics, where NaN loses every comparison and
+            // the scan moves on.
+            let mut vmax = _mm256_set1_pd(f64::NEG_INFINITY);
+            let mut vidx = _mm256_setzero_pd();
+            let step = _mm256_set1_pd(4.0);
+            let mut cur = _mm256_set_pd(3.0, 2.0, 1.0, 0.0);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let v = _mm256_loadu_pd(p.add(j));
+                let gt = _mm256_cmp_pd::<_CMP_GT_OQ>(v, vmax);
+                vmax = _mm256_blendv_pd(vmax, v, gt);
+                vidx = _mm256_blendv_pd(vidx, cur, gt);
+                cur = _mm256_add_pd(cur, step);
+                j += 4;
+            }
+            let mut mv = [0.0f64; 4];
+            let mut mi = [0.0f64; 4];
+            _mm256_storeu_pd(mv.as_mut_ptr(), vmax);
+            _mm256_storeu_pd(mi.as_mut_ptr(), vidx);
+            // NEG_INFINITY start keeps NaN lanes unselected, matching
+            // the scalar scan (NaN never wins a strict `>`).
+            let mut best_v = f64::NEG_INFINITY;
+            let mut best_i = usize::MAX;
+            for l in 0..4 {
+                let (v, i) = (mv[l], mi[l] as usize);
+                if v > best_v || (v == best_v && i < best_i) {
+                    best_v = v;
+                    best_i = i;
+                }
+            }
+            while j < n {
+                let v = *p.add(j);
+                if v > best_v {
+                    best_v = v;
+                    best_i = j;
+                }
+                j += 1;
+            }
+            if best_v > rmax0 {
+                (best_i as u32, best_v)
+            } else {
+                (amax0, rmax0)
+            }
+        }
+    }
+
+    /// AVX2 threshold filter: strict-greater compare-mask + movemask,
+    /// indices emitted in ascending order via trailing-zeros iteration.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn collect_above(acc: &[f64], thresh: f64, z: &mut Vec<u32>) {
+        z.clear();
+        let n = acc.len();
+        let p = acc.as_ptr();
+        let tv = _mm256_set1_pd(thresh);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            // SAFETY: j+3 < n.
+            let mut m = unsafe {
+                let v = _mm256_loadu_pd(p.add(j));
+                _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GT_OQ>(v, tv)) as u32
+            };
+            while m != 0 {
+                z.push(j as u32 + m.trailing_zeros());
+                m &= m - 1;
+            }
+            j += 4;
+        }
+        while j < n {
+            // SAFETY: j < n.
+            if unsafe { *p.add(j) } > thresh {
+                z.push(j as u32);
+            }
+            j += 1;
+        }
+    }
+
+    /// AVX2 survivor-list axpy: gather `row[j]`, multiply by the
+    /// pre-folded `sign·u` (one scalar mul, as in the scalar loop),
+    /// store lanes back scalarly. Requires a strictly ascending
+    /// in-bounds survivor list (what `collect_above*` produces); any
+    /// other input — duplicates, unsorted, out of range — takes the
+    /// scalar fallback, preserving exact safe-fn semantics.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn verify_axpy_ids(
+        acc: &mut [f64],
+        z: &[u32],
+        row: &[f64],
+        u: f64,
+        sign: f64,
+    ) {
+        let lim = acc.len().min(row.len());
+        let simd_ok = row.len() <= i32::MAX as usize
+            && z.windows(2).all(|w| w[0] < w[1])
+            && z.last().map_or(true, |&j| (j as usize) < lim);
+        if !simd_ok {
+            // SAFETY: safe semantics (bounds-checked fallback).
+            return unsafe { kernel::verify_axpy_ids_fallback(acc, z, row, u, sign) };
+        }
+        let su = sign * u;
+        let vsu = _mm256_set1_pd(su);
+        let rp = row.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let n = z.len();
+        let mut buf = [0.0f64; 4];
+        let mut q = 0usize;
+        while q + 4 <= n {
+            // SAFETY: q+3 < n; every id < lim (validated above).
+            unsafe {
+                let idx = _mm_loadu_si128(z.as_ptr().add(q) as *const __m128i);
+                let rv = _mm256_i32gather_pd::<8>(rp, idx);
+                _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_mul_pd(vsu, rv));
+                *ap.add(*z.get_unchecked(q) as usize) += buf[0];
+                *ap.add(*z.get_unchecked(q + 1) as usize) += buf[1];
+                *ap.add(*z.get_unchecked(q + 2) as usize) += buf[2];
+                *ap.add(*z.get_unchecked(q + 3) as usize) += buf[3];
+            }
+            q += 4;
+        }
+        while q < n {
+            // SAFETY: q < n; id < lim.
+            unsafe {
+                let j = *z.get_unchecked(q) as usize;
+                *ap.add(j) += su * *rp.add(j);
+            }
+            q += 1;
+        }
+    }
+
+    /// Lane-parallel sparse·dense dot product — `relaxed-simd` only:
+    /// four independent partial sums reassociate the reduction, so this
+    /// is deterministic for a fixed backend but **not** bit-identical
+    /// to the scalar sequential accumulator. Reduction order is fixed:
+    /// `((l0+l1)+(l2+l3))`, then the scalar tail in sequence.
+    #[cfg(feature = "relaxed-simd")]
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn sparse_dot_dense_relaxed(ts: &[u32], us: &[f64], row: &[f64]) -> f64 {
+        if row.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { kernel::sparse_dot_dense_unrolled(ts, us, row) };
+        }
+        let n = ts.len();
+        let rp = row.as_ptr();
+        let mut sv = _mm256_setzero_pd();
+        let mut q = 0usize;
+        while q + 4 <= n {
+            // SAFETY: q+3 < n; term ids < row.len() is the kernel
+            // contract.
+            unsafe {
+                let idx = _mm_loadu_si128(ts.as_ptr().add(q) as *const __m128i);
+                let rv = _mm256_i32gather_pd::<8>(rp, idx);
+                let uv = _mm256_loadu_pd(us.as_ptr().add(q));
+                sv = _mm256_add_pd(sv, _mm256_mul_pd(uv, rv));
+            }
+            q += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), sv);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        while q < n {
+            // SAFETY: as above.
+            unsafe {
+                s += *us.get_unchecked(q) * *rp.add(*ts.get_unchecked(q) as usize);
+            }
+            q += 1;
+        }
+        s
+    }
+}
+
+pub(crate) mod avx512 {
+    use core::arch::x86_64::*;
+
+    use crate::algo::kernel::{
+        self, prefetch_acc, scatter_add_unit_unrolled, scatter_add_unrolled, PREFETCH_AHEAD,
+    };
+
+    /// AVX-512F scatter-add: true gather + `mul`+`add` + scatter over
+    /// eight lanes. Sound under the kernel's distinct-ids contract
+    /// (`vscatter` with duplicate indices would keep only the highest
+    /// lane — exactly the case the contract excludes).
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn scatter_add(acc: &mut [f64], ids: &[u32], vals: &[f64], u: f64) {
+        if acc.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { scatter_add_unrolled(acc, ids, vals, u) };
+        }
+        let n = ids.len();
+        let base = acc.as_mut_ptr();
+        let uu = _mm512_set1_pd(u);
+        let mut q = 0usize;
+        while q + 8 <= n {
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 4);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 6);
+            // SAFETY: q+7 < n; ids in-range/distinct is the kernel
+            // contract; ids fit i32 (checked above).
+            unsafe {
+                let idx = _mm256_loadu_si256(ids.as_ptr().add(q) as *const __m256i);
+                let a = _mm512_i32gather_pd::<8>(idx, base as *const u8);
+                let v = _mm512_loadu_pd(vals.as_ptr().add(q));
+                let r = _mm512_add_pd(a, _mm512_mul_pd(uu, v));
+                _mm512_i32scatter_pd::<8>(base as *mut u8, idx, r);
+            }
+            q += 8;
+        }
+        while q < n {
+            // SAFETY: q < n; same contract.
+            unsafe {
+                let c = *ids.get_unchecked(q) as usize;
+                *base.add(c) += u * *vals.get_unchecked(q);
+            }
+            q += 1;
+        }
+    }
+
+    /// Unit-weight AVX-512F scatter-add.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn scatter_add_unit(acc: &mut [f64], ids: &[u32], vals: &[f64]) {
+        if acc.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { scatter_add_unit_unrolled(acc, ids, vals) };
+        }
+        let n = ids.len();
+        let base = acc.as_mut_ptr();
+        let mut q = 0usize;
+        while q + 8 <= n {
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 2);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 4);
+            prefetch_acc(acc, ids, q + PREFETCH_AHEAD + 6);
+            // SAFETY: as in `scatter_add`.
+            unsafe {
+                let idx = _mm256_loadu_si256(ids.as_ptr().add(q) as *const __m256i);
+                let a = _mm512_i32gather_pd::<8>(idx, base as *const u8);
+                let v = _mm512_loadu_pd(vals.as_ptr().add(q));
+                _mm512_i32scatter_pd::<8>(base as *mut u8, idx, _mm512_add_pd(a, v));
+            }
+            q += 8;
+        }
+        while q < n {
+            // SAFETY: q < n; same contract.
+            unsafe {
+                let c = *ids.get_unchecked(q) as usize;
+                *base.add(c) += *vals.get_unchecked(q);
+            }
+            q += 1;
+        }
+    }
+
+    /// AVX-512F dense axpy: contiguous 8-lane `mul`+`add`.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn dense_axpy(acc: &mut [f64], row: &[f64], u: f64) {
+        let n = row.len();
+        let a = acc.as_mut_ptr();
+        let r = row.as_ptr();
+        let uu = _mm512_set1_pd(u);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            // SAFETY: j+7 < n <= acc.len() (wrapper contract).
+            unsafe {
+                let av = _mm512_loadu_pd(a.add(j));
+                let rv = _mm512_loadu_pd(r.add(j));
+                _mm512_storeu_pd(a.add(j), _mm512_add_pd(av, _mm512_mul_pd(uu, rv)));
+            }
+            j += 8;
+        }
+        while j < n {
+            // SAFETY: j < n.
+            unsafe {
+                *a.add(j) += u * *r.add(j);
+            }
+            j += 1;
+        }
+    }
+
+    /// AVX-512F argmax — same lane-tracking scheme as the AVX2 version
+    /// (see there for the tie-break/NaN analysis), eight lanes wide.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn argmax_scan(acc: &[f64], rmax0: f64, amax0: u32) -> (u32, f64) {
+        let n = acc.len();
+        if n < 16 {
+            // SAFETY: safe semantics.
+            return unsafe { kernel::argmax_scan_fallback(acc, rmax0, amax0) };
+        }
+        let p = acc.as_ptr();
+        // SAFETY: n >= 16; all block loads below stay < n.
+        unsafe {
+            // -inf lane init: see the AVX2 variant — NaN can never
+            // enter the running max, so it cannot shadow its lane.
+            let mut vmax = _mm512_set1_pd(f64::NEG_INFINITY);
+            let mut vidx = _mm512_setzero_pd();
+            let step = _mm512_set1_pd(8.0);
+            let mut cur = _mm512_set_pd(7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0, 0.0);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let v = _mm512_loadu_pd(p.add(j));
+                let gt = _mm512_cmp_pd_mask::<_CMP_GT_OQ>(v, vmax);
+                vmax = _mm512_mask_blend_pd(gt, vmax, v);
+                vidx = _mm512_mask_blend_pd(gt, vidx, cur);
+                cur = _mm512_add_pd(cur, step);
+                j += 8;
+            }
+            let mut mv = [0.0f64; 8];
+            let mut mi = [0.0f64; 8];
+            _mm512_storeu_pd(mv.as_mut_ptr(), vmax);
+            _mm512_storeu_pd(mi.as_mut_ptr(), vidx);
+            let mut best_v = f64::NEG_INFINITY;
+            let mut best_i = usize::MAX;
+            for l in 0..8 {
+                let (v, i) = (mv[l], mi[l] as usize);
+                if v > best_v || (v == best_v && i < best_i) {
+                    best_v = v;
+                    best_i = i;
+                }
+            }
+            while j < n {
+                let v = *p.add(j);
+                if v > best_v {
+                    best_v = v;
+                    best_i = j;
+                }
+                j += 1;
+            }
+            if best_v > rmax0 {
+                (best_i as u32, best_v)
+            } else {
+                (amax0, rmax0)
+            }
+        }
+    }
+
+    /// AVX-512F threshold filter: the compare yields an `__mmask8`
+    /// directly (no movemask needed); ascending emit order preserved.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn collect_above(acc: &[f64], thresh: f64, z: &mut Vec<u32>) {
+        z.clear();
+        let n = acc.len();
+        let p = acc.as_ptr();
+        let tv = _mm512_set1_pd(thresh);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            // SAFETY: j+7 < n.
+            let mut m = unsafe {
+                let v = _mm512_loadu_pd(p.add(j));
+                _mm512_cmp_pd_mask::<_CMP_GT_OQ>(v, tv) as u32
+            };
+            while m != 0 {
+                z.push(j as u32 + m.trailing_zeros());
+                m &= m - 1;
+            }
+            j += 8;
+        }
+        while j < n {
+            // SAFETY: j < n.
+            if unsafe { *p.add(j) } > thresh {
+                z.push(j as u32);
+            }
+            j += 1;
+        }
+    }
+
+    /// AVX-512F survivor-list axpy — same validation/fallback scheme as
+    /// the AVX2 version, eight lanes wide.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn verify_axpy_ids(
+        acc: &mut [f64],
+        z: &[u32],
+        row: &[f64],
+        u: f64,
+        sign: f64,
+    ) {
+        let lim = acc.len().min(row.len());
+        let simd_ok = row.len() <= i32::MAX as usize
+            && z.windows(2).all(|w| w[0] < w[1])
+            && z.last().map_or(true, |&j| (j as usize) < lim);
+        if !simd_ok {
+            // SAFETY: safe semantics (bounds-checked fallback).
+            return unsafe { kernel::verify_axpy_ids_fallback(acc, z, row, u, sign) };
+        }
+        let su = sign * u;
+        let vsu = _mm512_set1_pd(su);
+        let rp = row.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let n = z.len();
+        let mut buf = [0.0f64; 8];
+        let mut q = 0usize;
+        while q + 8 <= n {
+            // SAFETY: q+7 < n; every id < lim (validated above).
+            unsafe {
+                let idx = _mm256_loadu_si256(z.as_ptr().add(q) as *const __m256i);
+                let rv = _mm512_i32gather_pd::<8>(idx, rp as *const u8);
+                _mm512_storeu_pd(buf.as_mut_ptr(), _mm512_mul_pd(vsu, rv));
+                *ap.add(*z.get_unchecked(q) as usize) += buf[0];
+                *ap.add(*z.get_unchecked(q + 1) as usize) += buf[1];
+                *ap.add(*z.get_unchecked(q + 2) as usize) += buf[2];
+                *ap.add(*z.get_unchecked(q + 3) as usize) += buf[3];
+                *ap.add(*z.get_unchecked(q + 4) as usize) += buf[4];
+                *ap.add(*z.get_unchecked(q + 5) as usize) += buf[5];
+                *ap.add(*z.get_unchecked(q + 6) as usize) += buf[6];
+                *ap.add(*z.get_unchecked(q + 7) as usize) += buf[7];
+            }
+            q += 8;
+        }
+        while q < n {
+            // SAFETY: q < n; id < lim.
+            unsafe {
+                let j = *z.get_unchecked(q) as usize;
+                *ap.add(j) += su * *rp.add(j);
+            }
+            q += 1;
+        }
+    }
+
+    /// Eight-lane relaxed dot product (`relaxed-simd` only; documented
+    /// reassociation — see the AVX2 variant). Reduction order fixed:
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then the scalar tail.
+    #[cfg(feature = "relaxed-simd")]
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn sparse_dot_dense_relaxed(ts: &[u32], us: &[f64], row: &[f64]) -> f64 {
+        if row.len() > i32::MAX as usize {
+            // SAFETY: same contract.
+            return unsafe { kernel::sparse_dot_dense_unrolled(ts, us, row) };
+        }
+        let n = ts.len();
+        let rp = row.as_ptr();
+        let mut sv = _mm512_setzero_pd();
+        let mut q = 0usize;
+        while q + 8 <= n {
+            // SAFETY: q+7 < n; term ids < row.len() is the kernel
+            // contract.
+            unsafe {
+                let idx = _mm256_loadu_si256(ts.as_ptr().add(q) as *const __m256i);
+                let rv = _mm512_i32gather_pd::<8>(idx, rp as *const u8);
+                let uv = _mm512_loadu_pd(us.as_ptr().add(q));
+                sv = _mm512_add_pd(sv, _mm512_mul_pd(uv, rv));
+            }
+            q += 8;
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm512_storeu_pd(lanes.as_mut_ptr(), sv);
+        let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        while q < n {
+            // SAFETY: as above.
+            unsafe {
+                s += *us.get_unchecked(q) * *rp.add(*ts.get_unchecked(q) as usize);
+            }
+            q += 1;
+        }
+        s
+    }
+}

@@ -35,7 +35,7 @@
 //! arrays are ≥¾ full, the index additionally materializes a **dense
 //! row-major block** (`K` doubles per term, capped to stay
 //! cache-resident): the gathering phase then runs
-//! [`crate::algo::kernel::dense_axpy`] — a contiguous FMA loop with
+//! [`crate::algo::kernel::dense_axpy`] — a contiguous mul/add loop with
 //! zero indirection — instead of the id-indirected scatter. This is the
 //! paper's "frequently used data kept in cache" region made literal.
 //! The block is *derived* state, rebuilt deterministically from the
@@ -43,6 +43,14 @@
 //! gather rests on the `+0.0`-padding argument in
 //! [`crate::algo::kernel`]'s docs. The moving-block (ICP) scans keep
 //! using the sparse arrays — the two-block structure is untouched.
+//!
+//! Storage for the block is an [`AlignedF64Vec`] with the per-term row
+//! stride rounded up to 8 doubles (`dense_stride`), so **every row
+//! starts on a 64-byte boundary after every build and every splice**:
+//! the SIMD `dense_axpy` backends then never split a cache line on
+//! their row loads. The stride padding is pure layout — `dense_row`
+//! still hands out exactly `k` values, and the padding doubles are
+//! `+0.0` like every other absent entry.
 //!
 //! Indexes are *persistent* across iterations: instead of rebuilding
 //! from scratch each update step, [`crate::index::maintain`] splices
@@ -52,6 +60,7 @@
 
 use crate::index::means::MeanSet;
 use crate::sparse::CsrMatrix;
+use crate::util::aligned::AlignedF64Vec;
 
 /// Minimum fill (numerator / denominator) for a term to join the dense
 /// tail block: `mf(s) / k ≥ 3/4`.
@@ -88,9 +97,13 @@ pub struct InvIndex {
     /// First term of the dense tail block (`== t_lim` when the block is
     /// empty). Derived from the sparse arrays; see the module docs.
     pub(crate) dense_lo: usize,
-    /// Row-major `k`-length rows for terms `s ∈ [dense_lo, t_lim)`
-    /// (zero-padded mirror of the sparse postings).
-    pub(crate) dense_w: Vec<f64>,
+    /// Row-major rows for terms `s ∈ [dense_lo, t_lim)` (zero-padded
+    /// mirror of the sparse postings), `dense_stride` doubles apart so
+    /// every row is 64-byte aligned.
+    pub(crate) dense_w: AlignedF64Vec,
+    /// Row stride of `dense_w` in doubles: `k` rounded up to a multiple
+    /// of 8. Only the first `k` of each row are meaningful.
+    pub(crate) dense_stride: usize,
 }
 
 impl InvIndex {
@@ -178,7 +191,8 @@ impl InvIndex {
             mfm: cnt_mov,
             moving_ids,
             dense_lo: t_lim,
-            dense_w: Vec::new(),
+            dense_w: AlignedF64Vec::new(),
+            dense_stride: 0,
         };
         idx.refresh_dense_tail();
         idx
@@ -191,10 +205,13 @@ impl InvIndex {
     pub(crate) fn refresh_dense_tail(&mut self) {
         let t_lim = self.offsets.len() - 1;
         let k = self.k;
+        // Row stride: k rounded up to 8 doubles so every row starts on
+        // a 64-byte boundary of the aligned buffer.
+        let stride = if k == 0 { 0 } else { (k + 7) & !7 };
         let max_terms = if k == 0 {
             0
         } else {
-            (DENSE_MAX_BYTES / (k * std::mem::size_of::<f64>())).max(DENSE_MIN_TERMS)
+            (DENSE_MAX_BYTES / (stride * std::mem::size_of::<f64>())).max(DENSE_MIN_TERMS)
         };
         let mut lo = t_lim;
         while lo > 0
@@ -204,11 +221,12 @@ impl InvIndex {
             lo -= 1;
         }
         self.dense_lo = lo;
-        self.dense_w.clear();
-        self.dense_w.resize((t_lim - lo) * k, 0.0);
+        self.dense_stride = stride;
+        self.dense_w.resize_zeroed((t_lim - lo) * stride);
         for s in lo..t_lim {
             let (a, b) = (self.offsets[s] as usize, self.offsets[s + 1] as usize);
-            let row = &mut self.dense_w[(s - lo) * k..(s - lo + 1) * k];
+            let base = (s - lo) * stride;
+            let row = &mut self.dense_w.as_mut_slice()[base..base + k];
             for q in a..b {
                 row[self.ids[q] as usize] = self.vals[q];
             }
@@ -223,17 +241,20 @@ impl InvIndex {
     #[inline]
     pub fn dense_row(&self, s: usize) -> Option<&[f64]> {
         if s >= self.dense_lo && s < self.offsets.len() - 1 {
-            let i = (s - self.dense_lo) * self.k;
-            Some(&self.dense_w[i..i + self.k])
+            let i = (s - self.dense_lo) * self.dense_stride;
+            Some(&self.dense_w.as_slice()[i..i + self.k])
         } else {
             None
         }
     }
 
-    /// `(dense_lo, dense values)` — the derived dense tail block, for
-    /// the equality suites and the bench reporters.
+    /// `(dense_lo, dense values)` — the derived dense tail block
+    /// including the stride padding, for the equality suites and the
+    /// bench reporters. Both sides of an equality comparison are built
+    /// by [`InvIndex::refresh_dense_tail`] with the same `k`, so the
+    /// padded buffers are comparable byte-for-byte.
     pub fn dense_parts(&self) -> (usize, &[f64]) {
-        (self.dense_lo, &self.dense_w)
+        (self.dense_lo, self.dense_w.as_slice())
     }
 
     /// Gather one term into the accumulator and return the charged
@@ -247,15 +268,19 @@ impl InvIndex {
     ///   true `mf(s)`;
     /// * full scan elsewhere: unrolled unchecked scatter-add.
     /// This is the safe boundary over the unsafe scatter kernel: the
-    /// builders/splicers only ever store centroid ids `< k`, so any
-    /// accumulator of length ≥ `k` satisfies the kernel contract.
+    /// builders/splicers only ever store centroid ids `< k`, **at most
+    /// one posting per (term, centroid)** — so within any one term's
+    /// tuple array the ids are pairwise distinct, and any accumulator
+    /// of length ≥ `k` satisfies the kernel contract (in-range +
+    /// distinct ids), including its SIMD gather/scatter forms.
     #[inline]
     pub fn gather_term(&self, s: usize, u: f64, acc: &mut [f64], moving_only: bool) -> u64 {
         assert!(acc.len() >= self.k, "accumulator shorter than K");
         if moving_only {
             let (ids, vals) = self.postings_moving(s);
-            // SAFETY: ids are centroid ids < k ≤ acc.len() by index
-            // construction; ids/vals are parallel postings slices.
+            // SAFETY: ids are centroid ids < k ≤ acc.len() and pairwise
+            // distinct by index construction (one posting per (term,
+            // centroid)); ids/vals are parallel postings slices.
             unsafe { crate::algo::kernel::scatter_add(acc, ids, vals, u) };
             ids.len() as u64
         } else if let Some(row) = self.dense_row(s) {
@@ -326,7 +351,7 @@ impl InvIndex {
             + self.vals.len() * size_of::<f64>()
             + self.mfm.len() * size_of::<u32>()
             + self.moving_ids.len() * size_of::<u32>()
-            + self.dense_w.len() * size_of::<f64>()
+            + self.dense_w.mem_bytes()
     }
 }
 
@@ -508,7 +533,13 @@ mod tests {
         let idx = InvIndex::build(&out.means, 4);
         let (dense_lo, dense_w) = idx.dense_parts();
         assert_eq!(dense_lo, 3, "only the full term should be dense");
-        assert_eq!(dense_w.len(), idx.k);
+        // One row of `dense_stride` doubles: k rounded up to 8, with
+        // +0.0 stride padding past the k meaningful values.
+        assert_eq!(idx.dense_stride, 8);
+        assert_eq!(dense_w.len(), idx.dense_stride);
+        assert!(dense_w[idx.k..].iter().all(|&x| x.to_bits() == 0));
+        // The aligned buffer puts every row on a 64-byte boundary.
+        assert_eq!(dense_w.as_ptr() as usize % 64, 0);
         assert!(idx.dense_row(2).is_none());
         let row = idx.dense_row(3).expect("term 3 is in the dense block");
         // The dense row is the zero-padded mirror of the postings, and

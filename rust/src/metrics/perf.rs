@@ -122,14 +122,35 @@ impl Event {
 
 }
 
-/// A group of hardware counters enabled/disabled together.
+/// Owned perf-event file descriptor: closed exactly once, on drop.
+///
+/// Every fd returned by `perf_event_open` is wrapped in one of these
+/// *immediately*, so there is no code path — partial group setup, an
+/// early `return None`, a panic between opens — on which an opened fd
+/// can outlive its owner. Long-running `skm serve` processes retry
+/// counter setup; before this type, each failed retry relied on a
+/// hand-written close loop that any new early return would bypass.
+struct PerfFd(i32);
+
+impl Drop for PerfFd {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.0) };
+    }
+}
+
+/// A group of hardware counters enabled/disabled together. Dropping
+/// the group closes every fd (via [`PerfFd`]); a partially-opened
+/// group that fails mid-setup closes the already-opened fds the same
+/// way when the local `Vec` unwinds.
 pub struct PerfGroup {
-    fds: Vec<(Event, i32)>,
+    fds: Vec<(Event, PerfFd)>,
 }
 
 impl PerfGroup {
     /// Try to open the paper's counter set. Returns `None` when the
-    /// kernel refuses PMU access (typical in containers).
+    /// kernel refuses PMU access (typical in containers); any fds
+    /// opened before the refusal are closed by their owners as the
+    /// partial `fds` vector drops.
     pub fn try_new() -> Option<Self> {
         let wanted = [
             Event::Instructions,
@@ -138,33 +159,32 @@ impl PerfGroup {
             Event::LlcLoads,
             Event::LlcLoadMisses,
         ];
-        let mut fds = Vec::new();
+        let mut fds: Vec<(Event, PerfFd)> = Vec::new();
         for ev in wanted {
             let fd = perf_event_open(&ev.attr(), -1);
-            if fd < 0 {
-                // LLC events may be unsupported even when the basic ones
-                // work; try the generic cache events for those.
-                if matches!(ev, Event::LlcLoads | Event::LlcLoadMisses) {
-                    let mut attr = ev.attr();
-                    attr.type_ = PERF_TYPE_HARDWARE;
-                    // cache-references = 2, cache-misses = 3 (generic HW events)
-                    attr.config = if ev == Event::LlcLoads {
-                        2
-                    } else {
-                        PERF_COUNT_HW_CACHE_MISSES
-                    };
-                    let fd2 = perf_event_open(&attr, -1);
-                    if fd2 >= 0 {
-                        fds.push((ev, fd2 as i32));
-                        continue;
-                    }
-                }
-                for (_, f) in &fds {
-                    unsafe { libc::close(*f) };
-                }
-                return None;
+            if fd >= 0 {
+                fds.push((ev, PerfFd(fd as i32)));
+                continue;
             }
-            fds.push((ev, fd as i32));
+            // LLC events may be unsupported even when the basic ones
+            // work; try the generic cache events for those.
+            if matches!(ev, Event::LlcLoads | Event::LlcLoadMisses) {
+                let mut attr = ev.attr();
+                attr.type_ = PERF_TYPE_HARDWARE;
+                // cache-references = 2, cache-misses = 3 (generic HW events)
+                attr.config = if ev == Event::LlcLoads {
+                    2
+                } else {
+                    PERF_COUNT_HW_CACHE_MISSES
+                };
+                let fd2 = perf_event_open(&attr, -1);
+                if fd2 >= 0 {
+                    fds.push((ev, PerfFd(fd2 as i32)));
+                    continue;
+                }
+            }
+            // Dropping `fds` here closes every fd opened so far.
+            return None;
         }
         Some(Self { fds })
     }
@@ -172,8 +192,8 @@ impl PerfGroup {
     pub fn start(&self) {
         for (_, fd) in &self.fds {
             unsafe {
-                libc::ioctl(*fd, 0x2403 /* PERF_EVENT_IOC_RESET */, 0);
-                libc::ioctl(*fd, 0x2400 /* PERF_EVENT_IOC_ENABLE */, 0);
+                libc::ioctl(fd.0, 0x2403 /* PERF_EVENT_IOC_RESET */, 0);
+                libc::ioctl(fd.0, 0x2400 /* PERF_EVENT_IOC_ENABLE */, 0);
             }
         }
     }
@@ -182,12 +202,12 @@ impl PerfGroup {
         let mut out = PerfReading::default();
         for (ev, fd) in &self.fds {
             unsafe {
-                libc::ioctl(*fd, 0x2401 /* PERF_EVENT_IOC_DISABLE */, 0);
+                libc::ioctl(fd.0, 0x2401 /* PERF_EVENT_IOC_DISABLE */, 0);
             }
             let mut value: u64 = 0;
             let n = unsafe {
                 libc::read(
-                    *fd,
+                    fd.0,
                     &mut value as *mut u64 as *mut libc::c_void,
                     mem::size_of::<u64>(),
                 )
@@ -203,14 +223,6 @@ impl PerfGroup {
             }
         }
         out
-    }
-}
-
-impl Drop for PerfGroup {
-    fn drop(&mut self) {
-        for (_, fd) in &self.fds {
-            unsafe { libc::close(*fd) };
-        }
     }
 }
 
@@ -324,6 +336,32 @@ mod tests {
         } else {
             println!("perf unavailable in this environment (fallback path)");
         }
+    }
+
+    /// Number of open file descriptors for this process.
+    fn open_fd_count() -> Option<usize> {
+        Some(std::fs::read_dir("/proc/self/fd").ok()?.count())
+    }
+
+    #[test]
+    fn group_setup_never_leaks_fds() {
+        // Whether try_new succeeds, fails outright, or fails after
+        // opening a few events, repeated setup/teardown must leave the
+        // process fd table where it started. This is the `skm serve`
+        // retry loop in miniature.
+        let Some(before) = open_fd_count() else {
+            println!("/proc/self/fd unavailable; skipping");
+            return;
+        };
+        for _ in 0..32 {
+            drop(PerfGroup::try_new());
+        }
+        let after = open_fd_count().unwrap();
+        assert_eq!(
+            before, after,
+            "perf group setup leaked {} fds over 32 retries",
+            after as isize - before as isize
+        );
     }
 
     #[test]

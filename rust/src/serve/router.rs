@@ -320,7 +320,9 @@ impl<'a> Router<'a> {
             let (ids, vals) = self.idx.r2.postings(t as usize);
             mult += ids.len() as u64;
             // SAFETY: Region-2 ids are centroid ids < k == rho.len() by
-            // index construction (same argument as the assigners').
+            // index construction, and pairwise distinct within one
+            // term's list (same argument as the assigners'; required by
+            // the SIMD gather/scatter backends).
             unsafe { kernel::scatter_add(&mut s.rho, ids, vals, u * v_th) };
         }
 

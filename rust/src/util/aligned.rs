@@ -1,0 +1,134 @@
+//! Cache-line-aligned `f64` storage for the dense Region-1 tail block.
+//!
+//! The SIMD gather kernels ([`crate::algo::kernel`]) read the dense
+//! tail rows with 256/512-bit vector loads. Correctness never depends
+//! on alignment — the kernels use unaligned-load intrinsics throughout —
+//! but keeping every row on a 64-byte boundary means those loads never
+//! split a cache line, which is the whole point of the dense block
+//! ("frequently used data kept in cache", §Perf). [`AlignedF64Vec`]
+//! guarantees the alignment after *every* rebuild: the derived dense
+//! block is reconstructed from scratch on each build and each
+//! incremental splice, so the buffer only needs to re-derive its
+//! aligned window when it (re)allocates, never to preserve data across
+//! a reallocation.
+//!
+//! Implementation: over-allocate a plain `Vec<f64>` by up to 7 elements
+//! and slice from the first 64-byte-aligned element. No custom
+//! allocator, no `unsafe` — the alignment is a perf property layered on
+//! ordinary safe storage.
+
+use std::mem::size_of;
+
+/// Alignment target: one cache line / one AVX-512 register (64 bytes).
+pub const CACHE_LINE_BYTES: usize = 64;
+const ALIGN_ELEMS: usize = CACHE_LINE_BYTES / size_of::<f64>();
+
+/// A growable `f64` buffer whose first element always sits on a
+/// [`CACHE_LINE_BYTES`] boundary. Contents are only ever rebuilt whole
+/// (see the module docs), so the single mutator is
+/// [`AlignedF64Vec::resize_zeroed`].
+#[derive(Debug, Default)]
+pub struct AlignedF64Vec {
+    buf: Vec<f64>,
+    off: usize,
+    len: usize,
+}
+
+impl AlignedF64Vec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Discard all contents and resize to `n` zeros, re-deriving the
+    /// aligned window (the backing `Vec` may have moved on
+    /// reallocation).
+    pub fn resize_zeroed(&mut self, n: usize) {
+        self.buf.clear();
+        if n == 0 {
+            self.off = 0;
+            self.len = 0;
+            return;
+        }
+        self.buf.resize(n + ALIGN_ELEMS - 1, 0.0);
+        let addr = self.buf.as_ptr() as usize;
+        debug_assert_eq!(addr % size_of::<f64>(), 0, "Vec<f64> must be 8-aligned");
+        self.off = (ALIGN_ELEMS - (addr / size_of::<f64>()) % ALIGN_ELEMS) % ALIGN_ELEMS;
+        self.len = n;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+
+    /// Resident bytes including the alignment slack (Max MEM
+    /// accounting counts what is actually allocated).
+    pub fn mem_bytes(&self) -> usize {
+        self.buf.len() * size_of::<f64>()
+    }
+}
+
+impl Clone for AlignedF64Vec {
+    fn clone(&self) -> Self {
+        // The clone's backing Vec lands at a different address, so the
+        // aligned window must be re-derived, not copied.
+        let mut v = AlignedF64Vec::new();
+        v.resize_zeroed(self.len);
+        v.as_mut_slice().copy_from_slice(self.as_slice());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_aligned(v: &AlignedF64Vec) -> bool {
+        v.is_empty() || (v.as_slice().as_ptr() as usize) % CACHE_LINE_BYTES == 0
+    }
+
+    #[test]
+    fn aligned_after_every_resize() {
+        let mut v = AlignedF64Vec::new();
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000, 3, 0, 17] {
+            v.resize_zeroed(n);
+            assert_eq!(v.len(), n);
+            assert!(is_aligned(&v), "misaligned at n={n}");
+            assert!(v.as_slice().iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn contents_survive_clone_with_alignment() {
+        let mut v = AlignedF64Vec::new();
+        v.resize_zeroed(37);
+        for (i, x) in v.as_mut_slice().iter_mut().enumerate() {
+            *x = i as f64 * 0.5 - 3.0;
+        }
+        let c = v.clone();
+        assert!(is_aligned(&c));
+        assert_eq!(v.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn mem_accounting_counts_slack() {
+        let mut v = AlignedF64Vec::new();
+        v.resize_zeroed(16);
+        assert!(v.mem_bytes() >= 16 * std::mem::size_of::<f64>());
+    }
+}

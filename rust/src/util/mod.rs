@@ -2,6 +2,7 @@
 //! timing. Everything here is dependency-free because the build
 //! environment is offline (see DESIGN.md §3).
 
+pub mod aligned;
 pub mod cli;
 pub mod io;
 pub mod json;

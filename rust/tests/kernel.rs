@@ -1,12 +1,19 @@
 //! Property/fuzz-style bit-identity suite for the gather micro-kernels
-//! (§Perf tentpole): the unrolled / `get_unchecked` / dense-block
-//! kernels in `skm::algo::kernel` must be **bit-identical** to the
-//! naive bounds-checked scalar scatter-add across random posting
-//! lengths (covering the 4-way unroll remainders 0–3), empty slices,
-//! duplicate centroid ids, adversarial values (negative, underflowing,
-//! exact zeros), and through a real `InvIndex` with an active dense
-//! Region-1 tail. This binary is also the Miri target for the unsafe
-//! indexing (see the CI `miri` job).
+//! (§Perf tentpole): the dispatched kernels in `skm::algo::kernel`
+//! (scalar-unrolled on this binary's default path; the SIMD backends
+//! are additionally swept in `tests/simd.rs`) must be **bit-identical**
+//! to the naive bounds-checked scalar scatter-add across random
+//! posting lengths (covering the SIMD-block remainders 0–7), empty
+//! slices, adversarial values (negative, underflowing, exact zeros),
+//! and through a real `InvIndex` with an active dense Region-1 tail.
+//! The dispatched scatter kernels require pairwise-distinct ids (the
+//! SIMD gather/scatter contract); duplicate-id accumulation order is
+//! covered on the kernels that remain dup-tolerant — the scalar
+//! oracles, `scatter_add_versioned`, and `verify_axpy_ids`. Mismatched
+//! posting-array lengths are a hard error on every path (no silent
+//! release-mode truncation). This binary is also the Miri target for
+//! the unsafe indexing (see the CI `miri` job; Miri always runs the
+//! scalar table).
 
 use skm::algo::kernel;
 use skm::index::{update_means, InvIndex};
@@ -25,17 +32,30 @@ fn random_vals(rng: &mut Pcg32, len: usize) -> Vec<f64> {
         .collect()
 }
 
+/// `len` pairwise-distinct ids drawn from `0..k`, in shuffled order
+/// (Fisher–Yates) — the distinct-ids contract of the dispatched
+/// scatter kernels, with arbitrary (non-ascending) order still allowed.
+fn distinct_ids(rng: &mut Pcg32, len: usize, k: usize) -> Vec<u32> {
+    assert!(len <= k);
+    let mut pool: Vec<u32> = (0..k as u32).collect();
+    for i in (1..pool.len()).rev() {
+        let j = rng.gen_range(i as u32 + 1) as usize;
+        pool.swap(i, j);
+    }
+    pool.truncate(len);
+    pool
+}
+
 #[test]
-fn scatter_add_bit_identical_across_lengths_and_duplicates() {
+fn scatter_add_bit_identical_across_lengths_and_remainders() {
     let mut rng = Pcg32::new(0xbead_cafe);
     for trial in 0..500usize {
-        let k = 1 + rng.gen_range(64) as usize;
-        // Length schedule sweeps the unroll remainders 0–3 explicitly
-        // (trial % 4) on top of random multiples of 4.
-        let len = 4 * rng.gen_range(32) as usize + trial % 4;
-        // Random ids with guaranteed duplicates on many trials.
-        let bound = 1 + rng.gen_range(k as u32);
-        let ids: Vec<u32> = (0..len).map(|_| rng.gen_range(bound)).collect();
+        // Length schedule sweeps the SIMD-block remainders 0–7
+        // explicitly (trial % 8) on top of random multiples of 8.
+        let len = 8 * rng.gen_range(16) as usize + trial % 8;
+        // Distinct shuffled ids < k (the dispatched-kernel contract).
+        let k = len + 1 + rng.gen_range(32) as usize;
+        let ids = distinct_ids(&mut rng, len, k);
         let vals = random_vals(&mut rng, len);
         let u = rng.next_f64() * 3.0 - 1.0;
         // Accumulators start at arbitrary nonnegative values (what the
@@ -45,7 +65,8 @@ fn scatter_add_bit_identical_across_lengths_and_duplicates() {
         let mut naive = init.clone();
         kernel::scatter_add_scalar(&mut naive, &ids, &vals, u);
         let mut tuned = init.clone();
-        // SAFETY: ids were generated < k == tuned.len(); parallel slices.
+        // SAFETY: ids were generated < k == tuned.len(), pairwise
+        // distinct; parallel slices.
         unsafe { kernel::scatter_add(&mut tuned, &ids, &vals, u) };
         for (q, (a, b)) in naive.iter().zip(&tuned).enumerate() {
             assert_eq!(
@@ -64,6 +85,99 @@ fn scatter_add_bit_identical_across_lengths_and_duplicates() {
             assert_eq!(a.to_bits(), b.to_bits(), "unit trial {trial}");
         }
     }
+}
+
+#[test]
+fn scalar_oracles_accumulate_duplicates_in_posting_order() {
+    // The scalar oracles stay duplicate-tolerant (sequential += in
+    // posting order) — that is what makes them the reference for the
+    // index builders' one-posting-per-centroid invariant rather than a
+    // mirror of the SIMD contract.
+    let mut rng = Pcg32::new(0xd0b1_5eed);
+    for trial in 0..200usize {
+        let k = 1 + rng.gen_range(24) as usize;
+        let len = 4 * rng.gen_range(12) as usize + trial % 4;
+        let bound = 1 + rng.gen_range(k as u32);
+        let ids: Vec<u32> = (0..len).map(|_| rng.gen_range(bound)).collect();
+        let vals = random_vals(&mut rng, len);
+        let u = rng.next_f64() * 2.0 - 0.5;
+        let init: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+
+        let mut naive = init.clone();
+        for (&c, &v) in ids.iter().zip(&vals) {
+            naive[c as usize] += u * v;
+        }
+        let mut oracle = init.clone();
+        kernel::scatter_add_scalar(&mut oracle, &ids, &vals, u);
+        for (a, b) in naive.iter().zip(&oracle) {
+            assert_eq!(a.to_bits(), b.to_bits(), "trial {trial}");
+        }
+
+        let mut naive_u = init.clone();
+        for (&c, &v) in ids.iter().zip(&vals) {
+            naive_u[c as usize] += v;
+        }
+        let mut oracle_u = init;
+        kernel::scatter_add_unit_scalar(&mut oracle_u, &ids, &vals);
+        for (a, b) in naive_u.iter().zip(&oracle_u) {
+            assert_eq!(a.to_bits(), b.to_bits(), "unit trial {trial}");
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "parallel")]
+fn scatter_add_rejects_mismatched_lengths() {
+    let mut acc = vec![0.0f64; 4];
+    // Ids are in range; only the lengths disagree. Must panic (hard
+    // error), never silently truncate.
+    // SAFETY: ids < acc.len(); the length mismatch is the point.
+    unsafe { kernel::scatter_add(&mut acc, &[0, 1], &[1.0], 2.0) };
+}
+
+#[test]
+#[should_panic(expected = "parallel")]
+fn scatter_add_unit_rejects_mismatched_lengths() {
+    let mut acc = vec![0.0f64; 4];
+    // SAFETY: as above.
+    unsafe { kernel::scatter_add_unit(&mut acc, &[2], &[1.0, 1.0]) };
+}
+
+#[test]
+#[should_panic(expected = "parallel")]
+fn scalar_oracle_rejects_mismatched_lengths() {
+    let mut acc = vec![0.0f64; 4];
+    kernel::scatter_add_scalar(&mut acc, &[0, 1], &[1.0], 2.0);
+}
+
+#[test]
+#[should_panic(expected = "parallel")]
+fn sparse_dot_dense_rejects_mismatched_lengths() {
+    let row = vec![1.0f64; 4];
+    // SAFETY: term ids < row.len(); the length mismatch is the point.
+    unsafe { kernel::sparse_dot_dense(&[0, 1], &[1.0], &row) };
+}
+
+#[test]
+#[should_panic(expected = "parallel")]
+fn versioned_scatter_rejects_mismatched_lengths() {
+    let mut score = vec![0.0f64; 3];
+    let mut version = vec![0u32; 3];
+    let mut touched = Vec::new();
+    // SAFETY: ids in [lo, lo + score.len()); the length mismatch is
+    // the point.
+    unsafe {
+        kernel::scatter_add_versioned(
+            &mut score,
+            &mut version,
+            &mut touched,
+            1,
+            &[5, 6],
+            &[1.0],
+            2.0,
+            5,
+        )
+    };
 }
 
 #[test]
@@ -184,6 +298,43 @@ fn verify_axpy_matches_naive_loop_both_signs() {
     }
 }
 
+#[test]
+fn verify_axpy_handles_duplicate_and_unsorted_survivors() {
+    // `verify_axpy_ids` is a *safe* fn over arbitrary survivor lists:
+    // the SIMD backends prevalidate (strictly ascending, in-bounds)
+    // and fall back to the scalar loop otherwise, so duplicates and
+    // unsorted ids keep exact sequential += semantics on every
+    // backend. The assigners only ever pass `collect_above*` output,
+    // but the safe contract must hold regardless.
+    let mut rng = Pcg32::new(0xca11_ab1e);
+    for trial in 0..100usize {
+        let k = 2 + rng.gen_range(24) as usize;
+        let row: Vec<f64> = (0..k).map(|_| rng.next_f64() - 0.3).collect();
+        let init: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+        // Random order, duplicates likely.
+        let len = 1 + rng.gen_range(3 * k as u32) as usize;
+        let z: Vec<u32> = (0..len).map(|_| rng.gen_range(k as u32)).collect();
+        let u = rng.next_f64() + 0.05;
+        for sign in [1.0f64, -1.0] {
+            let mut naive = init.clone();
+            let su = sign * u;
+            for &j in &z {
+                naive[j as usize] += su * row[j as usize];
+            }
+            let mut tuned = init.clone();
+            kernel::verify_axpy_ids(&mut tuned, &z, &row, u, sign);
+            for (a, b) in naive.iter().zip(&tuned) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} sign {sign}");
+            }
+        }
+    }
+}
+
+/// The default build keeps `sparse_dot_dense` on the sequential scalar
+/// accumulator on every backend; the opt-in `relaxed-simd` feature
+/// documents away exactly this guarantee, so the test is gated off
+/// under it.
+#[cfg(not(feature = "relaxed-simd"))]
 #[test]
 fn sparse_dot_dense_is_order_exact() {
     let mut rng = Pcg32::new(0xd1d_0bee);

@@ -1,0 +1,385 @@
+//! Dispatch-correctness suite for the runtime-selected SIMD kernels
+//! (§Perf tentpole, PR 6): every backend the host supports must be
+//! **bit-identical** to the scalar oracle on every bit-exact kernel,
+//! under fuzz (SIMD-block remainders 0–7, adversarial values, the
+//! dense-tail +0.0-padding cases, signed-zero argmax ties) *and* end to
+//! end (a full clustering run per backend vs the scalar-forced run).
+//! Requests for an ISA the host lacks must error — never select, never
+//! UB.
+//!
+//! Backend forcing is process-global (`kernel::force_backend` swaps the
+//! dispatch table all threads share), so every test that forces a
+//! backend serializes on [`GUARD`] and restores auto-detection through
+//! a drop guard before releasing it. Under Miri the dispatcher pins the
+//! scalar table and forcing is a no-op; the suites still pass because
+//! scalar-vs-scalar comparisons are trivially bit-equal.
+
+use std::sync::Mutex;
+
+use skm::algo::kernel::{self, Backend};
+use skm::algo::{run_clustering, AlgoKind, ClusterConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::sparse::build_dataset;
+use skm::util::rng::Pcg32;
+
+/// Serializes all backend-forcing tests (poison-tolerant: a failing
+/// test must not cascade into "poisoned lock" noise on the rest).
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Forces `b` for the guard's lifetime, restoring auto-detection on
+/// drop (including on panic, so one failure cannot leak a forced
+/// backend into later tests).
+struct Forced;
+
+impl Forced {
+    fn new(b: Backend) -> Self {
+        kernel::force_backend(b).expect("forcing a supported backend");
+        Forced
+    }
+}
+
+impl Drop for Forced {
+    fn drop(&mut self) {
+        kernel::reset_backend();
+    }
+}
+
+fn random_vals(rng: &mut Pcg32, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|_| match rng.gen_range(12) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => -(rng.next_f64() + 0.05),
+            3 => rng.next_f64() * 1e-308, // underflow-adjacent
+            4 => -rng.next_f64() * 1e-308,
+            _ => rng.next_f64(),
+        })
+        .collect()
+}
+
+/// `len` pairwise-distinct shuffled ids from `0..k` (the dispatched
+/// scatter kernels' contract).
+fn distinct_ids(rng: &mut Pcg32, len: usize, k: usize) -> Vec<u32> {
+    assert!(len <= k);
+    let mut pool: Vec<u32> = (0..k as u32).collect();
+    for i in (1..pool.len()).rev() {
+        let j = rng.gen_range(i as u32 + 1) as usize;
+        pool.swap(i, j);
+    }
+    pool.truncate(len);
+    pool
+}
+
+fn assert_bits(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (q, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: slot {q}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn backend_names_resolve_and_unknown_names_error() {
+    assert_eq!(kernel::resolve_backend(Some("scalar")), Ok(Backend::Scalar));
+    assert_eq!(kernel::resolve_backend(Some(" Scalar ")), Ok(Backend::Scalar));
+    // auto / empty / unset → detection, which must itself be supported.
+    for req in [None, Some(""), Some("auto")] {
+        let b = kernel::resolve_backend(req).expect("auto must resolve");
+        assert!(b.is_supported(), "detected backend {b:?} unsupported");
+    }
+    // avx512f is an accepted alias for avx512 (resolution-level only;
+    // whether it is *supported* depends on the host).
+    match (
+        kernel::resolve_backend(Some("avx512")),
+        kernel::resolve_backend(Some("avx512f")),
+    ) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b),
+        (Err(_), Err(_)) => {}
+        (a, b) => panic!("alias mismatch: {a:?} vs {b:?}"),
+    }
+    // Unknown names are a hard error, not a silent scalar fallback.
+    assert!(kernel::resolve_backend(Some("sse9")).is_err());
+    assert!(kernel::resolve_backend(Some("fastest")).is_err());
+}
+
+#[test]
+fn unsupported_isa_requests_error_not_ub() {
+    // At least one of these is foreign on any given host (no machine
+    // supports both the x86 and the ARM vector ISA).
+    let foreign: &[Backend] = if cfg!(target_arch = "x86_64") {
+        &[Backend::Neon]
+    } else if cfg!(target_arch = "aarch64") {
+        &[Backend::Avx2, Backend::Avx512]
+    } else {
+        &[Backend::Avx2, Backend::Avx512, Backend::Neon]
+    };
+    for &b in foreign {
+        assert!(!b.is_supported(), "{b:?} cannot be supported here");
+        assert!(
+            kernel::resolve_backend(Some(b.name())).is_err(),
+            "resolving {b:?} must error on this host"
+        );
+        assert!(
+            kernel::force_backend(b).is_err(),
+            "forcing {b:?} must error on this host"
+        );
+    }
+    // Erroring must not have clobbered the active table.
+    assert!(kernel::active_backend().is_supported());
+}
+
+#[test]
+fn every_supported_backend_bit_matches_the_scalar_oracle_under_fuzz() {
+    let _l = lock();
+    for b in Backend::available() {
+        let _f = Forced::new(b);
+        assert_eq!(kernel::active_backend(), b);
+        fuzz_one_backend(b);
+    }
+}
+
+fn fuzz_one_backend(b: Backend) {
+    let tagb = b.name();
+    let mut rng = Pcg32::new(0x51d3_c0de ^ (tagb.len() as u64) << 32);
+    for trial in 0..300usize {
+        // SIMD-block remainders 0–7 on top of random multiples of 8.
+        let len = 8 * rng.gen_range(16) as usize + trial % 8;
+        let k = len + 1 + rng.gen_range(48) as usize;
+        let ids = distinct_ids(&mut rng, len, k);
+        let vals = random_vals(&mut rng, len);
+        let u = rng.next_f64() * 3.0 - 1.0;
+        let init: Vec<f64> = random_vals(&mut rng, k);
+
+        // scatter_add / scatter_add_unit vs the dup-tolerant scalar
+        // oracles (distinct ids ⇒ both contracts hold).
+        let mut oracle = init.clone();
+        kernel::scatter_add_scalar(&mut oracle, &ids, &vals, u);
+        let mut tuned = init.clone();
+        // SAFETY: ids distinct, < k == tuned.len(); parallel slices.
+        unsafe { kernel::scatter_add(&mut tuned, &ids, &vals, u) };
+        assert_bits(&oracle, &tuned, &format!("{tagb} scatter_add t{trial}"));
+
+        let mut oracle_u = init.clone();
+        kernel::scatter_add_unit_scalar(&mut oracle_u, &ids, &vals);
+        let mut tuned_u = init.clone();
+        // SAFETY: as above.
+        unsafe { kernel::scatter_add_unit(&mut tuned_u, &ids, &vals) };
+        assert_bits(&oracle_u, &tuned_u, &format!("{tagb} unit t{trial}"));
+
+        // dense_axpy on a +0.0-padded row (the dense-tail adversarial
+        // case: absent entries are exact +0.0) into an accumulator
+        // *longer* than the row, as `gather_term` does; the suffix must
+        // be untouched.
+        let mut row = vec![0.0f64; k];
+        for (&c, &v) in ids.iter().zip(&vals) {
+            row[c as usize] = v;
+        }
+        let acc_len = k + rng.gen_range(8) as usize;
+        let init_a: Vec<f64> = random_vals(&mut rng, acc_len);
+        let mut naive_a = init_a.clone();
+        for j in 0..k {
+            naive_a[j] += u * row[j];
+        }
+        let mut tuned_a = init_a.clone();
+        kernel::dense_axpy(&mut tuned_a, &row, u);
+        assert_bits(&naive_a, &tuned_a, &format!("{tagb} dense_axpy t{trial}"));
+
+        // argmax_scan vs the naive scan — include exact duplicates,
+        // ±0.0 (so the lowest-index-wins tie-break and which zero's
+        // bits survive are exercised, not just strict maxima) and NaN
+        // (which must lose every comparison without shadowing later
+        // values in its SIMD lane).
+        let acc: Vec<f64> = (0..k)
+            .map(|_| match rng.gen_range(7) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 0.5, // frequent exact duplicates
+                3 => f64::NAN,
+                _ => rng.next_f64() * 4.0 - 2.0,
+            })
+            .collect();
+        let thresh = rng.next_f64() * 2.0 - 1.0;
+        let init_id = rng.gen_range(k as u32);
+        let (mut amax, mut rmax) = (init_id, thresh);
+        for (j, &r) in acc.iter().enumerate() {
+            if r > rmax {
+                rmax = r;
+                amax = j as u32;
+            }
+        }
+        let (ga, gr) = kernel::argmax_scan(&acc, thresh, init_id);
+        assert_eq!((ga, gr.to_bits()), (amax, rmax.to_bits()), "{tagb} argmax t{trial}");
+
+        // collect_above vs the naive filter (ascending order included).
+        let naive_z: Vec<u32> = (0..k as u32)
+            .filter(|&j| acc[j as usize] > thresh)
+            .collect();
+        let mut z = Vec::new();
+        kernel::collect_above(&acc, thresh, &mut z);
+        assert_eq!(z, naive_z, "{tagb} collect_above t{trial}");
+
+        // verify_axpy_ids over the ascending survivor list (the SIMD
+        // fast path) and over a shuffled duplicate-laden list (the
+        // prevalidation fallback), both signs.
+        let dup_z: Vec<u32> = (0..len).map(|_| rng.gen_range(k as u32)).collect();
+        for zl in [&naive_z, &dup_z] {
+            for sign in [1.0f64, -1.0] {
+                let mut naive_v = init.clone();
+                let su = sign * u;
+                for &j in zl {
+                    naive_v[j as usize] += su * row[j as usize];
+                }
+                let mut tuned_v = init.clone();
+                kernel::verify_axpy_ids(&mut tuned_v, zl, &row, u, sign);
+                assert_bits(&naive_v, &tuned_v, &format!("{tagb} verify t{trial}"));
+            }
+        }
+
+        // sparse_dot_dense stays the sequential scalar accumulator on
+        // every backend unless `relaxed-simd` opted out of bit-exactness.
+        #[cfg(not(feature = "relaxed-simd"))]
+        {
+            let mut naive_s = 0.0f64;
+            for (&t, &uv) in ids.iter().zip(&vals) {
+                naive_s += uv * row[t as usize];
+            }
+            // SAFETY: ids < k == row.len(); parallel slices.
+            let got = unsafe { kernel::sparse_dot_dense(&ids, &vals, &row) };
+            assert_eq!(naive_s.to_bits(), got.to_bits(), "{tagb} dot t{trial}");
+        }
+    }
+
+    // Sub-width inputs take the scalar fallback inside the SIMD fns —
+    // sweep every length below two full blocks.
+    let mut rng = Pcg32::new(0x0ddb_a11 ^ tagb.len() as u64);
+    for n in 0..32usize {
+        let acc: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        let (mut amax, mut rmax) = (7u32, -0.25f64);
+        for (j, &r) in acc.iter().enumerate() {
+            if r > rmax {
+                rmax = r;
+                amax = j as u32;
+            }
+        }
+        assert_eq!(
+            kernel::argmax_scan(&acc, -0.25, 7),
+            (amax, rmax),
+            "{tagb} short argmax n={n}"
+        );
+    }
+}
+
+#[test]
+fn forced_env_and_reset_agree() {
+    let _l = lock();
+    // A forced backend sticks until reset, and reset honors SKM_KERNEL.
+    {
+        let _f = Forced::new(Backend::Scalar);
+        assert_eq!(kernel::active_backend(), Backend::Scalar);
+    }
+    // After the guard dropped, the env var (or auto-detection when it
+    // is unset) decides again. Under Miri the table is pinned scalar.
+    if cfg!(miri) {
+        assert_eq!(kernel::active_backend(), Backend::Scalar);
+        return;
+    }
+    let prev = std::env::var(kernel::KERNEL_ENV).ok();
+    std::env::set_var(kernel::KERNEL_ENV, "scalar");
+    kernel::reset_backend();
+    assert_eq!(kernel::active_backend(), Backend::Scalar);
+    std::env::remove_var(kernel::KERNEL_ENV);
+    kernel::reset_backend();
+    assert_eq!(kernel::active_backend(), Backend::detect());
+    // Put the process env back the way the harness launched it (the CI
+    // matrix leg that exports SKM_KERNEL=scalar relies on it).
+    if let Some(v) = prev {
+        std::env::set_var(kernel::KERNEL_ENV, v);
+    }
+    kernel::reset_backend();
+}
+
+/// End-to-end: a full clustering run per supported backend must be
+/// bit-identical to the scalar-forced run — assignments, per-iteration
+/// objective bits, and final objective bits.
+#[test]
+fn end_to_end_cluster_runs_bit_match_scalar_across_backends() {
+    let _l = lock();
+    let c = generate(&CorpusSpec {
+        n_docs: 240,
+        ..tiny(0x51d3)
+    });
+    let ds = build_dataset("simd-e2e", c.n_terms, &c.docs);
+    let cfg = ClusterConfig {
+        k: 8,
+        seed: 42,
+        ..Default::default()
+    };
+    for kind in [AlgoKind::EsIcp, AlgoKind::Mivi] {
+        let reference = {
+            let _f = Forced::new(Backend::Scalar);
+            run_clustering(kind, &ds, &cfg)
+        };
+        for b in Backend::available() {
+            let _f = Forced::new(b);
+            let out = run_clustering(kind, &ds, &cfg);
+            let tag = format!("{} on {}", kind.name(), b.name());
+            assert_eq!(out.assign, reference.assign, "{tag}: assignments");
+            assert_eq!(
+                out.objective.to_bits(),
+                reference.objective.to_bits(),
+                "{tag}: final objective"
+            );
+            assert_eq!(out.iterations(), reference.iterations(), "{tag}: iters");
+            for (x, y) in out.logs.iter().zip(&reference.logs) {
+                assert_eq!(
+                    x.objective.to_bits(),
+                    y.objective.to_bits(),
+                    "{tag}: objective at iteration {}",
+                    x.iter
+                );
+            }
+        }
+    }
+}
+
+/// The index's dense tail rows must start 64-byte aligned — the layout
+/// property the SIMD `dense_axpy` loads rely on for single-line access.
+#[test]
+fn dense_tail_rows_are_cache_line_aligned() {
+    let mut rng = Pcg32::new(0xa119_ed);
+    // Top-heavy corpus so the dense tail activates (as in tests/kernel.rs).
+    let d = 10usize;
+    let docs: Vec<Vec<(u32, u32)>> = (0..80)
+        .map(|_| {
+            let mut row: Vec<(u32, u32)> = Vec::new();
+            for t in 0..d as u32 {
+                if rng.gen_range(d as u32 + 2) < 2 + t {
+                    row.push((t, 1 + rng.gen_range(4)));
+                }
+            }
+            if row.is_empty() {
+                row.push((0, 1));
+            }
+            row
+        })
+        .collect();
+    let ds = build_dataset("align", d, &docs);
+    let k = 6usize;
+    let assign: Vec<u32> = (0..ds.n() as u32).map(|i| i % k as u32).collect();
+    let out = skm::index::update_means(&ds, &assign, k, None, None);
+    let idx = skm::index::InvIndex::build(&out.means, d);
+    let (dense_lo, _) = idx.dense_parts();
+    assert!(dense_lo < d, "dense tail never activated");
+    for s in dense_lo..d {
+        let row = idx.dense_row(s).unwrap();
+        assert_eq!(row.len(), k);
+        assert_eq!(
+            row.as_ptr() as usize % 64,
+            0,
+            "dense row for term {s} not 64-byte aligned"
+        );
+    }
+}
