@@ -50,7 +50,7 @@ fn main() {
     );
     let snap = ClusteredCorpus::from_output(ds, &out, k);
     let params = RouterParams::estimate_for(&snap, &cfg);
-    let router = Router::new(&snap, params);
+    let router = Router::new(&snap, params).expect("router build");
     println!(
         "router: t_th={} ({:.3}·D), v_th={:.4}, index {:.2} MB over snapshot {:.2} MB",
         router.t_th(),
@@ -80,7 +80,7 @@ fn main() {
             .into_iter()
             .map(|t| (t as u32, 0.05 + rng.next_f64()))
             .collect();
-        queries.push(Query::from_pairs(d, &pairs));
+        queries.push(Query::from_pairs(d, &pairs).expect("valid query weights"));
     }
     let sd = p.serve_defaults();
     let (top_p, top_k) = (sd.top_p, sd.top_k);
@@ -100,7 +100,7 @@ fn main() {
         top.into_iter().map(|(s, j)| (j, s)).collect()
     };
     for q in queries.iter().take(64) {
-        let (got, _) = router.route(q, top_p);
+        let (got, _) = router.route(q, top_p).expect("route");
         let want = brute_route(q, top_p);
         assert_eq!(got.len(), want.len(), "routing soundness: length");
         for (a, b) in got.iter().zip(&want) {
@@ -133,7 +133,9 @@ fn main() {
         &ParConfig::with_threads(batch_threads),
     );
     assert_eq!(serial_counters, batch_counters, "batch merged counters");
-    for (a, b) in serial_results.iter().zip(&batch_results) {
+    for (ra, rb) in serial_results.iter().zip(&batch_results) {
+        let a = ra.as_ref().expect("serial slot");
+        let b = rb.as_ref().expect("batch slot");
         assert_eq!(a.centroids.len(), b.centroids.len());
         for (x, y) in a.centroids.iter().zip(&b.centroids) {
             assert_eq!(x.0, y.0);
@@ -165,7 +167,7 @@ fn main() {
         let t = Instant::now();
         let mut acc = 0u32;
         for q in &queries {
-            let (r, _) = router.route(q, top_p);
+            let (r, _) = router.route(q, top_p).expect("route");
             acc ^= r[0].0;
         }
         std::hint::black_box(acc);
@@ -194,7 +196,7 @@ fn main() {
         let t = Instant::now();
         for (q, slot) in queries.iter().zip(lat.iter_mut()) {
             let tq = Instant::now();
-            std::hint::black_box(router.retrieve(q, top_p, top_k).hits.len());
+            std::hint::black_box(router.retrieve(q, top_p, top_k).expect("retrieve").hits.len());
             *slot = tq.elapsed().as_secs_f64();
         }
         t.elapsed().as_secs_f64()

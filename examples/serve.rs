@@ -37,7 +37,8 @@ fn main() {
     // The router reuses the paper's machinery on the query side: the
     // Section-V estimator picks (t_th, v_th) over the frozen means, and
     // every query runs the ES-pruned gather + exact verification.
-    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let router =
+        Router::new(&snap, RouterParams::estimate_for(&snap, &cfg)).expect("router build");
     let sd = ServeDefaults::default_for(k);
     println!(
         "router: t_th={} ({:.3}·D), v_th={:.4} — serving top-{} clusters / top-{} docs",
@@ -68,7 +69,8 @@ fn main() {
         t0.elapsed().as_secs_f64() * 1e3,
         counters.candidates as f64 / results.len() as f64
     );
-    for ((&i, q), r) in doc_ids.iter().zip(&queries).zip(&results) {
+    for ((&i, q), slot) in doc_ids.iter().zip(&queries).zip(&results) {
+        let r = slot.as_ref().expect("doc query");
         let (c0, s0) = r.centroids[0];
         println!(
             "doc {i} (cluster {}): routed to cluster {c0} (cos {s0:.4}); best hits {:?}",
@@ -94,8 +96,8 @@ fn main() {
     // embedded through the frozen tf-idf space (the `skm serve
     // --queries file.txt` path). Reuse a corpus document's raw counts.
     let raw = &corpus.docs[500];
-    let embedded = snap.embed_bow(raw);
-    let r = router.retrieve(&embedded, sd.top_p, 3);
+    let embedded = snap.embed_bow(raw).expect("embed raw counts");
+    let r = router.retrieve(&embedded, sd.top_p, 3).expect("retrieve");
     println!(
         "\nembedded bag-of-words query ({} raw terms -> {} features): top hit doc {} at cos {:.4} (source doc 500)",
         raw.len(),
@@ -106,9 +108,9 @@ fn main() {
 
     // Query 5: out-of-vocabulary terms only — embeds to the zero
     // vector and routes deterministically with zero scores.
-    let oov = Query::from_pairs(snap.ds.d(), &[(snap.ds.d() as u32 + 9, 3.0)]);
+    let oov = Query::from_pairs(snap.ds.d(), &[(snap.ds.d() as u32 + 9, 3.0)]).expect("oov query");
     assert!(oov.is_zero());
-    let (routed, _) = router.route(&oov, 2);
+    let (routed, _) = router.route(&oov, 2).expect("route oov");
     println!(
         "OOV-only query: zero vector, deterministically routed to clusters {:?} with zero scores",
         routed.iter().map(|&(c, _)| c).collect::<Vec<_>>()

@@ -382,6 +382,50 @@ pub fn run_clustering(kind: AlgoKind, ds: &Dataset, cfg: &ClusterConfig) -> Clus
     run_clustering_with(kind, ds, cfg, &ParConfig::serial())
 }
 
+/// Validate a [`ClusterConfig`] against a dataset, as a typed error
+/// instead of the panics the bit-pinned internals keep using.
+pub fn validate_cluster_config(
+    cfg: &ClusterConfig,
+    ds: &Dataset,
+) -> crate::error::SkmResult<()> {
+    use crate::error::SkmError;
+    if cfg.k < 1 || cfg.k > ds.n() {
+        return Err(SkmError::invalid_config(format!(
+            "K={} out of range (need 1 <= K <= N={})",
+            cfg.k,
+            ds.n()
+        )));
+    }
+    if cfg.max_iters < 1 {
+        return Err(SkmError::invalid_config("max_iters must be >= 1"));
+    }
+    for (name, v) in [("t_th_frac", cfg.t_th_frac), ("s_min_frac", cfg.s_min_frac)] {
+        if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+            return Err(SkmError::invalid_config(format!(
+                "{name} must be finite in [0, 1] (got {v})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Fallible front door to [`run_clustering_with`]: validates the config
+/// up front ([`crate::error::SkmError::InvalidConfig`]) and contains a
+/// panicking run — including a [`par::run_sharded`] worker fault — as a
+/// typed [`crate::error::SkmError::WorkerPanic`] instead of unwinding
+/// into the caller. On success the output is bit-identical to
+/// [`run_clustering_with`]; the infallible entry points stay available
+/// for the determinism suites.
+pub fn try_run_clustering_with(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+) -> crate::error::SkmResult<ClusterOutput> {
+    validate_cluster_config(cfg, ds)?;
+    crate::error::contain("algo.run", || run_clustering_with(kind, ds, cfg, par))
+}
+
 /// Run a complete clustering with the given algorithm under a sharded
 /// execution configuration. With `par.threads > 1` the assignment step
 /// runs over contiguous object shards and the update step over cluster

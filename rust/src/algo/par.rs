@@ -21,10 +21,41 @@
 //! The update step is parallelized over *clusters* with the same
 //! guarantee (each cluster's mean is computed by the serial per-cluster
 //! routine); see [`crate::index::update_means_with_rho_par`].
+//!
+//! **Fault containment (§Robustness).** A panicking shard must not take
+//! down the others, and must not poison the shared state. The engine
+//! guarantees:
+//!
+//! * every queue/pool lock uses [`lock_unpoisoned`], so an unwind while
+//!   holding a lock never wedges the remaining workers (the protected
+//!   values — a work list, a scratch vec, integer phase times — are
+//!   valid after any partial mutation);
+//! * each shard executes under [`std::panic::catch_unwind`]; a panic is
+//!   recorded per shard while every other shard (including later shards
+//!   pulled by the same worker thread) runs to completion, bit-identical
+//!   to a fault-free run;
+//! * after the scope joins, a recorded fault is re-raised as a single
+//!   structured [`SkmError::WorkerPanic`] panic payload naming the first
+//!   failing shard — so `run_sharded` keeps its infallible signature for
+//!   the bit-pinned callers, while [`crate::error::contain`] boundaries
+//!   ([`crate::algo::try_run_clustering_with`]) receive a typed error
+//!   instead of a scope abort. `rust/tests/faults.rs` proves all three.
 
+use crate::error::SkmError;
 use crate::metrics::counters::OpCounters;
 use crate::metrics::perf::PhaseTimes;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, tolerating poison: if a previous holder panicked, take
+/// the guard anyway. Sound for every mutex in this crate's engines —
+/// they protect structurally-simple values (work queues, scratch pools,
+/// additive counters) that are valid after any interrupted mutation;
+/// result correctness never depends on lock-protected state because
+/// result slots are owned exclusively per shard/query.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// A pool of per-worker scratch objects (§Perf: the allocation-free
 /// iteration loop). Assignment-step scratch — ρ accumulators, survivor
@@ -69,25 +100,25 @@ impl<T> ScratchPool<T> {
 
     /// Pop a pooled scratch, or create one with `make` (first use only).
     pub fn checkout(&self, make: impl FnOnce() -> T) -> T {
-        let pooled = self.items.lock().unwrap().pop();
+        let pooled = lock_unpoisoned(&self.items).pop();
         pooled.unwrap_or_else(make)
     }
 
     /// Return a scratch to the pool and fold in the shard's phase times.
     pub fn checkin(&self, item: T, phases: PhaseTimes) {
-        self.phases.lock().unwrap().add(&phases);
-        self.items.lock().unwrap().push(item);
+        lock_unpoisoned(&self.phases).add(&phases);
+        lock_unpoisoned(&self.items).push(item);
     }
 
     /// Take (and reset) the phase times accumulated since the last drain.
     pub fn drain_phases(&self) -> PhaseTimes {
-        std::mem::take(&mut *self.phases.lock().unwrap())
+        std::mem::take(&mut *lock_unpoisoned(&self.phases))
     }
 
     /// Bytes held by all pooled scratch objects, as reported by `f`
     /// (Max-MEM accounting of the persistent scratch).
     pub fn mem_bytes(&self, f: impl Fn(&T) -> usize) -> usize {
-        self.items.lock().unwrap().iter().map(f).sum()
+        lock_unpoisoned(&self.items).iter().map(f).sum()
     }
 }
 
@@ -157,24 +188,56 @@ impl ParConfig {
     }
 }
 
+/// Re-raise faults recorded by the sharded drivers as one structured
+/// panic payload ([`SkmError::WorkerPanic`]) naming the first failing
+/// shard — callers keep the infallible bit-pinned signature, while a
+/// [`crate::error::contain`] boundary up-stack receives the typed error
+/// unchanged (see [`SkmError::from_panic`]'s pass-through).
+fn raise_shard_faults(site: &str, n_shards: usize, faults: Vec<(usize, String)>) {
+    if faults.is_empty() {
+        return;
+    }
+    let mut faults = faults;
+    faults.sort_by_key(|&(lo, _)| lo);
+    let (lo, ref msg) = faults[0];
+    std::panic::panic_any(SkmError::WorkerPanic {
+        site: site.to_string(),
+        detail: format!(
+            "{} of {} shards panicked; first: shard at object {} ({})",
+            faults.len(),
+            n_shards,
+            lo,
+            msg
+        ),
+    });
+}
+
 /// Run `f` over contiguous shards of `assign`, in parallel when
 /// `par.is_parallel()`, and merge the per-shard results in fixed shard
 /// order. `f(lo, chunk)` receives the global index of the first object
 /// in the shard and the shard's mutable slice of the assignment vector
 /// (holding the *previous* assignments on entry; `f` writes the new
 /// ones in place, exactly like the serial per-object loops do).
+///
+/// A panic inside `f` is contained to its shard: every other shard
+/// still completes bit-identically, and the fault is re-raised after
+/// the join as a structured [`SkmError::WorkerPanic`] payload (see the
+/// module docs). Catch it with [`crate::algo::try_run_clustering_with`]
+/// or [`crate::error::contain`].
 pub fn run_sharded<F>(par: &ParConfig, assign: &mut [u32], f: F) -> (OpCounters, usize)
 where
     F: Fn(usize, &mut [u32]) -> (OpCounters, usize) + Sync,
 {
     let n = assign.len();
     if !par.is_parallel() || n == 0 {
+        crate::failpoint!("algo.assign_shard", 0u64);
         return f(0, assign);
     }
     let shard = par.shard_size(n);
     let n_shards = (n + shard - 1) / shard;
     let threads = par.threads.min(n_shards).max(1);
     let mut results: Vec<(OpCounters, usize)> = vec![(OpCounters::new(), 0); n_shards];
+    let faults: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
 
     {
         // Shared work queue: workers pull shards as they finish, so
@@ -191,18 +254,35 @@ where
         let queue = std::sync::Mutex::new(work);
         let queue = &queue;
         let f = &f;
+        let faults = &faults;
         std::thread::scope(|scope| {
             for _ in 0..threads {
                 scope.spawn(move || loop {
-                    let item = queue.lock().unwrap().pop();
+                    let item = lock_unpoisoned(queue).pop();
                     match item {
-                        Some((lo, chunk, slot)) => *slot = f(lo, chunk),
+                        Some((lo, chunk, slot)) => {
+                            // Contain a panicking shard: the worker
+                            // records it and moves on to the next
+                            // shard, so unaffected shards stay
+                            // bit-identical to a fault-free run.
+                            let r = catch_unwind(AssertUnwindSafe(|| {
+                                crate::failpoint!("algo.assign_shard", lo);
+                                f(lo, chunk)
+                            }));
+                            match r {
+                                Ok(out) => *slot = out,
+                                Err(payload) => lock_unpoisoned(faults)
+                                    .push((lo, crate::error::panic_message(payload.as_ref()))),
+                            }
+                        }
                         None => break,
                     }
                 });
             }
         });
     }
+
+    raise_shard_faults("algo.assign_shard", n_shards, faults.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner));
 
     let mut counters = OpCounters::new();
     let mut changes = 0usize;
@@ -231,12 +311,14 @@ where
     let n = assign.len();
     assert_eq!(extra.len(), n * per_obj, "per-object state size mismatch");
     if !par.is_parallel() || n == 0 {
+        crate::failpoint!("algo.assign_shard", 0u64);
         return f(0, assign, extra);
     }
     let shard = par.shard_size(n);
     let n_shards = (n + shard - 1) / shard;
     let threads = par.threads.min(n_shards).max(1);
     let mut results: Vec<(OpCounters, usize)> = vec![(OpCounters::new(), 0); n_shards];
+    let faults: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
 
     {
         // Shared work queue, exactly as in [`run_sharded`].
@@ -250,18 +332,32 @@ where
         let queue = std::sync::Mutex::new(work);
         let queue = &queue;
         let f = &f;
+        let faults = &faults;
         std::thread::scope(|scope| {
             for _ in 0..threads {
                 scope.spawn(move || loop {
-                    let item = queue.lock().unwrap().pop();
+                    let item = lock_unpoisoned(queue).pop();
                     match item {
-                        Some((lo, chunk, ext, slot)) => *slot = f(lo, chunk, ext),
+                        Some((lo, chunk, ext, slot)) => {
+                            // Same per-shard containment as run_sharded.
+                            let r = catch_unwind(AssertUnwindSafe(|| {
+                                crate::failpoint!("algo.assign_shard", lo);
+                                f(lo, chunk, ext)
+                            }));
+                            match r {
+                                Ok(out) => *slot = out,
+                                Err(payload) => lock_unpoisoned(faults)
+                                    .push((lo, crate::error::panic_message(payload.as_ref()))),
+                            }
+                        }
                         None => break,
                     }
                 });
             }
         });
     }
+
+    raise_shard_faults("algo.assign_shard", n_shards, faults.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner));
 
     let mut counters = OpCounters::new();
     let mut changes = 0usize;
@@ -350,6 +446,61 @@ mod tests {
                 assert_eq!(ch, bch, "threads={threads} shard={shard}");
             }
         }
+    }
+
+    /// A panicking shard is contained: every other shard's writes land
+    /// exactly as in a fault-free run, the shared queue survives, and
+    /// the fault resurfaces as a typed `WorkerPanic` (via `contain`).
+    #[test]
+    fn sharded_contains_a_panicking_shard() {
+        let n = 64usize;
+        let poison_lo = 16usize; // start of the shard we kill
+        let step = |lo: usize, chunk: &mut [u32]| {
+            if lo == poison_lo {
+                panic!("shard {lo} exploded");
+            }
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                *slot = (lo + off) as u32 + 1000;
+            }
+            (OpCounters::new(), chunk.len())
+        };
+        let mut v = vec![0u32; n];
+        let par = ParConfig { threads: 4, shard: 16 };
+        let err = crate::error::contain("algo.run", || run_sharded(&par, &mut v, step))
+            .unwrap_err();
+        match err {
+            SkmError::WorkerPanic { site, detail } => {
+                assert_eq!(site, "algo.assign_shard");
+                assert!(detail.contains("1 of 4 shards"), "{detail}");
+                assert!(detail.contains("object 16"), "{detail}");
+                assert!(detail.contains("shard 16 exploded"), "{detail}");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        for i in 0..n {
+            if (poison_lo..poison_lo + 16).contains(&i) {
+                assert_eq!(v[i], 0, "killed shard must be untouched");
+            } else {
+                assert_eq!(v[i], i as u32 + 1000, "unaffected shard diverged");
+            }
+        }
+    }
+
+    /// The scratch pool must keep working after a panic unwound through
+    /// a checkout/checkin sequence (poison tolerance).
+    #[test]
+    fn scratch_pool_survives_a_panicking_holder() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        pool.checkin(vec![7u8; 4], PhaseTimes::default());
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = lock_unpoisoned(&pool.items);
+            panic!("holder dies with the lock");
+        }));
+        assert!(r.is_err());
+        let got = pool.checkout(Vec::new);
+        assert_eq!(got, vec![7u8; 4], "pool unusable after poison");
+        pool.checkin(got, PhaseTimes::default());
+        assert!(pool.mem_bytes(|v| v.capacity()) >= 4);
     }
 
     #[test]

@@ -132,6 +132,47 @@ impl MiniBatchConfig {
             sample_seed: 0xba7c_4e5d,
         }
     }
+
+    /// Typed validation, mirroring [`run_minibatch`]'s asserts (which
+    /// stay in place to protect the bit path) so fallible callers can
+    /// reject bad configs before anything runs.
+    pub fn validate(&self) -> crate::error::SkmResult<()> {
+        use crate::error::SkmError;
+        if self.batch < 1 {
+            return Err(SkmError::invalid_config("batch size must be >= 1"));
+        }
+        if !self.decay.is_finite() || !(0.0..=1.0).contains(&self.decay) {
+            return Err(SkmError::invalid_config(format!(
+                "decay must be in [0, 1] (got {})",
+                self.decay
+            )));
+        }
+        if self.max_rounds < 1 || self.max_rounds >= u32::MAX as usize {
+            return Err(SkmError::invalid_config(format!(
+                "rounds must be in [1, {}] (got {})",
+                u32::MAX - 1,
+                self.max_rounds
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Fallible front door to [`run_minibatch`]: validates both configs up
+/// front ([`crate::error::SkmError::InvalidConfig`]) and contains a
+/// panicking run — including a sharded worker fault — as a typed
+/// [`crate::error::SkmError::WorkerPanic`]. On success the output is
+/// bit-identical to [`run_minibatch`].
+pub fn try_run_minibatch(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    mb: &MiniBatchConfig,
+    par: &ParConfig,
+) -> crate::error::SkmResult<MiniBatchOutput> {
+    crate::algo::validate_cluster_config(cfg, ds)?;
+    mb.validate()?;
+    crate::error::contain("minibatch.run", || run_minibatch(kind, ds, cfg, mb, par))
 }
 
 /// Per-round record (the mini-batch analog of [`crate::algo::IterLog`]).

@@ -13,17 +13,57 @@
 //! comment lines (starting with `#` or `%`, as hand-annotated dumps and
 //! MatrixMarket-adjacent tools produce) are skipped anywhere in the
 //! file, including before the three headers.
+//!
+//! ## Hardening (§Robustness)
+//!
+//! The headers are **untrusted input**: a hostile or corrupted file
+//! must not be able to panic the process or exhaust memory before a
+//! single triple is read. Errors are typed
+//! ([`SkmError::MalformedCorpus`] / [`SkmError::Io`]), declared sizes
+//! are capped ([`MAX_DECLARED_DOCS`], [`MAX_DECLARED_TERMS`],
+//! [`MAX_DECLARED_NNZ`], and `NNZ ≤ N·D` by checked arithmetic), and
+//! allocation follows the *observed* document ids — preallocation from
+//! the N header is bounded by [`PREALLOC_DOC_CAP`] — so memory grows
+//! with actual file content, never with a forged header. A file with
+//! more triples than its NNZ header declares is rejected at the first
+//! excess triple, before it can grow anything. Hostile-input cases
+//! live in `rust/tests/loader.rs`.
 
 use crate::corpus::synth::BowCorpus;
-use anyhow::{bail, Context, Result};
+use crate::error::{SkmError, SkmResult};
 use std::io::BufRead;
+
+/// Hard cap on the declared document count N. Covers the paper's
+/// corpora with ~8× headroom (PubMed is 8.2M documents) while bounding
+/// what a forged header can make the final `resize_with` allocate
+/// (~1.6 GiB of empty row headers at the cap). Corpora beyond this
+/// belong to the ROADMAP's streaming-ingest item.
+pub const MAX_DECLARED_DOCS: usize = 1 << 26;
+
+/// Hard cap on the declared vocabulary size D: term ids are stored as
+/// `u32` throughout the pipeline.
+pub const MAX_DECLARED_TERMS: usize = u32::MAX as usize;
+
+/// Hard cap on the declared triple count NNZ (10¹²-ish; the paper's
+/// largest corpus has ~7.3×10⁸). NNZ is additionally checked against
+/// N·D, the structural maximum.
+pub const MAX_DECLARED_NNZ: usize = 1 << 40;
+
+/// Preallocation bound for the document table: up to this many row
+/// headers (~24 MiB) are reserved up front from the N header; beyond
+/// it, growth follows observed doc ids.
+pub const PREALLOC_DOC_CAP: usize = 1 << 20;
+
+fn malformed(detail: String) -> SkmError {
+    SkmError::malformed(detail)
+}
 
 /// Next non-blank, non-comment line, or `None` at EOF. Returns the
 /// line as read (callers trim) — no copy beyond the one `lines()`
 /// already made, which matters at real-corpus scale (~10⁸ triples).
-fn next_data_line<B: BufRead>(lines: &mut std::io::Lines<B>) -> Result<Option<String>> {
+fn next_data_line<B: BufRead>(lines: &mut std::io::Lines<B>) -> SkmResult<Option<String>> {
     for line in lines.by_ref() {
-        let line = line?;
+        let line = line.map_err(|e| SkmError::io("read corpus line", e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
@@ -34,45 +74,99 @@ fn next_data_line<B: BufRead>(lines: &mut std::io::Lines<B>) -> Result<Option<St
 }
 
 /// Parse a UCI bag-of-words stream. `max_docs` optionally truncates the
-/// corpus (useful for scaled-down runs of the real data).
-pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> Result<BowCorpus> {
+/// corpus (useful for scaled-down runs of the real data). Never panics
+/// on malformed input — every violation is a typed
+/// [`SkmError::MalformedCorpus`] (module docs).
+pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> SkmResult<BowCorpus> {
     let mut lines = std::io::BufReader::new(reader).lines();
-    let mut header = |what: &str| -> Result<usize> {
+    let mut header = |what: &str| -> SkmResult<usize> {
         let line = next_data_line(&mut lines)?
-            .with_context(|| format!("missing {what} header"))?;
+            .ok_or_else(|| malformed(format!("missing {what} header")))?;
         line.trim()
             .parse::<usize>()
-            .with_context(|| format!("bad {what} header: {line:?}"))
+            .map_err(|e| malformed(format!("bad {what} header: {line:?} ({e})")))
     };
     let n = header("N")?;
     let d = header("D")?;
     let nnz = header("NNZ")?;
+    crate::failpoint_res!("loader.after_header", 0u64);
+    if n > MAX_DECLARED_DOCS {
+        return Err(malformed(format!(
+            "N header {n} exceeds the {MAX_DECLARED_DOCS}-document cap"
+        )));
+    }
+    if d > MAX_DECLARED_TERMS {
+        return Err(malformed(format!(
+            "D header {d} exceeds the {MAX_DECLARED_TERMS}-term cap"
+        )));
+    }
+    if nnz > MAX_DECLARED_NNZ {
+        return Err(malformed(format!(
+            "NNZ header {nnz} exceeds the {MAX_DECLARED_NNZ}-triple cap"
+        )));
+    }
+    // Structural maximum: a (doc, term) grid holds at most N·D triples.
+    match n.checked_mul(d) {
+        Some(grid) if nnz <= grid => {}
+        Some(grid) => {
+            return Err(malformed(format!(
+                "NNZ header {nnz} exceeds N·D = {grid}"
+            )))
+        }
+        // n·d overflowing usize is unreachable under the caps above,
+        // but reject rather than assume.
+        None => return Err(malformed(format!("N·D overflows ({n} × {d})"))),
+    }
     let keep = max_docs.unwrap_or(n).min(n);
 
-    let mut docs: Vec<Vec<(u32, u32)>> = vec![Vec::new(); keep];
+    // Grow toward `keep` as doc ids are actually observed: the header
+    // alone reserves at most PREALLOC_DOC_CAP row headers.
+    let mut docs: Vec<Vec<(u32, u32)>> = Vec::with_capacity(keep.min(PREALLOC_DOC_CAP));
     let mut seen = 0usize;
     while let Some(line) = next_data_line(&mut lines)? {
         let t = line.trim();
         let mut it = t.split_whitespace();
-        let (a, b, c) = (
-            it.next().context("triple: doc")?,
-            it.next().context("triple: term")?,
-            it.next().context("triple: count")?,
-        );
-        let doc: usize = a.parse().context("doc id")?;
-        let term: usize = b.parse().context("term id")?;
-        let count: u32 = c.parse().context("count")?;
+        let (a, b, c) = match (it.next(), it.next(), it.next()) {
+            (Some(a), Some(b), Some(c)) => (a, b, c),
+            _ => return Err(malformed(format!("triple too short: {t:?}"))),
+        };
+        let doc: usize = a
+            .parse()
+            .map_err(|e| malformed(format!("bad doc id in triple {t:?} ({e})")))?;
+        let term: usize = b
+            .parse()
+            .map_err(|e| malformed(format!("bad term id in triple {t:?} ({e})")))?;
+        let count: u32 = c
+            .parse()
+            .map_err(|e| malformed(format!("bad count in triple {t:?} ({e})")))?;
         if doc == 0 || doc > n || term == 0 || term > d {
-            bail!("triple out of range: {t:?} (N={n}, D={d})");
+            return Err(malformed(format!(
+                "triple out of range: {t:?} (N={n}, D={d})"
+            )));
         }
+        if seen >= nnz {
+            // Reject the first excess triple instead of buffering an
+            // undeclared tail of unbounded length.
+            return Err(malformed(format!(
+                "more than NNZ={nnz} triples in file (at {t:?})"
+            )));
+        }
+        crate::failpoint_res!("loader.triple", seen as u64);
         seen += 1;
         if doc <= keep {
+            if docs.len() < doc {
+                docs.resize_with(doc, Vec::new);
+            }
             docs[doc - 1].push((term as u32 - 1, count));
         }
     }
     if max_docs.is_none() && seen != nnz {
-        bail!("NNZ header says {nnz}, file has {seen} triples");
+        return Err(malformed(format!(
+            "NNZ header says {nnz}, file has {seen} triples"
+        )));
     }
+    // Trailing documents with no triples still exist as empty rows.
+    docs.resize_with(keep, Vec::new);
     for doc in &mut docs {
         doc.sort_unstable_by_key(|&(t, _)| t);
     }
@@ -86,8 +180,8 @@ pub fn read_uci_bow(reader: impl std::io::Read, max_docs: Option<usize>) -> Resu
 
 /// Read from a file path (plain text; the UCI archives are gzipped — gunzip
 /// first, we have no flate2 on the runtime path by policy).
-pub fn read_uci_bow_file(path: &str, max_docs: Option<usize>) -> Result<BowCorpus> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+pub fn read_uci_bow_file(path: &str, max_docs: Option<usize>) -> SkmResult<BowCorpus> {
+    let f = std::fs::File::open(path).map_err(|e| SkmError::io(format!("open {path}"), e))?;
     read_uci_bow(f, max_docs)
 }
 
@@ -133,5 +227,24 @@ mod tests {
     fn rejects_nnz_mismatch() {
         let bad = "1\n2\n5\n1 1 1\n";
         assert!(read_uci_bow(bad.as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_excess_triples_immediately() {
+        // NNZ says 1, file carries 2 — rejected at the second triple
+        // even under max_docs truncation (which previously tolerated
+        // undeclared tails).
+        let bad = "2\n2\n1\n1 1 1\n2 2 1\n";
+        let err = read_uci_bow(bad.as_bytes(), Some(1)).unwrap_err();
+        assert!(err.to_string().contains("more than NNZ"), "{err}");
+    }
+
+    #[test]
+    fn trailing_empty_docs_are_materialized() {
+        // Doc 3 of 3 has no triples; it must still exist as an empty row.
+        let s = "3\n2\n1\n1 1 1\n";
+        let c = read_uci_bow(s.as_bytes(), None).unwrap();
+        assert_eq!(c.n_docs(), 3);
+        assert!(c.docs[1].is_empty() && c.docs[2].is_empty());
     }
 }

@@ -1,0 +1,244 @@
+//! The typed error surface of the crate (§Robustness).
+//!
+//! Everything that can fail for a *reason the caller can act on* —
+//! malformed corpus files, hostile queries, bad configuration, an
+//! unsupported kernel backend, a panicking worker — is an [`SkmError`]
+//! variant, so callers (the `skm` binary, the serving layer, embedders)
+//! can match on the failure class instead of parsing panic messages.
+//!
+//! Design rules:
+//!
+//! * **The success path is untouched.** Error plumbing never changes a
+//!   float sequence: fallible constructors validate and then run the
+//!   exact bit-pinned code the infallible paths always ran.
+//! * **User errors never panic.** Bad CLI flags, bad files, and bad
+//!   queries surface as `Err` and exit with a one-line message (exit
+//!   code [`SkmError::exit_code`]) — no backtraces.
+//! * **Worker panics are contained, not hidden.** The sharded engines
+//!   ([`crate::algo::par`], [`crate::serve::batch`]) catch a panicking
+//!   shard/query with [`std::panic::catch_unwind`], convert the payload
+//!   through [`SkmError::from_panic`], and keep serving the unaffected
+//!   work — see the module docs there for the containment contract,
+//!   and `rust/tests/faults.rs` for the proof.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type SkmResult<T> = Result<T, SkmError>;
+
+/// The typed error taxonomy. Display strings are the single user-facing
+/// error surface (the CLI prints `skm: {e}` and exits).
+#[derive(Debug)]
+pub enum SkmError {
+    /// An I/O operation failed (file open/read/write).
+    Io {
+        /// What was being done, e.g. `"open docword.txt"`.
+        context: String,
+        source: std::io::Error,
+    },
+    /// A corpus / docword file violated the format or its own headers.
+    MalformedCorpus { detail: String },
+    /// A query was rejected at validation (NaN/inf/negative weights,
+    /// out-of-range term ids, vocabulary mismatch).
+    InvalidQuery { detail: String },
+    /// Configuration (CLI flags, `ClusterConfig`, `MiniBatchConfig`,
+    /// `RouterParams`) failed validation. Exits with code 2 (usage).
+    InvalidConfig { detail: String },
+    /// A worker thread (or contained serial computation) panicked; the
+    /// panic was caught at the named site and converted.
+    WorkerPanic { site: String, detail: String },
+    /// A requested compute backend (e.g. `SKM_KERNEL`, the PJRT
+    /// runtime) is unknown or unsupported on this host.
+    BackendUnsupported { detail: String },
+    /// The structured index and the snapshot disagree — an internal
+    /// consistency failure. The router degrades to the exact scan on
+    /// this (see `serve::router`); surfacing it means degradation was
+    /// impossible.
+    IndexInconsistent { detail: String },
+    /// An error injected by the `failpoints` test harness
+    /// ([`crate::util::failpoint`]). Only constructible with the
+    /// `failpoints` cargo feature enabled.
+    FaultInjected { site: String },
+}
+
+impl fmt::Display for SkmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SkmError::Io { context, source } => write!(f, "{context}: {source}"),
+            SkmError::MalformedCorpus { detail } => {
+                write!(f, "malformed corpus: {detail}")
+            }
+            SkmError::InvalidQuery { detail } => write!(f, "invalid query: {detail}"),
+            SkmError::InvalidConfig { detail } => {
+                write!(f, "invalid configuration: {detail}")
+            }
+            SkmError::WorkerPanic { site, detail } => {
+                write!(f, "worker panicked at {site}: {detail}")
+            }
+            SkmError::BackendUnsupported { detail } => {
+                write!(f, "backend unsupported: {detail}")
+            }
+            SkmError::IndexInconsistent { detail } => {
+                write!(f, "index inconsistent: {detail}")
+            }
+            SkmError::FaultInjected { site } => {
+                write!(f, "injected fault at {site}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SkmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SkmError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl SkmError {
+    /// Wrap an I/O error with what was being attempted.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        SkmError::Io {
+            context: context.into(),
+            source,
+        }
+    }
+
+    pub fn malformed(detail: impl Into<String>) -> Self {
+        SkmError::MalformedCorpus {
+            detail: detail.into(),
+        }
+    }
+
+    pub fn invalid_query(detail: impl Into<String>) -> Self {
+        SkmError::InvalidQuery {
+            detail: detail.into(),
+        }
+    }
+
+    pub fn invalid_config(detail: impl Into<String>) -> Self {
+        SkmError::InvalidConfig {
+            detail: detail.into(),
+        }
+    }
+
+    /// CLI exit code: `2` for usage/configuration errors (the
+    /// conventional "called wrong" code, matching the unknown-subcommand
+    /// path), `1` for runtime failures.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            SkmError::InvalidConfig { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Convert a caught panic payload into a typed error. A payload
+    /// that already *is* an [`SkmError`] (e.g. re-thrown by
+    /// [`crate::algo::par::run_sharded`]) passes through unchanged so
+    /// the original variant survives nested containment; anything else
+    /// becomes [`SkmError::WorkerPanic`] at `site` with the extracted
+    /// panic message.
+    pub fn from_panic(site: &str, payload: Box<dyn std::any::Any + Send>) -> Self {
+        match payload.downcast::<SkmError>() {
+            Ok(e) => *e,
+            Err(payload) => SkmError::WorkerPanic {
+                site: site.to_string(),
+                detail: panic_message(payload.as_ref()),
+            },
+        }
+    }
+}
+
+/// Best-effort extraction of a human-readable message from a panic
+/// payload (`&str` and `String` cover `panic!`; [`SkmError`] covers the
+/// engines' structured re-throws).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(e) = payload.downcast_ref::<SkmError>() {
+        e.to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f`, converting a panic into a typed error at `site` instead of
+/// unwinding further. This is the boundary between panic-world (the
+/// bit-pinned compute core keeps its asserts) and error-world (callers
+/// that must not die): [`crate::algo::try_run_clustering_with`],
+/// [`crate::coordinator::try_run_minibatch`], and the per-query slots of
+/// [`crate::serve::serve_batch`] are all built on it.
+///
+/// `AssertUnwindSafe` is sound at these call sites because every caller
+/// either owns the captured state exclusively (per-query/per-shard
+/// slots) or discards it on error (the run_* wrappers return nothing on
+/// failure), and the shared pools are poison-tolerant by design (see
+/// [`crate::algo::par::lock_unpoisoned`]).
+pub fn contain<T>(site: &str, f: impl FnOnce() -> T) -> SkmResult<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+        .map_err(|payload| SkmError::from_panic(site, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_exit_codes() {
+        let e = SkmError::invalid_config("--k: cannot parse \"abc\"");
+        assert_eq!(e.exit_code(), 2);
+        assert!(e.to_string().contains("invalid configuration"));
+        let e = SkmError::malformed("NNZ header says 5, file has 1 triples");
+        assert_eq!(e.exit_code(), 1);
+        assert!(e.to_string().contains("NNZ"));
+        let e = SkmError::io(
+            "open missing.txt",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"),
+        );
+        assert_eq!(e.exit_code(), 1);
+        assert!(e.to_string().contains("missing.txt"));
+    }
+
+    #[test]
+    fn contain_catches_and_types_panics() {
+        assert_eq!(contain("t", || 41 + 1).unwrap(), 42);
+        let err = contain("site-a", || -> u32 { panic!("boom {}", 7) }).unwrap_err();
+        match err {
+            SkmError::WorkerPanic { site, detail } => {
+                assert_eq!(site, "site-a");
+                assert!(detail.contains("boom 7"), "{detail}");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn contain_preserves_typed_payloads() {
+        let err = contain("outer", || -> u32 {
+            std::panic::panic_any(SkmError::WorkerPanic {
+                site: "inner".into(),
+                detail: "original".into(),
+            })
+        })
+        .unwrap_err();
+        match err {
+            SkmError::WorkerPanic { site, detail } => {
+                assert_eq!(site, "inner", "typed payload must pass through");
+                assert_eq!(detail, "original");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn panic_message_extracts_common_payloads() {
+        let err = contain("t", || -> u32 { std::panic::panic_any("static str") }).unwrap_err();
+        assert!(err.to_string().contains("static str"));
+        let err = contain("t", || -> u32 { std::panic::panic_any(3usize) }).unwrap_err();
+        assert!(err.to_string().contains("non-string"));
+    }
+}

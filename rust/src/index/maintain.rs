@@ -728,6 +728,7 @@ impl InvMaintainer {
     /// parameters are unchanged and the dirty fraction is low enough,
     /// else rebuilds from scratch. Byte-identical either way.
     pub fn update(&mut self, means: &MeanSet, t_lim: usize, scale: f64) -> &InvIndex {
+        crate::failpoint!("maintain.inv", 0u64);
         let k = means.k();
         let d = means.m.n_cols();
         let t_lim = t_lim.min(d);
@@ -811,6 +812,7 @@ impl EsMaintainer {
     maintainer_common!(EsIndex);
 
     pub fn update(&mut self, means: &MeanSet, t_th: usize, v_th: f64) -> &EsIndex {
+        crate::failpoint!("maintain.es", 0u64);
         let k = means.k();
         let d = means.m.n_cols();
         let t_th = t_th.min(d);
@@ -925,6 +927,7 @@ impl TaMaintainer {
     maintainer_common!(TaIndex);
 
     pub fn update(&mut self, means: &MeanSet, t_th: usize) -> &TaIndex {
+        crate::failpoint!("maintain.ta", 0u64);
         let k = means.k();
         let d = means.m.n_cols();
         let t_th = t_th.min(d);
@@ -1020,6 +1023,7 @@ impl CsMaintainer {
     maintainer_common!(CsIndex);
 
     pub fn update(&mut self, means: &MeanSet, t_th: usize) -> &CsIndex {
+        crate::failpoint!("maintain.cs", 0u64);
         let k = means.k();
         let d = means.m.n_cols();
         let t_th = t_th.min(d);

@@ -63,7 +63,17 @@
 //!   — `rust/tests/serve.rs`), second-stage retrieval scans only the
 //!   routed clusters' members, and [`serve::serve_batch`] shards query
 //!   batches over the same scoped-thread engine as assignment.
-//! - [`util`] — offline-friendly RNG/CLI/IO/timing utilities.
+//! - [`util`] — offline-friendly RNG/CLI/IO/timing utilities, plus
+//!   [`util::failpoint`] — the compile-time-gated fail-point harness
+//!   (cargo feature `failpoints`) behind `rust/tests/faults.rs`.
+//! - [`error`] — the typed failure surface ([`error::SkmError`]):
+//!   malformed corpora, invalid queries/config, and contained worker
+//!   panics are `Err` values with stable exit codes, never process
+//!   aborts. Both sharded engines isolate a panicking shard/query with
+//!   `catch_unwind` + poison-tolerant locks, and the router degrades to
+//!   its exact scan when estimation or the structured index fails —
+//!   without disturbing one bit of any unaffected result (see README
+//!   "Robustness & failure semantics").
 
 // The hot-path idiom here is deliberate index arithmetic over parallel
 // flat arrays (CSR/CSC walks, counting sorts, scatter loops); iterator
@@ -79,6 +89,7 @@
 pub mod algo;
 pub mod coordinator;
 pub mod corpus;
+pub mod error;
 pub mod estparams;
 pub mod index;
 pub mod metrics;

@@ -37,15 +37,27 @@
 //! `--bench-json <path>` (cluster, compare, and serve) dumps the
 //! machine-readable report (phase timings / counters, or the per-query
 //! serving answers with QPS) as JSON.
+//!
+//! ## Failure semantics (§Robustness)
+//!
+//! Every subcommand returns [`SkmResult`]; `main` prints one
+//! `skm: <message>` line to stderr and exits with the error's
+//! [`SkmError::exit_code`] — 2 for usage errors (bad flag values,
+//! unknown presets/algorithms/schedules), 1 for runtime failures
+//! (malformed corpora, I/O, worker panics). No user-facing error
+//! carries a backtrace. Per-query serving failures are contained: the
+//! batch completes, failed slots are reported in the log/JSON, and the
+//! process still exits 0 (failure is per request, not per process).
 
-use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::algo::{try_run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::coordinator::compare::absolute_table;
 use skm::coordinator::{
     audit_equivalence_with, cluster_run_json, compare_runs_json, comparison_rate_table,
-    minibatch_run_json, preset, run_minibatch, BatchSchedule, MiniBatchConfig,
+    minibatch_run_json, preset, try_run_minibatch, BatchSchedule, MiniBatchConfig,
     run_and_summarize_with,
 };
 use skm::corpus::read_uci_bow_file;
+use skm::error::{SkmError, SkmResult};
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{update_means, ObjInvIndex};
 use skm::serve::{
@@ -58,49 +70,57 @@ use skm::util::io::fmt_sig;
 use skm::util::rng::Pcg32;
 use std::time::Instant;
 
-fn load_dataset(args: &Args) -> Dataset {
+fn load_dataset(args: &Args) -> SkmResult<Dataset> {
     if let Some(path) = args.get("input") {
-        let max_docs = args.get("max-docs").map(|s| s.parse().expect("--max-docs"));
-        let corpus = read_uci_bow_file(path, max_docs).expect("read UCI bag-of-words");
-        build_dataset("uci", corpus.n_terms, &corpus.docs)
+        let max_docs = args.try_parsed::<usize>("max-docs")?;
+        let corpus = read_uci_bow_file(path, max_docs)?;
+        Ok(build_dataset("uci", corpus.n_terms, &corpus.docs))
     } else {
         let name = args.get_or("preset", "pubmed-like");
-        let seed = args.get_parsed::<u64>("corpus-seed", 7);
-        let scale = args.get("scale").map(|s| s.parse().expect("--scale"));
-        preset(name, seed, scale)
-            .unwrap_or_else(|| panic!("unknown preset {name:?}"))
-            .dataset()
+        let seed = args.try_parsed_or::<u64>("corpus-seed", 7)?;
+        let scale = args.try_parsed::<f64>("scale")?;
+        match preset(name, seed, scale) {
+            Some(p) => Ok(p.dataset()),
+            None => Err(SkmError::invalid_config(format!(
+                "unknown preset {name:?} (expected pubmed-like, pubmed-like-large, nyt-like, nyt-like-large, or tiny)"
+            ))),
+        }
     }
 }
 
-fn config_for(args: &Args, ds: &Dataset) -> ClusterConfig {
+fn config_for(args: &Args, ds: &Dataset) -> SkmResult<ClusterConfig> {
     let default_k = (ds.n() / 100).max(2);
-    ClusterConfig {
-        k: args.get_parsed("k", default_k),
-        seed: args.get_parsed("seed", 42),
-        max_iters: args.get_parsed("max-iters", 200),
+    Ok(ClusterConfig {
+        k: args.try_parsed_or("k", default_k)?,
+        seed: args.try_parsed_or("seed", 42)?,
+        max_iters: args.try_parsed_or("max-iters", 200)?,
         ..Default::default()
-    }
+    })
 }
 
 /// Sharded-engine configuration from `--threads` / `--shard` (falling
 /// back to the `SKM_THREADS` / `SKM_SHARD` environment knobs). The
 /// engine is bit-identical to the serial path, so these flags change
 /// wall-clock time only — never results.
-fn par_for(args: &Args) -> ParConfig {
+fn par_for(args: &Args) -> SkmResult<ParConfig> {
     let env = ParConfig::from_env();
-    ParConfig {
-        threads: if args.get("threads").is_some() {
-            args.threads()
-        } else {
-            env.threads
-        },
-        shard: if args.get("shard").is_some() {
-            args.shard()
-        } else {
-            env.shard
-        },
-    }
+    Ok(ParConfig {
+        threads: args.try_parsed_or("threads", env.threads)?.max(1),
+        shard: args.try_parsed_or("shard", env.shard)?,
+    })
+}
+
+fn parse_algo(s: &str) -> SkmResult<AlgoKind> {
+    AlgoKind::parse(s).ok_or_else(|| {
+        SkmError::invalid_config(format!(
+            "unknown algo {s:?} (expected one of: {})",
+            AlgoKind::all()
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
+    })
 }
 
 fn describe(ds: &Dataset, k: usize) {
@@ -117,7 +137,7 @@ fn describe(ds: &Dataset, k: usize) {
 
 fn main() {
     let args = Args::parse();
-    match args.subcommand() {
+    let result = match args.subcommand() {
         Some("cluster") => cmd_cluster(&args),
         Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
@@ -134,14 +154,18 @@ fn main() {
             );
             std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        eprintln!("skm: {e}");
+        std::process::exit(e.exit_code());
     }
 }
 
-fn cmd_cluster(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
-    let par = par_for(args);
-    let kind = AlgoKind::parse(args.get_or("algo", "es-icp")).expect("--algo");
+fn cmd_cluster(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
+    let par = par_for(args)?;
+    let kind = parse_algo(args.get_or("algo", "es-icp"))?;
     describe(&ds, cfg.k);
     if par.is_parallel() {
         eprintln!(
@@ -153,7 +177,7 @@ fn cmd_cluster(args: &Args) {
     if args.minibatch() {
         return cmd_cluster_minibatch(args, &ds, &cfg, &par, kind);
     }
-    let out = run_clustering_with(kind, &ds, &cfg, &par);
+    let out = try_run_clustering_with(kind, &ds, &cfg, &par)?;
     println!(
         "{}: {} iterations ({}), J={:.4}, total {:.2}s (assign {:.2}s / update {:.2}s), avg mult/iter {}, max mem {:.3} GB",
         kind.name(),
@@ -190,7 +214,7 @@ fn cmd_cluster(args: &Args) {
             );
         }
     }
-    write_bench_json(args, &cluster_run_json(&ds, &cfg, &out));
+    write_bench_json(args, &cluster_run_json(&ds, &cfg, &out))
 }
 
 /// The one `--minibatch` knob semantics, shared by `cluster` and
@@ -199,25 +223,29 @@ fn cmd_cluster(args: &Args) {
 /// defaults to sequential, the epoch budget is rescaled to the
 /// (possibly overridden) batch size unless `--rounds` pins it, and
 /// `--sample-seed` falls back to the clustering seed.
-fn minibatch_config_for(args: &Args, n: usize, cfg: &ClusterConfig) -> MiniBatchConfig {
+fn minibatch_config_for(args: &Args, n: usize, cfg: &ClusterConfig) -> SkmResult<MiniBatchConfig> {
     // One default policy, shared with Preset::minibatch_config.
     let defaults = MiniBatchConfig::default_for(n);
-    let batch = match args.batch_size() {
+    let batch = match args.try_parsed_or::<usize>("batch-size", 0)? {
         0 => defaults.batch,
         b => b.min(n),
     };
     let rounds_per_epoch = (n + batch - 1) / batch;
-    MiniBatchConfig {
+    let sched = args.get_or("schedule", "sequential");
+    Ok(MiniBatchConfig {
         batch,
-        schedule: BatchSchedule::parse(args.get_or("schedule", "sequential"))
-            .expect("--schedule"),
-        decay: args.decay(),
-        max_rounds: args.get_parsed(
+        schedule: BatchSchedule::parse(sched).ok_or_else(|| {
+            SkmError::invalid_config(format!(
+                "unknown schedule {sched:?} (expected sequential or reservoir)"
+            ))
+        })?,
+        decay: args.try_parsed_or("decay", 1.0)?,
+        max_rounds: args.try_parsed_or(
             "rounds",
             skm::coordinator::minibatch::DEFAULT_EPOCH_BUDGET * rounds_per_epoch,
-        ),
-        sample_seed: args.get_parsed("sample-seed", cfg.seed),
-    }
+        )?,
+        sample_seed: args.try_parsed_or("sample-seed", cfg.seed)?,
+    })
 }
 
 /// The `--minibatch` arm of `cluster`: batches through
@@ -231,9 +259,9 @@ fn cmd_cluster_minibatch(
     cfg: &ClusterConfig,
     par: &ParConfig,
     kind: AlgoKind,
-) {
+) -> SkmResult<()> {
     let n = ds.n();
-    let mb = minibatch_config_for(args, n, cfg);
+    let mb = minibatch_config_for(args, n, cfg)?;
     let rounds_per_epoch = (n + mb.batch - 1) / mb.batch;
     eprintln!(
         "mini-batch mode: batch {} ({} rounds/epoch), schedule {}, decay {}",
@@ -242,7 +270,7 @@ fn cmd_cluster_minibatch(
         mb.schedule.name(),
         mb.decay
     );
-    let out = run_minibatch(kind, ds, cfg, &mb, par);
+    let out = try_run_minibatch(kind, ds, cfg, &mb, par)?;
     println!(
         "{} (mini-batch): {} rounds ({}), J={:.4}, {} objects processed, total {:.2}s (assign {:.2}s / update {:.2}s), max mem {:.3} GB",
         kind.name(),
@@ -277,33 +305,33 @@ fn cmd_cluster_minibatch(
             );
         }
     }
-    write_bench_json(args, &minibatch_run_json(ds, cfg, &mb, &out));
+    write_bench_json(args, &minibatch_run_json(ds, cfg, &mb, &out))
 }
 
 /// `--bench-json <path>`: dump the phase-level timing breakdown,
 /// iteration count, and OpCounters of the run(s) as JSON.
-fn write_bench_json(args: &Args, json: &skm::util::json::Json) {
+fn write_bench_json(args: &Args, json: &skm::util::json::Json) -> SkmResult<()> {
     if let Some(path) = args.get("bench-json") {
         std::fs::write(path, json.render_pretty())
-            .unwrap_or_else(|e| panic!("--bench-json {path}: {e}"));
+            .map_err(|e| SkmError::io(format!("write --bench-json {path}"), e))?;
         eprintln!("[wrote {path}]");
     }
+    Ok(())
 }
 
-fn parse_algos(spec: &str) -> Vec<AlgoKind> {
+fn parse_algos(spec: &str) -> SkmResult<Vec<AlgoKind>> {
     if spec == "all" {
-        return AlgoKind::all().to_vec();
+        return Ok(AlgoKind::all().to_vec());
     }
-    spec.split(',')
-        .map(|s| AlgoKind::parse(s.trim()).unwrap_or_else(|| panic!("unknown algo {s:?}")))
-        .collect()
+    spec.split(',').map(|s| parse_algo(s.trim())).collect()
 }
 
-fn cmd_compare(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
-    let par = par_for(args);
-    let kinds = parse_algos(args.get_or("algos", "mivi,icp,ta-icp,cs-icp,es-icp"));
+fn cmd_compare(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
+    let par = par_for(args)?;
+    let kinds = parse_algos(args.get_or("algos", "mivi,icp,ta-icp,cs-icp,es-icp"))?;
+    skm::algo::validate_cluster_config(&cfg, &ds)?;
     describe(&ds, cfg.k);
     let mut summaries = Vec::new();
     let mut outs = Vec::new();
@@ -324,16 +352,19 @@ fn cmd_compare(args: &Args) {
     let reference = args.get_or("reference", summaries.last().map(|s| s.name).unwrap_or("MIVI"));
     println!("Rates relative to {reference} (cf. paper Tables IV/VI):");
     println!("{}", comparison_rate_table(&summaries, reference).render());
-    write_bench_json(args, &compare_runs_json(&ds, &cfg, &outs));
+    write_bench_json(args, &compare_runs_json(&ds, &cfg, &outs))
 }
 
 /// The `serve` subcommand: cluster the corpus, freeze it into a serving
 /// snapshot, build the pruned query router, and answer a query batch.
-fn cmd_serve(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
-    let par = par_for(args);
-    let kind = AlgoKind::parse(args.get_or("algo", "es-icp")).expect("--algo");
+/// Per-query failures are contained — the batch completes, failed slots
+/// are reported (stderr count, `--log` lines, JSON `error` objects),
+/// and the exit code stays 0.
+fn cmd_serve(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
+    let par = par_for(args)?;
+    let kind = parse_algo(args.get_or("algo", "es-icp"))?;
     let k = cfg.k;
     describe(&ds, k);
 
@@ -343,8 +374,8 @@ fn cmd_serve(args: &Args) {
     let snap = if args.minibatch() {
         // Same knobs and defaults as `cluster --minibatch` — one
         // shared helper, so the two subcommands cannot drift.
-        let mb = minibatch_config_for(args, ds.n(), &cfg);
-        let out = run_minibatch(kind, &ds, &cfg, &mb, &par);
+        let mb = minibatch_config_for(args, ds.n(), &cfg)?;
+        let out = try_run_minibatch(kind, &ds, &cfg, &mb, &par)?;
         eprintln!(
             "  {} rounds, J={:.4} (streaming)",
             out.n_rounds(),
@@ -352,46 +383,48 @@ fn cmd_serve(args: &Args) {
         );
         ClusteredCorpus::from_minibatch(ds, &out, k)
     } else {
-        let out = run_clustering_with(kind, &ds, &cfg, &par);
+        let out = try_run_clustering_with(kind, &ds, &cfg, &par)?;
         eprintln!("  {} iterations, J={:.4}", out.iterations(), out.objective);
         ClusteredCorpus::from_output(ds, &out, k)
     };
 
     // 2. The router: --t-th / --v-th each independently override the
     //    Section-V estimator (estimation is skipped only when both are
-    //    given).
-    let params = match (args.get("t-th"), args.get("v-th")) {
-        (Some(t), Some(v)) => RouterParams {
-            t_th: t.parse().expect("--t-th"),
-            v_th: v.parse().expect("--v-th"),
-        },
-        (None, None) => RouterParams::estimate_for(&snap, &cfg),
+    //    given). A failed estimation degrades to exact routing
+    //    parameters inside estimate_for — never an exit.
+    let t_ov = args.try_parsed::<usize>("t-th")?;
+    let v_ov = args.try_parsed::<f64>("v-th")?;
+    let params = match (t_ov, v_ov) {
+        (Some(t_th), Some(v_th)) => RouterParams { t_th, v_th },
         (t, v) => {
             let est = RouterParams::estimate_for(&snap, &cfg);
             RouterParams {
-                t_th: t.map(|s| s.parse().expect("--t-th")).unwrap_or(est.t_th),
-                v_th: v.map(|s| s.parse().expect("--v-th")).unwrap_or(est.v_th),
+                t_th: t.unwrap_or(est.t_th),
+                v_th: v.unwrap_or(est.v_th),
             }
         }
     };
-    let router = Router::new(&snap, params);
+    let router = Router::new(&snap, params)?;
     let defaults = ServeDefaults::default_for(k);
-    let top_p = match args.top_p() {
+    let top_p = match args.try_parsed_or::<usize>("top-p", 0)? {
         0 => defaults.top_p,
         p => p,
     };
-    let top_k = args.top_k();
+    let top_k = args.try_parsed_or::<usize>("top-k", 10)?;
 
     // 3. Queries: a raw bag-of-words file embedded into the frozen
     //    feature space, or synthetic queries sampled from the corpus.
     let queries: Vec<Query> = if let Some(path) = args.get("queries") {
-        let qc = read_uci_bow_file(path, None).expect("read query docword file");
-        qc.docs.iter().map(|doc| snap.embed_bow(doc)).collect()
+        let qc = read_uci_bow_file(path, None)?;
+        qc.docs
+            .iter()
+            .map(|doc| snap.embed_bow(doc))
+            .collect::<SkmResult<Vec<_>>>()?
     } else {
         let nq = args
-            .get_parsed::<usize>("n-queries", 64)
+            .try_parsed_or::<usize>("n-queries", 64)?
             .clamp(1, snap.ds.n());
-        let mut rng = Pcg32::new(args.get_parsed("query-seed", cfg.seed ^ 0x5e4e));
+        let mut rng = Pcg32::new(args.try_parsed_or("query-seed", cfg.seed ^ 0x5e4e)?);
         rng.sample_distinct(snap.ds.n(), nq)
             .into_iter()
             .map(|i| Query::from_row(&snap.ds, i))
@@ -405,11 +438,13 @@ fn cmd_serve(args: &Args) {
         router.v_th()
     );
 
-    // 4. Serve the batch (sharded; bit-identical to serial).
+    // 4. Serve the batch (sharded; bit-identical to serial). Failed
+    //    queries occupy Err slots; successes are unaffected.
     let t0 = Instant::now();
     let (results, counters) = serve_batch(&router, &queries, top_p, top_k, &par);
     let wall = t0.elapsed().as_secs_f64();
     let nq = results.len().max(1) as f64;
+    let n_err = results.iter().filter(|r| r.is_err()).count();
     println!(
         "served {} queries in {wall:.3}s — {} QPS ({} thread{}), avg candidates/query {:.1} of K={k} (CPR {:.4}), avg exact sims/query {:.1}",
         results.len(),
@@ -420,23 +455,40 @@ fn cmd_serve(args: &Args) {
         counters.candidates as f64 / (nq * k as f64),
         counters.exact_sims as f64 / nq
     );
+    if n_err > 0 {
+        eprintln!(
+            "skm: {n_err} of {} queries failed (contained; see --log / --bench-json for details)",
+            results.len()
+        );
+    }
+    if router.fallback_count() > 0 {
+        eprintln!(
+            "skm: {} queries served by the exact-scan fallback",
+            router.fallback_count()
+        );
+    }
     if args.flag("log") {
         for (qi, r) in results.iter().enumerate() {
-            let cents: Vec<String> = r
-                .centroids
-                .iter()
-                .map(|&(c, s)| format!("{c}:{s:.4}"))
-                .collect();
-            let hits: Vec<String> = r
-                .hits
-                .iter()
-                .map(|&(i, s)| format!("{i}:{s:.4}"))
-                .collect();
-            println!(
-                "query {qi}: clusters [{}]  docs [{}]",
-                cents.join(" "),
-                hits.join(" ")
-            );
+            match r {
+                Ok(r) => {
+                    let cents: Vec<String> = r
+                        .centroids
+                        .iter()
+                        .map(|&(c, s)| format!("{c}:{s:.4}"))
+                        .collect();
+                    let hits: Vec<String> = r
+                        .hits
+                        .iter()
+                        .map(|&(i, s)| format!("{i}:{s:.4}"))
+                        .collect();
+                    println!(
+                        "query {qi}: clusters [{}]  docs [{}]",
+                        cents.join(" "),
+                        hits.join(" ")
+                    );
+                }
+                Err(e) => println!("query {qi}: ERROR {e}"),
+            }
         }
     }
     write_bench_json(
@@ -451,14 +503,15 @@ fn cmd_serve(args: &Args) {
             wall,
             None,
         ),
-    );
+    )
 }
 
-fn cmd_audit(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
-    let par = par_for(args);
-    let kinds = parse_algos(args.get_or("algo", "all"));
+fn cmd_audit(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
+    let par = par_for(args)?;
+    let kinds = parse_algos(args.get_or("algo", "all"))?;
+    skm::algo::validate_cluster_config(&cfg, &ds)?;
     describe(&ds, cfg.k);
     let mut failures = 0;
     for kind in kinds {
@@ -483,14 +536,15 @@ fn cmd_audit(args: &Args) {
     if failures > 0 {
         std::process::exit(1);
     }
+    Ok(())
 }
 
-fn cmd_ucs(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
+fn cmd_ucs(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
     describe(&ds, cfg.k);
     eprintln!("clustering with ES-ICP to obtain the mean set ...");
-    let out = run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &par_for(args));
+    let out = try_run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &par_for(args)?)?;
     let upd = update_means(&ds, &out.assign, cfg.k, None, None);
 
     let df: Vec<f64> = ds.df.iter().map(|&x| x as f64).collect();
@@ -525,18 +579,19 @@ fn cmd_ucs(args: &Args) {
         curve.value_at(0.2),
         curve.value_at(0.5)
     );
+    Ok(())
 }
 
-fn cmd_estparams(args: &Args) {
-    let ds = load_dataset(args);
-    let cfg = config_for(args, &ds);
+fn cmd_estparams(args: &Args) -> SkmResult<()> {
+    let ds = load_dataset(args)?;
+    let cfg = config_for(args, &ds)?;
     describe(&ds, cfg.k);
     // Two MIVI iterations to get realistic means, as ES-ICP does.
     let warm = ClusterConfig {
         max_iters: 2,
         ..cfg.clone()
     };
-    let out = run_clustering_with(AlgoKind::Mivi, &ds, &warm, &par_for(args));
+    let out = try_run_clustering_with(AlgoKind::Mivi, &ds, &warm, &par_for(args)?)?;
     let upd = update_means(&ds, &out.assign, cfg.k, None, None);
     let s_min = (ds.d() as f64 * cfg.s_min_frac) as usize;
     let xp = ObjInvIndex::build(&ds.x, s_min);
@@ -564,9 +619,10 @@ fn cmd_estparams(args: &Args) {
     for p in &est.curve {
         println!("{:<9.4}  {:<9}  {}", p.v_th, p.t_th, fmt_sig(p.j_value));
     }
+    Ok(())
 }
 
-fn cmd_info() {
+fn cmd_info() -> SkmResult<()> {
     println!("skm — ES-ICP spherical k-means reproduction");
     println!("algorithms: {}", AlgoKind::all().iter().map(|k| k.name()).collect::<Vec<_>>().join(", "));
     let dir = skm::runtime::PjrtRuntime::default_dir();
@@ -587,4 +643,5 @@ fn cmd_info() {
             "unavailable (software cost model will be used)"
         }
     );
+    Ok(())
 }

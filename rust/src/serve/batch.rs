@@ -16,33 +16,75 @@
 //! checkout hands a worker a pooled K-length accumulator that stays hot
 //! in its cache across the shard, and scratch contents are fully reset
 //! per query, so pooling never affects results.
+//!
+//! ## Per-query fault containment (§Robustness)
+//!
+//! Every slot is a [`SkmResult`]: a query that panics mid-retrieval (or
+//! returns a typed error, e.g. a vocabulary mismatch) fails **alone**.
+//! The panic is caught per query under [`std::panic::catch_unwind`],
+//! converted through [`SkmError::from_panic`], and stored in that
+//! query's slot; the worker then continues with the next query on the
+//! same (fully-reset-per-query) scratch, the queue locks are
+//! poison-tolerant ([`lock_unpoisoned`]), and every unaffected query's
+//! ids and score bits are identical to a fault-free run —
+//! `rust/tests/faults.rs` proves it across threads 2/4/7.
 
+use crate::algo::par::lock_unpoisoned;
 use crate::algo::ParConfig;
+use crate::error::{SkmError, SkmResult};
 use crate::metrics::counters::OpCounters;
-use crate::serve::router::{Router, ServeResult};
+use crate::serve::router::{RouteScratch, Router, ServeResult};
 use crate::serve::snapshot::Query;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Serve one contiguous query shard into its slots. `qi0` is the global
+/// index of the shard's first query — the stable per-query address the
+/// fail-point harness targets. Each query is individually contained: a
+/// panic lands in that query's slot as a typed error and the loop moves
+/// on.
+fn serve_shard(
+    router: &Router<'_>,
+    s: &mut RouteScratch,
+    qi0: usize,
+    qs: &[Query],
+    out: &mut [Option<SkmResult<ServeResult>>],
+    top_p: usize,
+    top_k: usize,
+) {
+    for (off, (q, slot)) in qs.iter().zip(out.iter_mut()).enumerate() {
+        let qi = qi0 + off;
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            crate::failpoint!("serve.query", qi);
+            router.retrieve_with(s, q, top_p, top_k)
+        }));
+        *slot = Some(match r {
+            Ok(res) => res,
+            Err(payload) => Err(SkmError::from_panic("serve.query", payload)),
+        });
+    }
+}
 
 /// Serve a batch of queries: per-query results in query order (each the
-/// exact [`Router::retrieve`] answer) plus the merged counters.
-/// Bit-identical to the serial loop for any `threads`/`shard`
-/// combination.
+/// exact [`Router::retrieve`] answer, or that query's typed error) plus
+/// the counters merged over the successful queries. Bit-identical to
+/// the serial loop for any `threads`/`shard` combination, including
+/// under contained per-query faults (module docs). Use
+/// [`serve_batch_strict`] when any failure should fail the whole batch.
 pub fn serve_batch(
     router: &Router<'_>,
     queries: &[Query],
     top_p: usize,
     top_k: usize,
     par: &ParConfig,
-) -> (Vec<ServeResult>, OpCounters) {
+) -> (Vec<SkmResult<ServeResult>>, OpCounters) {
     let n = queries.len();
-    let mut slots: Vec<Option<ServeResult>> = Vec::new();
+    let mut slots: Vec<Option<SkmResult<ServeResult>>> = Vec::new();
     slots.resize_with(n, || None);
 
     if !par.is_parallel() || n == 0 {
         // One scratch for the whole batch (contents reset per query).
         let mut s = router.checkout_scratch();
-        for (q, slot) in queries.iter().zip(slots.iter_mut()) {
-            *slot = Some(router.retrieve_with(&mut s, q, top_p, top_k));
-        }
+        serve_shard(router, &mut s, 0, queries, &mut slots, top_p, top_k);
         router.checkin_scratch(s);
     } else {
         let shard = par.shard_size(n);
@@ -51,29 +93,29 @@ pub fn serve_batch(
         {
             // Shared work queue, exactly as in `par::run_sharded`:
             // scheduling varies run to run, the per-slot writes do not.
-            let work: Vec<(&[Query], &mut [Option<ServeResult>])> = queries
+            let work: Vec<(usize, &[Query], &mut [Option<SkmResult<ServeResult>>])> = queries
                 .chunks(shard)
                 .zip(slots.chunks_mut(shard))
+                .enumerate()
+                .map(|(si, (qs, out))| (si * shard, qs, out))
                 .collect();
             let queue = std::sync::Mutex::new(work);
             let queue = &queue;
             std::thread::scope(|scope| {
                 for _ in 0..threads {
                     scope.spawn(move || loop {
-                        let item = queue.lock().unwrap().pop();
+                        let item = lock_unpoisoned(queue).pop();
                         match item {
-                            Some((qs, out)) => {
+                            Some((qi0, qs, out)) => {
                                 // Scratch checked out per SHARD, not per
                                 // query: the K-length accumulator stays
                                 // hot in this worker's cache and the
                                 // pool mutexes are off the per-query
                                 // path (scratch is reset per query, so
-                                // results are unaffected).
+                                // results are unaffected — including
+                                // after a contained panic).
                                 let mut s = router.checkout_scratch();
-                                for (q, slot) in qs.iter().zip(out.iter_mut()) {
-                                    *slot =
-                                        Some(router.retrieve_with(&mut s, q, top_p, top_k));
-                                }
+                                serve_shard(router, &mut s, qi0, qs, out, top_p, top_k);
                                 router.checkin_scratch(s);
                             }
                             None => break,
@@ -84,15 +126,50 @@ pub fn serve_batch(
         }
     }
 
-    let results: Vec<ServeResult> = slots
+    let results: Vec<SkmResult<ServeResult>> = slots
         .into_iter()
-        .map(|r| r.expect("query slot left unserved"))
+        .enumerate()
+        .map(|(qi, r)| {
+            // Structurally unreachable (serve_shard fills every slot of
+            // every queue item), but a typed error beats an abort if a
+            // future engine change breaks that.
+            r.unwrap_or_else(|| {
+                Err(SkmError::WorkerPanic {
+                    site: "serve.slot".to_string(),
+                    detail: format!("query {qi} left unserved"),
+                })
+            })
+        })
         .collect();
     let mut total = OpCounters::new();
-    for r in &results {
+    for r in results.iter().flatten() {
         total.add(&r.counters);
     }
     (results, total)
+}
+
+/// All-or-nothing wrapper over [`serve_batch`]: the first failed
+/// query's error fails the call (reported with its query index).
+/// Convenient for offline/batch pipelines; online callers should use
+/// [`serve_batch`] and handle per-query errors.
+pub fn serve_batch_strict(
+    router: &Router<'_>,
+    queries: &[Query],
+    top_p: usize,
+    top_k: usize,
+    par: &ParConfig,
+) -> SkmResult<(Vec<ServeResult>, OpCounters)> {
+    let (results, total) = serve_batch(router, queries, top_p, top_k, par);
+    let mut ok = Vec::with_capacity(results.len());
+    for (qi, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(res) => ok.push(res),
+            Err(e) => {
+                return Err(SkmError::invalid_query(format!("query {qi} failed: {e}")))
+            }
+        }
+    }
+    Ok((ok, total))
 }
 
 #[cfg(test)]
@@ -106,7 +183,8 @@ mod tests {
     /// Unit-scope smoke: parallel batch output equals the serial loop in
     /// order and bits. The full cross-thread suite (2/4/7 threads,
     /// estimated params, adversarial queries) lives in
-    /// `rust/tests/serve.rs`.
+    /// `rust/tests/serve.rs`; the fault-containment suite in
+    /// `rust/tests/faults.rs`.
     #[test]
     fn batch_smoke_matches_serial() {
         let c = generate(&tiny(31));
@@ -114,10 +192,11 @@ mod tests {
         let n = ds.n();
         let assign: Vec<u32> = (0..n).map(|i| (i % 5) as u32).collect();
         let snap = ClusteredCorpus::from_assignment(ds, assign, 5);
-        let router = Router::new(&snap, RouterParams::exact());
+        let router = Router::new(&snap, RouterParams::exact()).unwrap();
         let queries: Vec<Query> = (0..17).map(|i| Query::from_row(&snap.ds, i * 3)).collect();
-        let (serial, sc) = serve_batch(&router, &queries, 2, 4, &ParConfig::serial());
-        let (par, pc) = serve_batch(
+        let (serial, sc) =
+            serve_batch_strict(&router, &queries, 2, 4, &ParConfig::serial()).unwrap();
+        let (par, pc) = serve_batch_strict(
             &router,
             &queries,
             2,
@@ -126,7 +205,8 @@ mod tests {
                 threads: 3,
                 shard: 4,
             },
-        );
+        )
+        .unwrap();
         assert_eq!(sc, pc);
         assert_eq!(serial.len(), par.len());
         for (a, b) in serial.iter().zip(&par) {
@@ -141,5 +221,35 @@ mod tests {
             }
             assert_eq!(a.counters, b.counters);
         }
+    }
+
+    /// A wrong-vocabulary query fails alone: its slot is a typed error,
+    /// every other slot is served.
+    #[test]
+    fn bad_query_fails_only_its_slot() {
+        let c = generate(&tiny(32));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let n = ds.n();
+        let assign: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let snap = ClusteredCorpus::from_assignment(ds, assign, 4);
+        let router = Router::new(&snap, RouterParams::exact()).unwrap();
+        let mut queries: Vec<Query> =
+            (0..9).map(|i| Query::from_row(&snap.ds, i)).collect();
+        // Query 4 claims a different vocabulary size.
+        queries[4] = Query::from_pairs(snap.ds.d() + 5, &[(0, 1.0)]).unwrap();
+        for par in [ParConfig::serial(), ParConfig { threads: 3, shard: 2 }] {
+            let (results, _) = serve_batch(&router, &queries, 2, 3, &par);
+            for (qi, r) in results.iter().enumerate() {
+                if qi == 4 {
+                    assert!(
+                        matches!(r, Err(SkmError::InvalidQuery { .. })),
+                        "query 4: {r:?}"
+                    );
+                } else {
+                    assert!(r.is_ok(), "query {qi}: {r:?}");
+                }
+            }
+        }
+        assert!(serve_batch_strict(&router, &queries, 2, 3, &ParConfig::serial()).is_err());
     }
 }

@@ -24,6 +24,13 @@
 //!    (and every score bit) identical to the serial loop for any
 //!    thread count.
 //!
+//! Failure is per request, never per process (§Robustness): every
+//! `serve_batch` slot is a `Result`, so a hostile query or a panicking
+//! worker fails alone — unaffected queries stay bit-identical to a
+//! fault-free run — and the router degrades to its exact scan when the
+//! pruned path fails internally (see [`router`]'s degradation section
+//! and `rust/tests/faults.rs`).
+//!
 //! Plumbing: the `skm serve` subcommand (cluster → snapshot → route a
 //! query file or synthetic batch, `--top-p`/`--top-k`/`--threads`),
 //! `benches/serve.rs` (QPS / latency percentiles, bitwise-verified
@@ -34,7 +41,7 @@ pub mod report;
 pub mod router;
 pub mod snapshot;
 
-pub use batch::serve_batch;
+pub use batch::{serve_batch, serve_batch_strict};
 pub use report::{latency_stats, serve_run_json, LatencyStats};
 pub use router::{push_top, Router, RouterParams, ServeResult, UB_GUARD};
 pub use snapshot::{ClusteredCorpus, Query};

@@ -1,6 +1,7 @@
 //! Machine-readable serving reports: the `skm serve --bench-json` shape
 //! and the latency-percentile helper shared with `benches/serve.rs`.
 
+use crate::error::SkmResult;
 use crate::metrics::counters::OpCounters;
 use crate::serve::router::{Router, ServeResult};
 use crate::serve::snapshot::ClusteredCorpus;
@@ -54,25 +55,30 @@ impl LatencyStats {
 /// Machine-readable report for one served batch: dataset/router shape,
 /// throughput, cost counters, optional latency percentiles, and the
 /// per-query top-p/top-k answers. Consumed by `skm serve --bench-json`.
+/// A failed query renders as `{"error": "<display>"}` in `per_query`
+/// and is excluded from the counter/pruning aggregates; the top-level
+/// `errors` field counts failures.
 pub fn serve_run_json(
     snap: &ClusteredCorpus,
     router: &Router<'_>,
     top_p: usize,
     top_k: usize,
     threads: usize,
-    results: &[ServeResult],
+    results: &[SkmResult<ServeResult>],
     wall_secs: f64,
     latency: Option<&LatencyStats>,
 ) -> Json {
     let mut counters = OpCounters::new();
-    for r in results {
+    for r in results.iter().flatten() {
         counters.add(&r.counters);
     }
+    let n_err = results.iter().filter(|r| r.is_err()).count();
     let nq = results.len().max(1) as f64;
     let per_query: Vec<Json> = results
         .iter()
-        .map(|r| {
-            Json::obj(vec![
+        .map(|res| match res {
+            Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]),
+            Ok(r) => Json::obj(vec![
                 (
                     "centroids",
                     Json::Arr(
@@ -101,7 +107,7 @@ pub fn serve_run_json(
                             .collect(),
                     ),
                 ),
-            ])
+            ]),
         })
         .collect();
     Json::obj(vec![
@@ -133,6 +139,7 @@ pub fn serve_run_json(
             ]),
         ),
         ("queries", Json::UInt(results.len() as u64)),
+        ("errors", Json::UInt(n_err as u64)),
         ("wall_secs", Json::Num(wall_secs)),
         (
             "qps",
@@ -195,8 +202,11 @@ mod tests {
         let n = ds.n();
         let assign: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
         let snap = ClusteredCorpus::from_assignment(ds, assign, 4);
-        let router = Router::new(&snap, RouterParams::exact());
-        let queries: Vec<Query> = (0..5).map(|i| Query::from_row(&snap.ds, i)).collect();
+        let router = Router::new(&snap, RouterParams::exact()).unwrap();
+        let mut queries: Vec<Query> = (0..5).map(|i| Query::from_row(&snap.ds, i)).collect();
+        // One failing query: the report must carry it as an error entry
+        // without dropping the successful ones.
+        queries.push(Query::from_pairs(snap.ds.d() + 3, &[(0, 1.0)]).unwrap());
         let (results, _) = serve_batch(
             &router,
             &queries,
@@ -217,6 +227,8 @@ mod tests {
             "\"per_query\"",
             "\"centroids\"",
             "\"hits\"",
+            "\"errors\":1",
+            "\"error\"",
         ] {
             assert!(text.contains(key), "missing {key}");
         }

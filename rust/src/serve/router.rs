@@ -52,16 +52,32 @@
 //! Per-query scratch (the K-length ρ accumulator and the seed list)
 //! lives in a [`ScratchPool`], so steady-state routing allocates only
 //! the returned result vectors.
+//!
+//! ## Graceful degradation (§Robustness)
+//!
+//! The exactness contract makes failure handling unusually clean: the
+//! pruned path and the brute-force scan return the *same bits*, so when
+//! the pruned path fails — parameter estimation dies, the structured
+//! index is inconsistent with the snapshot, or a fail-point fires — the
+//! router falls back to [`Router::route_exact`] (all-means sparse-merge
+//! scan) with a logged reason instead of panicking, and the caller's
+//! results are unchanged except for the cost counters. Invalid *queries*
+//! (vocabulary mismatch) are the caller's error and are returned as
+//! typed [`SkmError::InvalidQuery`] values, never degraded around.
+//! [`Router::fallback_count`] exposes how often degradation engaged;
+//! `rust/tests/faults.rs` pins the fallback's bit-parity.
 
 use crate::algo::kernel;
 use crate::algo::par::ScratchPool;
 use crate::algo::ClusterConfig;
+use crate::error::{SkmError, SkmResult};
 use crate::estparams::EstConfig;
 use crate::index::{EsIndex, ObjInvIndex, PartialIndex};
 use crate::metrics::counters::OpCounters;
 use crate::metrics::perf::PhaseTimes;
 use crate::serve::snapshot::{ClusteredCorpus, Query};
 use std::mem::size_of;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Absolute guard band on the upper-bound prune (cosine scores live in
 /// `[0, 1]`): a centroid survives when `ub ≥ τ − UB_GUARD`. Large
@@ -137,30 +153,52 @@ impl RouterParams {
     /// estimator over the frozen means and ρ (the same machinery the
     /// ES-ICP assigner runs at iterations 2–3). Falls back to
     /// [`RouterParams::exact`] for `K < 4`, where the probability model
-    /// degenerates (same guard as the assigner).
+    /// degenerates (same guard as the assigner) — and likewise when the
+    /// estimator panics or returns unusable parameters: estimation is a
+    /// performance optimization, so its failure degrades throughput,
+    /// never availability or result bits (the exact parameters route
+    /// every query correctly; module docs).
     pub fn estimate_for(snap: &ClusteredCorpus, cfg: &ClusterConfig) -> Self {
         let d = snap.ds.d();
         if snap.k < 4 {
             return Self::exact();
         }
-        let s_min = ((d as f64 * cfg.s_min_frac) as usize).min(d.saturating_sub(1));
-        let xp = ObjInvIndex::build(&snap.ds.x, s_min);
-        let est = crate::estparams::estimate(
-            &snap.ds,
-            &snap.means,
-            &snap.rho,
-            &xp,
-            &EstConfig {
-                s_min,
-                n_candidates: cfg.n_vth_candidates,
-                fixed_t: None,
-                fixed_v: None,
-                max_sample_objects: 4_000,
-            },
-        );
-        Self {
-            t_th: est.t_th,
-            v_th: est.v_th,
+        let est = crate::error::contain("router.estimate", || {
+            crate::failpoint!("router.estimate", 0u64);
+            let s_min = ((d as f64 * cfg.s_min_frac) as usize).min(d.saturating_sub(1));
+            let xp = ObjInvIndex::build(&snap.ds.x, s_min);
+            let est = crate::estparams::estimate(
+                &snap.ds,
+                &snap.means,
+                &snap.rho,
+                &xp,
+                &EstConfig {
+                    s_min,
+                    n_candidates: cfg.n_vth_candidates,
+                    fixed_t: None,
+                    fixed_v: None,
+                    max_sample_objects: 4_000,
+                },
+            );
+            Self {
+                t_th: est.t_th,
+                v_th: est.v_th,
+            }
+        });
+        match est {
+            Ok(p) if p.v_th.is_finite() && p.v_th > 0.0 => p,
+            Ok(p) => {
+                eprintln!(
+                    "skm: parameter estimation returned unusable v_th={}; \
+                     serving with exact routing parameters",
+                    p.v_th
+                );
+                Self::exact()
+            }
+            Err(e) => {
+                eprintln!("skm: parameter estimation failed ({e}); serving with exact routing parameters");
+                Self::exact()
+            }
         }
     }
 }
@@ -203,16 +241,25 @@ pub struct Router<'a> {
     params: RouterParams,
     idx: EsIndex,
     scratch: ScratchPool<RouteScratch>,
+    /// How many queries were served by the exact-scan fallback because
+    /// the pruned path failed (see the module's degradation section).
+    fallbacks: AtomicU64,
+    /// One-time flag so the fallback reason is logged once, not per
+    /// query at serving rates.
+    fallback_logged: AtomicBool,
 }
 
 impl<'a> Router<'a> {
     /// Build the routing index over the snapshot's frozen means.
-    pub fn new(snap: &'a ClusteredCorpus, params: RouterParams) -> Self {
-        assert!(
-            params.v_th > 0.0 && params.v_th.is_finite(),
-            "v_th must be positive and finite (got {})",
-            params.v_th
-        );
+    /// Rejects non-positive / non-finite `v_th` with a typed
+    /// [`SkmError::InvalidConfig`].
+    pub fn new(snap: &'a ClusteredCorpus, params: RouterParams) -> SkmResult<Self> {
+        if !(params.v_th > 0.0 && params.v_th.is_finite()) {
+            return Err(SkmError::invalid_config(format!(
+                "v_th must be positive and finite (got {})",
+                params.v_th
+            )));
+        }
         let params = RouterParams {
             t_th: params.t_th.min(snap.ds.d()),
             v_th: params.v_th,
@@ -226,12 +273,14 @@ impl<'a> Router<'a> {
         // read. Drop it so the serving index holds (and reports) only
         // what routing uses.
         idx.partial = PartialIndex::default();
-        Self {
+        Ok(Self {
             snap,
             params,
             idx,
             scratch: ScratchPool::new(),
-        }
+            fallbacks: AtomicU64::new(0),
+            fallback_logged: AtomicBool::new(false),
+        })
     }
 
     pub fn t_th(&self) -> usize {
@@ -267,30 +316,83 @@ impl<'a> Router<'a> {
         self.scratch.checkin(s, PhaseTimes::default());
     }
 
+    /// Queries served by the exact-scan fallback so far (0 in healthy
+    /// operation; monitoring hook for the degradation path).
+    pub fn fallback_count(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Record a pruned-path failure and log the first one.
+    fn note_fallback(&self, e: &SkmError) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        if !self.fallback_logged.swap(true, Ordering::Relaxed) {
+            eprintln!("skm: routing degraded to the exact scan ({e}); results are unaffected");
+        }
+    }
+
     /// Route a query: the top-`p` centroids with **exact** cosine
     /// scores, best first under `(score desc, id asc)` — bit-identical
     /// to a brute-force scan over all means (module docs). `top_p` is
     /// clamped to `[1, K]`.
-    pub fn route(&self, q: &Query, top_p: usize) -> (Vec<(u32, f64)>, OpCounters) {
+    ///
+    /// `Err` is returned only for invalid queries (vocabulary
+    /// mismatch); internal pruned-path failures degrade to the exact
+    /// scan with identical result bits (module docs).
+    pub fn route(&self, q: &Query, top_p: usize) -> SkmResult<(Vec<(u32, f64)>, OpCounters)> {
         let mut s = self.checkout_scratch();
         let out = self.route_with(&mut s, q, top_p);
         self.checkin_scratch(s);
         out
     }
 
-    /// The per-query routing core, against caller-held scratch.
+    /// The per-query routing core, against caller-held scratch: pruned
+    /// path first, exact-scan degradation on its failure (never on
+    /// invalid queries — those are the caller's error).
     pub(crate) fn route_with(
         &self,
         s: &mut RouteScratch,
         q: &Query,
         top_p: usize,
-    ) -> (Vec<(u32, f64)>, OpCounters) {
+    ) -> SkmResult<(Vec<(u32, f64)>, OpCounters)> {
+        if q.d() != self.snap.ds.d() {
+            return Err(SkmError::invalid_query(format!(
+                "vocabulary does not match the corpus (query d={}, corpus d={})",
+                q.d(),
+                self.snap.ds.d()
+            )));
+        }
+        match self.route_pruned(s, q, top_p) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.note_fallback(&e);
+                Ok(self.route_exact(q, top_p))
+            }
+        }
+    }
+
+    /// The ES-pruned routing path (scratch contents are fully
+    /// overwritten up front, so a failed attempt leaves nothing stale
+    /// for the next query).
+    fn route_pruned(
+        &self,
+        s: &mut RouteScratch,
+        q: &Query,
+        top_p: usize,
+    ) -> SkmResult<(Vec<(u32, f64)>, OpCounters)> {
         let k = self.snap.k;
-        assert_eq!(
-            q.d(),
-            self.snap.ds.d(),
-            "query vocabulary does not match the corpus"
-        );
+        crate::failpoint_res!("router.route", 0u64);
+        // Cheap structural self-checks: the kernels' unchecked scatter
+        // targets are sized from these, so disagreement means the index
+        // no longer matches the snapshot — degrade instead of risking
+        // the assert/UB tier.
+        if self.snap.means.m.n_rows() != k {
+            return Err(SkmError::IndexInconsistent {
+                detail: format!(
+                    "mean set has {} rows but snapshot K={k}",
+                    self.snap.means.m.n_rows()
+                ),
+            });
+        }
         let p = top_p.clamp(1, k);
         let mut counters = OpCounters::new();
         if s.rho.len() != k {
@@ -366,13 +468,36 @@ impl<'a> Router<'a> {
             }
         }
         counters.mult = mult;
+        Ok((top.into_iter().map(|(sc, j)| (j, sc)).collect(), counters))
+    }
+
+    /// The degradation target: a branch-free brute-force scan — one
+    /// exact sparse merge per mean, final top-p under the same total
+    /// order. By the module's exactness contract this returns the same
+    /// ids and score bits as the pruned path; it touches none of the
+    /// structured index, so it serves through index inconsistencies.
+    /// Counters reflect the work actually done (all K candidates).
+    pub fn route_exact(&self, q: &Query, top_p: usize) -> (Vec<(u32, f64)>, OpCounters) {
+        let k = self.snap.k;
+        let p = top_p.clamp(1, k);
+        let mut counters = OpCounters::new();
+        let mut top: Vec<(f64, u32)> = Vec::with_capacity(p + 1);
+        for j in 0..k {
+            let (mts, mvs) = self.snap.means.m.row(j);
+            let (sc, m) = dot_sorted_count(q.ids(), q.vals(), mts, mvs);
+            counters.mult += m;
+            counters.exact_sims += 1;
+            counters.candidates += 1;
+            push_top(&mut top, p, sc, j as u32);
+        }
         (top.into_iter().map(|(sc, j)| (j, sc)).collect(), counters)
     }
 
     /// Route, then scan the routed clusters' member documents for the
     /// exact top-`k` nearest documents (same total order; exact over
-    /// the routed subset). `top_k == 0` returns routing only.
-    pub fn retrieve(&self, q: &Query, top_p: usize, top_k: usize) -> ServeResult {
+    /// the routed subset). `top_k == 0` returns routing only. Same
+    /// error semantics as [`Router::route`].
+    pub fn retrieve(&self, q: &Query, top_p: usize, top_k: usize) -> SkmResult<ServeResult> {
         let mut s = self.checkout_scratch();
         let out = self.retrieve_with(&mut s, q, top_p, top_k);
         self.checkin_scratch(s);
@@ -386,8 +511,8 @@ impl<'a> Router<'a> {
         q: &Query,
         top_p: usize,
         top_k: usize,
-    ) -> ServeResult {
-        let (centroids, mut counters) = self.route_with(s, q, top_p);
+    ) -> SkmResult<ServeResult> {
+        let (centroids, mut counters) = self.route_with(s, q, top_p)?;
         let mut hits: Vec<(f64, u32)> = Vec::with_capacity(top_k.min(64) + 1);
         for &(c, _) in &centroids {
             for &i in self.snap.members(c as usize) {
@@ -398,11 +523,11 @@ impl<'a> Router<'a> {
                 push_top(&mut hits, top_k, sc, i);
             }
         }
-        ServeResult {
+        Ok(ServeResult {
             centroids,
             hits: hits.into_iter().map(|(sc, i)| (i, sc)).collect(),
             counters,
-        }
+        })
     }
 }
 

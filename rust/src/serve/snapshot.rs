@@ -19,6 +19,7 @@
 
 use crate::algo::ClusterOutput;
 use crate::coordinator::MiniBatchOutput;
+use crate::error::{SkmError, SkmResult};
 use crate::index::{update_means, MeanSet};
 use crate::sparse::{CsrMatrix, Dataset};
 
@@ -39,21 +40,28 @@ impl Query {
     /// Build from `(term id, weight)` pairs in the *relabeled* (feature
     /// space) vocabulary: out-of-vocabulary ids (`>= d`) and zero
     /// weights are dropped, duplicates summed, the result sorted and
-    /// L2-normalized. Panics on negative or non-finite weights — the
-    /// tf-idf feature space is nonnegative and the router's Region-3
-    /// upper bound (`u·v ≤ u·v_th` for `v < v_th`) relies on that.
-    pub fn from_pairs(d: usize, pairs: &[(u32, f64)]) -> Self {
+    /// L2-normalized. Rejects negative, NaN, or infinite weights with a
+    /// typed [`SkmError::InvalidQuery`] (never panics, never produces a
+    /// non-unit vector) — the tf-idf feature space is nonnegative and
+    /// the router's Region-3 upper bound (`u·v ≤ u·v_th` for `v < v_th`)
+    /// relies on that. Use [`Query::from_pairs_strict`] to also reject
+    /// OOV ids and zero weights instead of dropping them.
+    pub fn from_pairs(d: usize, pairs: &[(u32, f64)]) -> SkmResult<Self> {
+        // Validate every pair — including OOV ones — before dropping
+        // anything: a NaN at an OOV id is still a malformed query, not
+        // a silently-empty one.
+        for &(t, v) in pairs {
+            if !v.is_finite() || v < 0.0 {
+                return Err(SkmError::invalid_query(format!(
+                    "weight at term {t} must be finite and nonnegative (got {v})"
+                )));
+            }
+        }
         let kept: Vec<(u32, f64)> = pairs
             .iter()
             .filter(|&&(t, v)| (t as usize) < d && v != 0.0)
             .copied()
             .collect();
-        for &(t, v) in &kept {
-            assert!(
-                v.is_finite() && v >= 0.0,
-                "query weight at term {t} must be finite and nonnegative (got {v})"
-            );
-        }
         // Route through CsrMatrix::from_rows so duplicate summing and
         // sorting follow the exact float sequence build_dataset uses —
         // embed_bow'ing a corpus document reproduces its row bits.
@@ -66,11 +74,32 @@ impl Query {
                 *v /= norm;
             }
         }
-        Self {
+        Ok(Self {
             d,
             ids: ids.to_vec(),
             vals,
+        })
+    }
+
+    /// Strict variant of [`Query::from_pairs`] for callers that treat
+    /// lenient dropping as data loss: additionally rejects
+    /// out-of-vocabulary term ids (`>= d`) and zero weights with typed
+    /// errors. On acceptance the result is bit-identical to
+    /// [`Query::from_pairs`] on the same input.
+    pub fn from_pairs_strict(d: usize, pairs: &[(u32, f64)]) -> SkmResult<Self> {
+        for &(t, v) in pairs {
+            if (t as usize) >= d {
+                return Err(SkmError::invalid_query(format!(
+                    "term id {t} out of range (vocabulary size {d})"
+                )));
+            }
+            if v == 0.0 {
+                return Err(SkmError::invalid_query(format!(
+                    "zero weight at term {t} (strict mode rejects silent drops)"
+                )));
+            }
         }
+        Self::from_pairs(d, pairs)
     }
 
     /// A corpus document as a query (rows are already unit-norm or zero).
@@ -223,7 +252,12 @@ impl ClusteredCorpus {
     /// frequencies, and L2-normalized. Embedding a corpus document
     /// reproduces its dataset row bit for bit (up to dropped
     /// zero-weight ubiquitous terms, which never change a score bit).
-    pub fn embed_bow(&self, doc: &[(u32, u32)]) -> Query {
+    ///
+    /// Raw counts are `u32`, so the only invalid inputs are structural
+    /// (a count so large `c · idf` overflows to infinity); those surface
+    /// as a typed [`SkmError::InvalidQuery`] from [`Query::from_pairs`]
+    /// rather than a panic or a non-unit vector.
+    pub fn embed_bow(&self, doc: &[(u32, u32)]) -> SkmResult<Query> {
         let n_f = self.ds.n() as f64;
         let pairs: Vec<(u32, f64)> = doc
             .iter()
@@ -309,11 +343,11 @@ mod tests {
 
     #[test]
     fn query_from_pairs_normalizes_and_drops_oov() {
-        let q = Query::from_pairs(4, &[(1, 3.0), (9, 5.0), (1, 1.0), (0, 0.0)]);
+        let q = Query::from_pairs(4, &[(1, 3.0), (9, 5.0), (1, 1.0), (0, 0.0)]).unwrap();
         assert_eq!(q.ids(), &[1]);
         assert!((q.vals()[0] - 1.0).abs() < 1e-12); // 4.0 normalized
         assert!(!q.is_zero());
-        let z = Query::from_pairs(4, &[(7, 2.0)]);
+        let z = Query::from_pairs(4, &[(7, 2.0)]).unwrap();
         assert!(z.is_zero(), "OOV-only query must be the zero vector");
         let ((l, _), (h, _)) = q.split(2);
         assert_eq!(l, &[1]);
@@ -321,16 +355,34 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "nonnegative")]
-    fn query_rejects_negative_weights() {
-        let _ = Query::from_pairs(4, &[(1, -1.0)]);
+    fn query_rejects_bad_weights_with_typed_errors() {
+        for bad in [-1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = Query::from_pairs(4, &[(1, bad)]).unwrap_err();
+            match err {
+                SkmError::InvalidQuery { detail } => {
+                    assert!(detail.contains("finite and nonnegative"), "{detail}")
+                }
+                other => panic!("wrong variant for {bad}: {other:?}"),
+            }
+        }
+        // Invalid weights at OOV ids are still rejected, not dropped.
+        assert!(Query::from_pairs(4, &[(9, f64::NAN)]).is_err());
+    }
+
+    #[test]
+    fn strict_query_rejects_what_lenient_drops() {
+        assert!(Query::from_pairs_strict(4, &[(9, 1.0)]).is_err(), "OOV id");
+        assert!(Query::from_pairs_strict(4, &[(1, 0.0)]).is_err(), "zero weight");
+        let s = Query::from_pairs_strict(4, &[(1, 3.0), (2, 4.0)]).unwrap();
+        let l = Query::from_pairs(4, &[(1, 3.0), (2, 4.0)]).unwrap();
+        assert_eq!(s, l, "strict acceptance must be bit-identical to lenient");
     }
 
     #[test]
     fn embed_bow_reproduces_corpus_rows() {
         let (snap, docs) = snapshot();
         for i in [0usize, 3, 10] {
-            let q = snap.embed_bow(&docs[i]);
+            let q = snap.embed_bow(&docs[i]).unwrap();
             let r = Query::from_row(&snap.ds, i);
             // The embedded query may drop zero-weight (idf = 0) terms
             // the row keeps explicitly; every kept value must match the

@@ -78,8 +78,10 @@ impl Args {
     }
 
     /// Parse an option value, falling back to `default` when absent.
-    /// Panics with a clear message on malformed input (CLI surface, so a
-    /// loud failure is the right behavior).
+    /// Panics with a clear message on malformed input. Kept for the
+    /// bench harnesses / examples (a backtrace is fine there); the
+    /// `skm` binary routes through [`Args::try_parsed_or`] so user
+    /// typos exit 2 with a one-line message instead.
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         match self.get(key) {
             None => default,
@@ -87,6 +89,30 @@ impl Args {
                 .parse()
                 .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}")),
         }
+    }
+
+    /// Fallible parse of an option value: `Ok(None)` when absent, a
+    /// typed usage error ([`crate::error::SkmError::InvalidConfig`],
+    /// exit code 2) on malformed input.
+    pub fn try_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> crate::error::SkmResult<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                crate::error::SkmError::invalid_config(format!("--{key}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// [`Args::try_parsed`] with a default for the absent case.
+    pub fn try_parsed_or<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> crate::error::SkmResult<T> {
+        Ok(self.try_parsed(key)?.unwrap_or(default))
     }
 
     /// True if a bare `--name` flag was given (or `--name=true`).
@@ -194,6 +220,16 @@ mod tests {
     fn malformed_number_panics() {
         let a = Args::parse_from(["x", "--k", "abc"]);
         let _ = a.get_parsed::<usize>("k", 0);
+    }
+
+    #[test]
+    fn try_parsed_is_typed_and_exits_2() {
+        let a = Args::parse_from(["x", "--k", "abc", "--n", "7"]);
+        assert_eq!(a.try_parsed_or::<usize>("n", 0).unwrap(), 7);
+        assert_eq!(a.try_parsed::<usize>("missing").unwrap(), None);
+        let err = a.try_parsed::<usize>("k").unwrap_err();
+        assert_eq!(err.exit_code(), 2);
+        assert!(err.to_string().contains("--k: cannot parse"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Compile-time-gated fail-point injection (the `failpoints` cargo
+//! feature) — the harness `rust/tests/faults.rs` uses to prove the
+//! fault-containment contract.
+//!
+//! ## Usage
+//!
+//! Named sites are planted in the production code with the
+//! [`crate::failpoint!`] / [`crate::failpoint_res!`] macros:
+//!
+//! ```ignore
+//! crate::failpoint!("algo.assign_shard", lo);     // non-Result context
+//! crate::failpoint_res!("loader.triple", seen);   // `?`s an injected error
+//! ```
+//!
+//! Without `--features failpoints` both macros expand to an **empty
+//! block** — zero code, zero branches, zero dependency on this module —
+//! so the default build's bit-pinned hot paths are untouched (the
+//! existing determinism suites run featureless and prove it).
+//!
+//! With the feature enabled, sites consult a process-global registry:
+//!
+//! * seeded once from `SKM_FAILPOINTS`, a `;`-separated list of
+//!   `site=action` entries where `action` is `panic`, `error`, or
+//!   `delay:<ms>`, optionally suffixed `@<arg>` to fire only when the
+//!   site's argument (shard start, query index, triple number …)
+//!   matches — that's how a test kills exactly one shard or one query
+//!   deterministically;
+//! * reconfigurable at runtime through [`set`] / [`clear`] /
+//!   [`clear_all`] (tests in one process cannot rely on env-once
+//!   semantics). Tests serialize around the shared registry.
+//!
+//! Actions: `panic` unwinds with a tagged `String` payload (exercises
+//! the `catch_unwind` containment paths), `error` returns
+//! [`SkmError::FaultInjected`] at `failpoint_res!` sites (and panics at
+//! `failpoint!` sites, which cannot return), `delay:<ms>` sleeps —
+//! for perturbing worker scheduling without changing results.
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use crate::error::{SkmError, SkmResult};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    /// What an armed fail-point does when hit.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Action {
+        Panic,
+        Error,
+        DelayMs(u64),
+    }
+
+    /// One armed site: the action, optionally restricted to a single
+    /// site-argument value.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct FailSpec {
+        pub action: Action,
+        pub only_arg: Option<u64>,
+    }
+
+    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        // The registry must stay usable after a *injected* panic
+        // unwound through a holder — poison tolerance, same as the
+        // engines under test.
+        m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, FailSpec>> {
+        static REG: OnceLock<Mutex<HashMap<String, FailSpec>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(parse_env()))
+    }
+
+    fn parse_env() -> HashMap<String, FailSpec> {
+        match std::env::var("SKM_FAILPOINTS") {
+            Ok(s) => parse_list(&s).unwrap_or_else(|e| {
+                eprintln!("skm: ignoring invalid SKM_FAILPOINTS: {e}");
+                HashMap::new()
+            }),
+            Err(_) => HashMap::new(),
+        }
+    }
+
+    /// Parse one `action[@arg]` spec (`panic`, `error`, `delay:<ms>`).
+    pub fn parse_spec(s: &str) -> Result<FailSpec, String> {
+        let (action_str, only_arg) = match s.split_once('@') {
+            Some((a, g)) => (
+                a.trim(),
+                Some(
+                    g.trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad @arg in failpoint spec {s:?}"))?,
+                ),
+            ),
+            None => (s.trim(), None),
+        };
+        let action = if action_str == "panic" {
+            Action::Panic
+        } else if action_str == "error" {
+            Action::Error
+        } else if let Some(ms) = action_str.strip_prefix("delay:") {
+            Action::DelayMs(
+                ms.parse::<u64>()
+                    .map_err(|_| format!("bad delay in failpoint spec {s:?}"))?,
+            )
+        } else {
+            return Err(format!(
+                "unknown failpoint action {action_str:?} (want panic | error | delay:<ms>)"
+            ));
+        };
+        Ok(FailSpec { action, only_arg })
+    }
+
+    fn parse_list(s: &str) -> Result<HashMap<String, FailSpec>, String> {
+        let mut map = HashMap::new();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, spec) = part
+                .split_once('=')
+                .ok_or_else(|| format!("missing '=' in failpoint entry {part:?}"))?;
+            map.insert(name.trim().to_string(), parse_spec(spec)?);
+        }
+        Ok(map)
+    }
+
+    /// Arm `site` with an `action[@arg]` spec (overwrites any previous
+    /// arming, including one from `SKM_FAILPOINTS`).
+    pub fn set(site: &str, spec: &str) -> Result<(), String> {
+        let parsed = parse_spec(spec)?;
+        lock(registry()).insert(site.to_string(), parsed);
+        Ok(())
+    }
+
+    /// Disarm one site.
+    pub fn clear(site: &str) {
+        lock(registry()).remove(site);
+    }
+
+    /// Disarm every site (test teardown).
+    pub fn clear_all() {
+        lock(registry()).clear();
+    }
+
+    fn active(site: &str, arg: u64) -> Option<Action> {
+        let reg = lock(registry());
+        let spec = reg.get(site)?;
+        match spec.only_arg {
+            Some(g) if g != arg => None,
+            _ => Some(spec.action),
+        }
+    }
+
+    fn injected_panic(site: &str, arg: u64) -> ! {
+        std::panic::panic_any(format!("failpoint {site} (arg {arg}): injected panic"))
+    }
+
+    /// Fire a unit-context site (cannot return an error): `panic` and
+    /// `error` both unwind (the site has no error channel), `delay`
+    /// sleeps.
+    pub fn fire_unit(site: &str, arg: u64) {
+        match active(site, arg) {
+            Some(Action::Panic) | Some(Action::Error) => injected_panic(site, arg),
+            Some(Action::DelayMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms))
+            }
+            None => {}
+        }
+    }
+
+    /// Fire a Result-context site: `error` returns
+    /// [`SkmError::FaultInjected`] for the caller's `?`.
+    pub fn fire_err(site: &str, arg: u64) -> SkmResult<()> {
+        match active(site, arg) {
+            Some(Action::Panic) => injected_panic(site, arg),
+            Some(Action::Error) => Err(SkmError::FaultInjected {
+                site: format!("{site} (arg {arg})"),
+            }),
+            Some(Action::DelayMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            None => Ok(()),
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Module tests share the process-global registry with nothing
+        // else in the lib test binary (integration fault tests live in
+        // their own binary), but still serialize among themselves.
+        fn test_lock() -> MutexGuard<'static, ()> {
+            static L: Mutex<()> = Mutex::new(());
+            L.lock().unwrap_or_else(PoisonError::into_inner)
+        }
+
+        #[test]
+        fn spec_parsing() {
+            assert_eq!(
+                parse_spec("panic").unwrap(),
+                FailSpec {
+                    action: Action::Panic,
+                    only_arg: None
+                }
+            );
+            assert_eq!(
+                parse_spec("error@3").unwrap(),
+                FailSpec {
+                    action: Action::Error,
+                    only_arg: Some(3)
+                }
+            );
+            assert_eq!(
+                parse_spec("delay:25").unwrap(),
+                FailSpec {
+                    action: Action::DelayMs(25),
+                    only_arg: None
+                }
+            );
+            assert!(parse_spec("explode").is_err());
+            assert!(parse_spec("panic@x").is_err());
+            assert!(parse_spec("delay:ms").is_err());
+            assert!(parse_list("a=panic;b=error@2; ;").is_ok());
+            assert!(parse_list("a").is_err());
+        }
+
+        #[test]
+        fn arg_filter_and_lifecycle() {
+            let _g = test_lock();
+            clear_all();
+            set("unit.test.site", "error@5").unwrap();
+            assert!(fire_err("unit.test.site", 4).is_ok());
+            assert!(fire_err("unit.test.site", 5).is_err());
+            assert!(fire_err("other.site", 5).is_ok());
+            clear("unit.test.site");
+            assert!(fire_err("unit.test.site", 5).is_ok());
+            clear_all();
+        }
+
+        #[test]
+        fn panic_action_unwinds_with_tagged_payload() {
+            let _g = test_lock();
+            clear_all();
+            set("unit.test.panic", "panic").unwrap();
+            let err = crate::error::contain("unit.test", || {
+                fire_unit("unit.test.panic", 9);
+                0u32
+            })
+            .unwrap_err();
+            clear_all();
+            let msg = err.to_string();
+            assert!(msg.contains("failpoint unit.test.panic"), "{msg}");
+            assert!(msg.contains("arg 9"), "{msg}");
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use imp::{clear, clear_all, fire_err, fire_unit, parse_spec, set, Action, FailSpec};
+
+/// Plant a fail-point in a non-`Result` context. `$arg` is a `u64`-ish
+/// site argument (shard start, query index …) used by `@arg` filters;
+/// it must be cheap and side-effect free — the disabled build drops the
+/// expression entirely.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr, $arg:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            $crate::util::failpoint::fire_unit($site, ($arg) as u64);
+        }
+    }};
+}
+
+/// Plant a fail-point in a function returning `Result<_, SkmError>`
+/// (or any error `From<SkmError>`): an armed `error` action returns
+/// through the enclosing function's `?`. Same disabled-build guarantee
+/// as [`crate::failpoint!`].
+#[macro_export]
+macro_rules! failpoint_res {
+    ($site:expr, $arg:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            $crate::util::failpoint::fire_err($site, ($arg) as u64)?;
+        }
+    }};
+}

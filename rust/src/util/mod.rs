@@ -4,6 +4,7 @@
 
 pub mod aligned;
 pub mod cli;
+pub mod failpoint;
 pub mod io;
 pub mod json;
 pub mod rng;

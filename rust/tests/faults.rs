@@ -1,0 +1,355 @@
+//! Fault-injection suite (ISSUE §Robustness tentpole): drives the
+//! compile-time-gated failpoint harness (`util::failpoint`, cargo
+//! feature `failpoints`) through every containment boundary and proves
+//! the blast radius of an injected fault:
+//!
+//! * a panicking query fails **only its own slot** in `serve_batch` —
+//!   across threads ∈ {1, 2, 4, 7} every other slot stays bit-identical
+//!   to the clean run, and the scratch pool is reusable afterwards;
+//! * a panicking shard turns `try_run_clustering_with` into a typed
+//!   [`SkmError::WorkerPanic`] naming the shard, never a process abort,
+//!   and a clean rerun on the same config is bit-identical to serial;
+//! * loader failpoints surface as typed [`SkmError::FaultInjected`]
+//!   mid-parse; estimation/routing failpoints degrade the router to
+//!   exact parameters / the exact scan with results unchanged;
+//! * `delay` actions perturb timing only — results stay bit-identical.
+//!
+//! The failpoint registry is process-global, so every test serializes
+//! on one mutex and clears the registry on entry and exit. Run with
+//! `cargo test --features failpoints --test faults`; without the
+//! feature the whole suite compiles to a single no-op smoke test (the
+//! determinism suites then prove the disabled harness changes nothing).
+
+#![cfg_attr(not(feature = "failpoints"), allow(unused_imports, dead_code))]
+
+use skm::algo::{try_run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::error::SkmError;
+use skm::serve::{serve_batch, ClusteredCorpus, Query, Router, RouterParams, ServeResult};
+use skm::sparse::build_dataset;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("faults", c.n_terms, &c.docs)
+}
+
+fn snapshot(n_docs: usize, corpus_seed: u64, k: usize) -> ClusteredCorpus {
+    let ds = dataset(n_docs, corpus_seed);
+    let cfg = ClusterConfig {
+        k,
+        seed: 3,
+        ..Default::default()
+    };
+    let out = skm::algo::run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &ParConfig::serial());
+    ClusteredCorpus::from_output(ds, &out, k)
+}
+
+/// Bit-compare two serving results (ids, score bits, counters).
+fn assert_result_eq(a: &ServeResult, b: &ServeResult, tag: &str) {
+    assert_eq!(a.centroids.len(), b.centroids.len(), "{tag}");
+    for (x, y) in a.centroids.iter().zip(&b.centroids) {
+        assert_eq!(x.0, y.0, "{tag}: centroid id");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{tag}: centroid score bits");
+    }
+    assert_eq!(a.hits.len(), b.hits.len(), "{tag}");
+    for (x, y) in a.hits.iter().zip(&b.hits) {
+        assert_eq!(x.0, y.0, "{tag}: hit id");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{tag}: hit score bits");
+    }
+    assert_eq!(a.counters, b.counters, "{tag}: counters");
+}
+
+#[cfg(feature = "failpoints")]
+mod injected {
+    use super::*;
+    use skm::util::failpoint::{clear_all, set};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// The registry is process-global; tests must not interleave.
+    fn serialize() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        let guard = LOCK
+            .get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        clear_all();
+        guard
+    }
+
+    /// Clears the registry when a test exits, pass or fail.
+    struct Cleanup;
+    impl Drop for Cleanup {
+        fn drop(&mut self) {
+            clear_all();
+        }
+    }
+
+    const SAMPLE: &str = "3\n5\n6\n1 1 2\n1 3 1\n2 2 4\n2 5 1\n3 1 1\n3 4 2\n";
+
+    /// Tentpole proof: `serve.query` panics at one global query index;
+    /// for threads ∈ {1, 2, 4, 7} exactly that slot errors and every
+    /// other slot is bit-identical to the clean serial baseline. A
+    /// clean batch afterwards is also bit-identical — the scratch pool
+    /// survives the unwinding holder (non-poisoning locks).
+    #[test]
+    fn serve_query_panic_fails_only_its_slot() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let snap = snapshot(300, 0x91, 8);
+        let router = Router::new(&snap, RouterParams::exact()).unwrap();
+        let queries: Vec<Query> = (0..13).map(|i| Query::from_row(&snap.ds, i * 7)).collect();
+        let (top_p, top_k) = (3usize, 4usize);
+        let (clean, clean_total) =
+            serve_batch(&router, &queries, top_p, top_k, &ParConfig::serial());
+
+        let victim = 5usize;
+        set("serve.query", &format!("panic@{victim}")).unwrap();
+        for threads in [1usize, 2, 4, 7] {
+            let par = ParConfig { threads, shard: 3 };
+            let (got, _) = serve_batch(&router, &queries, top_p, top_k, &par);
+            assert_eq!(got.len(), queries.len());
+            for (qi, r) in got.iter().enumerate() {
+                let tag = format!("threads={threads} query={qi}");
+                if qi == victim {
+                    match r {
+                        Err(SkmError::WorkerPanic { site, detail }) => {
+                            assert_eq!(site, "serve.query", "{tag}");
+                            assert!(detail.contains("injected panic"), "{tag}: {detail}");
+                        }
+                        other => panic!("{tag}: expected WorkerPanic, got {other:?}"),
+                    }
+                } else {
+                    assert_result_eq(
+                        r.as_ref().unwrap(),
+                        clean[qi].as_ref().unwrap(),
+                        &tag,
+                    );
+                }
+            }
+        }
+
+        // Containment leaves no residue: with the failpoint cleared the
+        // same router and pool serve a bit-identical clean batch.
+        clear_all();
+        let par = ParConfig { threads: 4, shard: 3 };
+        let (after, after_total) = serve_batch(&router, &queries, top_p, top_k, &par);
+        assert_eq!(after_total, clean_total, "post-fault merged counters");
+        for (qi, r) in after.iter().enumerate() {
+            assert_result_eq(
+                r.as_ref().unwrap(),
+                clean[qi].as_ref().unwrap(),
+                &format!("post-fault query={qi}"),
+            );
+        }
+    }
+
+    /// A panicking shard inside the clustering engine becomes a typed
+    /// `WorkerPanic` naming the shard — the scope never aborts the
+    /// process — and a clean rerun reproduces the serial bits.
+    #[test]
+    fn clustering_shard_panic_surfaces_typed_error() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let ds = dataset(300, 0x92);
+        let cfg = ClusterConfig {
+            k: 6,
+            seed: 5,
+            ..Default::default()
+        };
+        let par = ParConfig {
+            threads: 2,
+            shard: 50,
+        };
+        set("algo.assign_shard", "panic@100").unwrap();
+        let err = try_run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &par).unwrap_err();
+        match &err {
+            SkmError::WorkerPanic { site, detail } => {
+                assert_eq!(site, "algo.assign_shard");
+                assert!(detail.contains("object 100"), "{detail}");
+                assert!(detail.contains("shards panicked"), "{detail}");
+            }
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        assert_eq!(err.exit_code(), 1);
+
+        clear_all();
+        let serial = try_run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &ParConfig::serial())
+            .unwrap();
+        let rerun = try_run_clustering_with(AlgoKind::Mivi, &ds, &cfg, &par).unwrap();
+        assert_eq!(rerun.assign, serial.assign, "post-fault rerun diverged");
+        assert_eq!(rerun.objective.to_bits(), serial.objective.to_bits());
+    }
+
+    /// Loader failpoints surface as typed errors mid-parse: after the
+    /// headers, and at an arbitrary triple index.
+    #[test]
+    fn loader_failpoints_yield_typed_errors() {
+        let _g = serialize();
+        let _c = Cleanup;
+        set("loader.after_header", "error").unwrap();
+        let err = skm::corpus::read_uci_bow(SAMPLE.as_bytes(), None).unwrap_err();
+        assert!(
+            matches!(err, SkmError::FaultInjected { .. }),
+            "after_header: {err}"
+        );
+        assert!(err.to_string().contains("loader.after_header"), "{err}");
+
+        clear_all();
+        set("loader.triple", "error@3").unwrap();
+        let err = skm::corpus::read_uci_bow(SAMPLE.as_bytes(), None).unwrap_err();
+        assert!(matches!(err, SkmError::FaultInjected { .. }), "triple: {err}");
+        assert!(err.to_string().contains("loader.triple"), "{err}");
+
+        // Cleared, the same bytes parse fine.
+        clear_all();
+        assert!(skm::corpus::read_uci_bow(SAMPLE.as_bytes(), None).is_ok());
+    }
+
+    /// A panicking parameter estimation degrades `estimate_for` to the
+    /// exact (unpruned) parameters instead of crashing the build.
+    #[test]
+    fn estimation_panic_degrades_to_exact_params() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let snap = snapshot(280, 0x93, 9);
+        let cfg = ClusterConfig {
+            k: 9,
+            ..Default::default()
+        };
+        set("router.estimate", "panic").unwrap();
+        let params = RouterParams::estimate_for(&snap, &cfg);
+        assert_eq!(params, RouterParams::exact(), "degraded parameters");
+        // The degraded router still routes — and exactly.
+        let router = Router::new(&snap, params).unwrap();
+        let q = Query::from_row(&snap.ds, 17);
+        let (got, _) = router.route(&q, 3).unwrap();
+        assert_eq!(got.len(), 3);
+    }
+
+    /// An injected routing error falls back to the branch-free exact
+    /// scan: `route` still returns Ok, the answer is bit-identical to
+    /// an exact-parameter router, and the fallback counter advances.
+    #[test]
+    fn routing_error_falls_back_to_exact_scan() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let snap = snapshot(320, 0x94, 10);
+        let cfg = ClusterConfig {
+            k: 10,
+            ..Default::default()
+        };
+        let pruned = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg)).unwrap();
+        let oracle = Router::new(&snap, RouterParams::exact()).unwrap();
+        let queries: Vec<Query> = (0..8).map(|i| Query::from_row(&snap.ds, i * 31)).collect();
+
+        // Clean oracle answers first (the oracle must not route under
+        // the failpoint, which would also trip it).
+        let want: Vec<_> = queries
+            .iter()
+            .map(|q| oracle.route(q, 3).unwrap().0)
+            .collect();
+
+        set("router.route", "error").unwrap();
+        for (qi, q) in queries.iter().enumerate() {
+            let (got, _) = pruned.route(q, 3).unwrap();
+            assert_eq!(got.len(), want[qi].len(), "query={qi}");
+            for (a, b) in got.iter().zip(&want[qi]) {
+                assert_eq!(a.0, b.0, "query={qi}: id under fallback");
+                assert_eq!(
+                    a.1.to_bits(),
+                    b.1.to_bits(),
+                    "query={qi}: score bits under fallback"
+                );
+            }
+        }
+        assert_eq!(
+            pruned.fallback_count(),
+            queries.len() as u64,
+            "every faulted route must be counted"
+        );
+
+        // Cleared, the pruned path serves again and the counter stops.
+        clear_all();
+        let _ = pruned.route(&queries[0], 3).unwrap();
+        assert_eq!(pruned.fallback_count(), queries.len() as u64);
+    }
+
+    /// `delay` actions perturb scheduling, never results: a delayed
+    /// query batch is bit-identical to the clean serial baseline.
+    #[test]
+    fn delay_action_only_slows() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let snap = snapshot(260, 0x95, 7);
+        let router = Router::new(&snap, RouterParams::exact()).unwrap();
+        let queries: Vec<Query> = (0..9).map(|i| Query::from_row(&snap.ds, i * 11)).collect();
+        let (clean, clean_total) = serve_batch(&router, &queries, 2, 3, &ParConfig::serial());
+
+        set("serve.query", "delay:2@4").unwrap();
+        let par = ParConfig { threads: 4, shard: 2 };
+        let (got, got_total) = serve_batch(&router, &queries, 2, 3, &par);
+        assert_eq!(got_total, clean_total);
+        for (qi, r) in got.iter().enumerate() {
+            assert_result_eq(
+                r.as_ref().unwrap(),
+                clean[qi].as_ref().unwrap(),
+                &format!("delayed query={qi}"),
+            );
+        }
+    }
+
+    /// Index-maintenance failpoints are reachable and contained by the
+    /// typed clustering boundary (`contain("algo.run")`): the error is
+    /// a `WorkerPanic` whose detail names the maintenance site.
+    #[test]
+    fn maintenance_panic_is_contained_by_run_boundary() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let ds = dataset(240, 0x96);
+        let cfg = ClusterConfig {
+            k: 5,
+            seed: 2,
+            ..Default::default()
+        };
+        set("maintain.inv", "panic").unwrap();
+        let err =
+            try_run_clustering_with(AlgoKind::Icp, &ds, &cfg, &ParConfig::serial()).unwrap_err();
+        match &err {
+            SkmError::WorkerPanic { detail, .. } => {
+                assert!(detail.contains("maintain.inv"), "{detail}");
+            }
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        clear_all();
+        assert!(try_run_clustering_with(AlgoKind::Icp, &ds, &cfg, &ParConfig::serial()).is_ok());
+    }
+}
+
+/// With the feature disabled the macros expand to nothing: this smoke
+/// test (the only one compiled) proves the harness adds no behavior,
+/// and the full determinism suites (serve, parallel, golden, simd,
+/// minibatch) prove bit-identity of the success path.
+#[cfg(not(feature = "failpoints"))]
+#[test]
+fn failpoints_disabled_is_a_no_op() {
+    let snap = snapshot(200, 0x97, 6);
+    let router = Router::new(&snap, RouterParams::exact()).unwrap();
+    let queries: Vec<Query> = (0..5).map(|i| Query::from_row(&snap.ds, i * 13)).collect();
+    let (results, _) = serve_batch(&router, &queries, 2, 3, &ParConfig::serial());
+    assert!(results.iter().all(|r| r.is_ok()));
+    let _ = try_run_clustering_with(
+        AlgoKind::Mivi,
+        &snap.ds,
+        &ClusterConfig {
+            k: 6,
+            ..Default::default()
+        },
+        &ParConfig::serial(),
+    )
+    .unwrap();
+    let _ = SkmError::invalid_query("smoke".to_string());
+    let _ = assert_result_eq; // the shared helpers stay exercised
+}

@@ -112,3 +112,55 @@ fn malformed_lines_error_loudly() {
     // Missing headers entirely.
     assert!(read_uci_bow("# only comments\n".as_bytes(), None).is_err());
 }
+
+/// Hostile headers (ISSUE §Robustness satellite): forged N/D/NNZ
+/// declarations must be rejected up front with a typed error — before
+/// any allocation proportional to the declared sizes — never a panic
+/// or an OOM.
+#[test]
+fn hostile_headers_are_rejected_before_allocation() {
+    use skm::corpus::loader::{MAX_DECLARED_DOCS, MAX_DECLARED_NNZ};
+    use skm::error::SkmError;
+
+    let cases: &[(&str, String)] = &[
+        // N = usize::MAX parses but blows the document cap.
+        ("N at usize::MAX", format!("{}\n2\n1\n", usize::MAX)),
+        // One past the cap.
+        ("N just over cap", format!("{}\n2\n1\n", MAX_DECLARED_DOCS + 1)),
+        // 2^64 does not even parse as usize.
+        ("N overflows u64", "18446744073709551616\n2\n1\n".to_string()),
+        // D wider than u32 term ids.
+        ("D over term cap", format!("1\n{}\n1\n", (u32::MAX as u64) + 1)),
+        // NNZ beyond the absolute triple cap.
+        ("NNZ over cap", format!("1\n2\n{}\n", MAX_DECLARED_NNZ + 1)),
+        // NNZ structurally impossible: more triples than the N·D grid.
+        ("NNZ over N·D", "3\n4\n13\n".to_string()),
+        // Negative headers are not usize.
+        ("negative N", "-1\n2\n1\n".to_string()),
+    ];
+    for (tag, text) in cases {
+        let err = read_uci_bow(text.as_bytes(), None).unwrap_err();
+        assert!(
+            matches!(err, SkmError::MalformedCorpus { .. }),
+            "{tag}: {err}"
+        );
+        assert_eq!(err.exit_code(), 1, "{tag}");
+        // max_docs truncation must not bypass the caps.
+        assert!(read_uci_bow(text.as_bytes(), Some(1)).is_err(), "{tag}");
+    }
+
+    // Headers-only file: N declares 10M docs (past PREALLOC_DOC_CAP,
+    // under MAX_DECLARED_DOCS) and NNZ triples that never arrive — the
+    // up-front reservation stays at the prealloc cap and the missing
+    // triples are a typed mismatch, reported before the final
+    // resize_with could materialize the forged N.
+    let truncated = "10000000\n50\n200000000\n";
+    let err = read_uci_bow(truncated.as_bytes(), None).unwrap_err();
+    assert!(err.to_string().contains("NNZ"), "{err}");
+
+    // A maximal-but-legal tiny file still parses: caps reject forged
+    // sizes, not honest ones.
+    let honest = "2\n2\n4\n1 1 1\n1 2 1\n2 1 1\n2 2 1\n";
+    let c = read_uci_bow(honest.as_bytes(), None).unwrap();
+    assert_eq!(c.n_docs(), 2);
+}

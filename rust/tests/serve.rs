@@ -18,6 +18,10 @@
 //!   full-corpus scan restricted to the routed clusters' members, and a
 //!   corpus document used as its own query can never be out-scored when
 //!   its cluster is scanned.
+//! * **Input hardening (§Robustness)** — hostile query constructions
+//!   (NaN/∞/negative weights, wrong vocabulary size, strict-mode OOV)
+//!   surface typed `SkmError`s and are contained per slot in
+//!   `serve_batch`, never a panic or a poisoned pool.
 
 use skm::algo::{run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
 use skm::corpus::{generate, tiny, CorpusSpec};
@@ -117,18 +121,17 @@ fn query_mix(snap: &ClusteredCorpus, rng: &mut Pcg32, n_docs: usize, n_rand: usi
             .into_iter()
             .map(|t| (t as u32, 0.05 + rng.next_f64()))
             .collect();
-        queries.push(Query::from_pairs(d, &pairs));
+        queries.push(Query::from_pairs(d, &pairs).unwrap());
     }
     // Zero vector; OOV-only (drops to zero); mixed OOV + in-vocab;
     // single high-df term; single low-df term.
-    queries.push(Query::from_pairs(d, &[]));
-    queries.push(Query::from_pairs(d, &[(d as u32, 1.0), (d as u32 + 7, 2.0)]));
-    queries.push(Query::from_pairs(
-        d,
-        &[(d as u32 + 1, 3.0), (d as u32 - 1, 1.0), (0, 0.5)],
-    ));
-    queries.push(Query::from_pairs(d, &[(d as u32 - 1, 1.0)]));
-    queries.push(Query::from_pairs(d, &[(0, 1.0)]));
+    queries.push(Query::from_pairs(d, &[]).unwrap());
+    queries.push(Query::from_pairs(d, &[(d as u32, 1.0), (d as u32 + 7, 2.0)]).unwrap());
+    queries.push(
+        Query::from_pairs(d, &[(d as u32 + 1, 3.0), (d as u32 - 1, 1.0), (0, 0.5)]).unwrap(),
+    );
+    queries.push(Query::from_pairs(d, &[(d as u32 - 1, 1.0)]).unwrap());
+    queries.push(Query::from_pairs(d, &[(0, 1.0)]).unwrap());
     queries
 }
 
@@ -153,12 +156,12 @@ fn routing_matches_brute_force_across_seeds_k_p() {
             },
         ];
         for (pi, &prm) in params.iter().enumerate() {
-            let router = Router::new(&snap, prm);
+            let router = Router::new(&snap, prm).unwrap();
             let mut rng = Pcg32::new(corpus_seed ^ 0xfeed ^ pi as u64);
             let queries = query_mix(&snap, &mut rng, 8, 6);
             for p in [1usize, 2, 5, k] {
                 for (qi, q) in queries.iter().enumerate() {
-                    let (got, counters) = router.route(q, p);
+                    let (got, counters) = router.route(q, p).unwrap();
                     let want = brute_force_route(&snap, q, p);
                     let tag = format!(
                         "seed={corpus_seed:x} k={k} params#{pi} (t_th={}, v_th={}) p={p} query={qi}",
@@ -185,13 +188,13 @@ fn estimated_router_prunes_candidates() {
         k: 16,
         ..Default::default()
     };
-    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg)).unwrap();
     let mut rng = Pcg32::new(0xd00d);
     let queries = query_mix(&snap, &mut rng, 24, 0);
     let mut candidates = 0u64;
     let mut total = 0u64;
     for q in &queries {
-        let (_, c) = router.route(q, 1);
+        let (_, c) = router.route(q, 1).unwrap();
         candidates += c.candidates;
         total += snap.k as u64;
     }
@@ -210,7 +213,7 @@ fn serve_batch_deterministic_across_thread_counts() {
         k: 11,
         ..Default::default()
     };
-    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg));
+    let router = Router::new(&snap, RouterParams::estimate_for(&snap, &cfg)).unwrap();
     let mut rng = Pcg32::new(0xbeef);
     let queries = query_mix(&snap, &mut rng, 24, 12);
     let (top_p, top_k) = (3usize, 5usize);
@@ -222,7 +225,9 @@ fn serve_batch_deterministic_across_thread_counts() {
             let (got, got_total) = serve_batch(&router, &queries, top_p, top_k, &par);
             let tag = format!("threads={threads} shard={shard}");
             assert_eq!(got.len(), serial.len(), "{tag}");
-            for (qi, (a, b)) in got.iter().zip(&serial).enumerate() {
+            for (qi, (ra, rb)) in got.iter().zip(&serial).enumerate() {
+                let a = ra.as_ref().unwrap();
+                let b = rb.as_ref().unwrap();
                 assert_routes_eq(&a.centroids, &b.centroids, &format!("{tag} query={qi}"));
                 assert_routes_eq(&a.hits, &b.hits, &format!("{tag} query={qi} hits"));
                 assert_eq!(a.counters, b.counters, "{tag} query={qi} counters");
@@ -245,12 +250,12 @@ fn retrieval_matches_restricted_full_scan() {
         RouterParams::estimate_for(&snap, &cfg),
         RouterParams::exact(),
     ] {
-        let router = Router::new(&snap, prm);
+        let router = Router::new(&snap, prm).unwrap();
         let mut rng = Pcg32::new(0xcafe);
         let queries = query_mix(&snap, &mut rng, 10, 5);
         for &(top_p, top_k) in &[(1usize, 1usize), (2, 5), (3, 17), (9, 4), (2, 0)] {
             for (qi, q) in queries.iter().enumerate() {
-                let r = router.retrieve(q, top_p, top_k);
+                let r = router.retrieve(q, top_p, top_k).unwrap();
                 let want = brute_force_retrieve(&snap, q, &r.centroids, top_k);
                 let tag = format!(
                     "t_th={} p={top_p} k={top_k} query={qi}",
@@ -283,14 +288,14 @@ fn retrieval_matches_restricted_full_scan() {
 #[test]
 fn self_query_is_never_outscored() {
     let snap = snapshot(280, 0xF6, 8, 2);
-    let router = Router::new(&snap, RouterParams::exact());
+    let router = Router::new(&snap, RouterParams::exact()).unwrap();
     for i in [0usize, 13, 97, 200] {
         let q = Query::from_row(&snap.ds, i);
         if q.is_zero() {
             continue;
         }
         let self_score: f64 = q.vals().iter().map(|v| v * v).sum();
-        let r = router.retrieve(&q, snap.k, 3);
+        let r = router.retrieve(&q, snap.k, 3).unwrap();
         assert!(
             r.hits[0].1 >= self_score - 1e-12,
             "doc {i}: best hit {} below self-similarity {self_score}",
@@ -324,12 +329,79 @@ fn snapshot_sources_are_interchangeable() {
     let snap_b = ClusteredCorpus::from_assignment(ds, out.assign.clone(), k);
     assert_eq!(snap_a.assign, snap_b.assign);
     assert_eq!(snap_a.objective.to_bits(), snap_b.objective.to_bits());
-    let ra = Router::new(&snap_a, RouterParams::exact());
-    let rb = Router::new(&snap_b, RouterParams::exact());
+    let ra = Router::new(&snap_a, RouterParams::exact()).unwrap();
+    let rb = Router::new(&snap_b, RouterParams::exact()).unwrap();
     let q = Query::from_row(&snap_a.ds, 42);
-    let (a, _) = ra.route(&q, 3);
-    let (b, _) = rb.route(&q, 3);
+    let (a, _) = ra.route(&q, 3).unwrap();
+    let (b, _) = rb.route(&q, 3).unwrap();
     assert_routes_eq(&a, &b, "minibatch vs direct snapshot");
     let want = brute_force_route(&snap_a, &q, 3);
     assert_routes_eq(&a, &want, "minibatch snapshot vs brute force");
+}
+
+/// Hostile query constructions (ISSUE §Robustness satellite): every
+/// non-finite or negative weight is a typed `InvalidQuery`, never a
+/// panic; strict mode additionally rejects OOV ids and zero weights;
+/// a wrong-vocabulary query fails only its own `serve_batch` slot.
+#[test]
+fn hostile_queries_yield_typed_errors_not_panics() {
+    use skm::error::SkmError;
+    let snap = snapshot(260, 0x27, 7, 11);
+    let d = snap.ds.d();
+    let bad_weights = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        -1.0,
+        -1e-300,
+        f64::MIN,
+    ];
+    for &w in &bad_weights {
+        for t in [0u32, (d / 2) as u32, d as u32 + 99] {
+            let err = Query::from_pairs(d, &[(t, w)]).unwrap_err();
+            assert!(
+                matches!(err, SkmError::InvalidQuery { .. }),
+                "weight {w} at term {t}: {err}"
+            );
+            assert_eq!(err.exit_code(), 1);
+        }
+        // Hidden among valid pairs, and via the embed_bow-adjacent
+        // strict path too.
+        assert!(Query::from_pairs(d, &[(0, 1.0), (1, w), (2, 0.5)]).is_err());
+        assert!(Query::from_pairs_strict(d, &[(0, 1.0), (1, w)]).is_err());
+    }
+    // Strict mode: OOV ids and zero weights are errors, not drops.
+    assert!(Query::from_pairs_strict(d, &[(d as u32, 1.0)]).is_err());
+    assert!(Query::from_pairs_strict(d, &[(0, 0.0)]).is_err());
+    assert!(Query::from_pairs_strict(d, &[(0, 1.0)]).is_ok());
+
+    // A wrong-vocabulary query is contained to its own slot across
+    // serial and sharded execution; neighbours stay bit-identical.
+    let router = Router::new(&snap, RouterParams::exact()).unwrap();
+    let mut rng = Pcg32::new(0x5afe);
+    let mut queries = query_mix(&snap, &mut rng, 4, 4);
+    let bad_slot = 2;
+    queries[bad_slot] = Query::from_pairs(d + 13, &[(0, 1.0)]).unwrap();
+    let (serial, _) = serve_batch(&router, &queries, 2, 3, &ParConfig::serial());
+    for threads in [1usize, 4] {
+        let par = ParConfig { threads, shard: 3 };
+        let (got, _) = serve_batch(&router, &queries, 2, 3, &par);
+        for (qi, r) in got.iter().enumerate() {
+            if qi == bad_slot {
+                let err = r.as_ref().unwrap_err();
+                assert!(
+                    matches!(err, SkmError::InvalidQuery { .. }),
+                    "threads={threads} slot {qi}: {err}"
+                );
+            } else {
+                let a = r.as_ref().unwrap();
+                let b = serial[qi].as_ref().unwrap();
+                assert_routes_eq(
+                    &a.centroids,
+                    &b.centroids,
+                    &format!("threads={threads} query={qi}"),
+                );
+            }
+        }
+    }
 }
