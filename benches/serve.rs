@@ -42,10 +42,10 @@ fn main() {
     // --- cluster + freeze -------------------------------------------------
     let t0 = Instant::now();
     let out = run_clustering_with(AlgoKind::EsIcp, &ds, &cfg, &par_env);
+    let cluster_secs = t0.elapsed().as_secs_f64();
     println!(
-        "clustered: {} iterations in {:.2}s (J={:.4})",
+        "clustered: {} iterations in {cluster_secs:.2}s (J={:.4})",
         out.iterations(),
-        t0.elapsed().as_secs_f64(),
         out.objective
     );
     let snap = ClusteredCorpus::from_output(ds, &out, k);
@@ -155,15 +155,18 @@ fn main() {
     );
 
     // --- routing throughput: pruned vs brute force ------------------------
-    let reps = 3usize;
-    let best_of = |mut f: Box<dyn FnMut() -> f64>| -> f64 {
+    // (A generic fn, not a `Box<dyn FnMut>`-taking closure: the boxed
+    // trait object would demand 'static captures, and every timed body
+    // borrows the local queries/router.)
+    fn best_of(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
         let mut best = f64::INFINITY;
         for _ in 0..reps {
             best = best.min(f());
         }
         best
-    };
-    let routed_secs = best_of(Box::new(|| {
+    }
+    let reps = 3usize;
+    let routed_secs = best_of(reps, || {
         let t = Instant::now();
         let mut acc = 0u32;
         for q in &queries {
@@ -172,8 +175,8 @@ fn main() {
         }
         std::hint::black_box(acc);
         t.elapsed().as_secs_f64()
-    }));
-    let brute_secs = best_of(Box::new(|| {
+    });
+    let brute_secs = best_of(reps, || {
         let t = Instant::now();
         let mut acc = 0u32;
         for q in &queries {
@@ -182,7 +185,7 @@ fn main() {
         }
         std::hint::black_box(acc);
         t.elapsed().as_secs_f64()
-    }));
+    });
     let route_qps = queries.len() as f64 / routed_secs;
     let brute_qps = queries.len() as f64 / brute_secs;
     println!(
@@ -192,7 +195,7 @@ fn main() {
 
     // --- serving latency (route + retrieve), single thread ----------------
     let mut lat = vec![0.0f64; queries.len()];
-    let serial_secs = best_of(Box::new(|| {
+    let serial_secs = best_of(reps, || {
         let t = Instant::now();
         for (q, slot) in queries.iter().zip(lat.iter_mut()) {
             let tq = Instant::now();
@@ -200,7 +203,7 @@ fn main() {
             *slot = tq.elapsed().as_secs_f64();
         }
         t.elapsed().as_secs_f64()
-    }));
+    });
     let stats = latency_stats(&lat);
     let serial_qps = queries.len() as f64 / serial_secs;
     println!(
@@ -213,7 +216,7 @@ fn main() {
     );
 
     // --- batch-sharded serving --------------------------------------------
-    let batch_secs = best_of(Box::new(|| {
+    let batch_secs = best_of(reps, || {
         let t = Instant::now();
         let (r, _) = serve_batch(
             &router,
@@ -224,7 +227,7 @@ fn main() {
         );
         std::hint::black_box(r.len());
         t.elapsed().as_secs_f64()
-    }));
+    });
     let batch_qps = queries.len() as f64 / batch_secs;
     let speedup = batch_qps / serial_qps.max(1e-12);
     println!(
@@ -235,6 +238,54 @@ fn main() {
             "WARNING: batch-sharded QPS fell below single-thread on this runner ({speedup:.2}x)"
         );
     }
+
+    // --- persistence: snapshot save / warm-restart cost -------------------
+    // How expensive is publishing the serving state, and how fast is a
+    // warm restart (load + router build + first answered query) compared
+    // with re-clustering from scratch?
+    let snap_path =
+        std::env::temp_dir().join(format!("skm_bench_serve_{}.skm", std::process::id()));
+    let save_secs = best_of(reps, || {
+        let t = Instant::now();
+        skm::persist::save_snapshot(&snap_path, &snap, &params).expect("save snapshot");
+        t.elapsed().as_secs_f64()
+    });
+    let snapshot_bytes = std::fs::metadata(&snap_path).expect("snapshot stat").len();
+    let warm_secs = best_of(reps, || {
+        let t = Instant::now();
+        let (s, p2) = skm::persist::load_snapshot(&snap_path).expect("load snapshot");
+        let r = Router::new(&s, p2).expect("router from snapshot");
+        std::hint::black_box(
+            r.retrieve(&queries[0], top_p, top_k)
+                .expect("first query")
+                .hits
+                .len(),
+        );
+        t.elapsed().as_secs_f64()
+    });
+    // Correctness gate: the loaded snapshot answers bit-identically.
+    {
+        let (s, p2) = skm::persist::load_snapshot(&snap_path).expect("load snapshot");
+        let r = Router::new(&s, p2).expect("router from snapshot");
+        for q in queries.iter().take(64) {
+            let a = router.retrieve(q, top_p, top_k).expect("hot");
+            let b = r.retrieve(q, top_p, top_k).expect("warm");
+            assert_eq!(a.hits.len(), b.hits.len(), "warm-restart soundness");
+            for (x, y) in a.hits.iter().zip(&b.hits) {
+                assert_eq!(x.0, y.0, "warm-restart hit id");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "warm-restart score bits");
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&snap_path);
+    println!(
+        "persist: snapshot {:.2} MB, save {:.1} ms, warm restart (load+router+first query) {:.1} ms vs {:.2}s re-cluster ({:.0}x faster)",
+        snapshot_bytes as f64 / 1e6,
+        save_secs * 1e3,
+        warm_secs * 1e3,
+        cluster_secs,
+        cluster_secs / warm_secs.max(1e-9)
+    );
 
     // --- machine-readable baseline ----------------------------------------
     let json = Json::obj(vec![
@@ -303,6 +354,19 @@ fn main() {
                 ("qps", Json::Num(batch_qps)),
                 ("speedup_vs_serial", Json::Num(speedup)),
                 ("bitwise_equal", Json::Bool(bitwise_equal)),
+            ]),
+        ),
+        (
+            "persist",
+            Json::obj(vec![
+                ("snapshot_bytes", Json::UInt(snapshot_bytes)),
+                ("save_ms", Json::Num(save_secs * 1e3)),
+                ("warm_restart_ms", Json::Num(warm_secs * 1e3)),
+                ("cluster_secs", Json::Num(cluster_secs)),
+                (
+                    "warm_vs_recluster_speedup",
+                    Json::Num(cluster_secs / warm_secs.max(1e-9)),
+                ),
             ]),
         ),
     ]);

@@ -80,6 +80,12 @@ pub struct EsAssigner {
     /// Partial object inverted index for EstParams (built lazily).
     xp: Option<ObjInvIndex>,
     estimations_done: usize,
+    /// One-shot guard set by [`Assigner::import_params_state`]: the
+    /// initial rebuild of a resumed run re-creates an index rebuild the
+    /// uninterrupted run already performed, so the estimation that may
+    /// be due at that `st.iter` must not fire a second time (it belongs
+    /// to the *next* rebuild, with the next round's state).
+    skip_estimation_once: bool,
     scratch: ScratchPool<EsScratch>,
     /// Per-object gather/verify probes (`SKM_PHASE_TIMING`, default on).
     phase_timing: bool,
@@ -96,6 +102,7 @@ impl EsAssigner {
             xs_scale: 1.0,
             xp: None,
             estimations_done: 0,
+            skip_estimation_once: false,
             scratch: ScratchPool::new(),
             phase_timing: phase_timing_enabled(),
         }
@@ -280,7 +287,8 @@ impl Assigner for EsAssigner {
         // divides the tail mass 1/K; ln(K/e) must be positive). For very
         // small K the filter cannot pay off anyway — keep the degenerate
         // (D, 1.0) parameters, i.e. exact MIVI behavior.
-        if st.k >= 4 && (st.iter == 2 || st.iter == 3) && self.estimations_done < 2 {
+        let skip_once = std::mem::take(&mut self.skip_estimation_once);
+        if !skip_once && st.k >= 4 && (st.iter == 2 || st.iter == 3) && self.estimations_done < 2 {
             let mut ec = self.est_config(ds, cfg);
             if self.estimations_done == 0 {
                 // The first estimation exists only to cheapen iteration
@@ -378,6 +386,28 @@ impl Assigner for EsAssigner {
 
     fn params(&self) -> (Option<usize>, Option<f64>) {
         (Some(self.t_th), Some(self.v_th))
+    }
+
+    fn export_params_state(&self) -> crate::algo::ParamsState {
+        crate::algo::ParamsState {
+            t_th: Some(self.t_th),
+            v_th: Some(self.v_th),
+            estimations_done: self.estimations_done,
+        }
+    }
+
+    fn import_params_state(&mut self, ds: &Dataset, ps: &crate::algo::ParamsState) {
+        if let Some(t) = ps.t_th {
+            self.t_th = t;
+        }
+        if let Some(v) = ps.v_th {
+            self.v_th = v;
+        }
+        self.estimations_done = ps.estimations_done;
+        // Re-derive the v_th-scaled object copy the checkpointed run was
+        // using (Appendix A scaling); no-op while v_th is still 1.0.
+        self.rescale_objects(ds);
+        self.skip_estimation_once = true;
     }
 }
 

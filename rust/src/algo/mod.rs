@@ -35,6 +35,7 @@ pub use par::ParConfig;
 
 use crate::index::{membership_changes, update_means_with_rho_par, MeanSet};
 use crate::metrics::counters::OpCounters;
+use crate::persist::checkpoint::{CheckpointSpec, CheckpointState, RunFingerprint};
 use crate::metrics::perf::PhaseTimes;
 use crate::sparse::{CsrMatrix, Dataset};
 use crate::util::rng::Pcg32;
@@ -143,6 +144,19 @@ impl Default for ClusterConfig {
             n_vth_candidates: 25,
         }
     }
+}
+
+/// Estimator / structural-parameter state persisted in a checkpoint
+/// ([`crate::persist::checkpoint`]) so a resumed run re-enters the
+/// bit-exact trajectory of the uninterrupted one. Stateless assigners
+/// (MIVI, DIVI, Ding, TA, CS — their thresholds are pure functions of
+/// config and iteration) export the default; the ES family carries its
+/// estimated `t_th` / `v_th` and how many EstParams passes have run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ParamsState {
+    pub t_th: Option<usize>,
+    pub v_th: Option<f64>,
+    pub estimations_done: usize,
 }
 
 /// Mutable state shared between the driver and an assigner.
@@ -335,6 +349,22 @@ pub trait Assigner: Sync {
     fn params(&self) -> (Option<usize>, Option<f64>) {
         (None, None)
     }
+
+    /// Export the estimator state a checkpoint must carry (see
+    /// [`ParamsState`]). The default — no state — is correct for every
+    /// assigner whose thresholds are pure functions of config and
+    /// iteration number.
+    fn export_params_state(&self) -> ParamsState {
+        ParamsState::default()
+    }
+
+    /// Restore state from [`Assigner::export_params_state`] on a
+    /// resumed run, *before* the initial rebuild. Implementations must
+    /// leave the assigner on the bit-exact trajectory of the
+    /// uninterrupted run (`tests/persist.rs` enforces this).
+    fn import_params_state(&mut self, ds: &Dataset, ps: &ParamsState) {
+        let _ = (ds, ps);
+    }
 }
 
 /// Construct the assigner for an algorithm kind.
@@ -437,6 +467,33 @@ pub fn run_clustering_with(
     cfg: &ClusterConfig,
     par: &ParConfig,
 ) -> ClusterOutput {
+    run_clustering_resumable(kind, ds, cfg, par, None, None)
+        .expect("the driver is infallible without checkpointing")
+}
+
+/// [`run_clustering_with`] plus crash-safe persistence: an optional
+/// periodic checkpoint ([`CheckpointSpec`]) and an optional `resume`
+/// path produced by an earlier checkpointed run of the *same*
+/// configuration (enforced via [`RunFingerprint`], including a content
+/// digest of the corpus).
+///
+/// Determinism contract: a run resumed from the round-`c` checkpoint
+/// computes rounds `c+1..` **bit-identically** to the uninterrupted
+/// run — same assignment, objective bits, and structural parameters.
+/// `IterLog`s cover only the resumed segment; `max_mem_bytes` is the
+/// max over both segments. Checkpoints are written after the rebuild of
+/// round `r` whenever `r % every == 0`, and once more at run completion
+/// if the final round is not already on disk; each write atomically
+/// replaces the previous checkpoint (never leaving a torn file — see
+/// [`crate::persist`]).
+pub fn run_clustering_resumable(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&std::path::Path>,
+) -> crate::error::SkmResult<ClusterOutput> {
     let n = ds.n();
     let mut st = IterState {
         k: cfg.k,
@@ -452,16 +509,47 @@ pub fn run_clustering_with(
     let mut max_mem = 0usize;
     let mut objective = f64::NAN;
     let mut converged = false;
+    let mut start_round = 1usize;
 
-    // Initial structures from the seed means; carried into iteration
-    // 1's rebuild phase (see the attribution note at the log push).
+    // Run identity, needed by both the save and the resume path.
+    let fp = (ckpt.is_some() || resume.is_some())
+        .then(|| RunFingerprint::compute(kind, ds, cfg, None));
+
+    if let Some(path) = resume {
+        let ck = crate::persist::checkpoint::load_cluster_checkpoint(
+            path,
+            fp.as_ref().expect("fingerprint exists when resuming"),
+            n,
+            ds.d(),
+            cfg.k,
+        )?;
+        st.assign = ck.assign;
+        st.rho = ck.rho;
+        st.xstate = ck.xstate;
+        st.means = ck.means;
+        st.iter = ck.round + 1;
+        objective = ck.objective;
+        max_mem = ck.max_mem;
+        assigner.import_params_state(ds, &ck.params);
+        start_round = ck.round + 1;
+    }
+
+    // Initial structures — from the seed means on a fresh run, from the
+    // restored post-update means on a resumed one; carried into the
+    // first round's rebuild phase (see the attribution note at the log
+    // push).
     let mut rb_sw = Stopwatch::new();
     rb_sw.start();
     assigner.rebuild(ds, &st, cfg);
     rb_sw.stop();
     let mut carry_rebuild_secs = rb_sw.secs();
 
-    for r in 1..=cfg.max_iters {
+    let every = ckpt.map_or(0, |s| s.every);
+    // Highest round whose update+rebuild completed / is on disk.
+    let mut completed = start_round - 1;
+    let mut last_saved = start_round - 1;
+
+    for r in start_round..=cfg.max_iters {
         st.iter = r;
         let prev_assign = st.assign.clone();
 
@@ -552,10 +640,27 @@ pub fn run_clustering_with(
         });
         carry_rebuild_secs = 0.0;
         max_mem = max_mem.max(assigner.mem_bytes());
+        completed = r;
+
+        if let Some(spec) = ckpt {
+            if every > 0 && r % every == 0 {
+                let fp = fp.as_ref().unwrap();
+                save_cluster_ckpt(spec, fp, r, objective, max_mem, &st, &*assigner)?;
+                last_saved = r;
+            }
+        }
+    }
+
+    // Final checkpoint so `--resume` can extend a finished run.
+    if let Some(spec) = ckpt {
+        if completed > last_saved {
+            let fp = fp.as_ref().unwrap();
+            save_cluster_ckpt(spec, fp, completed, objective, max_mem, &st, &*assigner)?;
+        }
     }
 
     let (t_th, v_th) = assigner.params();
-    ClusterOutput {
+    Ok(ClusterOutput {
         algo: kind,
         assign: st.assign,
         objective,
@@ -564,7 +669,51 @@ pub fn run_clustering_with(
         max_mem_bytes: max_mem,
         t_th,
         v_th,
-    }
+    })
+}
+
+fn save_cluster_ckpt(
+    spec: &CheckpointSpec,
+    fp: &RunFingerprint,
+    round: usize,
+    objective: f64,
+    max_mem: usize,
+    st: &IterState,
+    assigner: &dyn Assigner,
+) -> crate::error::SkmResult<()> {
+    crate::persist::checkpoint::save_cluster_checkpoint(
+        &spec.path,
+        fp,
+        &CheckpointState {
+            round,
+            objective,
+            max_mem,
+            params: assigner.export_params_state(),
+            assign: &st.assign,
+            rho: &st.rho,
+            xstate: &st.xstate,
+            means: &st.means,
+        },
+    )?;
+    Ok(())
+}
+
+/// Fallible front door to [`run_clustering_resumable`]: config
+/// validation up front, worker panics contained as typed errors, and
+/// checkpoint/resume I/O surfaced as [`crate::error::SkmError`].
+pub fn try_run_clustering_resumable(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    par: &ParConfig,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&std::path::Path>,
+) -> crate::error::SkmResult<ClusterOutput> {
+    validate_cluster_config(cfg, ds)?;
+    crate::error::contain("algo.run", || {
+        run_clustering_resumable(kind, ds, cfg, par, ckpt, resume)
+    })
+    .and_then(|r| r)
 }
 
 #[cfg(test)]

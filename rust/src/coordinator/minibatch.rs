@@ -53,6 +53,7 @@ use crate::algo::{
 };
 use crate::index::update_means_minibatch;
 use crate::metrics::counters::OpCounters;
+use crate::persist::checkpoint::{CheckpointSpec, CheckpointState, MbStateRef, RunFingerprint};
 use crate::sparse::Dataset;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -175,6 +176,26 @@ pub fn try_run_minibatch(
     crate::error::contain("minibatch.run", || run_minibatch(kind, ds, cfg, mb, par))
 }
 
+/// Fallible front door to [`run_minibatch_resumable`]: config
+/// validation up front, worker panics contained as typed errors, and
+/// checkpoint/resume I/O surfaced as [`crate::error::SkmError`].
+pub fn try_run_minibatch_resumable(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    mb: &MiniBatchConfig,
+    par: &ParConfig,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&std::path::Path>,
+) -> crate::error::SkmResult<MiniBatchOutput> {
+    crate::algo::validate_cluster_config(cfg, ds)?;
+    mb.validate()?;
+    crate::error::contain("minibatch.run", || {
+        run_minibatch_resumable(kind, ds, cfg, mb, par, ckpt, resume)
+    })
+    .and_then(|r| r)
+}
+
 /// Per-round record (the mini-batch analog of [`crate::algo::IterLog`]).
 #[derive(Debug, Clone)]
 pub struct RoundLog {
@@ -273,6 +294,27 @@ pub fn run_minibatch(
     mb: &MiniBatchConfig,
     par: &ParConfig,
 ) -> MiniBatchOutput {
+    run_minibatch_resumable(kind, ds, cfg, mb, par, None, None)
+        .expect("the driver is infallible without checkpointing")
+}
+
+/// [`run_minibatch`] plus crash-safe persistence, mirroring
+/// [`crate::algo::run_clustering_resumable`]: an optional periodic
+/// [`CheckpointSpec`] and an optional `resume` path. A mini-batch
+/// checkpoint additionally carries the decayed per-centroid counts, the
+/// ρ/ICP staleness clocks, the batch cursor, and the exact RNG stream
+/// position, so a resumed run draws the *same* batch sequence and
+/// computes rounds `c+1..` bit-identically to the uninterrupted run
+/// (`tests/persist.rs`). `RoundLog`s cover only the resumed segment.
+pub fn run_minibatch_resumable(
+    kind: AlgoKind,
+    ds: &Dataset,
+    cfg: &ClusterConfig,
+    mb: &MiniBatchConfig,
+    par: &ParConfig,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&std::path::Path>,
+) -> crate::error::SkmResult<MiniBatchOutput> {
     let n = ds.n();
     let k = cfg.k;
     let b = mb.batch.clamp(1, n);
@@ -296,14 +338,6 @@ pub fn run_minibatch(
         iter: 1,
     };
     let mut assigner = make_assigner(kind, ds, cfg);
-
-    // Initial structures from the seed means; carried into round 1's
-    // rebuild attribution exactly like the full-batch driver.
-    let mut rb_sw = Stopwatch::new();
-    rb_sw.start();
-    assigner.rebuild(ds, &st, cfg);
-    rb_sw.stop();
-    let mut carry_rebuild_secs = rb_sw.secs();
 
     // Driver state: decayed per-centroid batch mass, incrementally
     // maintained full-assignment sizes, and the ρ/ICP staleness clocks.
@@ -349,8 +383,58 @@ pub fn run_minibatch(
     let mut converged = false;
     let mut max_mem = 0usize;
     let mut objective = f64::NAN;
+    let mut start_round = 1usize;
 
-    for r in 1..=mb.max_rounds {
+    // Run identity, needed by both the save and the resume path.
+    let fp = (ckpt.is_some() || resume.is_some())
+        .then(|| RunFingerprint::compute(kind, ds, cfg, Some(mb)));
+
+    if let Some(path) = resume {
+        let ck = crate::persist::checkpoint::load_minibatch_checkpoint(
+            path,
+            fp.as_ref().expect("fingerprint exists when resuming"),
+            n,
+            ds.d(),
+            k,
+        )?;
+        st.assign = ck.base.assign;
+        st.rho = ck.base.rho;
+        st.xstate = ck.base.xstate;
+        st.means = ck.base.means;
+        objective = ck.base.objective;
+        max_mem = ck.base.max_mem;
+        assigner.import_params_state(ds, &ck.base.params);
+        counts = ck.mb.counts;
+        sizes = ck.mb.sizes;
+        obs_round = ck.mb.obs_round;
+        never_seen = obs_round.iter().filter(|&&o| o == 0).count();
+        last_moved = ck.mb.last_moved;
+        mr_latest = ck.mb.mr_latest;
+        mr_prev = ck.mb.mr_prev;
+        rng = Pcg32::from_raw_state(ck.mb.rng_state, ck.mb.rng_inc);
+        cursor = ck.mb.cursor;
+        processed = ck.mb.processed;
+        quiet = ck.mb.quiet;
+        st.iter = 1 + processed / n;
+        start_round = ck.base.round + 1;
+    }
+
+    // Initial structures — from the seed means on a fresh run, from the
+    // restored post-update means on a resumed one; carried into the
+    // first round's rebuild attribution exactly like the full-batch
+    // driver.
+    let mut rb_sw = Stopwatch::new();
+    rb_sw.start();
+    assigner.rebuild(ds, &st, cfg);
+    rb_sw.stop();
+    let mut carry_rebuild_secs = rb_sw.secs();
+
+    let every = ckpt.map_or(0, |s| s.every);
+    // Highest round whose update+rebuild completed / is on disk.
+    let mut completed = start_round - 1;
+    let mut last_saved = start_round - 1;
+
+    for r in start_round..=mb.max_rounds {
         st.iter = 1 + processed / n;
 
         // --- batch selection → contiguous runs ---------------------------
@@ -548,10 +632,33 @@ pub fn run_minibatch(
         });
         carry_rebuild_secs = 0.0;
         max_mem = max_mem.max(assigner.mem_bytes());
+        completed = r;
+
+        if let Some(spec) = ckpt {
+            if every > 0 && r % every == 0 {
+                save_mb_ckpt(
+                    spec, fp.as_ref().unwrap(), r, objective, max_mem, &st, &*assigner,
+                    &counts, &sizes, &obs_round, &last_moved, mr_latest, mr_prev, &rng,
+                    cursor, processed, quiet,
+                )?;
+                last_saved = r;
+            }
+        }
+    }
+
+    // Final checkpoint so `--resume` can extend a finished run.
+    if let Some(spec) = ckpt {
+        if completed > last_saved {
+            save_mb_ckpt(
+                spec, fp.as_ref().unwrap(), completed, objective, max_mem, &st, &*assigner,
+                &counts, &sizes, &obs_round, &last_moved, mr_latest, mr_prev, &rng,
+                cursor, processed, quiet,
+            )?;
+        }
     }
 
     let (t_th, v_th) = assigner.params();
-    MiniBatchOutput {
+    Ok(MiniBatchOutput {
         algo: kind,
         assign: st.assign,
         objective,
@@ -560,7 +667,58 @@ pub fn run_minibatch(
         max_mem_bytes: max_mem,
         t_th,
         v_th,
-    }
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn save_mb_ckpt(
+    spec: &CheckpointSpec,
+    fp: &RunFingerprint,
+    round: usize,
+    objective: f64,
+    max_mem: usize,
+    st: &IterState,
+    assigner: &dyn Assigner,
+    counts: &[f64],
+    sizes: &[u32],
+    obs_round: &[u32],
+    last_moved: &[u32],
+    mr_latest: u32,
+    mr_prev: u32,
+    rng: &Pcg32,
+    cursor: usize,
+    processed: usize,
+    quiet: usize,
+) -> crate::error::SkmResult<()> {
+    let (rng_state, rng_inc) = rng.raw_state();
+    crate::persist::checkpoint::save_minibatch_checkpoint(
+        &spec.path,
+        fp,
+        &CheckpointState {
+            round,
+            objective,
+            max_mem,
+            params: assigner.export_params_state(),
+            assign: &st.assign,
+            rho: &st.rho,
+            xstate: &st.xstate,
+            means: &st.means,
+        },
+        &MbStateRef {
+            counts,
+            sizes,
+            obs_round,
+            last_moved,
+            mr_latest,
+            mr_prev,
+            rng_state,
+            rng_inc,
+            cursor,
+            processed,
+            quiet,
+        },
+    )?;
+    Ok(())
 }
 
 /// Machine-readable report for one mini-batch run (the `--bench-json`

@@ -13,7 +13,7 @@ pub use compare::{
     run_and_summarize_with, AlgoRunSummary,
 };
 pub use minibatch::{
-    minibatch_run_json, run_minibatch, try_run_minibatch, BatchSchedule, MiniBatchConfig,
-    MiniBatchOutput, RoundLog,
+    minibatch_run_json, run_minibatch, run_minibatch_resumable, try_run_minibatch,
+    try_run_minibatch_resumable, BatchSchedule, MiniBatchConfig, MiniBatchOutput, RoundLog,
 };
 pub use presets::{preset, Preset};

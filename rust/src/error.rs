@@ -59,6 +59,18 @@ pub enum SkmError {
     /// ([`crate::util::failpoint`]). Only constructible with the
     /// `failpoints` cargo feature enabled.
     FaultInjected { site: String },
+    /// An on-disk snapshot or checkpoint failed validation on load: bad
+    /// magic/version, a checksum mismatch, a structurally inconsistent
+    /// section (offsets out of bounds, ids ≥ K, broken relabeling), or a
+    /// truncated file. `section` names the part of the file that failed
+    /// (`"header"`, `"manifest"`, `"block 3"`, `"corpus.indptr"`, …) so
+    /// corruption reports are actionable. The loader never returns a
+    /// partially-decoded snapshot alongside this (see [`crate::persist`]).
+    CorruptSnapshot {
+        path: String,
+        section: String,
+        detail: String,
+    },
 }
 
 impl fmt::Display for SkmError {
@@ -83,6 +95,13 @@ impl fmt::Display for SkmError {
             }
             SkmError::FaultInjected { site } => {
                 write!(f, "injected fault at {site}")
+            }
+            SkmError::CorruptSnapshot {
+                path,
+                section,
+                detail,
+            } => {
+                write!(f, "corrupt snapshot {path} [{section}]: {detail}")
             }
         }
     }
@@ -120,6 +139,19 @@ impl SkmError {
 
     pub fn invalid_config(detail: impl Into<String>) -> Self {
         SkmError::InvalidConfig {
+            detail: detail.into(),
+        }
+    }
+
+    /// A snapshot/checkpoint load failure pinned to a file section.
+    pub fn corrupt_snapshot(
+        path: impl Into<String>,
+        section: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> Self {
+        SkmError::CorruptSnapshot {
+            path: path.into(),
+            section: section.into(),
             detail: detail.into(),
         }
     }

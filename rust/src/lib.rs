@@ -63,6 +63,13 @@
 //!   — `rust/tests/serve.rs`), second-stage retrieval scans only the
 //!   routed clusters' members, and [`serve::serve_batch`] shards query
 //!   batches over the same scoped-thread engine as assignment.
+//! - [`persist`] — crash-safe on-disk persistence: a versioned,
+//!   per-block-checksummed container format for frozen serving state
+//!   (atomic write-to-temp → fsync → rename publish, paranoid-by-
+//!   default loading with every violation a typed
+//!   [`error::SkmError::CorruptSnapshot`]), plus periodic
+//!   checkpoint/resume for long clustering runs with a bit-identical
+//!   resumed trajectory (`rust/tests/persist.rs`).
 //! - [`util`] — offline-friendly RNG/CLI/IO/timing utilities, plus
 //!   [`util::failpoint`] — the compile-time-gated fail-point harness
 //!   (cargo feature `failpoints`) behind `rust/tests/faults.rs`.
@@ -93,6 +100,7 @@ pub mod error;
 pub mod estparams;
 pub mod index;
 pub mod metrics;
+pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod sparse;

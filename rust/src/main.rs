@@ -38,6 +38,20 @@
 //! machine-readable report (phase timings / counters, or the per-query
 //! serving answers with QPS) as JSON.
 //!
+//! ## Persistence (§Persist tentpole)
+//!
+//! `skm serve --save <path>` persists the frozen serving state
+//! (checksummed block format, atomic publish — see `skm::persist`);
+//! `skm serve --load <path>` warm-restarts from it, skipping dataset
+//! building and clustering entirely, with bit-identical answers.
+//! `skm cluster --save <path>` writes periodic run checkpoints
+//! (`--checkpoint-every N`, default 10, plus a final checkpoint);
+//! `skm cluster --resume <path>` continues such a run — the checkpoint
+//! fingerprint must match the configuration and corpus, and the resumed
+//! trajectory is bit-identical to the uninterrupted one. Both work with
+//! `--minibatch` (the checkpoint also carries the sampling RNG state,
+//! decay counts, and staleness clocks).
+//!
 //! ## Failure semantics (§Robustness)
 //!
 //! Every subcommand returns [`SkmResult`]; `main` prints one
@@ -49,17 +63,20 @@
 //! batch completes, failed slots are reported in the log/JSON, and the
 //! process still exits 0 (failure is per request, not per process).
 
-use skm::algo::{try_run_clustering_with, AlgoKind, ClusterConfig, ParConfig};
+use skm::algo::{
+    try_run_clustering_resumable, try_run_clustering_with, AlgoKind, ClusterConfig, ParConfig,
+};
 use skm::coordinator::compare::absolute_table;
 use skm::coordinator::{
     audit_equivalence_with, cluster_run_json, compare_runs_json, comparison_rate_table,
-    minibatch_run_json, preset, try_run_minibatch, BatchSchedule, MiniBatchConfig,
-    run_and_summarize_with,
+    minibatch_run_json, preset, try_run_minibatch, try_run_minibatch_resumable, BatchSchedule,
+    MiniBatchConfig, run_and_summarize_with,
 };
 use skm::corpus::read_uci_bow_file;
 use skm::error::{SkmError, SkmResult};
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{update_means, ObjInvIndex};
+use skm::persist::checkpoint::CheckpointSpec;
 use skm::serve::{
     serve_batch, serve_run_json, ClusteredCorpus, Query, Router, RouterParams, ServeDefaults,
 };
@@ -68,6 +85,7 @@ use skm::ucs;
 use skm::util::cli::Args;
 use skm::util::io::fmt_sig;
 use skm::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 fn load_dataset(args: &Args) -> SkmResult<Dataset> {
@@ -108,6 +126,25 @@ fn par_for(args: &Args) -> SkmResult<ParConfig> {
         threads: args.try_parsed_or("threads", env.threads)?.max(1),
         shard: args.try_parsed_or("shard", env.shard)?,
     })
+}
+
+/// `--save` / `--checkpoint-every` → the clustering drivers'
+/// [`CheckpointSpec`]. `--save` alone checkpoints every 10 completed
+/// rounds plus the final state; `--checkpoint-every 0` means
+/// final-checkpoint only; `--checkpoint-every` without `--save` is a
+/// usage error.
+fn checkpoint_spec_for(args: &Args) -> SkmResult<Option<CheckpointSpec>> {
+    let every = args.checkpoint_every()?;
+    match (args.save_path(), every) {
+        (Some(path), every) => Ok(Some(CheckpointSpec {
+            every: every.unwrap_or(10),
+            path: PathBuf::from(path),
+        })),
+        (None, Some(_)) => Err(SkmError::invalid_config(
+            "--checkpoint-every requires --save <path>",
+        )),
+        (None, None) => Ok(None),
+    }
 }
 
 fn parse_algo(s: &str) -> SkmResult<AlgoKind> {
@@ -174,10 +211,21 @@ fn cmd_cluster(args: &Args) -> SkmResult<()> {
             par.shard_size(ds.n())
         );
     }
-    if args.minibatch() {
-        return cmd_cluster_minibatch(args, &ds, &cfg, &par, kind);
+    let ckpt = checkpoint_spec_for(args)?;
+    let resume = args.resume_path().map(Path::new);
+    if let Some(spec) = &ckpt {
+        match spec.every {
+            0 => eprintln!("checkpointing to {} at completion", spec.path.display()),
+            e => eprintln!("checkpointing to {} every {e} round(s)", spec.path.display()),
+        }
     }
-    let out = try_run_clustering_with(kind, &ds, &cfg, &par)?;
+    if let Some(p) = resume {
+        eprintln!("resuming from {}", p.display());
+    }
+    if args.minibatch() {
+        return cmd_cluster_minibatch(args, &ds, &cfg, &par, kind, ckpt.as_ref(), resume);
+    }
+    let out = try_run_clustering_resumable(kind, &ds, &cfg, &par, ckpt.as_ref(), resume)?;
     println!(
         "{}: {} iterations ({}), J={:.4}, total {:.2}s (assign {:.2}s / update {:.2}s), avg mult/iter {}, max mem {:.3} GB",
         kind.name(),
@@ -259,6 +307,8 @@ fn cmd_cluster_minibatch(
     cfg: &ClusterConfig,
     par: &ParConfig,
     kind: AlgoKind,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
 ) -> SkmResult<()> {
     let n = ds.n();
     let mb = minibatch_config_for(args, n, cfg)?;
@@ -270,7 +320,7 @@ fn cmd_cluster_minibatch(
         mb.schedule.name(),
         mb.decay
     );
-    let out = try_run_minibatch(kind, ds, cfg, &mb, par)?;
+    let out = try_run_minibatch_resumable(kind, ds, cfg, &mb, par, ckpt, resume)?;
     println!(
         "{} (mini-batch): {} rounds ({}), J={:.4}, {} objects processed, total {:.2}s (assign {:.2}s / update {:.2}s), max mem {:.3} GB",
         kind.name(),
@@ -361,50 +411,88 @@ fn cmd_compare(args: &Args) -> SkmResult<()> {
 /// are reported (stderr count, `--log` lines, JSON `error` objects),
 /// and the exit code stays 0.
 fn cmd_serve(args: &Args) -> SkmResult<()> {
-    let ds = load_dataset(args)?;
-    let cfg = config_for(args, &ds)?;
     let par = par_for(args)?;
-    let kind = parse_algo(args.get_or("algo", "es-icp"))?;
-    let k = cfg.k;
-    describe(&ds, k);
-
-    // 1. Cluster (full-batch Lloyd, or the streaming driver under
-    //    --minibatch) and freeze the result.
-    eprintln!("clustering with {} ...", kind.name());
-    let snap = if args.minibatch() {
-        // Same knobs and defaults as `cluster --minibatch` — one
-        // shared helper, so the two subcommands cannot drift.
-        let mb = minibatch_config_for(args, ds.n(), &cfg)?;
-        let out = try_run_minibatch(kind, &ds, &cfg, &mb, &par)?;
-        eprintln!(
-            "  {} rounds, J={:.4} (streaming)",
-            out.n_rounds(),
-            out.objective
-        );
-        ClusteredCorpus::from_minibatch(ds, &out, k)
-    } else {
-        let out = try_run_clustering_with(kind, &ds, &cfg, &par)?;
-        eprintln!("  {} iterations, J={:.4}", out.iterations(), out.objective);
-        ClusteredCorpus::from_output(ds, &out, k)
-    };
-
-    // 2. The router: --t-th / --v-th each independently override the
-    //    Section-V estimator (estimation is skipped only when both are
-    //    given). A failed estimation degrades to exact routing
-    //    parameters inside estimate_for — never an exit.
     let t_ov = args.try_parsed::<usize>("t-th")?;
     let v_ov = args.try_parsed::<f64>("v-th")?;
-    let params = match (t_ov, v_ov) {
-        (Some(t_th), Some(v_th)) => RouterParams { t_th, v_th },
-        (t, v) => {
-            let est = RouterParams::estimate_for(&snap, &cfg);
-            RouterParams {
-                t_th: t.unwrap_or(est.t_th),
-                v_th: v.unwrap_or(est.v_th),
+
+    // 1. The serving state: either a warm restart from a persisted
+    //    snapshot (`--load` — no dataset build, no clustering; answers
+    //    are bit-identical to the run that saved it), or cluster the
+    //    corpus and freeze the result.
+    let (snap, params, query_seed_base) = if let Some(path) = args.load_path() {
+        let (snap, stored) = skm::persist::load_snapshot(Path::new(path))?;
+        eprintln!(
+            "loaded snapshot {path}: K={}, router (t_th={}, v_th={:.4})",
+            snap.k, stored.t_th, stored.v_th
+        );
+        describe(&snap.ds, snap.k);
+        // --t-th / --v-th still override the stored parameters.
+        let params = RouterParams {
+            t_th: t_ov.unwrap_or(stored.t_th),
+            v_th: v_ov.unwrap_or(stored.v_th),
+        };
+        let seed = args.try_parsed_or::<u64>("seed", 42)?;
+        (snap, params, seed)
+    } else {
+        let ds = load_dataset(args)?;
+        let cfg = config_for(args, &ds)?;
+        let kind = parse_algo(args.get_or("algo", "es-icp"))?;
+        let k = cfg.k;
+        describe(&ds, k);
+
+        // Cluster (full-batch Lloyd, or the streaming driver under
+        // --minibatch) and freeze the result.
+        eprintln!("clustering with {} ...", kind.name());
+        let snap = if args.minibatch() {
+            // Same knobs and defaults as `cluster --minibatch` — one
+            // shared helper, so the two subcommands cannot drift.
+            let mb = minibatch_config_for(args, ds.n(), &cfg)?;
+            let out = try_run_minibatch(kind, &ds, &cfg, &mb, &par)?;
+            eprintln!(
+                "  {} rounds, J={:.4} (streaming)",
+                out.n_rounds(),
+                out.objective
+            );
+            ClusteredCorpus::from_minibatch(ds, &out, k)
+        } else {
+            let out = try_run_clustering_with(kind, &ds, &cfg, &par)?;
+            eprintln!("  {} iterations, J={:.4}", out.iterations(), out.objective);
+            ClusteredCorpus::from_output(ds, &out, k)
+        };
+
+        // The router: --t-th / --v-th each independently override the
+        // Section-V estimator (estimation is skipped only when both are
+        // given). A failed estimation degrades to exact routing
+        // parameters inside estimate_for — never an exit.
+        let params = match (t_ov, v_ov) {
+            (Some(t_th), Some(v_th)) => RouterParams { t_th, v_th },
+            (t, v) => {
+                let est = RouterParams::estimate_for(&snap, &cfg);
+                RouterParams {
+                    t_th: t.unwrap_or(est.t_th),
+                    v_th: v.unwrap_or(est.v_th),
+                }
             }
-        }
+        };
+        (snap, params, cfg.seed)
     };
+    let k = snap.k;
+
     let router = Router::new(&snap, params)?;
+
+    // 2. `--save`: persist the frozen serving state (checksummed block
+    //    format, atomic publish) with the *resolved* router parameters,
+    //    so `--load` answers bit-identically without re-clustering or
+    //    re-estimating.
+    if let Some(path) = args.save_path() {
+        let saved = RouterParams {
+            t_th: router.t_th(),
+            v_th: router.v_th(),
+        };
+        let bytes = skm::persist::save_snapshot(Path::new(path), &snap, &saved)?;
+        eprintln!("[saved snapshot {path}: {bytes} bytes]");
+    }
+
     let defaults = ServeDefaults::default_for(k);
     let top_p = match args.try_parsed_or::<usize>("top-p", 0)? {
         0 => defaults.top_p,
@@ -424,7 +512,7 @@ fn cmd_serve(args: &Args) -> SkmResult<()> {
         let nq = args
             .try_parsed_or::<usize>("n-queries", 64)?
             .clamp(1, snap.ds.n());
-        let mut rng = Pcg32::new(args.try_parsed_or("query-seed", cfg.seed ^ 0x5e4e)?);
+        let mut rng = Pcg32::new(args.try_parsed_or("query-seed", query_seed_base ^ 0x5e4e)?);
         rng.sample_distinct(snap.ds.n(), nq)
             .into_iter()
             .map(|i| Query::from_row(&snap.ds, i))

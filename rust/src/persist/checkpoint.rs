@@ -1,0 +1,672 @@
+//! Periodic checkpoint / resume for long clustering runs.
+//!
+//! A checkpoint captures the *complete* mid-run state of a driver —
+//! assignment, ρ, ICP invariance flags, the mean set (values, moved
+//! flags, sizes), the estimator's structural-parameter state, and (for
+//! mini-batch runs) the decay counters, observation rounds, RNG stream
+//! position, and batch cursor — so that a resumed run continues on a
+//! trajectory **bit-identical** to the uninterrupted one
+//! (`rust/tests/persist.rs` enforces this per algorithm).
+//!
+//! Each checkpoint file also embeds a [`RunFingerprint`] of the run
+//! configuration and the corpus content. `--resume` against a
+//! checkpoint from a different corpus, algorithm, K, seed, or sampling
+//! configuration is a typed [`SkmError::InvalidConfig`] (exit 2), not a
+//! silently-diverging run. The iteration/round *cap* is deliberately
+//! excluded from the fingerprint: resuming with a larger
+//! `--max-iters` / `--rounds` is the supported way to extend a finished
+//! run, and the trajectory through the already-computed rounds is
+//! unchanged by the cap.
+//!
+//! Files use the same block format, atomic publish, and paranoid
+//! validation as serving snapshots (see [`crate::persist`]).
+
+use crate::algo::{AlgoKind, ClusterConfig, ParamsState};
+use crate::coordinator::{BatchSchedule, MiniBatchConfig};
+use crate::error::{SkmError, SkmResult};
+use crate::index::MeanSet;
+use crate::persist::format::{
+    ByteReader, ByteWriter, KIND_CLUSTER_CKPT, KIND_MINIBATCH_CKPT,
+};
+use crate::persist::reader::read_blocks_file;
+use crate::persist::{
+    sec, section_bools, section_f64s, section_u32s, section_usizes, validated_csr, writer,
+};
+use crate::sparse::Dataset;
+use std::path::{Path, PathBuf};
+
+/// Where and how often a driver writes checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    /// Write a checkpoint every `every` completed rounds (0 = only the
+    /// final checkpoint at run completion).
+    pub every: usize,
+    /// Destination path; each checkpoint atomically replaces the last.
+    pub path: PathBuf,
+}
+
+// ---------------------------------------------------------------------
+// Run fingerprint
+
+/// Identity of a clustering run: everything that determines the
+/// bit-exact trajectory. Threading (`ParConfig`) is excluded — the
+/// sharded engine is bit-identical to serial — and so are the
+/// iteration/round caps (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunFingerprint {
+    pub algo: String,
+    pub k: u64,
+    pub seed: u64,
+    pub t_th_frac_bits: u64,
+    pub s_min_frac_bits: u64,
+    pub n_vth_candidates: u64,
+    pub n: u64,
+    pub d: u64,
+    pub nnz: u64,
+    /// FNV-1a 64 digest over the corpus arrays (CSR + df + relabeling).
+    pub corpus_digest: u64,
+    /// Mini-batch configuration; all-zero for full-batch runs.
+    pub mb_batch: u64,
+    /// 0 = full-batch, 1 = sequential, 2 = reservoir.
+    pub mb_schedule: u32,
+    pub mb_decay_bits: u64,
+    pub mb_sample_seed: u64,
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn corpus_digest(ds: &Dataset) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let (_, indptr, indices, values) = ds.x.raw_parts();
+    for &p in indptr {
+        fnv1a(&mut h, &(p as u64).to_le_bytes());
+    }
+    for &t in indices {
+        fnv1a(&mut h, &t.to_le_bytes());
+    }
+    for &v in values {
+        fnv1a(&mut h, &v.to_bits().to_le_bytes());
+    }
+    for &f in &ds.df {
+        fnv1a(&mut h, &f.to_le_bytes());
+    }
+    for &t in &ds.orig_term {
+        fnv1a(&mut h, &t.to_le_bytes());
+    }
+    h
+}
+
+impl RunFingerprint {
+    pub fn compute(
+        kind: AlgoKind,
+        ds: &Dataset,
+        cfg: &ClusterConfig,
+        mb: Option<&MiniBatchConfig>,
+    ) -> Self {
+        Self {
+            algo: kind.name().to_string(),
+            k: cfg.k as u64,
+            seed: cfg.seed,
+            t_th_frac_bits: cfg.t_th_frac.to_bits(),
+            s_min_frac_bits: cfg.s_min_frac.to_bits(),
+            n_vth_candidates: cfg.n_vth_candidates as u64,
+            n: ds.n() as u64,
+            d: ds.d() as u64,
+            nnz: ds.x.nnz() as u64,
+            corpus_digest: corpus_digest(ds),
+            mb_batch: mb.map_or(0, |m| m.batch as u64),
+            mb_schedule: mb.map_or(0, |m| match m.schedule {
+                BatchSchedule::Sequential => 1,
+                BatchSchedule::Reservoir => 2,
+            }),
+            mb_decay_bits: mb.map_or(0, |m| m.decay.to_bits()),
+            mb_sample_seed: mb.map_or(0, |m| m.sample_seed),
+        }
+    }
+
+    /// Error (typed `InvalidConfig`, exit 2) unless `stored` matches
+    /// this run exactly, naming the first differing field.
+    pub fn verify_matches(&self, stored: &RunFingerprint) -> SkmResult<()> {
+        let mismatch = |field: &str, want: String, got: String| {
+            Err(SkmError::invalid_config(format!(
+                "--resume checkpoint does not belong to this run: {field} differs \
+                 (checkpoint {got}, current run {want})"
+            )))
+        };
+        if stored.algo != self.algo {
+            return mismatch("algorithm", self.algo.clone(), stored.algo.clone());
+        }
+        macro_rules! check {
+            ($field:ident, $label:expr) => {
+                if stored.$field != self.$field {
+                    return mismatch(
+                        $label,
+                        format!("{:?}", self.$field),
+                        format!("{:?}", stored.$field),
+                    );
+                }
+            };
+        }
+        check!(k, "K");
+        check!(seed, "seed");
+        check!(t_th_frac_bits, "t_th_frac");
+        check!(s_min_frac_bits, "s_min_frac");
+        check!(n_vth_candidates, "n_vth_candidates");
+        check!(n, "corpus size N");
+        check!(d, "vocabulary size D");
+        check!(nnz, "corpus nnz");
+        check!(corpus_digest, "corpus content digest");
+        check!(mb_batch, "mini-batch size");
+        check!(mb_schedule, "mini-batch schedule");
+        check!(mb_decay_bits, "mini-batch decay");
+        check!(mb_sample_seed, "mini-batch sample seed");
+        Ok(())
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_str(&self.algo);
+        for v in [
+            self.k,
+            self.seed,
+            self.t_th_frac_bits,
+            self.s_min_frac_bits,
+            self.n_vth_candidates,
+            self.n,
+            self.d,
+            self.nnz,
+            self.corpus_digest,
+            self.mb_batch,
+        ] {
+            w.put_u64(v);
+        }
+        w.put_u32(self.mb_schedule);
+        w.put_u64(self.mb_decay_bits);
+        w.put_u64(self.mb_sample_seed);
+        w.into_bytes()
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<Self, String> {
+        let algo = r.get_str()?;
+        let mut u = || r.get_u64();
+        let k = u()?;
+        let seed = u()?;
+        let t_th_frac_bits = u()?;
+        let s_min_frac_bits = u()?;
+        let n_vth_candidates = u()?;
+        let n = u()?;
+        let d = u()?;
+        let nnz = u()?;
+        let corpus_digest = u()?;
+        let mb_batch = u()?;
+        let mb_schedule = r.get_u32()?;
+        let mb_decay_bits = r.get_u64()?;
+        let mb_sample_seed = r.get_u64()?;
+        Ok(Self {
+            algo,
+            k,
+            seed,
+            t_th_frac_bits,
+            s_min_frac_bits,
+            n_vth_candidates,
+            n,
+            d,
+            nnz,
+            corpus_digest,
+            mb_batch,
+            mb_schedule,
+            mb_decay_bits,
+            mb_sample_seed,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint payloads
+
+/// Borrowed full-batch driver state for serialization (the save path
+/// never clones the big arrays).
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointState<'a> {
+    /// 1-based round whose update + rebuild this state reflects.
+    pub round: usize,
+    pub objective: f64,
+    pub max_mem: usize,
+    pub params: ParamsState,
+    pub assign: &'a [u32],
+    pub rho: &'a [f64],
+    pub xstate: &'a [bool],
+    pub means: &'a MeanSet,
+}
+
+/// Borrowed mini-batch driver extras for serialization.
+#[derive(Debug, Clone, Copy)]
+pub struct MbStateRef<'a> {
+    pub counts: &'a [f64],
+    pub sizes: &'a [u32],
+    pub obs_round: &'a [u32],
+    pub last_moved: &'a [u32],
+    pub mr_latest: u32,
+    pub mr_prev: u32,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub cursor: usize,
+    pub processed: usize,
+    pub quiet: usize,
+}
+
+/// A loaded, fully-validated full-batch checkpoint.
+#[derive(Debug, Clone)]
+pub struct ClusterCheckpoint {
+    pub round: usize,
+    pub objective: f64,
+    pub max_mem: usize,
+    pub params: ParamsState,
+    pub assign: Vec<u32>,
+    pub rho: Vec<f64>,
+    pub xstate: Vec<bool>,
+    pub means: MeanSet,
+}
+
+/// Loaded mini-batch driver extras.
+#[derive(Debug, Clone)]
+pub struct MbDriverState {
+    pub counts: Vec<f64>,
+    pub sizes: Vec<u32>,
+    pub obs_round: Vec<u32>,
+    pub last_moved: Vec<u32>,
+    pub mr_latest: u32,
+    pub mr_prev: u32,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub cursor: usize,
+    pub processed: usize,
+    pub quiet: usize,
+}
+
+/// A loaded, fully-validated mini-batch checkpoint.
+#[derive(Debug, Clone)]
+pub struct MinibatchCheckpoint {
+    pub base: ClusterCheckpoint,
+    pub mb: MbDriverState,
+}
+
+fn encode_driver(st: &CheckpointState) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(st.round as u64);
+    w.put_f64_bits(st.objective);
+    w.put_u64(st.max_mem as u64);
+    w.put_u32(u32::from(st.params.t_th.is_some()));
+    w.put_u64(st.params.t_th.unwrap_or(0) as u64);
+    w.put_u32(u32::from(st.params.v_th.is_some()));
+    w.put_f64_bits(st.params.v_th.unwrap_or(0.0));
+    w.put_u64(st.params.estimations_done as u64);
+    w.into_bytes()
+}
+
+fn encode_mb_driver(mb: &MbStateRef) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_f64s(mb.counts);
+    w.put_u32s(mb.sizes);
+    w.put_u32s(mb.obs_round);
+    w.put_u32s(mb.last_moved);
+    w.put_u32(mb.mr_latest);
+    w.put_u32(mb.mr_prev);
+    w.put_u64(mb.rng_state);
+    w.put_u64(mb.rng_inc);
+    w.put_u64(mb.cursor as u64);
+    w.put_u64(mb.processed as u64);
+    w.put_u64(mb.quiet as u64);
+    w.into_bytes()
+}
+
+fn common_sections(fp: &RunFingerprint, st: &CheckpointState) -> Vec<(u32, Vec<u8>)> {
+    let (m_cols, m_indptr, m_indices, m_values) = st.means.m.raw_parts();
+    let _ = m_cols;
+    let enc_u32s = |v: &[u32]| {
+        let mut w = ByteWriter::new();
+        w.put_u32s(v);
+        w.into_bytes()
+    };
+    let enc_usizes = |v: &[usize]| {
+        let mut w = ByteWriter::new();
+        w.put_usizes(v);
+        w.into_bytes()
+    };
+    let enc_f64s = |v: &[f64]| {
+        let mut w = ByteWriter::new();
+        w.put_f64s(v);
+        w.into_bytes()
+    };
+    let enc_bools = |v: &[bool]| {
+        let mut w = ByteWriter::new();
+        w.put_bools(v);
+        w.into_bytes()
+    };
+    vec![
+        (sec::FINGERPRINT, fp.encode()),
+        (sec::DRIVER, encode_driver(st)),
+        (sec::ASSIGN, enc_u32s(st.assign)),
+        (sec::RHO, enc_f64s(st.rho)),
+        (sec::XSTATE, enc_bools(st.xstate)),
+        (sec::MEANS_INDPTR, enc_usizes(m_indptr)),
+        (sec::MEANS_INDICES, enc_u32s(m_indices)),
+        (sec::MEANS_VALUES, enc_f64s(m_values)),
+        (sec::MEAN_SIZES, enc_u32s(&st.means.sizes)),
+        (sec::MEANS_MOVED, enc_bools(&st.means.moved)),
+    ]
+}
+
+/// Atomically write a full-batch checkpoint. Returns file bytes.
+pub fn save_cluster_checkpoint(
+    path: &Path,
+    fp: &RunFingerprint,
+    st: &CheckpointState,
+) -> SkmResult<u64> {
+    writer::write_blocks_file(path, KIND_CLUSTER_CKPT, &common_sections(fp, st))
+}
+
+/// Atomically write a mini-batch checkpoint. Returns file bytes.
+pub fn save_minibatch_checkpoint(
+    path: &Path,
+    fp: &RunFingerprint,
+    st: &CheckpointState,
+    mb: &MbStateRef,
+) -> SkmResult<u64> {
+    let mut sections = common_sections(fp, st);
+    sections.push((sec::MB_DRIVER, encode_mb_driver(mb)));
+    writer::write_blocks_file(path, KIND_MINIBATCH_CKPT, &sections)
+}
+
+fn corrupt(path: &Path, section: &str, detail: impl Into<String>) -> SkmError {
+    SkmError::corrupt_snapshot(path.display().to_string(), section, detail)
+}
+
+/// Decode + validate the sections shared by both checkpoint kinds.
+fn load_common(
+    path: &Path,
+    raw: &crate::persist::reader::RawFile,
+    expect_fp: &RunFingerprint,
+    n: usize,
+    d: usize,
+    k: usize,
+) -> SkmResult<ClusterCheckpoint> {
+    let c = |section: &str, detail: String| corrupt(path, section, detail);
+
+    // Fingerprint first: a mismatched run is InvalidConfig, and no
+    // further state is trusted before the match is proven.
+    let mut fr = ByteReader::new(raw.section(sec::FINGERPRINT, "fingerprint", path)?);
+    let stored_fp = RunFingerprint::decode(&mut fr).map_err(|detail| c("fingerprint", detail))?;
+    fr.finish().map_err(|detail| c("fingerprint", detail))?;
+    expect_fp.verify_matches(&stored_fp)?;
+
+    // Driver scalars.
+    let mut dr = ByteReader::new(raw.section(sec::DRIVER, "driver", path)?);
+    let de = |r: Result<u64, String>| r.map_err(|detail| c("driver", detail));
+    let round = usize::try_from(de(dr.get_u64())?)
+        .map_err(|_| c("driver", "round exceeds host usize".to_string()))?;
+    let objective = f64::from_bits(de(dr.get_u64())?);
+    let max_mem = usize::try_from(de(dr.get_u64())?)
+        .map_err(|_| c("driver", "max_mem exceeds host usize".to_string()))?;
+    let t_th_present = dr.get_u32().map_err(|detail| c("driver", detail))?;
+    let t_th_val = de(dr.get_u64())?;
+    let v_th_present = dr.get_u32().map_err(|detail| c("driver", detail))?;
+    let v_th_val = f64::from_bits(de(dr.get_u64())?);
+    let estimations_done = usize::try_from(de(dr.get_u64())?)
+        .map_err(|_| c("driver", "estimations_done exceeds host usize".to_string()))?;
+    dr.finish().map_err(|detail| c("driver", detail))?;
+
+    if round == 0 || round >= u32::MAX as usize {
+        return Err(c("driver", format!("round {round} out of range")));
+    }
+    if !objective.is_finite() {
+        return Err(c("driver", format!("non-finite objective {objective}")));
+    }
+    for (present, label) in [(t_th_present, "t_th"), (v_th_present, "v_th")] {
+        if present > 1 {
+            return Err(c("driver", format!("{label} presence flag {present} (want 0 or 1)")));
+        }
+    }
+    let t_th = if t_th_present == 1 {
+        let t = usize::try_from(t_th_val)
+            .map_err(|_| c("driver", "t_th exceeds host usize".to_string()))?;
+        if t > d {
+            return Err(c("driver", format!("t_th = {t} > D = {d}")));
+        }
+        Some(t)
+    } else {
+        None
+    };
+    let v_th = if v_th_present == 1 {
+        if !v_th_val.is_finite() || v_th_val <= 0.0 {
+            return Err(c("driver", format!("v_th = {v_th_val} (want positive finite)")));
+        }
+        Some(v_th_val)
+    } else {
+        None
+    };
+    if estimations_done > 8 {
+        return Err(c("driver", format!("estimations_done = {estimations_done} (sanity cap 8)")));
+    }
+    let params = ParamsState {
+        t_th,
+        v_th,
+        estimations_done,
+    };
+
+    // Arrays.
+    let assign = section_u32s(raw, sec::ASSIGN, "assign", path)?;
+    if assign.len() != n {
+        return Err(c("assign", format!("{} entries for N = {n}", assign.len())));
+    }
+    if let Some(&bad) = assign.iter().find(|&&a| a as usize >= k) {
+        return Err(c("assign", format!("cluster id {bad} >= K = {k}")));
+    }
+    let rho = section_f64s(raw, sec::RHO, "rho", path)?;
+    if rho.len() != n {
+        return Err(c("rho", format!("{} entries for N = {n}", rho.len())));
+    }
+    if let Some(&bad) = rho.iter().find(|v| !v.is_finite()) {
+        return Err(c("rho", format!("non-finite rho value {bad}")));
+    }
+    let xstate = section_bools(raw, sec::XSTATE, "xstate", path)?;
+    if xstate.len() != n {
+        return Err(c("xstate", format!("{} entries for N = {n}", xstate.len())));
+    }
+    let m = validated_csr(
+        path,
+        "means",
+        k,
+        d,
+        section_usizes(raw, sec::MEANS_INDPTR, "means", path)?,
+        section_u32s(raw, sec::MEANS_INDICES, "means", path)?,
+        section_f64s(raw, sec::MEANS_VALUES, "means", path)?,
+    )?;
+    let sizes = section_u32s(raw, sec::MEAN_SIZES, "mean_sizes", path)?;
+    if sizes.len() != k {
+        return Err(c("mean_sizes", format!("{} entries for K = {k}", sizes.len())));
+    }
+    let moved = section_bools(raw, sec::MEANS_MOVED, "means_moved", path)?;
+    if moved.len() != k {
+        return Err(c("means_moved", format!("{} entries for K = {k}", moved.len())));
+    }
+
+    Ok(ClusterCheckpoint {
+        round,
+        objective,
+        max_mem,
+        params,
+        assign,
+        rho,
+        xstate,
+        means: MeanSet { m, moved, sizes },
+    })
+}
+
+/// Load and validate a full-batch checkpoint, proving it belongs to
+/// the run described by `expect_fp` (n, d, k are the current run's
+/// dimensions — already pinned by the fingerprint, re-checked against
+/// every array).
+pub fn load_cluster_checkpoint(
+    path: &Path,
+    expect_fp: &RunFingerprint,
+    n: usize,
+    d: usize,
+    k: usize,
+) -> SkmResult<ClusterCheckpoint> {
+    let raw = read_blocks_file(path, KIND_CLUSTER_CKPT)?;
+    load_common(path, &raw, expect_fp, n, d, k)
+}
+
+/// Load and validate a mini-batch checkpoint.
+pub fn load_minibatch_checkpoint(
+    path: &Path,
+    expect_fp: &RunFingerprint,
+    n: usize,
+    d: usize,
+    k: usize,
+) -> SkmResult<MinibatchCheckpoint> {
+    let raw = read_blocks_file(path, KIND_MINIBATCH_CKPT)?;
+    let base = load_common(path, &raw, expect_fp, n, d, k)?;
+    let c = |detail: String| corrupt(path, "mb_driver", detail);
+
+    let mut r = ByteReader::new(raw.section(sec::MB_DRIVER, "mb_driver", path)?);
+    let counts = r.get_f64s().map_err(&c)?;
+    let sizes = r.get_u32s().map_err(&c)?;
+    let obs_round = r.get_u32s().map_err(&c)?;
+    let last_moved = r.get_u32s().map_err(&c)?;
+    let mr_latest = r.get_u32().map_err(&c)?;
+    let mr_prev = r.get_u32().map_err(&c)?;
+    let rng_state = r.get_u64().map_err(&c)?;
+    let rng_inc = r.get_u64().map_err(&c)?;
+    let cursor = r.get_usize().map_err(&c)?;
+    let processed = r.get_usize().map_err(&c)?;
+    let quiet = r.get_usize().map_err(&c)?;
+    r.finish().map_err(&c)?;
+
+    let round = base.round as u32;
+    if counts.len() != k {
+        return Err(c(format!("{} decay counts for K = {k}", counts.len())));
+    }
+    if let Some(&bad) = counts.iter().find(|v| !v.is_finite() || **v < 0.0) {
+        return Err(c(format!("decay count {bad} (want finite nonnegative)")));
+    }
+    if sizes.len() != k {
+        return Err(c(format!("{} cluster sizes for K = {k}", sizes.len())));
+    }
+    if obs_round.len() != n {
+        return Err(c(format!("{} observation rounds for N = {n}", obs_round.len())));
+    }
+    if let Some(&bad) = obs_round.iter().find(|&&o| o > round) {
+        return Err(c(format!("observation round {bad} > checkpoint round {round}")));
+    }
+    if last_moved.len() != k {
+        return Err(c(format!("{} last-moved rounds for K = {k}", last_moved.len())));
+    }
+    if let Some(&bad) = last_moved.iter().find(|&&o| o > round) {
+        return Err(c(format!("last-moved round {bad} > checkpoint round {round}")));
+    }
+    if mr_prev > mr_latest || mr_latest > round {
+        return Err(c(format!(
+            "mover-round markers ({mr_prev}, {mr_latest}) inconsistent with round {round}"
+        )));
+    }
+    if cursor >= n {
+        return Err(c(format!("batch cursor {cursor} >= N = {n}")));
+    }
+    if quiet > base.round {
+        return Err(c(format!("quiet-round count {quiet} > round {}", base.round)));
+    }
+
+    Ok(MinibatchCheckpoint {
+        base,
+        mb: MbDriverState {
+            counts,
+            sizes,
+            obs_round,
+            last_moved,
+            mr_latest,
+            mr_prev,
+            rng_state,
+            rng_inc,
+            cursor,
+            processed,
+            quiet,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+
+    fn setup() -> (Dataset, ClusterConfig) {
+        let c = generate(&tiny(9));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let cfg = ClusterConfig {
+            k: 6,
+            seed: 3,
+            max_iters: 4,
+            ..Default::default()
+        };
+        (ds, cfg)
+    }
+
+    #[test]
+    fn fingerprint_is_content_sensitive() {
+        let (ds, cfg) = setup();
+        let a = RunFingerprint::compute(AlgoKind::EsIcp, &ds, &cfg, None);
+        let b = RunFingerprint::compute(AlgoKind::EsIcp, &ds, &cfg, None);
+        assert_eq!(a, b);
+        a.verify_matches(&b).unwrap();
+        // Different seed → typed InvalidConfig naming the field.
+        let cfg2 = ClusterConfig {
+            seed: 4,
+            ..cfg.clone()
+        };
+        let c2 = RunFingerprint::compute(AlgoKind::EsIcp, &ds, &cfg2, None);
+        let err = a.verify_matches(&c2).unwrap_err();
+        assert_eq!(err.exit_code(), 2);
+        assert!(err.to_string().contains("seed"), "{err}");
+        // Different corpus content → digest mismatch.
+        let c3 = generate(&tiny(10));
+        let ds3 = build_dataset("t", c3.n_terms, &c3.docs);
+        let f3 = RunFingerprint::compute(AlgoKind::EsIcp, &ds3, &cfg, None);
+        assert!(a.verify_matches(&f3).is_err());
+        // Mini-batch config participates.
+        let mb = MiniBatchConfig {
+            batch: 64,
+            schedule: BatchSchedule::Reservoir,
+            decay: 0.5,
+            max_rounds: 10,
+            sample_seed: 7,
+        };
+        let f4 = RunFingerprint::compute(AlgoKind::EsIcp, &ds, &cfg, Some(&mb));
+        assert!(a.verify_matches(&f4).is_err());
+        // …but the round cap does not.
+        let mb2 = MiniBatchConfig {
+            max_rounds: 99,
+            ..mb.clone()
+        };
+        let f5 = RunFingerprint::compute(AlgoKind::EsIcp, &ds, &cfg, Some(&mb2));
+        f4.verify_matches(&f5).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_codec_round_trips() {
+        let (ds, cfg) = setup();
+        let fp = RunFingerprint::compute(AlgoKind::TaIcp, &ds, &cfg, None);
+        let bytes = fp.encode();
+        let mut r = ByteReader::new(&bytes);
+        let back = RunFingerprint::decode(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(fp, back);
+    }
+}

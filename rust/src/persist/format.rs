@@ -1,0 +1,562 @@
+//! On-disk format primitives for the persistence layer: the CRC32
+//! checksum, the fixed-size file header/footer, the section manifest,
+//! and a bounded little-endian byte codec.
+//!
+//! ## File layout (version 1)
+//!
+//! ```text
+//! ┌──────────────────────┐ offset 0
+//! │ header (40 B)        │ magic "SKMPERS1", version, endianness
+//! │                      │ marker, file kind, block size, block
+//! │                      │ count, header CRC32
+//! ├──────────────────────┤ offset 40
+//! │ data block 0 (64 KiB)│ [payload_len u32][crc32 u32][payload…0-pad]
+//! │ data block 1         │ each section starts on a block boundary
+//! │ …                    │
+//! ├──────────────────────┤ offset 40 + n_blocks·65536
+//! │ manifest             │ count + {id, first_block, n_blocks,
+//! │                      │ byte_len} per section
+//! ├──────────────────────┤ EOF − 32
+//! │ footer (32 B)        │ magic "SKMFOOT1", manifest offset/len/CRC,
+//! │                      │ footer CRC32
+//! └──────────────────────┘
+//! ```
+//!
+//! All integers are little-endian; an explicit endianness marker in the
+//! header rejects byte-swapped files instead of misreading them. `f64`
+//! values are stored as raw IEEE-754 bits (`to_bits`/`from_bits`) — the
+//! round-trip contract is **bit** equality, not approximate equality.
+//!
+//! Every decode function here returns `Result<_, String>`: a plain
+//! detail message the caller wraps into
+//! [`crate::error::SkmError::CorruptSnapshot`] together with the file
+//! path and section name. Nothing in this module panics on malformed
+//! bytes, and no allocation is sized from an unvalidated length field —
+//! [`ByteReader`] bounds every element count by the bytes actually
+//! remaining, so a flipped length cannot request terabytes.
+
+/// File magic, first 8 bytes of every persisted file.
+pub const MAGIC: [u8; 8] = *b"SKMPERS1";
+/// Footer magic, first 8 bytes of the fixed-size footer.
+pub const FOOTER_MAGIC: [u8; 8] = *b"SKMFOOT1";
+/// Format version understood by this reader/writer.
+pub const VERSION: u32 = 1;
+/// Endianness marker: reads back as itself only on a little-endian
+/// decode of bytes written little-endian.
+pub const ENDIAN_MARK: u32 = 0x0A0B_0C0D;
+/// Fixed data block size (header + payload + zero padding).
+pub const BLOCK_SIZE: usize = 64 * 1024;
+/// Per-block header: `payload_len: u32` + `crc32: u32`.
+pub const BLOCK_HDR: usize = 8;
+/// Payload capacity of one block.
+pub const BLOCK_CAP: usize = BLOCK_SIZE - BLOCK_HDR;
+/// Encoded header length in bytes.
+pub const HEADER_LEN: usize = 40;
+/// Encoded footer length in bytes.
+pub const FOOTER_LEN: usize = 32;
+/// Encoded manifest entry length in bytes.
+pub const MANIFEST_ENTRY_LEN: usize = 28;
+
+/// File kind: a frozen serving snapshot
+/// ([`crate::serve::ClusteredCorpus`] + router parameters).
+pub const KIND_SNAPSHOT: u32 = 1;
+/// File kind: a full-batch clustering checkpoint.
+pub const KIND_CLUSTER_CKPT: u32 = 2;
+/// File kind: a mini-batch / streaming clustering checkpoint.
+pub const KIND_MINIBATCH_CKPT: u32 = 3;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3, polynomial 0xEDB88320) — table built at compile
+// time; no external crate in the offline image.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            b += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Header / footer / manifest
+
+/// Decoded file header (the validated subset; constants are checked,
+/// not stored).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub kind: u32,
+    pub n_blocks: u64,
+}
+
+impl Header {
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..8].copy_from_slice(&MAGIC);
+        b[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        b[12..16].copy_from_slice(&ENDIAN_MARK.to_le_bytes());
+        b[16..20].copy_from_slice(&self.kind.to_le_bytes());
+        b[20..24].copy_from_slice(&(BLOCK_SIZE as u32).to_le_bytes());
+        b[24..32].copy_from_slice(&self.n_blocks.to_le_bytes());
+        // bytes 32..36 reserved (zero), covered by the CRC
+        let crc = crc32(&b[0..36]);
+        b[36..40].copy_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    /// Decode and validate a header from exactly [`HEADER_LEN`] bytes.
+    pub fn decode(b: &[u8]) -> Result<Self, String> {
+        if b.len() != HEADER_LEN {
+            return Err(format!("header is {} bytes, want {HEADER_LEN}", b.len()));
+        }
+        let crc_stored = u32::from_le_bytes(b[36..40].try_into().unwrap());
+        if crc32(&b[0..36]) != crc_stored {
+            return Err("header checksum mismatch".to_string());
+        }
+        if b[0..8] != MAGIC {
+            return Err(format!("bad magic {:02x?}", &b[0..8]));
+        }
+        let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!(
+                "unsupported format version {version} (reader understands {VERSION})"
+            ));
+        }
+        let endian = u32::from_le_bytes(b[12..16].try_into().unwrap());
+        if endian != ENDIAN_MARK {
+            return Err(format!(
+                "endianness marker {endian:#010x} != {ENDIAN_MARK:#010x} (byte-swapped file?)"
+            ));
+        }
+        let kind = u32::from_le_bytes(b[16..20].try_into().unwrap());
+        let block_size = u32::from_le_bytes(b[20..24].try_into().unwrap());
+        if block_size as usize != BLOCK_SIZE {
+            return Err(format!("block size {block_size} != {BLOCK_SIZE}"));
+        }
+        let n_blocks = u64::from_le_bytes(b[24..32].try_into().unwrap());
+        Ok(Self { kind, n_blocks })
+    }
+}
+
+/// Decoded file footer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Footer {
+    pub manifest_off: u64,
+    pub manifest_len: u64,
+    pub manifest_crc: u32,
+}
+
+impl Footer {
+    pub fn encode(&self) -> [u8; FOOTER_LEN] {
+        let mut b = [0u8; FOOTER_LEN];
+        b[0..8].copy_from_slice(&FOOTER_MAGIC);
+        b[8..16].copy_from_slice(&self.manifest_off.to_le_bytes());
+        b[16..24].copy_from_slice(&self.manifest_len.to_le_bytes());
+        b[24..28].copy_from_slice(&self.manifest_crc.to_le_bytes());
+        let crc = crc32(&b[0..28]);
+        b[28..32].copy_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    /// Decode and validate a footer from exactly [`FOOTER_LEN`] bytes.
+    pub fn decode(b: &[u8]) -> Result<Self, String> {
+        if b.len() != FOOTER_LEN {
+            return Err(format!("footer is {} bytes, want {FOOTER_LEN}", b.len()));
+        }
+        let crc_stored = u32::from_le_bytes(b[28..32].try_into().unwrap());
+        if crc32(&b[0..28]) != crc_stored {
+            return Err("footer checksum mismatch".to_string());
+        }
+        if b[0..8] != FOOTER_MAGIC {
+            return Err(format!("bad footer magic {:02x?}", &b[0..8]));
+        }
+        Ok(Self {
+            manifest_off: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            manifest_len: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            manifest_crc: u32::from_le_bytes(b[24..28].try_into().unwrap()),
+        })
+    }
+}
+
+/// One manifest entry: where a section's chunked payload lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionEntry {
+    pub id: u32,
+    pub first_block: u64,
+    pub n_blocks: u64,
+    pub byte_len: u64,
+}
+
+pub fn encode_manifest(entries: &[SectionEntry]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(4 + entries.len() * MANIFEST_ENTRY_LEN);
+    b.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        b.extend_from_slice(&e.id.to_le_bytes());
+        b.extend_from_slice(&e.first_block.to_le_bytes());
+        b.extend_from_slice(&e.n_blocks.to_le_bytes());
+        b.extend_from_slice(&e.byte_len.to_le_bytes());
+    }
+    b
+}
+
+/// Decode a manifest whose CRC the caller has already verified.
+pub fn decode_manifest(b: &[u8]) -> Result<Vec<SectionEntry>, String> {
+    if b.len() < 4 {
+        return Err(format!("manifest is {} bytes, want at least 4", b.len()));
+    }
+    let count = u32::from_le_bytes(b[0..4].try_into().unwrap()) as usize;
+    let want = 4 + count
+        .checked_mul(MANIFEST_ENTRY_LEN)
+        .ok_or_else(|| format!("manifest entry count {count} overflows"))?;
+    if b.len() != want {
+        return Err(format!(
+            "manifest length {} != {want} for {count} entries",
+            b.len()
+        ));
+    }
+    let mut entries = Vec::with_capacity(count);
+    for i in 0..count {
+        let o = 4 + i * MANIFEST_ENTRY_LEN;
+        entries.push(SectionEntry {
+            id: u32::from_le_bytes(b[o..o + 4].try_into().unwrap()),
+            first_block: u64::from_le_bytes(b[o + 4..o + 12].try_into().unwrap()),
+            n_blocks: u64::from_le_bytes(b[o + 12..o + 20].try_into().unwrap()),
+            byte_len: u64::from_le_bytes(b[o + 20..o + 28].try_into().unwrap()),
+        });
+    }
+    Ok(entries)
+}
+
+// ---------------------------------------------------------------------
+// Bounded byte codec for section payloads
+
+/// Little-endian section-payload encoder. Length-prefixed arrays use a
+/// `u64` element count so the reader can bound its allocation.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `f64` as raw IEEE-754 bits (bit-exact round trip, NaNs included).
+    pub fn put_f64_bits(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// `usize` values as `u64` (the format is 64-bit regardless of host).
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+    }
+
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Booleans as one byte each (0 or 1).
+    pub fn put_bools(&mut self, v: &[bool]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.push(u8::from(x));
+        }
+    }
+}
+
+/// Little-endian section-payload decoder over a borrowed buffer.
+///
+/// Every array read first checks `count · elem_size ≤ remaining bytes`
+/// **before** allocating — a corrupted count field produces a typed
+/// error, never an abort-on-OOM allocation.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if n > self.remaining() {
+            return Err(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64_bits(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// A `u64` the host must be able to index with.
+    pub fn get_usize(&mut self) -> Result<usize, String> {
+        usize::try_from(self.get_u64()?).map_err(|_| "64-bit value exceeds host usize".to_string())
+    }
+
+    /// Read a `u64` element count and bound it by the remaining bytes.
+    fn get_count(&mut self, elem_size: usize) -> Result<usize, String> {
+        let count = self.get_usize()?;
+        match count.checked_mul(elem_size) {
+            Some(total) if total <= self.remaining() => Ok(count),
+            _ => Err(format!(
+                "array count {count} (x{elem_size} B) exceeds the {} bytes remaining",
+                self.remaining()
+            )),
+        }
+    }
+
+    pub fn get_str(&mut self) -> Result<String, String> {
+        let len = self.get_count(1)?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "string is not valid UTF-8".to_string())
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>, String> {
+        let count = self.get_count(4)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(u32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>, String> {
+        let count = self.get_count(8)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let v = u64::from_le_bytes(self.take(8)?.try_into().unwrap());
+            out.push(
+                usize::try_from(v).map_err(|_| "64-bit value exceeds host usize".to_string())?,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>, String> {
+        let count = self.get_count(8)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(f64::from_bits(u64::from_le_bytes(
+                self.take(8)?.try_into().unwrap(),
+            )));
+        }
+        Ok(out)
+    }
+
+    pub fn get_bools(&mut self) -> Result<Vec<bool>, String> {
+        let count = self.get_count(1)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            match self.take(1)?[0] {
+                0 => out.push(false),
+                1 => out.push(true),
+                b => return Err(format!("bool byte {b} (want 0 or 1)")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Error unless the payload was consumed exactly.
+    pub fn finish(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after payload", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // The IEEE check value for the nine ASCII digits.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn header_round_trip_and_detects_flips() {
+        let h = Header {
+            kind: KIND_SNAPSHOT,
+            n_blocks: 17,
+        };
+        let enc = h.encode();
+        assert_eq!(Header::decode(&enc).unwrap(), h);
+        for i in 0..HEADER_LEN {
+            let mut bad = enc;
+            bad[i] ^= 0xFF;
+            assert!(Header::decode(&bad).is_err(), "flip at byte {i} accepted");
+        }
+        assert!(Header::decode(&enc[..HEADER_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn footer_round_trip_and_detects_flips() {
+        let f = Footer {
+            manifest_off: 40 + 3 * BLOCK_SIZE as u64,
+            manifest_len: 60,
+            manifest_crc: 0xDEAD_BEEF,
+        };
+        let enc = f.encode();
+        assert_eq!(Footer::decode(&enc).unwrap(), f);
+        for i in 0..FOOTER_LEN {
+            let mut bad = enc;
+            bad[i] ^= 0xFF;
+            assert!(Footer::decode(&bad).is_err(), "flip at byte {i} accepted");
+        }
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let entries = vec![
+            SectionEntry {
+                id: 1,
+                first_block: 0,
+                n_blocks: 1,
+                byte_len: 100,
+            },
+            SectionEntry {
+                id: 2,
+                first_block: 1,
+                n_blocks: 2,
+                byte_len: BLOCK_CAP as u64 + 5,
+            },
+        ];
+        let enc = encode_manifest(&entries);
+        assert_eq!(decode_manifest(&enc).unwrap(), entries);
+        // Truncated and padded manifests are rejected.
+        assert!(decode_manifest(&enc[..enc.len() - 1]).is_err());
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_manifest(&padded).is_err());
+        assert!(decode_manifest(&[]).is_err());
+    }
+
+    #[test]
+    fn byte_codec_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u32(7);
+        w.put_u64(u64::MAX);
+        w.put_f64_bits(-0.0);
+        w.put_str("pubmed-like");
+        w.put_u32s(&[3, 1, 4]);
+        w.put_usizes(&[0, 10, usize::MAX]);
+        w.put_f64s(&[1.5, f64::NAN]);
+        w.put_bools(&[true, false]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u32().unwrap(), 7);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f64_bits().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_str().unwrap(), "pubmed-like");
+        assert_eq!(r.get_u32s().unwrap(), vec![3, 1, 4]);
+        assert_eq!(r.get_usizes().unwrap(), vec![0, 10, usize::MAX]);
+        let f = r.get_f64s().unwrap();
+        assert_eq!(f[0], 1.5);
+        assert!(f[1].is_nan()); // NaN bits survive
+        assert_eq!(r.get_bools().unwrap(), vec![true, false]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn corrupt_counts_cannot_oversize_allocations() {
+        // A huge count must be rejected *before* allocation.
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // claims u64::MAX f64 elements
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_f64s().is_err());
+        assert!(ByteReader::new(&bytes).get_u32s().is_err());
+        assert!(ByteReader::new(&bytes).get_str().is_err());
+        // Non-0/1 bool bytes are rejected.
+        let mut w = ByteWriter::new();
+        w.put_u64(1);
+        let mut bytes = w.into_bytes();
+        bytes.push(7);
+        assert!(ByteReader::new(&bytes).get_bools().is_err());
+        // Trailing garbage is rejected by finish().
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let _ = r.get_u32().unwrap();
+        r.finish().unwrap();
+        let r2 = ByteReader::new(&bytes);
+        assert!(r2.finish().is_err());
+    }
+}

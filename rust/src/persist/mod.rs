@@ -1,0 +1,530 @@
+//! Crash-safe persistence: a versioned, checksummed on-disk format for
+//! frozen serving state and clustering checkpoints.
+//!
+//! ## What is stored
+//!
+//! * **Serving snapshots** ([`save_snapshot`] / [`load_snapshot`]) — a
+//!   complete [`crate::serve::ClusteredCorpus`] (corpus CSR, document
+//!   frequencies, term relabeling, assignment, frozen means, ρ, member
+//!   posting lists) plus the router's structural parameters
+//!   [`crate::serve::RouterParams`]. A loaded snapshot answers every
+//!   query **bit-identical** to the in-RAM snapshot it was saved from:
+//!   all floats round-trip as raw IEEE-754 bits, and the member
+//!   lists / relabeling are stored verbatim rather than recomputed.
+//! * **Clustering checkpoints** ([`checkpoint`]) — the full mid-run
+//!   state of the full-batch and mini-batch drivers (assignment, ρ,
+//!   invariance flags, means, RNG stream, decay counters, estimator
+//!   state), so an interrupted run resumes on a **bit-identical
+//!   trajectory** to the uninterrupted one.
+//!
+//! ## Format and crash safety
+//!
+//! One file layout serves all three kinds (see [`format`] for the byte
+//! layout): a 40-byte header (magic, version, endianness marker, kind),
+//! fixed 64 KiB data blocks each carrying its own CRC32, a section
+//! manifest, and a fixed 32-byte footer. Publication is atomic:
+//! write-to-temp → fsync → rename ([`writer`]), so a crash at any stage
+//! leaves the previously published file untouched. Loading is paranoid
+//! by default ([`reader`]): every checksum is verified and every
+//! decoded value is structurally validated (offsets in bounds, ids
+//! `< K`, member lists a partition consistent with the assignment,
+//! df-ascending relabeling inverse-consistent) **before** any value
+//! reaches an `unsafe`-using kernel — a corrupt or truncated file is a
+//! typed [`SkmError::CorruptSnapshot`], never a panic, never UB, never
+//! a partially-built snapshot.
+//!
+//! Fail-point sites for the crash harness (`rust/tests/persist.rs`,
+//! cargo feature `failpoints`): `persist.write_block`, `persist.fsync`,
+//! `persist.rename`, `persist.read_block`.
+
+pub mod checkpoint;
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+use crate::error::{SkmError, SkmResult};
+use crate::index::MeanSet;
+use crate::persist::format::{ByteReader, ByteWriter, KIND_SNAPSHOT};
+use crate::persist::reader::{read_blocks_file, RawFile};
+use crate::serve::{ClusteredCorpus, RouterParams};
+use crate::sparse::{CsrMatrix, Dataset};
+use std::path::Path;
+
+/// Section ids shared by the snapshot and checkpoint codecs.
+pub(crate) mod sec {
+    pub const META: u32 = 1;
+    pub const CORPUS_INDPTR: u32 = 2;
+    pub const CORPUS_INDICES: u32 = 3;
+    pub const CORPUS_VALUES: u32 = 4;
+    pub const DF: u32 = 5;
+    pub const ORIG_TERM: u32 = 6;
+    pub const ASSIGN: u32 = 7;
+    pub const MEANS_INDPTR: u32 = 8;
+    pub const MEANS_INDICES: u32 = 9;
+    pub const MEANS_VALUES: u32 = 10;
+    pub const MEAN_SIZES: u32 = 11;
+    pub const RHO: u32 = 12;
+    pub const MEMBER_OFFSETS: u32 = 13;
+    pub const MEMBER_IDS: u32 = 14;
+    pub const ORIG_TO_TERM: u32 = 15;
+    pub const XSTATE: u32 = 16;
+    pub const MEANS_MOVED: u32 = 17;
+    pub const DRIVER: u32 = 18;
+    pub const FINGERPRINT: u32 = 19;
+    pub const MB_DRIVER: u32 = 20;
+}
+
+fn corrupt(path: &Path, section: &str, detail: impl Into<String>) -> SkmError {
+    SkmError::corrupt_snapshot(path.display().to_string(), section, detail)
+}
+
+/// Decode one section as a `u32` array (exact payload).
+pub(crate) fn section_u32s(
+    raw: &RawFile,
+    id: u32,
+    name: &str,
+    path: &Path,
+) -> SkmResult<Vec<u32>> {
+    let mut r = ByteReader::new(raw.section(id, name, path)?);
+    let v = r.get_u32s().map_err(|d| corrupt(path, name, d))?;
+    r.finish().map_err(|d| corrupt(path, name, d))?;
+    Ok(v)
+}
+
+/// Decode one section as a `usize` (stored `u64`) array.
+pub(crate) fn section_usizes(
+    raw: &RawFile,
+    id: u32,
+    name: &str,
+    path: &Path,
+) -> SkmResult<Vec<usize>> {
+    let mut r = ByteReader::new(raw.section(id, name, path)?);
+    let v = r.get_usizes().map_err(|d| corrupt(path, name, d))?;
+    r.finish().map_err(|d| corrupt(path, name, d))?;
+    Ok(v)
+}
+
+/// Decode one section as an `f64` array (raw bits).
+pub(crate) fn section_f64s(
+    raw: &RawFile,
+    id: u32,
+    name: &str,
+    path: &Path,
+) -> SkmResult<Vec<f64>> {
+    let mut r = ByteReader::new(raw.section(id, name, path)?);
+    let v = r.get_f64s().map_err(|d| corrupt(path, name, d))?;
+    r.finish().map_err(|d| corrupt(path, name, d))?;
+    Ok(v)
+}
+
+/// Decode one section as a `bool` array.
+pub(crate) fn section_bools(
+    raw: &RawFile,
+    id: u32,
+    name: &str,
+    path: &Path,
+) -> SkmResult<Vec<bool>> {
+    let mut r = ByteReader::new(raw.section(id, name, path)?);
+    let v = r.get_bools().map_err(|d| corrupt(path, name, d))?;
+    r.finish().map_err(|d| corrupt(path, name, d))?;
+    Ok(v)
+}
+
+/// Validate raw CSR arrays and assemble the matrix. This is the
+/// soundness gate: [`CsrMatrix::from_raw`] only debug-asserts, and the
+/// unchecked gather kernels downstream rely on `indices < n_cols` and
+/// monotone `indptr` — so every invariant is release-checked here with
+/// a typed error before the matrix exists.
+pub(crate) fn validated_csr(
+    path: &Path,
+    name: &str,
+    n_rows: usize,
+    n_cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+) -> SkmResult<CsrMatrix> {
+    let c = |d: String| corrupt(path, name, d);
+    if indptr.len() != n_rows + 1 {
+        return Err(c(format!(
+            "indptr has {} entries for {n_rows} rows (want {})",
+            indptr.len(),
+            n_rows + 1
+        )));
+    }
+    if indptr[0] != 0 {
+        return Err(c(format!("indptr[0] = {} (want 0)", indptr[0])));
+    }
+    if let Some(r) = indptr.windows(2).position(|w| w[0] > w[1]) {
+        return Err(c(format!("indptr decreases at row {r}")));
+    }
+    if *indptr.last().unwrap() != indices.len() || indices.len() != values.len() {
+        return Err(c(format!(
+            "nnz mismatch: indptr ends at {}, {} indices, {} values",
+            indptr.last().unwrap(),
+            indices.len(),
+            values.len()
+        )));
+    }
+    for r in 0..n_rows {
+        let seg = &indices[indptr[r]..indptr[r + 1]];
+        if !seg.windows(2).all(|w| w[0] < w[1]) {
+            return Err(c(format!("row {r} term ids not strictly ascending")));
+        }
+        if let Some(&bad) = seg.iter().find(|&&t| t as usize >= n_cols) {
+            return Err(c(format!("row {r} term id {bad} >= D={n_cols}")));
+        }
+    }
+    // The feature space is nonnegative (tf-idf weights, means of
+    // nonnegative unit vectors); the router's Region-3 upper bound
+    // relies on it, so enforce it on load.
+    if let Some(&bad) = values.iter().find(|v| !v.is_finite() || **v < 0.0) {
+        return Err(c(format!("non-finite or negative feature value {bad}")));
+    }
+    Ok(CsrMatrix::from_raw(n_cols, indptr, indices, values))
+}
+
+/// Serialize a frozen serving snapshot and its router parameters,
+/// publishing atomically at `path`. Returns the file size in bytes.
+pub fn save_snapshot(
+    path: &Path,
+    snap: &ClusteredCorpus,
+    params: RouterParams,
+) -> SkmResult<u64> {
+    let (n_cols, x_indptr, x_indices, x_values) = snap.ds.x.raw_parts();
+    debug_assert_eq!(n_cols, snap.ds.d());
+    let (m_cols, m_indptr, m_indices, m_values) = snap.means.m.raw_parts();
+    debug_assert_eq!(m_cols, snap.ds.d());
+    let (member_offsets, member_ids, orig_to_term) = snap.persisted_parts();
+
+    let mut meta = ByteWriter::new();
+    meta.put_u64(snap.ds.n() as u64);
+    meta.put_u64(snap.ds.d() as u64);
+    meta.put_u64(snap.k as u64);
+    meta.put_f64_bits(snap.objective);
+    // usize::MAX (the exact-routing sentinel) maps to u64::MAX so the
+    // encoding is host-width independent.
+    meta.put_u64(if params.t_th == usize::MAX {
+        u64::MAX
+    } else {
+        params.t_th as u64
+    });
+    meta.put_f64_bits(params.v_th);
+    meta.put_str(&snap.ds.name);
+
+    let enc_u32s = |v: &[u32]| {
+        let mut w = ByteWriter::new();
+        w.put_u32s(v);
+        w.into_bytes()
+    };
+    let enc_usizes = |v: &[usize]| {
+        let mut w = ByteWriter::new();
+        w.put_usizes(v);
+        w.into_bytes()
+    };
+    let enc_f64s = |v: &[f64]| {
+        let mut w = ByteWriter::new();
+        w.put_f64s(v);
+        w.into_bytes()
+    };
+
+    let sections = vec![
+        (sec::META, meta.into_bytes()),
+        (sec::CORPUS_INDPTR, enc_usizes(x_indptr)),
+        (sec::CORPUS_INDICES, enc_u32s(x_indices)),
+        (sec::CORPUS_VALUES, enc_f64s(x_values)),
+        (sec::DF, enc_u32s(&snap.ds.df)),
+        (sec::ORIG_TERM, enc_u32s(&snap.ds.orig_term)),
+        (sec::ASSIGN, enc_u32s(&snap.assign)),
+        (sec::MEANS_INDPTR, enc_usizes(m_indptr)),
+        (sec::MEANS_INDICES, enc_u32s(m_indices)),
+        (sec::MEANS_VALUES, enc_f64s(m_values)),
+        (sec::MEAN_SIZES, enc_u32s(&snap.means.sizes)),
+        (sec::RHO, enc_f64s(&snap.rho)),
+        (sec::MEMBER_OFFSETS, enc_usizes(member_offsets)),
+        (sec::MEMBER_IDS, enc_u32s(member_ids)),
+        (sec::ORIG_TO_TERM, enc_u32s(orig_to_term)),
+    ];
+    writer::write_blocks_file(path, KIND_SNAPSHOT, &sections)
+}
+
+/// Load, checksum-verify, and structurally validate a serving snapshot.
+/// On success the returned snapshot serves every query bit-identical to
+/// the one that was saved; on any defect the result is a typed
+/// [`SkmError::CorruptSnapshot`] and no partial snapshot escapes.
+pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> {
+    let raw = read_blocks_file(path, KIND_SNAPSHOT)?;
+    let c = |section: &str, d: String| corrupt(path, section, d);
+
+    // META.
+    let mut meta = ByteReader::new(raw.section(sec::META, "meta", path)?);
+    let meta_field = |what: &str, r: Result<u64, String>| -> SkmResult<u64> {
+        r.map_err(|d| c("meta", format!("{what}: {d}")))
+    };
+    let n = usize::try_from(meta_field("n", meta.get_u64())?)
+        .map_err(|_| c("meta", "corpus size exceeds host usize".to_string()))?;
+    let d = usize::try_from(meta_field("d", meta.get_u64())?)
+        .map_err(|_| c("meta", "vocabulary size exceeds host usize".to_string()))?;
+    let k = usize::try_from(meta_field("k", meta.get_u64())?)
+        .map_err(|_| c("meta", "cluster count exceeds host usize".to_string()))?;
+    let objective = f64::from_bits(meta_field("objective", meta.get_u64())?);
+    let t_th_raw = meta_field("t_th", meta.get_u64())?;
+    let v_th = f64::from_bits(meta_field("v_th", meta.get_u64())?);
+    let name = meta.get_str().map_err(|d| c("meta", d))?;
+    meta.finish().map_err(|d| c("meta", d))?;
+    if k == 0 {
+        return Err(c("meta", "K = 0".to_string()));
+    }
+    if n == 0 {
+        return Err(c("meta", "empty corpus".to_string()));
+    }
+    if !objective.is_finite() {
+        return Err(c("meta", format!("non-finite objective {objective}")));
+    }
+    let t_th = if t_th_raw == u64::MAX {
+        usize::MAX
+    } else {
+        let t = usize::try_from(t_th_raw)
+            .map_err(|_| c("meta", "t_th exceeds host usize".to_string()))?;
+        if t > d {
+            return Err(c("meta", format!("t_th = {t} > D = {d}")));
+        }
+        t
+    };
+    if !v_th.is_finite() || v_th <= 0.0 {
+        return Err(c("meta", format!("v_th = {v_th} (want positive finite)")));
+    }
+
+    // Corpus CSR + relabeling.
+    let x = validated_csr(
+        path,
+        "corpus",
+        n,
+        d,
+        section_usizes(&raw, sec::CORPUS_INDPTR, "corpus", path)?,
+        section_u32s(&raw, sec::CORPUS_INDICES, "corpus", path)?,
+        section_f64s(&raw, sec::CORPUS_VALUES, "corpus", path)?,
+    )?;
+    let df = section_u32s(&raw, sec::DF, "df", path)?;
+    if df.len() != d {
+        return Err(c("df", format!("{} entries for D = {d}", df.len())));
+    }
+    if df.windows(2).any(|w| w[0] > w[1]) {
+        let detail = "document frequencies not ascending in term id \
+                      (the df-ascending relabeling is broken)";
+        return Err(c("df", detail.to_string()));
+    }
+    if let Some(&bad) = df.iter().find(|&&f| f == 0 || f as usize > n) {
+        return Err(c("df", format!("df value {bad} outside [1, N={n}]")));
+    }
+    let orig_term = section_u32s(&raw, sec::ORIG_TERM, "orig_term", path)?;
+    if orig_term.len() != d {
+        return Err(c("orig_term", format!("{} entries for D = {d}", orig_term.len())));
+    }
+
+    // Assignment.
+    let assign = section_u32s(&raw, sec::ASSIGN, "assign", path)?;
+    if assign.len() != n {
+        return Err(c("assign", format!("{} entries for N = {n}", assign.len())));
+    }
+    if let Some(&bad) = assign.iter().find(|&&a| a as usize >= k) {
+        return Err(c("assign", format!("cluster id {bad} >= K = {k}")));
+    }
+
+    // Frozen means.
+    let m = validated_csr(
+        path,
+        "means",
+        k,
+        d,
+        section_usizes(&raw, sec::MEANS_INDPTR, "means", path)?,
+        section_u32s(&raw, sec::MEANS_INDICES, "means", path)?,
+        section_f64s(&raw, sec::MEANS_VALUES, "means", path)?,
+    )?;
+    let sizes = section_u32s(&raw, sec::MEAN_SIZES, "mean_sizes", path)?;
+    if sizes.len() != k {
+        return Err(c("mean_sizes", format!("{} entries for K = {k}", sizes.len())));
+    }
+
+    // ρ.
+    let rho = section_f64s(&raw, sec::RHO, "rho", path)?;
+    if rho.len() != n {
+        return Err(c("rho", format!("{} entries for N = {n}", rho.len())));
+    }
+    if let Some(&bad) = rho.iter().find(|v| !v.is_finite()) {
+        return Err(c("rho", format!("non-finite rho value {bad}")));
+    }
+
+    // Member posting lists: an ascending partition of [0, N) that is
+    // exactly consistent with `assign` and `sizes`.
+    let member_offsets = section_usizes(&raw, sec::MEMBER_OFFSETS, "members", path)?;
+    if member_offsets.len() != k + 1 {
+        return Err(c("members", format!("{} offsets for K = {k}", member_offsets.len())));
+    }
+    if member_offsets[0] != 0 || *member_offsets.last().unwrap() != n {
+        return Err(c("members", format!(
+            "offsets span [{}, {}] (want [0, {n}])",
+            member_offsets[0],
+            member_offsets.last().unwrap()
+        )));
+    }
+    if member_offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(c("members", "offsets decrease".to_string()));
+    }
+    let member_ids = section_u32s(&raw, sec::MEMBER_IDS, "members", path)?;
+    if member_ids.len() != n {
+        return Err(c("members", format!("{} member ids for N = {n}", member_ids.len())));
+    }
+    for j in 0..k {
+        let seg = &member_ids[member_offsets[j]..member_offsets[j + 1]];
+        if sizes[j] as usize != seg.len() {
+            return Err(c("members", format!(
+                "cluster {j}: size {} but {} members listed",
+                sizes[j],
+                seg.len()
+            )));
+        }
+        if !seg.windows(2).all(|w| w[0] < w[1]) {
+            return Err(c("members", format!("cluster {j}: member ids not strictly ascending")));
+        }
+        for &i in seg {
+            if i as usize >= n {
+                return Err(c("members", format!("cluster {j}: member id {i} >= N = {n}")));
+            }
+            if assign[i as usize] as usize != j {
+                return Err(c("members", format!(
+                    "doc {i} listed in cluster {j} but assigned to {}",
+                    assign[i as usize]
+                )));
+            }
+        }
+    }
+
+    // Inverse relabeling: orig_to_term must invert orig_term exactly,
+    // in both directions, and cover exactly [0, max original id].
+    let orig_to_term = section_u32s(&raw, sec::ORIG_TO_TERM, "orig_to_term", path)?;
+    let want_len = orig_term.iter().max().map(|&t| t as usize + 1).unwrap_or(0);
+    if orig_to_term.len() != want_len {
+        return Err(c("orig_to_term", format!(
+            "{} entries, want {want_len} (max original term id + 1)",
+            orig_to_term.len()
+        )));
+    }
+    for (t, &o) in orig_term.iter().enumerate() {
+        if orig_to_term[o as usize] != t as u32 {
+            return Err(c("orig_to_term", format!(
+                "original term {o} maps to {} but orig_term[{t}] = {o}",
+                orig_to_term[o as usize]
+            )));
+        }
+    }
+    for (o, &t) in orig_to_term.iter().enumerate() {
+        if t != u32::MAX && (t as usize >= d || orig_term[t as usize] as usize != o) {
+            return Err(c("orig_to_term", format!(
+                "entry {o} -> {t} is not the inverse of orig_term"
+            )));
+        }
+    }
+
+    let ds = Dataset {
+        x,
+        df,
+        orig_term,
+        name,
+    };
+    let means = MeanSet {
+        m,
+        moved: vec![false; k], // frozen by construction
+        sizes,
+    };
+    let snap = ClusteredCorpus::from_validated_parts(
+        ds,
+        assign,
+        k,
+        means,
+        rho,
+        objective,
+        member_offsets,
+        member_ids,
+        orig_to_term,
+    );
+    Ok((snap, RouterParams { t_th, v_th }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate, tiny};
+    use crate::sparse::build_dataset;
+    use std::path::PathBuf;
+
+    fn tmp_file(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("skm_persist_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("snap.skm")
+    }
+
+    fn snapshot() -> ClusteredCorpus {
+        let c = generate(&tiny(41));
+        let ds = build_dataset("tiny", c.n_terms, &c.docs);
+        let n = ds.n();
+        let assign: Vec<u32> = (0..n).map(|i| (i % 5) as u32).collect();
+        ClusteredCorpus::from_assignment(ds, assign, 5)
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_exact() {
+        let snap = snapshot();
+        let params = RouterParams {
+            t_th: snap.ds.d() / 2,
+            v_th: 0.25,
+        };
+        let path = tmp_file("rt");
+        let bytes = save_snapshot(&path, &snap, params).unwrap();
+        assert!(bytes > 0);
+        let (loaded, p2) = load_snapshot(&path).unwrap();
+        assert_eq!(p2.t_th, params.t_th);
+        assert_eq!(p2.v_th.to_bits(), params.v_th.to_bits());
+        assert_eq!(loaded.k, snap.k);
+        assert_eq!(loaded.assign, snap.assign);
+        assert_eq!(loaded.objective.to_bits(), snap.objective.to_bits());
+        assert_eq!(loaded.ds.x, snap.ds.x);
+        assert_eq!(loaded.ds.df, snap.ds.df);
+        assert_eq!(loaded.ds.orig_term, snap.ds.orig_term);
+        assert_eq!(loaded.ds.name, snap.ds.name);
+        assert_eq!(loaded.means.m, snap.means.m);
+        assert_eq!(loaded.means.sizes, snap.means.sizes);
+        assert_eq!(loaded.means.n_moving(), 0);
+        assert_eq!(
+            loaded.rho.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            snap.rho.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        for j in 0..snap.k {
+            assert_eq!(loaded.members(j), snap.members(j));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exact_params_sentinel_round_trips() {
+        let snap = snapshot();
+        let path = tmp_file("exact");
+        save_snapshot(&path, &snap, RouterParams::exact()).unwrap();
+        let (_, p) = load_snapshot(&path).unwrap();
+        assert_eq!(p.t_th, usize::MAX);
+        assert_eq!(p.v_th, 1.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_checkpoint_kind() {
+        let path = tmp_file("kind");
+        writer::write_blocks_file(&path, format::KIND_CLUSTER_CKPT, &[(1, vec![0u8; 8])])
+            .unwrap();
+        match load_snapshot(&path).unwrap_err() {
+            SkmError::CorruptSnapshot { section, .. } => assert_eq!(section, "header"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

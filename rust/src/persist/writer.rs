@@ -1,0 +1,215 @@
+//! Atomic block-file writer: write-to-temp → fsync → rename.
+//!
+//! [`write_blocks_file`] never touches the destination path until the
+//! complete, checksummed temp file is durable: the payload is chunked
+//! into fixed 64 KiB blocks (per-block CRC32), followed by the section
+//! manifest and the fixed footer, all written to a hidden sibling temp
+//! file; the file is `fsync`ed, then atomically `rename`d over the
+//! destination, then the parent directory is fsynced (best effort) so
+//! the rename itself is durable. A crash — or an injected fault — at
+//! *any* stage leaves the previously published file untouched, and the
+//! temp file is removed on every error path.
+//!
+//! Fail-point sites (cargo feature `failpoints`, see
+//! [`crate::util::failpoint`]): `persist.write_block` (arg = global
+//! block index), `persist.fsync`, `persist.rename`.
+
+use crate::error::{SkmError, SkmResult};
+use crate::persist::format::{
+    crc32, encode_manifest, Footer, Header, SectionEntry, BLOCK_CAP, BLOCK_SIZE, HEADER_LEN,
+};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Removes the temp file on drop unless disarmed — the error-path
+/// cleanup for every failure between `create` and `rename`.
+struct TempGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl Drop for TempGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Best-effort parent-directory fsync after the rename (makes the new
+/// directory entry durable on unix; silently a no-op elsewhere and on
+/// filesystems that reject directory fsync).
+fn sync_parent_dir(path: &Path) {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = path;
+    }
+}
+
+/// The hidden sibling temp path: same directory (rename must not cross
+/// filesystems), name tagged with the pid so concurrent writers of
+/// *different* files never collide.
+fn temp_path_for(path: &Path) -> SkmResult<PathBuf> {
+    let file_name = path.file_name().ok_or_else(|| {
+        SkmError::invalid_config(format!(
+            "snapshot path {} has no file name component",
+            path.display()
+        ))
+    })?;
+    let tmp_name = format!(
+        ".{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    );
+    Ok(match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.join(tmp_name),
+        _ => PathBuf::from(tmp_name),
+    })
+}
+
+/// Write `sections` (id, payload) as a version-1 block file at `path`,
+/// atomically. Returns the total file size in bytes. On any error the
+/// destination is untouched and the temp file is removed.
+pub fn write_blocks_file(path: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u64> {
+    let tmp = temp_path_for(path)?;
+    let mut guard = TempGuard {
+        path: tmp.clone(),
+        armed: true,
+    };
+    let bytes = write_temp(&tmp, kind, sections)?;
+    crate::failpoint_res!("persist.rename", 0u64);
+    fs::rename(&tmp, path).map_err(|e| {
+        SkmError::io(
+            format!("rename snapshot temp over {}", path.display()),
+            e,
+        )
+    })?;
+    guard.armed = false; // published — the temp path no longer exists
+    sync_parent_dir(path);
+    Ok(bytes)
+}
+
+/// Write and fsync the complete temp file (header, blocks, manifest,
+/// footer). The caller owns cleanup-on-error via [`TempGuard`].
+fn write_temp(tmp: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u64> {
+    let ioe = |what: &str, e: std::io::Error| {
+        SkmError::io(format!("{what} {}", tmp.display()), e)
+    };
+
+    // Lay the sections out first: each starts on a fresh block boundary.
+    let mut entries = Vec::with_capacity(sections.len());
+    let mut cursor = 0u64;
+    for (id, payload) in sections {
+        let nb = payload.len().div_ceil(BLOCK_CAP) as u64;
+        entries.push(SectionEntry {
+            id: *id,
+            first_block: cursor,
+            n_blocks: nb,
+            byte_len: payload.len() as u64,
+        });
+        cursor += nb;
+    }
+    let n_blocks = cursor;
+    let manifest = encode_manifest(&entries);
+    let manifest_off = (HEADER_LEN + n_blocks as usize * BLOCK_SIZE) as u64;
+
+    let f = File::create(tmp).map_err(|e| ioe("create snapshot temp", e))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&Header { kind, n_blocks }.encode())
+        .map_err(|e| ioe("write snapshot header to", e))?;
+
+    let zeros = [0u8; BLOCK_CAP];
+    let mut block_idx = 0u64;
+    for (_, payload) in sections {
+        let mut off = 0usize;
+        // One iteration per block; empty sections occupy zero blocks.
+        while off < payload.len() {
+            crate::failpoint_res!("persist.write_block", block_idx);
+            let chunk = &payload[off..(off + BLOCK_CAP).min(payload.len())];
+            let mut hdr = [0u8; 8];
+            hdr[0..4].copy_from_slice(&(chunk.len() as u32).to_le_bytes());
+            hdr[4..8].copy_from_slice(&crc32(chunk).to_le_bytes());
+            w.write_all(&hdr)
+                .map_err(|e| ioe("write snapshot block to", e))?;
+            w.write_all(chunk)
+                .map_err(|e| ioe("write snapshot block to", e))?;
+            if chunk.len() < BLOCK_CAP {
+                w.write_all(&zeros[..BLOCK_CAP - chunk.len()])
+                    .map_err(|e| ioe("write snapshot block to", e))?;
+            }
+            off += chunk.len();
+            block_idx += 1;
+        }
+    }
+    debug_assert_eq!(block_idx, n_blocks);
+
+    w.write_all(&manifest)
+        .map_err(|e| ioe("write snapshot manifest to", e))?;
+    let footer = Footer {
+        manifest_off,
+        manifest_len: manifest.len() as u64,
+        manifest_crc: crc32(&manifest),
+    };
+    w.write_all(&footer.encode())
+        .map_err(|e| ioe("write snapshot footer to", e))?;
+    w.flush().map_err(|e| ioe("flush snapshot temp", e))?;
+    let f = w
+        .into_inner()
+        .map_err(|e| ioe("flush snapshot temp", e.into_error()))?;
+    crate::failpoint_res!("persist.fsync", 0u64);
+    f.sync_all().map_err(|e| ioe("fsync snapshot temp", e))?;
+    Ok(manifest_off + manifest.len() as u64 + crate::persist::format::FOOTER_LEN as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("skm_writer_{}_{tag}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_atomically_and_cleans_temp() {
+        let dir = tmp_dir("basic");
+        let path = dir.join("a.skm");
+        let sections = vec![
+            (1u32, vec![1u8, 2, 3]),
+            (2u32, vec![9u8; BLOCK_CAP + 10]), // spans two blocks
+            (3u32, Vec::new()),                // zero blocks
+        ];
+        let bytes = write_blocks_file(&path, 1, &sections).unwrap();
+        assert_eq!(fs::metadata(&path).unwrap().len(), bytes);
+        // 1 + 2 + 0 = 3 data blocks
+        let expect = (HEADER_LEN + 3 * BLOCK_SIZE) as u64
+            + (4 + 3 * crate::persist::format::MANIFEST_ENTRY_LEN) as u64
+            + crate::persist::format::FOOTER_LEN as u64;
+        assert_eq!(bytes, expect);
+        // No temp litter.
+        let litter: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "temp files left behind: {litter:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_pathless_destination() {
+        assert!(write_blocks_file(Path::new("/"), 1, &[]).is_err());
+    }
+}

@@ -76,8 +76,9 @@ use crate::index::{EsIndex, ObjInvIndex, PartialIndex};
 use crate::metrics::counters::OpCounters;
 use crate::metrics::perf::PhaseTimes;
 use crate::serve::snapshot::{ClusteredCorpus, Query};
+use crate::util::log::log_once;
 use std::mem::size_of;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Absolute guard band on the upper-bound prune (cosine scores live in
 /// `[0, 1]`): a centroid survives when `ub ≥ τ − UB_GUARD`. Large
@@ -188,15 +189,23 @@ impl RouterParams {
         match est {
             Ok(p) if p.v_th.is_finite() && p.v_th > 0.0 => p,
             Ok(p) => {
-                eprintln!(
-                    "skm: parameter estimation returned unusable v_th={}; \
-                     serving with exact routing parameters",
-                    p.v_th
+                log_once(
+                    "router.estimate.unusable",
+                    &format!(
+                        "parameter estimation returned unusable v_th={}; \
+                         serving with exact routing parameters",
+                        p.v_th
+                    ),
                 );
                 Self::exact()
             }
             Err(e) => {
-                eprintln!("skm: parameter estimation failed ({e}); serving with exact routing parameters");
+                log_once(
+                    "router.estimate.failed",
+                    &format!(
+                        "parameter estimation failed ({e}); serving with exact routing parameters"
+                    ),
+                );
                 Self::exact()
             }
         }
@@ -244,9 +253,6 @@ pub struct Router<'a> {
     /// How many queries were served by the exact-scan fallback because
     /// the pruned path failed (see the module's degradation section).
     fallbacks: AtomicU64,
-    /// One-time flag so the fallback reason is logged once, not per
-    /// query at serving rates.
-    fallback_logged: AtomicBool,
 }
 
 impl<'a> Router<'a> {
@@ -279,7 +285,6 @@ impl<'a> Router<'a> {
             idx,
             scratch: ScratchPool::new(),
             fallbacks: AtomicU64::new(0),
-            fallback_logged: AtomicBool::new(false),
         })
     }
 
@@ -322,12 +327,16 @@ impl<'a> Router<'a> {
         self.fallbacks.load(Ordering::Relaxed)
     }
 
-    /// Record a pruned-path failure and log the first one.
+    /// Record a pruned-path failure and log the first one (deduped
+    /// process-wide by [`log_once`], not per router — a fleet of shard
+    /// routers degrading for the same reason should not multiply the
+    /// line; [`Router::fallback_count`] carries the per-router signal).
     fn note_fallback(&self, e: &SkmError) {
         self.fallbacks.fetch_add(1, Ordering::Relaxed);
-        if !self.fallback_logged.swap(true, Ordering::Relaxed) {
-            eprintln!("skm: routing degraded to the exact scan ({e}); results are unaffected");
-        }
+        log_once(
+            "router.fallback",
+            &format!("routing degraded to the exact scan ({e}); results are unaffected"),
+        );
     }
 
     /// Route a query: the top-`p` centroids with **exact** cosine

@@ -244,6 +244,50 @@ impl ClusteredCorpus {
         &self.member_ids[self.member_offsets[j]..self.member_offsets[j + 1]]
     }
 
+    /// The private posting/relabeling arrays `(member_offsets,
+    /// member_ids, orig_to_term)`, for the persistence serializer. The
+    /// snapshot stores these verbatim instead of recomputing them on
+    /// load — the round-trip contract is "same stored state", not "same
+    /// recomputation".
+    pub(crate) fn persisted_parts(&self) -> (&[usize], &[u32], &[u32]) {
+        (&self.member_offsets, &self.member_ids, &self.orig_to_term)
+    }
+
+    /// Reassemble a snapshot from fully-validated parts (the persistence
+    /// reader's constructor). Private to the crate: the reader has
+    /// already proven every structural invariant (`assign[i] < k`,
+    /// member lists an ascending partition consistent with `assign`,
+    /// `orig_to_term` inverse-consistent with `ds.orig_term`, ρ finite)
+    /// with typed errors; this constructor only debug-asserts the
+    /// cheapest of them as a belt-and-braces tripwire.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_validated_parts(
+        ds: Dataset,
+        assign: Vec<u32>,
+        k: usize,
+        means: MeanSet,
+        rho: Vec<f64>,
+        objective: f64,
+        member_offsets: Vec<usize>,
+        member_ids: Vec<u32>,
+        orig_to_term: Vec<u32>,
+    ) -> Self {
+        debug_assert_eq!(assign.len(), ds.n());
+        debug_assert_eq!(member_offsets.len(), k + 1);
+        debug_assert_eq!(member_ids.len(), ds.n());
+        Self {
+            ds,
+            assign,
+            k,
+            means,
+            rho,
+            objective,
+            member_offsets,
+            member_ids,
+            orig_to_term,
+        }
+    }
+
     /// Embed a raw bag-of-words document — `(original term id, count)`
     /// pairs, e.g. straight out of [`crate::corpus::read_uci_bow`] — into
     /// the frozen tf-idf feature space: original ids are mapped through

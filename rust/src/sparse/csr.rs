@@ -89,6 +89,14 @@ impl CsrMatrix {
         }
     }
 
+    /// The raw CSR arrays `(n_cols, indptr, indices, values)`, for the
+    /// persistence layer's serializer. Read-only: mutating entry points
+    /// stay [`CsrMatrix::from_rows`] / [`CsrMatrix::from_raw`] so the
+    /// sortedness invariant has exactly two producers.
+    pub fn raw_parts(&self) -> (usize, &[usize], &[u32], &[f64]) {
+        (self.n_cols, &self.indptr, &self.indices, &self.values)
+    }
+
     pub fn n_rows(&self) -> usize {
         self.indptr.len() - 1
     }

@@ -166,6 +166,33 @@ impl Args {
     pub fn top_k(&self) -> usize {
         self.get_parsed::<usize>("top-k", 10)
     }
+
+    /// `--save PATH` — persistence destination. For `skm serve`: write
+    /// the frozen serving snapshot there. For `skm cluster`: write
+    /// (periodic + final) run checkpoints there. The write is atomic
+    /// (temp + fsync + rename); see `persist`.
+    pub fn save_path(&self) -> Option<&str> {
+        self.get("save")
+    }
+
+    /// `--load PATH` — serve from a persisted snapshot instead of
+    /// clustering (skips dataset building entirely; `skm serve` only).
+    pub fn load_path(&self) -> Option<&str> {
+        self.get("load")
+    }
+
+    /// `--checkpoint-every N` — rounds between periodic checkpoints
+    /// (requires `--save`; default 10 when `--save` is given).
+    pub fn checkpoint_every(&self) -> crate::error::SkmResult<Option<usize>> {
+        self.try_parsed::<usize>("checkpoint-every")
+    }
+
+    /// `--resume PATH` — resume a checkpointed `skm cluster` run; the
+    /// checkpoint's fingerprint must match the current configuration
+    /// and corpus.
+    pub fn resume_path(&self) -> Option<&str> {
+        self.get("resume")
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +220,31 @@ mod tests {
         assert_eq!(a.subcommand(), None);
         assert_eq!(a.get_parsed::<f64>("alpha", 1.5), 1.5);
         assert_eq!(a.get_or("algo", "mivi"), "mivi");
+    }
+
+    #[test]
+    fn persistence_accessors() {
+        let a = Args::parse_from([
+            "cluster",
+            "--save",
+            "out.ckpt",
+            "--checkpoint-every",
+            "5",
+            "--resume",
+            "in.ckpt",
+        ]);
+        assert_eq!(a.save_path(), Some("out.ckpt"));
+        assert_eq!(a.resume_path(), Some("in.ckpt"));
+        assert_eq!(a.checkpoint_every().unwrap(), Some(5));
+        assert_eq!(a.load_path(), None);
+
+        let b = Args::parse_from(["serve", "--load", "snap.skm"]);
+        assert_eq!(b.load_path(), Some("snap.skm"));
+        assert_eq!(b.save_path(), None);
+        assert_eq!(b.checkpoint_every().unwrap(), None);
+
+        let bad = Args::parse_from(["cluster", "--checkpoint-every", "soon"]);
+        assert!(bad.checkpoint_every().is_err());
     }
 
     #[test]

@@ -34,6 +34,18 @@
 //! [`SkmError::FaultInjected`] at `failpoint_res!` sites (and panics at
 //! `failpoint!` sites, which cannot return), `delay:<ms>` sleeps —
 //! for perturbing worker scheduling without changing results.
+//!
+//! ## Persistence sites
+//!
+//! The crash-safety suite (`rust/tests/persist.rs`) kills the snapshot
+//! writer at every stage through four `failpoint_res!` sites in
+//! [`crate::persist`]: `persist.write_block` (arg = block index, fired
+//! before each data block is written), `persist.fsync` (before the
+//! temp file is synced), `persist.rename` (before the atomic
+//! temp→final rename), and `persist.read_block` (arg = block index, on
+//! the load path). An `error` injected at any write-path site must
+//! leave the previously published snapshot untouched and loadable —
+//! that is the atomic-publish contract under test.
 
 #[cfg(feature = "failpoints")]
 mod imp {
@@ -72,7 +84,10 @@ mod imp {
     fn parse_env() -> HashMap<String, FailSpec> {
         match std::env::var("SKM_FAILPOINTS") {
             Ok(s) => parse_list(&s).unwrap_or_else(|e| {
-                eprintln!("skm: ignoring invalid SKM_FAILPOINTS: {e}");
+                crate::util::log::log_once(
+                    "failpoint.env",
+                    &format!("ignoring invalid SKM_FAILPOINTS: {e}"),
+                );
                 HashMap::new()
             }),
             Err(_) => HashMap::new(),

@@ -1,0 +1,72 @@
+//! Deduplicated, silenceable diagnostics for library code.
+//!
+//! Library modules must not write raw `eprintln!` lines: a warning that
+//! fires once per query (or once per checkpoint round) floods stderr,
+//! and embedders need a single switch to silence the crate entirely.
+//! [`log_once`] is that policy in one place — each *site* string prints
+//! at most once per process, and `SKM_QUIET=1` suppresses everything.
+//!
+//! The message is advisory only: callers already carry the real outcome
+//! through typed [`crate::error::SkmError`] values or degraded-but-exact
+//! results (e.g. the router's exact-scan fallback). Nothing may branch
+//! on whether a line was printed.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+fn seen_sites() -> &'static Mutex<HashSet<String>> {
+    static SEEN: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    SEEN.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+fn quiet() -> bool {
+    std::env::var("SKM_QUIET").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Print `skm: {msg}` to stderr, at most once per `site` per process.
+/// Returns `true` when the line was actually emitted (first call at the
+/// site with `SKM_QUIET` unset) — callers that keep their own counters
+/// (e.g. the router's fallback counter) don't need the return value;
+/// it exists for tests.
+pub fn log_once(site: &str, msg: &str) -> bool {
+    let mut seen = seen_sites()
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    if !seen.insert(site.to_string()) {
+        return false;
+    }
+    drop(seen);
+    if quiet() {
+        return false;
+    }
+    eprintln!("skm: {msg}");
+    true
+}
+
+/// Forget every site (test hook: lets a suite re-arm a warning it wants
+/// to observe). Not part of the stable API surface.
+pub fn reset_for_tests() {
+    seen_sites()
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedupes_per_site() {
+        reset_for_tests();
+        // Whether the first call prints depends on SKM_QUIET in the test
+        // environment; the dedup contract is environment-independent:
+        // after one call the site is spent.
+        let _ = log_once("test.site.a", "first");
+        assert!(!log_once("test.site.a", "second"));
+        assert!(!log_once("test.site.a", "third"));
+        // A different site is independent.
+        let _ = log_once("test.site.b", "other");
+        assert!(!log_once("test.site.b", "other again"));
+    }
+}

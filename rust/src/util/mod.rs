@@ -7,6 +7,7 @@ pub mod cli;
 pub mod failpoint;
 pub mod io;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod stats;
 pub mod timer;
