@@ -21,9 +21,11 @@
 //!   * EstParams sweep
 //!
 //! Emits a machine-readable baseline to `$SKM_BENCH_JSON` (default
-//! `BENCH_hot_path.json`); the committed copy at the repo root is the
-//! reference trajectory — regenerate with `cargo bench --bench
-//! hot_path` after hot-path changes.
+//! `BENCH_hot_path.json`). No baseline JSON is committed — CI's
+//! bench-smoke job regenerates it every run, validates the schema and
+//! the hard correctness/speedup gates, and uploads it as an artifact;
+//! real reference numbers come from those artifacts, never from a
+//! hand-authored file.
 
 mod common;
 

@@ -57,6 +57,22 @@
 //! only the postings of centroids that moved (and those that just
 //! became invariant) into the two-block layout — byte-identical to a
 //! from-scratch build, at a cost proportional to the moved mass.
+//!
+//! ## Building from persisted (possibly compressed) snapshots
+//!
+//! Every builder here consumes a [`CsrMatrix`] whose invariants the
+//! persistence layer has already release-checked
+//! (`persist::validated_csr`: monotone `indptr`, strictly ascending
+//! ids `< D`, finite nonnegative values). Format-v2 snapshots store
+//! postings delta+varint chunk-encoded (`persist::chunk`); the decoder
+//! reproduces the original arrays **bit-exactly** before they reach
+//! this module, so index construction — and therefore every downstream
+//! score bit — is identical whether the matrix came from memory, a v1
+//! file, or a compressed v2 file. The builders themselves never see
+//! encoded bytes; `validated_csr` is the single enforcement point.
+//! (The mmap serving path bypasses this module entirely for the corpus:
+//! disk-resident rows are decoded per access in `persist::mmap`, and
+//! the router's member scan uses `ClusteredCorpus::row_view`.)
 
 use crate::index::means::MeanSet;
 use crate::sparse::CsrMatrix;

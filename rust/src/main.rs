@@ -420,10 +420,26 @@ fn cmd_serve(args: &Args) -> SkmResult<()> {
     //    are bit-identical to the run that saved it), or cluster the
     //    corpus and freeze the result.
     let (snap, params, query_seed_base) = if let Some(path) = args.load_path() {
-        let (snap, stored) = skm::persist::load_snapshot(Path::new(path))?;
+        // `--mmap`: leave the (compressed v2) corpus sections on disk
+        // behind an mmap + LRU block cache; `--cache-mb` sizes the
+        // cache. v1 snapshots fall back to the full in-RAM load.
+        let (snap, stored) = if args.mmap() {
+            let cache_blocks =
+                (args.cache_mb()? << 20) / skm::persist::format::BLOCK_CAP;
+            skm::persist::load_snapshot_mmap(Path::new(path), cache_blocks)?
+        } else {
+            skm::persist::load_snapshot(Path::new(path))?
+        };
         eprintln!(
-            "loaded snapshot {path}: K={}, router (t_th={}, v_th={:.4})",
-            snap.k, stored.t_th, stored.v_th
+            "loaded snapshot {path}{}: K={}, router (t_th={}, v_th={:.4})",
+            if snap.is_disk_backed() {
+                " (corpus on disk via mmap)"
+            } else {
+                ""
+            },
+            snap.k,
+            stored.t_th,
+            stored.v_th
         );
         describe(&snap.ds, snap.k);
         // --t-th / --v-th still override the stored parameters.
@@ -489,8 +505,16 @@ fn cmd_serve(args: &Args) -> SkmResult<()> {
             t_th: router.t_th(),
             v_th: router.v_th(),
         };
-        let bytes = skm::persist::save_snapshot(Path::new(path), &snap, &saved)?;
-        eprintln!("[saved snapshot {path}: {bytes} bytes]");
+        let bytes =
+            skm::persist::save_snapshot_with(Path::new(path), &snap, &saved, args.compress())?;
+        eprintln!(
+            "[saved snapshot {path}: {bytes} bytes{}]",
+            if args.compress() {
+                " (compressed, format v2)"
+            } else {
+                ""
+            }
+        );
     }
 
     let defaults = ServeDefaults::default_for(k);
@@ -515,7 +539,9 @@ fn cmd_serve(args: &Args) -> SkmResult<()> {
         let mut rng = Pcg32::new(args.try_parsed_or("query-seed", query_seed_base ^ 0x5e4e)?);
         rng.sample_distinct(snap.ds.n(), nq)
             .into_iter()
-            .map(|i| Query::from_row(&snap.ds, i))
+            // query_from_row works for both resident and disk-backed
+            // corpora (Query::from_row would read the mmap stub).
+            .map(|i| snap.query_from_row(i))
             .collect()
     };
     eprintln!(

@@ -1,0 +1,519 @@
+//! Delta+varint chunk compression for posting sections (format v2).
+//!
+//! ## Encoding
+//!
+//! A posting list family (the corpus CSR, the means CSR, or the
+//! per-cluster member id lists) is split into **chunks of at most
+//! [`CHUNK_CAP`] postings that never span a row boundary** — row `r`
+//! owns `ceil(nnz_r / CHUNK_CAP)` consecutive chunks, so the row → chunk
+//! mapping is derived from `indptr` and never stored. Three byte
+//! streams are produced:
+//!
+//! * **meta** — one fixed-size [`ChunkMeta`] record per chunk:
+//!   `{count, max_id, id_off, id_len, val_off}`. `max_id` is the last
+//!   (largest) id of the chunk; `id_off`/`id_len` locate the chunk's id
+//!   bytes; `val_off` locates its values. Because ids and values live in
+//!   separate streams, **ids decode without touching a single value
+//!   byte** — the disk reader fetches value blocks only for rows it
+//!   actually scores.
+//! * **ids** — per chunk: the first id as an absolute LEB128 varint,
+//!   then `count − 1` strictly-positive deltas as LEB128 varints (ids
+//!   are strictly ascending within a row, so every delta ≥ 1; a zero
+//!   delta is a typed corruption error). Each chunk restarts from an
+//!   absolute id, so a chunk decodes independently of its predecessors.
+//! * **vals** — raw IEEE-754 `f64` bits, little-endian, in posting
+//!   order (8 bytes per posting; `val_off = 8 × postings before the
+//!   chunk`). Values round-trip **bit**-exactly, NaNs included — the
+//!   same contract as the v1 `ByteWriter` encoding.
+//!
+//! Ids-only families (member lists) simply have an empty `vals` stream.
+//!
+//! ## Validation
+//!
+//! [`decode_postings`] re-derives the chunk layout from `indptr` and
+//! checks every metadata field against it: chunk counts and sizes,
+//! contiguous `id_off`/`val_off`, `id_len` equal to the bytes actually
+//! consumed, `max_id` equal to the decoded last id, deltas nonzero, ids
+//! representable in `u32`, and both streams consumed exactly. Every
+//! defect is a `Result::Err` with a plain detail string the caller
+//! wraps into [`crate::error::SkmError::CorruptSnapshot`] — never a
+//! panic, and no allocation is sized from unvalidated input (decoded
+//! vectors are bounded by `indptr`-derived counts, which the snapshot
+//! loader has already validated against the file size).
+
+use crate::persist::format::{ByteReader, ByteWriter};
+
+/// Maximum postings per chunk. 128 ids ≈ ≤640 varint bytes and exactly
+/// 1 KiB of values — a chunk always spans at most two 64 KiB blocks,
+/// so a random row touch faults at most four cache blocks.
+pub const CHUNK_CAP: usize = 128;
+
+/// Fixed per-chunk metadata record (28 bytes encoded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Postings in this chunk (1 ..= CHUNK_CAP).
+    pub count: u32,
+    /// Largest (= last) id in the chunk.
+    pub max_id: u32,
+    /// Byte offset of the chunk's ids in the id stream.
+    pub id_off: u64,
+    /// Byte length of the chunk's ids in the id stream.
+    pub id_len: u32,
+    /// Byte offset of the chunk's values in the value stream
+    /// (`8 × postings before this chunk`; 0 for ids-only families).
+    pub val_off: u64,
+}
+
+/// Encoded size of one [`ChunkMeta`] record.
+pub const CHUNK_META_LEN: usize = 28;
+
+/// The three encoded streams of one posting family.
+#[derive(Debug, Default)]
+pub struct ChunkedPostings {
+    /// `u64` chunk count, then `CHUNK_META_LEN` bytes per chunk.
+    pub meta: Vec<u8>,
+    /// Concatenated per-chunk varint id bytes.
+    pub ids: Vec<u8>,
+    /// Concatenated raw-bit values (empty for ids-only families).
+    pub vals: Vec<u8>,
+}
+
+// ---------------------------------------------------------------------
+// LEB128 varints
+
+/// Append `v` as an unsigned LEB128 varint (1–5 bytes for `u32` range).
+#[inline]
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint at `pos`, returning `(value, bytes read)`.
+/// Rejects truncation and values that overflow `u64` (> 10 bytes or
+/// overlong final byte).
+#[inline]
+pub fn get_varint(buf: &[u8], pos: usize) -> Result<(u64, usize), String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    let mut n = 0usize;
+    loop {
+        let byte = *buf
+            .get(pos + n)
+            .ok_or_else(|| format!("truncated varint at byte {pos}"))?;
+        n += 1;
+        let low = (byte & 0x7F) as u64;
+        if shift >= 64 || (shift == 63 && low > 1) {
+            return Err(format!("varint at byte {pos} overflows u64"));
+        }
+        v |= low << shift;
+        if byte & 0x80 == 0 {
+            return Ok((v, n));
+        }
+        shift += 7;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunk layout derived from indptr
+
+/// Chunks owned by row `r`: `ceil(nnz_r / CHUNK_CAP)`.
+#[inline]
+pub fn chunks_for_row(nnz: usize) -> usize {
+    nnz.div_ceil(CHUNK_CAP)
+}
+
+/// Total chunk count for a family with row pointer `indptr`.
+pub fn total_chunks(indptr: &[usize]) -> usize {
+    indptr
+        .windows(2)
+        .map(|w| chunks_for_row(w[1] - w[0]))
+        .sum()
+}
+
+// ---------------------------------------------------------------------
+// Encode
+
+/// Chunk-encode a posting family. `values` must be parallel to `ids`
+/// (same length), or empty for an ids-only family (member lists).
+/// `indptr` partitions `ids` into rows with strictly ascending ids —
+/// the CSR invariant every caller has already established.
+pub fn encode_postings(indptr: &[usize], ids: &[u32], values: &[f64]) -> ChunkedPostings {
+    debug_assert!(!indptr.is_empty());
+    debug_assert_eq!(*indptr.last().unwrap(), ids.len());
+    debug_assert!(values.is_empty() || values.len() == ids.len());
+    let n_chunks = total_chunks(indptr);
+    let mut metas = ByteWriter::new();
+    metas.put_u64(n_chunks as u64);
+    let mut id_bytes: Vec<u8> = Vec::with_capacity(ids.len()); // ≥1 B/posting
+    let mut val_bytes: Vec<u8> = Vec::with_capacity(values.len() * 8);
+    let has_vals = !values.is_empty();
+
+    for w in indptr.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mut c = lo;
+        while c < hi {
+            let end = (c + CHUNK_CAP).min(hi);
+            let chunk_ids = &ids[c..end];
+            let id_off = id_bytes.len() as u64;
+            put_varint(&mut id_bytes, chunk_ids[0] as u64);
+            for pair in chunk_ids.windows(2) {
+                debug_assert!(pair[0] < pair[1], "posting ids not strictly ascending");
+                put_varint(&mut id_bytes, (pair[1] - pair[0]) as u64);
+            }
+            let val_off = if has_vals { (c * 8) as u64 } else { 0 };
+            if has_vals {
+                for &v in &values[c..end] {
+                    val_bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            metas.put_u32((end - c) as u32);
+            metas.put_u32(*chunk_ids.last().unwrap());
+            metas.put_u64(id_off);
+            metas.put_u32((id_bytes.len() as u64 - id_off) as u32);
+            metas.put_u64(val_off);
+            c = end;
+        }
+    }
+    ChunkedPostings {
+        meta: metas.into_bytes(),
+        ids: id_bytes,
+        vals: val_bytes,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decode
+
+/// Decode the metadata stream into records, validating the chunk count
+/// against the layout `indptr` implies.
+pub fn decode_metas(meta: &[u8], indptr: &[usize]) -> Result<Vec<ChunkMeta>, String> {
+    let want = total_chunks(indptr);
+    let mut r = ByteReader::new(meta);
+    let count = r.get_usize()?;
+    if count != want {
+        return Err(format!(
+            "chunk count {count} but indptr implies {want} chunks"
+        ));
+    }
+    if r.remaining() != count * CHUNK_META_LEN {
+        return Err(format!(
+            "chunk metadata is {} bytes for {count} chunks (want {})",
+            r.remaining(),
+            count * CHUNK_META_LEN
+        ));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(ChunkMeta {
+            count: r.get_u32()?,
+            max_id: r.get_u32()?,
+            id_off: r.get_u64()?,
+            id_len: r.get_u32()?,
+            val_off: r.get_u64()?,
+        });
+    }
+    r.finish()?;
+    Ok(out)
+}
+
+/// Decode one chunk's ids from its byte span into `out`, validating
+/// every field of `m` along the way. Returns an error message on any
+/// defect; on success exactly `m.count` strictly-ascending ids were
+/// appended and `m.id_len` bytes consumed.
+pub fn decode_chunk_ids(bytes: &[u8], m: &ChunkMeta, out: &mut Vec<u32>) -> Result<(), String> {
+    if m.count == 0 || m.count as usize > CHUNK_CAP {
+        return Err(format!("chunk posting count {} outside [1, {CHUNK_CAP}]", m.count));
+    }
+    let mut pos = 0usize;
+    let mut prev = 0u64;
+    for i in 0..m.count {
+        let (v, n) = get_varint(bytes, pos)?;
+        pos += n;
+        let id = if i == 0 {
+            v
+        } else {
+            if v == 0 {
+                return Err("zero id delta (ids must be strictly ascending)".to_string());
+            }
+            // checked: a hostile delta must not overflow-panic in debug
+            // builds — it is a typed corruption error like everything else.
+            prev.checked_add(v)
+                .ok_or_else(|| format!("id delta {v} overflows from {prev}"))?
+        };
+        if id > u32::MAX as u64 {
+            return Err(format!("posting id {id} overflows u32"));
+        }
+        out.push(id as u32);
+        prev = id;
+    }
+    if pos != m.id_len as usize {
+        return Err(format!(
+            "chunk id bytes: consumed {pos}, metadata claims {}",
+            m.id_len
+        ));
+    }
+    if prev != m.max_id as u64 {
+        return Err(format!(
+            "chunk max_id {} but last decoded id is {prev}",
+            m.max_id
+        ));
+    }
+    Ok(())
+}
+
+/// Validate the pure-metadata layout of a decoded chunk table against
+/// `indptr` and the stream lengths: per-row chunk sizes, contiguous
+/// `id_off` spans covering exactly `ids_len` bytes, `val_off` equal to
+/// `8 × postings before the chunk`, and the value stream exactly
+/// `8 × nnz` bytes (empty for ids-only families). After this passes,
+/// every chunk's byte span is in bounds and chunks can be decoded
+/// independently (the mmap reader relies on that for random row access).
+pub fn validate_layout(
+    metas: &[ChunkMeta],
+    indptr: &[usize],
+    ids_len: usize,
+    vals_len: usize,
+    has_vals: bool,
+) -> Result<(), String> {
+    let nnz = *indptr.last().unwrap();
+    if has_vals {
+        if vals_len != nnz * 8 {
+            return Err(format!(
+                "value stream is {vals_len} bytes for {nnz} postings (want {})",
+                nnz * 8
+            ));
+        }
+    } else if vals_len != 0 {
+        return Err(format!("ids-only family has a {vals_len}-byte value stream"));
+    }
+    if metas.len() != total_chunks(indptr) {
+        return Err(format!(
+            "{} chunk records but indptr implies {}",
+            metas.len(),
+            total_chunks(indptr)
+        ));
+    }
+    let mut chunk = 0usize;
+    let mut id_cursor = 0u64;
+    for (r, w) in indptr.windows(2).enumerate() {
+        let mut c = w[0];
+        while c < w[1] {
+            let take = (w[1] - c).min(CHUNK_CAP);
+            let m = &metas[chunk];
+            if m.count as usize != take {
+                return Err(format!(
+                    "row {r}: chunk {chunk} holds {} postings, layout implies {take}",
+                    m.count
+                ));
+            }
+            if m.id_off != id_cursor {
+                return Err(format!(
+                    "chunk {chunk}: id offset {} but stream cursor is {id_cursor}",
+                    m.id_off
+                ));
+            }
+            let in_bounds = (m.id_off as usize)
+                .checked_add(m.id_len as usize)
+                .is_some_and(|e| e <= ids_len);
+            if !in_bounds {
+                return Err(format!(
+                    "chunk {chunk}: id span [{}, +{}) exceeds the {ids_len}-byte stream",
+                    m.id_off, m.id_len
+                ));
+            }
+            let want_val_off = if has_vals { (c * 8) as u64 } else { 0 };
+            if m.val_off != want_val_off {
+                return Err(format!(
+                    "chunk {chunk}: value offset {} (want {want_val_off})",
+                    m.val_off
+                ));
+            }
+            id_cursor += m.id_len as u64;
+            c += take;
+            chunk += 1;
+        }
+    }
+    if id_cursor != ids_len as u64 {
+        return Err(format!(
+            "{} trailing bytes in the id stream",
+            ids_len as u64 - id_cursor
+        ));
+    }
+    Ok(())
+}
+
+/// Fully decode a chunk-encoded family back into `(ids, values)`,
+/// validating all metadata against `indptr`. `has_vals = false` for
+/// ids-only families (the value stream must then be empty). The decoded
+/// arrays are **bit-identical** to what [`encode_postings`] was given.
+pub fn decode_postings(
+    indptr: &[usize],
+    meta: &[u8],
+    id_bytes: &[u8],
+    val_bytes: &[u8],
+    has_vals: bool,
+) -> Result<(Vec<u32>, Vec<f64>), String> {
+    let metas = decode_metas(meta, indptr)?;
+    validate_layout(&metas, indptr, id_bytes.len(), val_bytes.len(), has_vals)?;
+    let nnz = *indptr.last().unwrap();
+
+    let mut ids = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(if has_vals { nnz } else { 0 });
+    let mut chunk = 0usize;
+    for (r, w) in indptr.windows(2).enumerate() {
+        let mut c = w[0];
+        while c < w[1] {
+            let take = (w[1] - c).min(CHUNK_CAP);
+            let m = &metas[chunk];
+            let span = &id_bytes[m.id_off as usize..m.id_off as usize + m.id_len as usize];
+            decode_chunk_ids(span, m, &mut ids)
+                .map_err(|d| format!("chunk {chunk} (row {r}): {d}"))?;
+            if has_vals {
+                for p in c..c + take {
+                    let b = &val_bytes[p * 8..p * 8 + 8];
+                    vals.push(f64::from_bits(u64::from_le_bytes(b.try_into().unwrap())));
+                }
+            }
+            c += take;
+            chunk += 1;
+        }
+    }
+    Ok((ids, vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(indptr: &[usize], ids: &[u32], vals: &[f64]) {
+        let enc = encode_postings(indptr, ids, vals);
+        let (di, dv) =
+            decode_postings(indptr, &enc.meta, &enc.ids, &enc.vals, !vals.is_empty()).unwrap();
+        assert_eq!(di, ids);
+        assert_eq!(
+            dv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn varint_round_trips_edge_values() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut b = Vec::new();
+            put_varint(&mut b, v);
+            let (d, n) = get_varint(&b, 0).unwrap();
+            assert_eq!(d, v);
+            assert_eq!(n, b.len());
+        }
+        // Truncation and u64 overflow are rejected.
+        assert!(get_varint(&[0x80], 0).is_err());
+        assert!(get_varint(&[0xFF; 11], 0).is_err());
+    }
+
+    #[test]
+    fn empty_rows_and_boundary_sizes_round_trip() {
+        // 0, 1, CHUNK_CAP, CHUNK_CAP+1, 2*CHUNK_CAP postings per row.
+        let sizes = [0usize, 1, CHUNK_CAP, CHUNK_CAP + 1, 2 * CHUNK_CAP];
+        let mut indptr = vec![0usize];
+        let mut ids = Vec::new();
+        let mut vals = Vec::new();
+        for (r, &s) in sizes.iter().enumerate() {
+            for i in 0..s {
+                ids.push((i * 3 + r) as u32); // strictly ascending per row
+                vals.push((r as f64 + 0.5) * (i as f64 + 1.0));
+            }
+            indptr.push(ids.len());
+        }
+        roundtrip(&indptr, &ids, &vals);
+        // Chunk layout: 0 + 1 + 1 + 2 + 2 chunks.
+        assert_eq!(total_chunks(&indptr), 6);
+        // An all-empty family works too.
+        roundtrip(&[0, 0, 0], &[], &[]);
+    }
+
+    #[test]
+    fn extreme_ids_and_value_bits_round_trip() {
+        let indptr = [0usize, 3, 5];
+        let ids = [0u32, u32::MAX - 1, u32::MAX, 7, 1_000_000];
+        let vals = [0.0, -0.0, f64::NAN, f64::MIN_POSITIVE, 1.0e300];
+        roundtrip(&indptr, &ids, &vals);
+    }
+
+    #[test]
+    fn ids_only_families_have_no_value_stream() {
+        let indptr = [0usize, 2, 2, 5];
+        let ids = [4u32, 9, 0, 1, 2];
+        let enc = encode_postings(&indptr, &ids, &[]);
+        assert!(enc.vals.is_empty());
+        let (di, dv) = decode_postings(&indptr, &enc.meta, &enc.ids, &enc.vals, false).unwrap();
+        assert_eq!(di, ids);
+        assert!(dv.is_empty());
+        // A stray value stream on an ids-only family is a defect.
+        assert!(decode_postings(&indptr, &enc.meta, &enc.ids, &[0u8; 8], false).is_err());
+    }
+
+    #[test]
+    fn metadata_defects_are_typed() {
+        let indptr = [0usize, 200]; // 2 chunks: 128 + 72
+        let ids: Vec<u32> = (0..200u32).map(|i| i * 2).collect();
+        let vals: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let enc = encode_postings(&indptr, &ids, &vals);
+        let metas = decode_metas(&enc.meta, &indptr).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].count, 128);
+        assert_eq!(metas[1].count, 72);
+        assert_eq!(metas[0].max_id, 254);
+        assert_eq!(metas[1].val_off, 128 * 8);
+
+        // Each corrupted field is caught with an error, not a panic.
+        let corrupt_field = |off: usize, val: u64, len: usize| {
+            let mut bad = enc.meta.clone();
+            bad[off..off + len].copy_from_slice(&val.to_le_bytes()[..len]);
+            decode_postings(&indptr, &bad, &enc.ids, &enc.vals, true)
+        };
+        // Record 0 starts at byte 8: count, max_id, id_off, id_len, val_off.
+        assert!(corrupt_field(8, 127, 4).is_err(), "count");
+        assert!(corrupt_field(12, 999, 4).is_err(), "max_id");
+        assert!(corrupt_field(16, 3, 8).is_err(), "id_off");
+        assert!(corrupt_field(24, 1, 4).is_err(), "id_len");
+        assert!(corrupt_field(28, 8, 8).is_err(), "val_off");
+        // Wrong chunk count.
+        let mut bad = enc.meta.clone();
+        bad[0..8].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_postings(&indptr, &bad, &enc.ids, &enc.vals, true).is_err());
+        // Truncated metadata.
+        assert!(decode_metas(&enc.meta[..enc.meta.len() - 1], &indptr).is_err());
+
+        // Corrupted id payload: a zero delta breaks strict ascent.
+        let mut bad_ids = enc.ids.clone();
+        bad_ids[metas[0].id_off as usize + 1] = 0; // first delta byte → 0
+        assert!(decode_postings(&indptr, &enc.meta, &bad_ids, &enc.vals, true).is_err());
+        // Truncated id stream.
+        assert!(decode_postings(&indptr, &enc.meta, &enc.ids[..enc.ids.len() - 1], &enc.vals, true)
+            .is_err());
+        // Truncated value stream.
+        assert!(decode_postings(&indptr, &enc.meta, &enc.ids, &enc.vals[..enc.vals.len() - 8], true)
+            .is_err());
+    }
+
+    #[test]
+    fn compression_wins_on_dense_ascending_ids() {
+        // tf-idf-like rows: clustered ascending ids → mostly 1-byte
+        // varints vs 4 raw bytes per id.
+        let indptr = [0usize, 1000];
+        let ids: Vec<u32> = (0..1000u32).map(|i| 10_000 + i * 3).collect();
+        let enc = encode_postings(&indptr, &ids, &[]);
+        assert!(
+            enc.ids.len() < 1000 * 4 / 2,
+            "{} id bytes for 1000 postings",
+            enc.ids.len()
+        );
+    }
+}

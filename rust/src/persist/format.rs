@@ -2,7 +2,12 @@
 //! checksum, the fixed-size file header/footer, the section manifest,
 //! and a bounded little-endian byte codec.
 //!
-//! ## File layout (version 1)
+//! ## File layout (versions 1 and 2)
+//!
+//! Both versions share this container byte-for-byte; they differ only
+//! in how the big posting sections encode their payloads (v2
+//! chunk-compresses them, see [`crate::persist::chunk`]). The header's
+//! version field tells the loader which section codec to use.
 //!
 //! ```text
 //! ┌──────────────────────┐ offset 0
@@ -39,8 +44,17 @@
 pub const MAGIC: [u8; 8] = *b"SKMPERS1";
 /// Footer magic, first 8 bytes of the fixed-size footer.
 pub const FOOTER_MAGIC: [u8; 8] = *b"SKMFOOT1";
-/// Format version understood by this reader/writer.
+/// Format version 1: every section payload is the raw `ByteWriter`
+/// encoding (uncompressed). Checkpoints and `skm serve --save` without
+/// `--compress` still write this version, byte-identical to PR 8 files.
 pub const VERSION: u32 = 1;
+/// Format version 2: the big posting sections (corpus CSR, means CSR,
+/// member id lists) are delta+varint chunk-compressed (see
+/// [`crate::persist::chunk`]); everything else is unchanged. Written by
+/// `skm serve --save --compress`.
+pub const VERSION_COMPRESSED: u32 = 2;
+/// Highest format version this reader understands.
+pub const MAX_VERSION: u32 = VERSION_COMPRESSED;
 /// Endianness marker: reads back as itself only on a little-endian
 /// decode of bytes written little-endian.
 pub const ENDIAN_MARK: u32 = 0x0A0B_0C0D;
@@ -104,9 +118,12 @@ pub fn crc32(data: &[u8]) -> u32 {
 // Header / footer / manifest
 
 /// Decoded file header (the validated subset; constants are checked,
-/// not stored).
+/// not stored). `version` is carried so the loader can dispatch between
+/// the raw (v1) and chunk-compressed (v2) section encodings; a v1
+/// header encodes byte-identically to the PR 8 format.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    pub version: u32,
     pub kind: u32,
     pub n_blocks: u64,
 }
@@ -115,7 +132,7 @@ impl Header {
     pub fn encode(&self) -> [u8; HEADER_LEN] {
         let mut b = [0u8; HEADER_LEN];
         b[0..8].copy_from_slice(&MAGIC);
-        b[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        b[8..12].copy_from_slice(&self.version.to_le_bytes());
         b[12..16].copy_from_slice(&ENDIAN_MARK.to_le_bytes());
         b[16..20].copy_from_slice(&self.kind.to_le_bytes());
         b[20..24].copy_from_slice(&(BLOCK_SIZE as u32).to_le_bytes());
@@ -139,9 +156,9 @@ impl Header {
             return Err(format!("bad magic {:02x?}", &b[0..8]));
         }
         let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
-        if version != VERSION {
+        if !(VERSION..=MAX_VERSION).contains(&version) {
             return Err(format!(
-                "unsupported format version {version} (reader understands {VERSION})"
+                "unsupported format version {version} (reader understands {VERSION}..={MAX_VERSION})"
             ));
         }
         let endian = u32::from_le_bytes(b[12..16].try_into().unwrap());
@@ -156,7 +173,11 @@ impl Header {
             return Err(format!("block size {block_size} != {BLOCK_SIZE}"));
         }
         let n_blocks = u64::from_le_bytes(b[24..32].try_into().unwrap());
-        Ok(Self { kind, n_blocks })
+        Ok(Self {
+            version,
+            kind,
+            n_blocks,
+        })
     }
 }
 
@@ -452,18 +473,43 @@ mod tests {
 
     #[test]
     fn header_round_trip_and_detects_flips() {
-        let h = Header {
-            kind: KIND_SNAPSHOT,
-            n_blocks: 17,
-        };
-        let enc = h.encode();
-        assert_eq!(Header::decode(&enc).unwrap(), h);
-        for i in 0..HEADER_LEN {
-            let mut bad = enc;
-            bad[i] ^= 0xFF;
-            assert!(Header::decode(&bad).is_err(), "flip at byte {i} accepted");
+        for version in [VERSION, VERSION_COMPRESSED] {
+            let h = Header {
+                version,
+                kind: KIND_SNAPSHOT,
+                n_blocks: 17,
+            };
+            let enc = h.encode();
+            assert_eq!(Header::decode(&enc).unwrap(), h);
+            for i in 0..HEADER_LEN {
+                let mut bad = enc;
+                bad[i] ^= 0xFF;
+                assert!(Header::decode(&bad).is_err(), "flip at byte {i} accepted");
+            }
+            assert!(Header::decode(&enc[..HEADER_LEN - 1]).is_err());
         }
-        assert!(Header::decode(&enc[..HEADER_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn header_rejects_future_versions_with_typed_message() {
+        let h = Header {
+            version: VERSION,
+            kind: KIND_SNAPSHOT,
+            n_blocks: 3,
+        };
+        let mut enc = h.encode();
+        // Claim version MAX_VERSION + 1 and re-seal the CRC so only the
+        // version check can reject it.
+        enc[8..12].copy_from_slice(&(MAX_VERSION + 1).to_le_bytes());
+        let crc = crc32(&enc[0..36]);
+        enc[36..40].copy_from_slice(&crc.to_le_bytes());
+        let err = Header::decode(&enc).unwrap_err();
+        assert!(err.contains("unsupported format version"), "{err}");
+        // Version 0 (below the floor) is likewise rejected.
+        enc[8..12].copy_from_slice(&0u32.to_le_bytes());
+        let crc = crc32(&enc[0..36]);
+        enc[36..40].copy_from_slice(&crc.to_le_bytes());
+        assert!(Header::decode(&enc).is_err());
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! Memory-mapped serving of compressed (v2) snapshots: corpus posting
+//! blocks stay on disk and are decoded on demand through a small LRU
+//! cache of CRC-verified block payloads, so `skm serve --load --mmap`
+//! can serve corpora larger than RAM straight from the file.
+//!
+//! ## Architecture
+//!
+//! * [`SnapshotMap`] — a read-only `mmap(2)` of the whole snapshot file
+//!   (via `libc`, the only FFI dependency the image bakes in). On
+//!   non-unix hosts, or when the kernel refuses the mapping, it degrades
+//!   to an ordinary heap read — same API, no behavior difference beyond
+//!   residency.
+//! * [`BlockCache`] — an exact LRU over **decoded block payloads**,
+//!   keyed by global block index. A miss copies the 64 KiB payload out
+//!   of the mapping *after* verifying the block's CRC32; a hit returns
+//!   the shared [`Arc`] without touching the file. Capacity is the
+//!   `--cache-mb` knob (default 64 MiB ≈ 1024 blocks).
+//! * [`DiskRows`] — the random-access corpus row reader: per-chunk
+//!   metadata and the row pointer live in RAM (they are small); a row
+//!   fetch reads the chunk id/value byte spans through the cache and
+//!   delta-decodes into caller scratch. Ids and values live in separate
+//!   streams, so id-only consumers never fault value blocks.
+//!
+//! ## Bit-exactness and failure semantics
+//!
+//! [`DiskRows::validate_all`] streams every row once at open time with
+//! the same decode path serving uses, checking the full corpus contract
+//! (strictly ascending ids `< D`, finite nonnegative values, chunk
+//! metadata consistent) — so a corrupt file is a typed
+//! [`SkmError::CorruptSnapshot`] at load, never a panic. After a clean
+//! open, decoded bits equal the saved bits, and since the router's
+//! exact merges are unchanged, every served id and score bit matches
+//! the in-RAM router (pinned by `rust/tests/persist.rs`). The only
+//! panic left is a block whose CRC changes *after* validation (the file
+//! was mutated under a live server); it carries a clear message and is
+//! contained per-query by `serve_batch`'s worker isolation.
+
+use crate::error::{SkmError, SkmResult};
+use crate::persist::chunk::{self, ChunkMeta};
+use crate::persist::format::{crc32, BLOCK_CAP, BLOCK_HDR, BLOCK_SIZE, HEADER_LEN};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default block-cache capacity in MiB for `--mmap` serving.
+pub const DEFAULT_CACHE_MB: usize = 64;
+
+// ---------------------------------------------------------------------
+// Read-only file mapping
+
+enum MapBuf {
+    /// A live `mmap(2)` region (unix only). Read-only and private.
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback: the whole file read into memory (non-unix hosts,
+    /// or when the kernel refuses the mapping).
+    Heap(Vec<u8>),
+}
+
+/// A read-only view of the snapshot file. See the module docs.
+pub struct SnapshotMap {
+    buf: MapBuf,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated or
+// remapped after construction; sharing immutable bytes across threads
+// is sound. The heap variant is a plain Vec.
+unsafe impl Send for SnapshotMap {}
+unsafe impl Sync for SnapshotMap {}
+
+impl SnapshotMap {
+    /// Map `path` read-only, falling back to a heap read when mapping
+    /// is unavailable.
+    pub fn open(path: &Path) -> SkmResult<Self> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let ioe =
+                |e: std::io::Error| SkmError::io(format!("mmap snapshot {}", path.display()), e);
+            let f = std::fs::File::open(path).map_err(ioe)?;
+            let len = f.metadata().map_err(ioe)?.len();
+            let len = usize::try_from(len).map_err(|_| {
+                SkmError::corrupt_snapshot(
+                    path.display().to_string(),
+                    "file",
+                    "file length exceeds host usize",
+                )
+            })?;
+            if len > 0 {
+                // SAFETY: fd is a valid open file, len is its size;
+                // PROT_READ + MAP_PRIVATE cannot alias writable memory.
+                let ptr = unsafe {
+                    libc::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        libc::PROT_READ,
+                        libc::MAP_PRIVATE,
+                        f.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != libc::MAP_FAILED {
+                    return Ok(Self {
+                        buf: MapBuf::Mapped {
+                            ptr: ptr as *const u8,
+                            len,
+                        },
+                    });
+                }
+                // fall through to the heap read on mapping failure
+            }
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| SkmError::io(format!("read snapshot {}", path.display()), e))?;
+        Ok(Self {
+            buf: MapBuf::Heap(bytes),
+        })
+    }
+
+    /// The mapped file bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.buf {
+            #[cfg(unix)]
+            // SAFETY: ptr/len come from a successful mmap that lives
+            // until Drop; the region is never unmapped early.
+            MapBuf::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            MapBuf::Heap(v) => v,
+        }
+    }
+
+    /// True when backed by a real mapping (false = heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.buf {
+            #[cfg(unix)]
+            MapBuf::Mapped { .. } => true,
+            MapBuf::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for SnapshotMap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let MapBuf::Mapped { ptr, len } = self.buf {
+            // SAFETY: exactly the region returned by mmap in open().
+            unsafe {
+                libc::munmap(ptr as *mut libc::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for SnapshotMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotMap")
+            .field("len", &self.bytes().len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// LRU cache of CRC-verified block payloads
+
+/// Exact LRU keyed by global block index. Recency is a monotone stamp;
+/// a `BTreeMap` stamp index makes eviction `O(log n)` per miss.
+#[derive(Debug)]
+pub struct BlockCache {
+    cap_blocks: usize,
+    tick: u64,
+    by_block: HashMap<u64, (u64, Arc<Vec<u8>>)>,
+    by_stamp: BTreeMap<u64, u64>,
+}
+
+impl BlockCache {
+    pub fn new(cap_blocks: usize) -> Self {
+        Self {
+            // At least 4 so one row's worst case (2 id + 2 value
+            // blocks) never self-evicts mid-fetch.
+            cap_blocks: cap_blocks.max(4),
+            tick: 0,
+            by_block: HashMap::new(),
+            by_stamp: BTreeMap::new(),
+        }
+    }
+
+    fn get(&mut self, gb: u64) -> Option<Arc<Vec<u8>>> {
+        let (stamp, payload) = self.by_block.get(&gb)?;
+        let (old, payload) = (*stamp, Arc::clone(payload));
+        self.by_stamp.remove(&old);
+        self.tick += 1;
+        self.by_stamp.insert(self.tick, gb);
+        self.by_block.insert(gb, (self.tick, Arc::clone(&payload)));
+        Some(payload)
+    }
+
+    fn insert(&mut self, gb: u64, payload: Arc<Vec<u8>>) {
+        while self.by_block.len() >= self.cap_blocks {
+            let Some((_, victim)) = self.by_stamp.pop_first() else {
+                break;
+            };
+            self.by_block.remove(&victim);
+        }
+        self.tick += 1;
+        self.by_stamp.insert(self.tick, gb);
+        self.by_block.insert(gb, (self.tick, payload));
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_block.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_block.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Disk-backed corpus rows
+
+/// Block range of one lazy section inside the file.
+#[derive(Debug, Clone, Copy)]
+pub struct SectionGeom {
+    pub first_block: u64,
+    pub byte_len: u64,
+}
+
+/// Random-access reader over the compressed corpus posting sections of
+/// an open snapshot. See the module docs.
+pub struct DiskRows {
+    map: SnapshotMap,
+    path: PathBuf,
+    cache: Mutex<BlockCache>,
+    cache_blocks: usize,
+    metas: Vec<ChunkMeta>,
+    /// First chunk of each row; `len == n_rows + 1`.
+    row_chunk_start: Vec<u32>,
+    /// The real corpus row pointer (the in-RAM stub matrix carries an
+    /// all-zero one; see `ClusteredCorpus::row_view`).
+    indptr: Vec<usize>,
+    n_cols: usize,
+    ids_sec: SectionGeom,
+    vals_sec: SectionGeom,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl std::fmt::Debug for DiskRows {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DiskRows")
+            .field("path", &self.path)
+            .field("n_rows", &(self.indptr.len() - 1))
+            .field("n_chunks", &self.metas.len())
+            .field("cache_blocks", &self.cache_blocks)
+            .finish()
+    }
+}
+
+impl DiskRows {
+    /// Assemble the reader from decoded chunk metadata and the lazy
+    /// sections' geometry, then validate the metadata layout against
+    /// the stream lengths. `validate_all` (the full streaming decode
+    /// check) is a separate call so the loader can report it as its own
+    /// phase.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        map: SnapshotMap,
+        path: &Path,
+        metas: Vec<ChunkMeta>,
+        indptr: Vec<usize>,
+        n_cols: usize,
+        ids_sec: SectionGeom,
+        vals_sec: SectionGeom,
+        cache_blocks: usize,
+    ) -> SkmResult<Self> {
+        chunk::validate_layout(
+            &metas,
+            &indptr,
+            ids_sec.byte_len as usize,
+            vals_sec.byte_len as usize,
+            true,
+        )
+        .map_err(|d| {
+            SkmError::corrupt_snapshot(path.display().to_string(), "corpus_chunks", d)
+        })?;
+        let n = indptr.len() - 1;
+        let mut row_chunk_start = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        row_chunk_start.push(0);
+        for w in indptr.windows(2) {
+            acc += chunk::chunks_for_row(w[1] - w[0]) as u32;
+            row_chunk_start.push(acc);
+        }
+        debug_assert_eq!(acc as usize, metas.len());
+        Ok(Self {
+            map,
+            path: path.to_path_buf(),
+            cache: Mutex::new(BlockCache::new(cache_blocks)),
+            cache_blocks,
+            metas,
+            row_chunk_start,
+            indptr,
+            n_cols,
+            ids_sec,
+            vals_sec,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// `(cache hits, cache misses)` since open — the bench harness uses
+    /// this to separate cold and warm throughput.
+    pub fn cache_counters(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// RAM actually resident for this reader: chunk metadata, row
+    /// mapping, and the block cache at full capacity (the mapping
+    /// itself is page cache, not anonymous memory).
+    pub fn resident_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.metas.len() * size_of::<ChunkMeta>()
+            + self.row_chunk_start.len() * size_of::<u32>()
+            + self.indptr.len() * size_of::<usize>()
+            + self.cache_blocks * BLOCK_CAP
+    }
+
+    /// Fetch one block payload through the cache, verifying its CRC on
+    /// miss. Returns a plain error message on any defect.
+    fn block(&self, sec: &SectionGeom, local: u64) -> Result<Arc<Vec<u8>>, String> {
+        let gb = sec.first_block + local;
+        {
+            let mut cache = lock_cache(&self.cache);
+            if let Some(p) = cache.get(gb) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(p);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let buf = self.map.bytes();
+        let boff = HEADER_LEN + gb as usize * BLOCK_SIZE;
+        // In bounds: check_structure proved n_blocks · BLOCK_SIZE fits
+        // the file, and validate_layout bounds local by the section.
+        let hdr = &buf[boff..boff + BLOCK_HDR];
+        let payload_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let crc_stored = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let expected = (sec.byte_len - local * BLOCK_CAP as u64).min(BLOCK_CAP as u64) as usize;
+        if payload_len != expected {
+            return Err(format!(
+                "block {gb}: payload length {payload_len}, expected {expected}"
+            ));
+        }
+        let payload = buf[boff + BLOCK_HDR..boff + BLOCK_HDR + payload_len].to_vec();
+        if crc32(&payload) != crc_stored {
+            return Err(format!("block {gb}: checksum mismatch"));
+        }
+        let payload = Arc::new(payload);
+        lock_cache(&self.cache).insert(gb, Arc::clone(&payload));
+        Ok(payload)
+    }
+
+    /// Copy `len` bytes at logical offset `off` of a lazy section into
+    /// `out` (cleared first), walking blocks through the cache.
+    fn read_span(
+        &self,
+        sec: &SectionGeom,
+        off: u64,
+        len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        debug_assert!(off + len as u64 <= sec.byte_len);
+        out.clear();
+        out.reserve(len);
+        let mut cur = off;
+        let end = off + len as u64;
+        while cur < end {
+            let local = cur / BLOCK_CAP as u64;
+            let boff = (cur % BLOCK_CAP as u64) as usize;
+            let payload = self.block(sec, local)?;
+            let take = ((end - cur) as usize).min(payload.len() - boff);
+            out.extend_from_slice(&payload[boff..boff + take]);
+            cur += take as u64;
+        }
+        Ok(())
+    }
+
+    /// Decode corpus row `i` into `ids`/`vals` (cleared first), using
+    /// `bytes` as byte scratch. Validates the row contract the in-RAM
+    /// loader enforces: strictly ascending ids `< D` (across chunk
+    /// boundaries too) and finite nonnegative values.
+    pub(crate) fn try_fill_row(
+        &self,
+        i: usize,
+        bytes: &mut Vec<u8>,
+        ids: &mut Vec<u32>,
+        vals: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        ids.clear();
+        vals.clear();
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        if lo == hi {
+            return Ok(());
+        }
+        let (c0, c1) = (
+            self.row_chunk_start[i] as usize,
+            self.row_chunk_start[i + 1] as usize,
+        );
+        // A row's chunks are contiguous in both streams.
+        let id_off = self.metas[c0].id_off;
+        let last = &self.metas[c1 - 1];
+        let id_len = (last.id_off + last.id_len as u64 - id_off) as usize;
+        self.read_span(&self.ids_sec, id_off, id_len, bytes)?;
+        for m in &self.metas[c0..c1] {
+            let rel = (m.id_off - id_off) as usize;
+            chunk::decode_chunk_ids(&bytes[rel..rel + m.id_len as usize], m, ids)?;
+        }
+        if !ids.windows(2).all(|w| w[0] < w[1]) {
+            return Err(format!("row {i}: ids not strictly ascending across chunks"));
+        }
+        if let Some(&bad) = ids.iter().find(|&&t| t as usize >= self.n_cols) {
+            return Err(format!("row {i}: term id {bad} >= D={}", self.n_cols));
+        }
+
+        self.read_span(&self.vals_sec, (lo * 8) as u64, (hi - lo) * 8, bytes)?;
+        for p in 0..hi - lo {
+            let b = &bytes[p * 8..p * 8 + 8];
+            let v = f64::from_bits(u64::from_le_bytes(b.try_into().unwrap()));
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("row {i}: non-finite or negative value {v}"));
+            }
+            vals.push(v);
+        }
+        Ok(())
+    }
+
+    /// Serve-path row fetch. Panics only if the file's bytes changed
+    /// after [`DiskRows::validate_all`] passed (CRC or contract
+    /// violation under a live server); `serve_batch` contains that
+    /// per-query.
+    pub(crate) fn fill_row(
+        &self,
+        i: usize,
+        bytes: &mut Vec<u8>,
+        ids: &mut Vec<u32>,
+        vals: &mut Vec<f64>,
+    ) {
+        if let Err(d) = self.try_fill_row(i, bytes, ids, vals) {
+            panic!(
+                "snapshot {} corrupted after load (row {i}): {d}",
+                self.path.display()
+            );
+        }
+    }
+
+    /// Stream every row once with the serving decode path, surfacing
+    /// any defect as a typed error. After this passes, serving cannot
+    /// hit a decode error unless the file mutates on disk.
+    pub(crate) fn validate_all(&self) -> SkmResult<()> {
+        let mut bytes = Vec::new();
+        let mut ids = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.n_rows() {
+            self.try_fill_row(i, &mut bytes, &mut ids, &mut vals)
+                .map_err(|d| {
+                    SkmError::corrupt_snapshot(
+                        self.path.display().to_string(),
+                        "corpus_chunks",
+                        d,
+                    )
+                })?;
+        }
+        Ok(())
+    }
+}
+
+/// Poison-tolerant lock (same policy as the serve/assign pools): a
+/// panic while holding the cache lock must not poison every later
+/// query — the cache holds only verified immutable payloads, so the
+/// inner state is always valid.
+fn lock_cache(m: &Mutex<BlockCache>) -> std::sync::MutexGuard<'_, BlockCache> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = BlockCache::new(4);
+        for gb in 0..4u64 {
+            c.insert(gb, Arc::new(vec![gb as u8]));
+        }
+        assert_eq!(c.len(), 4);
+        // Touch 0 so 1 becomes the eviction victim.
+        assert!(c.get(0).is_some());
+        c.insert(9, Arc::new(vec![9]));
+        assert_eq!(c.len(), 4);
+        assert!(c.get(1).is_none(), "LRU victim survived");
+        assert!(c.get(0).is_some());
+        assert!(c.get(9).is_some());
+        // Capacity floor: tiny requests still hold a row's worth.
+        assert_eq!(BlockCache::new(0).cap_blocks, 4);
+    }
+
+    #[test]
+    fn snapshot_map_reads_file_bytes() {
+        let dir = std::env::temp_dir().join(format!("skm_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = SnapshotMap::open(&path).unwrap();
+        assert_eq!(map.bytes(), &data[..]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(SnapshotMap::open(Path::new("/nonexistent/skm.map")).is_err());
+    }
+}

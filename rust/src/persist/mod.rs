@@ -33,25 +33,51 @@
 //! typed [`SkmError::CorruptSnapshot`], never a panic, never UB, never
 //! a partially-built snapshot.
 //!
+//! ## Compressed snapshots (format version 2)
+//!
+//! [`save_snapshot_with`] with `compress = true` writes the same
+//! container stamped format version 2: the three posting families
+//! (corpus rows, mean rows, member lists) are chunk-encoded by
+//! [`chunk`] — ≤128 postings per chunk, ids as delta + LEB128 varints,
+//! values as raw `f64` bits in a separate stream, plus a fixed 28-byte
+//! per-chunk metadata record — so ids decode without touching values
+//! and any row is decodable from its chunks alone. Decoding is
+//! bit-exact: a v2 load (or an mmap-served query) returns the same id
+//! and score bits as the v1 / in-RAM path. [`load_snapshot`] reads both
+//! versions transparently; [`load_snapshot_mmap`] additionally leaves
+//! the (dominant) corpus posting sections on disk behind an mmap + LRU
+//! block cache ([`mmap`]) so serving does not need the corpus in RAM.
+//!
 //! Fail-point sites for the crash harness (`rust/tests/persist.rs`,
 //! cargo feature `failpoints`): `persist.write_block`, `persist.fsync`,
-//! `persist.rename`, `persist.read_block`.
+//! `persist.rename`, `persist.read_block`. The sites are shared by the
+//! v1 and v2 writers, so the kill matrix covers the compressed path.
 
 pub mod checkpoint;
+pub mod chunk;
 pub mod format;
+pub mod mmap;
 pub mod reader;
 pub mod writer;
 
 use crate::error::{SkmError, SkmResult};
 use crate::index::MeanSet;
-use crate::persist::format::{ByteReader, ByteWriter, KIND_SNAPSHOT};
+use crate::persist::format::{
+    ByteReader, ByteWriter, KIND_SNAPSHOT, VERSION, VERSION_COMPRESSED,
+};
+use crate::persist::mmap::{DiskRows, SectionGeom, SnapshotMap};
 use crate::persist::reader::{read_blocks_file, RawFile};
 use crate::serve::{ClusteredCorpus, RouterParams};
 use crate::sparse::{CsrMatrix, Dataset};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Section ids shared by the snapshot and checkpoint codecs.
-pub(crate) mod sec {
+///
+/// Public so integration tests (and external tooling) can locate a
+/// section inside the container via the manifest without hardcoding
+/// magic numbers.
+pub mod sec {
     pub const META: u32 = 1;
     pub const CORPUS_INDPTR: u32 = 2;
     pub const CORPUS_INDICES: u32 = 3;
@@ -72,6 +98,17 @@ pub(crate) mod sec {
     pub const DRIVER: u32 = 18;
     pub const FINGERPRINT: u32 = 19;
     pub const MB_DRIVER: u32 = 20;
+    // Format v2 (compressed) replacements for CORPUS_INDICES/VALUES,
+    // MEANS_INDICES/VALUES, and MEMBER_IDS; the indptr/offset sections
+    // above are shared by both versions.
+    pub const CORPUS_CHUNK_META: u32 = 21;
+    pub const CORPUS_CHUNK_IDS: u32 = 22;
+    pub const CORPUS_CHUNK_VALS: u32 = 23;
+    pub const MEANS_CHUNK_META: u32 = 24;
+    pub const MEANS_CHUNK_IDS: u32 = 25;
+    pub const MEANS_CHUNK_VALS: u32 = 26;
+    pub const MEMBER_CHUNK_META: u32 = 27;
+    pub const MEMBER_CHUNK_IDS: u32 = 28;
 }
 
 fn corrupt(path: &Path, section: &str, detail: impl Into<String>) -> SkmError {
@@ -145,19 +182,7 @@ pub(crate) fn validated_csr(
     values: Vec<f64>,
 ) -> SkmResult<CsrMatrix> {
     let c = |d: String| corrupt(path, name, d);
-    if indptr.len() != n_rows + 1 {
-        return Err(c(format!(
-            "indptr has {} entries for {n_rows} rows (want {})",
-            indptr.len(),
-            n_rows + 1
-        )));
-    }
-    if indptr[0] != 0 {
-        return Err(c(format!("indptr[0] = {} (want 0)", indptr[0])));
-    }
-    if let Some(r) = indptr.windows(2).position(|w| w[0] > w[1]) {
-        return Err(c(format!("indptr decreases at row {r}")));
-    }
+    check_indptr(path, name, n_rows, &indptr)?;
     if *indptr.last().unwrap() != indices.len() || indices.len() != values.len() {
         return Err(c(format!(
             "nnz mismatch: indptr ends at {}, {} indices, {} values",
@@ -184,13 +209,70 @@ pub(crate) fn validated_csr(
     Ok(CsrMatrix::from_raw(n_cols, indptr, indices, values))
 }
 
+/// Release-checked row-pointer shape: `n_rows + 1` entries, starts at
+/// zero, monotone. Factored out of [`validated_csr`] because the chunk
+/// layout math (`chunk::total_chunks`) derives row sizes from `indptr`
+/// and must never see a decreasing pointer.
+pub(crate) fn check_indptr(
+    path: &Path,
+    name: &str,
+    n_rows: usize,
+    indptr: &[usize],
+) -> SkmResult<()> {
+    let c = |d: String| corrupt(path, name, d);
+    if indptr.len() != n_rows + 1 {
+        return Err(c(format!(
+            "indptr has {} entries for {n_rows} rows (want {})",
+            indptr.len(),
+            n_rows + 1
+        )));
+    }
+    if indptr[0] != 0 {
+        return Err(c(format!("indptr[0] = {} (want 0)", indptr[0])));
+    }
+    if let Some(r) = indptr.windows(2).position(|w| w[0] > w[1]) {
+        return Err(c(format!("indptr decreases at row {r}")));
+    }
+    Ok(())
+}
+
 /// Serialize a frozen serving snapshot and its router parameters,
-/// publishing atomically at `path`. Returns the file size in bytes.
+/// publishing atomically at `path` (uncompressed, format version 1).
+/// Returns the file size in bytes.
+///
+/// Takes `params` by reference: every external caller holds the params
+/// it is about to keep serving with, and the by-value signature this
+/// module originally shipped forced a copy at each of them — worse, the
+/// callers in `main.rs`, `tests/persist.rs`, and `benches/serve.rs`
+/// were already written against the by-reference form, so the by-value
+/// signature did not compile against its own users.
 pub fn save_snapshot(
     path: &Path,
     snap: &ClusteredCorpus,
-    params: RouterParams,
+    params: &RouterParams,
 ) -> SkmResult<u64> {
+    save_snapshot_with(path, snap, params, false)
+}
+
+/// [`save_snapshot`] with an explicit choice of payload codec:
+/// `compress = false` writes format v1 (byte-identical to
+/// [`save_snapshot`]), `compress = true` writes format v2 with the
+/// posting families chunk-encoded (see [`chunk`]). Both publish
+/// atomically through the same fail-point-instrumented writer.
+pub fn save_snapshot_with(
+    path: &Path,
+    snap: &ClusteredCorpus,
+    params: &RouterParams,
+    compress: bool,
+) -> SkmResult<u64> {
+    // A disk-backed snapshot's in-RAM corpus is an empty stub — writing
+    // it out would silently persist a corpus of zeros.
+    if snap.is_disk_backed() {
+        return Err(SkmError::invalid_config(
+            "cannot re-serialize a snapshot served from disk (mmap): its corpus \
+             rows are not resident — load it without mmap first",
+        ));
+    }
     let (n_cols, x_indptr, x_indices, x_values) = snap.ds.x.raw_parts();
     debug_assert_eq!(n_cols, snap.ds.d());
     let (m_cols, m_indptr, m_indices, m_values) = snap.means.m.raw_parts();
@@ -228,24 +310,55 @@ pub fn save_snapshot(
         w.into_bytes()
     };
 
-    let sections = vec![
-        (sec::META, meta.into_bytes()),
-        (sec::CORPUS_INDPTR, enc_usizes(x_indptr)),
-        (sec::CORPUS_INDICES, enc_u32s(x_indices)),
-        (sec::CORPUS_VALUES, enc_f64s(x_values)),
-        (sec::DF, enc_u32s(&snap.ds.df)),
-        (sec::ORIG_TERM, enc_u32s(&snap.ds.orig_term)),
-        (sec::ASSIGN, enc_u32s(&snap.assign)),
-        (sec::MEANS_INDPTR, enc_usizes(m_indptr)),
-        (sec::MEANS_INDICES, enc_u32s(m_indices)),
-        (sec::MEANS_VALUES, enc_f64s(m_values)),
-        (sec::MEAN_SIZES, enc_u32s(&snap.means.sizes)),
-        (sec::RHO, enc_f64s(&snap.rho)),
-        (sec::MEMBER_OFFSETS, enc_usizes(member_offsets)),
-        (sec::MEMBER_IDS, enc_u32s(member_ids)),
-        (sec::ORIG_TO_TERM, enc_u32s(orig_to_term)),
-    ];
-    writer::write_blocks_file(path, KIND_SNAPSHOT, &sections)
+    if compress {
+        // v2: the posting families ride as chunk streams; the id-keyed
+        // sections they replace are simply absent from the manifest.
+        let corpus = chunk::encode_postings(x_indptr, x_indices, x_values);
+        let means = chunk::encode_postings(m_indptr, m_indices, m_values);
+        let members = chunk::encode_postings(member_offsets, member_ids, &[]);
+        let sections = vec![
+            (sec::META, meta.into_bytes()),
+            (sec::CORPUS_INDPTR, enc_usizes(x_indptr)),
+            (sec::CORPUS_CHUNK_META, corpus.meta),
+            (sec::CORPUS_CHUNK_IDS, corpus.ids),
+            (sec::CORPUS_CHUNK_VALS, corpus.vals),
+            (sec::DF, enc_u32s(&snap.ds.df)),
+            (sec::ORIG_TERM, enc_u32s(&snap.ds.orig_term)),
+            (sec::ASSIGN, enc_u32s(&snap.assign)),
+            (sec::MEANS_INDPTR, enc_usizes(m_indptr)),
+            (sec::MEANS_CHUNK_META, means.meta),
+            (sec::MEANS_CHUNK_IDS, means.ids),
+            (sec::MEANS_CHUNK_VALS, means.vals),
+            (sec::MEAN_SIZES, enc_u32s(&snap.means.sizes)),
+            (sec::RHO, enc_f64s(&snap.rho)),
+            (sec::MEMBER_OFFSETS, enc_usizes(member_offsets)),
+            (sec::MEMBER_CHUNK_META, members.meta),
+            (sec::MEMBER_CHUNK_IDS, members.ids),
+            (sec::ORIG_TO_TERM, enc_u32s(orig_to_term)),
+        ];
+        writer::write_blocks_file_versioned(path, KIND_SNAPSHOT, VERSION_COMPRESSED, &sections)
+    } else {
+        // v1: exactly the layout every snapshot before the version bump
+        // used — section order (and therefore every byte) is unchanged.
+        let sections = vec![
+            (sec::META, meta.into_bytes()),
+            (sec::CORPUS_INDPTR, enc_usizes(x_indptr)),
+            (sec::CORPUS_INDICES, enc_u32s(x_indices)),
+            (sec::CORPUS_VALUES, enc_f64s(x_values)),
+            (sec::DF, enc_u32s(&snap.ds.df)),
+            (sec::ORIG_TERM, enc_u32s(&snap.ds.orig_term)),
+            (sec::ASSIGN, enc_u32s(&snap.assign)),
+            (sec::MEANS_INDPTR, enc_usizes(m_indptr)),
+            (sec::MEANS_INDICES, enc_u32s(m_indices)),
+            (sec::MEANS_VALUES, enc_f64s(m_values)),
+            (sec::MEAN_SIZES, enc_u32s(&snap.means.sizes)),
+            (sec::RHO, enc_f64s(&snap.rho)),
+            (sec::MEMBER_OFFSETS, enc_usizes(member_offsets)),
+            (sec::MEMBER_IDS, enc_u32s(member_ids)),
+            (sec::ORIG_TO_TERM, enc_u32s(orig_to_term)),
+        ];
+        writer::write_blocks_file(path, KIND_SNAPSHOT, &sections)
+    }
 }
 
 /// Load, checksum-verify, and structurally validate a serving snapshot.
@@ -254,6 +367,117 @@ pub fn save_snapshot(
 /// [`SkmError::CorruptSnapshot`] and no partial snapshot escapes.
 pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> {
     let raw = read_blocks_file(path, KIND_SNAPSHOT)?;
+    build_snapshot(path, &raw, None)
+}
+
+/// Open a snapshot with the corpus posting sections left **on disk**
+/// behind an mmap + LRU block cache (see [`mmap`]), so serving does not
+/// need the corpus resident in RAM. Everything else — metadata, means,
+/// ρ, member lists, relabeling — is decoded and validated eagerly, and
+/// the corpus chunks are streamed once through the serving decode path
+/// at open time, so any defect is a typed error here, not a panic
+/// later. Queries served through the returned snapshot are bit-identical
+/// to the in-RAM router.
+///
+/// `cache_blocks` caps the LRU at that many 64 KiB payload blocks
+/// (clamped to at least 4). Version-1 files carry no chunk sections, so
+/// they fall back to the ordinary full in-RAM load.
+pub fn load_snapshot_mmap(
+    path: &Path,
+    cache_blocks: usize,
+) -> SkmResult<(ClusteredCorpus, RouterParams)> {
+    let map = SnapshotMap::open(path)?;
+    let (header, entries) = reader::check_structure(map.bytes(), path, KIND_SNAPSHOT)?;
+    if header.version == VERSION {
+        drop(map);
+        return load_snapshot(path);
+    }
+    let skip = [sec::CORPUS_CHUNK_IDS, sec::CORPUS_CHUNK_VALS];
+    let raw = reader::assemble_sections(map.bytes(), path, &header, &entries, &skip)?;
+    let geom = |id: u32| {
+        entries
+            .iter()
+            .find(|e| e.id == id)
+            .map(|e| SectionGeom {
+                first_block: e.first_block,
+                byte_len: e.byte_len,
+            })
+            .ok_or_else(|| {
+                corrupt(
+                    path,
+                    "corpus_chunks",
+                    format!("section {id} missing from manifest"),
+                )
+            })
+    };
+    let ids_sec = geom(sec::CORPUS_CHUNK_IDS)?;
+    let vals_sec = geom(sec::CORPUS_CHUNK_VALS)?;
+    build_snapshot(
+        path,
+        &raw,
+        Some(DiskParts {
+            map,
+            ids_sec,
+            vals_sec,
+            cache_blocks,
+        }),
+    )
+}
+
+/// Corpus sections the mmap loader leaves on disk, handed through to
+/// [`DiskRows`].
+struct DiskParts {
+    map: SnapshotMap,
+    ids_sec: SectionGeom,
+    vals_sec: SectionGeom,
+    cache_blocks: usize,
+}
+
+/// Decode one posting family according to the file's format version:
+/// v1 reads the raw id/value sections verbatim, v2 chunk-decodes (bit-
+/// exactly). A `0` in the values slot of either triple marks an
+/// ids-only family (member lists). For v2 the row pointer's monotone
+/// shape is enforced first — the chunk layout derives row sizes from it.
+fn decoded_postings(
+    raw: &RawFile,
+    path: &Path,
+    name: &str,
+    indptr: &[usize],
+    v1: (u32, u32),
+    v2: (u32, u32, u32),
+) -> SkmResult<(Vec<u32>, Vec<f64>)> {
+    if raw.version == VERSION {
+        let ids = section_u32s(raw, v1.0, name, path)?;
+        let vals = if v1.1 == 0 {
+            Vec::new()
+        } else {
+            section_f64s(raw, v1.1, name, path)?
+        };
+        return Ok((ids, vals));
+    }
+    let c = |d: String| corrupt(path, name, d);
+    if indptr.is_empty() {
+        return Err(c("empty row pointer".to_string()));
+    }
+    if indptr[0] != 0 || indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(c("row pointer not monotone from 0".to_string()));
+    }
+    let meta = raw.section(v2.0, name, path)?;
+    let ids = raw.section(v2.1, name, path)?;
+    let has_vals = v2.2 != 0;
+    let vals: &[u8] = if has_vals {
+        raw.section(v2.2, name, path)?
+    } else {
+        &[]
+    };
+    chunk::decode_postings(indptr, meta, ids, vals, has_vals).map_err(c)
+}
+
+fn build_snapshot(
+    path: &Path,
+    raw: &RawFile,
+    disk: Option<DiskParts>,
+) -> SkmResult<(ClusteredCorpus, RouterParams)> {
     let c = |section: &str, d: String| corrupt(path, section, d);
 
     // META.
@@ -295,17 +519,52 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
         return Err(c("meta", format!("v_th = {v_th} (want positive finite)")));
     }
 
-    // Corpus CSR + relabeling.
-    let x = validated_csr(
-        path,
-        "corpus",
-        n,
-        d,
-        section_usizes(&raw, sec::CORPUS_INDPTR, "corpus", path)?,
-        section_u32s(&raw, sec::CORPUS_INDICES, "corpus", path)?,
-        section_f64s(&raw, sec::CORPUS_VALUES, "corpus", path)?,
-    )?;
-    let df = section_u32s(&raw, sec::DF, "df", path)?;
+    // Corpus CSR + relabeling. With a [`DiskParts`] the corpus postings
+    // stay on disk: chunk metadata is decoded and every row is streamed
+    // once through the serving decode path (full validation), then the
+    // in-RAM matrix is an empty stub of the right shape — all corpus
+    // row access goes through [`DiskRows`] (`ClusteredCorpus::row_view`).
+    let x_indptr = section_usizes(raw, sec::CORPUS_INDPTR, "corpus", path)?;
+    let mut disk_rows: Option<Arc<DiskRows>> = None;
+    let x = match disk {
+        None => {
+            let (xi, xv) = decoded_postings(
+                raw,
+                path,
+                "corpus",
+                &x_indptr,
+                (sec::CORPUS_INDICES, sec::CORPUS_VALUES),
+                (
+                    sec::CORPUS_CHUNK_META,
+                    sec::CORPUS_CHUNK_IDS,
+                    sec::CORPUS_CHUNK_VALS,
+                ),
+            )?;
+            validated_csr(path, "corpus", n, d, x_indptr, xi, xv)?
+        }
+        Some(dp) => {
+            check_indptr(path, "corpus", n, &x_indptr)?;
+            let metas = chunk::decode_metas(
+                raw.section(sec::CORPUS_CHUNK_META, "corpus_chunks", path)?,
+                &x_indptr,
+            )
+            .map_err(|d| c("corpus_chunks", d))?;
+            let rows = DiskRows::new(
+                dp.map,
+                path,
+                metas,
+                x_indptr,
+                d,
+                dp.ids_sec,
+                dp.vals_sec,
+                dp.cache_blocks,
+            )?;
+            rows.validate_all()?;
+            disk_rows = Some(Arc::new(rows));
+            CsrMatrix::from_raw(d, vec![0; n + 1], Vec::new(), Vec::new())
+        }
+    };
+    let df = section_u32s(raw, sec::DF, "df", path)?;
     if df.len() != d {
         return Err(c("df", format!("{} entries for D = {d}", df.len())));
     }
@@ -317,13 +576,13 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
     if let Some(&bad) = df.iter().find(|&&f| f == 0 || f as usize > n) {
         return Err(c("df", format!("df value {bad} outside [1, N={n}]")));
     }
-    let orig_term = section_u32s(&raw, sec::ORIG_TERM, "orig_term", path)?;
+    let orig_term = section_u32s(raw, sec::ORIG_TERM, "orig_term", path)?;
     if orig_term.len() != d {
         return Err(c("orig_term", format!("{} entries for D = {d}", orig_term.len())));
     }
 
     // Assignment.
-    let assign = section_u32s(&raw, sec::ASSIGN, "assign", path)?;
+    let assign = section_u32s(raw, sec::ASSIGN, "assign", path)?;
     if assign.len() != n {
         return Err(c("assign", format!("{} entries for N = {n}", assign.len())));
     }
@@ -331,23 +590,28 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
         return Err(c("assign", format!("cluster id {bad} >= K = {k}")));
     }
 
-    // Frozen means.
-    let m = validated_csr(
+    // Frozen means (always decoded to RAM — they are small and hot).
+    let m_indptr = section_usizes(raw, sec::MEANS_INDPTR, "means", path)?;
+    let (mi, mv) = decoded_postings(
+        raw,
         path,
         "means",
-        k,
-        d,
-        section_usizes(&raw, sec::MEANS_INDPTR, "means", path)?,
-        section_u32s(&raw, sec::MEANS_INDICES, "means", path)?,
-        section_f64s(&raw, sec::MEANS_VALUES, "means", path)?,
+        &m_indptr,
+        (sec::MEANS_INDICES, sec::MEANS_VALUES),
+        (
+            sec::MEANS_CHUNK_META,
+            sec::MEANS_CHUNK_IDS,
+            sec::MEANS_CHUNK_VALS,
+        ),
     )?;
-    let sizes = section_u32s(&raw, sec::MEAN_SIZES, "mean_sizes", path)?;
+    let m = validated_csr(path, "means", k, d, m_indptr, mi, mv)?;
+    let sizes = section_u32s(raw, sec::MEAN_SIZES, "mean_sizes", path)?;
     if sizes.len() != k {
         return Err(c("mean_sizes", format!("{} entries for K = {k}", sizes.len())));
     }
 
     // ρ.
-    let rho = section_f64s(&raw, sec::RHO, "rho", path)?;
+    let rho = section_f64s(raw, sec::RHO, "rho", path)?;
     if rho.len() != n {
         return Err(c("rho", format!("{} entries for N = {n}", rho.len())));
     }
@@ -357,7 +621,7 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
 
     // Member posting lists: an ascending partition of [0, N) that is
     // exactly consistent with `assign` and `sizes`.
-    let member_offsets = section_usizes(&raw, sec::MEMBER_OFFSETS, "members", path)?;
+    let member_offsets = section_usizes(raw, sec::MEMBER_OFFSETS, "members", path)?;
     if member_offsets.len() != k + 1 {
         return Err(c("members", format!("{} offsets for K = {k}", member_offsets.len())));
     }
@@ -371,7 +635,16 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
     if member_offsets.windows(2).any(|w| w[0] > w[1]) {
         return Err(c("members", "offsets decrease".to_string()));
     }
-    let member_ids = section_u32s(&raw, sec::MEMBER_IDS, "members", path)?;
+    // Ids-only family: offsets are its row pointer (validated above,
+    // which is why the ids are decoded only now).
+    let (member_ids, _) = decoded_postings(
+        raw,
+        path,
+        "members",
+        &member_offsets,
+        (sec::MEMBER_IDS, 0),
+        (sec::MEMBER_CHUNK_META, sec::MEMBER_CHUNK_IDS, 0),
+    )?;
     if member_ids.len() != n {
         return Err(c("members", format!("{} member ids for N = {n}", member_ids.len())));
     }
@@ -402,7 +675,7 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
 
     // Inverse relabeling: orig_to_term must invert orig_term exactly,
     // in both directions, and cover exactly [0, max original id].
-    let orig_to_term = section_u32s(&raw, sec::ORIG_TO_TERM, "orig_to_term", path)?;
+    let orig_to_term = section_u32s(raw, sec::ORIG_TO_TERM, "orig_to_term", path)?;
     let want_len = orig_term.iter().max().map(|&t| t as usize + 1).unwrap_or(0);
     if orig_to_term.len() != want_len {
         return Err(c("orig_to_term", format!(
@@ -437,7 +710,7 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
         moved: vec![false; k], // frozen by construction
         sizes,
     };
-    let snap = ClusteredCorpus::from_validated_parts(
+    let mut snap = ClusteredCorpus::from_validated_parts(
         ds,
         assign,
         k,
@@ -448,6 +721,9 @@ pub fn load_snapshot(path: &Path) -> SkmResult<(ClusteredCorpus, RouterParams)> 
         member_ids,
         orig_to_term,
     );
+    if let Some(rows) = disk_rows {
+        snap.attach_disk(rows);
+    }
     Ok((snap, RouterParams { t_th, v_th }))
 }
 
@@ -480,7 +756,7 @@ mod tests {
             v_th: 0.25,
         };
         let path = tmp_file("rt");
-        let bytes = save_snapshot(&path, &snap, params).unwrap();
+        let bytes = save_snapshot(&path, &snap, &params).unwrap();
         assert!(bytes > 0);
         let (loaded, p2) = load_snapshot(&path).unwrap();
         assert_eq!(p2.t_th, params.t_th);
@@ -509,10 +785,73 @@ mod tests {
     fn exact_params_sentinel_round_trips() {
         let snap = snapshot();
         let path = tmp_file("exact");
-        save_snapshot(&path, &snap, RouterParams::exact()).unwrap();
+        save_snapshot(&path, &snap, &RouterParams::exact()).unwrap();
         let (_, p) = load_snapshot(&path).unwrap();
         assert_eq!(p.t_th, usize::MAX);
         assert_eq!(p.v_th, 1.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compressed_snapshot_round_trip_is_bit_exact() {
+        let snap = snapshot();
+        let params = RouterParams {
+            t_th: snap.ds.d() / 2,
+            v_th: 0.25,
+        };
+        let path = tmp_file("v2rt");
+        save_snapshot_with(&path, &snap, &params, true).unwrap();
+        let (loaded, p2) = load_snapshot(&path).unwrap();
+        assert_eq!(p2.t_th, params.t_th);
+        assert_eq!(p2.v_th.to_bits(), params.v_th.to_bits());
+        assert_eq!(loaded.ds.x, snap.ds.x);
+        assert_eq!(loaded.ds.df, snap.ds.df);
+        assert_eq!(loaded.assign, snap.assign);
+        assert_eq!(loaded.means.m, snap.means.m);
+        assert_eq!(
+            loaded.rho.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            snap.rho.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        for j in 0..snap.k {
+            assert_eq!(loaded.members(j), snap.members(j));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_load_serves_corpus_rows_bit_exact() {
+        let snap = snapshot();
+        let path = tmp_file("mmap");
+        save_snapshot_with(&path, &snap, &RouterParams::exact(), true).unwrap();
+        let (loaded, _) = load_snapshot_mmap(&path, 8).unwrap();
+        // Corpus postings live on disk; means/members are in RAM.
+        assert_eq!(loaded.means.m, snap.means.m);
+        for j in 0..snap.k {
+            assert_eq!(loaded.members(j), snap.members(j));
+        }
+        let (mut b, mut ids, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..snap.ds.n() {
+            let (ti, tv) = snap.ds.x.row(i);
+            let (li, lv) = loaded.row_view(i, &mut b, &mut ids, &mut vals);
+            assert_eq!(li, ti, "row {i} ids");
+            assert_eq!(
+                lv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                tv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row {i} value bits"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_load_of_v1_file_falls_back_to_full_ram() {
+        let snap = snapshot();
+        let path = tmp_file("mmapv1");
+        save_snapshot(&path, &snap, &RouterParams::exact()).unwrap();
+        let (loaded, p) = load_snapshot_mmap(&path, 8).unwrap();
+        assert_eq!(p.t_th, usize::MAX);
+        // v1 has no chunk sections: the whole corpus is in RAM.
+        assert_eq!(loaded.ds.x, snap.ds.x);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -16,17 +16,18 @@
 
 use crate::error::{SkmError, SkmResult};
 use crate::persist::format::{
-    crc32, decode_manifest, Footer, Header, BLOCK_CAP, BLOCK_HDR, BLOCK_SIZE, FOOTER_LEN,
-    HEADER_LEN,
+    crc32, decode_manifest, Footer, Header, SectionEntry, BLOCK_CAP, BLOCK_HDR, BLOCK_SIZE,
+    FOOTER_LEN, HEADER_LEN,
 };
 use std::path::Path;
 
-/// A fully checksum-verified file: the kind from the header and each
-/// section's reassembled payload, in manifest order. Structural
-/// validation of the *decoded* values is the caller's job.
+/// A fully checksum-verified file: the header's kind and format
+/// version, and each section's reassembled payload, in manifest order.
+/// Structural validation of the *decoded* values is the caller's job.
 #[derive(Debug)]
 pub struct RawFile {
     pub kind: u32,
+    pub version: u32,
     sections: Vec<(u32, Vec<u8>)>,
 }
 
@@ -47,14 +48,20 @@ impl RawFile {
     }
 }
 
-/// Read and fully verify a version-1 block file. `expect_kind` rejects
-/// e.g. loading a checkpoint where a serving snapshot is required.
-pub fn read_blocks_file(path: &Path, expect_kind: u32) -> SkmResult<RawFile> {
+/// Validate everything about a block file *except* the per-block
+/// payload CRCs: length bounds, header (magic, CRC, version,
+/// endianness, block size, kind), footer, manifest CRC, and manifest
+/// geometry. Shared by the eager reader below (which then verifies
+/// every block) and the mmap-backed opener in [`crate::persist::mmap`]
+/// (which defers corpus-block CRCs to cache-fill time).
+pub(crate) fn check_structure(
+    buf: &[u8],
+    path: &Path,
+    expect_kind: u32,
+) -> SkmResult<(Header, Vec<SectionEntry>)> {
     let corrupt = |section: &str, detail: String| {
         SkmError::corrupt_snapshot(path.display().to_string(), section, detail)
     };
-
-    let buf = fs_read(path)?;
     let len = buf.len();
     if len < HEADER_LEN + 4 + FOOTER_LEN {
         return Err(corrupt("file", format!("{len} bytes is too short to be a snapshot")));
@@ -156,13 +163,42 @@ pub fn read_blocks_file(path: &Path, expect_kind: u32) -> SkmResult<RawFile> {
             ),
         ));
     }
+    Ok((header, entries))
+}
+
+/// Read and fully verify a block file (any understood format version).
+/// `expect_kind` rejects e.g. loading a checkpoint where a serving
+/// snapshot is required.
+pub fn read_blocks_file(path: &Path, expect_kind: u32) -> SkmResult<RawFile> {
+    let buf = fs_read(path)?;
+    let (header, entries) = check_structure(&buf, path, expect_kind)?;
+    assemble_sections(&buf, path, &header, &entries, &[])
+}
+
+/// Reassemble (and CRC-verify, block by block) every section except the
+/// ids in `skip` from an already structure-checked buffer. The mmap
+/// opener uses `skip` to leave the big corpus posting sections on disk —
+/// their blocks are CRC-verified lazily at block-cache fill time.
+pub(crate) fn assemble_sections(
+    buf: &[u8],
+    path: &Path,
+    header: &Header,
+    entries: &[SectionEntry],
+    skip: &[u32],
+) -> SkmResult<RawFile> {
+    let corrupt = |section: &str, detail: String| {
+        SkmError::corrupt_snapshot(path.display().to_string(), section, detail)
+    };
 
     // Data blocks: verify each block's declared payload length and CRC,
     // then reassemble the section payload. `byte_len` is bounded by
     // `n_blocks · BLOCK_CAP` (checked above) which is bounded by the
     // file size, so the allocation below cannot exceed the input.
     let mut sections = Vec::with_capacity(entries.len());
-    for e in &entries {
+    for e in entries {
+        if skip.contains(&e.id) {
+            continue;
+        }
         let byte_len = usize::try_from(e.byte_len)
             .map_err(|_| corrupt("manifest", format!("section {} length overflows", e.id)))?;
         let mut payload = Vec::with_capacity(byte_len);
@@ -200,6 +236,7 @@ pub fn read_blocks_file(path: &Path, expect_kind: u32) -> SkmResult<RawFile> {
 
     Ok(RawFile {
         kind: header.kind,
+        version: header.version,
         sections,
     })
 }
@@ -232,6 +269,7 @@ mod tests {
         let s = sections();
         write_blocks_file(&path, KIND_SNAPSHOT, &s).unwrap();
         let raw = read_blocks_file(&path, KIND_SNAPSHOT).unwrap();
+        assert_eq!(raw.version, crate::persist::format::VERSION);
         for (id, payload) in &s {
             assert_eq!(raw.section(*id, "x", &path).unwrap(), payload.as_slice());
         }

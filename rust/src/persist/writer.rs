@@ -17,6 +17,7 @@
 use crate::error::{SkmError, SkmResult};
 use crate::persist::format::{
     crc32, encode_manifest, Footer, Header, SectionEntry, BLOCK_CAP, BLOCK_SIZE, HEADER_LEN,
+    MAX_VERSION, VERSION,
 };
 use std::fs::{self, File};
 use std::io::Write;
@@ -82,12 +83,27 @@ fn temp_path_for(path: &Path) -> SkmResult<PathBuf> {
 /// atomically. Returns the total file size in bytes. On any error the
 /// destination is untouched and the temp file is removed.
 pub fn write_blocks_file(path: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u64> {
+    write_blocks_file_versioned(path, kind, VERSION, sections)
+}
+
+/// [`write_blocks_file`] with an explicit format version in the header
+/// (the container layout is version-independent; the version tells the
+/// loader which section codec the payloads use). Version 1 output is
+/// byte-identical to [`write_blocks_file`]. The fail-point sites are
+/// shared, so the crash kill matrix covers every version's write path.
+pub fn write_blocks_file_versioned(
+    path: &Path,
+    kind: u32,
+    version: u32,
+    sections: &[(u32, Vec<u8>)],
+) -> SkmResult<u64> {
+    debug_assert!((VERSION..=MAX_VERSION).contains(&version));
     let tmp = temp_path_for(path)?;
     let mut guard = TempGuard {
         path: tmp.clone(),
         armed: true,
     };
-    let bytes = write_temp(&tmp, kind, sections)?;
+    let bytes = write_temp(&tmp, kind, version, sections)?;
     crate::failpoint_res!("persist.rename", 0u64);
     fs::rename(&tmp, path).map_err(|e| {
         SkmError::io(
@@ -102,7 +118,7 @@ pub fn write_blocks_file(path: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) ->
 
 /// Write and fsync the complete temp file (header, blocks, manifest,
 /// footer). The caller owns cleanup-on-error via [`TempGuard`].
-fn write_temp(tmp: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u64> {
+fn write_temp(tmp: &Path, kind: u32, version: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u64> {
     let ioe = |what: &str, e: std::io::Error| {
         SkmError::io(format!("{what} {}", tmp.display()), e)
     };
@@ -126,7 +142,12 @@ fn write_temp(tmp: &Path, kind: u32, sections: &[(u32, Vec<u8>)]) -> SkmResult<u
 
     let f = File::create(tmp).map_err(|e| ioe("create snapshot temp", e))?;
     let mut w = std::io::BufWriter::new(f);
-    w.write_all(&Header { kind, n_blocks }.encode())
+    let header = Header {
+        version,
+        kind,
+        n_blocks,
+    };
+    w.write_all(&header.encode())
         .map_err(|e| ioe("write snapshot header to", e))?;
 
     let zeros = [0u8; BLOCK_CAP];
@@ -211,5 +232,31 @@ mod tests {
     #[test]
     fn rejects_pathless_destination() {
         assert!(write_blocks_file(Path::new("/"), 1, &[]).is_err());
+    }
+
+    #[test]
+    fn versioned_writer_stamps_header_and_v1_bytes_are_unchanged() {
+        use crate::persist::format::{Header, HEADER_LEN, MAX_VERSION};
+        let dir = tmp_dir("versioned");
+        let sections = vec![(1u32, vec![5u8; 100])];
+        let p1 = dir.join("v1.skm");
+        let p1b = dir.join("v1b.skm");
+        let p2 = dir.join("v2.skm");
+        write_blocks_file(&p1, 1, &sections).unwrap();
+        write_blocks_file_versioned(&p1b, 1, 1, &sections).unwrap();
+        write_blocks_file_versioned(&p2, 1, MAX_VERSION, &sections).unwrap();
+        let b1 = fs::read(&p1).unwrap();
+        let b1b = fs::read(&p1b).unwrap();
+        let b2 = fs::read(&p2).unwrap();
+        // The default entry point IS version 1, bit for bit.
+        assert_eq!(b1, b1b);
+        assert_eq!(Header::decode(&b1[..HEADER_LEN]).unwrap().version, 1);
+        assert_eq!(
+            Header::decode(&b2[..HEADER_LEN]).unwrap().version,
+            MAX_VERSION
+        );
+        // Only the header (version field + its CRC) differs.
+        assert_eq!(b1[HEADER_LEN..], b2[HEADER_LEN..]);
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -164,6 +164,18 @@ impl RouterParams {
         if snap.k < 4 {
             return Self::exact();
         }
+        // A disk-backed snapshot's in-RAM corpus is an empty stub; the
+        // estimator would silently model a corpus of zeros. Stored
+        // parameters (or explicit overrides) are the supported source
+        // there — degrade to exact, never to wrong estimates.
+        if snap.is_disk_backed() {
+            log_once(
+                "router.estimate.disk",
+                "parameter estimation needs the corpus in RAM; disk-backed snapshot \
+                 serves with exact routing parameters (use the stored or explicit ones)",
+            );
+            return Self::exact();
+        }
         let est = crate::error::contain("router.estimate", || {
             crate::failpoint!("router.estimate", 0u64);
             let s_min = ((d as f64 * cfg.s_min_frac) as usize).min(d.saturating_sub(1));
@@ -223,12 +235,22 @@ impl RouterParams {
 pub(crate) struct RouteScratch {
     rho: Vec<f64>,
     seeds: Vec<(f64, u32)>,
+    /// Row-decode scratch for disk-backed snapshots
+    /// ([`ClusteredCorpus::row_view`]): chunk byte span, decoded term
+    /// ids, decoded values. Unused (and never grown) when the corpus is
+    /// resident in RAM.
+    row_bytes: Vec<u8>,
+    row_ids: Vec<u32>,
+    row_vals: Vec<f64>,
 }
 
 impl RouteScratch {
     fn mem_bytes(&self) -> usize {
         self.rho.capacity() * size_of::<f64>()
             + self.seeds.capacity() * size_of::<(f64, u32)>()
+            + self.row_bytes.capacity()
+            + self.row_ids.capacity() * size_of::<u32>()
+            + self.row_vals.capacity() * size_of::<f64>()
     }
 }
 
@@ -525,7 +547,16 @@ impl<'a> Router<'a> {
         let mut hits: Vec<(f64, u32)> = Vec::with_capacity(top_k.min(64) + 1);
         for &(c, _) in &centroids {
             for &i in self.snap.members(c as usize) {
-                let (ts, vs) = self.snap.ds.x.row(i as usize);
+                // In-RAM: borrows the CSR. Disk-backed: decodes the
+                // row's chunks through the block cache into this
+                // scratch. Same bits either way, so the score bits
+                // below are identical across the two paths.
+                let (ts, vs) = self.snap.row_view(
+                    i as usize,
+                    &mut s.row_bytes,
+                    &mut s.row_ids,
+                    &mut s.row_vals,
+                );
                 let (sc, m) = dot_sorted_count(q.ids(), q.vals(), ts, vs);
                 counters.mult += m;
                 counters.exact_sims += 1;

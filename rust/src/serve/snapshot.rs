@@ -21,7 +21,9 @@ use crate::algo::ClusterOutput;
 use crate::coordinator::MiniBatchOutput;
 use crate::error::{SkmError, SkmResult};
 use crate::index::{update_means, MeanSet};
+use crate::persist::mmap::DiskRows;
 use crate::sparse::{CsrMatrix, Dataset};
+use std::sync::Arc;
 
 /// A sparse query vector in the frozen corpus feature space.
 ///
@@ -166,6 +168,12 @@ pub struct ClusteredCorpus {
     /// Original term id → relabeled feature-space id (`u32::MAX` when
     /// the original term never occurred in the corpus).
     orig_to_term: Vec<u32>,
+    /// When serving from a compressed snapshot via mmap
+    /// ([`crate::persist::load_snapshot_mmap`]): the disk-backed corpus
+    /// row reader. `ds.x` is then an empty stub of the right shape and
+    /// every corpus row access must go through [`Self::row_view`].
+    /// `None` for every in-RAM snapshot.
+    disk: Option<Arc<DiskRows>>,
 }
 
 impl ClusteredCorpus {
@@ -225,6 +233,7 @@ impl ClusteredCorpus {
             member_offsets,
             member_ids,
             orig_to_term,
+            disk: None,
         }
     }
 
@@ -285,6 +294,67 @@ impl ClusteredCorpus {
             member_offsets,
             member_ids,
             orig_to_term,
+            disk: None,
+        }
+    }
+
+    /// Switch corpus row access to a disk-backed reader (the mmap
+    /// loader's last step). The caller must have built `ds.x` as the
+    /// empty stub — the reader is the only source of corpus postings
+    /// from here on.
+    pub(crate) fn attach_disk(&mut self, rows: Arc<DiskRows>) {
+        debug_assert_eq!(rows.n_rows(), self.ds.n());
+        debug_assert_eq!(self.ds.x.nnz(), 0, "attach_disk over a resident corpus");
+        self.disk = Some(rows);
+    }
+
+    /// True when corpus rows are served from disk (mmap + block cache)
+    /// rather than resident memory.
+    pub fn is_disk_backed(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// `(cache hits, cache misses)` of the disk reader's block cache;
+    /// `(0, 0)` for in-RAM snapshots.
+    pub fn disk_cache_counters(&self) -> (u64, u64) {
+        self.disk.as_ref().map_or((0, 0), |d| d.cache_counters())
+    }
+
+    /// Corpus row `i` as `(term ids, values)`. In-RAM snapshots borrow
+    /// straight from the CSR; disk-backed snapshots decode the row's
+    /// chunks through the block cache into the caller's scratch buffers
+    /// and borrow from those. Decoded bits equal the saved bits either
+    /// way, so downstream dot products are bit-identical across the two
+    /// paths.
+    #[inline]
+    pub fn row_view<'a>(
+        &'a self,
+        i: usize,
+        bytes: &mut Vec<u8>,
+        ids: &'a mut Vec<u32>,
+        vals: &'a mut Vec<f64>,
+    ) -> (&'a [u32], &'a [f64]) {
+        match &self.disk {
+            None => self.ds.x.row(i),
+            Some(rows) => {
+                rows.fill_row(i, bytes, ids, vals);
+                (ids, vals)
+            }
+        }
+    }
+
+    /// Corpus document `i` as a [`Query`], valid for both in-RAM and
+    /// disk-backed snapshots (rows are already unit-norm or zero).
+    /// Prefer this over [`Query::from_row`] when the snapshot may have
+    /// come from [`crate::persist::load_snapshot_mmap`] — the raw CSR
+    /// accessor would read the empty stub there.
+    pub fn query_from_row(&self, i: usize) -> Query {
+        let (mut b, mut ids, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+        let (ts, vs) = self.row_view(i, &mut b, &mut ids, &mut vals);
+        Query {
+            d: self.ds.d(),
+            ids: ts.to_vec(),
+            vals: vs.to_vec(),
         }
     }
 
@@ -319,7 +389,11 @@ impl ClusteredCorpus {
     }
 
     /// Approximate resident bytes of the snapshot (corpus CSR + means +
-    /// member lists + relabeling table).
+    /// member lists + relabeling table). For a disk-backed snapshot the
+    /// corpus stub contributes ~nothing and the disk reader's resident
+    /// state (chunk metadata + block cache at capacity) is counted
+    /// instead — the mmap'd file itself is page cache, not anonymous
+    /// memory.
     pub fn mem_bytes(&self) -> usize {
         use std::mem::size_of;
         let csr = |m: &CsrMatrix| {
@@ -333,6 +407,7 @@ impl ClusteredCorpus {
             + self.member_offsets.len() * size_of::<usize>()
             + self.member_ids.len() * size_of::<u32>()
             + self.orig_to_term.len() * size_of::<u32>()
+            + self.disk.as_ref().map_or(0, |d| d.resident_bytes())
     }
 }
 

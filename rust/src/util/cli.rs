@@ -193,6 +193,26 @@ impl Args {
     pub fn resume_path(&self) -> Option<&str> {
         self.get("resume")
     }
+
+    /// `--compress` — write the snapshot in format v2: posting ids
+    /// delta+varint chunk-encoded (`skm serve --save` only; loading
+    /// auto-detects the version).
+    pub fn compress(&self) -> bool {
+        self.flag("compress")
+    }
+
+    /// `--mmap` — serve `--load`ed compressed snapshots straight from
+    /// the file via mmap + block cache instead of decoding the corpus
+    /// into RAM (v1 snapshots fall back to the full in-RAM load).
+    pub fn mmap(&self) -> bool {
+        self.flag("mmap")
+    }
+
+    /// `--cache-mb N` — block-cache capacity in MiB for `--mmap`
+    /// serving (default 64).
+    pub fn cache_mb(&self) -> crate::error::SkmResult<usize> {
+        self.try_parsed_or::<usize>("cache-mb", crate::persist::mmap::DEFAULT_CACHE_MB)
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +312,23 @@ mod tests {
         let b = Args::parse_from(Vec::<String>::new());
         assert_eq!(b.top_p(), 0); // 0 = workload default
         assert_eq!(b.top_k(), 10);
+    }
+
+    #[test]
+    fn compression_and_mmap_accessors() {
+        let a = Args::parse_from(["serve", "--load", "s.skm", "--mmap", "--cache-mb", "128"]);
+        assert!(a.mmap());
+        assert!(!a.compress());
+        assert_eq!(a.cache_mb().unwrap(), 128);
+        let b = Args::parse_from(["serve", "--save", "s.skm", "--compress"]);
+        assert!(b.compress());
+        assert!(!b.mmap());
+        assert_eq!(
+            b.cache_mb().unwrap(),
+            crate::persist::mmap::DEFAULT_CACHE_MB
+        );
+        let bad = Args::parse_from(["serve", "--cache-mb", "lots"]);
+        assert!(bad.cache_mb().is_err());
     }
 
     #[test]

@@ -13,10 +13,18 @@
 //!   run (full-batch ES-ICP/Ding+/MIVI including the EstParams state
 //!   machine; mini-batch sequential and reservoir including the exact
 //!   sampling-RNG position).
+//! * **Compressed (v2) snapshots** — the delta+varint chunk codec
+//!   round-trips bit-exactly, `serve_batch` over a compressed snapshot
+//!   loaded via mmap (`load_snapshot_mmap`) bit-matches the in-RAM
+//!   router across threads ∈ {1, 2, 4, 7}, corrupted chunk metadata /
+//!   payloads (with *valid* block CRCs, so only the chunk-level
+//!   validation can catch them) are typed errors, and a committed v1
+//!   fixture stays loadable on the v2 reader.
 //! * **Atomic publish under injected faults** (cargo feature
 //!   `failpoints`) — killing the writer at every stage (each block, the
 //!   fsync, the rename) leaves the previously published file loadable
-//!   and leaves no temp litter.
+//!   and leaves no temp litter — for the v1 *and* the compressed v2
+//!   writer (shared fail-point sites).
 //!
 //! The failpoint registry is process-global, so the injected tests
 //! serialize on one mutex and clear the registry on entry and exit
@@ -33,7 +41,7 @@ use skm::coordinator::{
 };
 use skm::error::SkmError;
 use skm::persist::checkpoint::CheckpointSpec;
-use skm::persist::{load_snapshot, save_snapshot};
+use skm::persist::{load_snapshot, load_snapshot_mmap, save_snapshot, save_snapshot_with};
 use skm::serve::{serve_batch, ClusteredCorpus, Query, Router, RouterParams};
 use skm::sparse::build_dataset;
 use std::path::{Path, PathBuf};
@@ -247,6 +255,308 @@ fn byte_flips_in_every_checksummed_region_are_typed_corruption() {
         std::fs::write(&t, &bytes).unwrap();
         expect_corrupt(&t, &format!("byte {off} of {len} flipped"));
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Compressed (v2) snapshots: round-trip, mmap serving, chunk-level
+// corruption, v1 back-compat
+
+/// Bit-compare serve results between two routers for every thread count
+/// in the acceptance matrix.
+fn assert_serve_bit_eq(
+    hot: &Router,
+    cold: &Router,
+    queries: &[Query],
+    top_p: usize,
+    top_k: usize,
+    label: &str,
+) {
+    let (want, _) = serve_batch(hot, queries, top_p, top_k, &ParConfig::serial());
+    for threads in [1usize, 2, 4, 7] {
+        let par = ParConfig { threads, shard: 3 };
+        let (got, _) = serve_batch(cold, queries, top_p, top_k, &par);
+        assert_eq!(got.len(), want.len());
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            let (g, w) = (g.as_ref().unwrap(), w.as_ref().unwrap());
+            let tag = format!("{label}: threads={threads} query={qi}");
+            assert_eq!(g.centroids.len(), w.centroids.len(), "{tag}");
+            for (x, y) in g.centroids.iter().zip(&w.centroids) {
+                assert_eq!(x.0, y.0, "{tag}: centroid id");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "{tag}: centroid score bits");
+            }
+            assert_eq!(g.hits.len(), w.hits.len(), "{tag}");
+            for (x, y) in g.hits.iter().zip(&w.hits) {
+                assert_eq!(x.0, y.0, "{tag}: hit id");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "{tag}: hit score bits");
+            }
+        }
+    }
+}
+
+#[test]
+fn compressed_round_trip_is_bit_identical_and_smaller_payload() {
+    let dir = tmp_dir("v2roundtrip");
+    let v1 = dir.join("v1.skm");
+    let v2 = dir.join("v2.skm");
+    let snap = snapshot(300, 8);
+    let params = RouterParams {
+        t_th: snap.ds.d() / 3,
+        v_th: 0.3,
+    };
+    save_snapshot(&v1, &snap, &params).unwrap();
+    save_snapshot_with(&v2, &snap, &params, true).unwrap();
+
+    // Full in-RAM load of the compressed file: field-for-field bit
+    // equality, including the corpus matrix.
+    let (loaded, lp) = load_snapshot(&v2).unwrap();
+    assert_eq!(lp.t_th, params.t_th);
+    assert_eq!(lp.v_th.to_bits(), params.v_th.to_bits());
+    assert_snap_bit_eq(&snap, &loaded);
+    assert!(!loaded.is_disk_backed());
+
+    // The chunked id payloads beat the raw 4 B/id encoding. File sizes
+    // are block-padded (64 KiB granularity), so compare the summed
+    // manifest byte lengths instead — the honest payload measure.
+    let payload_bytes = |p: &Path| -> u64 {
+        use skm::persist::format::{FOOTER_LEN, MANIFEST_ENTRY_LEN};
+        let b = std::fs::read(p).unwrap();
+        let len = b.len();
+        let moff = u64::from_le_bytes(
+            b[len - FOOTER_LEN + 8..len - FOOTER_LEN + 16].try_into().unwrap(),
+        ) as usize;
+        let count = u32::from_le_bytes(b[moff..moff + 4].try_into().unwrap()) as usize;
+        (0..count)
+            .map(|i| {
+                let e = moff + 4 + i * MANIFEST_ENTRY_LEN;
+                u64::from_le_bytes(b[e + 20..e + 28].try_into().unwrap())
+            })
+            .sum()
+    };
+    let (p1, p2) = (payload_bytes(&v1), payload_bytes(&v2));
+    assert!(
+        p2 < p1,
+        "compressed payload {p2} not smaller than uncompressed {p1}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mmap_served_queries_bit_match_the_in_ram_router_across_threads() {
+    let dir = tmp_dir("mmapserve");
+    let path = dir.join("snap.skm");
+    let snap = snapshot(300, 8);
+    let params = RouterParams {
+        t_th: snap.ds.d() / 3,
+        v_th: 0.3,
+    };
+    save_snapshot_with(&path, &snap, &params, true).unwrap();
+
+    // Tiny cache (clamped floor) so eviction and re-fetch actually
+    // happen during the batch — correctness must not depend on
+    // residency.
+    let (disk_snap, dp) = load_snapshot_mmap(&path, 0).unwrap();
+    assert!(disk_snap.is_disk_backed());
+    assert_eq!(dp.t_th, params.t_th);
+
+    // Every corpus row decodes to the saved bits.
+    let (mut b, mut ids, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+    for i in 0..snap.ds.n() {
+        let (ti, tv) = snap.ds.x.row(i);
+        let (li, lv) = disk_snap.row_view(i, &mut b, &mut ids, &mut vals);
+        assert_eq!(li, ti, "row {i} ids");
+        assert!(
+            lv.iter().zip(tv).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "row {i} value bits"
+        );
+    }
+
+    let hot = Router::new(&snap, params).unwrap();
+    let cold = Router::new(&disk_snap, dp).unwrap();
+    let queries: Vec<Query> = (0..17).map(|i| Query::from_row(&snap.ds, i * 11)).collect();
+    assert_serve_bit_eq(&hot, &cold, &queries, 3, 5, "mmap");
+    let (hits, misses) = disk_snap.disk_cache_counters();
+    assert!(misses > 0, "serving never touched the disk reader");
+    assert!(hits + misses > 0);
+
+    // Re-serializing a disk-backed snapshot must refuse (its in-RAM
+    // corpus is a stub), not silently persist zeros.
+    let err = save_snapshot(&dir.join("resave.skm"), &disk_snap, &dp).unwrap_err();
+    assert_eq!(err.exit_code(), 2, "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Flip payload bytes of section `sec_id` in a block file and re-seal
+/// the containing block's CRC, so container-level checks pass and only
+/// chunk-level validation can catch the defect. `tweak` gets the
+/// section's first block's payload slice.
+fn corrupt_section_sealed(path: &Path, sec_id: u32, tweak: impl Fn(&mut [u8])) {
+    use skm::persist::format::{crc32, BLOCK_SIZE, FOOTER_LEN, HEADER_LEN, MANIFEST_ENTRY_LEN};
+    let mut b = std::fs::read(path).unwrap();
+    let len = b.len();
+    let moff = u64::from_le_bytes(
+        b[len - FOOTER_LEN + 8..len - FOOTER_LEN + 16].try_into().unwrap(),
+    ) as usize;
+    let count = u32::from_le_bytes(b[moff..moff + 4].try_into().unwrap()) as usize;
+    let mut first_block = None;
+    for i in 0..count {
+        let e = moff + 4 + i * MANIFEST_ENTRY_LEN;
+        if u32::from_le_bytes(b[e..e + 4].try_into().unwrap()) == sec_id {
+            first_block = Some(u64::from_le_bytes(b[e + 4..e + 12].try_into().unwrap()));
+        }
+    }
+    let fb = first_block.expect("section not in manifest") as usize;
+    let boff = HEADER_LEN + fb * BLOCK_SIZE;
+    let payload_len = u32::from_le_bytes(b[boff..boff + 4].try_into().unwrap()) as usize;
+    let payload = &mut b[boff + 8..boff + 8 + payload_len];
+    tweak(payload);
+    let crc = crc32(&b[boff + 8..boff + 8 + payload_len]);
+    b[boff + 4..boff + 8].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(path, &b).unwrap();
+}
+
+#[test]
+fn chunk_level_corruption_with_valid_block_crcs_is_typed() {
+    use skm::persist::sec;
+    let dir = tmp_dir("chunkfuzz");
+    let orig = dir.join("snap.skm");
+    let snap = snapshot(300, 8);
+    save_snapshot_with(&orig, &snap, &RouterParams::exact(), true).unwrap();
+    let pristine = std::fs::read(&orig).unwrap();
+    let t = dir.join("bad.skm");
+
+    // (a) Chunk metadata: zero the first record's posting count (meta
+    // stream = u64 chunk count, then 28-byte records starting with a
+    // u32 count).
+    std::fs::write(&t, &pristine).unwrap();
+    corrupt_section_sealed(&t, sec::CORPUS_CHUNK_META, |p| {
+        p[8..12].copy_from_slice(&0u32.to_le_bytes());
+    });
+    expect_corrupt(&t, "zeroed chunk posting count");
+    match load_snapshot_mmap(&t, 8) {
+        Err(SkmError::CorruptSnapshot { .. }) => {}
+        other => panic!("mmap load of corrupt metadata: {other:?}"),
+    }
+
+    // (b) Chunk metadata: break the id-offset contiguity of record 1
+    // (byte offset 8 + 28 + 8 = the second record's id_off field).
+    std::fs::write(&t, &pristine).unwrap();
+    corrupt_section_sealed(&t, sec::CORPUS_CHUNK_META, |p| {
+        let off = 8 + 28 + 8;
+        p[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    });
+    expect_corrupt(&t, "non-contiguous chunk id offset");
+
+    // (c) Compressed id payload: zero the first varint bytes — either a
+    // zero delta, a max_id mismatch, or a length mismatch, all typed.
+    std::fs::write(&t, &pristine).unwrap();
+    corrupt_section_sealed(&t, sec::CORPUS_CHUNK_IDS, |p| {
+        for v in p.iter_mut().take(4) {
+            *v = 0;
+        }
+    });
+    expect_corrupt(&t, "zeroed id varints");
+    match load_snapshot_mmap(&t, 8) {
+        Err(SkmError::CorruptSnapshot { .. }) => {}
+        other => panic!("mmap load of corrupt id payload: {other:?}"),
+    }
+
+    // (d) Value payload: force the first value's exponent/sign bytes to
+    // a negative NaN — must fail the finite-nonnegative contract.
+    std::fs::write(&t, &pristine).unwrap();
+    corrupt_section_sealed(&t, sec::CORPUS_CHUNK_VALS, |p| {
+        p[6] = 0xf8;
+        p[7] = 0xff;
+    });
+    expect_corrupt(&t, "negative-NaN value bits");
+    match load_snapshot_mmap(&t, 8) {
+        Err(SkmError::CorruptSnapshot { .. }) => {}
+        other => panic!("mmap load of corrupt value payload: {other:?}"),
+    }
+
+    // (e) Member chunk ids: same treatment as (c) for the ids-only
+    // family.
+    std::fs::write(&t, &pristine).unwrap();
+    corrupt_section_sealed(&t, sec::MEMBER_CHUNK_IDS, |p| {
+        for v in p.iter_mut().take(3) {
+            *v = 0xff;
+        }
+    });
+    expect_corrupt(&t, "mangled member id varints");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncation_and_flips_on_compressed_files_are_typed_corruption() {
+    use skm::persist::format::{BLOCK_SIZE, FOOTER_LEN, HEADER_LEN};
+    let dir = tmp_dir("v2fuzz");
+    let path = dir.join("snap.skm");
+    let snap = snapshot(260, 6);
+    save_snapshot_with(&path, &snap, &RouterParams::exact(), true).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    let len = full.len();
+
+    let t = dir.join("cut.skm");
+    for cut in [0usize, HEADER_LEN, HEADER_LEN + BLOCK_SIZE, len - FOOTER_LEN, len - 1] {
+        std::fs::write(&t, &full[..cut]).unwrap();
+        expect_corrupt(&t, &format!("v2 truncated to {cut} of {len} bytes"));
+    }
+    // Header version field (bytes 8..12) is CRC-protected.
+    let mut bytes = full.clone();
+    bytes[8] ^= 0x01;
+    std::fs::write(&t, &bytes).unwrap();
+    expect_corrupt(&t, "v2 header version flip");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Back-compat pin: a version-1 snapshot written by the pre-compression
+/// code path must keep loading on the v2 reader, bit for bit.
+///
+/// The fixture lives in the repo (`rust/tests/snapshots/v1_fixture.skm`)
+/// and is (re)generated deterministically when absent — the generator
+/// is the v1 writer itself, whose byte layout is pinned by
+/// `versioned_writer_stamps_header_and_v1_bytes_are_unchanged`. Once
+/// committed, this test catches any reader change that strands v1 files.
+#[test]
+fn committed_v1_fixture_loads_on_the_v2_reader() {
+    let fix_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/snapshots");
+    let fix = fix_dir.join("v1_fixture.skm");
+    let snap = snapshot(240, 7);
+    let params = RouterParams { t_th: 9, v_th: 0.4 };
+    if !fix.exists() {
+        std::fs::create_dir_all(&fix_dir).unwrap();
+        save_snapshot(&fix, &snap, &params).unwrap();
+        eprintln!("generated v1 fixture at {} — commit it", fix.display());
+    }
+
+    let (loaded, lp) = load_snapshot(&fix).unwrap();
+    assert_eq!(lp.t_th, params.t_th);
+    assert_eq!(lp.v_th.to_bits(), params.v_th.to_bits());
+    assert_snap_bit_eq(&snap, &loaded);
+
+    // The mmap entry point transparently falls back to in-RAM for v1.
+    let (fallback, _) = load_snapshot_mmap(&fix, 8).unwrap();
+    assert!(!fallback.is_disk_backed());
+    assert_snap_bit_eq(&snap, &fallback);
+
+    // Corruption of the committed fixture stays typed (spot-check the
+    // checksummed regions — header, block 0's CRC, footer; padding
+    // bytes are outside every checksum by design and the exhaustive
+    // region sweep runs on generated files above).
+    let full = std::fs::read(&fix).unwrap();
+    let len = full.len();
+    let dir = tmp_dir("v1fix");
+    let t = dir.join("bad.skm");
+    use skm::persist::format::{FOOTER_LEN, HEADER_LEN};
+    for off in [0usize, 12, HEADER_LEN + 4, len - FOOTER_LEN + 9, len - 5] {
+        let mut b = full.clone();
+        b[off] ^= 0x10;
+        std::fs::write(&t, &b).unwrap();
+        expect_corrupt(&t, &format!("fixture byte {off} flipped"));
+    }
+    std::fs::write(&t, &full[..full.len() - 9]).unwrap();
+    expect_corrupt(&t, "fixture truncated");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -582,6 +892,60 @@ mod injected {
         let (_, lp) = load_snapshot(&path).unwrap();
         assert_eq!(lp.t_th, params_v2.t_th);
         assert_eq!(lp.v_th.to_bits(), params_v2.v_th.to_bits());
+        no_temp_litter(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The compressed (v2) writer shares the fail-point-instrumented
+    /// publish path with v1 — prove it, don't assume it: kill the v2
+    /// writer at every stage over a previously published v1 snapshot.
+    /// The v1 file must stay bit-intact and loadable, no temp litter,
+    /// and once the fault clears the v2 publish wins and loads back
+    /// bit-exactly (the cross-version upgrade-in-place story).
+    #[test]
+    fn killed_compressed_writes_never_damage_the_published_snapshot() {
+        let _g = serialize();
+        let _c = Cleanup;
+        let dir = tmp_dir("atomic_v2");
+        let path = dir.join("snap.skm");
+        let snap = snapshot(260, 6);
+        let params = RouterParams::exact();
+        save_snapshot(&path, &snap, &params).unwrap();
+        let published = std::fs::read(&path).unwrap();
+        let n_blocks = u64::from_le_bytes(published[24..32].try_into().unwrap());
+        assert!(n_blocks >= 3, "fixture too small to kill first/middle/last");
+
+        let kill_specs: [(&str, String); 5] = [
+            ("persist.write_block", "error@0".to_string()),
+            ("persist.write_block", format!("error@{}", n_blocks / 2)),
+            ("persist.write_block", format!("error@{}", n_blocks - 1)),
+            ("persist.fsync", "error".to_string()),
+            ("persist.rename", "error".to_string()),
+        ];
+        for (site, spec) in &kill_specs {
+            set(site, spec).unwrap();
+            let err = save_snapshot_with(&path, &snap, &params, true).unwrap_err();
+            assert!(
+                matches!(err, SkmError::FaultInjected { .. }),
+                "{site} {spec}: {err:?}"
+            );
+            clear_all();
+            no_temp_litter(&dir);
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                published,
+                "{site} {spec}: published v1 file changed under a killed v2 write"
+            );
+            let (loaded, _) = load_snapshot(&path).unwrap();
+            assert_snap_bit_eq(&snap, &loaded);
+        }
+
+        // Fault cleared: the compressed publish replaces the v1 file
+        // atomically and round-trips bit-exactly.
+        save_snapshot_with(&path, &snap, &params, true).unwrap();
+        assert_ne!(std::fs::read(&path).unwrap(), published, "v2 bytes differ");
+        let (loaded, _) = load_snapshot(&path).unwrap();
+        assert_snap_bit_eq(&snap, &loaded);
         no_temp_litter(&dir);
         let _ = std::fs::remove_dir_all(&dir);
     }
