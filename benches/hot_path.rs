@@ -18,6 +18,11 @@
 //!     index kinds, with a bitwise equality check
 //!   * the ES-ICP phase-level breakdown (gather / verify / update /
 //!     rebuild)
+//!   * **the mini-batch update floor**: the in-place splice update plus
+//!     the incremental maintainer per round at batch sizes
+//!     {n/64, n/8, n}, bitwise parity-checked against the from-scratch
+//!     oracle before timing (the small/full cost ratio is reported by
+//!     bench-smoke, not gated)
 //!   * EstParams sweep
 //!
 //! Emits a machine-readable baseline to `$SKM_BENCH_JSON` (default
@@ -38,8 +43,9 @@ use skm::algo::{
 use skm::coordinator::minibatch::{run_minibatch, BatchSchedule, MiniBatchConfig};
 use skm::estparams::{estimate, EstConfig};
 use skm::index::{
-    membership_changes, update_means, update_means_with_rho, CsIndex, CsMaintainer, EsIndex,
-    EsMaintainer, InvIndex, InvMaintainer, MeanSet, ObjInvIndex, TaIndex, TaMaintainer,
+    membership_changes, update_means, update_means_minibatch, update_means_minibatch_inplace,
+    update_means_with_rho, CsIndex, CsMaintainer, EsIndex, EsMaintainer, InvIndex, InvMaintainer,
+    MbUpdateScratch, MeanSet, ObjInvIndex, TaIndex, TaMaintainer,
 };
 use skm::sparse::Dataset;
 use skm::util::json::Json;
@@ -647,6 +653,137 @@ fn main() {
         mb_obj_ratio
     );
 
+    // --- mini-batch update floor ------------------------------------------
+    // Direct per-round cost of the in-place splice update plus the
+    // incremental maintainer at batch sizes {n/64, n/8, n}. The claim
+    // under test is the cost model: a round costs O(batch + nnz of
+    // touched rows), so shrinking the batch must shrink the update cost
+    // instead of being swamped by an O(n) ρ copy or an O(nnz(M))
+    // rebuild. Bitwise parity of the in-place path against the
+    // from-scratch oracle is hard-asserted at every size before
+    // anything is timed; bench-smoke *reports* (never gates) the
+    // small/full-batch cost ratio.
+    let floor_sizes = [
+        (ds.n() / 64).max(64).min(ds.n()),
+        (ds.n() / 8).max(64).min(ds.n()),
+        ds.n(),
+    ];
+    let floor_decay = 1.0f64;
+    let floor_changed = vec![true; k];
+    let mut floor_sizes_counts = vec![0u32; k];
+    for &a in &out.assign {
+        floor_sizes_counts[a as usize] += 1;
+    }
+    let wrap_runs = |cursor: &mut usize, b: usize, runs: &mut Vec<(usize, usize)>| {
+        runs.clear();
+        let lo = *cursor;
+        let n = ds.n();
+        if lo + b <= n {
+            runs.push((lo, lo + b));
+            *cursor = if lo + b == n { 0 } else { lo + b };
+        } else {
+            let rem = lo + b - n;
+            runs.push((0, rem));
+            runs.push((lo, n));
+            *cursor = rem;
+        }
+    };
+    let mut floor_rows: Vec<Json> = Vec::new();
+    for &bsz in &floor_sizes {
+        let rpe = (ds.n() + bsz - 1) / bsz;
+        let mut runs: Vec<(usize, usize)> = Vec::with_capacity(2);
+
+        // Parity: one epoch of rounds (capped at 8) where the spliced
+        // state must bit-match the oracle's from-scratch rebuild.
+        {
+            let mut i_means = upd.means.clone();
+            let mut i_rho = upd.rho.clone();
+            let mut i_counts = vec![0.0f64; k];
+            let mut o_means = upd.means.clone();
+            let mut o_rho = upd.rho.clone();
+            let mut o_counts = vec![0.0f64; k];
+            let mut scratch = MbUpdateScratch::new();
+            let mut cursor = 0usize;
+            for round in 0..rpe.min(8) {
+                wrap_runs(&mut cursor, bsz, &mut runs);
+                let o = update_means_minibatch(
+                    &ds, &out.assign, &runs, k, &o_means, &floor_changed, &o_rho,
+                    &floor_sizes_counts, &mut o_counts, floor_decay,
+                );
+                o_means = o.means;
+                o_rho = o.rho;
+                let _ = update_means_minibatch_inplace(
+                    &ds, &out.assign, &runs, &mut i_means, &mut i_rho, &floor_changed,
+                    &floor_sizes_counts, &mut i_counts, floor_decay, &mut scratch,
+                    &ParConfig::serial(),
+                );
+                let tag = format!("mb floor parity batch={bsz} round={round}");
+                assert_eq!(i_means.moved, o_means.moved, "{tag}: moved");
+                for j in 0..k {
+                    let (ai, av) = i_means.m.row(j);
+                    let (bi, bv) = o_means.m.row(j);
+                    assert_eq!(ai, bi, "{tag}: row {j} ids");
+                    assert_bits_eq(av, bv, &format!("{tag}: row {j}"));
+                }
+                assert_bits_eq(&i_rho, &o_rho, &format!("{tag}: rho"));
+                assert_bits_eq(&i_counts, &o_counts, &format!("{tag}: counts"));
+            }
+        }
+
+        // Timing: prime one epoch (scratch/slab/maintainer plateau),
+        // then best-of-reps over one epoch of update + maintain.
+        let mut f_means = upd.means.clone();
+        let mut f_rho = upd.rho.clone();
+        let mut f_counts = vec![0.0f64; k];
+        let mut scratch = MbUpdateScratch::new();
+        let mut maint = InvMaintainer::new();
+        maint.max_dirty_frac = 1.0;
+        let mut cursor = 0usize;
+        for _ in 0..rpe {
+            wrap_runs(&mut cursor, bsz, &mut runs);
+            let _ = update_means_minibatch_inplace(
+                &ds, &out.assign, &runs, &mut f_means, &mut f_rho, &floor_changed,
+                &floor_sizes_counts, &mut f_counts, floor_decay, &mut scratch,
+                &ParConfig::serial(),
+            );
+            std::hint::black_box(maint.update(&f_means, d, 1.0).nnz());
+        }
+        let mut upd_s = f64::INFINITY;
+        let mut mnt_s = f64::INFINITY;
+        for _ in 0..reps {
+            let mut u_acc = 0.0f64;
+            let mut m_acc = 0.0f64;
+            for _ in 0..rpe {
+                wrap_runs(&mut cursor, bsz, &mut runs);
+                let t0 = Instant::now();
+                let delta = update_means_minibatch_inplace(
+                    &ds, &out.assign, &runs, &mut f_means, &mut f_rho, &floor_changed,
+                    &floor_sizes_counts, &mut f_counts, floor_decay, &mut scratch,
+                    &ParConfig::serial(),
+                );
+                u_acc += t0.elapsed().as_secs_f64();
+                std::hint::black_box(delta);
+                let t1 = Instant::now();
+                std::hint::black_box(maint.update(&f_means, d, 1.0).nnz());
+                m_acc += t1.elapsed().as_secs_f64();
+            }
+            upd_s = upd_s.min(u_acc / rpe as f64);
+            mnt_s = mnt_s.min(m_acc / rpe as f64);
+        }
+        let (u_ms, m_ms) = (upd_s * 1e3, mnt_s * 1e3);
+        println!(
+            "minibatch update floor: batch {:>7} ({} rounds/epoch)  update {:.4} ms/round  maintain {:.4} ms/round  total {:.4} ms/round",
+            bsz, rpe, u_ms, m_ms, u_ms + m_ms
+        );
+        floor_rows.push(Json::obj(vec![
+            ("batch", Json::UInt(bsz as u64)),
+            ("rounds_per_epoch", Json::UInt(rpe as u64)),
+            ("update_ms_per_round", Json::Num(u_ms)),
+            ("maintain_ms_per_round", Json::Num(m_ms)),
+            ("total_ms_per_round", Json::Num(u_ms + m_ms)),
+        ]));
+    }
+
     // --- EstParams --------------------------------------------------------
     let s_min = ds.d() * 8 / 10;
     let xp = ObjInvIndex::build(&ds.x, s_min);
@@ -787,6 +924,14 @@ fn main() {
                     Json::Num(mb_out.total_rebuild_secs() * 1e3 / mb_rounds),
                 ),
                 ("objective_ratio_vs_full", Json::Num(mb_obj_ratio)),
+            ]),
+        ),
+        (
+            "minibatch_update_floor",
+            Json::obj(vec![
+                ("decay", Json::Num(floor_decay)),
+                ("schedule", Json::str("sequential-wrap")),
+                ("sizes", Json::Arr(floor_rows)),
             ]),
         ),
         (

@@ -115,7 +115,8 @@ fn main() {
     let rows: Vec<usize> = rng.sample_distinct(ds.n(), BLOCK_B);
     let cents: Vec<usize> = rng.sample_distinct(cfg.k.min(final_means.k()), BLOCK_K);
     let x_dense = densify_top_terms(&ds.x, &rows, BLOCK_D);
-    let m_dense = densify_top_terms(&final_means.m, &cents, BLOCK_D);
+    let m_csr = final_means.m.to_csr();
+    let m_dense = densify_top_terms(&m_csr, &cents, BLOCK_D);
 
     let (ids, sims) = rt.assign_block(&x_dense, &m_dense).expect("assign_block");
 

@@ -37,7 +37,7 @@ use crate::index::{membership_changes, update_means_with_rho_par, MeanSet};
 use crate::metrics::counters::OpCounters;
 use crate::persist::checkpoint::{CheckpointSpec, CheckpointState, RunFingerprint};
 use crate::metrics::perf::PhaseTimes;
-use crate::sparse::{CsrMatrix, Dataset};
+use crate::sparse::Dataset;
 use crate::util::rng::Pcg32;
 use crate::util::timer::Stopwatch;
 
@@ -400,7 +400,7 @@ pub fn seed_means(ds: &Dataset, k: usize, seed: u64) -> MeanSet {
         })
         .collect();
     MeanSet {
-        m: CsrMatrix::from_rows(ds.d(), &rows),
+        m: crate::index::RowSlab::from_rows(ds.d(), &rows),
         moved: vec![true; k],
         sizes: vec![0; k],
     }

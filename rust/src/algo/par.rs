@@ -296,7 +296,12 @@ where
 /// [`run_sharded`] with an additional per-object mutable state array
 /// (`per_obj` entries per object, e.g. Ding+'s group-bound matrix),
 /// split along the same shard boundaries so each worker owns its
-/// objects' state exclusively.
+/// objects' state exclusively. Also reused by the mini-batch update
+/// step ([`crate::index::update_means_minibatch_inplace`]) to shard
+/// per-cluster staging over cluster ranges: there the "objects" are
+/// touched cluster ids and `extra` holds one staged-result slot per
+/// cluster, so the fixed-order merge/apply recipe carries over
+/// unchanged.
 pub fn run_sharded_with<T, F>(
     par: &ParConfig,
     assign: &mut [u32],

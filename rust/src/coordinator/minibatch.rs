@@ -13,8 +13,12 @@
 //! 2. run the assignment step for the batch only, through the existing
 //!    [`Assigner`] machinery ([`Assigner::assign_span`] — the same
 //!    per-object routines, sharded and bit-deterministic),
-//! 3. fold the batch into the mean set with per-centroid count-decay
-//!    learning rates ([`crate::index::update_means_minibatch`]),
+//! 3. fold the batch into the mean set **in place** with per-centroid
+//!    count-decay learning rates
+//!    ([`crate::index::update_means_minibatch_inplace`]: touched mean
+//!    rows spliced into the [`crate::index::RowSlab`], batch-member ρ
+//!    mutated in place, objective maintained as a running sum of the
+//!    per-member deltas — O(batch + nnz of touched rows), never O(n)),
 //! 4. let the incremental maintainers splice only the touched centroids
 //!    into the structured index (`index::maintain`, the PR-2 engine:
 //!    per-batch index cost scales with the moved mass, and the
@@ -35,6 +39,29 @@
 //! same per-round objective bits, same counters, same convergence round
 //! (also enforced by `rust/tests/minibatch.rs`).
 //!
+//! ## Incremental objective accounting
+//!
+//! The logged objective is a running sum `obj_sum` updated with the
+//! update step's per-member ρ deltas (O(batch) per round), **exactly
+//! re-summed over the full ρ vector at every epoch boundary** so the
+//! low-order float bits cannot drift run-to-run with the resume point.
+//! Between boundaries the value is still fully deterministic (fixed
+//! member order), it merely differs in low bits from what a per-round
+//! full re-sum would produce. At `batch == n` every round IS an epoch
+//! boundary, so the re-sum fires every round and the logged objective
+//! is bit-exactly the full-batch one — Lloyd parity intact.
+//!
+//! ## Epoch wrap (sequential schedule)
+//!
+//! The sequential schedule wraps batches across the epoch boundary
+//! (`[(0, rem), (lo, n)]`) instead of emitting a ragged short tail:
+//! every round now feeds the count-decay update a full `b` objects, so
+//! no round computes learning rates from a tiny tail `m_j`. With
+//! `batch == n` the window is always exactly `[0, n)` and nothing
+//! changes (Lloyd parity intact); for smaller batches the trajectory
+//! differs from the pre-wrap driver **by design** — the old short tail
+//! round and its skewed η are gone.
+//!
 //! ## What partial batches approximate
 //!
 //! An object outside the current batch keeps its stored ρ (similarity
@@ -51,7 +78,7 @@
 use crate::algo::{
     make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState, ParConfig,
 };
-use crate::index::update_means_minibatch;
+use crate::index::{update_means_minibatch_inplace, MbUpdateScratch};
 use crate::metrics::counters::OpCounters;
 use crate::persist::checkpoint::{CheckpointSpec, CheckpointState, MbStateRef, RunFingerprint};
 use crate::sparse::Dataset;
@@ -367,7 +394,17 @@ pub fn run_minibatch_resumable(
     let mut cursor = 0usize;
     let mut runs: Vec<(usize, usize)> = Vec::new();
     let mut prev_b: Vec<u32> = Vec::new();
+    // Post-assignment ρ of the batch members, captured just before the
+    // in-place update so the ICP eligibility refresh can compare old
+    // vs new without an O(n) ρ clone.
+    let mut old_rho_b: Vec<f64> = Vec::new();
     let mut changed = vec![false; k];
+    let mut scratch = MbUpdateScratch::new();
+    // Running Σ_i ρ_i (see module docs: per-member deltas between epoch
+    // boundaries, exact full re-sum at each boundary). Starts from the
+    // −1.0 init sentinels; the logged objective compensates those via
+    // `never_seen`.
+    let mut obj_sum: f64 = st.rho.iter().sum();
     // Objects processed so far. `st.iter` advances per completed
     // *epoch* (n objects), not per round: the assigners key EstParams
     // and the TA/CS preset switches off `st.iter ∈ {2, 3}`, and those
@@ -415,6 +452,7 @@ pub fn run_minibatch_resumable(
         cursor = ck.mb.cursor;
         processed = ck.mb.processed;
         quiet = ck.mb.quiet;
+        obj_sum = ck.mb.obj_sum;
         st.iter = 1 + processed / n;
         start_round = ck.base.round + 1;
     }
@@ -440,11 +478,21 @@ pub fn run_minibatch_resumable(
         // --- batch selection → contiguous runs ---------------------------
         match mb.schedule {
             BatchSchedule::Sequential => {
+                // Wrap across the epoch boundary instead of emitting a
+                // ragged short tail (a tiny tail m_j skews η — see
+                // module docs). The wrapped pair is ascending and
+                // disjoint: `rem = lo + b − n ≤ lo` since `b ≤ n`.
                 let lo = cursor;
-                let hi = (lo + b).min(n);
-                cursor = if hi == n { 0 } else { hi };
                 runs.clear();
-                runs.push((lo, hi));
+                if lo + b <= n {
+                    runs.push((lo, lo + b));
+                    cursor = if lo + b == n { 0 } else { lo + b };
+                } else {
+                    let rem = lo + b - n;
+                    runs.push((0, rem));
+                    runs.push((lo, n));
+                    cursor = rem;
+                }
             }
             BatchSchedule::Reservoir => {
                 let mut ids = rng.sample_distinct(n, b);
@@ -499,6 +547,9 @@ pub fn run_minibatch_resumable(
         asg_sw.stop();
         let phases = assigner.take_phases();
         processed += batch_len;
+        // Did this round's batch complete an epoch? (Triggers the
+        // deterministic exact objective re-sum after the update.)
+        let epoch_boundary = processed / n > (processed - batch_len) / n;
 
         let mem = assigner.mem_bytes();
         max_mem = max_mem.max(mem);
@@ -552,13 +603,21 @@ pub fn run_minibatch_resumable(
             }
         }
 
-        // --- count-decay update step --------------------------------------
+        // --- count-decay update step (in place, O(batch)) -----------------
         let mut upd_sw = Stopwatch::new();
         upd_sw.start();
-        let upd = update_means_minibatch(
-            ds, &st.assign, &runs, k, &st.means, &changed, &st.rho, &sizes, &mut counts,
-            mb.decay,
+        // Snapshot the batch members' pre-update ρ (O(batch)): the
+        // eligibility refresh below needs old-vs-new, and the update
+        // mutates `st.rho` in place.
+        old_rho_b.clear();
+        for &(lo, hi) in &runs {
+            old_rho_b.extend_from_slice(&st.rho[lo..hi]);
+        }
+        let delta = update_means_minibatch_inplace(
+            ds, &st.assign, &runs, &mut st.means, &mut st.rho, &changed, &sizes,
+            &mut counts, mb.decay, &mut scratch, par,
         );
+        obj_sum += delta;
         // ICP eligibility (Eq. 5) and staleness clocks for the batch.
         // A member's ρ is genuinely current only when its cluster was
         // rebuilt this round (recomputed against the new mean) or when
@@ -572,10 +631,10 @@ pub fn run_minibatch_resumable(
         for &(lo, hi) in &runs {
             for i in lo..hi {
                 let a = st.assign[i] as usize;
-                let recomputed = upd.means.moved[a];
+                let recomputed = st.means.moved[a];
                 let carried_current = obs_round[i] > 0 && last_moved[a] <= obs_round[i];
                 if recomputed || carried_current {
-                    st.xstate[i] = prev_b[off] == st.assign[i] && upd.rho[i] >= st.rho[i];
+                    st.xstate[i] = prev_b[off] == st.assign[i] && st.rho[i] >= old_rho_b[off];
                     if obs_round[i] == 0 {
                         never_seen -= 1;
                     }
@@ -586,8 +645,8 @@ pub fn run_minibatch_resumable(
                 off += 1;
             }
         }
-        let any_moved = upd.means.moved.iter().any(|&m| m);
-        for (j, m) in upd.means.moved.iter().enumerate() {
+        let any_moved = st.means.moved.iter().any(|&m| m);
+        for (j, m) in st.means.moved.iter().enumerate() {
             if *m {
                 last_moved[j] = r as u32;
             }
@@ -596,17 +655,21 @@ pub fn run_minibatch_resumable(
             mr_prev = mr_latest;
             mr_latest = r as u32;
         }
+        // Epoch boundary: replace the running sum with a deterministic
+        // exact re-sum (see module docs; at `batch == n` this fires
+        // every round and reproduces the full-batch objective bits).
+        if epoch_boundary {
+            obj_sum = st.rho.iter().sum();
+        }
         // Compensate the −1.0 sentinels of never-refreshed objects so
         // early-epoch objectives are a meaningful running estimate
         // (unseen objects contribute 0). `never_seen == 0` leaves the
         // sum untouched — the Lloyd-parity bit-exactness path.
         objective = if never_seen > 0 {
-            upd.objective + never_seen as f64
+            obj_sum + never_seen as f64
         } else {
-            upd.objective
+            obj_sum
         };
-        st.means = upd.means;
-        st.rho = upd.rho;
         st.iter = 1 + processed / n;
         upd_sw.stop();
 
@@ -639,7 +702,7 @@ pub fn run_minibatch_resumable(
                 save_mb_ckpt(
                     spec, fp.as_ref().unwrap(), r, objective, max_mem, &st, &*assigner,
                     &counts, &sizes, &obs_round, &last_moved, mr_latest, mr_prev, &rng,
-                    cursor, processed, quiet,
+                    cursor, processed, quiet, obj_sum,
                 )?;
                 last_saved = r;
             }
@@ -652,7 +715,7 @@ pub fn run_minibatch_resumable(
             save_mb_ckpt(
                 spec, fp.as_ref().unwrap(), completed, objective, max_mem, &st, &*assigner,
                 &counts, &sizes, &obs_round, &last_moved, mr_latest, mr_prev, &rng,
-                cursor, processed, quiet,
+                cursor, processed, quiet, obj_sum,
             )?;
         }
     }
@@ -689,6 +752,7 @@ fn save_mb_ckpt(
     cursor: usize,
     processed: usize,
     quiet: usize,
+    obj_sum: f64,
 ) -> crate::error::SkmResult<()> {
     let (rng_state, rng_inc) = rng.raw_state();
     crate::persist::checkpoint::save_minibatch_checkpoint(
@@ -716,6 +780,7 @@ fn save_mb_ckpt(
             cursor,
             processed,
             quiet,
+            obj_sum,
         },
     )?;
     Ok(())
@@ -860,7 +925,38 @@ mod tests {
         };
         let out = run_minibatch(AlgoKind::Mivi, &ds, &cfg, &mb, &ParConfig::serial());
         assert_eq!(out.n_rounds(), 4);
-        assert_eq!(out.objects_processed(), ds.n()); // 64·3 + 58
+        // Every sequential batch is a full 64 objects — the 4th wraps
+        // past n = 250 instead of emitting a ragged 58-object tail.
+        assert_eq!(out.objects_processed(), 4 * 64);
         assert!(out.objective.is_finite());
+    }
+
+    /// The sequential schedule's wrap arithmetic: full windows while
+    /// they fit, then an ascending disjoint `[(0, rem), (lo, n)]` pair
+    /// across the boundary, cursor continuing at `rem`.
+    #[test]
+    fn sequential_wrap_emits_full_ascending_disjoint_batches() {
+        let (n, b) = (250usize, 64usize);
+        let mut cursor = 0usize;
+        let mut seen_wrap = false;
+        for _ in 0..20 {
+            let lo = cursor;
+            let runs: Vec<(usize, usize)> = if lo + b <= n {
+                cursor = if lo + b == n { 0 } else { lo + b };
+                vec![(lo, lo + b)]
+            } else {
+                let rem = lo + b - n;
+                cursor = rem;
+                seen_wrap = true;
+                vec![(0, rem), (lo, n)]
+            };
+            let len: usize = runs.iter().map(|&(lo, hi)| hi - lo).sum();
+            assert_eq!(len, b, "every batch is exactly b objects");
+            for w in runs.windows(2) {
+                assert!(w[0].1 <= w[1].0, "runs ascending and disjoint");
+            }
+            assert!(cursor < n);
+        }
+        assert!(seen_wrap, "20 rounds of 64/250 must wrap at least once");
     }
 }

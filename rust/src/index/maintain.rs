@@ -39,6 +39,7 @@
 
 use crate::index::inverted::InvIndex;
 use crate::index::means::MeanSet;
+use crate::index::slab::RowSlab;
 use crate::index::structured::{CsIndex, EsIndex, TaIndex};
 
 /// Default dirty-fraction threshold above which maintainers fall back to
@@ -52,51 +53,61 @@ pub fn default_dirty_frac() -> f64 {
         .unwrap_or(0.5)
 }
 
-/// Snapshot of the mean rows and moved flags as of the last index build
-/// (flat CSR copy; `set_from` reuses capacity, so steady-state snapshots
-/// are allocation-free).
+/// Snapshot of the mean rows and moved flags as of the last index build.
+/// Held as a [`RowSlab`] so the steady-state refresh is a **delta**:
+/// [`Self::refresh_dirty`] rewrites only the rows the update step moved
+/// (the unmoved ones are verbatim identical to the snapshot already —
+/// the same invariance the splice itself relies on), O(moved nnz) per
+/// round instead of a full O(nnz(M)) re-copy. The full [`Self::set_from`]
+/// remains for the incompatible cases (first build, k/d/parameter
+/// change) and reuses arena capacity, so neither path allocates in
+/// steady state.
 #[derive(Debug, Default)]
 struct PrevMeans {
-    offsets: Vec<usize>,
-    ids: Vec<u32>,
-    vals: Vec<f64>,
+    rows: RowSlab,
     moved: Vec<bool>,
-    d: usize,
 }
 
 impl PrevMeans {
     fn set_from(&mut self, means: &MeanSet) {
-        self.offsets.clear();
-        self.ids.clear();
-        self.vals.clear();
+        self.rows.set_from(&means.m);
         self.moved.clear();
-        self.offsets.push(0);
-        for j in 0..means.k() {
-            let (ts, vs) = means.m.row(j);
-            self.ids.extend_from_slice(ts);
-            self.vals.extend_from_slice(vs);
-            self.offsets.push(self.ids.len());
-        }
         self.moved.extend_from_slice(&means.moved);
-        self.d = means.m.n_cols();
+    }
+
+    /// Delta refresh: rewrite only the rows `means.moved` flags as
+    /// changed since the last sync. Valid whenever this snapshot was
+    /// taken from the same `(k, d)` mean set lineage (the `compatible`
+    /// gate of every maintainer) — rows with `moved[j] == false` are
+    /// bit-identical to what the snapshot already holds.
+    fn refresh_dirty(&mut self, means: &MeanSet) {
+        debug_assert_eq!(self.k(), means.k());
+        debug_assert_eq!(self.d(), means.m.n_cols());
+        for j in 0..means.k() {
+            if means.moved[j] {
+                let (ts, vs) = means.m.row(j);
+                self.rows.set_row(j, ts, vs);
+            }
+        }
+        self.moved.clear();
+        self.moved.extend_from_slice(&means.moved);
     }
 
     fn k(&self) -> usize {
-        self.offsets.len().saturating_sub(1)
+        self.rows.n_rows()
+    }
+
+    fn d(&self) -> usize {
+        self.rows.n_cols()
     }
 
     #[inline]
     fn row(&self, j: usize) -> (&[u32], &[f64]) {
-        let (a, b) = (self.offsets[j], self.offsets[j + 1]);
-        (&self.ids[a..b], &self.vals[a..b])
+        self.rows.row(j)
     }
 
     fn mem_bytes(&self) -> usize {
-        use std::mem::size_of;
-        self.offsets.capacity() * size_of::<usize>()
-            + self.ids.capacity() * size_of::<u32>()
-            + self.vals.capacity() * size_of::<f64>()
-            + self.moved.capacity()
+        self.rows.mem_bytes() + self.moved.capacity()
     }
 }
 
@@ -734,7 +745,7 @@ impl InvMaintainer {
         let t_lim = t_lim.min(d);
         let compatible = self.idx.is_some()
             && self.prev.k() == k
-            && self.prev.d == d
+            && self.prev.d() == d
             && self.t_lim == t_lim
             && self.scale.to_bits() == scale.to_bits();
         let dirty = if compatible {
@@ -770,7 +781,11 @@ impl InvMaintainer {
         }
         self.t_lim = t_lim;
         self.scale = scale;
-        self.prev.set_from(means);
+        if compatible {
+            self.prev.refresh_dirty(means);
+        } else {
+            self.prev.set_from(means);
+        }
         self.idx.as_ref().unwrap()
     }
 }
@@ -819,7 +834,7 @@ impl EsMaintainer {
         assert!(v_th > 0.0, "v_th must be positive (got {v_th})");
         let compatible = self.idx.is_some()
             && self.prev.k() == k
-            && self.prev.d == d
+            && self.prev.d() == d
             && self.t_th == t_th
             && self.v_th.to_bits() == v_th.to_bits();
         let dirty = if compatible {
@@ -887,7 +902,11 @@ impl EsMaintainer {
         }
         self.t_th = t_th;
         self.v_th = v_th;
-        self.prev.set_from(means);
+        if compatible {
+            self.prev.refresh_dirty(means);
+        } else {
+            self.prev.set_from(means);
+        }
         self.idx.as_ref().unwrap()
     }
 }
@@ -932,7 +951,7 @@ impl TaMaintainer {
         let d = means.m.n_cols();
         let t_th = t_th.min(d);
         let compatible =
-            self.idx.is_some() && self.prev.k() == k && self.prev.d == d && self.t_th == t_th;
+            self.idx.is_some() && self.prev.k() == k && self.prev.d() == d && self.t_th == t_th;
         let dirty = if compatible {
             dirty_count(&self.prev.moved, means)
         } else {
@@ -983,7 +1002,11 @@ impl TaMaintainer {
             self.last_rebuild = RebuildKind::Full;
         }
         self.t_th = t_th;
-        self.prev.set_from(means);
+        if compatible {
+            self.prev.refresh_dirty(means);
+        } else {
+            self.prev.set_from(means);
+        }
         self.idx.as_ref().unwrap()
     }
 }
@@ -1028,7 +1051,7 @@ impl CsMaintainer {
         let d = means.m.n_cols();
         let t_th = t_th.min(d);
         let compatible =
-            self.idx.is_some() && self.prev.k() == k && self.prev.d == d && self.t_th == t_th;
+            self.idx.is_some() && self.prev.k() == k && self.prev.d() == d && self.t_th == t_th;
         let dirty = if compatible {
             dirty_count(&self.prev.moved, means)
         } else {
@@ -1072,7 +1095,11 @@ impl CsMaintainer {
             self.last_rebuild = RebuildKind::Full;
         }
         self.t_th = t_th;
-        self.prev.set_from(means);
+        if compatible {
+            self.prev.refresh_dirty(means);
+        } else {
+            self.prev.set_from(means);
+        }
         self.idx.as_ref().unwrap()
     }
 }
@@ -1202,6 +1229,24 @@ mod tests {
             .zip(scratch.partial.values())
         {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The delta snapshot refresh (only moved rows rewritten) must land
+    /// on the same logical state as a full re-snapshot at every step of
+    /// a moved-flag sequence covering all dirty transitions.
+    #[test]
+    fn delta_prev_refresh_matches_full_snapshot() {
+        let seq = means_seq();
+        let mut delta = PrevMeans::default();
+        let mut full = PrevMeans::default();
+        delta.set_from(&seq[0]);
+        full.set_from(&seq[0]);
+        for (r, means) in seq.iter().enumerate().skip(1) {
+            delta.refresh_dirty(means);
+            full.set_from(means);
+            assert_eq!(delta.rows, full.rows, "iter {r}: rows");
+            assert_eq!(delta.moved, full.moved, "iter {r}: moved");
         }
     }
 

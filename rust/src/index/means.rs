@@ -4,13 +4,20 @@
 //! (the `ρ_{a(i)}^{[r]}` threshold used by the next assignment step), and
 //! track which centroids *moved* (for the ICP filter).
 
+use crate::algo::par::{run_sharded_with, ParConfig, ScratchPool};
+use crate::index::slab::RowSlab;
+use crate::metrics::counters::OpCounters;
+use crate::metrics::perf::PhaseTimes;
 use crate::sparse::{CsrMatrix, Dataset};
 
 /// The mean (centroid) set at one iteration.
 #[derive(Debug, Clone)]
 pub struct MeanSet {
-    /// K × D sparse matrix of unit-norm mean-feature vectors.
-    pub m: CsrMatrix,
+    /// K × D sparse matrix of unit-norm mean-feature vectors, stored as
+    /// a spliceable row slab so the mini-batch update can rewrite only
+    /// the touched rows in place ([`RowSlab::set_row`]) instead of
+    /// rebuilding the whole matrix per round.
+    pub m: RowSlab,
     /// `moved[j]`: did cluster j's membership change in the assignment
     /// step that produced this mean set? Invariant (`!moved`) centroids
     /// are exactly equal to their previous-iteration values, which is
@@ -220,7 +227,7 @@ pub fn update_means_with_rho(
         moved[j] = true;
     }
 
-    let m = CsrMatrix::from_rows(d, &rows);
+    let m = RowSlab::from_rows(d, &rows);
     let objective = rho.iter().sum();
     UpdateOutput {
         means: MeanSet { m, moved, sizes },
@@ -405,7 +412,7 @@ pub fn update_means_with_rho_par(
         }
     }
 
-    let m = CsrMatrix::from_rows(d, &rows);
+    let m = RowSlab::from_rows(d, &rows);
     let objective = rho.iter().sum();
     UpdateOutput {
         means: MeanSet { m, moved, sizes },
@@ -452,14 +459,16 @@ pub fn update_means_with_rho_par(
 /// re-normalized — centroids move toward fresh batches at a rate that
 /// decays as their accumulated mass grows.
 ///
-/// **Cost floor.** Per call this does O(n) scalar work (the ρ carry
-/// and objective sum) plus O(nnz(M)) (untouched rows are cloned and the
-/// mean CSR is rebuilt) on top of the O(batch-terms) accumulation —
-/// only the *assignment* side of a round is strictly batch-scale. The
-/// floor is shared with the downstream index maintainers (their
-/// `PrevMeans` snapshot is O(nnz(M)) per round regardless), so fixing
-/// it requires incremental mean-CSR splicing too — a named ROADMAP
-/// open item, not attempted here.
+/// **Cost floor — this is the reference oracle.** Per call this does
+/// O(n) scalar work (the ρ carry and objective sum) plus O(nnz(M))
+/// (untouched rows are cloned and the mean matrix is rebuilt) on top of
+/// the O(batch-terms) accumulation. The steady-state driver no longer
+/// pays that floor: it calls [`update_means_minibatch_inplace`], which
+/// splices only the touched rows of the existing [`RowSlab`] and
+/// mutates ρ with per-batch-member deltas. This function is kept
+/// deliberately unchanged as the **from-scratch reference** the
+/// splice-vs-scratch bit-equality suite (`rust/tests/minibatch_splice.rs`)
+/// compares against every round.
 #[allow(clippy::too_many_arguments)]
 pub fn update_means_minibatch(
     ds: &Dataset,
@@ -606,7 +615,7 @@ pub fn update_means_minibatch(
         moved[j] = true;
     }
 
-    let m = CsrMatrix::from_rows(d, &rows);
+    let m = RowSlab::from_rows(d, &rows);
     let objective = rho.iter().sum();
     UpdateOutput {
         means: MeanSet {
@@ -617,6 +626,347 @@ pub fn update_means_minibatch(
         rho,
         objective,
     }
+}
+
+/// One staged (not yet applied) touched cluster of a mini-batch round:
+/// the new mean row, the batch members' new ρ values (in member order),
+/// and the updated decay count. Staging and applying are separated so
+/// the per-cluster float work can run on worker threads while every
+/// mutation of the shared state happens serially in fixed cluster
+/// order — the bit-identity-to-serial recipe the assignment engine uses.
+#[derive(Debug, Default)]
+struct StagedCluster {
+    row_ids: Vec<u32>,
+    row_vals: Vec<f64>,
+    /// New ρ per batch member, ordered like `members[starts[j]..]`.
+    mrho: Vec<f64>,
+    /// `decay·counts[j] + m_j`, applied to `counts[j]` at apply time.
+    count: f64,
+}
+
+/// Per-worker dense scratch for [`stage_cluster`] (the λ accumulator
+/// plus its touched-term list), pooled so steady-state rounds allocate
+/// nothing.
+#[derive(Debug, Default)]
+struct LambdaScratch {
+    lambda: Vec<f64>,
+    touched: Vec<u32>,
+}
+
+/// Reusable state of [`update_means_minibatch_inplace`]. Holding it in
+/// the driver (instead of locals) is what makes the steady-state round
+/// allocation-free: every vector is cleared and refilled within its
+/// plateaued capacity (enforced by `rust/tests/alloc_free.rs`).
+#[derive(Debug, Default)]
+pub struct MbUpdateScratch {
+    /// Batch members per cluster `m_j` (counting-sort histogram).
+    bsizes: Vec<u32>,
+    /// Cluster start offsets into `members` (`k + 1` entries).
+    starts: Vec<usize>,
+    /// Counting-sort write cursor.
+    cursor: Vec<usize>,
+    /// Batch member ids bucketed by cluster, ascending within a cluster.
+    members: Vec<u32>,
+    /// Touched cluster ids, ascending.
+    touched_js: Vec<u32>,
+    /// One staged result slot per touched cluster.
+    staged: Vec<StagedCluster>,
+    /// Pooled per-worker λ scratch.
+    pool: ScratchPool<LambdaScratch>,
+}
+
+impl MbUpdateScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resident bytes of the persistent scratch (Max-MEM accounting).
+    pub fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.bsizes.capacity() * size_of::<u32>()
+            + (self.starts.capacity() + self.cursor.capacity()) * size_of::<usize>()
+            + (self.members.capacity() + self.touched_js.capacity()) * size_of::<u32>()
+            + self
+                .staged
+                .iter()
+                .map(|s| {
+                    s.row_ids.capacity() * size_of::<u32>()
+                        + (s.row_vals.capacity() + s.mrho.capacity()) * size_of::<f64>()
+                })
+                .sum::<usize>()
+            + self.pool.mem_bytes(|ls| {
+                ls.lambda.capacity() * size_of::<f64>() + ls.touched.capacity() * size_of::<u32>()
+            })
+    }
+}
+
+/// Stage one touched cluster: the **verbatim** per-cluster float
+/// sequence of [`update_means_minibatch`]'s touched branch (member-order
+/// λ accumulation, touched-list norm, optional spherical blend, member
+/// ρ while λ is dense, sort, extract), writing into `out` instead of
+/// the shared state. **Sync contract:** any change here must be mirrored
+/// in the oracle's touched branch and vice versa — the splice-vs-scratch
+/// suite enforces bit-equality of the two.
+#[allow(clippy::too_many_arguments)]
+fn stage_cluster(
+    ds: &Dataset,
+    m_ro: &RowSlab,
+    counts_ro: &[f64],
+    decay: f64,
+    members: &[u32],
+    starts: &[usize],
+    j: usize,
+    ls: &mut LambdaScratch,
+    out: &mut StagedCluster,
+) {
+    let mem = &members[starts[j]..starts[j + 1]];
+    let m_j = mem.len() as f64;
+    let carried = decay * counts_ro[j];
+    out.count = carried + m_j;
+    let eta = m_j / out.count;
+
+    let lambda = &mut ls.lambda;
+    let touched = &mut ls.touched;
+    touched.clear();
+    for &i in mem {
+        let (ts, vs) = ds.x.row(i as usize);
+        for (&t, &v) in ts.iter().zip(vs) {
+            if lambda[t as usize] == 0.0 {
+                touched.push(t);
+            }
+            lambda[t as usize] += v;
+        }
+    }
+    let norm = touched
+        .iter()
+        .map(|&t| lambda[t as usize] * lambda[t as usize])
+        .sum::<f64>()
+        .sqrt();
+    if norm > 0.0 {
+        for &t in touched.iter() {
+            lambda[t as usize] /= norm;
+        }
+    }
+    if carried != 0.0 {
+        for &t in touched.iter() {
+            lambda[t as usize] *= eta;
+        }
+        let (ots, ovs) = m_ro.row(j);
+        for (&t, &v) in ots.iter().zip(ovs) {
+            if lambda[t as usize] == 0.0 {
+                touched.push(t);
+            }
+            lambda[t as usize] += (1.0 - eta) * v;
+        }
+        let bnorm = touched
+            .iter()
+            .map(|&t| lambda[t as usize] * lambda[t as usize])
+            .sum::<f64>()
+            .sqrt();
+        if bnorm > 0.0 {
+            for &t in touched.iter() {
+                lambda[t as usize] /= bnorm;
+            }
+        }
+    }
+    out.mrho.clear();
+    for &i in mem {
+        let (ts, vs) = ds.x.row(i as usize);
+        let mut s = 0.0;
+        for (&t, &v) in ts.iter().zip(vs) {
+            s += v * lambda[t as usize];
+        }
+        out.mrho.push(s);
+    }
+    touched.sort_unstable();
+    out.row_ids.clear();
+    out.row_vals.clear();
+    for &t in touched.iter() {
+        let v = lambda[t as usize];
+        if v != 0.0 {
+            out.row_ids.push(t);
+            out.row_vals.push(v);
+        }
+    }
+    for &t in touched.iter() {
+        lambda[t as usize] = 0.0;
+    }
+}
+
+/// In-place mini-batch update: the batch-scale replacement for
+/// [`update_means_minibatch`]. Instead of cloning ρ, cloning untouched
+/// rows, and rebuilding the mean matrix, it
+///
+/// * splices only the touched rows of `means.m` ([`RowSlab::set_row`]),
+/// * rewrites `means.moved` / `means.sizes` / `counts` in place,
+/// * overwrites `rho` only at batch-member positions, and
+/// * returns the **objective delta** Σ (ρ_new − ρ_old) over batch
+///   members, so the driver can maintain the objective incrementally.
+///
+/// Per-cluster staging (the count-decay update and the mean/ρ float
+/// work) is sharded over cluster ranges through the same engine as the
+/// assignment step when `par.is_parallel()` — each touched cluster runs
+/// the serial float sequence on exactly one worker, results land in
+/// per-cluster slots, and the apply pass mutates the shared state in
+/// ascending cluster order — so the output is **bit-identical** to
+/// serial for any thread count.
+///
+/// The per-cluster float sequence is [`update_means_minibatch`]'s
+/// verbatim (see [`stage_cluster`]'s sync contract): for the same
+/// inputs, the spliced `means.m`, ρ, `counts`, `moved`, and `sizes`
+/// bit-match the oracle's freshly built ones, which keeps the
+/// batch==n ∧ decay==0 path bit-exact full-batch Lloyd.
+///
+/// Cost: O(batch terms + nnz of touched mean rows) — no O(n) pass, no
+/// O(nnz(M)) rebuild — and zero allocations at steady state (`scratch`
+/// capacities plateau).
+#[allow(clippy::too_many_arguments)]
+pub fn update_means_minibatch_inplace(
+    ds: &Dataset,
+    assign: &[u32],
+    runs: &[(usize, usize)],
+    means: &mut MeanSet,
+    rho: &mut [f64],
+    changed: &[bool],
+    sizes: &[u32],
+    counts: &mut [f64],
+    decay: f64,
+    scratch: &mut MbUpdateScratch,
+    par: &ParConfig,
+) -> f64 {
+    let n = ds.n();
+    let d = ds.d();
+    let k = means.k();
+    assert_eq!(assign.len(), n);
+    assert_eq!(counts.len(), k);
+    assert_eq!(rho.len(), n);
+    assert_eq!(changed.len(), k);
+    assert_eq!(sizes.len(), k);
+    debug_assert!(runs.windows(2).all(|w| w[0].1 <= w[1].0), "runs overlap");
+
+    let sc = scratch;
+    // Counting sort of the batch by cluster — same member order as the
+    // oracle (ascending object id within a cluster), into reused
+    // buffers.
+    sc.bsizes.clear();
+    sc.bsizes.resize(k, 0);
+    for &(lo, hi) in runs {
+        for &a in &assign[lo..hi] {
+            sc.bsizes[a as usize] += 1;
+        }
+    }
+    sc.starts.clear();
+    sc.starts.resize(k + 1, 0);
+    for j in 0..k {
+        sc.starts[j + 1] = sc.starts[j] + sc.bsizes[j] as usize;
+    }
+    let b = sc.starts[k];
+    sc.members.clear();
+    sc.members.resize(b, 0);
+    sc.cursor.clear();
+    sc.cursor.extend_from_slice(&sc.starts);
+    for &(lo, hi) in runs {
+        for i in lo..hi {
+            let a = assign[i] as usize;
+            sc.members[sc.cursor[a]] = i as u32;
+            sc.cursor[a] += 1;
+        }
+    }
+
+    // Untouched clusters: count decay in place, row and ρ untouched
+    // (they were already exactly the reused values the oracle clones).
+    // Touched clusters are collected in ascending order for staging.
+    sc.touched_js.clear();
+    for j in 0..k {
+        means.moved[j] = false;
+        if sc.bsizes[j] == 0 || !changed[j] {
+            counts[j] *= decay;
+        } else {
+            sc.touched_js.push(j as u32);
+        }
+    }
+    means.sizes.copy_from_slice(sizes);
+
+    let t = sc.touched_js.len();
+    if sc.staged.len() < t {
+        sc.staged.resize_with(t, StagedCluster::default);
+    }
+
+    // Stage every touched cluster (read-only over the shared state).
+    {
+        let m_ro: &RowSlab = &means.m;
+        let counts_ro: &[f64] = counts;
+        let members: &[u32] = &sc.members;
+        let starts: &[usize] = &sc.starts;
+        let pool = &sc.pool;
+        let make = || LambdaScratch {
+            lambda: vec![0.0f64; d],
+            touched: Vec::new(),
+        };
+        // A pooled λ from an earlier dataset may have the wrong width.
+        let fix = |ls: &mut LambdaScratch| {
+            if ls.lambda.len() != d {
+                ls.lambda.clear();
+                ls.lambda.resize(d, 0.0);
+                ls.touched.clear();
+            }
+        };
+        if par.is_parallel() && t > 1 {
+            run_sharded_with(
+                par,
+                &mut sc.touched_js[..],
+                &mut sc.staged[..t],
+                1,
+                |_, js, slots| {
+                    let mut ls = pool.checkout(make);
+                    fix(&mut ls);
+                    for (&jj, out) in js.iter().zip(slots.iter_mut()) {
+                        stage_cluster(
+                            ds, m_ro, counts_ro, decay, members, starts, jj as usize, &mut ls,
+                            out,
+                        );
+                    }
+                    pool.checkin(ls, PhaseTimes::default());
+                    (OpCounters::new(), 0)
+                },
+            );
+        } else {
+            let mut ls = pool.checkout(make);
+            fix(&mut ls);
+            for (idx, &jj) in sc.touched_js.iter().enumerate() {
+                stage_cluster(
+                    ds,
+                    m_ro,
+                    counts_ro,
+                    decay,
+                    members,
+                    starts,
+                    jj as usize,
+                    &mut ls,
+                    &mut sc.staged[idx],
+                );
+            }
+            pool.checkin(ls, PhaseTimes::default());
+        }
+    }
+
+    // Apply serially in ascending cluster order: splice the row, commit
+    // the count, flag the move, and fold the member ρ deltas into the
+    // incremental objective.
+    let mut obj_delta = 0.0f64;
+    for (idx, &jj) in sc.touched_js.iter().enumerate() {
+        let j = jj as usize;
+        let slot = &sc.staged[idx];
+        counts[j] = slot.count;
+        means.m.set_row(j, &slot.row_ids, &slot.row_vals);
+        means.moved[j] = true;
+        let mem = &sc.members[sc.starts[j]..sc.starts[j + 1]];
+        for (&i, &new) in mem.iter().zip(&slot.mrho) {
+            obj_delta += new - rho[i as usize];
+            rho[i as usize] = new;
+        }
+    }
+    obj_delta
 }
 
 /// Dot of CSR row `i` with a term-sorted sparse tuple list.
@@ -883,6 +1233,86 @@ mod tests {
             if m2 > 0.0 && counts[j] > 0.0 {
                 assert!(counts[j] >= m2, "cluster {j}: count {} < {m2}", counts[j]);
             }
+        }
+    }
+
+    #[test]
+    fn minibatch_inplace_matches_oracle_and_parallel_is_bit_identical() {
+        use crate::algo::par::ParConfig;
+        use crate::corpus::{generate, tiny};
+        let c = generate(&tiny(93));
+        let ds = build_dataset("t", c.n_terms, &c.docs);
+        let n = ds.n();
+        let k = 6usize;
+        let assign: Vec<u32> = (0..n as u32).map(|i| (i * 5) % k as u32).collect();
+        let seed = update_means(&ds, &assign, k, None, None);
+        let mut sizes = vec![0u32; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let changed = vec![true; k];
+
+        // Three lockstep streams: the from-scratch oracle, the in-place
+        // serial path, and the in-place path with a varying thread count.
+        let mut o_means = seed.means.clone();
+        let mut o_rho = seed.rho.clone();
+        let mut o_counts = vec![0.0f64; k];
+        let mut s_means = seed.means.clone();
+        let mut s_rho = seed.rho.clone();
+        let mut s_counts = vec![0.0f64; k];
+        let mut s_scr = MbUpdateScratch::new();
+        let mut p_means = seed.means.clone();
+        let mut p_rho = seed.rho.clone();
+        let mut p_counts = vec![0.0f64; k];
+        let mut p_scr = MbUpdateScratch::new();
+
+        let serial = ParConfig::serial();
+        let threads = [2usize, 4, 7];
+        let b = n / 3;
+        let mut lo = 0usize;
+        for round in 0..12 {
+            let runs = if lo + b <= n {
+                vec![(lo, lo + b)]
+            } else {
+                vec![(0, lo + b - n), (lo, n)]
+            };
+            lo = (lo + b) % n;
+
+            let out = update_means_minibatch(
+                &ds, &assign, &runs, k, &o_means, &changed, &o_rho, &sizes, &mut o_counts,
+                0.5,
+            );
+            o_means = out.means;
+            o_rho = out.rho;
+
+            let sd = update_means_minibatch_inplace(
+                &ds, &assign, &runs, &mut s_means, &mut s_rho, &changed, &sizes,
+                &mut s_counts, 0.5, &mut s_scr, &serial,
+            );
+            let par = ParConfig::with_threads(threads[round % threads.len()]);
+            let pd = update_means_minibatch_inplace(
+                &ds, &assign, &runs, &mut p_means, &mut p_rho, &changed, &sizes,
+                &mut p_counts, 0.5, &mut p_scr, &par,
+            );
+
+            assert_eq!(s_means.m, o_means.m, "round {round}: spliced means diverged");
+            assert_eq!(s_means.moved, o_means.moved, "round {round}");
+            assert_eq!(s_means.sizes, o_means.sizes, "round {round}");
+            for (a, b2) in s_rho.iter().zip(&o_rho) {
+                assert_eq!(a.to_bits(), b2.to_bits(), "round {round}: rho bits");
+            }
+            for (a, b2) in s_counts.iter().zip(&o_counts) {
+                assert_eq!(a.to_bits(), b2.to_bits(), "round {round}: counts bits");
+            }
+            assert_eq!(p_means.m, s_means.m, "round {round}: parallel means");
+            assert_eq!(p_means.moved, s_means.moved, "round {round}: parallel moved");
+            for (a, b2) in p_rho.iter().zip(&s_rho) {
+                assert_eq!(a.to_bits(), b2.to_bits(), "round {round}: parallel rho");
+            }
+            for (a, b2) in p_counts.iter().zip(&s_counts) {
+                assert_eq!(a.to_bits(), b2.to_bits(), "round {round}: parallel counts");
+            }
+            assert_eq!(sd.to_bits(), pd.to_bits(), "round {round}: objective delta");
         }
     }
 

@@ -7,12 +7,14 @@
 pub mod inverted;
 pub mod maintain;
 pub mod means;
+pub mod slab;
 pub mod structured;
 
 pub use inverted::{InvIndex, ObjInvIndex};
 pub use maintain::{CsMaintainer, EsMaintainer, InvMaintainer, RebuildKind, TaMaintainer};
 pub use means::{
-    membership_changes, update_means, update_means_minibatch, update_means_with_rho,
-    update_means_with_rho_par, MeanSet, UpdateOutput,
+    membership_changes, update_means, update_means_minibatch, update_means_minibatch_inplace,
+    update_means_with_rho, update_means_with_rho_par, MbUpdateScratch, MeanSet, UpdateOutput,
 };
+pub use slab::RowSlab;
 pub use structured::{CsIndex, EsIndex, PartialIndex, Region2, TaIndex};

@@ -1,0 +1,426 @@
+//! A spliceable row-slab store for the mean set.
+//!
+//! [`RowSlab`] keeps K sparse rows in one pair of arenas (`ids`, `vals`)
+//! with a per-row span `{start, len, cap}`. Unlike [`CsrMatrix`], a row
+//! can be **rewritten in place** without touching its neighbours: when
+//! the new row fits the span's capacity it is copied over the old one;
+//! when it does not, the row relocates to the arena tail with 1.5×+8
+//! headroom and the old span's capacity is accounted as dead space.
+//! Once dead space exceeds half the arena it is compacted by a
+//! ping-pong copy into a spare buffer pair, so the arenas never grow
+//! unboundedly and — once per-row capacities plateau — a steady-state
+//! `set_row` performs **zero allocations**. This is what makes a
+//! mini-batch round's mean update cost O(nnz of touched rows) instead
+//! of the O(nnz(M)) full rebuild that `CsrMatrix::from_rows` pays.
+//!
+//! Reads mirror the [`CsrMatrix`] accessors the rest of the crate uses
+//! on the mean matrix (`row`, `row_norm`, `row_dense`, `column_df`, …)
+//! with identical semantics, and every whole-matrix iteration walks
+//! rows in ascending row order so float reductions over the matrix are
+//! bit-stable regardless of where rows physically live in the arena.
+//! Equality is logical (same rows, same bits), independent of physical
+//! layout. The persistence layer keeps its on-disk CSR format via
+//! [`RowSlab::to_csr`] / [`RowSlab::from_csr`], which round-trip
+//! bit-exactly.
+
+use crate::sparse::CsrMatrix;
+
+/// Physical location of one row inside the arenas.
+#[derive(Debug, Clone, Copy)]
+struct RowSpan {
+    /// Offset of the row's first element in `ids` / `vals`.
+    start: usize,
+    /// Live length (the row's nnz).
+    len: u32,
+    /// Reserved capacity; `len <= cap` always, and the `cap - len` tail
+    /// slots hold zeros so a relocation can `copy_from_slice` blindly.
+    cap: u32,
+}
+
+/// K sparse rows with in-place row rewrites. See the module docs.
+#[derive(Debug, Clone, Default)]
+pub struct RowSlab {
+    n_cols: usize,
+    ids: Vec<u32>,
+    vals: Vec<f64>,
+    spans: Vec<RowSpan>,
+    /// Σ span.len — kept so `nnz()` is O(1).
+    live_nnz: usize,
+    /// Σ cap of abandoned (relocated-away-from) spans.
+    dead: usize,
+    /// Ping-pong partners for [`Self::compact`]; empty between compactions
+    /// but their capacity is retained, so steady-state compaction does
+    /// not allocate.
+    spare_ids: Vec<u32>,
+    spare_vals: Vec<f64>,
+}
+
+/// Growth policy for relocated rows: 1.5× + 8 headroom, so a row whose
+/// support oscillates settles into a capacity it stops outgrowing.
+#[inline]
+fn cap_for(len: usize) -> usize {
+    len + len / 2 + 8
+}
+
+impl RowSlab {
+    /// Build from per-row tuple lists — delegates to
+    /// [`CsrMatrix::from_rows`] so sorting and duplicate-summing follow
+    /// the exact float sequence every existing producer used.
+    pub fn from_rows(n_cols: usize, rows: &[Vec<(u32, f64)>]) -> Self {
+        Self::from_csr(&CsrMatrix::from_rows(n_cols, rows))
+    }
+
+    /// Tight-pack a CSR matrix (every span `cap == len`).
+    pub fn from_csr(m: &CsrMatrix) -> Self {
+        let (n_cols, indptr, indices, values) = m.raw_parts();
+        let mut spans = Vec::with_capacity(m.n_rows());
+        for r in 0..m.n_rows() {
+            let len = (indptr[r + 1] - indptr[r]) as u32;
+            spans.push(RowSpan {
+                start: indptr[r],
+                len,
+                cap: len,
+            });
+        }
+        Self {
+            n_cols,
+            ids: indices.to_vec(),
+            vals: values.to_vec(),
+            spans,
+            live_nnz: indices.len(),
+            dead: 0,
+            spare_ids: Vec::new(),
+            spare_vals: Vec::new(),
+        }
+    }
+
+    /// Materialize as a CSR matrix (rows in ascending order, bit-exact
+    /// values) — the persistence layer's bridge to the unchanged
+    /// on-disk format.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(self.n_rows() + 1);
+        let mut indices = Vec::with_capacity(self.live_nnz);
+        let mut values = Vec::with_capacity(self.live_nnz);
+        indptr.push(0);
+        for j in 0..self.n_rows() {
+            let (ts, vs) = self.row(j);
+            indices.extend_from_slice(ts);
+            values.extend_from_slice(vs);
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_raw(self.n_cols, indptr, indices, values)
+    }
+
+    /// Become a tight-packed copy of `other`, reusing this slab's arena
+    /// capacity (the maintainers' `set_from` idiom: steady-state
+    /// allocation-free once capacities have plateaued).
+    pub fn set_from(&mut self, other: &RowSlab) {
+        self.n_cols = other.n_cols;
+        self.ids.clear();
+        self.vals.clear();
+        self.spans.clear();
+        self.ids.reserve(other.live_nnz);
+        self.vals.reserve(other.live_nnz);
+        self.spans.reserve(other.spans.len());
+        for j in 0..other.n_rows() {
+            let (ts, vs) = other.row(j);
+            let start = self.ids.len();
+            self.ids.extend_from_slice(ts);
+            self.vals.extend_from_slice(vs);
+            self.spans.push(RowSpan {
+                start,
+                len: ts.len() as u32,
+                cap: ts.len() as u32,
+            });
+        }
+        self.live_nnz = self.ids.len();
+        self.dead = 0;
+    }
+
+    /// Rewrite row `j` with sorted-unique `(ids, vals)`. In place when
+    /// the new row fits the span's capacity; otherwise the row relocates
+    /// to the arena tail (with headroom) and the arena is compacted
+    /// once dead space dominates. Other rows' bits are never touched.
+    pub fn set_row(&mut self, j: usize, ids: &[u32], vals: &[f64]) {
+        debug_assert_eq!(ids.len(), vals.len());
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "row {j} not sorted");
+        debug_assert!(ids.iter().all(|&t| (t as usize) < self.n_cols));
+        let len = ids.len();
+        let sp = self.spans[j];
+        self.live_nnz = self.live_nnz - sp.len as usize + len;
+        if len <= sp.cap as usize {
+            let s = sp.start;
+            self.ids[s..s + len].copy_from_slice(ids);
+            self.vals[s..s + len].copy_from_slice(vals);
+            // Zero the shrunk tail so a future relocation of this span
+            // can be copied blindly and the arena holds no stale bits.
+            for slot in &mut self.vals[s + len..s + sp.len as usize] {
+                *slot = 0.0;
+            }
+            self.spans[j].len = len as u32;
+            return;
+        }
+        self.dead += sp.cap as usize;
+        let cap = cap_for(len);
+        let start = self.ids.len();
+        self.ids.extend_from_slice(ids);
+        self.vals.extend_from_slice(vals);
+        self.ids.resize(start + cap, 0);
+        self.vals.resize(start + cap, 0.0);
+        self.spans[j] = RowSpan {
+            start,
+            len: len as u32,
+            cap: cap as u32,
+        };
+        // Compact only after the relocation so every span (including
+        // row j's new one) is valid while copying.
+        if self.dead > self.ids.len() / 2 && self.dead > 64 {
+            self.compact();
+        }
+    }
+
+    /// Squeeze dead space out by a ping-pong copy into the spare
+    /// buffers, preserving each span's capacity (so the no-relocation
+    /// steady state survives compaction).
+    fn compact(&mut self) {
+        let mut ids = std::mem::take(&mut self.spare_ids);
+        let mut vals = std::mem::take(&mut self.spare_vals);
+        ids.clear();
+        vals.clear();
+        let total: usize = self.spans.iter().map(|s| s.cap as usize).sum();
+        ids.reserve(total);
+        vals.reserve(total);
+        for sp in &mut self.spans {
+            let (s, len, cap) = (sp.start, sp.len as usize, sp.cap as usize);
+            let start = ids.len();
+            ids.extend_from_slice(&self.ids[s..s + len]);
+            vals.extend_from_slice(&self.vals[s..s + len]);
+            ids.resize(start + cap, 0);
+            vals.resize(start + cap, 0.0);
+            sp.start = start;
+        }
+        self.spare_ids = std::mem::replace(&mut self.ids, ids);
+        self.spare_vals = std::mem::replace(&mut self.vals, vals);
+        self.dead = 0;
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Total live non-zeros (O(1): dead arena space is excluded).
+    pub fn nnz(&self) -> usize {
+        self.live_nnz
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, j: usize) -> usize {
+        self.spans[j].len as usize
+    }
+
+    /// Row `j` as parallel slices `(term ids, values)`.
+    #[inline]
+    pub fn row(&self, j: usize) -> (&[u32], &[f64]) {
+        let sp = self.spans[j];
+        let (s, e) = (sp.start, sp.start + sp.len as usize);
+        (&self.ids[s..e], &self.vals[s..e])
+    }
+
+    /// L2 norm of row `j`.
+    pub fn row_norm(&self, j: usize) -> f64 {
+        let (_, vs) = self.row(j);
+        vs.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Densify row `j` (test/oracle helper, like [`CsrMatrix::row_dense`]).
+    pub fn row_dense(&self, j: usize) -> Vec<f64> {
+        let mut d = vec![0.0; self.n_cols];
+        let (ts, vs) = self.row(j);
+        for (&t, &v) in ts.iter().zip(vs) {
+            d[t as usize] = v;
+        }
+        d
+    }
+
+    /// Average row nnz — the paper's `D̂` over the mean set.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.n_rows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows() as f64
+        }
+    }
+
+    /// Rows containing each column — the mean frequency `(mf)_t`.
+    /// Ascending row order, like the CSR version.
+    pub fn column_df(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.n_cols];
+        for j in 0..self.n_rows() {
+            let (ts, _) = self.row(j);
+            for &t in ts {
+                df[t as usize] += 1;
+            }
+        }
+        df
+    }
+
+    /// Per-column value sums, accumulated in ascending row order so the
+    /// float sequence is independent of physical arena layout.
+    pub fn column_sum(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.n_cols];
+        for j in 0..self.n_rows() {
+            let (ts, vs) = self.row(j);
+            for (&t, &v) in ts.iter().zip(vs) {
+                s[t as usize] += v;
+            }
+        }
+        s
+    }
+
+    /// Resident bytes (arenas at capacity, spans, spare buffers).
+    pub fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        (self.ids.capacity() + self.spare_ids.capacity()) * size_of::<u32>()
+            + (self.vals.capacity() + self.spare_vals.capacity()) * size_of::<f64>()
+            + self.spans.capacity() * size_of::<RowSpan>()
+    }
+}
+
+/// Logical equality: same shape and the same row bits, regardless of
+/// where rows live in the arena — so a spliced slab compares equal to a
+/// from-scratch rebuild with identical contents.
+impl PartialEq for RowSlab {
+    fn eq(&self, other: &Self) -> bool {
+        self.n_cols == other.n_cols
+            && self.spans.len() == other.spans.len()
+            && (0..self.spans.len()).all(|j| {
+                let (ta, va) = self.row(j);
+                let (tb, vb) = other.row(j);
+                ta == tb && va == vb
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RowSlab {
+        RowSlab::from_rows(
+            5,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![],
+                vec![(2, 1.0), (4, 1.0), (0, 4.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn mirrors_csr_reads() {
+        let s = sample();
+        let c = s.to_csr();
+        assert_eq!(s.n_rows(), 4);
+        assert_eq!(s.n_cols(), 5);
+        assert_eq!(s.nnz(), 6);
+        for j in 0..4 {
+            assert_eq!(s.row(j), c.row(j));
+            assert_eq!(s.row_nnz(j), c.row_nnz(j));
+            assert_eq!(s.row_norm(j).to_bits(), c.row_norm(j).to_bits());
+            assert_eq!(s.row_dense(j), c.row_dense(j));
+        }
+        assert_eq!(s.column_df(), c.column_df());
+        assert_eq!(s.column_sum(), c.column_sum());
+        assert_eq!(s.avg_row_nnz(), c.avg_row_nnz());
+    }
+
+    #[test]
+    fn csr_round_trip_is_identity() {
+        let s = sample();
+        assert_eq!(RowSlab::from_csr(&s.to_csr()), s);
+    }
+
+    #[test]
+    fn in_place_rewrite_keeps_other_rows() {
+        let mut s = sample();
+        let before3 = (s.row(3).0.to_vec(), s.row(3).1.to_vec());
+        // Same length: fits the tight-packed span.
+        s.set_row(0, &[1, 3], &[0.5, 0.5]);
+        assert_eq!(s.row(0), (&[1u32, 3][..], &[0.5, 0.5][..]));
+        // Shrink: also in place.
+        s.set_row(0, &[4], &[1.0]);
+        assert_eq!(s.row(0), (&[4u32][..], &[1.0][..]));
+        assert_eq!(s.nnz(), 5);
+        assert_eq!(s.row(3), (&before3.0[..], &before3.1[..]));
+    }
+
+    #[test]
+    fn growth_relocates_and_compaction_preserves_rows() {
+        let mut s = RowSlab::from_rows(64, &vec![vec![(0, 1.0)]; 8]);
+        // Repeatedly grow/shrink every row well past the compaction
+        // threshold; contents must always match a scratch rebuild.
+        for round in 0..40usize {
+            let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+            for j in 0..8usize {
+                let len = 1 + (round * 7 + j * 3) % 13;
+                let row: Vec<(u32, f64)> = (0..len)
+                    .map(|t| ((t * 4 + j) as u32, (round + t + 1) as f64))
+                    .collect();
+                s.set_row(j, &row.iter().map(|p| p.0).collect::<Vec<_>>(),
+                          &row.iter().map(|p| p.1).collect::<Vec<_>>());
+                rows.push(row);
+            }
+            let want = RowSlab::from_rows(64, &rows);
+            assert_eq!(s, want, "round {round}");
+            assert_eq!(s.nnz(), want.nnz(), "round {round}");
+        }
+        // Dead space is bounded by the compaction policy.
+        assert!(s.dead <= (s.ids.len() / 2).max(64));
+    }
+
+    #[test]
+    fn steady_state_set_row_reuses_capacity() {
+        let mut s = RowSlab::from_rows(32, &vec![vec![(0, 1.0), (1, 1.0)]; 4]);
+        // Warm up: grow each row so capacities plateau.
+        for j in 0..4 {
+            s.set_row(j, &[0, 1, 2, 3], &[1.0; 4]);
+        }
+        let (ic, vc) = (s.ids.capacity(), s.vals.capacity());
+        for round in 0..100 {
+            for j in 0..4 {
+                let v = round as f64;
+                s.set_row(j, &[0, 1, 2, 3], &[v, v, v, v]);
+            }
+        }
+        assert_eq!(s.ids.capacity(), ic, "arena regrew in steady state");
+        assert_eq!(s.vals.capacity(), vc, "arena regrew in steady state");
+    }
+
+    #[test]
+    fn set_from_copies_and_reuses() {
+        let a = sample();
+        let mut b = RowSlab::from_rows(5, &[vec![], vec![], vec![], vec![]]);
+        b.set_from(&a);
+        assert_eq!(a, b);
+        // Mutating the copy leaves the source untouched.
+        b.set_row(1, &[0], &[9.0]);
+        assert_eq!(a.row(1), (&[1u32][..], &[3.0][..]));
+    }
+
+    #[test]
+    fn logical_eq_ignores_physical_layout() {
+        let a = sample();
+        let mut b = sample();
+        // Force row 0 through a relocation (longer, then back).
+        b.set_row(0, &[0, 1, 2, 3, 4], &[1.0; 5]);
+        b.set_row(0, &[0, 2], &[1.0, 2.0]);
+        assert_eq!(a, b);
+        b.set_row(0, &[0, 2], &[1.0, 2.5]);
+        assert_ne!(a, b);
+    }
+}

@@ -24,7 +24,7 @@
 use crate::algo::{AlgoKind, ClusterConfig, ParamsState};
 use crate::coordinator::{BatchSchedule, MiniBatchConfig};
 use crate::error::{SkmError, SkmResult};
-use crate::index::MeanSet;
+use crate::index::{MeanSet, RowSlab};
 use crate::persist::format::{
     ByteReader, ByteWriter, KIND_CLUSTER_CKPT, KIND_MINIBATCH_CKPT,
 };
@@ -258,6 +258,10 @@ pub struct MbStateRef<'a> {
     pub cursor: usize,
     pub processed: usize,
     pub quiet: usize,
+    /// Running Σ_i ρ_i the driver maintains incrementally between
+    /// epoch-boundary re-sums; must survive resume bit-exactly or the
+    /// resumed objective trajectory diverges in the low bits.
+    pub obj_sum: f64,
 }
 
 /// A loaded, fully-validated full-batch checkpoint.
@@ -287,6 +291,7 @@ pub struct MbDriverState {
     pub cursor: usize,
     pub processed: usize,
     pub quiet: usize,
+    pub obj_sum: f64,
 }
 
 /// A loaded, fully-validated mini-batch checkpoint.
@@ -322,11 +327,16 @@ fn encode_mb_driver(mb: &MbStateRef) -> Vec<u8> {
     w.put_u64(mb.cursor as u64);
     w.put_u64(mb.processed as u64);
     w.put_u64(mb.quiet as u64);
+    w.put_f64_bits(mb.obj_sum);
     w.into_bytes()
 }
 
 fn common_sections(fp: &RunFingerprint, st: &CheckpointState) -> Vec<(u32, Vec<u8>)> {
-    let (m_cols, m_indptr, m_indices, m_values) = st.means.m.raw_parts();
+    // The slab's physical layout is an in-memory detail; checkpoints
+    // keep the CSR on-disk format (also canonicalizes the byte stream
+    // regardless of splice history).
+    let mcsr = st.means.m.to_csr();
+    let (m_cols, m_indptr, m_indices, m_values) = mcsr.raw_parts();
     let _ = m_cols;
     let enc_u32s = |v: &[u32]| {
         let mut w = ByteWriter::new();
@@ -478,7 +488,7 @@ fn load_common(
     if xstate.len() != n {
         return Err(c("xstate", format!("{} entries for N = {n}", xstate.len())));
     }
-    let m = validated_csr(
+    let m = RowSlab::from_csr(&validated_csr(
         path,
         "means",
         k,
@@ -486,7 +496,7 @@ fn load_common(
         section_usizes(raw, sec::MEANS_INDPTR, "means", path)?,
         section_u32s(raw, sec::MEANS_INDICES, "means", path)?,
         section_f64s(raw, sec::MEANS_VALUES, "means", path)?,
-    )?;
+    )?);
     let sizes = section_u32s(raw, sec::MEAN_SIZES, "mean_sizes", path)?;
     if sizes.len() != k {
         return Err(c("mean_sizes", format!("{} entries for K = {k}", sizes.len())));
@@ -547,6 +557,7 @@ pub fn load_minibatch_checkpoint(
     let cursor = r.get_usize().map_err(&c)?;
     let processed = r.get_usize().map_err(&c)?;
     let quiet = r.get_usize().map_err(&c)?;
+    let obj_sum = f64::from_bits(r.get_u64().map_err(&c)?);
     r.finish().map_err(&c)?;
 
     let round = base.round as u32;
@@ -582,6 +593,9 @@ pub fn load_minibatch_checkpoint(
     if quiet > base.round {
         return Err(c(format!("quiet-round count {quiet} > round {}", base.round)));
     }
+    if !obj_sum.is_finite() {
+        return Err(c(format!("non-finite running objective sum {obj_sum}")));
+    }
 
     Ok(MinibatchCheckpoint {
         base,
@@ -597,6 +611,7 @@ pub fn load_minibatch_checkpoint(
             cursor,
             processed,
             quiet,
+            obj_sum,
         },
     })
 }

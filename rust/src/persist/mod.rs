@@ -275,7 +275,10 @@ pub fn save_snapshot_with(
     }
     let (n_cols, x_indptr, x_indices, x_values) = snap.ds.x.raw_parts();
     debug_assert_eq!(n_cols, snap.ds.d());
-    let (m_cols, m_indptr, m_indices, m_values) = snap.means.m.raw_parts();
+    // The mean slab's arena layout depends on splice history; serialize
+    // through the canonical CSR form so the on-disk bytes stay stable.
+    let mcsr = snap.means.m.to_csr();
+    let (m_cols, m_indptr, m_indices, m_values) = mcsr.raw_parts();
     debug_assert_eq!(m_cols, snap.ds.d());
     let (member_offsets, member_ids, orig_to_term) = snap.persisted_parts();
 
@@ -604,7 +607,7 @@ fn build_snapshot(
             sec::MEANS_CHUNK_VALS,
         ),
     )?;
-    let m = validated_csr(path, "means", k, d, m_indptr, mi, mv)?;
+    let m = crate::index::RowSlab::from_csr(&validated_csr(path, "means", k, d, m_indptr, mi, mv)?);
     let sizes = section_u32s(raw, sec::MEAN_SIZES, "mean_sizes", path)?;
     if sizes.len() != k {
         return Err(c("mean_sizes", format!("{} entries for K = {k}", sizes.len())));

@@ -401,7 +401,7 @@ impl ClusteredCorpus {
                 + (m.n_rows() + 1) * size_of::<usize>()
         };
         csr(&self.ds.x)
-            + csr(&self.means.m)
+            + self.means.m.mem_bytes()
             + self.assign.len() * size_of::<u32>()
             + self.rho.len() * size_of::<f64>()
             + self.member_offsets.len() * size_of::<usize>()

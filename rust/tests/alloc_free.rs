@@ -8,9 +8,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use skm::algo::{make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState};
+use skm::algo::{make_assigner, seed_means, AlgoKind, Assigner, ClusterConfig, IterState, ParConfig};
 use skm::corpus::{generate, tiny, CorpusSpec};
-use skm::index::{membership_changes, update_means_with_rho};
+use skm::index::{membership_changes, update_means_minibatch_inplace, update_means_with_rho, MbUpdateScratch};
 use skm::sparse::build_dataset;
 
 struct CountingAlloc;
@@ -121,4 +121,86 @@ fn steady_state_assignment_is_allocation_free() {
             after - before
         );
     }
+}
+
+/// The mini-batch **update** step is allocation-free at steady state
+/// too (§Stream cost model): once the `MbUpdateScratch` capacities, the
+/// pooled λ scratch, and the RowSlab arena have plateaued (a few warmup
+/// epochs), `update_means_minibatch_inplace` must splice touched rows,
+/// rewrite ρ, and decay counts without touching the allocator. The
+/// round stream is the driver's sequential epoch wrap with a fixed
+/// assignment and `decay = 1`, so every batch still rebuilds every
+/// touched cluster (the streaming-mode path) while the row supports
+/// converge to their plateau.
+#[test]
+fn steady_state_minibatch_update_is_allocation_free() {
+    let c = generate(&CorpusSpec {
+        n_docs: 240,
+        ..tiny(11)
+    });
+    let ds = build_dataset("alloc-mb", c.n_terms, &c.docs);
+    let n = ds.n();
+    let k = 8usize;
+    let b = n / 4;
+    let decay = 1.0f64;
+    let par = ParConfig::serial();
+
+    // Fixed assignment: round-robin by object id. The streaming-mode
+    // changed flags (`decay > 0`) mark every cluster with batch members,
+    // so each round splices b/k-member rebuilds into the slab.
+    let assign: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    let mut sizes = vec![0u32; k];
+    for &a in &assign {
+        sizes[a as usize] += 1;
+    }
+    let changed = vec![true; k];
+    let mut means = seed_means(&ds, k, 5);
+    let mut rho = vec![-1.0f64; n];
+    let mut counts = vec![0.0f64; k];
+    let mut scratch = MbUpdateScratch::new();
+
+    let mut cursor = 0usize;
+    // Reused like the driver's `runs` buffer (its capacity plateaus at
+    // 2 — a run per side of the wrap — so refills are allocation-free).
+    let mut runs: Vec<(usize, usize)> = Vec::with_capacity(2);
+    let mut next_runs = |cursor: &mut usize, runs: &mut Vec<(usize, usize)>| {
+        runs.clear();
+        let lo = *cursor;
+        if lo + b <= n {
+            runs.push((lo, lo + b));
+            *cursor = if lo + b == n { 0 } else { lo + b };
+        } else {
+            let rem = lo + b - n;
+            runs.push((0, rem));
+            runs.push((lo, n));
+            *cursor = rem;
+        }
+    };
+
+    // Warm up: six epochs let every scratch vector, every staged slot,
+    // and every slab row span reach its plateau capacity.
+    let warm_rounds = 6 * ((n + b - 1) / b);
+    for _ in 0..warm_rounds {
+        next_runs(&mut cursor, &mut runs);
+        let _ = update_means_minibatch_inplace(
+            &ds, &assign, &runs, &mut means, &mut rho, &changed, &sizes, &mut counts,
+            decay, &mut scratch, &par,
+        );
+    }
+
+    let before = allocs();
+    for _ in 0..4 {
+        next_runs(&mut cursor, &mut runs);
+        let _ = update_means_minibatch_inplace(
+            &ds, &assign, &runs, &mut means, &mut rho, &changed, &sizes, &mut counts,
+            decay, &mut scratch, &par,
+        );
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state mini-batch update allocated {} times",
+        after - before
+    );
 }

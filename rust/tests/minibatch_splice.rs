@@ -1,0 +1,246 @@
+//! Splice-vs-scratch bit-equality suite for the in-place mini-batch
+//! update (`update_means_minibatch_inplace`) against its from-scratch
+//! oracle (`update_means_minibatch`).
+//!
+//! The in-place path splices touched rows into the live [`RowSlab`],
+//! rewrites ρ only at batch-member positions, and returns an objective
+//! delta; the oracle clones ρ, copies untouched rows, and rebuilds the
+//! mean matrix from scratch. This suite drives both through the same
+//! round stream — 3 seeds × both schedule shapes × threads {1, 2, 4, 7}
+//! — and asserts after **every round** that the spliced state (mean
+//! rows, `moved`, `sizes`, ρ, decayed counts) bit-matches the freshly
+//! built one, and that the running objective re-summed at each epoch
+//! boundary bit-matches the oracle's full re-sum.
+//!
+//! The batches here come from a synthetic assignment walk (seeded
+//! membership flips), not a real assigner: the contract under test is
+//! purely "same inputs ⇒ bit-identical update outputs", independent of
+//! how the assignment was produced. End-to-end driver parity is covered
+//! by `minibatch.rs`.
+
+use skm::algo::{seed_means, ParConfig};
+use skm::corpus::{generate, tiny, CorpusSpec};
+use skm::index::{
+    update_means_minibatch, update_means_minibatch_inplace, MbUpdateScratch, MeanSet,
+};
+use skm::sparse::build_dataset;
+use skm::util::rng::Pcg32;
+
+fn dataset(n_docs: usize, seed: u64) -> skm::sparse::Dataset {
+    let c = generate(&CorpusSpec {
+        n_docs,
+        ..tiny(seed)
+    });
+    build_dataset("splice", c.n_terms, &c.docs)
+}
+
+/// Bit-strict mean-matrix comparison: row ids equal, row values equal
+/// as raw f64 bits (RowSlab's `PartialEq` is logical, which would admit
+/// `-0.0 == 0.0`).
+fn assert_means_bits_eq(a: &MeanSet, b: &MeanSet, tag: &str) {
+    assert_eq!(a.k(), b.k(), "{tag}: k");
+    for j in 0..a.k() {
+        let (ai, av) = a.m.row(j);
+        let (bi, bv) = b.m.row(j);
+        assert_eq!(ai, bi, "{tag}: row {j} term ids");
+        for (x, y) in av.iter().zip(bv) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: row {j} value bits");
+        }
+    }
+    assert_eq!(a.moved, b.moved, "{tag}: moved flags");
+    assert_eq!(a.sizes, b.sizes, "{tag}: sizes");
+}
+
+fn assert_f64_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: index {i}");
+    }
+}
+
+/// Coalesce sorted distinct object ids into maximal ascending-disjoint
+/// `(lo, hi)` runs — the same shape the reservoir schedule feeds the
+/// update step.
+fn runs_from_sorted(ids: &[usize]) -> Vec<(usize, usize)> {
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    for &i in ids {
+        match runs.last_mut() {
+            Some((_, hi)) if *hi == i => *hi += 1,
+            _ => runs.push((i, i + 1)),
+        }
+    }
+    runs
+}
+
+#[derive(Clone, Copy)]
+enum Shape {
+    /// Contiguous cursor windows with the driver's epoch wrap.
+    Sequential,
+    /// Seeded distinct samples coalesced into maximal runs.
+    Scattered,
+}
+
+impl Shape {
+    fn name(self) -> &'static str {
+        match self {
+            Shape::Sequential => "sequential",
+            Shape::Scattered => "scattered",
+        }
+    }
+}
+
+/// One in-place state lane (per thread count): everything the driver
+/// owns that the update mutates.
+struct Lane {
+    means: MeanSet,
+    rho: Vec<f64>,
+    counts: Vec<f64>,
+    scratch: MbUpdateScratch,
+    obj_sum: f64,
+    par: ParConfig,
+}
+
+#[test]
+fn inplace_update_bit_matches_scratch_oracle_every_round() {
+    let k = 9usize;
+    let b = 48usize;
+    for (seed, decay) in [(101u64, 1.0f64), (202, 0.7), (303, 1.0)] {
+        let ds = dataset(230, 1000 + seed);
+        let n = ds.n();
+        let rounds = 2 * ((n + b - 1) / b) + 1;
+        for shape in [Shape::Sequential, Shape::Scattered] {
+            let mut rng = Pcg32::new(seed ^ 0x59_11ce);
+            // Shared inputs both paths consume identically.
+            let mut assign: Vec<u32> = (0..n).map(|_| rng.gen_range(k as u32)).collect();
+            let mut sizes = vec![0u32; k];
+            for &a in &assign {
+                sizes[a as usize] += 1;
+            }
+            let mut changed = vec![false; k];
+            let init_means = seed_means(&ds, k, seed);
+            let init_rho = vec![-1.0f64; n];
+
+            // Oracle state: rebuilt from scratch every round.
+            let mut o_means = init_means.clone();
+            let mut o_rho = init_rho.clone();
+            let mut o_counts = vec![0.0f64; k];
+
+            // One in-place lane per thread count; all must agree with
+            // the oracle (and therefore with each other) every round.
+            let mut lanes: Vec<Lane> = [1usize, 2, 4, 7]
+                .iter()
+                .map(|&t| Lane {
+                    means: init_means.clone(),
+                    rho: init_rho.clone(),
+                    counts: vec![0.0f64; k],
+                    scratch: MbUpdateScratch::new(),
+                    obj_sum: init_rho.iter().sum(),
+                    par: if t == 1 {
+                        ParConfig::serial()
+                    } else {
+                        ParConfig::with_threads(t)
+                    },
+                })
+                .collect();
+
+            let mut cursor = 0usize;
+            let mut processed = 0usize;
+            for round in 1..=rounds {
+                let runs: Vec<(usize, usize)> = match shape {
+                    Shape::Sequential => {
+                        // The driver's epoch wrap: always a full b.
+                        let lo = cursor;
+                        if lo + b <= n {
+                            cursor = if lo + b == n { 0 } else { lo + b };
+                            vec![(lo, lo + b)]
+                        } else {
+                            let rem = lo + b - n;
+                            cursor = rem;
+                            vec![(0, rem), (lo, n)]
+                        }
+                    }
+                    Shape::Scattered => {
+                        let mut ids = rng.sample_distinct(n, b);
+                        ids.sort_unstable();
+                        runs_from_sorted(&ids)
+                    }
+                };
+                let batch_len: usize = runs.iter().map(|&(lo, hi)| hi - lo).sum();
+                assert_eq!(batch_len, b);
+
+                // Synthetic assignment step: flip ~1/4 of the batch,
+                // maintaining sizes and changed flags exactly like the
+                // driver's bookkeeping pass.
+                changed.iter_mut().for_each(|c| *c = false);
+                for &(lo, hi) in &runs {
+                    for i in lo..hi {
+                        let was = assign[i];
+                        let now = if rng.gen_range(4) == 0 {
+                            rng.gen_range(k as u32)
+                        } else {
+                            was
+                        };
+                        if was != now {
+                            changed[was as usize] = true;
+                            changed[now as usize] = true;
+                            sizes[was as usize] -= 1;
+                            sizes[now as usize] += 1;
+                            assign[i] = now;
+                        } else if decay > 0.0 {
+                            changed[now as usize] = true;
+                        }
+                    }
+                }
+
+                processed += batch_len;
+                let epoch_boundary = processed / n > (processed - batch_len) / n;
+
+                // Oracle: from-scratch rebuild off last round's state.
+                let out = update_means_minibatch(
+                    &ds, &assign, &runs, k, &o_means, &changed, &o_rho, &sizes,
+                    &mut o_counts, decay,
+                );
+                o_means = out.means;
+                o_rho = out.rho;
+
+                for lane in &mut lanes {
+                    let delta = update_means_minibatch_inplace(
+                        &ds,
+                        &assign,
+                        &runs,
+                        &mut lane.means,
+                        &mut lane.rho,
+                        &changed,
+                        &sizes,
+                        &mut lane.counts,
+                        decay,
+                        &mut lane.scratch,
+                        &lane.par,
+                    );
+                    lane.obj_sum += delta;
+                    if epoch_boundary {
+                        lane.obj_sum = lane.rho.iter().sum();
+                    }
+                    let tag = format!(
+                        "seed={seed} decay={decay} shape={} threads={} round={round}",
+                        shape.name(),
+                        lane.par.threads
+                    );
+                    assert_means_bits_eq(&lane.means, &o_means, &tag);
+                    assert_f64_bits_eq(&lane.rho, &o_rho, &format!("{tag}: rho"));
+                    assert_f64_bits_eq(&lane.counts, &o_counts, &format!("{tag}: counts"));
+                    if epoch_boundary {
+                        // The driver's boundary re-sum must land on the
+                        // oracle's full objective, bit for bit.
+                        assert_eq!(
+                            lane.obj_sum.to_bits(),
+                            out.objective.to_bits(),
+                            "{tag}: boundary objective"
+                        );
+                    }
+                    assert!(lane.obj_sum.is_finite(), "{tag}: running objective");
+                }
+            }
+        }
+    }
+}
